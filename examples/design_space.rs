@@ -1,0 +1,77 @@
+//! Design-space exploration over the hardware cost model: tile size,
+//! readout architecture and read-voltage corner (Table I sensitivity).
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use raca::hwmodel::{Architecture, SystemModel, TechParams};
+use raca::nn::ModelSpec;
+use raca::util::table::{fmt_g, Table};
+
+fn main() {
+    // --- tile size × architecture ------------------------------------------
+    let mut t = Table::new(
+        "Design space: tile size × readout architecture",
+        &["tile", "arch", "tiles", "E pJ/trial", "area mm²", "TOPS/W", "lat ns"],
+    );
+    for tile in [64usize, 128, 256] {
+        for (name, arch) in [("1b-ADC", Architecture::OneBitAdc), ("RACA", Architecture::Raca)] {
+            let mut tech = TechParams::default();
+            tech.tile = tile;
+            let m = SystemModel::new(ModelSpec::paper(), tech);
+            t.row(vec![
+                tile.to_string(),
+                name.into(),
+                m.num_tiles().to_string(),
+                fmt_g(m.energy(arch).total()),
+                fmt_g(m.area(arch).total()),
+                fmt_g(m.tops_per_watt(arch)),
+                fmt_g(m.latency_ns(arch)),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // --- read-voltage corner (the paper's low-SNR-read motivation) ----------
+    let mut t2 = Table::new(
+        "RACA read-voltage corner",
+        &["corner", "Vr (V)", "array pJ", "total pJ", "TOPS/W"],
+    );
+    for (name, tech) in [
+        ("conventional swing", TechParams::default()),
+        ("noise-calibrated Vr", TechParams::default().with_calibrated_vr()),
+    ] {
+        let m = SystemModel::new(ModelSpec::paper(), tech);
+        let e = m.energy(Architecture::Raca);
+        t2.row(vec![
+            name.into(),
+            format!("{:.3}", m.tech.v_read_raca),
+            fmt_g(e.array),
+            fmt_g(e.total()),
+            fmt_g(m.tops_per_watt(Architecture::Raca)),
+        ]);
+    }
+    println!("{}", t2.render());
+
+    // --- network scaling ------------------------------------------------------
+    let mut t3 = Table::new(
+        "Network scaling (RACA)",
+        &["network", "params", "E pJ/trial", "area mm²", "TOPS/W"],
+    );
+    for (name, widths) in [
+        ("paper [784,500,300,10]", vec![784usize, 500, 300, 10]),
+        ("small [784,128,10]", vec![784, 128, 10]),
+        ("wide  [784,1024,512,10]", vec![784, 1024, 512, 10]),
+    ] {
+        let m = SystemModel::new(ModelSpec::new(widths), TechParams::default());
+        t3.row(vec![
+            name.into(),
+            m.spec.num_params().to_string(),
+            fmt_g(m.energy(Architecture::Raca).total()),
+            fmt_g(m.area(Architecture::Raca).total()),
+            fmt_g(m.tops_per_watt(Architecture::Raca)),
+        ]);
+    }
+    println!("{}", t3.render());
+}

@@ -1,0 +1,60 @@
+//! Quickstart: load the AOT artifacts, classify one test image the RACA
+//! way (stochastic trials + majority vote) and compare against the ideal
+//! software forward.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use raca::dataset::Dataset;
+use raca::engine::{TrialParams, XlaEngine};
+use raca::runtime::ArtifactStore;
+
+fn main() -> Result<()> {
+    raca::util::logging::init();
+
+    // 1. Open artifacts (HLO text compiled once via PJRT; weights uploaded
+    //    as device buffers).
+    let dir = ArtifactStore::default_dir();
+    let engine = XlaEngine::start(dir.clone())?;
+    let handle = engine.handle();
+    let m = handle.manifest()?;
+    println!(
+        "RACA quickstart — FCNN {:?}, σ_z={:.3}, θ={:.1} (V_th0=0.05 V)",
+        m.layers, m.sigma_z, m.theta_norm
+    );
+
+    // 2. One test image.
+    let ds = Dataset::load(&dir.join("data").join("test"))?;
+    let x = ds.image(0).to_vec();
+    let label = ds.label(0);
+
+    // 3. Ideal (software) forward — what the analog circuit emulates.
+    let probs = handle.run_ideal(x.clone(), 1)?;
+    let ideal_pred = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    println!("label={label}  ideal prediction={ideal_pred}  probs[pred]={:.3}", probs[ideal_pred]);
+
+    // 4. RACA inference: repeated stochastic trials, majority vote.
+    let p = TrialParams::default();
+    let mut counts = [0u32; 10];
+    let trials = 31;
+    for seed in 0..trials {
+        let w = handle.run_trials(x.clone(), 1, seed, p)?[0];
+        if w >= 0 {
+            counts[w as usize] += 1;
+        }
+    }
+    let vote = counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0;
+    println!("RACA vote over {trials} trials: class {vote}  (counts {counts:?})");
+    println!(
+        "agreement: label={} ideal={} raca={}",
+        label, ideal_pred as i32, vote as i32
+    );
+    Ok(())
+}

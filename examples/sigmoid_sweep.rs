@@ -1,0 +1,56 @@
+//! Single-neuron playground: sweep Z and the SNR knobs and watch the
+//! activation probability trace the logistic function (paper Fig. 2/4).
+//!
+//! ```bash
+//! cargo run --release --example sigmoid_sweep
+//! ```
+
+use raca::crossbar::{CrossbarArray, ReadMode, WeightMapping};
+use raca::device::noise::NoiseParams;
+use raca::device::variation::VariationModel;
+use raca::device::DELTA_F;
+use raca::stats::erf::{logistic, norm_cdf};
+use raca::stats::GaussianSource;
+
+fn main() {
+    let mapping = WeightMapping::default();
+    let n_col = 785; // layer-1 column height (784 + bias)
+    let vr = mapping.calibrate_vr(n_col, DELTA_F, 1.0);
+    let kappa = mapping.kappa(vr, n_col, DELTA_F);
+    println!("calibrated: Vr = {:.2} mV, κ = {:.4} (target 1/1.702 = {:.4})", vr * 1e3, kappa, 1.0 / 1.702);
+    println!("\n Z     P_measured  Φ(κZ)    logistic  |Δ|");
+
+    let mut gauss = GaussianSource::new(7);
+    for zi in -8..=8 {
+        let z = zi as f64;
+        // Program one column whose weights sum to Z.
+        let w_each = (z / n_col as f64) as f32;
+        let mut arr = CrossbarArray::program(
+            n_col,
+            1,
+            &vec![w_each; n_col],
+            mapping.clone(),
+            &VariationModel::default(),
+            NoiseParams::thermal_only(DELTA_F),
+            &mut gauss,
+        );
+        let v = vec![vr; n_col];
+        let mut out = [0.0f64];
+        let n = 20_000;
+        let mut fired = 0usize;
+        for _ in 0..n {
+            arr.read_differential(&v, ReadMode::ColumnAggregate, &mut out, &mut gauss);
+            if out[0] > 0.0 {
+                fired += 1;
+            }
+        }
+        let p = fired as f64 / n as f64;
+        let analytic = norm_cdf(kappa * z);
+        let log = logistic(z);
+        println!(
+            "{z:+5.1}  {p:.4}      {analytic:.4}   {log:.4}    {:.4}",
+            (p - log).abs()
+        );
+    }
+    println!("\nThe comparator IS the sigmoid: max probit-vs-logit gap ≈ 0.0095 (Eq. 13).");
+}

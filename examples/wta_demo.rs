@@ -1,0 +1,57 @@
+//! WTA SoftMax-neuron demo: watch ten neurons race the adaptive threshold
+//! (paper Fig. 3/5) and the win histogram converge to softmax.
+//!
+//! ```bash
+//! cargo run --release --example wta_demo
+//! ```
+
+use raca::circuit::{WtaCircuit, WtaParams};
+use raca::neuron::softmax_wta::{softmax64, WtaLayer};
+use raca::stats::GaussianSource;
+
+fn main() {
+    let sigma_v = 0.02;
+    let z = vec![-1.2, -0.4, 0.3, -0.8, 2.1, 0.9, -1.6, 0.1, -0.3, 0.9];
+    let v: Vec<f64> = z.iter().map(|&zi| zi * sigma_v / 1.702).collect();
+    // Softmax-matching rest offset (DESIGN.md §6): θ_z − z̄ = 1.702².
+    let v_mean = v.iter().sum::<f64>() / v.len() as f64;
+    let vth0 = 1.702 * sigma_v - v_mean;
+    let params = WtaParams { sigma_v, vth0, ..Default::default() };
+
+    // --- one transient decision, step by step --------------------------
+    let circuit = WtaCircuit::new(params.clone());
+    let mut g = GaussianSource::new(3);
+    let trace = circuit.run_trace(&v, 1, &mut g);
+    println!("transient decision (σ_v = {sigma_v} V, rest θ = mean + {:.1} mV):", vth0 * 1e3);
+    for (i, step) in trace.steps.iter().enumerate().take(12) {
+        let vmax = step.v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let bar = "#".repeat(((vmax - step.vth + 0.06) * 400.0).max(0.0) as usize);
+        match step.winner {
+            Some(w) => println!("  t={i:2} ns  max(V)-Vth={:+.1} mV  → neuron {w} FIRES", (vmax - step.vth) * 1e3),
+            None => println!("  t={i:2} ns  max(V)-Vth={:+.1} mV  {bar}", (vmax - step.vth) * 1e3),
+        }
+    }
+    println!("  winner: {:?}\n", trace.winners);
+
+    // --- many decisions → softmax ---------------------------------------
+    let layer = WtaLayer::new(params);
+    let mut g = GaussianSource::new(11);
+    for trials in [100usize, 1000, 10_000] {
+        let o = layer.run(&v, trials, &mut g);
+        let f = o.frequencies();
+        let s = softmax64(&z);
+        let max_gap = f
+            .iter()
+            .zip(&s)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        println!(
+            "{trials:>6} trials: prediction={} max|freq−softmax|={max_gap:.4} abstain={}",
+            o.prediction(),
+            o.abstentions
+        );
+    }
+    println!("\nsoftmax   : {:?}", softmax64(&z).iter().map(|p| (p * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    let o = layer.run(&v, 10_000, &mut g);
+    println!("winner freq: {:?}", o.frequencies().iter().map(|p| (p * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+}

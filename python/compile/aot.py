@@ -1,0 +1,205 @@
+"""AOT build driver: dataset → training → HLO-text artifacts + manifest.
+
+Run as `python -m compile.aot --out ../artifacts` (see Makefile `artifacts`
+target).  Python never runs again after this: the rust coordinator loads
+`artifacts/*.hlo.txt` through the PJRT C API and is self-contained.
+
+HLO **text** is the interchange format (NOT `.serialize()`): jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (DESIGN.md §7):
+  data/{train,test}.{img,lbl}.bin   synthetic MNIST
+  weights/fcnn.{bin,json}           trained [784,500,300,10] parameters
+  smoke.hlo.txt                     tiny matmul+2 (runtime unit tests)
+  ideal_fwd_b{1,256}.hlo.txt        float reference forward
+  trial_fwd_b{1,32,256}.hlo.txt     one stochastic trial (seed,σ_z,θ params)
+  manifest.json                     shapes, hashes, calibration record
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import data as dataset
+from compile import model as M
+from compile import physics
+from compile import train as T
+
+TRIAL_BATCHES = (1, 32, 256)
+IDEAL_BATCHES = (1, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def export_smoke(out_dir: str) -> str:
+    """fn(x, y) = (x@y + 2,) over f32[2,2] — fast-compiling runtime smoke."""
+
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    path = os.path.join(out_dir, "smoke.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def weight_specs(params):
+    return tuple(
+        jax.ShapeDtypeStruct(tuple(w.shape), jnp.float32) for w in params)
+
+
+def export_ideal(params, out_dir: str, batch: int) -> str:
+    """(x[B,784], w1, w2, w3) → (probs[B,10],).
+
+    Weights are **runtime parameters**, not baked constants: the HLO text
+    printer elides tensors above a size threshold (`constant({...})`), so
+    constants would not survive the text round-trip.  The rust runtime
+    uploads `weights/fcnn.bin` once as device-resident PJRT buffers and
+    reuses them across every call (`execute_b`).
+    """
+
+    def fn(x, *ws):
+        return (M.ideal_forward(list(ws), x),)
+
+    specs = (jax.ShapeDtypeStruct((batch, 784), jnp.float32),) + weight_specs(params)
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    path = os.path.join(out_dir, f"ideal_fwd_b{batch}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def export_trial(params, out_dir: str, batch: int) -> str:
+    """(x[B,784], w1, w2, w3, seed u32, σ_z f32, θ f32) → (winner i32[B],).
+
+    σ_z and θ are runtime scalars so ONE artifact serves every SNR/V_th0
+    point of Fig. 6 — the rust coordinator sweeps them without recompiling.
+    """
+
+    def fn(x, w1, w2, w3, seed, sigma_z, theta):
+        return (M.raca_trial_from_seed((w1, w2, w3), x, seed, sigma_z, theta),)
+
+    specs = (
+        (jax.ShapeDtypeStruct((batch, 784), jnp.float32),)
+        + weight_specs(params)
+        + (
+            jax.ShapeDtypeStruct((), jnp.uint32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+    )
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    path = os.path.join(out_dir, f"trial_fwd_b{batch}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=25)
+    ap.add_argument("--n-train", type=int, default=12000)
+    ap.add_argument("--n-test", type=int, default=2000)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--force", action="store_true",
+                    help="retrain / regenerate even if outputs exist")
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out)
+    os.makedirs(os.path.join(out, "data"), exist_ok=True)
+    os.makedirs(os.path.join(out, "weights"), exist_ok=True)
+    t0 = time.time()
+
+    # -- dataset ------------------------------------------------------------
+    train_prefix = os.path.join(out, "data", "train")
+    test_prefix = os.path.join(out, "data", "test")
+    if args.force or not os.path.exists(train_prefix + ".img.bin"):
+        print(f"[aot] generating synthetic MNIST "
+              f"({args.n_train} train / {args.n_test} test)…")
+        xs, ys = dataset.generate(args.n_train, seed=args.seed)
+        xt, yt = dataset.generate(args.n_test, seed=args.seed + 1000)
+        dataset.save_bin(train_prefix, xs, ys)
+        dataset.save_bin(test_prefix, xt, yt)
+    else:
+        print("[aot] dataset exists, skipping")
+        xt, yt = dataset.load_bin(test_prefix)
+
+    # -- training -----------------------------------------------------------
+    wprefix = os.path.join(out, "weights", "fcnn")
+    if args.force or not os.path.exists(wprefix + ".bin"):
+        print("[aot] training FCNN [784,500,300,10] (SBNN straight-through)…")
+        params, info, _, _ = T.train(
+            n_train=args.n_train, n_test=args.n_test,
+            epochs=args.epochs, seed=args.seed)
+        T.save_weights(params, wprefix, info)
+    else:
+        print("[aot] weights exist, skipping training")
+        params, meta = T.load_weights(wprefix)
+        info = {"ideal_test_accuracy": meta.get("ideal_test_accuracy", -1.0)}
+
+    # -- HLO artifacts --------------------------------------------------------
+    paths = [export_smoke(out)]
+    print(f"[aot] wrote {paths[-1]}")
+    for b in IDEAL_BATCHES:
+        paths.append(export_ideal(params, out, b))
+        print(f"[aot] wrote {paths[-1]} ({time.time() - t0:.0f}s)")
+    for b in TRIAL_BATCHES:
+        paths.append(export_trial(params, out, b))
+        print(f"[aot] wrote {paths[-1]} ({time.time() - t0:.0f}s)")
+
+    # -- manifest -------------------------------------------------------------
+    dp = physics.DesignPoint()
+    manifest = {
+        "design_point": dp.to_dict(),
+        "theta_norm_vth0_005": physics.THETA_NORM_DEFAULT,
+        "theta_norm_vth0_0": 0.0,
+        "trial_batches": list(TRIAL_BATCHES),
+        "ideal_batches": list(IDEAL_BATCHES),
+        "ideal_test_accuracy": info["ideal_test_accuracy"],
+        "files": {
+            os.path.relpath(p, out): {"sha256": sha256(p),
+                                      "bytes": os.path.getsize(p)}
+            for p in paths + [
+                train_prefix + ".img.bin", train_prefix + ".lbl.bin",
+                test_prefix + ".img.bin", test_prefix + ".lbl.bin",
+                wprefix + ".bin", wprefix + ".json",
+            ]
+        },
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written; total {time.time() - t0:.0f}s; "
+          f"ideal accuracy {info['ideal_test_accuracy'] * 100:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

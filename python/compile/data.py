@@ -1,0 +1,148 @@
+"""Synthetic MNIST-like dataset (build-time; DESIGN.md §3 substitution).
+
+No network access is available in this environment, so instead of the real
+MNIST we procedurally render 28×28 grayscale digits from stroke templates
+with random affine distortion, stroke-width jitter and pixel noise.  The
+generator is deterministic given a seed and is mirrored 1:1 in
+`rust/src/dataset/synth.rs` (same templates, same rasterizer) so the rust
+side can regenerate smoke-test data without artifacts.
+
+Exercised code path is identical to real MNIST: 784-dim float input in
+[0,1], 10 classes, FCNN [784,500,300,10].
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Digit stroke templates: polylines in the unit square (x right, y down).
+# Kept deliberately simple & unambiguous; distortions provide the variance.
+# Mirrored in rust/src/dataset/synth.rs — keep in sync!
+# ---------------------------------------------------------------------------
+
+DIGIT_STROKES: dict[int, list[list[tuple[float, float]]]] = {
+    0: [[(0.50, 0.08), (0.78, 0.22), (0.82, 0.50), (0.78, 0.78),
+         (0.50, 0.92), (0.22, 0.78), (0.18, 0.50), (0.22, 0.22),
+         (0.50, 0.08)]],
+    1: [[(0.35, 0.25), (0.55, 0.10), (0.55, 0.90)],
+        [(0.35, 0.90), (0.75, 0.90)]],
+    2: [[(0.22, 0.30), (0.30, 0.12), (0.60, 0.08), (0.78, 0.25),
+         (0.72, 0.48), (0.45, 0.65), (0.22, 0.88)],
+        [(0.22, 0.88), (0.80, 0.88)]],
+    3: [[(0.25, 0.15), (0.60, 0.10), (0.75, 0.28), (0.55, 0.46),
+         (0.75, 0.68), (0.60, 0.90), (0.25, 0.85)]],
+    4: [[(0.62, 0.90), (0.62, 0.10), (0.20, 0.62), (0.82, 0.62)]],
+    5: [[(0.75, 0.12), (0.30, 0.12), (0.27, 0.45), (0.60, 0.42),
+         (0.78, 0.62), (0.68, 0.86), (0.25, 0.88)]],
+    6: [[(0.68, 0.10), (0.38, 0.30), (0.25, 0.60), (0.35, 0.85),
+         (0.65, 0.88), (0.75, 0.65), (0.55, 0.50), (0.28, 0.58)]],
+    7: [[(0.20, 0.12), (0.80, 0.12), (0.45, 0.90)],
+        [(0.35, 0.52), (0.68, 0.52)]],
+    8: [[(0.50, 0.10), (0.72, 0.22), (0.66, 0.44), (0.50, 0.50),
+         (0.34, 0.44), (0.28, 0.22), (0.50, 0.10)],
+        [(0.50, 0.50), (0.74, 0.62), (0.68, 0.86), (0.50, 0.92),
+         (0.32, 0.86), (0.26, 0.62), (0.50, 0.50)]],
+    9: [[(0.72, 0.42), (0.45, 0.50), (0.28, 0.35), (0.35, 0.12),
+         (0.65, 0.10), (0.72, 0.42)],
+        [(0.72, 0.42), (0.68, 0.70), (0.55, 0.90)]],
+}
+
+IMG = 28  # image side
+
+
+def _rasterize(strokes: list[np.ndarray], width: float, soft: float) -> np.ndarray:
+    """Anti-aliased polyline rasterizer: intensity from distance-to-segment.
+
+    For every pixel, distance to the nearest point of any segment; intensity
+    = clamp(1 − (d − width)/soft, 0, 1).  Vectorized over pixels.
+    """
+    ys, xs = np.mgrid[0:IMG, 0:IMG]
+    px = (xs.astype(np.float64) + 0.5) / IMG
+    py = (ys.astype(np.float64) + 0.5) / IMG
+    dmin = np.full((IMG, IMG), 1e9)
+    for poly in strokes:
+        for k in range(len(poly) - 1):
+            ax, ay = poly[k]
+            bx, by = poly[k + 1]
+            abx, aby = bx - ax, by - ay
+            denom = abx * abx + aby * aby + 1e-12
+            t = ((px - ax) * abx + (py - ay) * aby) / denom
+            t = np.clip(t, 0.0, 1.0)
+            cx, cy = ax + t * abx, ay + t * aby
+            d = np.sqrt((px - cx) ** 2 + (py - cy) ** 2)
+            dmin = np.minimum(dmin, d)
+    img = np.clip(1.0 - (dmin - width) / soft, 0.0, 1.0)
+    return img.astype(np.float32)
+
+
+def _affine(poly: np.ndarray, rot: float, sx: float, sy: float,
+            shear: float, tx: float, ty: float) -> np.ndarray:
+    """Affine-distort a polyline around the template centroid (0.5, 0.5)."""
+    c, s = np.cos(rot), np.sin(rot)
+    p = poly - 0.5
+    x = p[:, 0] * sx + p[:, 1] * shear
+    y = p[:, 1] * sy
+    xr = c * x - s * y
+    yr = s * x + c * y
+    return np.stack([xr + 0.5 + tx, yr + 0.5 + ty], axis=1)
+
+
+def render_digit(digit: int, rng: np.random.Generator) -> np.ndarray:
+    """One distorted 28×28 rendering of `digit`, values in [0, 1].
+
+    Distortions are deliberately aggressive (rotation ±28°, scale 0.7–1.3,
+    shear, jitter of every stroke vertex, occlusion patch, heavy pixel
+    noise) so the task is MNIST-hard rather than trivially separable —
+    the Fig. 6 accuracy-vs-trials curve needs headroom to be meaningful.
+    """
+    rot = rng.uniform(-0.5, 0.5)             # ±28°
+    sx = rng.uniform(0.70, 1.30)
+    sy = rng.uniform(0.70, 1.30)
+    shear = rng.uniform(-0.3, 0.3)
+    tx = rng.uniform(-0.12, 0.12)            # ±3.5 px
+    ty = rng.uniform(-0.12, 0.12)
+    width = rng.uniform(0.022, 0.065)        # stroke half-width
+    soft = rng.uniform(0.020, 0.050)         # AA softness
+    wobble = rng.uniform(0.0, 0.035)         # per-vertex jitter
+
+    strokes = []
+    for poly in DIGIT_STROKES[digit]:
+        p = np.asarray(poly, dtype=np.float64)
+        p = p + rng.normal(0.0, wobble, p.shape)
+        strokes.append(_affine(p, rot, sx, sy, shear, tx, ty))
+    img = _rasterize(strokes, width, soft)
+    img *= rng.uniform(0.55, 1.0)                      # intensity jitter
+    # Occlusion: zero a random small patch 30% of the time.
+    if rng.uniform() < 0.3:
+        ph, pw = rng.integers(3, 8), rng.integers(3, 8)
+        py0 = rng.integers(0, IMG - ph)
+        px0 = rng.integers(0, IMG - pw)
+        img[py0:py0 + ph, px0:px0 + pw] = 0.0
+    img += rng.normal(0.0, 0.10, img.shape).astype(np.float32)  # sensor noise
+    return np.clip(img, 0.0, 1.0)
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` (image, label) pairs with balanced classes."""
+    rng = np.random.default_rng(seed)
+    images = np.zeros((n, IMG * IMG), dtype=np.float32)
+    labels = np.zeros((n,), dtype=np.int32)
+    for i in range(n):
+        d = i % 10
+        images[i] = render_digit(d, rng).reshape(-1)
+        labels[i] = d
+    perm = rng.permutation(n)
+    return images[perm], labels[perm]
+
+
+def save_bin(path_prefix: str, images: np.ndarray, labels: np.ndarray) -> None:
+    """Flat little-endian binaries the rust loader reads (dataset/loader.rs)."""
+    images.astype("<f4").tofile(path_prefix + ".img.bin")
+    labels.astype("<i4").tofile(path_prefix + ".lbl.bin")
+
+
+def load_bin(path_prefix: str) -> tuple[np.ndarray, np.ndarray]:
+    images = np.fromfile(path_prefix + ".img.bin", dtype="<f4").reshape(-1, IMG * IMG)
+    labels = np.fromfile(path_prefix + ".lbl.bin", dtype="<i4")
+    return images, labels

@@ -1,0 +1,133 @@
+"""L1 Pallas kernels: differential crossbar MAC + fused stochastic comparator.
+
+The crossbar tile is the paper's compute hot-spot: a 128×128 ReRAM array
+performing `I_j − I_ref = Vr·G0·Σ_i x_i·W_ij` with the comparator sitting
+directly on the bitline (no ADC).  The TPU mapping (DESIGN.md
+§Hardware-Adaptation):
+
+* one grid step = one 128(row)×128(col) crossbar tile resident in VMEM —
+  the BlockSpec HBM↔VMEM schedule *is* the paper's N_col tile mapping;
+* partial sums across row-tiles accumulate in the output block (revisited
+  across the k grid axis), mirroring the analog partial-sum recombination;
+* the stochastic comparator is fused into the matmul epilogue, so the
+  pre-activation never materializes in HBM — the architectural analogue of
+  "no ADC on the bitline".
+
+All kernels are lowered with `interpret=True` (CPU PJRT cannot execute
+Mosaic custom-calls); correctness vs `ref.py` is asserted by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Crossbar tile geometry (rows × cols) — the paper's array size.
+TILE = 128
+
+
+def _pad2(a: jax.Array, m: int, n: int) -> jax.Array:
+    """Zero-pad a 2-D array up to (m, n)."""
+    return jnp.pad(a, ((0, m - a.shape[0]), (0, n - a.shape[1])))
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+# ---------------------------------------------------------------------------
+# Fused crossbar MAC (+ optional stochastic binarization epilogue)
+# ---------------------------------------------------------------------------
+
+def _mac_kernel(x_ref, w_ref, n_ref, o_ref, *, k_steps: int, binarize: bool):
+    """One (bm × bn) output tile; grid axis 2 walks the k (row-tile) axis.
+
+    The output block is revisited across k: initialize at k==0, accumulate
+    partial sums (the analog column current of each row-tile), and at the
+    final k step add the scaled comparator noise and threshold.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        if binarize:
+            # Comparator on the bitline: fire = 1[Z + σ_z·n > 0] (Eq. 8/13).
+            # n_ref already carries the σ_z scale (applied by the caller so
+            # σ_z can stay a traced scalar — one HLO serves all SNR points).
+            o_ref[...] = (o_ref[...] + n_ref[...] > 0.0).astype(jnp.float32)
+        else:
+            o_ref[...] += n_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("binarize", "bm", "bn", "bk", "interpret")
+)
+def crossbar_layer(
+    x: jax.Array,
+    w: jax.Array,
+    noise_scaled: jax.Array,
+    *,
+    binarize: bool = True,
+    bm: int = TILE,
+    bn: int = TILE,
+    bk: int = TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    """Crossbar layer: `Z = x @ w`, then `1[Z + noise > 0]` if `binarize`.
+
+    x: (B, N_in) f32 — binary activations (or DAC'd input pixels, layer 0).
+    w: (N_in, N_out) f32 — normalized weights (conductance mapping Eq. 4–7
+       happens in the physical simulator; normalized units here).
+    noise_scaled: (B, N_out) f32 — σ_z·N(0,1), pre-scaled by the caller.
+    Returns (B, N_out) f32 (binary 0/1 if `binarize`, else Z + noise).
+    """
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0]
+    assert noise_scaled.shape == (x.shape[0], w.shape[1])
+    m, k = x.shape
+    n = w.shape[1]
+    bm = min(bm, _ceil_to(m, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad2(x.astype(jnp.float32), mp, kp)
+    wp = _pad2(w.astype(jnp.float32), kp, np_)
+    # Padded noise must keep padded columns *off* (Z=0 + noise could fire);
+    # use −inf so padded binary outputs are exactly 0 (sliced away anyway,
+    # but keeps every intermediate well-defined).
+    npad = jnp.full((mp, np_), -jnp.inf, dtype=jnp.float32)
+    npad = npad.at[:m, :n].set(noise_scaled.astype(jnp.float32))
+    if not binarize:
+        npad = jnp.where(jnp.isinf(npad), 0.0, npad)
+
+    k_steps = kp // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+    out = pl.pallas_call(
+        functools.partial(_mac_kernel, k_steps=k_steps, binarize=binarize),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, npad)
+    return out[:m, :n]
+
+
+def crossbar_mac(x: jax.Array, w: jax.Array, *, interpret: bool = True,
+                 **block_kw) -> jax.Array:
+    """Plain differential MAC (no comparator) — used by the WTA output layer."""
+    zeros = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    return crossbar_layer(x, w, zeros, binarize=False, interpret=interpret,
+                          **block_kw)

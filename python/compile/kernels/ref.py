@@ -1,0 +1,78 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain `jax.numpy` ops only.  `python/tests/test_kernel.py`
+asserts allclose/exact-equality between kernel and oracle across a
+hypothesis-driven sweep of shapes, dtypes and parameters — this is the core
+L1 correctness signal (the kernels lower into every HLO artifact).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def crossbar_mac_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differential crossbar MAC in normalized units: Z = x @ W.
+
+    Physically: (I_j − I_ref)/(Vr·G0) = Σ_i x_i·W_ij  (paper Eq. 12).
+    x: (B, N_in), w: (N_in, N_out) → (B, N_out), f32.
+    """
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def stoch_binarize_ref(z: jax.Array, noise: jax.Array,
+                       sigma_z: float) -> jax.Array:
+    """Comparator with input-referred Gaussian noise (paper Eq. 8/13).
+
+    fire = 1[z + σ_z·n > 0], n ~ N(0,1) supplied by the caller.
+    Returns f32 zeros/ones (binary activations propagate as voltages).
+    """
+    return (z + sigma_z * noise > 0.0).astype(jnp.float32)
+
+
+def stoch_sigmoid_layer_ref(x: jax.Array, w: jax.Array, noise: jax.Array,
+                            sigma_z: float) -> jax.Array:
+    """Fused crossbar MAC + stochastic binarization (one hidden layer)."""
+    return stoch_binarize_ref(crossbar_mac_ref(x, w), noise, sigma_z)
+
+
+def wta_first_crossing_ref(z: jax.Array, noise: jax.Array, theta: float,
+                           sigma_z: float) -> jax.Array:
+    """WTA decision oracle: index of the first neuron to cross V_th.
+
+    z: (B, C) static output voltages (normalized), noise: (B, T, C) unit
+    Gaussians — one per time step per neuron.  At step t neuron j crosses
+    iff z_j + σ_z·n_tj > θ.  The winner is the earliest-crossing neuron;
+    ties within a step break toward the largest instantaneous voltage;
+    if nothing crosses in T steps the winner is −1 (abstain).
+
+    Returns int32 (B,) winner indices.
+    """
+    zb = z[:, None, :] + sigma_z * noise           # (B, T, C) instantaneous
+    crossed = zb > theta                           # (B, T, C) bool
+    any_cross = jnp.any(crossed, axis=2)           # (B, T)
+    t_first = jnp.argmax(any_cross, axis=1)        # (B,) first crossing step
+    has_any = jnp.any(any_cross, axis=1)           # (B,)
+    vb = jnp.take_along_axis(zb, t_first[:, None, None], axis=1)[:, 0, :]
+    cb = jnp.take_along_axis(crossed, t_first[:, None, None], axis=1)[:, 0, :]
+    masked = jnp.where(cb, vb, -jnp.inf)
+    winner = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    return jnp.where(has_any, winner, jnp.int32(-1))
+
+
+def ideal_sigmoid_ref(z: jax.Array) -> jax.Array:
+    """Software logistic — the function the stochastic neuron emulates."""
+    return jax.nn.sigmoid(z)
+
+
+def ideal_softmax_ref(z: jax.Array) -> jax.Array:
+    """Software SoftMax — the function the WTA neuron emulates (Eq. 14)."""
+    return jax.nn.softmax(z, axis=-1)
+
+
+def activation_probability_ref(z: jax.Array, sigma_z: float) -> jax.Array:
+    """Analytic P(fire) = Φ(z/σ_z) (paper Eq. 13, normalized units)."""
+    return 0.5 * (1.0 + jax.scipy.special.erf(z / (sigma_z * jnp.sqrt(2.0))))

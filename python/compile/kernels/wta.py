@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: WTA binary stochastic SoftMax decision (paper §III-B).
+
+One decision trial: the C output neurons' static voltages `z` (normalized,
+threshold already subtracted by the caller) receive fresh comparator noise
+every time step; the first neuron to cross wins and the adaptive threshold
+is pulled to V_dd (so exactly one winner).  The kernel finds the winner of
+each batch row in a single VMEM-resident pass over the (T, C) noise block —
+the circuit's time evolution is data-parallel once the noise samples exist.
+
+Grid: one program per batch row.  Matches `ref.wta_first_crossing_ref`
+bit-exactly (same tie-breaking: earliest step, then largest voltage).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wta_kernel(z_ref, n_ref, o_ref):
+    """z_ref: (1, C) rest voltages − θ; n_ref: (1, T, C) σ_z·N(0,1)."""
+    z = z_ref[0, :]                     # (C,)
+    n = n_ref[0, :, :]                  # (T, C)
+    v = z[None, :] + n                  # instantaneous voltages − θ
+    crossed = v > 0.0                   # (T, C)
+    any_t = jnp.any(crossed, axis=1)    # (T,)
+    t_first = jnp.argmax(any_t)         # first step with any crossing
+    has_any = jnp.any(any_t)
+    v_at = v[t_first, :]
+    c_at = crossed[t_first, :]
+    masked = jnp.where(c_at, v_at, -jnp.inf)
+    winner = jnp.argmax(masked).astype(jnp.int32)
+    o_ref[0] = jnp.where(has_any, winner, jnp.int32(-1))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wta_first_crossing(z_minus_theta: jax.Array, noise_scaled: jax.Array,
+                       *, interpret: bool = True) -> jax.Array:
+    """Winner index per batch row, −1 if no neuron crosses within T steps.
+
+    z_minus_theta: (B, C) f32 — static output voltage minus the rest
+        threshold θ (caller folds θ and the σ_z scale, keeping both traced).
+    noise_scaled: (B, T, C) f32 — σ_z·N(0,1) per step per neuron.
+    Returns (B,) int32.
+    """
+    b, c = z_minus_theta.shape
+    t = noise_scaled.shape[1]
+    assert noise_scaled.shape == (b, t, c)
+    return pl.pallas_call(
+        _wta_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, t, c), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(z_minus_theta.astype(jnp.float32), noise_scaled.astype(jnp.float32))

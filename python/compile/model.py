@@ -1,0 +1,152 @@
+"""L2: the RACA forward pass (JAX, build-time only).
+
+Network: FCNN [784, 500, 300, 10] (paper §IV-C).  Hidden layers are binary
+stochastic Sigmoid neurons (crossbar MAC + noisy comparator, L1 kernel);
+the output layer is the WTA binary stochastic SoftMax neuron.  Bias is an
+extra crossbar row driven by a constant-1 input (standard CiM practice), so
+layer l has N_col = fan_in + 1 devices per column.
+
+Everything works in *normalized z units* (see physics.py): the physical
+current scale Vr·G0 divides out of the comparator decision, so the only
+physical parameters that survive are σ_z = 1.702/snr_scale and the
+normalized WTA threshold θ.  Both stay **traced scalars** so a single AOT
+artifact serves every SNR / V_th0 sweep point of Fig. 6.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import crossbar as xk
+from compile.kernels import wta as wk
+from compile.kernels import ref as kref
+from compile import physics
+
+LAYERS = (784, 500, 300, 10)
+
+Params = Sequence[jax.Array]  # one augmented (fan_in+1, fan_out) matrix per layer
+
+
+def augment(x: jax.Array) -> jax.Array:
+    """Append the constant-1 bias row input: (B, N) → (B, N+1)."""
+    return jnp.concatenate([x, jnp.ones((x.shape[0], 1), x.dtype)], axis=1)
+
+
+def init_params(key: jax.Array, layers: Sequence[int] = LAYERS) -> list[jax.Array]:
+    """Glorot-ish init of augmented weight matrices (bias row zero)."""
+    params = []
+    for i, (n_in, n_out) in enumerate(zip(layers[:-1], layers[1:])):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / (n_in + n_out))
+        w = scale * jax.random.normal(sub, (n_in, n_out), jnp.float32)
+        params.append(jnp.concatenate([w, jnp.zeros((1, n_out))], axis=0))
+    return params
+
+
+def clip_params(params: Params) -> list[jax.Array]:
+    """Clip to the conductance-representable range [−W_CLIP, W_CLIP]."""
+    return [jnp.clip(w, -physics.W_CLIP, physics.W_CLIP) for w in params]
+
+
+# ---------------------------------------------------------------------------
+# Ideal (software) forward — the functions the analog circuits emulate
+# ---------------------------------------------------------------------------
+
+def ideal_forward(params: Params, x: jax.Array) -> jax.Array:
+    """Float sigmoid hidden layers + softmax output: (B, 784) → (B, 10)."""
+    h = x
+    for w in params[:-1]:
+        h = kref.ideal_sigmoid_ref(augment(h) @ w)
+    return kref.ideal_softmax_ref(augment(h) @ params[-1])
+
+
+def ideal_logits(params: Params, x: jax.Array) -> jax.Array:
+    h = x
+    for w in params[:-1]:
+        h = kref.ideal_sigmoid_ref(augment(h) @ w)
+    return augment(h) @ params[-1]
+
+
+# ---------------------------------------------------------------------------
+# Stochastic (RACA hardware) forward — one decision trial
+# ---------------------------------------------------------------------------
+
+def raca_logits(params: Params, x: jax.Array, key: jax.Array,
+                sigma_z: jax.Array, *, interpret: bool = True,
+                use_kernels: bool = True) -> jax.Array:
+    """Hidden layers through stochastic binary Sigmoid neurons → z_out.
+
+    sigma_z: traced f32 scalar (1.702/snr_scale at the calibrated point).
+    """
+    h = x
+    for li, w in enumerate(params[:-1]):
+        key, sub = jax.random.split(key)
+        ha = augment(h)
+        noise = sigma_z * jax.random.normal(sub, (x.shape[0], w.shape[1]),
+                                            jnp.float32)
+        if use_kernels:
+            h = xk.crossbar_layer(ha, w, noise, binarize=True,
+                                  interpret=interpret)
+        else:
+            h = kref.stoch_sigmoid_layer_ref(ha, w, noise / sigma_z, sigma_z)
+    ha = augment(h)
+    if use_kernels:
+        return xk.crossbar_mac(ha, params[-1], interpret=interpret)
+    return kref.crossbar_mac_ref(ha, params[-1])
+
+
+def raca_trial(params: Params, x: jax.Array, key: jax.Array,
+               sigma_z: jax.Array, theta: jax.Array,
+               *, wta_steps: int = physics.WTA_STEPS,
+               interpret: bool = True, use_kernels: bool = True) -> jax.Array:
+    """One full stochastic inference trial: (B, 784) → winner (B,) int32.
+
+    theta: traced f32 scalar — normalized WTA rest threshold (V_th0 mapped
+    through the TIA, physics.theta_norm_for_vth0).
+    """
+    key, kw = jax.random.split(key)
+    z_out = raca_logits(params, x, key, sigma_z, interpret=interpret,
+                        use_kernels=use_kernels)
+    # The adaptive WTA threshold rests V_th0 above the *static mean* of the
+    # output voltages (paper Fig. 3): subtract the per-row mean so θ is the
+    # mean-relative rest offset — this is what the replica-column circuit
+    # realizes and what makes the softmax-slope matching hold for any logit
+    # offset (DESIGN.md §6).
+    zc = z_out - jnp.mean(z_out, axis=1, keepdims=True)
+    noise = sigma_z * jax.random.normal(
+        kw, (x.shape[0], wta_steps, z_out.shape[1]), jnp.float32)
+    if use_kernels:
+        return wk.wta_first_crossing(zc - theta, noise, interpret=interpret)
+    return kref.wta_first_crossing_ref(zc, noise / sigma_z, theta, sigma_z)
+
+
+def raca_trial_from_seed(params: Params, x: jax.Array, seed: jax.Array,
+                         sigma_z: jax.Array, theta: jax.Array,
+                         *, wta_steps: int = physics.WTA_STEPS,
+                         use_kernels: bool = True) -> jax.Array:
+    """AOT entrypoint: scalar uint32 seed → winner indices (B,) int32.
+
+    This is the function lowered to `artifacts/trial_fwd_b*.hlo.txt`; the
+    rust coordinator calls it with a fresh seed per scheduled trial batch.
+    """
+    key = jax.random.PRNGKey(seed)
+    return raca_trial(params, x, key, sigma_z, theta, wta_steps=wta_steps,
+                      use_kernels=use_kernels)
+
+
+# ---------------------------------------------------------------------------
+# Voting (reference implementation of the coordinator's counter logic)
+# ---------------------------------------------------------------------------
+
+def vote(winners: jax.Array, num_classes: int = 10) -> jax.Array:
+    """Majority vote over trials: winners (K, B) int32 → (B,) int32.
+
+    Abstentions (−1) are ignored; ties break toward the lower class index
+    (same rule as rust `coordinator::votes`).
+    """
+    counts = jnp.stack(
+        [(winners == c).sum(axis=0) for c in range(num_classes)], axis=1)
+    return jnp.argmax(counts, axis=1).astype(jnp.int32)

@@ -1,0 +1,159 @@
+"""Build-time trainer for the RACA FCNN (SBNN-style, straight-through).
+
+Trains the [784, 500, 300, 10] network on the synthetic MNIST dataset with
+*stochastic binary* hidden activations in the forward pass (exactly what
+the analog hardware executes: 1[z + σ_z·n > 0] with σ_z = 1.702) and a
+straight-through sigmoid estimator in the backward pass — the standard SBNN
+recipe the paper's "fully trained FCNN" refers to.  Weights are clipped to
+the conductance-representable range [−W_CLIP, W_CLIP] after every step.
+
+Pure JAX (no optax — offline environment); Adam implemented inline.
+Run via `python -m compile.train` or (normally) through `compile.aot`.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as dataset
+from compile import model as M
+from compile import physics
+
+
+def stochastic_forward_st(params, x, key, sigma_z):
+    """Hidden layers with stochastic binarization + straight-through grad.
+
+    h = sigmoid(z) + stop_grad(1[z + σ·n > 0] − sigmoid(z)): the forward
+    value is the true binary sample, the gradient flows through sigmoid —
+    so training sees the same activation statistics as the hardware.
+    """
+    h = x
+    for w in params[:-1]:
+        key, sub = jax.random.split(key)
+        z = M.augment(h) @ w
+        noise = jax.random.normal(sub, z.shape, jnp.float32)
+        hard = (z + sigma_z * noise > 0.0).astype(jnp.float32)
+        soft = jax.nn.sigmoid(z)
+        h = soft + jax.lax.stop_gradient(hard - soft)
+    return M.augment(h) @ params[-1]
+
+
+def loss_fn(params, x, y, key, sigma_z):
+    logits = stochastic_forward_st(params, x, key, sigma_z)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def adam_init(params):
+    zeros = [jnp.zeros_like(w) for w in params]
+    return {"m": zeros, "v": [jnp.zeros_like(w) for w in params], "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = [b1 * mi + (1 - b1) * g for mi, g in zip(state["m"], grads)]
+    v = [b2 * vi + (1 - b2) * g * g for vi, g in zip(state["v"], grads)]
+    mh = [mi / (1 - b1**t) for mi in m]
+    vh = [vi / (1 - b2**t) for vi in v]
+    new = [
+        jnp.clip(w - lr * mhi / (jnp.sqrt(vhi) + eps),
+                 -physics.W_CLIP, physics.W_CLIP)
+        for w, mhi, vhi in zip(params, mh, vh)
+    ]
+    return new, {"m": m, "v": v, "t": t}
+
+
+@jax.jit
+def eval_ideal(params, x, y):
+    """Deterministic software accuracy (sigmoid/softmax argmax)."""
+    probs = M.ideal_forward(params, x)
+    return jnp.mean((jnp.argmax(probs, axis=1) == y).astype(jnp.float32))
+
+
+def train(
+    n_train: int = 12000,
+    n_test: int = 2000,
+    epochs: int = 25,
+    batch: int = 128,
+    lr: float = 1e-3,
+    seed: int = 42,
+    verbose: bool = True,
+):
+    """Train and return (params, info dict, train arrays, test arrays)."""
+    xs, ys = dataset.generate(n_train, seed=seed)
+    xt, yt = dataset.generate(n_test, seed=seed + 1000)
+    key = jax.random.PRNGKey(seed)
+    key, kinit = jax.random.split(key)
+    params = M.init_params(kinit)
+    opt = adam_init(params)
+    sigma_z = jnp.float32(physics.noise_std_normalized(1.0))
+
+    @jax.jit
+    def step(params, opt, xb, yb, key):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb, key, sigma_z)
+        params, opt = adam_step(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    n_batches = n_train // batch
+    t0 = time.time()
+    history = []
+    for ep in range(epochs):
+        key, kperm = jax.random.split(key)
+        perm = np.asarray(jax.random.permutation(kperm, n_train))
+        ep_loss = 0.0
+        for b in range(n_batches):
+            idx = perm[b * batch:(b + 1) * batch]
+            key, kb = jax.random.split(key)
+            params, opt, loss = step(params, opt, xs[idx], ys[idx], kb)
+            ep_loss += float(loss)
+        acc = float(eval_ideal(params, xt, yt))
+        history.append({"epoch": ep, "loss": ep_loss / n_batches, "test_acc": acc})
+        if verbose:
+            print(f"epoch {ep:3d}  loss {ep_loss / n_batches:.4f}  "
+                  f"ideal test acc {acc * 100:.2f}%  ({time.time() - t0:.0f}s)")
+    info = {
+        "ideal_test_accuracy": history[-1]["test_acc"],
+        "epochs": epochs,
+        "n_train": n_train,
+        "n_test": n_test,
+        "history": history,
+    }
+    return params, info, (xs, ys), (xt, yt)
+
+
+def save_weights(params, path_prefix: str, info: dict) -> None:
+    """Flat little-endian f32 + JSON metadata (rust nn/weights.rs format)."""
+    flat = np.concatenate([np.asarray(w, dtype="<f4").reshape(-1) for w in params])
+    flat.tofile(path_prefix + ".bin")
+    meta = {
+        "layers": list(M.LAYERS),
+        "shapes": [list(w.shape) for w in params],
+        "w_clip": physics.W_CLIP,
+        "dtype": "f32le",
+        **info,
+    }
+    with open(path_prefix + ".json", "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def load_weights(path_prefix: str):
+    with open(path_prefix + ".json") as f:
+        meta = json.load(f)
+    flat = np.fromfile(path_prefix + ".bin", dtype="<f4")
+    params, off = [], 0
+    for shape in meta["shapes"]:
+        n = int(np.prod(shape))
+        params.append(jnp.asarray(flat[off:off + n].reshape(shape)))
+        off += n
+    return params, meta
+
+
+if __name__ == "__main__":
+    params, info, _, _ = train()
+    save_weights(params, "/tmp/fcnn", info)
+    print(f"final ideal accuracy: {info['ideal_test_accuracy'] * 100:.2f}%")

@@ -1,0 +1,59 @@
+"""Synthetic dataset generator tests (data.py)."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+def test_deterministic():
+    a_img, a_lbl = D.generate(50, seed=3)
+    b_img, b_lbl = D.generate(50, seed=3)
+    assert np.array_equal(a_img, b_img)
+    assert np.array_equal(a_lbl, b_lbl)
+
+
+def test_seed_changes_data():
+    a_img, _ = D.generate(50, seed=3)
+    b_img, _ = D.generate(50, seed=4)
+    assert not np.array_equal(a_img, b_img)
+
+
+def test_shapes_and_range():
+    img, lbl = D.generate(40, seed=0)
+    assert img.shape == (40, 784) and img.dtype == np.float32
+    assert lbl.shape == (40,) and lbl.dtype == np.int32
+    assert float(img.min()) >= 0.0 and float(img.max()) <= 1.0
+    assert img.max() > 0.5  # strokes actually rendered
+
+
+def test_class_balance():
+    _, lbl = D.generate(100, seed=1)
+    counts = np.bincount(lbl, minlength=10)
+    assert np.array_equal(counts, np.full(10, 10))
+
+
+def test_digits_are_distinguishable():
+    """Mean intra-class distance should be well below inter-class distance."""
+    img, lbl = D.generate(200, seed=5)
+    mus = np.stack([img[lbl == d].mean(axis=0) for d in range(10)])
+    intra = np.mean([
+        np.linalg.norm(img[lbl == d] - mus[d], axis=1).mean() for d in range(10)
+    ])
+    dists = [np.linalg.norm(mus[i] - mus[j]) for i in range(10) for j in range(i + 1, 10)]
+    assert min(dists) > 0.5 * intra / np.sqrt(200 / 10)
+
+
+def test_bin_roundtrip(tmp_path):
+    img, lbl = D.generate(30, seed=9)
+    D.save_bin(str(tmp_path / "t"), img, lbl)
+    img2, lbl2 = D.load_bin(str(tmp_path / "t"))
+    assert np.array_equal(img, img2) and np.array_equal(lbl, lbl2)
+
+
+def test_all_templates_render():
+    rng = np.random.default_rng(0)
+    for d in range(10):
+        im = D.render_digit(d, rng)
+        assert im.shape == (28, 28)
+        assert im.sum() > 5.0, f"digit {d} rendered empty"

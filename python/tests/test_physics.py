@@ -1,0 +1,80 @@
+"""Physics/calibration unit tests (paper Eq. 1, 4–7, 13 — DESIGN.md §6)."""
+
+import math
+
+import pytest
+
+from compile import physics as P
+
+
+def test_weight_mapping_endpoints():
+    """Eq. 4/5/7: W_min → G_min, W_max → G_max, W=0 → Gref."""
+    assert P.weight_to_conductance(-P.W_CLIP) == pytest.approx(P.G_MIN)
+    assert P.weight_to_conductance(P.W_CLIP) == pytest.approx(P.G_MAX)
+    assert P.weight_to_conductance(0.0) == pytest.approx(P.g_ref())
+
+
+def test_weight_mapping_is_affine():
+    g1 = P.weight_to_conductance(1.0)
+    g2 = P.weight_to_conductance(2.0)
+    g3 = P.weight_to_conductance(3.0)
+    assert (g2 - g1) == pytest.approx(g3 - g2)
+    assert (g2 - g1) == pytest.approx(P.g0())
+
+
+def test_conductances_stay_physical():
+    """Any clipped weight maps inside [G_MIN, G_MAX] — programmable range."""
+    for w in [-4.0, -1.5, 0.0, 0.3, 4.0]:
+        g = P.weight_to_conductance(w)
+        assert P.G_MIN - 1e-12 <= g <= P.G_MAX + 1e-12
+
+
+def test_nyquist_noise_scales_sqrt():
+    """Eq. 1: σ ∝ sqrt(Δf) and ∝ sqrt(N_col)."""
+    s1 = P.column_noise_sigma(100, 1e9)
+    s2 = P.column_noise_sigma(100, 4e9)
+    s3 = P.column_noise_sigma(400, 1e9)
+    assert s2 == pytest.approx(2 * s1, rel=1e-9)
+    assert s3 == pytest.approx(2 * s1, rel=1e-9)
+
+
+def test_calibration_fixes_kappa():
+    """calibrate_vr must place κ exactly at snr_scale/1.702 (Eq. 13)."""
+    for n_col in (98, 785, 1570):
+        for df in (1e8, 1e9, 1e10):
+            for s in (0.25, 1.0, 4.0):
+                vr = P.calibrate_vr(n_col, df, s)
+                k = P.kappa(vr, n_col, df)
+                assert k == pytest.approx(s / P.SIGMOID_PROBIT, rel=1e-9)
+
+
+def test_normalized_noise_std():
+    assert P.noise_std_normalized(1.0) == pytest.approx(1.702)
+    assert P.noise_std_normalized(2.0) == pytest.approx(0.851)
+
+
+def test_tia_threshold_roundtrip():
+    """theta_norm_for_vth0 inverts tia_resistance."""
+    r = P.tia_resistance(0.05, n_col=301, theta_norm=3.0)
+    assert P.theta_norm_for_vth0(0.05, r, n_col=301) == pytest.approx(3.0)
+    assert P.theta_norm_for_vth0(0.0, r, n_col=301) == pytest.approx(0.0)
+
+
+def test_probit_logistic_approx_quality():
+    """max |sigmoid(z) − Φ(z/1.702)| < 0.0095 (the classic bound)."""
+    from math import erf
+    worst = max(
+        abs(1 / (1 + math.exp(-z)) - 0.5 * (1 + erf(z / 1.702 / math.sqrt(2))))
+        for z in [i / 100 for i in range(-600, 601)]
+    )
+    assert worst < 0.0095
+
+
+def test_design_point_serialization():
+    d = P.DesignPoint().to_dict()
+    for key in ("layers", "g0", "g_ref", "sigma_z", "vr_per_layer", "r_tia"):
+        assert key in d
+    assert len(d["vr_per_layer"]) == 3
+    assert d["sigma_z"] == pytest.approx(1.702)
+    # Read voltage should be small (paper: well below normal read voltage).
+    assert all(0 < v < 0.5 for v in d["vr_per_layer"])

@@ -1,0 +1,52 @@
+//! Bench: Fig. 4 workload — sigmoid-neuron sampling throughput.
+//!
+//! Measures the crossbar read+compare inner loop (the native engine's
+//! hot-spot) in both noise modes, and regenerates the panel (c) sweep at
+//! bench scale.
+
+use raca::crossbar::{CrossbarArray, ReadMode, WeightMapping};
+use raca::device::noise::NoiseParams;
+use raca::device::variation::VariationModel;
+use raca::device::DELTA_F;
+use raca::stats::GaussianSource;
+use raca::util::bench::bench_units;
+
+fn main() {
+    println!("== bench_fig4: sigmoid neuron sampling ==");
+    let mapping = WeightMapping::default();
+    let n_col = 785;
+    let vr = mapping.calibrate_vr(n_col, DELTA_F, 1.0);
+    let mut gauss = GaussianSource::new(1);
+    let mut arr = CrossbarArray::program(
+        n_col,
+        128,
+        &vec![0.3f32; n_col * 128],
+        mapping,
+        &VariationModel::default(),
+        NoiseParams::thermal_only(DELTA_F),
+        &mut gauss,
+    );
+    let v = vec![vr; n_col];
+    let mut out = vec![0.0f64; 128];
+
+    let reads = 200usize;
+    bench_units(
+        "column-aggregate read (785x128, per full-array read)",
+        3,
+        20,
+        (reads * 128) as f64,
+        || {
+            for _ in 0..reads {
+                arr.read_differential(&v, ReadMode::ColumnAggregate, &mut out, &mut gauss);
+            }
+        },
+    );
+    bench_units("per-device read (785x128, exact Eq.9/10)", 1, 5, 128.0, || {
+        arr.read_differential(&v, ReadMode::PerDevice, &mut out, &mut gauss);
+    });
+
+    println!("\nregenerating Fig 4(c) at bench scale (800 samples/point)…");
+    let t0 = std::time::Instant::now();
+    raca::figures::fig4::panel_c(800).expect("fig4c");
+    println!("fig4(c) wall time: {:?}", t0.elapsed());
+}

@@ -1,0 +1,36 @@
+//! Bench: Fig. 5 workload — WTA decision throughput (transient circuit
+//! vs analytic sampling) and the panel (d) regeneration time.
+
+use raca::circuit::{WtaCircuit, WtaParams};
+use raca::neuron::softmax_wta::WtaLayer;
+use raca::stats::GaussianSource;
+use raca::util::bench::bench_units;
+
+fn main() {
+    println!("== bench_fig5: WTA decisions ==");
+    let sigma_v = 0.02;
+    let z = [-1.2, -0.4, 0.3, -0.8, 2.1, 0.9, -1.6, 0.1, -0.3, 0.9];
+    let v: Vec<f64> = z.iter().map(|&zi| zi * sigma_v / 1.702).collect();
+    let v_mean = v.iter().sum::<f64>() / v.len() as f64;
+    let vth0 = 1.702 * sigma_v - v_mean;
+    let params = WtaParams { sigma_v, vth0, ..Default::default() };
+
+    let circuit = WtaCircuit::new(params.clone());
+    let mut g = GaussianSource::new(1);
+    let decisions = 2000usize;
+    bench_units("transient WTA decide() x2000", 2, 10, decisions as f64, || {
+        for _ in 0..decisions {
+            std::hint::black_box(circuit.decide(&v, &mut g));
+        }
+    });
+
+    let layer = WtaLayer::new(params);
+    bench_units("WtaLayer.run 2000 trials (counts)", 2, 10, decisions as f64, || {
+        std::hint::black_box(layer.run(&v, decisions, &mut g));
+    });
+
+    println!("\nregenerating Fig 5 panels at bench scale…");
+    let t0 = std::time::Instant::now();
+    raca::figures::fig5::run("all", 2000).expect("fig5");
+    println!("fig5 wall time: {:?}", t0.elapsed());
+}

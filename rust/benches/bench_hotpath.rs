@@ -1,0 +1,92 @@
+//! Bench: the production hot path — AOT/PJRT trial executables at every
+//! batch size, the ideal executable, and coordinator overhead vs raw
+//! engine calls.  This is the §Perf reference workload (EXPERIMENTS.md).
+
+use raca::coordinator::{SchedulerConfig, Server};
+use raca::dataset::Dataset;
+use raca::engine::{TrialParams, XlaEngine};
+use raca::runtime::ArtifactStore;
+use raca::util::bench::bench_units;
+
+fn main() {
+    println!("== bench_hotpath: AOT/PJRT + coordinator ==");
+    let dir = ArtifactStore::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let ds = Dataset::load(&dir.join("data").join("test")).expect("dataset");
+    let engine = XlaEngine::start(dir).expect("engine");
+    let h = engine.handle();
+    let m = h.manifest().expect("manifest");
+    let p = TrialParams::default();
+
+    // --- raw trial executables at each batch size ----------------------
+    for &b in &m.trial_batches {
+        h.warmup(b).expect("warmup");
+        let mut xs = Vec::with_capacity(b * 784);
+        for i in 0..b {
+            xs.extend_from_slice(ds.image(i % ds.len()));
+        }
+        let mut seed = 0u32;
+        bench_units(&format!("trial_fwd_b{b} execute (trials/iter={b})"), 3, 15, b as f64, || {
+            seed = seed.wrapping_add(1);
+            std::hint::black_box(h.run_trials(xs.clone(), b, seed, p).expect("run"));
+        });
+    }
+
+    // --- ideal executable ------------------------------------------------
+    for &b in &m.ideal_batches {
+        let mut xs = Vec::with_capacity(b * 784);
+        for i in 0..b {
+            xs.extend_from_slice(ds.image(i % ds.len()));
+        }
+        bench_units(&format!("ideal_fwd_b{b} execute (images/iter={b})"), 3, 15, b as f64, || {
+            std::hint::black_box(h.run_ideal(xs.clone(), b).expect("run"));
+        });
+    }
+
+    // --- coordinator overhead -----------------------------------------
+    // 64 requests × 8 trials through the scheduler vs the same trial count
+    // as raw batch-32 executes.  The delta is pure coordination cost.
+    let n_req = 64usize;
+    let trials_per = 8u32;
+    let total_trials = n_req * trials_per as usize;
+    let raw_batches = total_trials / 32;
+    let mut xs32 = Vec::with_capacity(32 * 784);
+    for i in 0..32 {
+        xs32.extend_from_slice(ds.image(i));
+    }
+    let mut seed = 1000u32;
+    bench_units(
+        &format!("raw engine: {raw_batches} batch-32 executes ({total_trials} trials)"),
+        1,
+        8,
+        total_trials as f64,
+        || {
+            for _ in 0..raw_batches {
+                seed = seed.wrapping_add(1);
+                std::hint::black_box(h.run_trials(xs32.clone(), 32, seed, p).expect("run"));
+            }
+        },
+    );
+
+    bench_units(
+        &format!("coordinator: {n_req} requests x {trials_per} trials (batch 32)"),
+        1,
+        8,
+        total_trials as f64,
+        || {
+            let mut cfg = SchedulerConfig::default();
+            cfg.batch_size = 32;
+            let server = Server::start(h.clone(), cfg);
+            let client = server.client();
+            let rxs: Vec<_> = (0..n_req)
+                .map(|i| client.submit(ds.image(i).to_vec(), trials_per, 0.0).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().expect("response");
+            }
+        },
+    );
+}

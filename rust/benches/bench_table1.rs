@@ -1,0 +1,28 @@
+//! Bench: Table I workload — cost-model evaluation speed plus the table
+//! regeneration itself (with breakdowns and ablations).
+
+use raca::hwmodel::table1::Table1Result;
+use raca::hwmodel::{Architecture, SystemModel};
+use raca::util::bench::bench_units;
+
+fn main() {
+    println!("== bench_table1: hardware cost model ==");
+    let model = SystemModel::paper();
+    bench_units("full energy+area+tops evaluation (both archs)", 10, 50, 2.0, || {
+        for arch in [Architecture::OneBitAdc, Architecture::Raca] {
+            std::hint::black_box(model.energy(arch).total());
+            std::hint::black_box(model.area(arch).total());
+            std::hint::black_box(model.tops_per_watt(arch));
+        }
+    });
+    bench_units("Table1Result::compute", 10, 50, 1.0, || {
+        std::hint::black_box(Table1Result::compute(&model));
+    });
+
+    println!("\nregenerating Table I + ablations…");
+    let t0 = std::time::Instant::now();
+    raca::figures::table1::run().expect("table1");
+    raca::figures::table1::ablate_tiles().expect("tiles");
+    raca::figures::table1::ablate_low_vr().expect("low-vr");
+    println!("table1 wall time: {:?}", t0.elapsed());
+}

@@ -1,0 +1,188 @@
+//! Floorplan: assign logical layer slices to physical crossbar tiles.
+//!
+//! The chip is a grid of identical 128×128 crossbar tiles (plus their
+//! column periphery).  Each layer needs `ceil(rows/T)·ceil(cols/T)`
+//! tiles; the floorplanner packs layers onto the grid row-major, records
+//! the assignment, and reports utilization — both device-level (cells
+//! actually programmed vs provisioned) and tile-level.
+
+use crate::nn::ModelSpec;
+
+/// One tile's assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileAssignment {
+    /// Physical tile index (row-major on the chip grid).
+    pub tile: usize,
+    /// Owning layer.
+    pub layer: usize,
+    /// Row/col block within the layer's logical matrix.
+    pub block_row: usize,
+    pub block_col: usize,
+    /// Occupied extent (edge tiles are partially filled).
+    pub used_rows: usize,
+    pub used_cols: usize,
+}
+
+/// A placed network.
+#[derive(Debug, Clone)]
+pub struct Floorplan {
+    pub spec: ModelSpec,
+    pub tile: usize,
+    pub assignments: Vec<TileAssignment>,
+    /// Chip grid width in tiles (for x/y coordinates).
+    pub grid_width: usize,
+}
+
+impl Floorplan {
+    /// Pack `spec` onto a chip with `grid_width` tiles per row.
+    pub fn place(spec: ModelSpec, tile: usize, grid_width: usize) -> Self {
+        assert!(tile > 0 && grid_width > 0);
+        let mut assignments = Vec::new();
+        let mut next = 0usize;
+        for l in 0..spec.num_layers() {
+            let (rows, cols) = spec.layer_shape(l);
+            let brs = rows.div_ceil(tile);
+            let bcs = cols.div_ceil(tile);
+            for br in 0..brs {
+                for bc in 0..bcs {
+                    assignments.push(TileAssignment {
+                        tile: next,
+                        layer: l,
+                        block_row: br,
+                        block_col: bc,
+                        used_rows: tile.min(rows - br * tile),
+                        used_cols: tile.min(cols - bc * tile),
+                    });
+                    next += 1;
+                }
+            }
+        }
+        Self { spec, tile, assignments, grid_width }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// Physical (x, y) tile coordinates.
+    pub fn tile_xy(&self, tile: usize) -> (usize, usize) {
+        (tile % self.grid_width, tile / self.grid_width)
+    }
+
+    /// Device utilization: programmed cells / provisioned cells.
+    pub fn device_utilization(&self) -> f64 {
+        let used: usize = self
+            .assignments
+            .iter()
+            .map(|a| a.used_rows * a.used_cols)
+            .sum();
+        used as f64 / (self.num_tiles() * self.tile * self.tile) as f64
+    }
+
+    /// Tiles of one layer.
+    pub fn layer_tiles(&self, layer: usize) -> Vec<&TileAssignment> {
+        self.assignments.iter().filter(|a| a.layer == layer).collect()
+    }
+
+    /// Manhattan distance (in tile pitches) between the centroids of two
+    /// consecutive layers — the activation-routing distance the H-tree
+    /// model charges.
+    pub fn layer_hop_distance(&self, from_layer: usize) -> f64 {
+        let centroid = |l: usize| -> (f64, f64) {
+            let tiles = self.layer_tiles(l);
+            let n = tiles.len() as f64;
+            let (sx, sy) = tiles.iter().fold((0.0, 0.0), |(sx, sy), a| {
+                let (x, y) = self.tile_xy(a.tile);
+                (sx + x as f64, sy + y as f64)
+            });
+            (sx / n, sy / n)
+        };
+        let (x0, y0) = centroid(from_layer);
+        let (x1, y1) = centroid(from_layer + 1);
+        (x1 - x0).abs() + (y1 - y0).abs()
+    }
+
+    /// Sanity: every logical cell covered exactly once.
+    pub fn validate(&self) -> Result<(), String> {
+        for l in 0..self.spec.num_layers() {
+            let (rows, cols) = self.spec.layer_shape(l);
+            let covered: usize = self
+                .layer_tiles(l)
+                .iter()
+                .map(|a| a.used_rows * a.used_cols)
+                .sum();
+            if covered != rows * cols {
+                return Err(format!(
+                    "layer {l}: covered {covered} cells, expected {}",
+                    rows * cols
+                ));
+            }
+        }
+        // No tile double-booked.
+        let mut seen = std::collections::HashSet::new();
+        for a in &self.assignments {
+            if !seen.insert(a.tile) {
+                return Err(format!("tile {} double-booked", a.tile));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_plan() -> Floorplan {
+        Floorplan::place(ModelSpec::paper(), 128, 8)
+    }
+
+    #[test]
+    fn paper_network_tile_count() {
+        let fp = paper_plan();
+        assert_eq!(fp.num_tiles(), 28 + 12 + 3);
+        fp.validate().unwrap();
+    }
+
+    #[test]
+    fn utilization_accounts_for_edge_tiles() {
+        let fp = paper_plan();
+        let u = fp.device_utilization();
+        // 785·500 + 501·300 + 301·10 programmed out of 43·128² provisioned.
+        let want = (785.0 * 500.0 + 501.0 * 300.0 + 301.0 * 10.0) / (43.0 * 128.0 * 128.0);
+        assert!((u - want).abs() < 1e-12, "{u} vs {want}");
+        assert!(u > 0.5 && u < 1.0);
+    }
+
+    #[test]
+    fn exact_fit_is_full_utilization() {
+        let fp = Floorplan::place(ModelSpec::new(vec![127, 128]), 128, 4);
+        // layer shape (128, 128) → exactly one full tile.
+        assert_eq!(fp.num_tiles(), 1);
+        assert_eq!(fp.device_utilization(), 1.0);
+    }
+
+    #[test]
+    fn hop_distances_are_finite_and_ordered() {
+        let fp = paper_plan();
+        for l in 0..fp.spec.num_layers() - 1 {
+            let d = fp.layer_hop_distance(l);
+            assert!(d.is_finite() && d >= 0.0);
+        }
+    }
+
+    #[test]
+    fn validate_catches_double_booking() {
+        let mut fp = paper_plan();
+        fp.assignments[1].tile = fp.assignments[0].tile;
+        assert!(fp.validate().is_err());
+    }
+
+    #[test]
+    fn xy_roundtrip() {
+        let fp = paper_plan();
+        assert_eq!(fp.tile_xy(0), (0, 0));
+        assert_eq!(fp.tile_xy(8), (0, 1));
+        assert_eq!(fp.tile_xy(11), (3, 1));
+    }
+}

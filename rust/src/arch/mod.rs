@@ -1,0 +1,14 @@
+//! RACA chip architecture (DESIGN.md §4: floorplan + pipeline model).
+//!
+//! Maps the logical FCNN onto the physical chip: which crossbar tiles
+//! implement which layer slice, how layers pipeline across consecutive
+//! inputs, and the resulting utilization / throughput — the piece that
+//! turns the per-component cost model into a *system* (paper §III-C:
+//! "the number of neural network layers and specifications supported by
+//! this architecture can be flexibly configured").
+
+pub mod floorplan;
+pub mod pipeline;
+
+pub use floorplan::{Floorplan, TileAssignment};
+pub use pipeline::{PipelineModel, PipelineReport};

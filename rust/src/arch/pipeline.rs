@@ -1,0 +1,160 @@
+//! Layer-pipeline timing model.
+//!
+//! RACA layers are physically distinct crossbars, so consecutive *inputs*
+//! pipeline: while the output layer runs its WTA race on image k, the
+//! hidden layers already process image k+1.  Throughput is set by the
+//! slowest stage; per-image latency by the sum.  This model feeds the
+//! throughput side of Table I and exposes the WTA race as the pipeline
+//! bottleneck the paper's V_th0 discussion implies ("high V_th0 …
+//! prolongs a single decision time").
+
+use crate::hwmodel::{Architecture, TechParams};
+use crate::nn::ModelSpec;
+
+use super::floorplan::Floorplan;
+
+/// Per-stage and aggregate timing.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// Per-layer stage latency [ns] (one trial through that layer).
+    pub stage_ns: Vec<f64>,
+    /// Per-image latency (sum of stages) [ns].
+    pub latency_ns: f64,
+    /// Pipeline initiation interval = slowest stage [ns].
+    pub ii_ns: f64,
+    /// Trials per second at full pipeline occupancy.
+    pub trials_per_sec: f64,
+    /// Index of the bottleneck stage.
+    pub bottleneck: usize,
+}
+
+/// Timing model over a placed network.
+#[derive(Debug, Clone)]
+pub struct PipelineModel {
+    pub floorplan: Floorplan,
+    pub tech: TechParams,
+    pub arch: Architecture,
+    /// Expected WTA steps per decision (depends on V_th0; the paper's
+    /// 0.05 V point decides in a handful of steps, worst case wta_steps).
+    pub expected_wta_steps: f64,
+}
+
+impl PipelineModel {
+    pub fn new(spec: ModelSpec, tech: TechParams, arch: Architecture) -> Self {
+        let tile = tech.tile;
+        Self {
+            floorplan: Floorplan::place(spec, tile, 8),
+            expected_wta_steps: tech.wta_steps as f64 / 8.0,
+            tech,
+            arch,
+        }
+    }
+
+    pub fn paper_raca() -> Self {
+        Self::new(ModelSpec::paper(), TechParams::default(), Architecture::Raca)
+    }
+
+    /// Expected decision steps from the threshold depth: the per-step
+    /// any-neuron crossing probability p gives a geometric wait 1/p.
+    pub fn set_wta_expectation_from_theta(&mut self, theta_norm: f64, classes: usize) {
+        // p_step ≈ 1 − (1 − Φ(−θ/1.702))^C for near-tied neurons.
+        let p1 = crate::stats::erf::norm_cdf(-theta_norm / 1.702);
+        let p_step = 1.0 - (1.0 - p1).powi(classes as i32);
+        self.expected_wta_steps =
+            (1.0 / p_step.max(1e-9)).min(self.tech.wta_steps as f64);
+    }
+
+    pub fn report(&self) -> PipelineReport {
+        let t = &self.tech;
+        let spec = &self.floorplan.spec;
+        let n_layers = spec.num_layers();
+        let mut stage_ns = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let last = l == n_layers - 1;
+            let cycles = if l == 0 {
+                t.input_cycles as f64
+            } else if last && self.arch == Architecture::Raca {
+                self.expected_wta_steps
+            } else {
+                1.0
+            };
+            let per_cycle = match self.arch {
+                Architecture::OneBitAdc => 2.0 * t.t_read * 1e9,
+                Architecture::Raca => t.t_read * 1e9,
+            };
+            stage_ns.push(cycles * per_cycle);
+        }
+        let latency_ns: f64 = stage_ns.iter().sum();
+        let (bottleneck, &ii_ns) = stage_ns
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        PipelineReport {
+            trials_per_sec: 1e9 / ii_ns,
+            stage_ns,
+            latency_ns,
+            ii_ns,
+            bottleneck,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_beats_serial_latency() {
+        let m = PipelineModel::paper_raca();
+        let r = m.report();
+        assert!(r.ii_ns <= r.latency_ns);
+        assert!(r.trials_per_sec > 0.0);
+        assert_eq!(r.stage_ns.len(), 3);
+    }
+
+    #[test]
+    fn input_layer_is_bottleneck_at_low_theta() {
+        // With a shallow threshold the WTA decides in ~1 step, so the
+        // 8-cycle bit-serial input layer dominates.
+        let mut m = PipelineModel::paper_raca();
+        m.set_wta_expectation_from_theta(0.0, 10);
+        let r = m.report();
+        assert_eq!(r.bottleneck, 0, "stages {:?}", r.stage_ns);
+    }
+
+    #[test]
+    fn deep_threshold_slows_decisions() {
+        let mut shallow = PipelineModel::paper_raca();
+        shallow.set_wta_expectation_from_theta(1.0, 10);
+        let mut deep = PipelineModel::paper_raca();
+        deep.set_wta_expectation_from_theta(6.0, 10);
+        assert!(
+            deep.expected_wta_steps > 4.0 * shallow.expected_wta_steps,
+            "deep {} vs shallow {}",
+            deep.expected_wta_steps,
+            shallow.expected_wta_steps
+        );
+        assert!(deep.report().latency_ns > shallow.report().latency_ns);
+    }
+
+    #[test]
+    fn wta_expectation_capped_at_horizon() {
+        let mut m = PipelineModel::paper_raca();
+        m.set_wta_expectation_from_theta(50.0, 10);
+        assert!(m.expected_wta_steps <= m.tech.wta_steps as f64);
+    }
+
+    #[test]
+    fn adc_baseline_pays_conversion_cycle() {
+        let raca = PipelineModel::paper_raca().report();
+        let adc = PipelineModel::new(
+            ModelSpec::paper(),
+            TechParams::default(),
+            Architecture::OneBitAdc,
+        )
+        .report();
+        // Hidden-layer stages: RACA 1 ns vs ADC 2 ns.
+        assert!(adc.stage_ns[1] > raca.stage_ns[1]);
+    }
+}

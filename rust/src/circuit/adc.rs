@@ -1,0 +1,85 @@
+//! SAR ADC model — the component RACA *removes*.
+//!
+//! Needed for the Table I baseline ("1-bit ADC" architecture) and for the
+//! conventional-CiM ablations: an n-bit successive-approximation converter
+//! with full-scale range, plus energy/area figures consumed by `hwmodel`.
+//! A 1-bit SAR degenerates to a clocked comparator with sampling front-end
+//! — which is why the paper's comparator-only readout is strictly cheaper.
+
+/// n-bit SAR ADC over [−full_scale, +full_scale].
+#[derive(Debug, Clone)]
+pub struct SarAdc {
+    pub bits: u32,
+    pub full_scale: f64,
+}
+
+impl SarAdc {
+    pub fn new(bits: u32, full_scale: f64) -> Self {
+        assert!(bits >= 1 && bits <= 14);
+        Self { bits, full_scale }
+    }
+
+    /// Convert a voltage to a signed code in [−2^(n−1), 2^(n−1)−1].
+    ///
+    /// Mid-rise quantizer (floor): the decision threshold between codes
+    /// −1 and 0 sits exactly at 0 V, so the 1-bit case degenerates to a
+    /// sign comparator — the component RACA keeps.
+    #[inline]
+    pub fn convert(&self, v: f64) -> i32 {
+        let half = (1i64 << (self.bits - 1)) as f64;
+        let code = (v / self.full_scale * half).floor();
+        code.clamp(-half, half - 1.0) as i32
+    }
+
+    /// Reconstruct the analog value of a code (mid-rise: cell center).
+    pub fn reconstruct(&self, code: i32) -> f64 {
+        let half = (1i64 << (self.bits - 1)) as f64;
+        (code as f64 + 0.5) / half * self.full_scale
+    }
+
+    /// LSB size in volts.
+    pub fn lsb(&self) -> f64 {
+        self.full_scale / (1i64 << (self.bits - 1)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_bit_is_sign() {
+        let a = SarAdc::new(1, 1.0);
+        assert_eq!(a.convert(0.3), 0); // codes {−1, 0}
+        assert_eq!(a.convert(-0.3), -1);
+        assert_eq!(a.convert(0.0), 0); // threshold exactly at 0 V
+    }
+
+    #[test]
+    fn roundtrip_error_below_lsb() {
+        let a = SarAdc::new(8, 1.0);
+        for i in -100..100 {
+            let v = i as f64 / 100.0 * 0.99;
+            let err = (a.reconstruct(a.convert(v)) - v).abs();
+            assert!(err <= a.lsb(), "v={v} err={err}");
+        }
+    }
+
+    #[test]
+    fn clamps_over_range() {
+        let a = SarAdc::new(4, 1.0);
+        assert_eq!(a.convert(10.0), 7);
+        assert_eq!(a.convert(-10.0), -8);
+    }
+
+    #[test]
+    fn monotonic() {
+        let a = SarAdc::new(6, 2.0);
+        let mut last = i32::MIN;
+        for i in -200..200 {
+            let c = a.convert(i as f64 / 100.0);
+            assert!(c >= last);
+            last = c;
+        }
+    }
+}

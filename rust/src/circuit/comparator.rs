@@ -1,0 +1,90 @@
+//! Latched voltage comparator — the *entire* activation circuit of a RACA
+//! Sigmoid neuron (paper Fig. 2: comparator replaces ADC + digital logic).
+
+use crate::stats::GaussianSource;
+
+/// Clocked comparator with offset and input-referred noise.
+#[derive(Debug, Clone)]
+pub struct Comparator {
+    /// Static input offset [V] (mismatch; trimmed to ~0 in the paper).
+    pub offset: f64,
+    /// Input-referred RMS noise of the comparator itself [V].  The paper's
+    /// design *wants* noise, but it comes from the array; the comparator's
+    /// own noise just adds (in quadrature) to the useful noise.
+    pub input_noise_rms: f64,
+    /// Hysteresis half-width [V] (0 = ideal latch).
+    pub hysteresis: f64,
+    /// Previous decision (for hysteresis).
+    last: bool,
+}
+
+impl Comparator {
+    pub fn ideal() -> Self {
+        Self { offset: 0.0, input_noise_rms: 0.0, hysteresis: 0.0, last: false }
+    }
+
+    pub fn new(offset: f64, input_noise_rms: f64) -> Self {
+        Self { offset, input_noise_rms, hysteresis: 0.0, last: false }
+    }
+
+    pub fn with_hysteresis(mut self, h: f64) -> Self {
+        self.hysteresis = h;
+        self
+    }
+
+    /// One clocked decision: is `v_plus > v_minus`?
+    #[inline]
+    pub fn decide(&mut self, v_plus: f64, v_minus: f64, gauss: &mut GaussianSource) -> bool {
+        let mut d = v_plus - v_minus + self.offset;
+        if self.input_noise_rms > 0.0 {
+            d += gauss.next() * self.input_noise_rms;
+        }
+        if self.hysteresis > 0.0 {
+            let th = if self.last { -self.hysteresis } else { self.hysteresis };
+            self.last = d > th;
+        } else {
+            self.last = d > 0.0;
+        }
+        self.last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_threshold() {
+        let mut c = Comparator::ideal();
+        let mut g = GaussianSource::new(1);
+        assert!(c.decide(0.1, 0.0, &mut g));
+        assert!(!c.decide(-0.1, 0.0, &mut g));
+        assert!(!c.decide(0.0, 0.0, &mut g)); // strict >
+    }
+
+    #[test]
+    fn offset_biases_decision() {
+        let mut c = Comparator::new(0.05, 0.0);
+        let mut g = GaussianSource::new(1);
+        assert!(c.decide(0.0, 0.0, &mut g)); // offset pushes it over
+    }
+
+    #[test]
+    fn own_noise_randomizes_marginal_inputs() {
+        let mut c = Comparator::new(0.0, 0.01);
+        let mut g = GaussianSource::new(2);
+        let fires = (0..10_000).filter(|_| c.decide(0.0, 0.0, &mut g)).count();
+        let f = fires as f64 / 10_000.0;
+        assert!((f - 0.5).abs() < 0.02, "f={f}");
+    }
+
+    #[test]
+    fn hysteresis_sticks() {
+        let mut c = Comparator::ideal().with_hysteresis(0.1);
+        let mut g = GaussianSource::new(3);
+        assert!(!c.decide(0.05, 0.0, &mut g)); // below +hys from low state
+        assert!(c.decide(0.15, 0.0, &mut g)); // crosses
+        assert!(c.decide(-0.05, 0.0, &mut g)); // stays high above −hys
+        assert!(!c.decide(-0.15, 0.0, &mut g)); // releases
+    }
+}

@@ -1,0 +1,70 @@
+//! Wordline driver / input DAC.
+//!
+//! RACA keeps a DAC only at the *input* layer (paper §III-C) to preserve
+//! input feature integrity; hidden layers receive binary activations that
+//! need only a two-level driver.  The model quantizes a normalized input
+//! in [0,1] to `bits` levels and scales by the read voltage Vr.
+
+/// N-bit input driver: x ∈ [0,1] → quantized voltage in [0, Vr].
+#[derive(Debug, Clone)]
+pub struct WordlineDriver {
+    pub bits: u32,
+    pub v_read: f64,
+}
+
+impl WordlineDriver {
+    pub fn new(bits: u32, v_read: f64) -> Self {
+        assert!(bits >= 1 && bits <= 16);
+        Self { bits, v_read }
+    }
+
+    /// Binary driver (hidden layers: activation is already 0/1).
+    pub fn binary(v_read: f64) -> Self {
+        Self { bits: 1, v_read }
+    }
+
+    /// Quantize-and-drive. Input is clamped to [0, 1].
+    #[inline]
+    pub fn drive(&self, x: f64) -> f64 {
+        let x = x.clamp(0.0, 1.0);
+        let levels = (1u32 << self.bits) - 1;
+        let q = (x * levels as f64).round() / levels as f64;
+        q * self.v_read
+    }
+
+    /// Quantization step in volts.
+    pub fn lsb(&self) -> f64 {
+        self.v_read / ((1u32 << self.bits) - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_driver_is_two_level() {
+        let d = WordlineDriver::binary(0.2);
+        assert_eq!(d.drive(0.0), 0.0);
+        assert_eq!(d.drive(1.0), 0.2);
+        assert_eq!(d.drive(0.6), 0.2);
+        assert_eq!(d.drive(0.4), 0.0);
+    }
+
+    #[test]
+    fn eight_bit_resolution() {
+        let d = WordlineDriver::new(8, 1.0);
+        assert!((d.drive(0.5) - 0.5).abs() < d.lsb());
+        assert_eq!(d.drive(-1.0), 0.0);
+        assert_eq!(d.drive(2.0), 1.0);
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let d = WordlineDriver::new(4, 1.0);
+        for i in 0..100 {
+            let x = i as f64 / 99.0;
+            assert!((d.drive(x) - x).abs() <= 0.5 * d.lsb() + 1e-12);
+        }
+    }
+}

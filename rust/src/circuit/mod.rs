@@ -1,0 +1,19 @@
+//! Peripheral circuit layer (DESIGN.md §4.3).
+//!
+//! Behavioural models of everything around the crossbar: TIA, latched
+//! comparator, subtraction stage, wordline driver (the only "DAC" RACA
+//! keeps, at the input layer), the baseline n-bit SAR ADC (for the Table I
+//! comparison architecture), and the WTA adaptive-threshold block whose
+//! transient traces reproduce Fig. 5(a).
+
+pub mod adc;
+pub mod comparator;
+pub mod dac;
+pub mod tia;
+pub mod wta_circuit;
+
+pub use adc::SarAdc;
+pub use comparator::Comparator;
+pub use dac::WordlineDriver;
+pub use tia::Tia;
+pub use wta_circuit::{WtaCircuit, WtaParams, WtaTrace};

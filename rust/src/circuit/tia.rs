@@ -1,0 +1,76 @@
+//! Trans-impedance amplifier: differential current → voltage.
+//!
+//! V_out = R_f·(I_col − I_ref), with optional input-referred offset and
+//! saturation at the rails — the two non-idealities that matter for the
+//! comparator decision statistics.
+
+/// TIA + subtraction stage (paper Fig. 2: TIA pair feeding a subtractor).
+#[derive(Debug, Clone)]
+pub struct Tia {
+    /// Feedback resistance [Ω].
+    pub r_feedback: f64,
+    /// Input-referred offset current [A] (mismatch).
+    pub offset_current: f64,
+    /// Supply rails [V]; output clamps to ±v_rail.
+    pub v_rail: f64,
+}
+
+impl Tia {
+    pub fn new(r_feedback: f64) -> Self {
+        Self { r_feedback, offset_current: 0.0, v_rail: 1.0 }
+    }
+
+    pub fn with_offset(mut self, offset: f64) -> Self {
+        self.offset_current = offset;
+        self
+    }
+
+    pub fn with_rail(mut self, v_rail: f64) -> Self {
+        self.v_rail = v_rail;
+        self
+    }
+
+    /// Convert a differential current to the output voltage.
+    #[inline]
+    pub fn transfer(&self, i_diff: f64) -> f64 {
+        ((i_diff + self.offset_current) * self.r_feedback).clamp(-self.v_rail, self.v_rail)
+    }
+
+    /// Largest |I_diff| before the output saturates.
+    pub fn linear_range(&self) -> f64 {
+        self.v_rail / self.r_feedback
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_gain() {
+        let t = Tia::new(1e5);
+        assert!((t.transfer(1e-6) - 0.1).abs() < 1e-12);
+        assert!((t.transfer(-2e-6) + 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturates_at_rails() {
+        let t = Tia::new(1e6).with_rail(0.8);
+        assert_eq!(t.transfer(1e-3), 0.8);
+        assert_eq!(t.transfer(-1e-3), -0.8);
+    }
+
+    #[test]
+    fn offset_shifts_zero() {
+        let t = Tia::new(1e5).with_offset(1e-7);
+        assert!((t.transfer(0.0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_range_consistent() {
+        let t = Tia::new(2e5).with_rail(1.0);
+        let i = t.linear_range();
+        assert!((t.transfer(i * 0.999)).abs() < 1.0);
+        assert_eq!(t.transfer(i * 1.5), 1.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! WTA adaptive-threshold circuit — time-stepped transient model.
+//!
+//! Reproduces the paper's Fig. 5 behaviour (§III-B): the C output neurons'
+//! voltages (static value + fresh comparator noise each clock) race
+//! against a shared adaptive threshold.  The threshold rests `V_th0`
+//! above the static mean; the first neuron to cross fires, the threshold
+//! is yanked to `V_dd` (suppressing everyone else — winner-takes-all),
+//! holds for a refractory window, then relaxes back for the next decision.
+
+use crate::stats::GaussianSource;
+
+/// Transient-model parameters.
+#[derive(Debug, Clone)]
+pub struct WtaParams {
+    /// Supply voltage the threshold is pulled to on a win [V].
+    pub vdd: f64,
+    /// Rest threshold offset above the static mean [V] (paper: 0.05 / 0).
+    pub vth0: f64,
+    /// RMS of the per-step voltage noise on each neuron [V].
+    pub sigma_v: f64,
+    /// Clock period [s] (trace x-axis only).
+    pub dt: f64,
+    /// Steps the threshold stays at V_dd after a win.
+    pub refractory_steps: usize,
+    /// Give-up horizon per decision.
+    pub max_steps: usize,
+}
+
+impl Default for WtaParams {
+    fn default() -> Self {
+        Self {
+            vdd: 1.0,
+            vth0: 0.05,
+            sigma_v: 0.05 / 3.0, // θ_norm = 3 at the calibrated point
+            dt: 1e-9,
+            refractory_steps: 8,
+            max_steps: 64,
+        }
+    }
+}
+
+/// One recorded time step of the transient simulation.
+#[derive(Debug, Clone)]
+pub struct WtaStep {
+    pub t: f64,
+    /// Instantaneous (noisy) neuron voltages [V].
+    pub v: Vec<f64>,
+    /// Threshold voltage [V].
+    pub vth: f64,
+    /// Firing neuron index, if a decision completed at this step.
+    pub winner: Option<usize>,
+}
+
+/// Full transient trace across one or more decisions (Fig. 5a/b/c).
+#[derive(Debug, Clone, Default)]
+pub struct WtaTrace {
+    pub steps: Vec<WtaStep>,
+    /// Winner of each completed decision (−1 = timed out).
+    pub winners: Vec<i32>,
+}
+
+/// The adaptive-threshold WTA block.
+#[derive(Debug, Clone)]
+pub struct WtaCircuit {
+    pub params: WtaParams,
+}
+
+impl WtaCircuit {
+    pub fn new(params: WtaParams) -> Self {
+        Self { params }
+    }
+
+    /// Rest threshold for static outputs `v_static`: mean + V_th0.
+    pub fn rest_threshold(&self, v_static: &[f64]) -> f64 {
+        let mean = v_static.iter().sum::<f64>() / v_static.len() as f64;
+        mean + self.params.vth0
+    }
+
+    /// Run one decision; returns the winner (−1 on timeout) without
+    /// recording a trace (hot path for the native engine).
+    pub fn decide(&self, v_static: &[f64], gauss: &mut GaussianSource) -> i32 {
+        let vth = self.rest_threshold(v_static);
+        for _ in 0..self.params.max_steps {
+            let mut best: Option<(usize, f64)> = None;
+            for (j, &v) in v_static.iter().enumerate() {
+                let inst = v + self.params.sigma_v * gauss.next();
+                if inst > vth {
+                    // Ties within a step break toward the largest voltage
+                    // (matches the L1 kernel / jnp oracle exactly).
+                    if best.map_or(true, |(_, bv)| inst > bv) {
+                        best = Some((j, inst));
+                    }
+                }
+            }
+            if let Some((j, _)) = best {
+                return j as i32;
+            }
+        }
+        -1
+    }
+
+    /// Run `decisions` consecutive decisions, recording the full transient
+    /// (threshold pull-up + refractory) for figure generation.
+    pub fn run_trace(
+        &self,
+        v_static: &[f64],
+        decisions: usize,
+        gauss: &mut GaussianSource,
+    ) -> WtaTrace {
+        let p = &self.params;
+        let rest = self.rest_threshold(v_static);
+        let mut trace = WtaTrace::default();
+        let mut t = 0.0;
+        for _ in 0..decisions {
+            let mut decided = false;
+            for _ in 0..p.max_steps {
+                let v: Vec<f64> =
+                    v_static.iter().map(|&s| s + p.sigma_v * gauss.next()).collect();
+                let mut winner: Option<usize> = None;
+                let mut best = f64::NEG_INFINITY;
+                for (j, &vi) in v.iter().enumerate() {
+                    if vi > rest && vi > best {
+                        best = vi;
+                        winner = Some(j);
+                    }
+                }
+                trace.steps.push(WtaStep { t, v, vth: rest, winner });
+                t += p.dt;
+                if let Some(w) = winner {
+                    trace.winners.push(w as i32);
+                    decided = true;
+                    // Refractory: threshold at V_dd, nobody can fire.
+                    for _ in 0..p.refractory_steps {
+                        let v: Vec<f64> = v_static
+                            .iter()
+                            .map(|&s| s + p.sigma_v * gauss.next())
+                            .collect();
+                        trace.steps.push(WtaStep { t, v, vth: p.vdd, winner: None });
+                        t += p.dt;
+                    }
+                    break;
+                }
+            }
+            if !decided {
+                trace.winners.push(-1);
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> WtaParams {
+        WtaParams { sigma_v: 0.02, vth0: 0.05, ..Default::default() }
+    }
+
+    #[test]
+    fn dominant_neuron_wins() {
+        let c = WtaCircuit::new(params());
+        let mut g = GaussianSource::new(1);
+        let mut v = vec![0.0; 10];
+        v[4] = 0.5;
+        for _ in 0..50 {
+            assert_eq!(c.decide(&v, &mut g), 4);
+        }
+    }
+
+    #[test]
+    fn timeout_returns_minus_one() {
+        let c = WtaCircuit::new(WtaParams { sigma_v: 1e-6, ..params() });
+        let mut g = GaussianSource::new(2);
+        let v = vec![0.0; 10]; // rest threshold 0.05 ≫ 6σ
+        assert_eq!(c.decide(&v, &mut g), -1);
+    }
+
+    #[test]
+    fn exactly_one_winner_per_decision() {
+        let c = WtaCircuit::new(params());
+        let mut g = GaussianSource::new(3);
+        let v: Vec<f64> = (0..10).map(|i| 0.01 * i as f64).collect();
+        let trace = c.run_trace(&v, 20, &mut g);
+        assert_eq!(trace.winners.len(), 20);
+        let fired = trace.steps.iter().filter(|s| s.winner.is_some()).count();
+        let completed = trace.winners.iter().filter(|&&w| w >= 0).count();
+        assert_eq!(fired, completed);
+    }
+
+    #[test]
+    fn threshold_pulled_to_vdd_after_win() {
+        let c = WtaCircuit::new(params());
+        let mut g = GaussianSource::new(4);
+        let mut v = vec![0.0; 4];
+        v[0] = 0.5;
+        let trace = c.run_trace(&v, 1, &mut g);
+        let fire_idx = trace.steps.iter().position(|s| s.winner.is_some()).unwrap();
+        assert!(trace.steps[fire_idx + 1].vth == c.params.vdd);
+    }
+
+    #[test]
+    fn higher_vth0_slows_decisions() {
+        let mut g = GaussianSource::new(5);
+        let steps_for = |vth0: f64, g: &mut GaussianSource| {
+            let c = WtaCircuit::new(WtaParams {
+                vth0,
+                sigma_v: 0.02,
+                max_steps: 100_000,
+                ..Default::default()
+            });
+            let v = vec![0.0; 10];
+            let tr = c.run_trace(&v, 5, g);
+            tr.steps.len()
+        };
+        // 0.02 V rest offset (1σ) decides much faster than 0.08 V (4σ).
+        assert!(steps_for(0.08, &mut g) > 2 * steps_for(0.02, &mut g));
+    }
+
+    #[test]
+    fn win_frequency_tracks_static_voltage() {
+        let c = WtaCircuit::new(params());
+        let mut g = GaussianSource::new(6);
+        let v = vec![0.00, 0.02, 0.04];
+        let mut counts = [0usize; 3];
+        for _ in 0..2000 {
+            let w = c.decide(&v, &mut g);
+            if w >= 0 {
+                counts[w as usize] += 1;
+            }
+        }
+        assert!(counts[2] > counts[1] && counts[1] > counts[0], "{counts:?}");
+    }
+}

@@ -1,0 +1,190 @@
+//! Run configuration: JSON file → typed config for every subsystem.
+//!
+//! One file configures the whole stack (`raca --config run.json <cmd>`),
+//! so experiments are reproducible artifacts rather than flag soup:
+//!
+//! ```json
+//! {
+//!   "trial": {"snr_scale": 1.0, "theta": 3.0, "wta_steps": 64},
+//!   "scheduler": {"batch_size": 32, "min_trials": 5,
+//!                  "max_in_flight": 256, "confidence": 0.95},
+//!   "engine": "xla",
+//!   "tech": {"tile": 128, "adc1_energy_pj": 1.05}
+//! }
+//! ```
+//!
+//! Unknown keys are rejected (catch typos); missing keys take defaults.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::SchedulerConfig;
+use crate::engine::TrialParams;
+use crate::hwmodel::TechParams;
+use crate::util::json::Json;
+
+/// Which engine backs the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    #[default]
+    Xla,
+    Native,
+    Physical,
+}
+
+/// Fully parsed run configuration.
+#[derive(Debug, Clone, Default)]
+pub struct RunConfig {
+    pub trial: TrialParams,
+    pub scheduler: SchedulerConfig,
+    pub engine: EngineKind,
+    pub tech: TechParams,
+    /// Default per-request vote confidence.
+    pub confidence: f64,
+}
+
+fn check_keys(obj: &Json, allowed: &[&str], section: &str) -> Result<()> {
+    if let Some(map) = obj.as_obj() {
+        for k in map.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("config: unknown key '{k}' in {section} (allowed: {allowed:?})");
+            }
+        }
+    }
+    Ok(())
+}
+
+impl RunConfig {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing run config")?;
+        check_keys(&j, &["trial", "scheduler", "engine", "tech", "confidence"], "root")?;
+        let mut cfg = RunConfig { confidence: 0.95, ..Default::default() };
+
+        if let Some(t) = j.get("trial") {
+            check_keys(t, &["snr_scale", "sigma_z", "theta", "wta_steps"], "trial")?;
+            if let Some(s) = t.get("snr_scale").and_then(Json::as_f64) {
+                cfg.trial = TrialParams::with_snr_scale(s);
+            }
+            if let Some(s) = t.get("sigma_z").and_then(Json::as_f64) {
+                cfg.trial.sigma_z = s as f32;
+            }
+            if let Some(th) = t.get("theta").and_then(Json::as_f64) {
+                cfg.trial.theta = th as f32;
+            }
+            if let Some(w) = t.get("wta_steps").and_then(Json::as_usize) {
+                cfg.trial.wta_steps = w;
+            }
+        }
+        if let Some(s) = j.get("scheduler") {
+            check_keys(
+                s,
+                &["batch_size", "min_trials", "max_in_flight", "seed", "confidence"],
+                "scheduler",
+            )?;
+            if let Some(v) = s.get("batch_size").and_then(Json::as_usize) {
+                cfg.scheduler.batch_size = v;
+            }
+            if let Some(v) = s.get("min_trials").and_then(Json::as_usize) {
+                cfg.scheduler.min_trials = v as u32;
+            }
+            if let Some(v) = s.get("max_in_flight").and_then(Json::as_usize) {
+                cfg.scheduler.max_in_flight = v;
+            }
+            if let Some(v) = s.get("seed").and_then(Json::as_f64) {
+                cfg.scheduler.seed = v as u64;
+            }
+            if let Some(v) = s.get("confidence").and_then(Json::as_f64) {
+                cfg.confidence = v;
+            }
+        }
+        if let Some(e) = j.get("engine").and_then(Json::as_str) {
+            cfg.engine = match e {
+                "xla" => EngineKind::Xla,
+                "native" => EngineKind::Native,
+                "physical" => EngineKind::Physical,
+                other => bail!("config: unknown engine '{other}'"),
+            };
+        }
+        if let Some(t) = j.get("tech") {
+            check_keys(
+                t,
+                &[
+                    "tile", "adc1_energy_pj", "adc1_area_um2", "comparator_energy_pj",
+                    "comparator_area_um2", "v_read_conv", "v_read_raca", "delta_f",
+                    "trials_per_classification", "wta_steps", "input_cycles",
+                ],
+                "tech",
+            )?;
+            if let Some(v) = t.get("tile").and_then(Json::as_usize) {
+                cfg.tech.tile = v;
+            }
+            let set = |key: &str, field: &mut f64| {
+                if let Some(v) = t.get(key).and_then(Json::as_f64) {
+                    *field = v;
+                }
+            };
+            set("adc1_energy_pj", &mut cfg.tech.adc1_energy_pj);
+            set("adc1_area_um2", &mut cfg.tech.adc1_area_um2);
+            set("comparator_energy_pj", &mut cfg.tech.comparator_energy_pj);
+            set("comparator_area_um2", &mut cfg.tech.comparator_area_um2);
+            set("v_read_conv", &mut cfg.tech.v_read_conv);
+            set("v_read_raca", &mut cfg.tech.v_read_raca);
+            if let Some(v) = t.get("trials_per_classification").and_then(Json::as_usize) {
+                cfg.tech.trials_per_classification = v;
+            }
+            if let Some(v) = t.get("wta_steps").and_then(Json::as_usize) {
+                cfg.tech.wta_steps = v;
+            }
+            if let Some(v) = t.get("input_cycles").and_then(Json::as_usize) {
+                cfg.tech.input_cycles = v;
+            }
+        }
+        cfg.scheduler.params = cfg.trial;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_from_empty() {
+        let c = RunConfig::parse("{}").unwrap();
+        assert_eq!(c.engine, EngineKind::Xla);
+        assert_eq!(c.scheduler.batch_size, 32);
+        assert!((c.trial.sigma_z - 1.702).abs() < 1e-6);
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let c = RunConfig::parse(
+            r#"{"trial": {"snr_scale": 2.0, "theta": 0.0, "wta_steps": 16},
+                "scheduler": {"batch_size": 8, "min_trials": 2, "confidence": 0.9},
+                "engine": "native",
+                "tech": {"tile": 64, "adc1_energy_pj": 2.5}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.engine, EngineKind::Native);
+        assert!((c.trial.sigma_z - 0.851).abs() < 1e-4);
+        assert_eq!(c.trial.theta, 0.0);
+        assert_eq!(c.trial.wta_steps, 16);
+        assert_eq!(c.scheduler.batch_size, 8);
+        assert_eq!(c.scheduler.params.wta_steps, 16);
+        assert_eq!(c.tech.tile, 64);
+        assert!((c.tech.adc1_energy_pj - 2.5).abs() < 1e-12);
+        assert!((c.confidence - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(RunConfig::parse(r#"{"trail": {}}"#).is_err());
+        assert!(RunConfig::parse(r#"{"trial": {"sigma": 1}}"#).is_err());
+        assert!(RunConfig::parse(r#"{"engine": "gpu"}"#).is_err());
+    }
+}

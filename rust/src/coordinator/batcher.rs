@@ -1,0 +1,195 @@
+//! Trial batcher: packs (request, trial) pairs into fixed-size batches.
+//!
+//! The trial executable processes `B` rows per call; each row is one
+//! stochastic trial of one image.  The batcher fills rows round-robin
+//! across every in-flight request (fairness: no request starves while the
+//! batch is full) and allows the *same* request to occupy multiple rows in
+//! one batch when there is spare capacity — each row draws independent
+//! noise, so k rows = k trials.
+//!
+//! Invariants (property-tested in rust/tests/properties.rs):
+//! * a packed batch never exceeds `batch_size` rows;
+//! * every packed row belongs to a registered, unfinished request;
+//! * per-request rows in one batch ≤ its remaining trial budget;
+//! * round-robin fairness: row counts of any two eligible requests differ
+//!   by at most 1 until a budget binds.
+
+use std::collections::VecDeque;
+
+use super::request::RequestId;
+
+/// A request's packing view.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub id: RequestId,
+    /// Trials still allowed for this request (budget − issued).
+    pub remaining: u32,
+}
+
+/// The outcome of one packing round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedBatch {
+    /// One entry per row: which request this trial belongs to.
+    pub rows: Vec<RequestId>,
+}
+
+impl PackedBatch {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Round-robin packer over in-flight requests.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    queue: VecDeque<Slot>,
+}
+
+impl Batcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a request with a trial budget.
+    pub fn admit(&mut self, id: RequestId, budget: u32) {
+        debug_assert!(budget > 0);
+        self.queue.push_back(Slot { id, remaining: budget });
+    }
+
+    /// Remove a request (completed or early-stopped).
+    pub fn remove(&mut self, id: RequestId) {
+        self.queue.retain(|s| s.id != id);
+    }
+
+    /// Reduce a request's remaining budget after results arrive, removing
+    /// it when exhausted.  Returns whether the request is still active.
+    pub fn consume(&mut self, id: RequestId, used: u32) -> bool {
+        if let Some(s) = self.queue.iter_mut().find(|s| s.id == id) {
+            s.remaining = s.remaining.saturating_sub(used);
+            if s.remaining == 0 {
+                self.remove(id);
+                return false;
+            }
+            return true;
+        }
+        false
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Pack up to `batch_size` rows, round-robin across the queue.
+    ///
+    /// Does NOT mutate budgets — the scheduler calls [`Batcher::consume`]
+    /// once results return (a failed execute must not burn budget).
+    pub fn pack(&mut self, batch_size: usize) -> PackedBatch {
+        let mut rows = Vec::with_capacity(batch_size);
+        if self.queue.is_empty() || batch_size == 0 {
+            return PackedBatch { rows };
+        }
+        // Per-round virtual budgets.
+        let mut remaining: Vec<u32> = self.queue.iter().map(|s| s.remaining).collect();
+        let n = self.queue.len();
+        let mut i = 0usize;
+        let mut exhausted = 0usize;
+        while rows.len() < batch_size && exhausted < n {
+            if remaining[i] > 0 {
+                rows.push(self.queue[i].id);
+                remaining[i] -= 1;
+                if remaining[i] == 0 {
+                    exhausted += 1;
+                }
+            }
+            i = (i + 1) % n;
+        }
+        // Rotate the queue so the next pack starts from a different head
+        // (long-run fairness when batches regularly fill).
+        if n > 1 {
+            self.queue.rotate_left(1);
+        }
+        PackedBatch { rows }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packs_round_robin_fairly() {
+        let mut b = Batcher::new();
+        b.admit(1, 10);
+        b.admit(2, 10);
+        b.admit(3, 10);
+        let p = b.pack(7);
+        assert_eq!(p.len(), 7);
+        let c1 = p.rows.iter().filter(|&&r| r == 1).count();
+        let c2 = p.rows.iter().filter(|&&r| r == 2).count();
+        let c3 = p.rows.iter().filter(|&&r| r == 3).count();
+        assert_eq!(c1 + c2 + c3, 7);
+        assert!(c1.abs_diff(c2) <= 1 && c2.abs_diff(c3) <= 1);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut b = Batcher::new();
+        b.admit(1, 2);
+        b.admit(2, 100);
+        let p = b.pack(32);
+        assert_eq!(p.rows.iter().filter(|&&r| r == 1).count(), 2);
+        assert_eq!(p.rows.iter().filter(|&&r| r == 2).count(), 30);
+    }
+
+    #[test]
+    fn single_request_fills_batch() {
+        let mut b = Batcher::new();
+        b.admit(9, 100);
+        let p = b.pack(32);
+        assert_eq!(p.len(), 32);
+        assert!(p.rows.iter().all(|&r| r == 9));
+    }
+
+    #[test]
+    fn underfull_when_budgets_small() {
+        let mut b = Batcher::new();
+        b.admit(1, 1);
+        b.admit(2, 1);
+        let p = b.pack(32);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn consume_retires_requests() {
+        let mut b = Batcher::new();
+        b.admit(1, 3);
+        assert!(b.consume(1, 2));
+        assert!(!b.consume(1, 1));
+        assert!(b.is_idle());
+        assert!(!b.consume(1, 1)); // unknown id is a no-op
+    }
+
+    #[test]
+    fn remove_unknown_is_noop() {
+        let mut b = Batcher::new();
+        b.admit(1, 5);
+        b.remove(42);
+        assert_eq!(b.in_flight(), 1);
+    }
+
+    #[test]
+    fn empty_pack() {
+        let mut b = Batcher::new();
+        assert!(b.pack(8).is_empty());
+        b.admit(1, 4);
+        assert!(b.pack(0).is_empty());
+    }
+}

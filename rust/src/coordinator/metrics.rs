@@ -1,0 +1,153 @@
+//! Coordinator metrics: lock-free counters + latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metric sink (cheap atomics on the hot path).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_admitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub trials_executed: AtomicU64,
+    pub batches_executed: AtomicU64,
+    /// Σ rows over all batches (fill ratio = rows/(batches·batch_size)).
+    pub rows_packed: AtomicU64,
+    /// Trials saved by early stopping (budget − used, summed).
+    pub trials_saved: AtomicU64,
+    pub engine_errors: AtomicU64,
+    /// Latency samples in µs (bounded reservoir).
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests_admitted: u64,
+    pub requests_completed: u64,
+    pub trials_executed: u64,
+    pub batches_executed: u64,
+    pub rows_packed: u64,
+    pub trials_saved: u64,
+    pub engine_errors: u64,
+    pub latency_p50_us: u64,
+    pub latency_p99_us: u64,
+}
+
+const RESERVOIR: usize = 65_536;
+
+impl Metrics {
+    pub fn new() -> std::sync::Arc<Self> {
+        std::sync::Arc::new(Self::default())
+    }
+
+    pub fn record_latency(&self, d: std::time::Duration) {
+        let mut v = self.latencies_us.lock().unwrap();
+        if v.len() >= RESERVOIR {
+            // Halve the reservoir (keep every other sample) — bounded
+            // memory with a still-representative distribution.
+            let kept: Vec<u64> = v.iter().copied().step_by(2).collect();
+            *v = kept;
+        }
+        v.push(d.as_micros() as u64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat = self.latencies_us.lock().unwrap().clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() - 1) as f64 * p).ceil() as usize]
+            }
+        };
+        MetricsSnapshot {
+            requests_admitted: self.requests_admitted.load(Ordering::Relaxed),
+            requests_completed: self.requests_completed.load(Ordering::Relaxed),
+            trials_executed: self.trials_executed.load(Ordering::Relaxed),
+            batches_executed: self.batches_executed.load(Ordering::Relaxed),
+            rows_packed: self.rows_packed.load(Ordering::Relaxed),
+            trials_saved: self.trials_saved.load(Ordering::Relaxed),
+            engine_errors: self.engine_errors.load(Ordering::Relaxed),
+            latency_p50_us: pct(0.50),
+            latency_p99_us: pct(0.99),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Mean batch occupancy in [0, 1] given the configured batch size.
+    pub fn fill_ratio(&self, batch_size: usize) -> f64 {
+        if self.batches_executed == 0 {
+            return 0.0;
+        }
+        self.rows_packed as f64 / (self.batches_executed as f64 * batch_size as f64)
+    }
+
+    /// Mean trials per completed request.
+    pub fn trials_per_request(&self) -> f64 {
+        if self.requests_completed == 0 {
+            return 0.0;
+        }
+        self.trials_executed as f64 / self.requests_completed as f64
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "req {}/{} trials {} (saved {}) batches {} p50 {}µs p99 {}µs errs {}",
+            self.requests_completed,
+            self.requests_admitted,
+            self.trials_executed,
+            self.trials_saved,
+            self.batches_executed,
+            self.latency_p50_us,
+            self.latency_p99_us,
+            self.engine_errors
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::new();
+        m.requests_admitted.fetch_add(3, Ordering::Relaxed);
+        m.trials_executed.fetch_add(40, Ordering::Relaxed);
+        m.requests_completed.fetch_add(2, Ordering::Relaxed);
+        for us in [100u64, 200, 300, 400, 500] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests_admitted, 3);
+        assert_eq!(s.latency_p50_us, 300);
+        assert_eq!(s.latency_p99_us, 500);
+        assert!((s.trials_per_request() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fill_ratio() {
+        let m = Metrics::new();
+        m.batches_executed.fetch_add(4, Ordering::Relaxed);
+        m.rows_packed.fetch_add(100, Ordering::Relaxed);
+        assert!((m.snapshot().fill_ratio(32) - 100.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let m = Metrics::new();
+        for i in 0..(RESERVOIR * 2 + 10) {
+            m.record_latency(Duration::from_micros(i as u64));
+        }
+        let len = m.latencies_us.lock().unwrap().len();
+        assert!(len <= RESERVOIR + 1);
+        let s = m.snapshot();
+        assert!(s.latency_p99_us > s.latency_p50_us);
+    }
+}

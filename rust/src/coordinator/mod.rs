@@ -1,0 +1,29 @@
+//! L3 coordinator (DESIGN.md §4.9) — the serving layer around the RACA
+//! trial engines.
+//!
+//! Stochastic inference needs *many* trials per request; the coordinator's
+//! job is to keep the trial executable's batch full while spending as few
+//! trials as possible per request:
+//!
+//! * [`batcher`] packs (request, trial) pairs from all in-flight requests
+//!   into fixed-size rows for the batched trial executable;
+//! * [`scheduler`] runs the pack→execute→count loop and applies the
+//!   confidence-based early stopper (Wilson interval on the top-two vote
+//!   counts) so easy inputs finish in a handful of trials while ambiguous
+//!   ones keep voting up to the cap;
+//! * [`server`] owns the scheduler thread and exposes a `Clone + Send`
+//!   client handle with submit/await semantics;
+//! * [`metrics`] counts everything (trials, batches, fill ratio,
+//!   early-stop savings, latency percentiles).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batcher, PackedBatch};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{InferRequest, InferResponse, RequestId};
+pub use scheduler::{Scheduler, SchedulerConfig, TrialRunner};
+pub use server::{Server, ServerClient};

@@ -1,0 +1,58 @@
+//! Request/response types of the serving API.
+
+use crate::neuron::WtaOutcome;
+
+pub type RequestId = u64;
+
+/// One classification request.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub id: RequestId,
+    /// 784 pixels in [0, 1].
+    pub image: Vec<f32>,
+    /// Trial budget (vote cap).  The paper's Fig. 6 x-axis.
+    pub max_trials: u32,
+    /// Early-stop confidence on the top-two Wilson interval (0 disables).
+    pub confidence: f64,
+}
+
+impl InferRequest {
+    pub fn new(id: RequestId, image: Vec<f32>) -> Self {
+        Self { id, image, max_trials: 32, confidence: 0.95 }
+    }
+
+    pub fn with_budget(mut self, max_trials: u32, confidence: f64) -> Self {
+        self.max_trials = max_trials;
+        self.confidence = confidence;
+        self
+    }
+}
+
+/// Completed classification.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: RequestId,
+    /// Majority-vote class (−1 if every trial abstained).
+    pub prediction: i32,
+    /// Full vote state (counts, abstentions, trials used).
+    pub outcome: WtaOutcome,
+    /// Trials actually spent (≤ max_trials when early-stopped).
+    pub trials_used: u32,
+    /// Wall-clock latency from submit to completion.
+    pub latency: std::time::Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults() {
+        let r = InferRequest::new(7, vec![0.0; 784]);
+        assert_eq!(r.max_trials, 32);
+        assert!(r.confidence > 0.9);
+        let r = r.with_budget(64, 0.0);
+        assert_eq!(r.max_trials, 64);
+        assert_eq!(r.confidence, 0.0);
+    }
+}

@@ -1,0 +1,346 @@
+//! Trial scheduler: the pack → execute → count → early-stop loop.
+//!
+//! Owns the vote state of every in-flight request.  Each iteration packs a
+//! batch (round-robin over active requests), executes it on the engine,
+//! distributes winners into per-request [`WtaOutcome`] counters, and
+//! completes requests that either exhausted their budget or whose leading
+//! class is statistically decided (Wilson lower bound of lead vs runner-up
+//! > 0.5 at the request's confidence level — `stats::ci`).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::TrialParams;
+use crate::neuron::WtaOutcome;
+use crate::stats::ci::lead_is_decided;
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::request::{InferRequest, InferResponse, RequestId};
+
+/// Engine abstraction the scheduler drives (both `XlaEngineHandle` and
+/// `NativeEngine` implement it).
+pub trait TrialRunner {
+    /// Execute `rows.len()/features` trials; one winner per row.
+    fn run(&self, x: &[f32], rows: usize, seed: u32, p: TrialParams) -> Result<Vec<i32>>;
+    /// Preferred (maximum) rows per execution.
+    fn preferred_batch(&self) -> usize;
+}
+
+impl TrialRunner for crate::engine::XlaEngineHandle {
+    fn run(&self, x: &[f32], rows: usize, seed: u32, p: TrialParams) -> Result<Vec<i32>> {
+        let features = x.len() / rows;
+        self.run_trials_any(x, rows, features, seed, p)
+    }
+
+    fn preferred_batch(&self) -> usize {
+        32
+    }
+}
+
+impl TrialRunner for crate::engine::NativeEngine {
+    fn run(&self, x: &[f32], rows: usize, seed: u32, p: TrialParams) -> Result<Vec<i32>> {
+        let features = x.len() / rows;
+        Ok(self.run_trial_batch(x, features, p, seed as u64))
+    }
+
+    fn preferred_batch(&self) -> usize {
+        32
+    }
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Rows per trial execution (must match an available artifact batch
+    /// for the XLA engine).
+    pub batch_size: usize,
+    /// Trial physics (σ_z, θ, steps).
+    pub params: TrialParams,
+    /// Minimum trials before early stopping may trigger.
+    pub min_trials: u32,
+    /// Base PRNG seed (requests derive unique streams from it).
+    pub seed: u64,
+    /// Admission cap: maximum in-flight requests (backpressure).
+    pub max_in_flight: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 32,
+            params: TrialParams::default(),
+            min_trials: 5,
+            seed: 0x52ACA,
+            max_in_flight: 256,
+        }
+    }
+}
+
+struct Active {
+    request: InferRequest,
+    outcome: WtaOutcome,
+    issued: u32,
+    submitted: Instant,
+}
+
+/// The pack/execute/count loop.  Drive it with [`Scheduler::submit`] +
+/// [`Scheduler::step`] (the server wraps this in a thread; figure
+/// harnesses call it synchronously).
+pub struct Scheduler<E: TrialRunner> {
+    pub cfg: SchedulerConfig,
+    engine: E,
+    batcher: Batcher,
+    active: HashMap<RequestId, Active>,
+    metrics: Arc<Metrics>,
+    seq: u64,
+    features: usize,
+    classes: usize,
+}
+
+impl<E: TrialRunner> Scheduler<E> {
+    pub fn new(engine: E, cfg: SchedulerConfig, metrics: Arc<Metrics>) -> Self {
+        Self {
+            cfg,
+            engine,
+            batcher: Batcher::new(),
+            active: HashMap::new(),
+            metrics,
+            seq: 0,
+            features: 784,
+            classes: 10,
+        }
+    }
+
+    /// Admit a request.  Fails (backpressure) when at capacity.
+    pub fn submit(&mut self, req: InferRequest) -> Result<(), InferRequest> {
+        if self.active.len() >= self.cfg.max_in_flight {
+            return Err(req);
+        }
+        debug_assert_eq!(req.image.len(), self.features);
+        self.metrics
+            .requests_admitted
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.batcher.admit(req.id, req.max_trials);
+        self.active.insert(
+            req.id,
+            Active {
+                outcome: WtaOutcome::new(self.classes),
+                issued: 0,
+                submitted: Instant::now(),
+                request: req,
+            },
+        );
+        Ok(())
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    /// Run one pack→execute→count iteration; returns completed responses.
+    ///
+    /// An engine error fails the whole batch but *not* the requests — their
+    /// budgets were not consumed, so the next step retries.
+    pub fn step(&mut self) -> Result<Vec<InferResponse>> {
+        let packed = self.batcher.pack(self.cfg.batch_size);
+        if packed.is_empty() {
+            return Ok(Vec::new());
+        }
+        let rows = packed.rows.len();
+        let mut x = Vec::with_capacity(rows * self.features);
+        for &id in &packed.rows {
+            x.extend_from_slice(&self.active[&id].request.image);
+        }
+        self.seq += 1;
+        let seed = (self.cfg.seed ^ self.seq.wrapping_mul(0x9E3779B9)) as u32;
+
+        let winners = match self.engine.run(&x, rows, seed, self.cfg.params) {
+            Ok(w) => w,
+            Err(e) => {
+                self.metrics
+                    .engine_errors
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        self.metrics
+            .batches_executed
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics
+            .rows_packed
+            .fetch_add(rows as u64, std::sync::atomic::Ordering::Relaxed);
+        self.metrics
+            .trials_executed
+            .fetch_add(rows as u64, std::sync::atomic::Ordering::Relaxed);
+
+        // Distribute winners and account budgets.
+        let mut used: HashMap<RequestId, u32> = HashMap::new();
+        for (&id, &win) in packed.rows.iter().zip(&winners) {
+            let a = self.active.get_mut(&id).expect("row for unknown request");
+            a.outcome.record(win);
+            a.issued += 1;
+            *used.entry(id).or_insert(0) += 1;
+        }
+
+        let mut done = Vec::new();
+        for (id, used_now) in used {
+            let still_budgeted = self.batcher.consume(id, used_now);
+            let a = &self.active[&id];
+            let decided = if a.request.confidence > 0.0 && a.issued >= self.cfg.min_trials {
+                let (lead, runner) = a.outcome.top_two();
+                lead_is_decided(lead, runner, a.request.confidence)
+            } else {
+                false
+            };
+            if !still_budgeted || decided {
+                let a = self.active.remove(&id).unwrap();
+                if decided {
+                    self.batcher.remove(id);
+                    self.metrics.trials_saved.fetch_add(
+                        (a.request.max_trials - a.issued) as u64,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                }
+                let latency = a.submitted.elapsed();
+                self.metrics.record_latency(latency);
+                self.metrics
+                    .requests_completed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                done.push(InferResponse {
+                    id,
+                    prediction: a.outcome.prediction(),
+                    trials_used: a.issued,
+                    outcome: a.outcome,
+                    latency,
+                });
+            }
+        }
+        Ok(done)
+    }
+
+    /// Drain: step until every in-flight request completes.
+    pub fn run_to_completion(&mut self) -> Result<Vec<InferResponse>> {
+        let mut out = Vec::new();
+        let mut consecutive_errors = 0u32;
+        while !self.is_idle() {
+            match self.step() {
+                Ok(mut r) => {
+                    consecutive_errors = 0;
+                    out.append(&mut r);
+                }
+                Err(e) => {
+                    consecutive_errors += 1;
+                    if consecutive_errors >= 3 {
+                        return Err(e.context("engine failed 3 consecutive batches"));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::nn::{ModelSpec, Weights};
+    use std::sync::Arc;
+
+    fn sched(conf: f64) -> Scheduler<NativeEngine> {
+        let w = Arc::new(Weights::random(ModelSpec::new(vec![784, 16, 10]), 3));
+        let e = NativeEngine::new(w, 7);
+        let mut cfg = SchedulerConfig::default();
+        cfg.batch_size = 16;
+        cfg.min_trials = 4;
+        let mut s = Scheduler::new(e, cfg, Metrics::new());
+        s.features = 784;
+        let _ = conf;
+        s
+    }
+
+    fn req(id: u64, trials: u32, conf: f64) -> InferRequest {
+        InferRequest::new(id, vec![0.5; 784]).with_budget(trials, conf)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let mut s = sched(0.0);
+        for i in 0..5 {
+            s.submit(req(i, 9, 0.0)).unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 5);
+        for r in &done {
+            assert_eq!(r.trials_used, 9);
+            assert_eq!(r.outcome.trials, 9);
+        }
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn early_stop_spends_fewer_trials() {
+        let mut s = sched(0.95);
+        s.submit(req(1, 200, 0.95)).unwrap();
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        // A 784→16→10 random net on a fixed input still has a dominant
+        // class often enough; if it stopped early the budget was not spent.
+        assert!(done[0].trials_used <= 200);
+        if done[0].trials_used < 200 {
+            let (lead, runner) = done[0].outcome.top_two();
+            assert!(lead_is_decided(lead, runner, 0.95));
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_over_capacity() {
+        let mut s = sched(0.0);
+        s.cfg.max_in_flight = 2;
+        assert!(s.submit(req(1, 4, 0.0)).is_ok());
+        assert!(s.submit(req(2, 4, 0.0)).is_ok());
+        assert!(s.submit(req(3, 4, 0.0)).is_err());
+        let _ = s.run_to_completion().unwrap();
+        assert!(s.submit(req(3, 4, 0.0)).is_ok());
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let m = Metrics::new();
+        let w = Arc::new(Weights::random(ModelSpec::new(vec![784, 16, 10]), 3));
+        let mut cfg = SchedulerConfig::default();
+        cfg.batch_size = 8;
+        let mut s = Scheduler::new(NativeEngine::new(w, 1), cfg, m.clone());
+        for i in 0..3 {
+            s.submit(req(i, 8, 0.0)).unwrap();
+        }
+        let _ = s.run_to_completion().unwrap();
+        let snap = m.snapshot();
+        assert_eq!(snap.requests_completed, 3);
+        assert_eq!(snap.trials_executed, 24);
+        assert!(snap.batches_executed >= 3);
+        assert!(snap.fill_ratio(8) > 0.9);
+    }
+
+    #[test]
+    fn seeds_differ_across_batches() {
+        // Two identical requests must not receive identical vote patterns
+        // (would indicate seed reuse across batches).
+        let mut s = sched(0.0);
+        s.submit(req(1, 64, 0.0)).unwrap();
+        s.submit(req(2, 64, 0.0)).unwrap();
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        // Not a hard guarantee, but with 64 stochastic trials each the
+        // full count vectors colliding means something is broken.
+        assert_ne!(done[0].outcome.counts, done[1].outcome.counts);
+    }
+}

@@ -1,0 +1,221 @@
+//! Serving front-end: a scheduler thread + cloneable submit handles.
+//!
+//! `Server::start(engine, cfg)` spawns the scheduler loop; [`ServerClient`]
+//! (Clone + Send) submits requests and receives an `mpsc::Receiver` to
+//! await the response — the thread-based analogue of a oneshot future.
+//! Backpressure: when the scheduler is at `max_in_flight`, submissions
+//! park in the inbox until capacity frees (bounded by the inbox itself).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::Metrics;
+use super::request::{InferRequest, InferResponse};
+use super::scheduler::{Scheduler, SchedulerConfig, TrialRunner};
+
+enum Msg {
+    Submit(InferRequest, mpsc::Sender<InferResponse>),
+    Shutdown,
+}
+
+/// Owner of the scheduler thread.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+}
+
+/// Cloneable, Send submission handle.
+#[derive(Clone)]
+pub struct ServerClient {
+    tx: mpsc::Sender<Msg>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Spawn the scheduler loop over `engine`.
+    pub fn start<E: TrialRunner + Send + 'static>(engine: E, cfg: SchedulerConfig) -> Self {
+        let metrics = Metrics::new();
+        let m2 = metrics.clone();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::Builder::new()
+            .name("raca-scheduler".into())
+            .spawn(move || server_loop(engine, cfg, m2, rx))
+            .expect("spawning scheduler thread");
+        Self { tx, worker: Some(worker), metrics, next_id: Arc::new(AtomicU64::new(1)) }
+    }
+
+    pub fn client(&self) -> ServerClient {
+        ServerClient { tx: self.tx.clone(), next_id: self.next_id.clone() }
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ServerClient {
+    /// Submit an image; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        image: Vec<f32>,
+        max_trials: u32,
+        confidence: f64,
+    ) -> Result<mpsc::Receiver<InferResponse>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = InferRequest::new(id, image).with_budget(max_trials, confidence);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(req, reply))
+            .map_err(|_| anyhow!("server is gone"))?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the answer.
+    pub fn classify(&self, image: Vec<f32>, max_trials: u32, confidence: f64) -> Result<InferResponse> {
+        self.submit(image, max_trials, confidence)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request"))
+    }
+}
+
+fn server_loop<E: TrialRunner>(
+    engine: E,
+    cfg: SchedulerConfig,
+    metrics: Arc<Metrics>,
+    rx: mpsc::Receiver<Msg>,
+) {
+    let mut sched = Scheduler::new(engine, cfg, metrics);
+    let mut replies: std::collections::HashMap<u64, mpsc::Sender<InferResponse>> =
+        std::collections::HashMap::new();
+    let mut pending: std::collections::VecDeque<(InferRequest, mpsc::Sender<InferResponse>)> =
+        std::collections::VecDeque::new();
+    let mut shutdown = false;
+
+    loop {
+        // Admit new work. Block only when idle (nothing to step).
+        if sched.is_idle() && pending.is_empty() {
+            if shutdown {
+                return;
+            }
+            match rx.recv() {
+                Ok(Msg::Submit(r, tx)) => pending.push_back((r, tx)),
+                Ok(Msg::Shutdown) | Err(_) => return,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Submit(r, tx)) => pending.push_back((r, tx)),
+                Ok(Msg::Shutdown) => shutdown = true,
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => shutdown = true,
+            }
+            if shutdown {
+                break;
+            }
+        }
+        // Move parked submissions into the scheduler while capacity lasts.
+        while let Some((r, tx)) = pending.pop_front() {
+            let id = r.id;
+            match sched.submit(r) {
+                Ok(()) => {
+                    replies.insert(id, tx);
+                }
+                Err(r) => {
+                    pending.push_front((r, tx));
+                    break;
+                }
+            }
+        }
+        // One scheduling iteration.
+        match sched.step() {
+            Ok(done) => {
+                for resp in done {
+                    if let Some(tx) = replies.remove(&resp.id) {
+                        let _ = tx.send(resp);
+                    }
+                }
+            }
+            Err(e) => {
+                log::warn!("engine batch failed (will retry): {e:#}");
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        }
+        if shutdown && sched.is_idle() && pending.is_empty() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::nn::{ModelSpec, Weights};
+
+    fn server() -> Server {
+        let w = std::sync::Arc::new(Weights::random(ModelSpec::new(vec![784, 16, 10]), 3));
+        let e = NativeEngine::new(w, 7);
+        let mut cfg = SchedulerConfig::default();
+        cfg.batch_size = 16;
+        Server::start(e, cfg)
+    }
+
+    #[test]
+    fn classify_roundtrip() {
+        let s = server();
+        let c = s.client();
+        let r = c.classify(vec![0.5; 784], 9, 0.0).unwrap();
+        assert_eq!(r.trials_used, 9);
+        assert!((-1..10).contains(&r.prediction));
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let s = server();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = s.client();
+            handles.push(std::thread::spawn(move || {
+                let mut preds = Vec::new();
+                for i in 0..5 {
+                    let x = vec![(t as f32 * 5.0 + i as f32) / 20.0; 784];
+                    preds.push(c.classify(x, 7, 0.0).unwrap().prediction);
+                }
+                preds
+            }));
+        }
+        for h in handles {
+            let preds = h.join().unwrap();
+            assert_eq!(preds.len(), 5);
+        }
+        let m = s.metrics().snapshot();
+        assert_eq!(m.requests_completed, 20);
+        assert_eq!(m.trials_executed, 20 * 7);
+    }
+
+    #[test]
+    fn shutdown_completes_in_flight() {
+        let s = server();
+        let c = s.client();
+        let rx = s.client().submit(vec![0.3; 784], 5, 0.0).unwrap();
+        drop(c);
+        drop(s); // Drop waits for the worker; in-flight work must finish.
+        let r = rx.recv().unwrap();
+        assert_eq!(r.trials_used, 5);
+    }
+}

@@ -1,0 +1,242 @@
+//! Physical crossbar array simulation.
+//!
+//! An array holds the programmed conductances of one weight matrix (or
+//! tile) plus the shared reference column.  Reads compute the paper's
+//! Eq. 9–12 in amperes:
+//!
+//!   I_j    = Σ_i V_i·G_ij + noise,    I_ref = Σ_i V_i·Gref + noise
+//!
+//! Two read modes:
+//! * `PerDevice` — one Gaussian per device per read (exact Eq. 9/10; slow,
+//!   used by validation tests and the noise-composition ablation),
+//! * `ColumnAggregate` — one Gaussian per column with the summed variance
+//!   `4kTΔf·Σ(G_ij + Gref)` (exact same statistics for thermal noise,
+//!   ~N_col× faster; the default).
+
+use crate::device::noise::{NoiseModel, NoiseParams};
+use crate::device::variation::VariationModel;
+use crate::stats::GaussianSource;
+
+use super::mapping::WeightMapping;
+
+/// Noise sampling granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadMode {
+    PerDevice,
+    ColumnAggregate,
+}
+
+/// A programmed crossbar of `rows × cols` devices + one reference column.
+#[derive(Debug, Clone)]
+pub struct CrossbarArray {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major programmed conductances [S].
+    pub g: Vec<f64>,
+    /// Reference column conductances [S] (one per row; ideally all Gref).
+    pub g_ref_col: Vec<f64>,
+    pub mapping: WeightMapping,
+    pub noise: NoiseModel,
+    /// Per-column Σ_i(G_ij + Gref_i) — precomputed for aggregate reads.
+    g_col_sums: Vec<f64>,
+}
+
+impl CrossbarArray {
+    /// Program an array from a row-major weight slice.
+    pub fn program(
+        rows: usize,
+        cols: usize,
+        weights: &[f32],
+        mapping: WeightMapping,
+        variation: &VariationModel,
+        noise_params: NoiseParams,
+        gauss: &mut GaussianSource,
+    ) -> Self {
+        assert_eq!(weights.len(), rows * cols, "weight slice shape mismatch");
+        let mut g = Vec::with_capacity(rows * cols);
+        for &w in weights {
+            let target = mapping.weight_to_g(w as f64);
+            g.push(variation.apply(target, mapping.g_min, mapping.g_max, gauss));
+        }
+        let g_ref_col: Vec<f64> = (0..rows)
+            .map(|_| variation.apply(mapping.g_ref(), mapping.g_min, mapping.g_max, gauss))
+            .collect();
+        let noise = NoiseModel::new(noise_params, rows * (cols + 1));
+        let mut arr = Self { rows, cols, g, g_ref_col, mapping, noise, g_col_sums: vec![] };
+        arr.recompute_column_sums();
+        arr
+    }
+
+    fn recompute_column_sums(&mut self) {
+        let gref_sum: f64 = self.g_ref_col.iter().sum();
+        self.g_col_sums = (0..self.cols)
+            .map(|j| {
+                let gj: f64 = (0..self.rows).map(|i| self.g[i * self.cols + j]).sum();
+                gj + gref_sum
+            })
+            .collect();
+    }
+
+    /// Mean differential currents (no noise): out[j] = Σ_i V_i·(G_ij − Gref_i).
+    pub fn mean_differential(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for i in 0..self.rows {
+            let vi = v[i];
+            if vi == 0.0 {
+                continue;
+            }
+            let row = &self.g[i * self.cols..(i + 1) * self.cols];
+            let gr = self.g_ref_col[i];
+            for (o, &gij) in out.iter_mut().zip(row) {
+                *o += vi * (gij - gr);
+            }
+        }
+    }
+
+    /// One noisy differential read: out[j] = (I_j + n_j) − (I_ref + n_ref).
+    ///
+    /// Thermal noise is present on every device regardless of its input
+    /// voltage (Johnson noise is an equilibrium phenomenon), so the
+    /// variance sums over *all* rows — exactly Eq. 13's denominator.
+    pub fn read_differential(
+        &mut self,
+        v: &[f64],
+        mode: ReadMode,
+        out: &mut [f64],
+        gauss: &mut GaussianSource,
+    ) {
+        self.mean_differential(v, out);
+        match mode {
+            ReadMode::ColumnAggregate => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    let var = self.noise.column_variance(self.g_col_sums[j], 0.0);
+                    if var > 0.0 {
+                        *o += gauss.next() * var.sqrt();
+                    }
+                }
+            }
+            ReadMode::PerDevice => {
+                for j in 0..self.cols {
+                    let mut n = 0.0;
+                    for i in 0..self.rows {
+                        let g_ij = self.g[i * self.cols + j];
+                        let i_mean = v[i] * g_ij;
+                        n += self.noise.sample(i * self.cols + j, g_ij, i_mean, gauss);
+                        let g_r = self.g_ref_col[i];
+                        let i_ref = v[i] * g_r;
+                        n -= self
+                            .noise
+                            .sample(self.rows * self.cols + i, g_r, i_ref, gauss);
+                    }
+                    out[j] += n;
+                }
+            }
+        }
+    }
+
+    /// Column conductance sum Σ_i(G_ij + Gref_i) (hw model needs it).
+    pub fn column_g_sum(&self, j: usize) -> f64 {
+        self.g_col_sums[j]
+    }
+
+    /// Total array conductance (energy model: static read power).
+    pub fn total_g(&self) -> f64 {
+        self.g.iter().sum::<f64>() + self.g_ref_col.iter().sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Summary;
+
+    fn make(rows: usize, cols: usize, w: f32, seed: u64) -> (CrossbarArray, GaussianSource) {
+        let mut g = GaussianSource::new(seed);
+        let arr = CrossbarArray::program(
+            rows,
+            cols,
+            &vec![w; rows * cols],
+            WeightMapping::default(),
+            &VariationModel::default(),
+            NoiseParams::thermal_only(1e9),
+            &mut g,
+        );
+        (arr, g)
+    }
+
+    #[test]
+    fn mean_differential_matches_eq12() {
+        // Eq. 12: Ī_j − Ī_ref = Vr·G0·Σ W_ij·x_i for binary x.
+        let (arr, _) = make(8, 3, 0.75, 1);
+        let m = WeightMapping::default();
+        let vr = 0.01;
+        let v = vec![vr; 8];
+        let mut out = vec![0.0; 3];
+        arr.mean_differential(&v, &mut out);
+        let want = vr * m.g0() * 0.75 * 8.0;
+        for o in out {
+            assert!((o - want).abs() / want < 1e-9);
+        }
+    }
+
+    #[test]
+    fn aggregate_noise_variance_matches_eq13() {
+        let (mut arr, mut gauss) = make(16, 1, 0.0, 2);
+        let v = vec![0.0; 16]; // zero signal isolates the noise
+        let mut out = vec![0.0; 1];
+        let mut s = Summary::new();
+        for _ in 0..20_000 {
+            arr.read_differential(&v, ReadMode::ColumnAggregate, &mut out, &mut gauss);
+            s.add(out[0]);
+        }
+        let want_var = arr.noise.column_variance(arr.column_g_sum(0), 0.0);
+        assert!((s.var() - want_var).abs() / want_var < 0.05);
+        assert!(s.mean().abs() < 3.0 * want_var.sqrt() / (20_000f64).sqrt() * 3.0);
+    }
+
+    #[test]
+    fn per_device_and_aggregate_agree_statistically() {
+        let (mut arr, mut gauss) = make(12, 2, 0.5, 3);
+        let v = vec![0.005; 12];
+        let mut out = vec![0.0; 2];
+        let mut s_pd = Summary::new();
+        let mut s_ca = Summary::new();
+        for _ in 0..15_000 {
+            arr.read_differential(&v, ReadMode::PerDevice, &mut out, &mut gauss);
+            s_pd.add(out[0]);
+            arr.read_differential(&v, ReadMode::ColumnAggregate, &mut out, &mut gauss);
+            s_ca.add(out[0]);
+        }
+        assert!((s_pd.mean() - s_ca.mean()).abs() < 4.0 * s_pd.sem().max(s_ca.sem()));
+        assert!((s_pd.std() - s_ca.std()).abs() / s_ca.std() < 0.06);
+    }
+
+    #[test]
+    fn variation_perturbs_conductances() {
+        let mut g = GaussianSource::new(4);
+        let arr = CrossbarArray::program(
+            4,
+            4,
+            &vec![0.5; 16],
+            WeightMapping::default(),
+            &VariationModel::lognormal(0.1),
+            NoiseParams::thermal_only(1e9),
+            &mut g,
+        );
+        let first = arr.g[0];
+        assert!(arr.g.iter().any(|&gv| (gv - first).abs() > 1e-9));
+    }
+
+    #[test]
+    fn sparse_input_skips_rows() {
+        let (arr, _) = make(6, 2, 1.0, 5);
+        let mut out_a = vec![0.0; 2];
+        let mut out_b = vec![0.0; 2];
+        arr.mean_differential(&[0.0, 0.01, 0.0, 0.01, 0.0, 0.0], &mut out_a);
+        arr.mean_differential(&[0.0, 0.01, 0.0, 0.01, 0.0, 0.0], &mut out_b);
+        assert_eq!(out_a, out_b);
+        assert!(out_a[0] != 0.0);
+    }
+}

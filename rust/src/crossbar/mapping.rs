@@ -1,0 +1,132 @@
+//! Weight ⇄ conductance mapping and SNR calibration (paper Eq. 4–7, 13).
+//!
+//! Mirrors `python/compile/physics.py` exactly — the parity tests compare
+//! numbers across the language boundary.
+
+use crate::device::{DELTA_F, G_MAX, G_MIN, K_B, SIGMOID_PROBIT, TEMPERATURE, W_CLIP};
+
+/// Affine weight→conductance mapping for a weight range [w_min, w_max].
+#[derive(Debug, Clone)]
+pub struct WeightMapping {
+    pub w_min: f64,
+    pub w_max: f64,
+    pub g_min: f64,
+    pub g_max: f64,
+}
+
+impl Default for WeightMapping {
+    fn default() -> Self {
+        Self { w_min: -W_CLIP, w_max: W_CLIP, g_min: G_MIN, g_max: G_MAX }
+    }
+}
+
+impl WeightMapping {
+    /// G0 = (Gmax − Gmin)/(Wmax − Wmin)  (Eq. 4)
+    pub fn g0(&self) -> f64 {
+        (self.g_max - self.g_min) / (self.w_max - self.w_min)
+    }
+
+    /// Gref = (Wmax·Gmin − Wmin·Gmax)/(Wmax − Wmin)  (Eq. 5)
+    pub fn g_ref(&self) -> f64 {
+        (self.w_max * self.g_min - self.w_min * self.g_max) / (self.w_max - self.w_min)
+    }
+
+    /// G_ij = W_ij·G0 + Gref  (Eq. 7), clamped to the physical range.
+    pub fn weight_to_g(&self, w: f64) -> f64 {
+        (w.clamp(self.w_min, self.w_max) * self.g0() + self.g_ref())
+            .clamp(self.g_min, self.g_max)
+    }
+
+    /// Inverse mapping (for verification): W = (G − Gref)/G0.
+    pub fn g_to_weight(&self, g: f64) -> f64 {
+        (g - self.g_ref()) / self.g0()
+    }
+
+    /// σ_tot of the differential column noise for `n_col` devices at
+    /// bandwidth Δf (idealized column: mean device conductance = Gref).
+    pub fn column_noise_sigma(&self, n_col: usize, delta_f: f64) -> f64 {
+        let g_sum = n_col as f64 * 2.0 * self.g_ref();
+        (4.0 * K_B * TEMPERATURE * delta_f * g_sum).sqrt()
+    }
+
+    /// Read voltage placing κ = Vr·G0/σ_tot at `snr_scale`/1.702 (Eq. 13).
+    pub fn calibrate_vr(&self, n_col: usize, delta_f: f64, snr_scale: f64) -> f64 {
+        snr_scale * self.column_noise_sigma(n_col, delta_f) / (SIGMOID_PROBIT * self.g0())
+    }
+
+    /// κ realized by a concrete (Vr, N_col, Δf) design point.
+    pub fn kappa(&self, vr: f64, n_col: usize, delta_f: f64) -> f64 {
+        vr * self.g0() / self.column_noise_sigma(n_col, delta_f)
+    }
+
+    /// Normalized pre-activation noise std: σ_z = 1/κ.
+    pub fn sigma_z(&self, snr_scale: f64) -> f64 {
+        SIGMOID_PROBIT / snr_scale
+    }
+}
+
+/// Default calibration used across the repo (mirrors python defaults).
+pub fn default_calibration(n_col: usize) -> (f64, f64) {
+    let m = WeightMapping::default();
+    let vr = m.calibrate_vr(n_col, DELTA_F, 1.0);
+    (vr, m.sigma_z(1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_map_to_range() {
+        let m = WeightMapping::default();
+        assert!((m.weight_to_g(-W_CLIP) - G_MIN).abs() < 1e-18);
+        assert!((m.weight_to_g(W_CLIP) - G_MAX).abs() < 1e-18);
+        assert!((m.weight_to_g(0.0) - m.g_ref()).abs() < 1e-18);
+    }
+
+    #[test]
+    fn mapping_inverts() {
+        let m = WeightMapping::default();
+        for w in [-3.7, -1.0, 0.0, 0.5, 3.9] {
+            assert!((m.g_to_weight(m.weight_to_g(w)) - w).abs() < 1e-9, "w={w}");
+        }
+    }
+
+    #[test]
+    fn calibration_hits_kappa() {
+        let m = WeightMapping::default();
+        for n_col in [98, 785, 1570] {
+            for df in [1e8, 1e9, 1e10] {
+                for s in [0.25, 1.0, 4.0] {
+                    let vr = m.calibrate_vr(n_col, df, s);
+                    let k = m.kappa(vr, n_col, df);
+                    assert!(
+                        (k - s / SIGMOID_PROBIT).abs() < 1e-12,
+                        "n={n_col} df={df} s={s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_python_constants() {
+        // Frozen values computed by python/compile/physics.py — guards the
+        // cross-language contract (see engine_parity tests).
+        let m = WeightMapping::default();
+        assert!((m.g0() - 1.2375e-5).abs() < 1e-10);
+        assert!((m.g_ref() - 5.05e-5).abs() < 1e-10);
+        let sigma = m.column_noise_sigma(785, 1e9);
+        let expect = (4.0 * K_B * 300.0 * 1e9 * 785.0 * 2.0 * 5.05e-5_f64).sqrt();
+        assert!((sigma - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn vr_is_small_at_ghz_bandwidth() {
+        // The paper: read voltage "much smaller than the usual read
+        // voltage" — our calibrated Vr should be tens of mV at 1 GHz.
+        let m = WeightMapping::default();
+        let vr = m.calibrate_vr(785, 1e9, 1.0);
+        assert!(vr > 1e-3 && vr < 0.2, "vr={vr}");
+    }
+}

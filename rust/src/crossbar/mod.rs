@@ -1,0 +1,13 @@
+//! Crossbar layer (DESIGN.md §4.4): conductance mapping, the physical
+//! array simulation, tiling, and the SNR calibration solver.
+
+pub mod array;
+pub mod mapping;
+pub mod tile;
+
+pub use array::{CrossbarArray, ReadMode};
+pub use mapping::WeightMapping;
+pub use tile::TiledLayer;
+
+/// Crossbar tile geometry (rows × cols) used by the paper / hw model.
+pub const TILE: usize = 128;

@@ -1,0 +1,245 @@
+//! Layer tiling: a (fan_in+1) × fan_out weight matrix mapped onto
+//! 128×128 crossbar tiles with analog partial-sum recombination.
+//!
+//! Real arrays are bounded (wire resistance, sneak paths), so a 785×500
+//! layer becomes a ⌈785/128⌉×⌈500/128⌉ grid of tiles whose per-column
+//! partial currents are summed (in RACA: wired-OR onto a shared TIA per
+//! logical column, so the noise of every stacked tile adds — matching the
+//! full-column Eq. 13 statistics exactly).
+
+use crate::device::noise::NoiseParams;
+use crate::device::variation::VariationModel;
+use crate::stats::GaussianSource;
+
+use super::array::{CrossbarArray, ReadMode};
+use super::mapping::WeightMapping;
+
+/// One logical layer split into physical tiles.
+#[derive(Debug, Clone)]
+pub struct TiledLayer {
+    /// Logical dimensions (rows includes the bias row).
+    pub rows: usize,
+    pub cols: usize,
+    pub tile: usize,
+    /// Row-major tile grid: tiles[ti][tj] covers rows [ti·T, ...) × cols [tj·T, ...).
+    pub tiles: Vec<Vec<CrossbarArray>>,
+}
+
+impl TiledLayer {
+    /// Program a tiled layer from a row-major augmented weight matrix.
+    pub fn program(
+        rows: usize,
+        cols: usize,
+        weights: &[f32],
+        tile: usize,
+        mapping: WeightMapping,
+        variation: &VariationModel,
+        noise: &NoiseParams,
+        gauss: &mut GaussianSource,
+    ) -> Self {
+        assert_eq!(weights.len(), rows * cols);
+        let nti = rows.div_ceil(tile);
+        let ntj = cols.div_ceil(tile);
+        let mut tiles = Vec::with_capacity(nti);
+        for ti in 0..nti {
+            let r0 = ti * tile;
+            let tr = tile.min(rows - r0);
+            let mut row_tiles = Vec::with_capacity(ntj);
+            for tj in 0..ntj {
+                let c0 = tj * tile;
+                let tc = tile.min(cols - c0);
+                let mut w = Vec::with_capacity(tr * tc);
+                for i in 0..tr {
+                    let base = (r0 + i) * cols + c0;
+                    w.extend_from_slice(&weights[base..base + tc]);
+                }
+                // Convert f64 slice back to f32 for program().
+                row_tiles.push(CrossbarArray::program(
+                    tr,
+                    tc,
+                    &w,
+                    mapping.clone(),
+                    variation,
+                    noise.clone(),
+                    gauss,
+                ));
+            }
+            tiles.push(row_tiles);
+        }
+        Self { rows, cols, tile, tiles }
+    }
+
+    /// Tile-grid shape (row tiles, col tiles).
+    pub fn grid(&self) -> (usize, usize) {
+        (self.tiles.len(), self.tiles[0].len())
+    }
+
+    /// Noisy differential read of the whole logical layer.
+    ///
+    /// `v` has `rows` entries (the bias row driven at `v_bias`, typically
+    /// Vr); per logical column the partial currents of every row-tile sum.
+    pub fn read_differential(
+        &mut self,
+        v: &[f64],
+        mode: ReadMode,
+        out: &mut [f64],
+        gauss: &mut GaussianSource,
+    ) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        let tile = self.tile;
+        let mut buf = vec![0.0f64; tile];
+        for (ti, row_tiles) in self.tiles.iter_mut().enumerate() {
+            let r0 = ti * tile;
+            for (tj, arr) in row_tiles.iter_mut().enumerate() {
+                let c0 = tj * tile;
+                let vb = &v[r0..r0 + arr.rows];
+                let ob = &mut buf[..arr.cols];
+                arr.read_differential(vb, mode, ob, gauss);
+                for (k, &p) in ob.iter().enumerate() {
+                    out[c0 + k] += p;
+                }
+            }
+        }
+    }
+
+    /// Mean (noise-free) differential read — reference for tests.
+    pub fn mean_differential(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        out.fill(0.0);
+        let tile = self.tile;
+        let mut buf = vec![0.0f64; tile];
+        for (ti, row_tiles) in self.tiles.iter().enumerate() {
+            let r0 = ti * tile;
+            for (tj, arr) in row_tiles.iter().enumerate() {
+                let c0 = tj * tile;
+                let vb = &v[r0..r0 + arr.rows];
+                let ob = &mut buf[..arr.cols];
+                arr.mean_differential(vb, ob);
+                for (k, &p) in ob.iter().enumerate() {
+                    out[c0 + k] += p;
+                }
+            }
+        }
+    }
+
+    /// Number of physical tiles (hw model: array count).
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.iter().map(|r| r.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Summary;
+
+    fn weights(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::stats::Rng::new(seed);
+        (0..rows * cols).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+    }
+
+    fn program(rows: usize, cols: usize, tile: usize, seed: u64) -> (TiledLayer, GaussianSource) {
+        let mut g = GaussianSource::new(seed);
+        let w = weights(rows, cols, seed + 100);
+        let t = TiledLayer::program(
+            rows,
+            cols,
+            &w,
+            tile,
+            WeightMapping::default(),
+            &VariationModel::default(),
+            &NoiseParams::thermal_only(1e9),
+            &mut g,
+        );
+        (t, g)
+    }
+
+    #[test]
+    fn grid_shape() {
+        let (t, _) = program(300, 130, 128, 1);
+        assert_eq!(t.grid(), (3, 2));
+        assert_eq!(t.num_tiles(), 6);
+        assert_eq!(t.tiles[2][1].rows, 300 - 256);
+        assert_eq!(t.tiles[2][1].cols, 2);
+    }
+
+    #[test]
+    fn tiled_mean_equals_monolithic() {
+        let rows = 200;
+        let cols = 90;
+        let w = weights(rows, cols, 7);
+        let mut g = GaussianSource::new(8);
+        let mono = CrossbarArray::program(
+            rows,
+            cols,
+            &w,
+            WeightMapping::default(),
+            &VariationModel::default(),
+            NoiseParams::thermal_only(1e9),
+            &mut g,
+        );
+        let tiled = TiledLayer::program(
+            rows,
+            cols,
+            &w,
+            64,
+            WeightMapping::default(),
+            &VariationModel::default(),
+            &NoiseParams::thermal_only(1e9),
+            &mut g,
+        );
+        let v: Vec<f64> = (0..rows).map(|i| if i % 3 == 0 { 0.01 } else { 0.0 }).collect();
+        let mut a = vec![0.0; cols];
+        let mut b = vec![0.0; cols];
+        mono.mean_differential(&v, &mut a);
+        tiled.mean_differential(&v, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-15, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tiled_noise_variance_equals_monolithic() {
+        // Stacking tiles on a shared column must preserve Eq. 13's total
+        // variance: Σ over all rows, independent of the tiling.
+        let rows = 96;
+        let cols = 1;
+        let w = weights(rows, cols, 9);
+        let mut g = GaussianSource::new(10);
+        let mk_mono = CrossbarArray::program(
+            rows, cols, &w,
+            WeightMapping::default(), &VariationModel::default(),
+            NoiseParams::thermal_only(1e9), &mut g,
+        );
+        let want_var = mk_mono.noise.column_variance(mk_mono.column_g_sum(0), 0.0);
+
+        let mut tiled = TiledLayer::program(
+            rows, cols, &w, 32,
+            WeightMapping::default(), &VariationModel::default(),
+            &NoiseParams::thermal_only(1e9), &mut g,
+        );
+        let v = vec![0.0; rows];
+        let mut out = vec![0.0; 1];
+        let mut s = Summary::new();
+        for _ in 0..20_000 {
+            tiled.read_differential(&v, ReadMode::ColumnAggregate, &mut out, &mut g);
+            s.add(out[0]);
+        }
+        assert!((s.var() - want_var).abs() / want_var < 0.05,
+                "var={} want={}", s.var(), want_var);
+    }
+
+    #[test]
+    fn non_divisible_edges_covered() {
+        let (mut t, mut g) = program(101, 37, 32, 11);
+        let v = vec![0.01; 101];
+        let mut out = vec![0.0; 37];
+        t.read_differential(&v, ReadMode::ColumnAggregate, &mut out, &mut g);
+        assert!(out.iter().all(|o| o.is_finite()));
+        let mut mean = vec![0.0; 37];
+        t.mean_differential(&v, &mut mean);
+        assert!(mean.iter().any(|&m| m.abs() > 0.0));
+    }
+}

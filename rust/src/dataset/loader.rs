@@ -1,0 +1,144 @@
+//! Loader for `artifacts/data/{train,test}.{img,lbl}.bin`.
+//!
+//! Format contract with `python/compile/data.py::save_bin`: images are
+//! little-endian f32, row-major `[n, 784]`, values in [0, 1]; labels are
+//! little-endian i32 in [0, 10).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+pub const IMG_PIXELS: usize = 28 * 28;
+
+/// An in-memory image/label set.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major `[n, 784]` pixels in [0, 1].
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    /// Load `<prefix>.img.bin` + `<prefix>.lbl.bin`.
+    pub fn load(prefix: &Path) -> Result<Self> {
+        let img_path = with_suffix(prefix, ".img.bin");
+        let lbl_path = with_suffix(prefix, ".lbl.bin");
+        let img_bytes = std::fs::read(&img_path)
+            .with_context(|| format!("reading {}", img_path.display()))?;
+        let lbl_bytes = std::fs::read(&lbl_path)
+            .with_context(|| format!("reading {}", lbl_path.display()))?;
+        ensure!(img_bytes.len() % (IMG_PIXELS * 4) == 0, "truncated image file");
+        ensure!(lbl_bytes.len() % 4 == 0, "truncated label file");
+        let n = img_bytes.len() / (IMG_PIXELS * 4);
+        ensure!(lbl_bytes.len() / 4 == n, "image/label count mismatch");
+
+        let images: Vec<f32> = img_bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let labels: Vec<i32> = lbl_bytes
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let ds = Self { images, labels };
+        ds.validate()?;
+        Ok(ds)
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Pixel row of image `i`.
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * IMG_PIXELS..(i + 1) * IMG_PIXELS]
+    }
+
+    pub fn label(&self, i: usize) -> i32 {
+        self.labels[i]
+    }
+
+    /// First `n` examples as a view-copy (figure harness subsets).
+    pub fn take(&self, n: usize) -> Dataset {
+        let n = n.min(self.len());
+        Dataset {
+            images: self.images[..n * IMG_PIXELS].to_vec(),
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (i, &l) in self.labels.iter().enumerate() {
+            ensure!((0..10).contains(&l), "label {l} at index {i} out of range");
+        }
+        for &p in &self.images {
+            ensure!(p.is_finite() && (-0.001..=1.001).contains(&p), "pixel {p} out of range");
+        }
+        Ok(())
+    }
+}
+
+fn with_suffix(prefix: &Path, suffix: &str) -> std::path::PathBuf {
+    let mut s = prefix.as_os_str().to_os_string();
+    s.push(suffix);
+    std::path::PathBuf::from(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path, n: usize) {
+        let mut img = Vec::new();
+        for i in 0..n * IMG_PIXELS {
+            img.extend_from_slice(&(((i % 7) as f32) / 7.0).to_le_bytes());
+        }
+        let mut lbl = Vec::new();
+        for i in 0..n {
+            lbl.extend_from_slice(&((i % 10) as i32).to_le_bytes());
+        }
+        std::fs::write(dir.join("d.img.bin"), img).unwrap();
+        std::fs::write(dir.join("d.lbl.bin"), lbl).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("raca_ds_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir, 12);
+        let ds = Dataset::load(&dir.join("d")).unwrap();
+        assert_eq!(ds.len(), 12);
+        assert_eq!(ds.label(11), 1);
+        assert_eq!(ds.image(0).len(), IMG_PIXELS);
+        let t = ds.take(5);
+        assert_eq!(t.len(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_mismatched_counts() {
+        let dir = std::env::temp_dir().join(format!("raca_dsbad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir, 3);
+        // Corrupt: drop one label.
+        let lbl = std::fs::read(dir.join("d.lbl.bin")).unwrap();
+        std::fs::write(dir.join("d.lbl.bin"), &lbl[..8]).unwrap();
+        assert!(Dataset::load(&dir.join("d")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_labels() {
+        let dir = std::env::temp_dir().join(format!("raca_dsbad2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let img: Vec<u8> = (0..IMG_PIXELS * 4).map(|_| 0u8).collect();
+        std::fs::write(dir.join("d.img.bin"), img).unwrap();
+        std::fs::write(dir.join("d.lbl.bin"), 99i32.to_le_bytes()).unwrap();
+        assert!(Dataset::load(&dir.join("d")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,7 @@
+//! Dataset layer (DESIGN.md §4.11): loader for the build-time-generated
+//! synthetic MNIST binaries + a native generator mirror for tests.
+
+pub mod loader;
+pub mod synth;
+
+pub use loader::Dataset;

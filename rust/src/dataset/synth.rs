@@ -1,0 +1,242 @@
+//! Native mirror of `python/compile/data.py`: procedural digit rendering.
+//!
+//! Same stroke templates and rasterizer; the RNG differs (xoshiro vs
+//! numpy PCG64), so samples match the python generator in *distribution*,
+//! not bit-for-bit.  Used by artifact-free tests, the `serve_demo`
+//! example's request generator, and as a fallback when `artifacts/data`
+//! is missing.
+
+use crate::stats::Rng;
+
+pub const IMG: usize = 28;
+
+/// Stroke templates: polylines in the unit square (x right, y down).
+/// KEEP IN SYNC with python/compile/data.py::DIGIT_STROKES.
+pub fn digit_strokes(digit: usize) -> &'static [&'static [(f64, f64)]] {
+    const D0: &[&[(f64, f64)]] = &[&[
+        (0.50, 0.08), (0.78, 0.22), (0.82, 0.50), (0.78, 0.78),
+        (0.50, 0.92), (0.22, 0.78), (0.18, 0.50), (0.22, 0.22), (0.50, 0.08),
+    ]];
+    const D1: &[&[(f64, f64)]] = &[
+        &[(0.35, 0.25), (0.55, 0.10), (0.55, 0.90)],
+        &[(0.35, 0.90), (0.75, 0.90)],
+    ];
+    const D2: &[&[(f64, f64)]] = &[
+        &[(0.22, 0.30), (0.30, 0.12), (0.60, 0.08), (0.78, 0.25),
+          (0.72, 0.48), (0.45, 0.65), (0.22, 0.88)],
+        &[(0.22, 0.88), (0.80, 0.88)],
+    ];
+    const D3: &[&[(f64, f64)]] = &[&[
+        (0.25, 0.15), (0.60, 0.10), (0.75, 0.28), (0.55, 0.46),
+        (0.75, 0.68), (0.60, 0.90), (0.25, 0.85),
+    ]];
+    const D4: &[&[(f64, f64)]] = &[&[(0.62, 0.90), (0.62, 0.10), (0.20, 0.62), (0.82, 0.62)]];
+    const D5: &[&[(f64, f64)]] = &[&[
+        (0.75, 0.12), (0.30, 0.12), (0.27, 0.45), (0.60, 0.42),
+        (0.78, 0.62), (0.68, 0.86), (0.25, 0.88),
+    ]];
+    const D6: &[&[(f64, f64)]] = &[&[
+        (0.68, 0.10), (0.38, 0.30), (0.25, 0.60), (0.35, 0.85),
+        (0.65, 0.88), (0.75, 0.65), (0.55, 0.50), (0.28, 0.58),
+    ]];
+    const D7: &[&[(f64, f64)]] = &[
+        &[(0.20, 0.12), (0.80, 0.12), (0.45, 0.90)],
+        &[(0.35, 0.52), (0.68, 0.52)],
+    ];
+    const D8: &[&[(f64, f64)]] = &[
+        &[(0.50, 0.10), (0.72, 0.22), (0.66, 0.44), (0.50, 0.50),
+          (0.34, 0.44), (0.28, 0.22), (0.50, 0.10)],
+        &[(0.50, 0.50), (0.74, 0.62), (0.68, 0.86), (0.50, 0.92),
+          (0.32, 0.86), (0.26, 0.62), (0.50, 0.50)],
+    ];
+    const D9: &[&[(f64, f64)]] = &[
+        &[(0.72, 0.42), (0.45, 0.50), (0.28, 0.35), (0.35, 0.12),
+          (0.65, 0.10), (0.72, 0.42)],
+        &[(0.72, 0.42), (0.68, 0.70), (0.55, 0.90)],
+    ];
+    match digit {
+        0 => D0, 1 => D1, 2 => D2, 3 => D3, 4 => D4,
+        5 => D5, 6 => D6, 7 => D7, 8 => D8, 9 => D9,
+        _ => panic!("digit out of range: {digit}"),
+    }
+}
+
+fn rasterize(strokes: &[Vec<(f64, f64)>], width: f64, soft: f64) -> Vec<f32> {
+    let mut img = vec![0.0f32; IMG * IMG];
+    for yi in 0..IMG {
+        for xi in 0..IMG {
+            let px = (xi as f64 + 0.5) / IMG as f64;
+            let py = (yi as f64 + 0.5) / IMG as f64;
+            let mut dmin = 1e9f64;
+            for poly in strokes {
+                for k in 0..poly.len() - 1 {
+                    let (ax, ay) = poly[k];
+                    let (bx, by) = poly[k + 1];
+                    let (abx, aby) = (bx - ax, by - ay);
+                    let denom = abx * abx + aby * aby + 1e-12;
+                    let t = (((px - ax) * abx + (py - ay) * aby) / denom).clamp(0.0, 1.0);
+                    let (cx, cy) = (ax + t * abx, ay + t * aby);
+                    let d = ((px - cx).powi(2) + (py - cy).powi(2)).sqrt();
+                    dmin = dmin.min(d);
+                }
+            }
+            img[yi * IMG + xi] = ((1.0 - (dmin - width) / soft).clamp(0.0, 1.0)) as f32;
+        }
+    }
+    img
+}
+
+fn affine(
+    poly: &[(f64, f64)],
+    rot: f64,
+    sx: f64,
+    sy: f64,
+    shear: f64,
+    tx: f64,
+    ty: f64,
+    wobble: f64,
+    rng: &mut Rng,
+) -> Vec<(f64, f64)> {
+    let (c, s) = (rot.cos(), rot.sin());
+    poly.iter()
+        .map(|&(px, py)| {
+            let (mut px, mut py) = (px, py);
+            if wobble > 0.0 {
+                // Box–Muller-free wobble: uniform jitter is fine here.
+                px += (rng.next_f64() * 2.0 - 1.0) * wobble * 1.5;
+                py += (rng.next_f64() * 2.0 - 1.0) * wobble * 1.5;
+            }
+            let x = (px - 0.5) * sx + (py - 0.5) * shear;
+            let y = (py - 0.5) * sy;
+            (c * x - s * y + 0.5 + tx, s * x + c * y + 0.5 + ty)
+        })
+        .collect()
+}
+
+/// Render one distorted digit; distortion ranges mirror the python
+/// generator (see data.py::render_digit).
+pub fn render_digit(digit: usize, rng: &mut Rng) -> Vec<f32> {
+    let rot = rng.range_f64(-0.5, 0.5);
+    let sx = rng.range_f64(0.70, 1.30);
+    let sy = rng.range_f64(0.70, 1.30);
+    let shear = rng.range_f64(-0.3, 0.3);
+    let tx = rng.range_f64(-0.12, 0.12);
+    let ty = rng.range_f64(-0.12, 0.12);
+    let width = rng.range_f64(0.022, 0.065);
+    let soft = rng.range_f64(0.020, 0.050);
+    let wobble = rng.range_f64(0.0, 0.035);
+
+    let strokes: Vec<Vec<(f64, f64)>> = digit_strokes(digit)
+        .iter()
+        .map(|poly| affine(poly, rot, sx, sy, shear, tx, ty, wobble, rng))
+        .collect();
+    let mut img = rasterize(&strokes, width, soft);
+    let gain = rng.range_f64(0.55, 1.0) as f32;
+    for p in img.iter_mut() {
+        *p *= gain;
+    }
+    if rng.next_f64() < 0.3 {
+        let ph = 3 + rng.below(5) as usize;
+        let pw = 3 + rng.below(5) as usize;
+        let y0 = rng.below((IMG - ph) as u64) as usize;
+        let x0 = rng.below((IMG - pw) as u64) as usize;
+        for y in y0..y0 + ph {
+            for x in x0..x0 + pw {
+                img[y * IMG + x] = 0.0;
+            }
+        }
+    }
+    let mut gauss = crate::stats::GaussianSource::from_rng(rng.fork(0xDA7A));
+    for p in img.iter_mut() {
+        *p = (*p + 0.10 * gauss.next() as f32).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// Generate a balanced labeled set (native twin of data.py::generate).
+pub fn generate(n: usize, seed: u64) -> crate::dataset::Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = Vec::with_capacity(n * IMG * IMG);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let d = i % 10;
+        images.extend_from_slice(&render_digit(d, &mut rng));
+        labels.push(d as i32);
+    }
+    // Shuffle consistently (indices, then gather).
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut out_img = Vec::with_capacity(images.len());
+    let mut out_lbl = Vec::with_capacity(n);
+    for &i in &idx {
+        out_img.extend_from_slice(&images[i * IMG * IMG..(i + 1) * IMG * IMG]);
+        out_lbl.push(labels[i]);
+    }
+    crate::dataset::Dataset { images: out_img, labels: out_lbl }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(20, 5);
+        let b = generate(20, 5);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn all_digits_render_nonempty() {
+        let mut rng = Rng::new(1);
+        for d in 0..10 {
+            let img = render_digit(d, &mut rng);
+            let sum: f32 = img.iter().sum();
+            assert!(sum > 5.0, "digit {d} rendered empty (sum={sum})");
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn balanced_and_valid() {
+        let ds = generate(100, 2);
+        ds.validate().unwrap();
+        let mut counts = [0; 10];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn digits_distinguishable_by_mean_image() {
+        let ds = generate(400, 3);
+        let mut mus = vec![vec![0.0f64; IMG * IMG]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..ds.len() {
+            let l = ds.label(i) as usize;
+            counts[l] += 1;
+            for (m, &p) in mus[l].iter_mut().zip(ds.image(i)) {
+                *m += p as f64;
+            }
+        }
+        for (m, &c) in mus.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c as f64;
+            }
+        }
+        // Every pair of class means should differ noticeably.
+        for a in 0..10 {
+            for b in a + 1..10 {
+                let d: f64 = mus[a]
+                    .iter()
+                    .zip(&mus[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!(d > 0.5, "digits {a} and {b} too similar: {d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! ReRAM device layer (DESIGN.md §4.2).
+//!
+//! Behavioural model of an Ag:Si-like ReRAM cell: programmable conductance
+//! in [G_MIN, G_MAX] with lognormal write variation, and the noise physics
+//! the paper's whole idea rests on — Johnson–Nyquist thermal noise (Eq. 1)
+//! plus optional shot / RTN / 1-f terms for ablations (E-ABL1).
+
+pub mod noise;
+pub mod reram;
+pub mod variation;
+
+pub use noise::{NoiseModel, NoiseParams};
+pub use reram::{DeviceParams, ReramCell};
+pub use variation::VariationModel;
+
+/// Boltzmann constant [J/K].
+pub const K_B: f64 = 1.380649e-23;
+
+/// Default operating temperature [K].
+pub const TEMPERATURE: f64 = 300.0;
+
+/// Low-conductance state [S] (mirrors python physics.G_MIN).
+pub const G_MIN: f64 = 1e-6;
+
+/// High-conductance state [S] (mirrors python physics.G_MAX).
+pub const G_MAX: f64 = 100e-6;
+
+/// Weight clip range: weights live in [−W_CLIP, W_CLIP].
+pub const W_CLIP: f64 = 4.0;
+
+/// sigmoid(z) ≈ Φ(z/1.702) matching constant.
+pub const SIGMOID_PROBIT: f64 = 1.702;
+
+/// Default readout bandwidth Δf [Hz].
+pub const DELTA_F: f64 = 1e9;

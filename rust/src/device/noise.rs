@@ -1,0 +1,215 @@
+//! Device noise models (paper §II-A, Eq. 1 + ablation extensions).
+//!
+//! The headline mechanism is Johnson–Nyquist thermal current noise,
+//! `σ² = 4kTGΔf`, Gaussian and conductance-proportional — exactly what
+//! Eq. 13's sigmoid emulation needs.  For E-ABL1 we also model:
+//!
+//! * **shot noise** `σ² = 2qI̅Δf` (current-dependent),
+//! * **random telegraph noise (RTN)**: a two-state conductance flicker
+//!   with Markov switching, the dominant low-frequency ReRAM defect noise,
+//! * **1/f (flicker)** approximated per-read as a Gaussian with amplitude
+//!   `α·G·V/√f_corner-ish` — adequate for a per-decision-sample model.
+
+use super::{K_B, TEMPERATURE};
+use crate::stats::GaussianSource;
+
+/// Elementary charge [C].
+pub const Q_E: f64 = 1.602176634e-19;
+
+/// Noise configuration for a readout.
+#[derive(Debug, Clone)]
+pub struct NoiseParams {
+    pub temperature: f64,
+    /// Readout bandwidth Δf [Hz].
+    pub delta_f: f64,
+    /// Enable thermal (Nyquist) noise — the paper's mechanism.
+    pub thermal: bool,
+    /// Enable shot noise 2qIΔf.
+    pub shot: bool,
+    /// RTN: relative conductance amplitude (ΔG/G) and switching prob/read.
+    pub rtn_amplitude: f64,
+    pub rtn_switch_prob: f64,
+    /// 1/f: relative current amplitude per read (0 = off).
+    pub flicker_amplitude: f64,
+}
+
+impl Default for NoiseParams {
+    fn default() -> Self {
+        Self {
+            temperature: TEMPERATURE,
+            delta_f: super::DELTA_F,
+            thermal: true,
+            shot: false,
+            rtn_amplitude: 0.0,
+            rtn_switch_prob: 0.0,
+            flicker_amplitude: 0.0,
+        }
+    }
+}
+
+impl NoiseParams {
+    /// Paper-exact configuration (thermal only).
+    pub fn thermal_only(delta_f: f64) -> Self {
+        Self { delta_f, ..Self::default() }
+    }
+
+    /// "Kitchen sink" configuration for robustness ablations.
+    pub fn full(delta_f: f64) -> Self {
+        Self {
+            delta_f,
+            shot: true,
+            rtn_amplitude: 0.02,
+            rtn_switch_prob: 0.01,
+            flicker_amplitude: 0.005,
+            ..Self::default()
+        }
+    }
+
+    /// Thermal current-noise RMS for conductance `g` (Eq. 1).
+    #[inline]
+    pub fn thermal_rms(&self, g: f64) -> f64 {
+        (4.0 * K_B * self.temperature * g * self.delta_f).sqrt()
+    }
+
+    /// Shot-noise RMS for mean current `i` [A].
+    #[inline]
+    pub fn shot_rms(&self, i: f64) -> f64 {
+        (2.0 * Q_E * i.abs() * self.delta_f).sqrt()
+    }
+}
+
+/// Per-device noise state (RTN needs memory between reads).
+#[derive(Debug, Clone)]
+pub struct NoiseModel {
+    pub params: NoiseParams,
+    /// RTN state per device: +1/−1 (low-high trap occupancy).
+    rtn_state: Vec<i8>,
+}
+
+impl NoiseModel {
+    pub fn new(params: NoiseParams, n_devices: usize) -> Self {
+        Self { params, rtn_state: vec![1; n_devices] }
+    }
+
+    /// Sample the instantaneous noise current [A] for device `idx` with
+    /// conductance `g` carrying mean current `i_mean` at this read.
+    #[inline]
+    pub fn sample(&mut self, idx: usize, g: f64, i_mean: f64,
+                  gauss: &mut GaussianSource) -> f64 {
+        let p = &self.params;
+        let mut var = 0.0;
+        if p.thermal {
+            var += 4.0 * K_B * p.temperature * g * p.delta_f;
+        }
+        if p.shot {
+            var += 2.0 * Q_E * i_mean.abs() * p.delta_f;
+        }
+        if p.flicker_amplitude > 0.0 {
+            let a = p.flicker_amplitude * i_mean.abs();
+            var += a * a;
+        }
+        let mut n = if var > 0.0 { gauss.next() * var.sqrt() } else { 0.0 };
+        if p.rtn_amplitude > 0.0 {
+            let s = &mut self.rtn_state[idx];
+            if gauss.rng().next_f64() < p.rtn_switch_prob {
+                *s = -*s;
+            }
+            // RTN shifts the conductance, hence the current, by ±ΔG·V —
+            // expressed here through the mean current.
+            n += *s as f64 * p.rtn_amplitude * i_mean;
+        }
+        n
+    }
+
+    /// Aggregate *variance* of a whole column (sum of device variances) —
+    /// the fast path used by the column-level simulator when per-device
+    /// sampling is disabled.  Thermal + shot only (RTN/flicker need state).
+    pub fn column_variance(&self, g_sum: f64, i_sum_abs: f64) -> f64 {
+        let p = &self.params;
+        let mut var = 0.0;
+        if p.thermal {
+            var += 4.0 * K_B * p.temperature * g_sum * p.delta_f;
+        }
+        if p.shot {
+            var += 2.0 * Q_E * i_sum_abs * p.delta_f;
+        }
+        var
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Summary;
+
+    #[test]
+    fn thermal_rms_matches_nyquist() {
+        let p = NoiseParams::thermal_only(1e9);
+        // 4kTGΔf with G = 100 µS, Δf = 1 GHz at 300 K.
+        let want = (4.0 * K_B * 300.0 * 100e-6 * 1e9).sqrt();
+        assert!((p.thermal_rms(100e-6) - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn sampled_std_matches_formula() {
+        let p = NoiseParams::thermal_only(1e9);
+        let mut m = NoiseModel::new(p.clone(), 1);
+        let mut g = GaussianSource::new(1);
+        let mut s = Summary::new();
+        for _ in 0..50_000 {
+            s.add(m.sample(0, 50e-6, 0.0, &mut g));
+        }
+        let want = p.thermal_rms(50e-6);
+        assert!(s.mean().abs() < want * 0.05);
+        assert!((s.std() - want).abs() / want < 0.02);
+    }
+
+    #[test]
+    fn noise_scales_with_bandwidth() {
+        let mut g = GaussianSource::new(2);
+        let mut std_at = |df: f64| {
+            let mut m = NoiseModel::new(NoiseParams::thermal_only(df), 1);
+            let mut s = Summary::new();
+            for _ in 0..20_000 {
+                s.add(m.sample(0, 50e-6, 0.0, &mut g));
+            }
+            s.std()
+        };
+        let r = std_at(4e9) / std_at(1e9);
+        assert!((r - 2.0).abs() < 0.1, "ratio={r}");
+    }
+
+    #[test]
+    fn rtn_switches_states() {
+        let params = NoiseParams {
+            thermal: false,
+            rtn_amplitude: 0.1,
+            rtn_switch_prob: 0.5,
+            ..NoiseParams::default()
+        };
+        let mut m = NoiseModel::new(params, 1);
+        let mut g = GaussianSource::new(3);
+        let vals: Vec<f64> = (0..100).map(|_| m.sample(0, 1e-5, 1e-6, &mut g)).collect();
+        let pos = vals.iter().filter(|&&v| v > 0.0).count();
+        assert!(pos > 20 && pos < 80, "RTN never switched: pos={pos}");
+        for v in vals {
+            assert!((v.abs() - 1e-7).abs() < 1e-12); // ±amplitude·I exactly
+        }
+    }
+
+    #[test]
+    fn column_variance_adds_devices() {
+        let m = NoiseModel::new(NoiseParams::thermal_only(1e9), 0);
+        let v1 = m.column_variance(100e-6, 0.0);
+        let v2 = m.column_variance(200e-6, 0.0);
+        assert!((v2 / v1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shot_noise_depends_on_current() {
+        let params = NoiseParams { thermal: false, shot: true, ..Default::default() };
+        let m = NoiseModel::new(params, 0);
+        assert_eq!(m.column_variance(1e-4, 0.0), 0.0);
+        assert!(m.column_variance(1e-4, 1e-6) > 0.0);
+    }
+}

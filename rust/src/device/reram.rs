@@ -1,0 +1,136 @@
+//! Single ReRAM cell: programming + read with conductance bounds.
+
+use super::{G_MAX, G_MIN};
+use crate::stats::GaussianSource;
+
+/// Static device parameters (per technology corner).
+#[derive(Debug, Clone)]
+pub struct DeviceParams {
+    /// Programmable conductance range [S].
+    pub g_min: f64,
+    pub g_max: f64,
+    /// Lognormal programming variation σ (0 = ideal write).
+    pub program_sigma: f64,
+    /// Conductance relaxation/drift per read, as a fraction (usually 0;
+    /// exposed for failure-injection tests).
+    pub drift_per_read: f64,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        Self { g_min: G_MIN, g_max: G_MAX, program_sigma: 0.0, drift_per_read: 0.0 }
+    }
+}
+
+impl DeviceParams {
+    pub fn with_variation(sigma: f64) -> Self {
+        Self { program_sigma: sigma, ..Self::default() }
+    }
+}
+
+/// One programmable cell.
+#[derive(Debug, Clone)]
+pub struct ReramCell {
+    /// Actual programmed conductance [S] (may deviate from target).
+    pub g: f64,
+    /// Target conductance the mapper asked for [S].
+    pub g_target: f64,
+}
+
+impl ReramCell {
+    /// Program toward `g_target`, applying lognormal write variation:
+    /// G = G_target · exp(N(0, σ²)), clamped to the physical range.
+    pub fn program(g_target: f64, params: &DeviceParams, gauss: &mut GaussianSource) -> Self {
+        let g_t = g_target.clamp(params.g_min, params.g_max);
+        let g = if params.program_sigma > 0.0 {
+            (g_t * gauss.lognormal(0.0, params.program_sigma)).clamp(params.g_min, params.g_max)
+        } else {
+            g_t
+        };
+        Self { g, g_target: g_t }
+    }
+
+    /// Ideal (variation-free) cell.
+    pub fn ideal(g_target: f64, params: &DeviceParams) -> Self {
+        let g_t = g_target.clamp(params.g_min, params.g_max);
+        Self { g: g_t, g_target: g_t }
+    }
+
+    /// Mean read current at voltage `v` [A] (Ohm's law; noise is added by
+    /// the column readout, not per-read here, to keep the hot loop tight).
+    #[inline]
+    pub fn read_current(&self, v: f64) -> f64 {
+        v * self.g
+    }
+
+    /// Apply post-read drift (failure-injection ablation).
+    pub fn drift(&mut self, params: &DeviceParams) {
+        if params.drift_per_read != 0.0 {
+            self.g = (self.g * (1.0 - params.drift_per_read)).clamp(params.g_min, params.g_max);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_programs_exactly() {
+        let p = DeviceParams::default();
+        let c = ReramCell::ideal(5e-5, &p);
+        assert_eq!(c.g, 5e-5);
+    }
+
+    #[test]
+    fn programming_clamps_to_range() {
+        let p = DeviceParams::default();
+        let lo = ReramCell::ideal(0.0, &p);
+        let hi = ReramCell::ideal(1.0, &p);
+        assert_eq!(lo.g, p.g_min);
+        assert_eq!(hi.g, p.g_max);
+    }
+
+    #[test]
+    fn variation_is_median_unbiased() {
+        let p = DeviceParams::with_variation(0.1);
+        let mut g = GaussianSource::new(3);
+        let target = 5e-5;
+        let n = 20_000;
+        let below = (0..n)
+            .filter(|_| ReramCell::program(target, &p, &mut g).g < target)
+            .count();
+        // Lognormal: median at target → ~half below.
+        assert!((below as f64 / n as f64 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn variation_spread_scales() {
+        let mut g = GaussianSource::new(4);
+        let mut spread = |sigma: f64| {
+            let p = DeviceParams::with_variation(sigma);
+            let mut s = crate::stats::Summary::new();
+            for _ in 0..5000 {
+                s.add(ReramCell::program(5e-5, &p, &mut g).g);
+            }
+            s.std()
+        };
+        assert!(spread(0.2) > 1.5 * spread(0.05));
+    }
+
+    #[test]
+    fn ohms_law_read() {
+        let c = ReramCell::ideal(2e-5, &DeviceParams::default());
+        assert!((c.read_current(0.1) - 2e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn drift_decays_conductance() {
+        let p = DeviceParams { drift_per_read: 0.01, ..Default::default() };
+        let mut c = ReramCell::ideal(5e-5, &p);
+        for _ in 0..10 {
+            c.drift(&p);
+        }
+        assert!(c.g < 5e-5 && c.g > 4e-5);
+    }
+}

@@ -1,0 +1,113 @@
+//! Device-to-device variation model (E-ABL2).
+//!
+//! Real crossbars never program conductances exactly; the dominant effect
+//! is multiplicative (lognormal) write error plus a small additive stuck
+//! probability.  The ablation sweeps σ ∈ {0..10%} and measures Fig. 6
+//! accuracy degradation.
+
+use crate::stats::GaussianSource;
+
+/// Variation configuration for array programming.
+#[derive(Debug, Clone)]
+pub struct VariationModel {
+    /// Lognormal σ of the multiplicative write error (0 = ideal).
+    pub sigma: f64,
+    /// Probability a device is stuck at G_min (dead) after programming.
+    pub stuck_lo_prob: f64,
+    /// Probability a device is stuck at G_max (shorted).
+    pub stuck_hi_prob: f64,
+}
+
+impl Default for VariationModel {
+    fn default() -> Self {
+        Self { sigma: 0.0, stuck_lo_prob: 0.0, stuck_hi_prob: 0.0 }
+    }
+}
+
+impl VariationModel {
+    pub fn lognormal(sigma: f64) -> Self {
+        Self { sigma, ..Default::default() }
+    }
+
+    pub fn with_defects(sigma: f64, stuck_lo: f64, stuck_hi: f64) -> Self {
+        Self { sigma, stuck_lo_prob: stuck_lo, stuck_hi_prob: stuck_hi }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.sigma == 0.0 && self.stuck_lo_prob == 0.0 && self.stuck_hi_prob == 0.0
+    }
+
+    /// Apply variation to a target conductance, clamped to [g_min, g_max].
+    pub fn apply(&self, g_target: f64, g_min: f64, g_max: f64,
+                 gauss: &mut GaussianSource) -> f64 {
+        if self.is_ideal() {
+            return g_target.clamp(g_min, g_max);
+        }
+        let u = gauss.rng().next_f64();
+        if u < self.stuck_lo_prob {
+            return g_min;
+        }
+        if u < self.stuck_lo_prob + self.stuck_hi_prob {
+            return g_max;
+        }
+        let g = if self.sigma > 0.0 {
+            g_target * gauss.lognormal(0.0, self.sigma)
+        } else {
+            g_target
+        };
+        g.clamp(g_min, g_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_passthrough() {
+        let v = VariationModel::default();
+        let mut g = GaussianSource::new(1);
+        assert_eq!(v.apply(5e-5, 1e-6, 1e-4, &mut g), 5e-5);
+    }
+
+    #[test]
+    fn clamps() {
+        let v = VariationModel::default();
+        let mut g = GaussianSource::new(1);
+        assert_eq!(v.apply(1.0, 1e-6, 1e-4, &mut g), 1e-4);
+        assert_eq!(v.apply(0.0, 1e-6, 1e-4, &mut g), 1e-6);
+    }
+
+    #[test]
+    fn stuck_fractions() {
+        let v = VariationModel::with_defects(0.0, 0.1, 0.05);
+        let mut g = GaussianSource::new(2);
+        let n = 50_000;
+        let mut lo = 0;
+        let mut hi = 0;
+        for _ in 0..n {
+            let gv = v.apply(5e-5, 1e-6, 1e-4, &mut g);
+            if gv == 1e-6 {
+                lo += 1;
+            } else if gv == 1e-4 {
+                hi += 1;
+            }
+        }
+        assert!((lo as f64 / n as f64 - 0.10).abs() < 0.01);
+        assert!((hi as f64 / n as f64 - 0.05).abs() < 0.01);
+    }
+
+    #[test]
+    fn sigma_widens_distribution() {
+        let mut g = GaussianSource::new(3);
+        let spread = |sigma: f64, g: &mut GaussianSource| {
+            let v = VariationModel::lognormal(sigma);
+            let mut s = crate::stats::Summary::new();
+            for _ in 0..10_000 {
+                s.add(v.apply(5e-5, 1e-9, 1e-3, g));
+            }
+            s.std()
+        };
+        assert!(spread(0.10, &mut g) > 3.0 * spread(0.02, &mut g));
+    }
+}

@@ -1,0 +1,54 @@
+//! Inference engines (DESIGN.md §4.7).
+//!
+//! Three implementations of the same trial semantics:
+//!
+//! * [`native::NativeEngine`] — normalized-unit stochastic forward in pure
+//!   rust (fast, Send, used by the coordinator's worker pool and the
+//!   Fig. 4/6 sweeps),
+//! * [`physical::PhysicalEngine`] — full analog simulation in SI units
+//!   (tiled crossbars, TIA, comparator, transient WTA; used for
+//!   validation and the non-ideality ablations),
+//! * [`xla::XlaEngine`] — the AOT-compiled L1/L2 HLO running on PJRT (the
+//!   production path; a dedicated worker thread owns the non-Send PJRT
+//!   state and serves requests over channels).
+//!
+//! All three are statistically interchangeable at the calibrated design
+//! point — `rust/tests/engine_parity.rs` holds them to that.
+
+pub mod native;
+pub mod physical;
+pub mod xla;
+
+pub use native::NativeEngine;
+pub use physical::PhysicalEngine;
+pub use xla::{XlaEngine, XlaEngineHandle};
+
+/// Parameters of one stochastic trial batch (normalized units).
+#[derive(Debug, Clone, Copy)]
+pub struct TrialParams {
+    /// Comparator noise std in z units: 1.702/snr_scale.
+    pub sigma_z: f32,
+    /// Normalized WTA rest threshold (mean-relative).
+    pub theta: f32,
+    /// Time steps per WTA decision.
+    pub wta_steps: usize,
+}
+
+impl Default for TrialParams {
+    fn default() -> Self {
+        Self { sigma_z: 1.702, theta: 3.0, wta_steps: 64 }
+    }
+}
+
+impl TrialParams {
+    /// Design point at a given SNR scale (Fig. 6a sweeps this).
+    pub fn with_snr_scale(snr_scale: f64) -> Self {
+        Self { sigma_z: (1.702 / snr_scale) as f32, ..Default::default() }
+    }
+
+    /// Paper's V_th0 = 0 ablation (threshold at the static mean).
+    pub fn with_theta(mut self, theta: f32) -> Self {
+        self.theta = theta;
+        self
+    }
+}

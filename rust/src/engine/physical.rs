@@ -1,0 +1,283 @@
+//! Physical (SI-unit) engine — the full analog simulation.
+//!
+//! Every layer is a [`TiledLayer`] of programmed 128×128 crossbars; reads
+//! return amperes with Johnson–Nyquist (and optionally shot/RTN/1-f)
+//! noise; TIAs convert to volts; comparators binarize; the output layer
+//! runs the transient WTA race where *each time step is a fresh analog
+//! read* of the output crossbar.
+//!
+//! At the calibrated design point this engine is statistically identical
+//! to [`super::NativeEngine`] (engine_parity tests); its purpose is the
+//! non-ideality ablations (device variation, extra noise sources, tile
+//! size) that the normalized model cannot express.
+
+use crate::crossbar::{ReadMode, TiledLayer, WeightMapping, TILE};
+use crate::device::noise::NoiseParams;
+use crate::device::variation::VariationModel;
+use crate::neuron::WtaOutcome;
+use crate::nn::Weights;
+use crate::stats::{GaussianSource, Rng};
+
+use super::TrialParams;
+
+/// Per-layer physical configuration derived from calibration.
+#[derive(Debug, Clone)]
+pub struct LayerPhys {
+    /// Calibrated read voltage [V].
+    pub vr: f64,
+    /// Column noise RMS [A] at the idealized design point (diagnostics).
+    pub sigma_i: f64,
+}
+
+/// Full analog-simulation engine.
+pub struct PhysicalEngine {
+    pub spec: crate::nn::ModelSpec,
+    layers: Vec<TiledLayer>,
+    phys: Vec<LayerPhys>,
+    pub mapping: WeightMapping,
+    pub read_mode: ReadMode,
+    pub delta_f: f64,
+    pub seed: u64,
+}
+
+impl PhysicalEngine {
+    /// Program all layers from trained weights.
+    ///
+    /// `variation`/`noise` select the non-ideality corner; `snr_scale`
+    /// scales the read voltage away from the calibrated point (Fig. 6a).
+    pub fn program(
+        weights: &Weights,
+        tile: usize,
+        variation: &VariationModel,
+        noise: &NoiseParams,
+        snr_scale: f64,
+        seed: u64,
+    ) -> Self {
+        let mapping = WeightMapping::default();
+        let mut gauss = GaussianSource::new(seed ^ 0xA11A);
+        let mut layers = Vec::new();
+        let mut phys = Vec::new();
+        for l in 0..weights.spec.num_layers() {
+            let (rows, cols, w) = weights.layer(l);
+            layers.push(TiledLayer::program(
+                rows, cols, w, tile, mapping.clone(), variation, noise, &mut gauss,
+            ));
+            let vr = mapping.calibrate_vr(rows, noise.delta_f, snr_scale);
+            let sigma_i = mapping.column_noise_sigma(rows, noise.delta_f);
+            phys.push(LayerPhys { vr, sigma_i });
+        }
+        Self {
+            spec: weights.spec.clone(),
+            layers,
+            phys,
+            mapping,
+            read_mode: ReadMode::ColumnAggregate,
+            delta_f: noise.delta_f,
+            seed,
+        }
+    }
+
+    /// Default paper configuration: 128×128 tiles, thermal-only noise,
+    /// ideal programming, calibrated SNR.
+    pub fn paper_default(weights: &Weights, seed: u64) -> Self {
+        Self::program(
+            weights,
+            TILE,
+            &VariationModel::default(),
+            &NoiseParams::thermal_only(crate::device::DELTA_F),
+            1.0,
+            seed,
+        )
+    }
+
+    /// One decision trial on one image (SI-unit simulation end to end).
+    pub fn trial(&mut self, x: &[f32], p: TrialParams, trial_idx: u64) -> i32 {
+        let mut gauss = GaussianSource::from_rng(Rng::new(
+            self.seed ^ trial_idx.wrapping_mul(0x9E3779B97F4A7C15),
+        ));
+        self.trial_with(x, p, &mut gauss)
+    }
+
+    /// Trial with an explicit noise source.
+    pub fn trial_with(&mut self, x: &[f32], p: TrialParams, gauss: &mut GaussianSource) -> i32 {
+        let n_layers = self.spec.num_layers();
+        // --- hidden layers: drive, read, compare ---------------------------
+        let mut h: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        for l in 0..n_layers - 1 {
+            let vr = self.phys[l].vr;
+            let rows = self.spec.n_col(l);
+            let cols = self.spec.widths[l + 1];
+            // Input drive: activations (or pixels, layer 0) scaled to Vr;
+            // bias row driven at full Vr.
+            let mut v = Vec::with_capacity(rows);
+            v.extend(h.iter().map(|&a| a * vr));
+            v.push(vr);
+            let mut i_diff = vec![0.0f64; cols];
+            self.layers[l].read_differential(&v, self.read_mode, &mut i_diff, gauss);
+            // Comparator on each column: fire iff I_diff > 0 (the TIA gain
+            // is positive and offset-free, so voltage/current sign agree).
+            h = i_diff.iter().map(|&i| if i > 0.0 { 1.0 } else { 0.0 }).collect();
+        }
+        // --- output layer: transient WTA, fresh read per step -------------
+        let l = n_layers - 1;
+        let vr = self.phys[l].vr;
+        let rows = self.spec.n_col(l);
+        let cols = self.spec.output_dim();
+        let mut v = Vec::with_capacity(rows);
+        v.extend(h.iter().map(|&a| a * vr));
+        v.push(vr);
+        // Normalized threshold θ (z units) → current units.  One z unit of
+        // differential current is Vr·G0 (Eq. 12), so θ_I = θ·Vr·G0.  The
+        // threshold is derived from a replica column driven at the same
+        // Vr, so it co-scales with the read voltage and θ stays fixed in z
+        // units across SNR sweeps — matching `NativeEngine` for every
+        // snr_scale (engine_parity holds the two to this).
+        let i_unit = vr * self.mapping.g0();
+        let theta_i = p.theta as f64 * i_unit;
+        let mut i_diff = vec![0.0f64; cols];
+        let mut mean_i = vec![0.0f64; cols];
+        self.layers[l].mean_differential(&v, &mut mean_i);
+        let mean = mean_i.iter().sum::<f64>() / cols as f64;
+        for _ in 0..p.wta_steps {
+            self.layers[l].read_differential(&v, self.read_mode, &mut i_diff, gauss);
+            let mut winner = -1i32;
+            let mut best = f64::NEG_INFINITY;
+            for (j, &ij) in i_diff.iter().enumerate() {
+                let d = ij - mean - theta_i;
+                if d > 0.0 && d > best {
+                    best = d;
+                    winner = j as i32;
+                }
+            }
+            if winner >= 0 {
+                return winner;
+            }
+        }
+        -1
+    }
+
+    /// Repeated decisions with cumulative counting.
+    pub fn infer(&mut self, x: &[f32], p: TrialParams, trials: usize, base: u64) -> WtaOutcome {
+        let mut out = WtaOutcome::new(self.spec.output_dim());
+        for t in 0..trials {
+            out.record(self.trial(x, p, base + t as u64));
+        }
+        out
+    }
+
+    /// Total programmed conductance (hw-model energy input).
+    pub fn total_conductance(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|t| t.tiles.iter().flatten().map(|a| a.total_g()).sum::<f64>())
+            .sum()
+    }
+
+    /// Physical tile count per layer (hw model / DESIGN §5 E-ABL3).
+    pub fn tile_counts(&self) -> Vec<usize> {
+        self.layers.iter().map(|t| t.num_tiles()).collect()
+    }
+
+    /// Per-layer calibration record: (read voltage [V], column σ_I [A]).
+    pub fn calibration(&self) -> Vec<(f64, f64)> {
+        self.phys.iter().map(|p| (p.vr, p.sigma_i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModelSpec;
+
+    fn tiny() -> PhysicalEngine {
+        let w = Weights::random(ModelSpec::new(vec![12, 8, 6, 4]), 5);
+        PhysicalEngine::program(
+            &w,
+            8,
+            &VariationModel::default(),
+            &NoiseParams::thermal_only(1e9),
+            1.0,
+            11,
+        )
+    }
+
+    #[test]
+    fn trial_returns_valid_class() {
+        let mut e = tiny();
+        let x = vec![0.5f32; 12];
+        for t in 0..20 {
+            let w = e.trial(&x, TrialParams::default(), t);
+            assert!((-1..4).contains(&w));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_trial_index() {
+        let mut e = tiny();
+        let x = vec![0.3f32; 12];
+        let a = e.trial(&x, TrialParams::default(), 3);
+        let b = e.trial(&x, TrialParams::default(), 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tile_counts_match_geometry() {
+        let e = tiny();
+        // layers: (13,8), (9,6), (7,4) with tile=8:
+        assert_eq!(e.tile_counts(), vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn sigmoid_statistics_match_analytic() {
+        // Single-column physical layer: firing frequency ≈ Φ(κ·z).
+        let spec = ModelSpec::new(vec![4, 1]);
+        let mut w = Weights::random(spec, 1);
+        w.mats[0] = vec![0.8, 0.8, 0.8, 0.8, 0.0]; // z = Σ x·0.8, bias 0
+        let mut e = PhysicalEngine::program(
+            &w,
+            8,
+            &VariationModel::default(),
+            &NoiseParams::thermal_only(1e9),
+            1.0,
+            3,
+        );
+        // Drive all inputs at 1 → z = 3.2... but the single (output) layer
+        // in this net is the WTA layer; instead probe via raw reads:
+        let vr = e.phys[0].vr;
+        let v = vec![vr, vr, vr, vr, vr];
+        let mut out = vec![0.0f64];
+        let mut gauss = GaussianSource::new(9);
+        let mut fired = 0usize;
+        let n = 30_000;
+        for _ in 0..n {
+            e.layers[0].read_differential(&v, ReadMode::ColumnAggregate, &mut out, &mut gauss);
+            if out[0] > 0.0 {
+                fired += 1;
+            }
+        }
+        let p_hat = fired as f64 / n as f64;
+        let kappa = e.mapping.kappa(vr, 5, 1e9);
+        let z = 0.8 * 4.0;
+        let want = crate::stats::erf::norm_cdf(kappa * z);
+        assert!((p_hat - want).abs() < 0.015, "p={p_hat} want={want}");
+    }
+
+    #[test]
+    fn variation_changes_decisions() {
+        let w = Weights::random(ModelSpec::new(vec![12, 8, 6, 4]), 5);
+        let mut ideal = PhysicalEngine::paper_default(&w, 1);
+        let mut varied = PhysicalEngine::program(
+            &w,
+            TILE,
+            &VariationModel::lognormal(0.3),
+            &NoiseParams::thermal_only(1e9),
+            1.0,
+            1,
+        );
+        let x = vec![0.5f32; 12];
+        let p = TrialParams::default();
+        let a: Vec<i32> = (0..100).map(|t| ideal.trial(&x, p, t)).collect();
+        let b: Vec<i32> = (0..100).map(|t| varied.trial(&x, p, t)).collect();
+        assert_ne!(a, b, "30% variation should perturb at least one decision");
+    }
+}

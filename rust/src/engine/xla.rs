@@ -1,0 +1,243 @@
+//! XLA engine: the AOT-compiled L1/L2 HLO served from a dedicated thread.
+//!
+//! PJRT state in the `xla` crate is `Rc`-based (not `Send`), so one OS
+//! thread owns the [`ArtifactStore`] (client, compiled executables,
+//! device-resident weight buffers) and serves trial/ideal requests over an
+//! mpsc channel.  [`XlaEngineHandle`] is the cheap, `Clone + Send` side
+//! the coordinator and figure harnesses hold.
+//!
+//! Request path: handle.run_trials(x, …) → channel → worker executes the
+//! `trial_fwd_b{B}` executable → winners back over a rendezvous channel.
+//! Compile happens lazily on first use of each batch size and never again.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::ArtifactStore;
+
+use super::TrialParams;
+
+enum Request {
+    Trial {
+        x: Vec<f32>,
+        batch: usize,
+        seed: u32,
+        sigma_z: f32,
+        theta: f32,
+        reply: mpsc::Sender<Result<Vec<i32>>>,
+    },
+    Ideal {
+        x: Vec<f32>,
+        batch: usize,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Manifest {
+        reply: mpsc::Sender<crate::runtime::Manifest>,
+    },
+    Warmup {
+        batch: usize,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Owner of the worker thread; dropping it shuts the worker down.
+pub struct XlaEngine {
+    tx: mpsc::Sender<Request>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// Cloneable, Send handle used by coordinator workers.
+#[derive(Clone)]
+pub struct XlaEngineHandle {
+    tx: mpsc::Sender<Request>,
+    /// Available trial batch sizes (sorted ascending), from the manifest.
+    trial_batches: Vec<usize>,
+}
+
+impl XlaEngine {
+    /// Spawn the worker over the given artifact directory.
+    pub fn start(artifact_dir: std::path::PathBuf) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("xla-engine".into())
+            .spawn(move || worker_main(artifact_dir, rx, ready_tx))
+            .context("spawning xla-engine thread")?;
+        ready_rx
+            .recv()
+            .context("xla-engine thread died during startup")??;
+        Ok(Self { tx, worker: Some(worker) })
+    }
+
+    fn manifest_batches(tx: &mpsc::Sender<Request>) -> Vec<usize> {
+        let (reply, rx) = mpsc::channel();
+        if tx.send(Request::Manifest { reply }).is_err() {
+            return vec![];
+        }
+        let mut b = rx.recv().map(|m| m.trial_batches).unwrap_or_default();
+        b.sort_unstable();
+        b
+    }
+
+    /// Start over the default artifact directory.
+    pub fn start_default() -> Result<Self> {
+        Self::start(ArtifactStore::default_dir())
+    }
+
+    pub fn handle(&self) -> XlaEngineHandle {
+        XlaEngineHandle {
+            tx: self.tx.clone(),
+            trial_batches: Self::manifest_batches(&self.tx),
+        }
+    }
+}
+
+impl Drop for XlaEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl XlaEngineHandle {
+    /// Execute one trial batch: `x` is `[batch, 784]` row-major; returns
+    /// one winner per row.  `batch` must be an available artifact size —
+    /// use [`XlaEngineHandle::run_trials_any`] for arbitrary row counts.
+    pub fn run_trials(
+        &self,
+        x: Vec<f32>,
+        batch: usize,
+        seed: u32,
+        p: TrialParams,
+    ) -> Result<Vec<i32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Trial { x, batch, seed, sigma_z: p.sigma_z, theta: p.theta, reply })
+            .map_err(|_| anyhow!("xla engine is gone"))?;
+        rx.recv().map_err(|_| anyhow!("xla engine dropped the request"))?
+    }
+
+    /// Execute an arbitrary number of rows by padding up to the smallest
+    /// available artifact batch (padding rows repeat row 0 and are
+    /// discarded) and chunking when rows exceed the largest batch.
+    pub fn run_trials_any(
+        &self,
+        x: &[f32],
+        rows: usize,
+        features: usize,
+        seed: u32,
+        p: TrialParams,
+    ) -> Result<Vec<i32>> {
+        anyhow::ensure!(rows > 0 && x.len() == rows * features, "bad trial input shape");
+        if self.trial_batches.contains(&rows) {
+            return self.run_trials(x.to_vec(), rows, seed, p);
+        }
+        let max_b = *self
+            .trial_batches
+            .last()
+            .ok_or_else(|| anyhow!("manifest lists no trial batches"))?;
+        if rows > max_b {
+            // Chunk recursively.
+            let mut out = Vec::with_capacity(rows);
+            let mut off = 0usize;
+            let mut chunk_idx = 0u32;
+            while off < rows {
+                let take = max_b.min(rows - off);
+                let part = self.run_trials_any(
+                    &x[off * features..(off + take) * features],
+                    take,
+                    features,
+                    seed.wrapping_add(chunk_idx.wrapping_mul(0x9E37)),
+                    p,
+                )?;
+                out.extend(part);
+                off += take;
+                chunk_idx += 1;
+            }
+            return Ok(out);
+        }
+        let batch = *self
+            .trial_batches
+            .iter()
+            .find(|&&b| b >= rows)
+            .expect("max_b >= rows guaranteed above");
+        let mut xp = Vec::with_capacity(batch * features);
+        xp.extend_from_slice(x);
+        for _ in rows..batch {
+            xp.extend_from_slice(&x[..features]);
+        }
+        let mut winners = self.run_trials(xp, batch, seed, p)?;
+        winners.truncate(rows);
+        Ok(winners)
+    }
+
+    /// Float software forward: `[batch, 784]` → `[batch, 10]` probs.
+    pub fn run_ideal(&self, x: Vec<f32>, batch: usize) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Ideal { x, batch, reply })
+            .map_err(|_| anyhow!("xla engine is gone"))?;
+        rx.recv().map_err(|_| anyhow!("xla engine dropped the request"))?
+    }
+
+    /// Fetch the artifact manifest (batch sizes, calibration record).
+    pub fn manifest(&self) -> Result<crate::runtime::Manifest> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Manifest { reply })
+            .map_err(|_| anyhow!("xla engine is gone"))?;
+        rx.recv().map_err(|_| anyhow!("xla engine dropped the request"))
+    }
+
+    /// Pre-compile the trial executable for `batch` (off the hot path).
+    pub fn warmup(&self, batch: usize) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warmup { batch, reply })
+            .map_err(|_| anyhow!("xla engine is gone"))?;
+        rx.recv().map_err(|_| anyhow!("xla engine dropped the request"))?
+    }
+}
+
+fn worker_main(
+    dir: std::path::PathBuf,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let store = match ArtifactStore::open(&dir) {
+        Ok(s) => {
+            let _ = ready.send(Ok(()));
+            s
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Trial { x, batch, seed, sigma_z, theta, reply } => {
+                let res = store
+                    .trial(batch)
+                    .and_then(|exe| exe.run(&x, seed, sigma_z, theta));
+                let _ = reply.send(res);
+            }
+            Request::Ideal { x, batch, reply } => {
+                let res = store.ideal(batch).and_then(|exe| exe.run(&x));
+                let _ = reply.send(res);
+            }
+            Request::Manifest { reply } => {
+                let _ = reply.send(store.manifest.clone());
+            }
+            Request::Warmup { batch, reply } => {
+                let _ = reply.send(store.trial(batch).map(|_| ()));
+            }
+            Request::Shutdown => break,
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Robustness ablations on the physical engine (E-ABL1/2).
+//!
+//! * noise composition: thermal-only (the paper's model) vs thermal +
+//!   shot + RTN + 1/f — does the sigmoid emulation survive real devices?
+//! * programming variation: lognormal σ sweep — accuracy degradation.
+
+use anyhow::{Context, Result};
+
+use crate::dataset::Dataset;
+use crate::device::noise::NoiseParams;
+use crate::device::variation::VariationModel;
+use crate::device::DELTA_F;
+use crate::engine::{PhysicalEngine, TrialParams};
+use crate::nn::Weights;
+use crate::runtime::ArtifactStore;
+use crate::util::table::Table;
+
+use super::common::results_dir;
+
+fn load(n_images: usize) -> Result<(Weights, Dataset)> {
+    let dir = ArtifactStore::default_dir();
+    let w = Weights::load(&dir.join("weights").join("fcnn")).context("weights")?;
+    let ds = Dataset::load(&dir.join("data").join("test"))?.take(n_images);
+    Ok((w, ds))
+}
+
+fn accuracy(engine: &mut PhysicalEngine, ds: &Dataset, trials: usize) -> f64 {
+    let p = TrialParams::default();
+    let hits = (0..ds.len())
+        .filter(|&i| {
+            engine.infer(ds.image(i), p, trials, (i * 977) as u64).prediction() == ds.label(i)
+        })
+        .count();
+    hits as f64 / ds.len() as f64
+}
+
+/// E-ABL1: noise-source composition.
+pub fn noise_composition(n_images: usize, trials: usize) -> Result<()> {
+    let (w, ds) = load(n_images)?;
+    let mut t = Table::new(
+        &format!("Ablation — noise composition ({n_images} images × {trials} trials)"),
+        &["noise model", "accuracy"],
+    );
+    let corners: [(&str, NoiseParams); 3] = [
+        ("thermal only (paper)", NoiseParams::thermal_only(DELTA_F)),
+        ("thermal + shot", {
+            let mut n = NoiseParams::thermal_only(DELTA_F);
+            n.shot = true;
+            n
+        }),
+        ("thermal+shot+RTN+1/f", NoiseParams::full(DELTA_F)),
+    ];
+    for (name, noise) in corners {
+        let mut e = PhysicalEngine::program(
+            &w, 128, &VariationModel::default(), &noise, 1.0, 31,
+        );
+        let acc = accuracy(&mut e, &ds, trials);
+        t.row(vec![name.into(), format!("{:.4}", acc)]);
+    }
+    t.emit(&results_dir(), "ablation_noise")?;
+    Ok(())
+}
+
+/// E-ABL2: device programming variation sweep.
+pub fn variation_sweep(n_images: usize, trials: usize) -> Result<()> {
+    let (w, ds) = load(n_images)?;
+    let mut t = Table::new(
+        &format!("Ablation — programming variation ({n_images} images × {trials} trials)"),
+        &["lognormal σ", "stuck fraction", "accuracy"],
+    );
+    for (sigma, stuck) in [(0.0, 0.0), (0.02, 0.0), (0.05, 0.0), (0.10, 0.0), (0.05, 0.01)] {
+        let v = VariationModel::with_defects(sigma, stuck, stuck / 2.0);
+        let mut e = PhysicalEngine::program(
+            &w, 128, &v, &NoiseParams::thermal_only(DELTA_F), 1.0, 37,
+        );
+        let acc = accuracy(&mut e, &ds, trials);
+        t.row(vec![
+            format!("{sigma:.2}"),
+            format!("{stuck:.2}"),
+            format!("{acc:.4}"),
+        ]);
+    }
+    t.emit(&results_dir(), "ablation_variation")?;
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Shared helpers for the figure harnesses.
+
+use std::path::PathBuf;
+
+/// Resolve the results directory ($RACA_RESULTS or ./results).
+pub fn results_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("RACA_RESULTS") {
+        return PathBuf::from(d);
+    }
+    for cand in ["results", "../results"] {
+        let p = PathBuf::from(cand);
+        if p.exists() {
+            return p;
+        }
+    }
+    let p = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Evenly spaced points over [lo, hi] inclusive.
+pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+/// Parallel map over items using scoped threads (no rayon offline).
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + Default + Clone,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(items.len().max(1));
+    let mut results = vec![R::default(); items.len()];
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<R>>> =
+        (0..items.len()).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    for (i, slot) in slots.into_iter().enumerate() {
+        results[i] = slot.into_inner().unwrap().expect("worker missed a slot");
+    }
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linspace_endpoints() {
+        let v = linspace(-2.0, 2.0, 5);
+        assert_eq!(v, vec![-2.0, -1.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn parallel_map_order_preserved() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map(&items, |_, &x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let items: Vec<u64> = vec![];
+        let out: Vec<u64> = parallel_map(&items, |_, &x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,201 @@
+//! Fig. 5 — WTA SoftMax-neuron simulations.
+//!
+//! (a) transient traces of ten neurons vs the adaptive threshold over
+//! three consecutive decisions; (b,c) 100 decision experiments — decision
+//! times and the winner raster; (d) empirical win frequencies vs the
+//! ideal softmax (Eq. 14).
+
+use anyhow::Result;
+
+use crate::circuit::{WtaCircuit, WtaParams};
+use crate::neuron::softmax_wta::{softmax64, WtaLayer};
+use crate::stats::GaussianSource;
+use crate::util::table::Table;
+
+use super::common::results_dir;
+
+/// The ten output logits used across all panels (z units, mean-centered).
+/// Chosen to mirror the paper's example: one clear-but-not-degenerate
+/// winner with plausible runner-ups.
+pub fn example_logits() -> Vec<f64> {
+    vec![-1.2, -0.4, 0.3, -0.8, 2.1, 0.9, -1.6, 0.1, -0.3, 0.9]
+}
+
+fn layer(vth0: f64, sigma_v: f64) -> (WtaLayer, Vec<f64>) {
+    let z = example_logits();
+    // Voltage mapping: v = σ_v·z/1.702 (DESIGN.md §6).
+    let v: Vec<f64> = z.iter().map(|&zi| zi * sigma_v / 1.702).collect();
+    let l = WtaLayer::new(WtaParams {
+        sigma_v,
+        vth0,
+        refractory_steps: 8,
+        max_steps: 64,
+        ..Default::default()
+    });
+    (l, v)
+}
+
+/// Softmax-matching rest offset: θ_z − z̄ = 1.702² in z units (§6).
+fn matched_vth0(v: &[f64], sigma_v: f64) -> f64 {
+    let v_mean = v.iter().sum::<f64>() / v.len() as f64;
+    let theta_v = (1.702f64 * 1.702) * sigma_v / 1.702; // volts above z̄=0
+    theta_v - v_mean // rest = mean + vth0 must sit at θ
+}
+
+/// Panel (a): transient traces, three consecutive decisions.
+pub fn panel_a() -> Result<()> {
+    let sigma_v = 0.02;
+    let (l, v) = layer(0.0, sigma_v);
+    let vth0 = matched_vth0(&v, sigma_v);
+    let circuit = WtaCircuit::new(WtaParams { vth0, sigma_v, ..l.circuit.params.clone() });
+    let mut g = GaussianSource::new(55);
+    let trace = circuit.run_trace(&v, 3, &mut g);
+
+    let mut headers: Vec<String> = vec!["t_ns".into()];
+    headers.extend((0..10).map(|i| format!("V{i}_mV")));
+    headers.push("Vth_mV".into());
+    headers.push("winner".into());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Fig 5(a) — WTA transient (3 decisions)", &hdr);
+    for step in &trace.steps {
+        let mut row = vec![format!("{:.1}", step.t * 1e9)];
+        row.extend(step.v.iter().map(|&x| format!("{:.2}", x * 1e3)));
+        row.push(format!("{:.2}", step.vth * 1e3));
+        row.push(step.winner.map(|w| w.to_string()).unwrap_or_default());
+        t.row(row);
+    }
+    // Print only a summary to stdout (the trace is long); CSV is complete.
+    let path = results_dir().join("fig5_a.csv");
+    t.write_csv(&path)?;
+    println!("== Fig 5(a) — WTA transient ==");
+    println!(
+        "decisions: winners={:?} over {} steps ({} ns simulated)",
+        trace.winners,
+        trace.steps.len(),
+        trace.steps.len() as f64
+    );
+    println!("[csv] {}\n", path.display());
+    assert_eq!(trace.winners.len(), 3);
+    Ok(())
+}
+
+/// Panels (b,c): 100 decision experiments — decision time + winner raster.
+pub fn panel_bc() -> Result<()> {
+    let sigma_v = 0.02;
+    let (l, v) = layer(0.0, sigma_v);
+    let vth0 = matched_vth0(&v, sigma_v);
+    let circuit = WtaCircuit::new(WtaParams { vth0, sigma_v, ..l.circuit.params.clone() });
+    let mut g = GaussianSource::new(77);
+
+    let mut t = Table::new(
+        "Fig 5(b,c) — 100 decision experiments",
+        &["decision", "winner", "steps_to_fire"],
+    );
+    let mut counts = vec![0u64; 10];
+    for d in 0..100 {
+        // Count steps until the decision fires.
+        let trace = circuit.run_trace(&v, 1, &mut g);
+        let steps = trace
+            .steps
+            .iter()
+            .position(|s| s.winner.is_some())
+            .map(|p| p + 1)
+            .unwrap_or(trace.steps.len());
+        let w = trace.winners[0];
+        if w >= 0 {
+            counts[w as usize] += 1;
+        }
+        t.row(vec![d.to_string(), w.to_string(), steps.to_string()]);
+    }
+    t.emit(&results_dir(), "fig5_bc")?;
+    println!("winner histogram over 100 decisions: {counts:?}\n");
+    Ok(())
+}
+
+/// Panel (d): win frequencies (sampled + analytic) vs ideal softmax.
+pub fn panel_d(trials: usize) -> Result<()> {
+    let sigma_v = 0.02;
+    let (l0, v) = layer(0.0, sigma_v);
+    let vth0 = matched_vth0(&v, sigma_v);
+    let l = WtaLayer::new(WtaParams { vth0, sigma_v, ..l0.circuit.params.clone() });
+    let mut g = GaussianSource::new(99);
+    let outcome = l.run(&v, trials, &mut g);
+    let emp = outcome.frequencies();
+    let analytic = l.analytic_win_distribution(&v);
+    let soft = softmax64(&example_logits());
+
+    let mut t = Table::new(
+        &format!("Fig 5(d) — WTA win distribution vs softmax ({trials} trials)"),
+        &["neuron", "empirical", "analytic(Eq14)", "softmax", "|emp-softmax|"],
+    );
+    let mut max_gap: f64 = 0.0;
+    for j in 0..10 {
+        let gap = (emp[j] - soft[j]).abs();
+        max_gap = max_gap.max(gap);
+        t.row(vec![
+            j.to_string(),
+            format!("{:.4}", emp[j]),
+            format!("{:.4}", analytic[j]),
+            format!("{:.4}", soft[j]),
+            format!("{gap:.4}"),
+        ]);
+    }
+    t.emit(&results_dir(), "fig5_d")?;
+    let argmax_emp = emp
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let argmax_soft = soft
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    println!(
+        "max |empirical − softmax| = {max_gap:.4}; argmax agree: {} (emp {argmax_emp}, softmax {argmax_soft}); abstentions {}\n",
+        argmax_emp == argmax_soft,
+        outcome.abstentions
+    );
+    Ok(())
+}
+
+/// Run requested panels ("a", "bc", "d", "all").
+pub fn run(panel: &str, trials: usize) -> Result<()> {
+    match panel {
+        "a" => panel_a(),
+        "bc" => panel_bc(),
+        "d" => panel_d(trials),
+        "all" => {
+            panel_a()?;
+            panel_bc()?;
+            panel_d(trials)
+        }
+        other => anyhow::bail!("unknown fig5 panel '{other}' (a|bc|d|all)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wta_distribution_tracks_softmax() {
+        let sigma_v = 0.02;
+        let (l0, v) = layer(0.0, sigma_v);
+        let vth0 = matched_vth0(&v, sigma_v);
+        let l = WtaLayer::new(WtaParams { vth0, sigma_v, ..l0.circuit.params.clone() });
+        let mut g = GaussianSource::new(1);
+        let o = l.run(&v, 20_000, &mut g);
+        let emp = o.frequencies();
+        let soft = softmax64(&example_logits());
+        // Same argmax, coarse value agreement (Fig. 5d claim).
+        let am_e = emp.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let am_s = soft.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(am_e, am_s);
+        for j in 0..10 {
+            assert!((emp[j] - soft[j]).abs() < 0.08, "neuron {j}: {} vs {}", emp[j], soft[j]);
+        }
+    }
+}

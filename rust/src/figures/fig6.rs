@@ -1,0 +1,232 @@
+//! Fig. 6 — RACA end-to-end accuracy vs number of stochastic trials.
+//!
+//! (a) sweeping the Sigmoid-layer SNR (κ/κ* ∈ {¼,½,1,2,4});
+//! (b) sweeping the WTA rest threshold V_th0 ∈ {0, 0.05 V}
+//!     (θ_norm ∈ {0, 3}).
+//!
+//! Method: for each test image run `max_trials` stochastic trials once and
+//! record the winner sequence; the accuracy at k trials is the majority
+//! vote over the first k winners (prefix voting) — so one pass yields the
+//! whole curve.  Native engine by default (parallel over images); the
+//! `--engine xla` path exercises the AOT artifacts instead.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::dataset::Dataset;
+use crate::engine::{NativeEngine, TrialParams, XlaEngine};
+use crate::nn::Weights;
+use crate::runtime::ArtifactStore;
+use crate::util::table::Table;
+
+use super::common::{parallel_map, results_dir};
+
+fn raca_scratch() -> crate::nn::forward::TrialScratch {
+    crate::nn::forward::TrialScratch::default()
+}
+
+/// Trial counts reported on the x-axis.
+pub const TRIAL_POINTS: &[usize] = &[1, 2, 4, 8, 16, 32, 64];
+
+/// Majority vote over the first `k` winners (ties → lower class).
+fn prefix_vote(winners: &[i32], k: usize, classes: usize) -> i32 {
+    let mut counts = vec![0u32; classes];
+    for &w in &winners[..k.min(winners.len())] {
+        if w >= 0 {
+            counts[w as usize] += 1;
+        }
+    }
+    let (best, &cnt) = counts.iter().enumerate().max_by_key(|&(i, &c)| (c, usize::MAX - i)).unwrap();
+    if cnt == 0 {
+        -1
+    } else {
+        best as i32
+    }
+}
+
+/// Accuracy at each TRIAL_POINTS entry for one winner-matrix.
+fn curve(winner_rows: &[Vec<i32>], labels: &[i32]) -> Vec<f64> {
+    TRIAL_POINTS
+        .iter()
+        .map(|&k| {
+            let hits = winner_rows
+                .iter()
+                .zip(labels)
+                .filter(|(w, &l)| prefix_vote(w, k, 10) == l)
+                .count();
+            hits as f64 / labels.len() as f64
+        })
+        .collect()
+}
+
+/// Run `max_trials` native-engine trials per image (parallel over images).
+fn native_winners(
+    weights: &Arc<Weights>,
+    ds: &Dataset,
+    p: TrialParams,
+    max_trials: usize,
+    seed: u64,
+) -> Vec<Vec<i32>> {
+    let engine = NativeEngine::new(weights.clone(), seed);
+    let idx: Vec<usize> = (0..ds.len()).collect();
+    parallel_map(&idx, |_, &i| {
+        let z1 = engine.precompute(ds.image(i));
+        let mut scratch = raca_scratch();
+        (0..max_trials)
+            .map(|t| engine.trial_scratch(&z1, p, (i * 100_003 + t) as u64, &mut scratch))
+            .collect::<Vec<i32>>()
+    })
+}
+
+/// Run trials through the AOT/PJRT path (batch-packed).
+fn xla_winners(
+    dir: std::path::PathBuf,
+    ds: &Dataset,
+    p: TrialParams,
+    max_trials: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let engine = XlaEngine::start(dir)?;
+    let h = engine.handle();
+    let batch = 32usize;
+    let mut rows = vec![Vec::with_capacity(max_trials); ds.len()];
+    let n_chunks = ds.len().div_ceil(batch);
+    for c in 0..n_chunks {
+        let lo = c * batch;
+        let hi = (lo + batch).min(ds.len());
+        let mut xs = Vec::with_capacity(batch * 784);
+        for i in lo..hi {
+            xs.extend_from_slice(ds.image(i));
+        }
+        // Pad the final chunk by repeating the last image (discarded).
+        for _ in hi - lo..batch {
+            xs.extend_from_slice(ds.image(hi - 1));
+        }
+        for t in 0..max_trials {
+            let winners = h.run_trials(xs.clone(), batch, (c * 7919 + t) as u32, p)?;
+            for i in lo..hi {
+                rows[i].push(winners[i - lo]);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+fn load(dir: &std::path::Path, n_images: usize) -> Result<(Arc<Weights>, Dataset, f64)> {
+    let w = Weights::load(&dir.join("weights").join("fcnn")).context("weights")?;
+    let acc = w.ideal_test_accuracy;
+    let ds = Dataset::load(&dir.join("data").join("test"))?.take(n_images);
+    Ok((Arc::new(w), ds, acc))
+}
+
+/// Panel (a): SNR sweep.
+pub fn panel_a(n_images: usize, use_xla: bool) -> Result<()> {
+    let dir = ArtifactStore::default_dir();
+    let (w, ds, ideal_acc) = load(&dir, n_images)?;
+    let snrs = [0.25, 0.5, 1.0, 2.0, 4.0];
+    let mut headers: Vec<String> = vec!["trials".into()];
+    headers.extend(snrs.iter().map(|s| format!("acc[snr={s}x]")));
+    headers.push("ideal(software)".into());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("Fig 6(a) — accuracy vs trials, SNR sweep ({n_images} images)"),
+        &hdr,
+    );
+    let mut curves = Vec::new();
+    for (si, &s) in snrs.iter().enumerate() {
+        let p = TrialParams::with_snr_scale(s);
+        let rows = if use_xla {
+            xla_winners(dir.clone(), &ds, p, *TRIAL_POINTS.last().unwrap())?
+        } else {
+            native_winners(&w, &ds, p, *TRIAL_POINTS.last().unwrap(), 40 + si as u64)
+        };
+        curves.push(curve(&rows, &ds.labels));
+    }
+    for (ti, &k) in TRIAL_POINTS.iter().enumerate() {
+        let mut row = vec![k.to_string()];
+        for c in &curves {
+            row.push(format!("{:.4}", c[ti]));
+        }
+        row.push(format!("{ideal_acc:.4}"));
+        t.row(row);
+    }
+    t.emit(&results_dir(), "fig6_a")?;
+    Ok(())
+}
+
+/// Panel (b): V_th0 sweep (θ_norm 0 ↔ 0 V, 3 ↔ 0.05 V).
+pub fn panel_b(n_images: usize, use_xla: bool) -> Result<()> {
+    let dir = ArtifactStore::default_dir();
+    let (w, ds, ideal_acc) = load(&dir, n_images)?;
+    let thetas: [(f32, &str); 2] = [(0.0, "Vth0=0V"), (3.0, "Vth0=0.05V")];
+    let mut headers: Vec<String> = vec!["trials".into()];
+    headers.extend(thetas.iter().map(|(_, n)| format!("acc[{n}]")));
+    headers.push("ideal(software)".into());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("Fig 6(b) — accuracy vs trials, V_th0 sweep ({n_images} images)"),
+        &hdr,
+    );
+    let mut curves = Vec::new();
+    for (ti_, &(theta, _)) in thetas.iter().enumerate() {
+        let p = TrialParams::default().with_theta(theta);
+        let rows = if use_xla {
+            xla_winners(dir.clone(), &ds, p, *TRIAL_POINTS.last().unwrap())?
+        } else {
+            native_winners(&w, &ds, p, *TRIAL_POINTS.last().unwrap(), 70 + ti_ as u64)
+        };
+        curves.push(curve(&rows, &ds.labels));
+    }
+    for (ti, &k) in TRIAL_POINTS.iter().enumerate() {
+        let mut row = vec![k.to_string()];
+        for c in &curves {
+            row.push(format!("{:.4}", c[ti]));
+        }
+        row.push(format!("{ideal_acc:.4}"));
+        t.row(row);
+    }
+    t.emit(&results_dir(), "fig6_b")?;
+    let final_005 = curves[1].last().copied().unwrap_or(0.0);
+    let final_0 = curves[0].last().copied().unwrap_or(0.0);
+    println!(
+        "final accuracy: Vth0=0.05V → {:.2}% (paper 96.7%), Vth0=0V → {:.2}% (paper 96.0%), software {:.2}%\n",
+        final_005 * 100.0,
+        final_0 * 100.0,
+        ideal_acc * 100.0
+    );
+    Ok(())
+}
+
+/// Run requested panels ("a", "b", "all").
+pub fn run(panel: &str, n_images: usize, use_xla: bool) -> Result<()> {
+    match panel {
+        "a" => panel_a(n_images, use_xla),
+        "b" => panel_b(n_images, use_xla),
+        "all" => {
+            panel_a(n_images, use_xla)?;
+            panel_b(n_images, use_xla)
+        }
+        other => anyhow::bail!("unknown fig6 panel '{other}' (a|b|all)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_vote_rules() {
+        assert_eq!(prefix_vote(&[1, 1, 2], 3, 10), 1);
+        assert_eq!(prefix_vote(&[2, 1], 1, 10), 2);
+        assert_eq!(prefix_vote(&[-1, -1], 2, 10), -1);
+        assert_eq!(prefix_vote(&[3, 5, 5, 3], 4, 10), 3); // tie → lower class
+    }
+
+    #[test]
+    fn curve_monotone_for_perfect_winner() {
+        let rows = vec![vec![7i32; 64], vec![7i32; 64]];
+        let labels = vec![7, 7];
+        let c = curve(&rows, &labels);
+        assert!(c.iter().all(|&a| a == 1.0));
+    }
+}

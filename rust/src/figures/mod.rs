@@ -1,0 +1,14 @@
+//! Figure/table regeneration harnesses (DESIGN.md §5 experiment index).
+//!
+//! One module per paper artifact; each prints the paper's series as an
+//! aligned text table and writes a CSV twin under `results/`.  Everything
+//! is deterministic given the seed embedded in each harness.
+
+pub mod ablate;
+pub mod common;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+
+pub use common::results_dir;

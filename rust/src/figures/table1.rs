@@ -1,0 +1,143 @@
+//! Table I harness + design-space ablations (E-ABL3/4).
+
+use anyhow::Result;
+
+use crate::hwmodel::table1::Table1Result;
+use crate::hwmodel::{Architecture, SystemModel, TechParams};
+use crate::nn::ModelSpec;
+use crate::util::table::{fmt_g, Table};
+
+use super::common::results_dir;
+
+/// Regenerate Table I with breakdowns.
+pub fn run() -> Result<()> {
+    let model = SystemModel::paper();
+    let r = Table1Result::compute(&model);
+    let t = r.to_table();
+    t.emit(&results_dir(), "table1")?;
+
+    // Energy breakdown per category (per trial).
+    let mut bt = Table::new(
+        "Table I breakdown — energy per trial (pJ)",
+        &["category", "1-bit ADC", "RACA"],
+    );
+    let eb = model.energy(Architecture::OneBitAdc);
+    let er = model.energy(Architecture::Raca);
+    for (name, a, b) in [
+        ("array", eb.array, er.array),
+        ("readout (ADC / TIA+comp)", eb.readout, er.readout),
+        ("drivers + DAC", eb.drivers, er.drivers),
+        ("digital (RNG/accum/WTA/ctl)", eb.digital, er.digital),
+        ("buffers", eb.buffers, er.buffers),
+        ("interconnect", eb.interconnect, er.interconnect),
+        ("TOTAL", eb.total(), er.total()),
+    ] {
+        bt.row(vec![name.into(), fmt_g(a), fmt_g(b)]);
+    }
+    bt.emit(&results_dir(), "table1_energy_breakdown")?;
+
+    let mut at = Table::new(
+        "Table I breakdown — area (mm²)",
+        &["category", "1-bit ADC", "RACA"],
+    );
+    let ab = model.area(Architecture::OneBitAdc);
+    let ar = model.area(Architecture::Raca);
+    for (name, a, b) in [
+        ("array", ab.array, ar.array),
+        ("readout", ab.readout, ar.readout),
+        ("drivers + DAC", ab.drivers, ar.drivers),
+        ("digital", ab.digital, ar.digital),
+        ("buffers", ab.buffers, ar.buffers),
+        ("interconnect", ab.interconnect, ar.interconnect),
+        ("TOTAL", ab.total(), ar.total()),
+    ] {
+        at.row(vec![name.into(), fmt_g(a), fmt_g(b)]);
+    }
+    at.emit(&results_dir(), "table1_area_breakdown")?;
+    Ok(())
+}
+
+/// E-INTRO: the paper's §I premise — converter share of a conventional
+/// multi-bit-ADC CiM design ("up to 72% energy / 81% area in DAC+ADC").
+pub fn intro_converter_share() -> Result<()> {
+    use crate::hwmodel::ConventionalCim;
+    let mut t = Table::new(
+        "Intro premise — converter (DAC+ADC) share of conventional CiM",
+        &["adc bits", "E total pJ", "conv E %", "area mm²", "conv A %", "paper claim"],
+    );
+    for bits in [4u32, 6, 8] {
+        let mut c = ConventionalCim::paper();
+        c.adc_bits = bits;
+        c.dac_bits = bits;
+        t.row(vec![
+            bits.to_string(),
+            fmt_g(c.energy().total()),
+            format!("{:.1}", c.converter_energy_fraction() * 100.0),
+            fmt_g(c.area().total()),
+            format!("{:.1}", c.converter_area_fraction() * 100.0),
+            if bits == 8 { "≤72% E, ≤81% A".into() } else { String::new() },
+        ]);
+    }
+    t.emit(&results_dir(), "intro_converter_share")?;
+    Ok(())
+}
+
+/// E-ABL3: tile-size ablation.
+pub fn ablate_tiles() -> Result<()> {
+    let mut t = Table::new(
+        "Ablation — tile size vs Table I metrics (RACA)",
+        &["tile", "tiles", "energy pJ/trial", "area mm²", "TOPS/W"],
+    );
+    for tile in [64usize, 128, 256] {
+        let mut tech = TechParams::default();
+        tech.tile = tile;
+        let m = SystemModel::new(ModelSpec::paper(), tech);
+        t.row(vec![
+            tile.to_string(),
+            m.num_tiles().to_string(),
+            fmt_g(m.energy(Architecture::Raca).total()),
+            fmt_g(m.area(Architecture::Raca).total()),
+            fmt_g(m.tops_per_watt(Architecture::Raca)),
+        ]);
+    }
+    t.emit(&results_dir(), "ablation_tiles")?;
+    Ok(())
+}
+
+/// E-ABL4: the calibrated low-Vr corner the paper motivates.
+pub fn ablate_low_vr() -> Result<()> {
+    let base = SystemModel::paper();
+    let low = SystemModel::new(ModelSpec::paper(), TechParams::default().with_calibrated_vr());
+    let mut t = Table::new(
+        "Ablation — RACA read-voltage corner",
+        &["corner", "Vr (V)", "array pJ/trial", "total pJ/trial", "TOPS/W"],
+    );
+    for (name, m) in [("conventional swing", &base), ("noise-calibrated", &low)] {
+        let e = m.energy(Architecture::Raca);
+        t.row(vec![
+            name.into(),
+            format!("{:.3}", m.tech.v_read_raca),
+            fmt_g(e.array),
+            fmt_g(e.total()),
+            fmt_g(m.tops_per_watt(Architecture::Raca)),
+        ]);
+    }
+    t.emit(&results_dir(), "ablation_low_vr")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_vr_cuts_array_energy() {
+        let base = SystemModel::paper();
+        let low =
+            SystemModel::new(ModelSpec::paper(), TechParams::default().with_calibrated_vr());
+        let eb = base.energy(Architecture::Raca);
+        let el = low.energy(Architecture::Raca);
+        assert!(el.array < eb.array / 50.0);
+        assert!(el.total() < eb.total());
+    }
+}

@@ -1,0 +1,26 @@
+//! NeuroSim-style hardware cost model (DESIGN.md §4.10, paper Table I).
+//!
+//! Per-component energy/area/latency at a 32 nm corner, composed over the
+//! FCNN workload for two architectures:
+//!
+//! * **OneBitAdc** — the conventional SBNN readout: per-column 1-bit SAR
+//!   ADC (sample/hold + reference + latch), explicit digital activation
+//!   (LFSR RNG + comparator) and full-swing reads;
+//! * **Raca** — the paper's design: bare comparator on the bitline,
+//!   activation *is* the comparator, reads at the calibrated noise-level
+//!   voltage, no RNG (intrinsic thermal noise).
+//!
+//! Component constants come from the CiM literature (ISAAC/PRIME/NeuroSim
+//! reports scaled to 32 nm) and are documented per-item in
+//! [`params::TechParams`].  Absolute numbers carry the usual factor-2
+//! modeling uncertainty; the Table I *structure* (what is removed and what
+//! that does to energy/area/efficiency) is the reproduced result.
+
+pub mod conventional;
+pub mod params;
+pub mod system;
+pub mod table1;
+
+pub use conventional::ConventionalCim;
+pub use params::TechParams;
+pub use system::{Architecture, Breakdown, SystemModel};

@@ -1,0 +1,319 @@
+//! System-level aggregation: component counts × unit costs per inference.
+//!
+//! Workload: one stochastic inference trial of the FCNN (the paper's
+//! Table I unit).  Counting rules:
+//!
+//! * layer `l` has `ceil(n_col/tile) × ceil(n_out/tile)` physical tiles;
+//!   a logical column-read touches every row-tile stacked on it;
+//! * layer 0 is bit-serial over `input_cycles` (8-bit DAC input, both
+//!   designs); hidden activations are 1-bit (single cycle);
+//! * the baseline converts every logical column-read with a 1-bit ADC and
+//!   runs the RNG+comparator activation in digital; partial sums across
+//!   row tiles recombine digitally (accumulator per column-read);
+//! * RACA senses each logical column with TIA+comparator (analog partial
+//!   sums — wired column, no digital recombination) and spends
+//!   `wta_steps` comparator decisions per output column;
+//! * both move activations between layers through buffers + H-tree.
+
+use crate::nn::ModelSpec;
+
+use super::params::TechParams;
+
+/// Which readout architecture to cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Architecture {
+    /// Conventional SBNN with per-column 1-bit ADC readout.
+    OneBitAdc,
+    /// The paper's comparator-only, noise-activated design.
+    Raca,
+}
+
+/// Per-category totals (energy in pJ, area in mm²).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Breakdown {
+    pub array: f64,
+    pub readout: f64,  // ADC or TIA+comparator
+    pub drivers: f64,  // wordline drivers + input DACs
+    pub digital: f64,  // RNG/activation, accumulators, WTA, counters
+    pub buffers: f64,
+    pub interconnect: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.array + self.readout + self.drivers + self.digital + self.buffers + self.interconnect
+    }
+}
+
+/// The cost model over a network + technology corner.
+#[derive(Debug, Clone)]
+pub struct SystemModel {
+    pub spec: ModelSpec,
+    pub tech: TechParams,
+}
+
+struct LayerGeom {
+    rows: usize,      // logical rows incl. bias
+    cols: usize,      // logical output columns
+    row_tiles: usize, // stacked tiles per logical column
+    col_tiles: usize,
+    cycles: usize, // read cycles (bit-serial input or 1)
+}
+
+impl SystemModel {
+    pub fn new(spec: ModelSpec, tech: TechParams) -> Self {
+        Self { spec, tech }
+    }
+
+    pub fn paper() -> Self {
+        Self::new(ModelSpec::paper(), TechParams::default())
+    }
+
+    fn geom(&self, l: usize) -> LayerGeom {
+        let rows = self.spec.n_col(l);
+        let cols = self.spec.widths[l + 1];
+        LayerGeom {
+            rows,
+            cols,
+            row_tiles: rows.div_ceil(self.tech.tile),
+            col_tiles: cols.div_ceil(self.tech.tile),
+            cycles: if l == 0 { self.tech.input_cycles } else { 1 },
+        }
+    }
+
+    /// Total physical tiles.
+    pub fn num_tiles(&self) -> usize {
+        (0..self.spec.num_layers())
+            .map(|l| {
+                let g = self.geom(l);
+                g.row_tiles * g.col_tiles
+            })
+            .sum()
+    }
+
+    // ---------------------------------------------------------------------
+    // Energy per inference trial [pJ]
+    // ---------------------------------------------------------------------
+    pub fn energy(&self, arch: Architecture) -> Breakdown {
+        let t = &self.tech;
+        let mut b = Breakdown::default();
+        let v_read = match arch {
+            Architecture::OneBitAdc => t.v_read_conv,
+            Architecture::Raca => t.v_read_raca,
+        };
+        let n_layers = self.spec.num_layers();
+        for l in 0..n_layers {
+            let g = self.geom(l);
+            let last = l == n_layers - 1;
+            // Column-read events: every logical column, every cycle.  The
+            // RACA output layer re-reads each output column per WTA step.
+            let col_reads = if last && arch == Architecture::Raca {
+                g.cols * t.wta_steps
+            } else {
+                g.cols * g.cycles
+            };
+            // Devices energized per column-read: all stacked rows (+ref).
+            let dev_per_col = 2 * g.rows; // column + reference column
+            b.array += col_reads as f64 * dev_per_col as f64 * t.device_read_energy_pj(v_read);
+
+            // Drivers: every row of every row-tile switches per cycle; the
+            // input layer additionally pays the 8-bit DAC per row.
+            let row_events = g.rows
+                * g.col_tiles
+                * if last && arch == Architecture::Raca { t.wta_steps } else { g.cycles };
+            b.drivers += row_events as f64 * t.driver_energy_pj;
+            if l == 0 {
+                b.drivers += (g.rows * g.col_tiles) as f64 * t.dac8_energy_pj;
+            }
+
+            match arch {
+                Architecture::OneBitAdc => {
+                    // Per-column-read: TIA + 1-bit ADC conversion, then the
+                    // digital partial-sum accumulate across row tiles and
+                    // the RNG+comparator stochastic activation per logical
+                    // column (once per cycle-aggregated result).
+                    let conversions = (g.cols * g.cycles * g.row_tiles) as f64;
+                    b.readout += conversions * (t.adc1_energy_pj + t.tia_energy_pj);
+                    b.digital += conversions * t.accum_energy_pj;
+                    b.digital += (g.cols) as f64 * t.rng_energy_pj;
+                    if last {
+                        b.digital += g.cols as f64 * t.counter_energy_pj;
+                    }
+                }
+                Architecture::Raca => {
+                    // Analog partial sums: one TIA+comparator per logical
+                    // column-read, regardless of row tiling.
+                    b.readout += col_reads as f64 * (t.comparator_energy_pj + t.tia_energy_pj);
+                    if last {
+                        b.digital += col_reads as f64 * t.wta_energy_pj;
+                        b.digital += g.cols as f64 * t.counter_energy_pj;
+                    }
+                }
+            }
+
+            // Buffers + H-tree: activations in (rows·bits_in) and out.
+            let bits_in = (g.rows * if l == 0 { 8 } else { 1 }) as f64;
+            let bits_out = g.cols as f64 * if last { 4.0 } else { 1.0 };
+            b.buffers += (bits_in + bits_out) * t.buffer_energy_pj_per_bit * g.col_tiles as f64;
+            b.interconnect +=
+                (bits_in + bits_out) * t.htree_energy_pj_per_bit_mm * t.htree_dist_mm;
+        }
+        // Chip-level control/sequencing/static energy (identical in both
+        // designs — NeuroSim's "other" bucket).
+        b.digital += t.control_energy_pj;
+        b
+    }
+
+    /// Energy per *classification* [pJ]: per-trial energy × the majority
+    /// vote's trial count (the paper's Table I unit).
+    pub fn energy_per_classification(&self, arch: Architecture) -> f64 {
+        self.energy(arch).total() * self.tech.trials_per_classification as f64
+    }
+
+    // ---------------------------------------------------------------------
+    // Area [mm²]
+    // ---------------------------------------------------------------------
+    pub fn area(&self, arch: Architecture) -> Breakdown {
+        let t = &self.tech;
+        let um2_to_mm2 = 1e-6;
+        let mut b = Breakdown::default();
+        let mut logical_cols_total = 0usize;
+        for l in 0..self.spec.num_layers() {
+            let g = self.geom(l);
+            let tiles = (g.row_tiles * g.col_tiles) as f64;
+            let cells = tiles * (t.tile * t.tile) as f64;
+            b.array += cells * t.cell_area_um2() * um2_to_mm2;
+
+            // Physical columns carry the readout periphery per tile column.
+            let phys_cols = (g.col_tiles * t.tile * g.row_tiles) as f64;
+            logical_cols_total += g.cols;
+            match arch {
+                Architecture::OneBitAdc => {
+                    b.readout += phys_cols
+                        * (t.adc1_area_um2 + t.tia_area_um2 + t.colmux_area_um2)
+                        * um2_to_mm2;
+                    b.digital += phys_cols * t.accum_area_um2 * um2_to_mm2;
+                    b.digital += g.cols as f64 * t.rng_area_um2 * um2_to_mm2;
+                }
+                Architecture::Raca => {
+                    b.readout += phys_cols
+                        * (t.comparator_area_um2 + t.tia_area_um2 + t.colmux_area_um2)
+                        * um2_to_mm2;
+                    b.digital += g.cols as f64 * t.wta_area_um2 * um2_to_mm2;
+                }
+            }
+            // Drivers per physical row; DACs on layer 0 rows.
+            let phys_rows = (g.row_tiles * t.tile * g.col_tiles) as f64;
+            b.drivers += phys_rows * t.driver_area_um2 * um2_to_mm2;
+            if l == 0 {
+                b.drivers += g.rows as f64 * t.dac8_area_um2 * um2_to_mm2;
+            }
+        }
+        // Output counters (both designs tally votes/classes).
+        b.digital += logical_cols_total as f64 * 0.0; // per-layer handled above
+        b.digital += self.spec.output_dim() as f64 * t.counter_area_um2 * um2_to_mm2;
+        // Chip-level control / IO / test overhead (identical in both).
+        b.digital += t.global_overhead_mm2;
+        // Activation/weight staging buffer.
+        b.buffers += t.buffer_kb * t.buffer_area_um2_per_kb * um2_to_mm2;
+        // H-tree wiring overhead as a fraction of everything else.
+        let partial = b.total();
+        b.interconnect += partial * t.htree_area_frac;
+        b
+    }
+
+    /// Latency per trial [ns] — dominated by sequential layer reads.
+    pub fn latency_ns(&self, arch: Architecture) -> f64 {
+        let t = &self.tech;
+        let mut ns = 0.0;
+        let n_layers = self.spec.num_layers();
+        for l in 0..n_layers {
+            let g = self.geom(l);
+            let last = l == n_layers - 1;
+            let cycles = if last && arch == Architecture::Raca {
+                t.wta_steps
+            } else {
+                g.cycles
+            };
+            // One analog read + readout per cycle; ADC conversion costs an
+            // extra cycle in the baseline.
+            let per_cycle = match arch {
+                Architecture::OneBitAdc => 2.0 * t.t_read * 1e9,
+                Architecture::Raca => t.t_read * 1e9,
+            };
+            ns += cycles as f64 * per_cycle;
+        }
+        ns
+    }
+
+    /// Energy efficiency [TOPS/W]: (2·MACs per trial) / (energy per trial).
+    pub fn tops_per_watt(&self, arch: Architecture) -> f64 {
+        let ops = 2.0 * self.spec.macs_per_inference() as f64;
+        let joules = self.energy(arch).total() * 1e-12;
+        ops / joules / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_count_matches_hand_calc() {
+        let m = SystemModel::paper();
+        // L0: ceil(785/128)·ceil(500/128)=7·4=28; L1: 4·3=12; L2: 3·1=3.
+        assert_eq!(m.num_tiles(), 28 + 12 + 3);
+    }
+
+    #[test]
+    fn raca_beats_baseline_on_everything() {
+        let m = SystemModel::paper();
+        let eb = m.energy(Architecture::OneBitAdc).total();
+        let er = m.energy(Architecture::Raca).total();
+        let ab = m.area(Architecture::OneBitAdc).total();
+        let ar = m.area(Architecture::Raca).total();
+        assert!(er < eb, "energy: raca {er} vs adc {eb}");
+        assert!(ar < ab, "area: raca {ar} vs adc {ab}");
+        assert!(m.tops_per_watt(Architecture::Raca) > m.tops_per_watt(Architecture::OneBitAdc));
+    }
+
+    #[test]
+    fn readout_dominates_baseline_energy() {
+        // The premise of the paper (72% of energy in DAC/ADC): the ADC
+        // readout must be the largest baseline category.
+        let m = SystemModel::paper();
+        let b = m.energy(Architecture::OneBitAdc);
+        assert!(b.readout > b.array);
+        assert!(b.readout > b.buffers + b.interconnect);
+        assert!(b.readout / b.total() > 0.5);
+    }
+
+    #[test]
+    fn energy_breakdown_positive_and_consistent() {
+        let m = SystemModel::paper();
+        for arch in [Architecture::OneBitAdc, Architecture::Raca] {
+            let b = m.energy(arch);
+            for v in [b.array, b.readout, b.drivers, b.digital, b.buffers, b.interconnect] {
+                assert!(v >= 0.0 && v.is_finite());
+            }
+            assert!(b.total() > 0.0);
+        }
+    }
+
+    #[test]
+    fn bigger_tiles_fewer_tiles() {
+        let mut m = SystemModel::paper();
+        let n128 = m.num_tiles();
+        m.tech.tile = 256;
+        assert!(m.num_tiles() < n128);
+    }
+
+    #[test]
+    fn latency_raca_not_worse_per_hidden_cycle() {
+        let m = SystemModel::paper();
+        // RACA spends WTA steps at the output but no ADC cycle anywhere.
+        let lb = m.latency_ns(Architecture::OneBitAdc);
+        let lr = m.latency_ns(Architecture::Raca);
+        assert!(lb > 0.0 && lr > 0.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! RACA — ReRAM Analog Computing Accelerator without ADCs.
+//!
+//! Full-system reproduction of "A Fully Hardware Implemented Accelerator
+//! Design in ReRAM Analog Computing without ADCs" (Dang, Li, Wang, 2024).
+//!
+//! Three-layer architecture:
+//! * **L1 (Pallas, build-time python)** — crossbar MAC + stochastic
+//!   binarization kernels, lowered with `interpret=True`.
+//! * **L2 (JAX, build-time python)** — the RACA forward pass (stochastic
+//!   binary sigmoid layers + WTA softmax layer), AOT-lowered to HLO text.
+//! * **L3 (this crate)** — the coordinator: analog-circuit simulator,
+//!   PJRT runtime, trial scheduler, serving loop, and the NeuroSim-style
+//!   hardware cost model that regenerates the paper's Table I.
+//!
+//! Module map (DESIGN.md §4): `stats` → `device` → `circuit` → `crossbar`
+//! → `neuron` → `nn` → `engine` → `runtime` → `coordinator`, with
+//! `hwmodel` (Table I), `dataset`, `figures` (Fig. 4/5/6) and `util` on
+//! the side.
+
+pub mod arch;
+pub mod circuit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod crossbar;
+pub mod dataset;
+pub mod device;
+pub mod engine;
+pub mod figures;
+pub mod hwmodel;
+pub mod neuron;
+pub mod nn;
+pub mod planner;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+pub mod version {
+    /// Crate version string, for the CLI banner.
+    pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+}

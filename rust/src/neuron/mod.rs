@@ -1,0 +1,8 @@
+//! Neuron layer (DESIGN.md §4.5): the two stochastic neuron types the
+//! paper contributes, plus analytic probability helpers.
+
+pub mod sigmoid;
+pub mod softmax_wta;
+
+pub use sigmoid::SigmoidNeuron;
+pub use softmax_wta::{WtaLayer, WtaOutcome};

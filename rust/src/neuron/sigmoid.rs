@@ -1,0 +1,122 @@
+//! Binary stochastic Sigmoid neuron (paper §III-A, Eq. 8–13).
+//!
+//! The neuron is *just* a comparator on a noisy differential column
+//! current; its activation probability is Φ(κ·Z) ≈ sigmoid(Z).  This
+//! module wraps that decision plus the analytic forms used by Fig. 4.
+
+use crate::circuit::{Comparator, Tia};
+use crate::stats::{erf::norm_cdf, GaussianSource};
+
+/// One column's readout chain: TIA pair → subtractor → comparator.
+#[derive(Debug, Clone)]
+pub struct SigmoidNeuron {
+    pub tia: Tia,
+    pub comparator: Comparator,
+}
+
+impl SigmoidNeuron {
+    /// Ideal chain with feedback resistance `r` (offsets/hysteresis zero).
+    pub fn ideal(r: f64) -> Self {
+        Self { tia: Tia::new(r), comparator: Comparator::ideal() }
+    }
+
+    /// One decision from a (noisy) differential current sample [A].
+    #[inline]
+    pub fn fire(&mut self, i_diff: f64, gauss: &mut GaussianSource) -> bool {
+        let v = self.tia.transfer(i_diff);
+        self.comparator.decide(v, 0.0, gauss)
+    }
+
+    /// Analytic activation probability given the mean differential current
+    /// and the total column-noise RMS (Eq. 13): P = Φ(μ/σ).
+    pub fn activation_probability(i_mean: f64, sigma_i: f64) -> f64 {
+        if sigma_i <= 0.0 {
+            return if i_mean > 0.0 { 1.0 } else { 0.0 };
+        }
+        norm_cdf(i_mean / sigma_i)
+    }
+
+    /// Normalized-unit form: P = Φ(κ·z) with κ = Vr·G0/σ_tot.
+    pub fn activation_probability_z(z: f64, kappa: f64) -> f64 {
+        norm_cdf(kappa * z)
+    }
+
+    /// Empirical activation frequency from `n` fresh noise samples of a
+    /// fixed mean current (Fig. 4(a,b) sampling experiments).
+    pub fn sample_probability(
+        &mut self,
+        i_mean: f64,
+        sigma_i: f64,
+        n: usize,
+        gauss: &mut GaussianSource,
+    ) -> f64 {
+        let mut fired = 0usize;
+        for _ in 0..n {
+            let i = i_mean + sigma_i * gauss.next();
+            if self.fire(i, gauss) {
+                fired += 1;
+            }
+        }
+        fired as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::SIGMOID_PROBIT;
+    use crate::stats::erf::logistic;
+
+    #[test]
+    fn analytic_probability_limits() {
+        assert!((SigmoidNeuron::activation_probability(0.0, 1e-9) - 0.5).abs() < 2e-7);
+        assert!(SigmoidNeuron::activation_probability(1e-6, 1e-9) > 0.999);
+        assert!(SigmoidNeuron::activation_probability(-1e-6, 1e-9) < 0.001);
+        assert_eq!(SigmoidNeuron::activation_probability(1.0, 0.0), 1.0);
+        assert_eq!(SigmoidNeuron::activation_probability(-1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn empirical_matches_analytic() {
+        let mut n = SigmoidNeuron::ideal(1e5);
+        let mut g = GaussianSource::new(1);
+        for (mu, sigma) in [(0.0, 1e-6), (5e-7, 1e-6), (-1.2e-6, 1e-6)] {
+            let p_hat = n.sample_probability(mu, sigma, 40_000, &mut g);
+            let p = SigmoidNeuron::activation_probability(mu, sigma);
+            assert!((p_hat - p).abs() < 0.01, "mu={mu}: {p_hat} vs {p}");
+        }
+    }
+
+    #[test]
+    fn calibrated_kappa_tracks_logistic() {
+        let kappa = 1.0 / SIGMOID_PROBIT;
+        for z in [-4.0, -1.0, 0.0, 0.5, 2.0, 4.0] {
+            let p = SigmoidNeuron::activation_probability_z(z, kappa);
+            assert!((p - logistic(z)).abs() < 0.0095, "z={z}");
+        }
+    }
+
+    #[test]
+    fn tia_saturation_degrades_extremes_only() {
+        // A saturated TIA clips large |I| but the comparator decision for
+        // clipped values is already deterministic — probability unchanged.
+        let mut n = SigmoidNeuron::ideal(1e6);
+        n.tia = n.tia.with_rail(0.1);
+        let mut g = GaussianSource::new(2);
+        let p = n.sample_probability(5e-7, 1e-6, 20_000, &mut g);
+        let want = SigmoidNeuron::activation_probability(5e-7, 1e-6);
+        assert!((p - want).abs() < 0.02);
+    }
+
+    #[test]
+    fn paper_example_probabilities() {
+        // Fig. 4(a,b): activation probabilities 0.014 and 0.745 correspond
+        // to z = logit(p) at the calibrated point; check Φ(κ·z) lands close.
+        let kappa = 1.0 / SIGMOID_PROBIT;
+        for p_target in [0.014, 0.745] {
+            let z = (p_target / (1.0 - p_target) as f64).ln();
+            let p = SigmoidNeuron::activation_probability_z(z, kappa);
+            assert!((p - p_target).abs() < 0.01, "target={p_target} got={p}");
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! WTA binary stochastic SoftMax neuron layer (paper §III-B, Eq. 14).
+//!
+//! Wraps the transient WTA circuit with the counting/normalization logic:
+//! repeated decision trials accumulate per-class win counts whose
+//! normalized frequencies approximate softmax(Z) in the threshold-tail
+//! regime; argmax of the cumulative counts is the classification result.
+
+use crate::circuit::{WtaCircuit, WtaParams};
+use crate::stats::{erf::norm_cdf, GaussianSource};
+
+/// Outcome of a batch of WTA decision trials on one input.
+#[derive(Debug, Clone)]
+pub struct WtaOutcome {
+    /// Win counts per class.
+    pub counts: Vec<u64>,
+    /// Trials that timed out (no neuron crossed within the horizon).
+    pub abstentions: u64,
+    /// Trials run.
+    pub trials: u64,
+}
+
+impl WtaOutcome {
+    pub fn new(classes: usize) -> Self {
+        Self { counts: vec![0; classes], abstentions: 0, trials: 0 }
+    }
+
+    pub fn record(&mut self, winner: i32) {
+        self.trials += 1;
+        if winner < 0 {
+            self.abstentions += 1;
+        } else {
+            self.counts[winner as usize] += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: &WtaOutcome) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.abstentions += other.abstentions;
+        self.trials += other.trials;
+    }
+
+    /// Predicted class: argmax of counts (ties → lower index; −1 if no
+    /// trial produced a winner).
+    pub fn prediction(&self) -> i32 {
+        let best = self.counts.iter().enumerate().max_by(|a, b| {
+            a.1.cmp(b.1).then(std::cmp::Ordering::Greater) // keep first max
+        });
+        match best {
+            Some((i, &c)) if c > 0 => i as i32,
+            _ => -1,
+        }
+    }
+
+    /// Empirical win distribution (excluding abstentions).
+    pub fn frequencies(&self) -> Vec<f64> {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts.iter().map(|&c| c as f64 / total as f64).collect()
+    }
+
+    /// Top-two vote counts (for the early-stopping rule).
+    pub fn top_two(&self) -> (u64, u64) {
+        let mut first = 0u64;
+        let mut second = 0u64;
+        for &c in &self.counts {
+            if c > first {
+                second = first;
+                first = c;
+            } else if c > second {
+                second = c;
+            }
+        }
+        (first, second)
+    }
+}
+
+/// The output layer: static voltages → repeated WTA decisions.
+#[derive(Debug, Clone)]
+pub struct WtaLayer {
+    pub circuit: WtaCircuit,
+}
+
+impl WtaLayer {
+    pub fn new(params: WtaParams) -> Self {
+        Self { circuit: WtaCircuit::new(params) }
+    }
+
+    /// Run `trials` decisions on static voltages `v` [V].
+    pub fn run(&self, v: &[f64], trials: usize, gauss: &mut GaussianSource) -> WtaOutcome {
+        let mut out = WtaOutcome::new(v.len());
+        for _ in 0..trials {
+            out.record(self.circuit.decide(v, gauss));
+        }
+        out
+    }
+
+    /// Analytic per-step crossing probability of each neuron:
+    /// p_j = Φ((V_j − V_th)/σ_v) — the tail whose ratios softmax builds on.
+    pub fn crossing_probabilities(&self, v: &[f64]) -> Vec<f64> {
+        let vth = self.circuit.rest_threshold(v);
+        let s = self.circuit.params.sigma_v;
+        v.iter().map(|&vj| norm_cdf((vj - vth) / s)).collect()
+    }
+
+    /// Analytic WTA win distribution (Eq. 14): P_j / Σ_k P_k, ignoring the
+    /// (second-order) simultaneous-crossing tie-breaks.
+    pub fn analytic_win_distribution(&self, v: &[f64]) -> Vec<f64> {
+        let p = self.crossing_probabilities(v);
+        let total: f64 = p.iter().sum();
+        if total <= 0.0 {
+            return vec![0.0; v.len()];
+        }
+        p.iter().map(|&x| x / total).collect()
+    }
+}
+
+/// Softmax over f64 logits (reference for Eq. 14 comparisons).
+pub fn softmax64(z: &[f64]) -> Vec<f64> {
+    let m = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let e: Vec<f64> = z.iter().map(|&v| (v - m).exp()).collect();
+    let s: f64 = e.iter().sum();
+    e.iter().map(|&v| v / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(sigma_v: f64, vth0: f64) -> WtaLayer {
+        WtaLayer::new(WtaParams { sigma_v, vth0, ..Default::default() })
+    }
+
+    #[test]
+    fn outcome_bookkeeping() {
+        let mut o = WtaOutcome::new(3);
+        for w in [0, 1, 1, -1, 2, 1] {
+            o.record(w);
+        }
+        assert_eq!(o.counts, vec![1, 3, 1]);
+        assert_eq!(o.abstentions, 1);
+        assert_eq!(o.trials, 6);
+        assert_eq!(o.prediction(), 1);
+        assert_eq!(o.top_two(), (3, 1));
+    }
+
+    #[test]
+    fn prediction_tie_breaks_low() {
+        let mut o = WtaOutcome::new(3);
+        o.record(2);
+        o.record(1);
+        assert_eq!(o.prediction(), 1);
+    }
+
+    #[test]
+    fn empty_prediction_is_abstain() {
+        let o = WtaOutcome::new(3);
+        assert_eq!(o.prediction(), -1);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = WtaOutcome::new(2);
+        a.record(0);
+        let mut b = WtaOutcome::new(2);
+        b.record(1);
+        b.record(-1);
+        a.merge(&b);
+        assert_eq!(a.counts, vec![1, 1]);
+        assert_eq!(a.trials, 3);
+        assert_eq!(a.abstentions, 1);
+    }
+
+    #[test]
+    fn win_frequencies_approximate_softmax() {
+        // Eq. 14: the win distribution ≈ softmax of the normalized logits
+        // when the threshold sits at the softmax-matching depth.
+        //
+        // Mapping (DESIGN.md §6): v_j = σ_v·z_j/1.702 (κ = 1/1.702), and
+        // d log P/dz = (θ_z − z̄)/1.702², so slope 1 needs the rest
+        // threshold ≈ 1.702²·σ_v/1.702 = 1.702·σ_v above the mean logit.
+        let sigma_v = 0.02;
+        let z = [0.0f64, 0.6, 1.2];
+        let z_mean = 0.6;
+        let theta_z = z_mean + 1.702f64 * 1.702;
+        let v: Vec<f64> = z.iter().map(|&zi| zi * sigma_v / 1.702).collect();
+        let v_mean = v.iter().sum::<f64>() / v.len() as f64;
+        let vth0 = (theta_z - z_mean) * sigma_v / 1.702
+            - (v_mean - z_mean * sigma_v / 1.702); // rest = mean + vth0
+        let l = layer(sigma_v, vth0);
+        let mut g = GaussianSource::new(1);
+        let o = l.run(&v, 30_000, &mut g);
+        let f = o.frequencies();
+        let want = softmax64(&z.to_vec());
+        for (a, b) in f.iter().zip(&want) {
+            assert!((a - b).abs() < 0.06, "{f:?} vs {want:?}");
+        }
+        // Ranking must match exactly.
+        assert_eq!(o.prediction(), 2);
+        // And the analytic Eq. 14 distribution should agree even closer.
+        let analytic = l.analytic_win_distribution(&v);
+        for (a, b) in analytic.iter().zip(&want) {
+            assert!((a - b).abs() < 0.05, "{analytic:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn analytic_distribution_normalizes() {
+        let l = layer(0.02, 0.06);
+        let v = [0.0, 0.01, 0.02, 0.05];
+        let d = l.analytic_win_distribution(&v);
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(d[3] > d[0]);
+    }
+
+    #[test]
+    fn softmax64_matches_manual() {
+        let p = softmax64(&[0.0, (2.0f64).ln()]);
+        assert!((p[1] / p[0] - 2.0).abs() < 1e-12);
+    }
+}

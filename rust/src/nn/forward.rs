@@ -1,0 +1,255 @@
+//! Native forward passes over loaded weights.
+//!
+//! Two flavours:
+//! * [`ideal_forward`]/[`ideal_logits`] — float sigmoid/softmax, the
+//!   software reference the analog system emulates;
+//! * [`stochastic_logits`] — the *normalized-unit* stochastic forward
+//!   (binary hidden activations via z + σ_z·n > 0), statistically
+//!   identical to the physical crossbar simulation at the calibrated
+//!   point and to the L1/L2 HLO path (parity-tested in
+//!   rust/tests/engine_parity.rs).
+
+use super::weights::Weights;
+use crate::stats::GaussianSource;
+
+/// y[j] = Σ_i x_aug[i]·W[i,j] with the implicit bias row (x_aug = [x; 1]).
+pub fn affine_aug(x: &[f32], rows: usize, cols: usize, w: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len() + 1, rows);
+    debug_assert_eq!(out.len(), cols);
+    // Bias row first (last row of W).
+    let bias = &w[(rows - 1) * cols..rows * cols];
+    out.copy_from_slice(bias);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue; // binary activations are sparse — skip zero rows
+        }
+        let row = &w[i * cols..(i + 1) * cols];
+        if xi == 1.0 {
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += wv;
+            }
+        } else {
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xi * wv;
+            }
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax(z: &mut [f32]) {
+    let m = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in z.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in z.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Ideal float logits: sigmoid hidden layers, raw output affine.
+pub fn ideal_logits(w: &Weights, x: &[f32]) -> Vec<f32> {
+    let mut h: Vec<f32> = x.to_vec();
+    for l in 0..w.spec.num_layers() - 1 {
+        let (rows, cols, m) = w.layer(l);
+        let mut z = vec![0.0f32; cols];
+        affine_aug(&h, rows, cols, m, &mut z);
+        for v in z.iter_mut() {
+            *v = sigmoid(*v);
+        }
+        h = z;
+    }
+    let l = w.spec.num_layers() - 1;
+    let (rows, cols, m) = w.layer(l);
+    let mut z = vec![0.0f32; cols];
+    affine_aug(&h, rows, cols, m, &mut z);
+    z
+}
+
+/// Ideal float class probabilities.
+pub fn ideal_forward(w: &Weights, x: &[f32]) -> Vec<f32> {
+    let mut z = ideal_logits(w, x);
+    softmax(&mut z);
+    z
+}
+
+/// One stochastic pass through the hidden layers (normalized units):
+/// h = 1[z + σ_z·n > 0]; returns the output-layer logits.
+pub fn stochastic_logits(
+    w: &Weights,
+    x: &[f32],
+    sigma_z: f64,
+    gauss: &mut GaussianSource,
+) -> Vec<f32> {
+    let z1 = layer0_preactivation(w, x);
+    stochastic_logits_from_z1(w, &z1, sigma_z, gauss)
+}
+
+/// Deterministic layer-0 pre-activation z1 = [x;1]·W1.
+///
+/// Hot-path optimization (EXPERIMENTS.md §Perf iteration 1): the mean
+/// column current of the first crossbar is *fixed per image* — only the
+/// comparator noise resamples between trials.  Computing z1 once per
+/// request removes the largest matmul (72% of the network's MACs) from
+/// the per-trial path.
+pub fn layer0_preactivation(w: &Weights, x: &[f32]) -> Vec<f32> {
+    let (rows, cols, m) = w.layer(0);
+    let mut z = vec![0.0f32; cols];
+    affine_aug(x, rows, cols, m, &mut z);
+    z
+}
+
+/// Reusable per-thread buffers for the stochastic forward (§Perf
+/// iteration 3: a trial is ~20 µs — two Vec allocations per layer were
+/// ~11% of the profile).
+#[derive(Debug, Default, Clone)]
+pub struct TrialScratch {
+    h: Vec<f32>,
+    z: Vec<f32>,
+    /// Output logits (valid after `stochastic_logits_into`).
+    pub logits: Vec<f32>,
+}
+
+/// Stochastic pass given the precomputed layer-0 pre-activation.
+pub fn stochastic_logits_from_z1(
+    w: &Weights,
+    z1_mean: &[f32],
+    sigma_z: f64,
+    gauss: &mut GaussianSource,
+) -> Vec<f32> {
+    let mut scratch = TrialScratch::default();
+    stochastic_logits_into(w, z1_mean, sigma_z, gauss, &mut scratch);
+    scratch.logits
+}
+
+/// Allocation-free variant over caller-owned scratch buffers.
+pub fn stochastic_logits_into(
+    w: &Weights,
+    z1_mean: &[f32],
+    sigma_z: f64,
+    gauss: &mut GaussianSource,
+    s: &mut TrialScratch,
+) {
+    // (§Perf iteration 4 — a 6σ saturation shortcut skipping the noise
+    // draw for decided neurons — was tried and REVERTED: <1% measured
+    // gain; saturated units beyond 6σ_z = 10.2 z-units are rare.)
+    // Layer 0: binarize the cached mean with fresh noise.
+    s.h.clear();
+    s.h.extend(z1_mean.iter().map(|&z| {
+        if (z as f64) + sigma_z * gauss.next() > 0.0 {
+            1.0f32
+        } else {
+            0.0
+        }
+    }));
+    // Remaining hidden layers depend on the stochastic h — full recompute.
+    for l in 1..w.spec.num_layers() - 1 {
+        let (rows, cols, m) = w.layer(l);
+        s.z.resize(cols, 0.0);
+        affine_aug(&s.h, rows, cols, m, &mut s.z);
+        for v in s.z.iter_mut() {
+            let fired = (*v as f64) + sigma_z * gauss.next() > 0.0;
+            *v = if fired { 1.0 } else { 0.0 };
+        }
+        std::mem::swap(&mut s.h, &mut s.z);
+    }
+    let l = w.spec.num_layers() - 1;
+    let (rows, cols, m) = w.layer(l);
+    s.logits.resize(cols, 0.0);
+    affine_aug(&s.h, rows, cols, m, &mut s.logits);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::ModelSpec;
+
+    fn tiny_weights() -> Weights {
+        Weights::random(ModelSpec::new(vec![6, 5, 4, 3]), 7)
+    }
+
+    #[test]
+    fn affine_matches_naive() {
+        let w = tiny_weights();
+        let (rows, cols, m) = w.layer(0);
+        let x: Vec<f32> = (0..6).map(|i| i as f32 * 0.3).collect();
+        let mut out = vec![0.0; cols];
+        affine_aug(&x, rows, cols, m, &mut out);
+        for j in 0..cols {
+            let mut want = 0.0f32;
+            for i in 0..rows - 1 {
+                want += x[i] * m[i * cols + j];
+            }
+            want += m[(rows - 1) * cols + j]; // bias
+            assert!((out[j] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_is_distribution() {
+        let mut z = vec![1.0f32, 2.0, 3.0, 1000.0];
+        softmax(&mut z);
+        let s: f32 = z.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(z[3] > 0.99); // stability at large logits
+    }
+
+    #[test]
+    fn ideal_forward_shapes_and_simplex() {
+        let w = tiny_weights();
+        let x = vec![0.5f32; 6];
+        let p = ideal_forward(&w, &x);
+        assert_eq!(p.len(), 3);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn stochastic_expectation_matches_sigmoid() {
+        // One layer, one neuron: firing frequency ≈ Φ(z/σ_z) ≈ sigmoid(z).
+        let spec = ModelSpec::new(vec![1, 1]);
+        let mut w = Weights::random(spec, 1);
+        w.mats[0] = vec![1.5, 0.0]; // weight 1.5, bias 0
+        let mut g = GaussianSource::new(2);
+        // Single-layer net: stochastic_logits has no hidden layer; use the
+        // raw affine + manual binarization loop instead.
+        let n = 40_000;
+        let mut fired = 0;
+        for _ in 0..n {
+            let z = 1.5f64; // x = 1 → z = 1.5
+            if z + 1.702 * g.next() > 0.0 {
+                fired += 1;
+            }
+        }
+        let p = fired as f64 / n as f64;
+        let want = 1.0 / (1.0 + (-1.5f64).exp());
+        assert!((p - want).abs() < 0.015, "p={p} want={want}");
+    }
+
+    #[test]
+    fn stochastic_logits_binary_hiddens_affect_output_range() {
+        let w = tiny_weights();
+        let mut g = GaussianSource::new(3);
+        let x = vec![0.5f32; 6];
+        let z = stochastic_logits(&w, &x, 1.702, &mut g);
+        assert_eq!(z.len(), 3);
+        assert!(z.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn zero_noise_stochastic_is_deterministic() {
+        let w = tiny_weights();
+        let mut g1 = GaussianSource::new(4);
+        let mut g2 = GaussianSource::new(5);
+        let x = vec![0.3f32; 6];
+        let a = stochastic_logits(&w, &x, 0.0, &mut g1);
+        let b = stochastic_logits(&w, &x, 0.0, &mut g2);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,10 @@
+//! Neural-network layer (DESIGN.md §4.6): model definition, trained-weight
+//! loading, and the two native forward passes (ideal float & stochastic).
+
+pub mod forward;
+pub mod model;
+pub mod weights;
+
+pub use forward::{ideal_forward, ideal_logits, stochastic_logits};
+pub use model::ModelSpec;
+pub use weights::Weights;

@@ -1,0 +1,84 @@
+//! Model topology description (the paper's FCNN [784, 500, 300, 10]).
+
+/// Fully-connected network specification.
+///
+/// Layer `l` maps `widths[l]` features to `widths[l+1]` through an
+/// augmented weight matrix of shape `(widths[l] + 1, widths[l+1])` — the
+/// `+1` is the bias row, realized on hardware as one extra crossbar row
+/// driven by a constant-1 input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub widths: Vec<usize>,
+}
+
+impl ModelSpec {
+    pub fn new(widths: Vec<usize>) -> Self {
+        assert!(widths.len() >= 2, "need at least input and output widths");
+        Self { widths }
+    }
+
+    /// The paper's evaluation network.
+    pub fn paper() -> Self {
+        Self::new(vec![784, 500, 300, 10])
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.widths.len() - 1
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.widths[0]
+    }
+
+    pub fn output_dim(&self) -> usize {
+        *self.widths.last().unwrap()
+    }
+
+    /// Augmented weight-matrix shape of layer `l`: (fan_in + 1, fan_out).
+    pub fn layer_shape(&self, l: usize) -> (usize, usize) {
+        (self.widths[l] + 1, self.widths[l + 1])
+    }
+
+    /// Crossbar rows (devices per column) of layer `l` — the paper's N_col.
+    pub fn n_col(&self, l: usize) -> usize {
+        self.widths[l] + 1
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        (0..self.num_layers())
+            .map(|l| {
+                let (r, c) = self.layer_shape(l);
+                r * c
+            })
+            .sum()
+    }
+
+    /// Total MAC operations for one inference (for TOPS accounting; one
+    /// MAC = 2 ops by the usual convention).
+    pub fn macs_per_inference(&self) -> usize {
+        self.num_params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_network() {
+        let m = ModelSpec::paper();
+        assert_eq!(m.num_layers(), 3);
+        assert_eq!(m.layer_shape(0), (785, 500));
+        assert_eq!(m.layer_shape(1), (501, 300));
+        assert_eq!(m.layer_shape(2), (301, 10));
+        assert_eq!(m.num_params(), 785 * 500 + 501 * 300 + 301 * 10);
+        assert_eq!(m.n_col(2), 301);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_few_widths() {
+        ModelSpec::new(vec![10]);
+    }
+}

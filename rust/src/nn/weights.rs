@@ -1,0 +1,186 @@
+//! Trained-weight loading (`artifacts/weights/fcnn.{bin,json}`).
+//!
+//! Format contract with `python/compile/train.py::save_weights`: the .bin
+//! is the little-endian f32 concatenation of each augmented weight matrix
+//! in row-major order; the .json carries `layers` and `shapes`.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::model::ModelSpec;
+use crate::util::json::Json;
+
+/// Loaded network parameters.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub spec: ModelSpec,
+    /// Row-major augmented matrices, one per layer: shape (fan_in+1, fan_out).
+    pub mats: Vec<Vec<f32>>,
+    /// Ideal test accuracy recorded at training time (−1 if unknown).
+    pub ideal_test_accuracy: f64,
+}
+
+impl Weights {
+    /// Load from `<prefix>.bin` + `<prefix>.json`.
+    pub fn load(prefix: &Path) -> Result<Self> {
+        let json_path = prefix.with_extension("json");
+        let bin_path = prefix.with_extension("bin");
+        let meta = Json::parse(
+            &std::fs::read_to_string(&json_path)
+                .with_context(|| format!("reading {}", json_path.display()))?,
+        )?;
+        let layers: Vec<usize> = meta
+            .get("layers")
+            .and_then(Json::as_arr)
+            .context("weights meta: layers")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let shapes: Vec<(usize, usize)> = meta
+            .get("shapes")
+            .and_then(Json::as_arr)
+            .context("weights meta: shapes")?
+            .iter()
+            .map(|s| {
+                let r = s.idx(0).and_then(Json::as_usize).context("shape row")?;
+                let c = s.idx(1).and_then(Json::as_usize).context("shape col")?;
+                Ok((r, c))
+            })
+            .collect::<Result<_>>()?;
+        let spec = ModelSpec::new(layers);
+        ensure!(shapes.len() == spec.num_layers(), "shape count mismatch");
+        for (l, &(r, c)) in shapes.iter().enumerate() {
+            ensure!(
+                (r, c) == spec.layer_shape(l),
+                "layer {l} shape {:?} != spec {:?}",
+                (r, c),
+                spec.layer_shape(l)
+            );
+        }
+
+        let bytes = std::fs::read(&bin_path)
+            .with_context(|| format!("reading {}", bin_path.display()))?;
+        let expected = spec.num_params() * 4;
+        ensure!(
+            bytes.len() == expected,
+            "weights bin is {} bytes, expected {expected}",
+            bytes.len()
+        );
+        let mut mats = Vec::with_capacity(shapes.len());
+        let mut off = 0usize;
+        for &(r, c) in &shapes {
+            let n = r * c;
+            let mut m = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                m.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            mats.push(m);
+        }
+        let acc = meta
+            .get("ideal_test_accuracy")
+            .and_then(Json::as_f64)
+            .unwrap_or(-1.0);
+        let w = Self { spec, mats, ideal_test_accuracy: acc };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Sanity-check invariants (finite, inside the conductance clip range).
+    pub fn validate(&self) -> Result<()> {
+        for (l, m) in self.mats.iter().enumerate() {
+            for &v in m {
+                if !v.is_finite() {
+                    bail!("layer {l}: non-finite weight {v}");
+                }
+                if v.abs() > crate::device::W_CLIP as f32 + 1e-4 {
+                    bail!("layer {l}: weight {v} outside clip range");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Weight matrix of layer `l` as (rows, cols, data).
+    pub fn layer(&self, l: usize) -> (usize, usize, &[f32]) {
+        let (r, c) = self.spec.layer_shape(l);
+        (r, c, &self.mats[l])
+    }
+
+    /// Synthetic random weights for tests (uniform in [−1, 1]).
+    pub fn random(spec: ModelSpec, seed: u64) -> Self {
+        let mut rng = crate::stats::Rng::new(seed);
+        let mats = (0..spec.num_layers())
+            .map(|l| {
+                let (r, c) = spec.layer_shape(l);
+                (0..r * c)
+                    .map(|_| (rng.next_f64() * 2.0 - 1.0) as f32)
+                    .collect()
+            })
+            .collect();
+        Self { spec, mats, ideal_test_accuracy: -1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path, shapes: &[(usize, usize)], layers: &[usize]) {
+        let mut flat: Vec<u8> = Vec::new();
+        let mut v = 0.0f32;
+        for &(r, c) in shapes {
+            for _ in 0..r * c {
+                flat.extend_from_slice(&v.to_le_bytes());
+                v = (v + 0.125) % 2.0;
+            }
+        }
+        std::fs::write(dir.join("w.bin"), &flat).unwrap();
+        let shapes_json: Vec<String> =
+            shapes.iter().map(|(r, c)| format!("[{r},{c}]")).collect();
+        let layers_json: Vec<String> = layers.iter().map(|l| l.to_string()).collect();
+        std::fs::write(
+            dir.join("w.json"),
+            format!(
+                r#"{{"layers": [{}], "shapes": [{}], "ideal_test_accuracy": 0.9}}"#,
+                layers_json.join(","),
+                shapes_json.join(",")
+            ),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("raca_w_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir, &[(5, 3), (4, 2)], &[4, 3, 2]);
+        let w = Weights::load(&dir.join("w")).unwrap();
+        assert_eq!(w.spec.widths, vec![4, 3, 2]);
+        assert_eq!(w.mats[0].len(), 15);
+        assert_eq!(w.mats[1].len(), 8);
+        assert!((w.ideal_test_accuracy - 0.9).abs() < 1e-12);
+        assert_eq!(w.mats[0][1], 0.125);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("raca_wbad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // shapes say (5,3) but layers say [4,3] → expects (5,3)... make them disagree:
+        write_fixture(&dir, &[(9, 3)], &[4, 3]);
+        assert!(Weights::load(&dir.join("w")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn random_weights_validate() {
+        let w = Weights::random(ModelSpec::new(vec![6, 4, 2]), 1);
+        w.validate().unwrap();
+        assert_eq!(w.mats.len(), 2);
+        assert_eq!(w.mats[0].len(), 7 * 4);
+    }
+}

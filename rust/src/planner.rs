@@ -1,0 +1,127 @@
+//! Trial-budget planner: how many WTA decisions does a target accuracy
+//! need?  (The quantitative version of Fig. 6's "repeating the stochastic
+//! inference … could quickly improve the overall recognition accuracy".)
+//!
+//! Model: per trial the correct class wins with probability `p1` and the
+//! strongest confuser with `p2` (estimable from the ideal softmax or from
+//! measured win frequencies).  The majority vote errs when the confuser
+//! out-votes the truth; for k trials the normal approximation to the
+//! difference of the two counts gives
+//!
+//!   P(err) ≈ Φ(−√k · (p1 − p2) / √(p1 + p2 − (p1 − p2)²))
+//!
+//! which the planner inverts for k.  Also exposed: the coordinator's
+//! expected early-stop trial count under the same model.
+
+use crate::stats::erf::{norm_cdf, norm_ppf};
+
+/// Per-image vote statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct VoteModel {
+    /// Win probability of the true class per trial.
+    pub p_top: f64,
+    /// Win probability of the strongest runner-up.
+    pub p_second: f64,
+}
+
+impl VoteModel {
+    pub fn new(p_top: f64, p_second: f64) -> Self {
+        assert!(p_top > 0.0 && p_second >= 0.0 && p_top + p_second <= 1.0 + 1e-9);
+        Self { p_top, p_second }
+    }
+
+    /// Probability the k-trial majority vote picks the true class.
+    pub fn vote_accuracy(&self, k: usize) -> f64 {
+        if self.p_top <= self.p_second {
+            return 0.5; // degenerate: voting cannot separate them
+        }
+        let d = self.p_top - self.p_second;
+        let var = self.p_top + self.p_second - d * d;
+        if var <= 0.0 {
+            return 1.0;
+        }
+        norm_cdf((k as f64).sqrt() * d / var.sqrt())
+    }
+
+    /// Minimal trials for `target` vote accuracy (∞-safe cap at 10⁶).
+    pub fn trials_for_accuracy(&self, target: f64) -> Option<usize> {
+        assert!((0.5..1.0).contains(&target));
+        if self.p_top <= self.p_second {
+            return None;
+        }
+        let d = self.p_top - self.p_second;
+        let var = self.p_top + self.p_second - d * d;
+        let z = norm_ppf(target);
+        let k = (z * z * var / (d * d)).ceil() as usize;
+        Some(k.clamp(1, 1_000_000))
+    }
+
+    /// Expected trials until the Wilson early stopper (confidence c)
+    /// separates top from runner-up — approximated by solving the same
+    /// normal bound at confidence c.
+    pub fn expected_early_stop_trials(&self, confidence: f64, min_trials: u32) -> f64 {
+        match self.trials_for_accuracy(confidence.clamp(0.51, 0.9999)) {
+            Some(k) => (k as f64).max(min_trials as f64),
+            None => f64::INFINITY,
+        }
+    }
+}
+
+/// Derive a [`VoteModel`] from softmax probabilities (top two entries).
+pub fn vote_model_from_probs(probs: &[f64]) -> VoteModel {
+    let mut top = 0.0f64;
+    let mut second = 0.0f64;
+    for &p in probs {
+        if p > top {
+            second = top;
+            top = p;
+        } else if p > second {
+            second = p;
+        }
+    }
+    VoteModel::new(top, second)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_trials_more_accuracy() {
+        let m = VoteModel::new(0.4, 0.3);
+        assert!(m.vote_accuracy(64) > m.vote_accuracy(4));
+        assert!(m.vote_accuracy(1000) > 0.99);
+    }
+
+    #[test]
+    fn planner_inverts_accuracy() {
+        let m = VoteModel::new(0.45, 0.25);
+        for target in [0.9, 0.99, 0.999] {
+            let k = m.trials_for_accuracy(target).unwrap();
+            assert!(m.vote_accuracy(k) >= target - 0.01, "target {target} k {k}");
+            if k > 2 {
+                assert!(m.vote_accuracy(k / 4) < target, "k {k} not minimal-ish");
+            }
+        }
+    }
+
+    #[test]
+    fn easy_inputs_need_one_trial() {
+        let m = VoteModel::new(0.95, 0.02);
+        assert_eq!(m.trials_for_accuracy(0.9).unwrap(), 1);
+    }
+
+    #[test]
+    fn tied_inputs_unplannable() {
+        let m = VoteModel::new(0.3, 0.3);
+        assert!(m.trials_for_accuracy(0.9).is_none());
+        assert!(m.expected_early_stop_trials(0.95, 5).is_infinite());
+    }
+
+    #[test]
+    fn from_probs_picks_top_two() {
+        let m = vote_model_from_probs(&[0.1, 0.5, 0.2, 0.2]);
+        assert!((m.p_top - 0.5).abs() < 1e-12);
+        assert!((m.p_second - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,251 @@
+//! Artifact store: locate, validate and lazily compile `artifacts/*`.
+//!
+//! `make artifacts` (python, build-time) writes the manifest; this module
+//! is the only place that knows the directory layout.  Executables are
+//! compiled and weights uploaded on first use, then cached for the store's
+//! lifetime — HLO→machine code happens once, never on the request path.
+//!
+//! The store (like everything PJRT in the `xla` crate) is **not Send**:
+//! it lives on the engine worker thread that created it (see
+//! `engine::xla`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::RtClient;
+use super::executor::{IdealExecutor, TrialExecutor, WeightBuffers};
+use crate::nn::Weights;
+use crate::util::json::Json;
+
+pub const FEATURES: usize = 784;
+pub const CLASSES: usize = 10;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Batched-trial executables available (rows per execute).
+    pub trial_batches: Vec<usize>,
+    pub ideal_batches: Vec<usize>,
+    /// Normalized comparator noise std at the calibrated point (1.702).
+    pub sigma_z: f64,
+    /// Normalized WTA rest threshold corresponding to V_th0 = 0.05 V.
+    pub theta_norm: f64,
+    /// Ideal (software) test accuracy recorded by the trainer.
+    pub ideal_test_accuracy: f64,
+    /// Layer widths, e.g. [784, 500, 300, 10].
+    pub layers: Vec<usize>,
+    /// Per-layer calibrated read voltages [V] (for the hw cost model).
+    pub vr_per_layer: Vec<f64>,
+    /// Readout bandwidth Δf [Hz].
+    pub delta_f: f64,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let dp = j.get("design_point").context("manifest: design_point missing")?;
+        let usize_arr = |v: &Json| -> Vec<usize> {
+            v.as_arr()
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default()
+        };
+        let f64_arr = |v: &Json| -> Vec<f64> {
+            v.as_arr()
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default()
+        };
+        Ok(Self {
+            trial_batches: j.get("trial_batches").map(usize_arr).unwrap_or_default(),
+            ideal_batches: j.get("ideal_batches").map(usize_arr).unwrap_or_default(),
+            sigma_z: dp
+                .get("sigma_z")
+                .and_then(Json::as_f64)
+                .context("manifest: sigma_z")?,
+            theta_norm: dp
+                .get("theta_norm")
+                .and_then(Json::as_f64)
+                .context("manifest: theta_norm")?,
+            ideal_test_accuracy: j
+                .get("ideal_test_accuracy")
+                .and_then(Json::as_f64)
+                .unwrap_or(-1.0),
+            layers: dp.get("layers").map(usize_arr).context("manifest: layers")?,
+            vr_per_layer: dp.get("vr_per_layer").map(f64_arr).unwrap_or_default(),
+            delta_f: dp.get("delta_f").and_then(Json::as_f64).unwrap_or(1e9),
+        })
+    }
+}
+
+/// Compiled-executable + uploaded-weight cache over an artifact directory.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub weights: Weights,
+    client: RtClient,
+    weight_bufs: RefCell<Option<Rc<WeightBuffers>>>,
+    trials: RefCell<HashMap<usize, Rc<TrialExecutor>>>,
+    ideals: RefCell<HashMap<usize, Rc<IdealExecutor>>>,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory (default resolution: $RACA_ARTIFACTS,
+    /// then ./artifacts walking up, then the crate root).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        let weights = Weights::load(&dir.join("weights").join("fcnn"))?;
+        if weights.spec.widths != manifest.layers {
+            bail!(
+                "weights topology {:?} disagrees with manifest {:?}",
+                weights.spec.widths,
+                manifest.layers
+            );
+        }
+        Ok(Self {
+            dir,
+            manifest,
+            weights,
+            client: RtClient::new()?,
+            weight_bufs: RefCell::new(None),
+            trials: RefCell::new(HashMap::new()),
+            ideals: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Resolve the default artifact directory.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("RACA_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        // Fall back to the crate-root artifacts dir (tests run from target/).
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Self::open(Self::default_dir())
+    }
+
+    pub fn client(&self) -> &RtClient {
+        &self.client
+    }
+
+    /// Path to a dataset prefix inside the artifact dir.
+    pub fn data_prefix(&self, split: &str) -> PathBuf {
+        self.dir.join("data").join(split)
+    }
+
+    fn weight_buffers(&self) -> Result<Rc<WeightBuffers>> {
+        if let Some(b) = self.weight_bufs.borrow().as_ref() {
+            return Ok(b.clone());
+        }
+        let bufs = WeightBuffers::upload(self.client.raw(), &self.weights)?;
+        *self.weight_bufs.borrow_mut() = Some(bufs.clone());
+        Ok(bufs)
+    }
+
+    /// Trial executable for an exact batch size (compiled once, cached).
+    pub fn trial(&self, batch: usize) -> Result<Rc<TrialExecutor>> {
+        if let Some(e) = self.trials.borrow().get(&batch) {
+            return Ok(e.clone());
+        }
+        if !self.manifest.trial_batches.contains(&batch) {
+            bail!(
+                "no trial artifact for batch {batch}; available: {:?}",
+                self.manifest.trial_batches
+            );
+        }
+        let path = self.dir.join(format!("trial_fwd_b{batch}.hlo.txt"));
+        log::info!("compiling {}", path.display());
+        let exe = self.client.compile_hlo_text(&path)?;
+        let ex = Rc::new(TrialExecutor::new(
+            exe,
+            self.client.raw().clone(),
+            self.weight_buffers()?,
+            batch,
+            FEATURES,
+        ));
+        self.trials.borrow_mut().insert(batch, ex.clone());
+        Ok(ex)
+    }
+
+    /// Ideal (float software) executable for an exact batch size.
+    pub fn ideal(&self, batch: usize) -> Result<Rc<IdealExecutor>> {
+        if let Some(e) = self.ideals.borrow().get(&batch) {
+            return Ok(e.clone());
+        }
+        if !self.manifest.ideal_batches.contains(&batch) {
+            bail!(
+                "no ideal artifact for batch {batch}; available: {:?}",
+                self.manifest.ideal_batches
+            );
+        }
+        let path = self.dir.join(format!("ideal_fwd_b{batch}.hlo.txt"));
+        log::info!("compiling {}", path.display());
+        let exe = self.client.compile_hlo_text(&path)?;
+        let ex = Rc::new(IdealExecutor::new(
+            exe,
+            self.client.raw().clone(),
+            self.weight_buffers()?,
+            batch,
+            FEATURES,
+            CLASSES,
+        ));
+        self.ideals.borrow_mut().insert(batch, ex.clone());
+        Ok(ex)
+    }
+
+    /// Largest available trial batch ≤ `cap` (the batcher's packing size).
+    pub fn best_trial_batch(&self, cap: usize) -> Option<usize> {
+        self.manifest
+            .trial_batches
+            .iter()
+            .copied()
+            .filter(|&b| b <= cap.max(1))
+            .max()
+            .or_else(|| self.manifest.trial_batches.iter().copied().min())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "design_point": {"layers": [784,500,300,10], "sigma_z": 1.702,
+                        "theta_norm": 3.0, "delta_f": 1e9,
+                        "vr_per_layer": [0.01, 0.012, 0.015]},
+      "trial_batches": [1, 32], "ideal_batches": [1, 256],
+      "ideal_test_accuracy": 0.97}"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.layers, vec![784, 500, 300, 10]);
+        assert_eq!(m.trial_batches, vec![1, 32]);
+        assert!((m.sigma_z - 1.702).abs() < 1e-12);
+        assert_eq!(m.vr_per_layer.len(), 3);
+    }
+
+    #[test]
+    fn manifest_missing_fields_rejected() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"design_point": {}}"#).is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! PJRT CPU client wrapper.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (neither `Send` nor
+//! `Sync`), so all PJRT state lives on whichever thread created it.  The
+//! serving architecture therefore gives each engine worker a dedicated OS
+//! thread that owns its own `RtClient` + compiled executables and speaks
+//! to the coordinator over channels (see `engine::xla`).
+
+use anyhow::{Context, Result};
+
+/// Thin wrapper over the PJRT CPU client (thread-local by construction).
+pub struct RtClient {
+    inner: xla::PjRtClient,
+}
+
+impl RtClient {
+    /// Create a client on the current thread.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { inner: client })
+    }
+
+    /// Backwards-compatible alias used by single-threaded tools.
+    pub fn global() -> Result<Self> {
+        Self::new()
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    /// Load an HLO-text file and compile it to a PJRT executable.
+    pub fn compile_hlo_text(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+}

@@ -1,0 +1,193 @@
+//! Typed wrappers around the compiled RACA executables.
+//!
+//! Artifact contract (DESIGN.md §7):
+//!
+//! * `trial_fwd_b{B}`: `(x f32[B,784], w1, w2, w3, seed u32, σ_z f32,
+//!   θ f32) → (winner i32[B],)` — one stochastic inference trial.
+//! * `ideal_fwd_b{B}`: `(x f32[B,784], w1, w2, w3) → (probs f32[B,10],)`.
+//!
+//! Weights are **runtime parameters** (HLO text elides big constants, so
+//! they cannot be baked).  They are uploaded once as device-resident PJRT
+//! buffers and shared across executors via [`WeightBuffers`]; the hot path
+//! only uploads the per-call `x`/`seed`/`σ_z`/`θ` and uses `execute_b`.
+//!
+//! Outputs are 1-tuples (jax lowered with `return_tuple=True`), hence the
+//! `to_tuple1` unwrap.
+
+use std::rc::Rc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::nn::Weights;
+
+/// Device-resident weight buffers (one per layer), shared by executors.
+pub struct WeightBuffers {
+    bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl WeightBuffers {
+    /// Upload all layers of `w` to the device owned by `client`.
+    pub fn upload(client: &xla::PjRtClient, w: &Weights) -> Result<Rc<Self>> {
+        let mut bufs = Vec::with_capacity(w.spec.num_layers());
+        for l in 0..w.spec.num_layers() {
+            let (rows, cols, data) = w.layer(l);
+            let buf = client
+                .buffer_from_host_buffer::<f32>(data, &[rows, cols], None)
+                .with_context(|| format!("uploading layer {l} weights"))?;
+            bufs.push(buf);
+        }
+        Ok(Rc::new(Self { bufs }))
+    }
+
+    pub fn layers(&self) -> &[xla::PjRtBuffer] {
+        &self.bufs
+    }
+}
+
+/// Generic compiled-executable handle.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    /// Human-readable identifier (artifact file stem) for error messages.
+    pub name: String,
+}
+
+impl Executor {
+    pub fn new(exe: xla::PjRtLoadedExecutable, name: impl Into<String>) -> Self {
+        Self { exe, name: name.into() }
+    }
+
+    /// Execute with device buffers, returning the unwrapped 1-tuple.
+    pub fn run1_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::Literal> {
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        lit.to_tuple1()
+            .with_context(|| format!("unwrapping 1-tuple output of {}", self.name))
+    }
+
+    /// Execute with literal arguments (smoke tests / tools).
+    pub fn run1(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        lit.to_tuple1()
+            .with_context(|| format!("unwrapping 1-tuple output of {}", self.name))
+    }
+}
+
+/// One stochastic inference trial over a fixed batch size.
+pub struct TrialExecutor {
+    inner: Executor,
+    client: xla::PjRtClient,
+    weights: Rc<WeightBuffers>,
+    /// Rows per execution (images × trials packed by the batcher).
+    pub batch: usize,
+    /// Input features per row (784).
+    pub features: usize,
+}
+
+impl TrialExecutor {
+    pub fn new(
+        exe: xla::PjRtLoadedExecutable,
+        client: xla::PjRtClient,
+        weights: Rc<WeightBuffers>,
+        batch: usize,
+        features: usize,
+    ) -> Self {
+        Self {
+            inner: Executor::new(exe, format!("trial_fwd_b{batch}")),
+            client,
+            weights,
+            batch,
+            features,
+        }
+    }
+
+    /// Run one trial batch.
+    ///
+    /// `x` is row-major `[batch, features]`; `sigma_z` is the normalized
+    /// comparator noise std (1.702/snr_scale); `theta` the normalized WTA
+    /// rest threshold.  Returns one winner index per row (−1 = abstain).
+    pub fn run(&self, x: &[f32], seed: u32, sigma_z: f32, theta: f32) -> Result<Vec<i32>> {
+        ensure!(
+            x.len() == self.batch * self.features,
+            "trial batch expects {}x{} inputs, got {}",
+            self.batch,
+            self.features,
+            x.len()
+        );
+        let xb = self
+            .client
+            .buffer_from_host_buffer::<f32>(x, &[self.batch, self.features], None)?;
+        let seed_b = self.client.buffer_from_host_buffer::<u32>(&[seed], &[], None)?;
+        let sig_b = self.client.buffer_from_host_buffer::<f32>(&[sigma_z], &[], None)?;
+        let th_b = self.client.buffer_from_host_buffer::<f32>(&[theta], &[], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&xb];
+        args.extend(self.weights.layers().iter());
+        args.push(&seed_b);
+        args.push(&sig_b);
+        args.push(&th_b);
+        let out = self.inner.run1_buffers(&args)?;
+        let winners = out.to_vec::<i32>()?;
+        ensure!(winners.len() == self.batch, "winner count mismatch");
+        Ok(winners)
+    }
+}
+
+/// Float software forward (`ideal_fwd`): batch of images → class probs.
+pub struct IdealExecutor {
+    inner: Executor,
+    client: xla::PjRtClient,
+    weights: Rc<WeightBuffers>,
+    pub batch: usize,
+    pub features: usize,
+    pub classes: usize,
+}
+
+impl IdealExecutor {
+    pub fn new(
+        exe: xla::PjRtLoadedExecutable,
+        client: xla::PjRtClient,
+        weights: Rc<WeightBuffers>,
+        batch: usize,
+        features: usize,
+        classes: usize,
+    ) -> Self {
+        Self {
+            inner: Executor::new(exe, format!("ideal_fwd_b{batch}")),
+            client,
+            weights,
+            batch,
+            features,
+            classes,
+        }
+    }
+
+    /// Returns row-major `[batch, classes]` probabilities.
+    pub fn run(&self, x: &[f32]) -> Result<Vec<f32>> {
+        ensure!(
+            x.len() == self.batch * self.features,
+            "ideal batch expects {}x{} inputs, got {}",
+            self.batch,
+            self.features,
+            x.len()
+        );
+        let xb = self
+            .client
+            .buffer_from_host_buffer::<f32>(x, &[self.batch, self.features], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&xb];
+        args.extend(self.weights.layers().iter());
+        let out = self.inner.run1_buffers(&args)?;
+        let probs = out.to_vec::<f32>()?;
+        ensure!(probs.len() == self.batch * self.classes, "prob count mismatch");
+        Ok(probs)
+    }
+}

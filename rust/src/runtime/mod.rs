@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin).  The interchange format
+//! is HLO *text* — see DESIGN.md §7 and /opt/xla-example/README.md for why
+//! serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactStore, Manifest};
+pub use client::RtClient;
+pub use executor::{Executor, TrialExecutor, IdealExecutor};

@@ -1,0 +1,82 @@
+//! Binomial confidence intervals — the coordinator's early-stopping rule
+//! and the accuracy error bars in Fig. 6 both need them.
+
+use super::erf::norm_ppf;
+
+/// Wilson score interval for a binomial proportion.
+///
+/// Returns `(lo, hi)` for `successes` out of `n` at confidence `conf`
+/// (e.g. 0.95).  Robust for small n and extreme p — unlike the normal
+/// approximation interval.
+pub fn wilson_interval(successes: u64, n: u64, conf: f64) -> (f64, f64) {
+    if n == 0 {
+        return (0.0, 1.0);
+    }
+    let z = norm_ppf(0.5 + conf / 2.0);
+    let nf = n as f64;
+    let p = successes as f64 / nf;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / nf;
+    let center = (p + z2 / (2.0 * nf)) / denom;
+    let half = z * (p * (1.0 - p) / nf + z2 / (4.0 * nf * nf)).sqrt() / denom;
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+/// Is class `lead` statistically ahead of `runner_up` given vote counts?
+///
+/// Conservative pairwise rule used by the coordinator's early stopper:
+/// treat the lead-vs-runner-up votes as a binomial and require the Wilson
+/// lower bound of lead/(lead+runner_up) to clear 0.5.
+pub fn lead_is_decided(lead_votes: u64, runner_up_votes: u64, conf: f64) -> bool {
+    let n = lead_votes + runner_up_votes;
+    if n == 0 {
+        return false;
+    }
+    let (lo, _) = wilson_interval(lead_votes, n, conf);
+    lo > 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_contains_p_hat() {
+        let (lo, hi) = wilson_interval(80, 100, 0.95);
+        assert!(lo < 0.8 && 0.8 < hi);
+        assert!(lo > 0.70 && hi < 0.88);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        assert_eq!(wilson_interval(0, 0, 0.95), (0.0, 1.0));
+        let (lo, hi) = wilson_interval(0, 10, 0.95);
+        assert_eq!(lo, 0.0);
+        assert!(hi > 0.0 && hi < 0.4);
+        let (lo, hi) = wilson_interval(10, 10, 0.95);
+        assert!(lo > 0.6);
+        assert_eq!(hi, 1.0);
+    }
+
+    #[test]
+    fn narrower_with_more_samples() {
+        let (lo1, hi1) = wilson_interval(60, 100, 0.95);
+        let (lo2, hi2) = wilson_interval(600, 1000, 0.95);
+        assert!(hi2 - lo2 < hi1 - lo1);
+    }
+
+    #[test]
+    fn decided_needs_margin() {
+        assert!(!lead_is_decided(3, 2, 0.95));
+        assert!(!lead_is_decided(6, 4, 0.95));
+        assert!(lead_is_decided(30, 5, 0.95));
+        assert!(!lead_is_decided(0, 0, 0.95));
+    }
+
+    #[test]
+    fn higher_confidence_is_harder() {
+        // 14 vs 6 is decided at 90% but not at 99.9%.
+        assert!(lead_is_decided(14, 6, 0.90));
+        assert!(!lead_is_decided(14, 6, 0.999));
+    }
+}

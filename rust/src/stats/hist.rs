@@ -1,0 +1,107 @@
+//! Fixed-bin histogram (figure harnesses: noise distributions, traces).
+
+/// Uniform-bin histogram over [lo, hi); out-of-range samples clamp to the
+/// edge bins (the figure code wants totals to be conserved).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self { lo, hi, counts: vec![0; bins], total: 0 }
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1) as usize;
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Bin centers.
+    pub fn centers(&self) -> Vec<f64> {
+        let n = self.counts.len();
+        let w = (self.hi - self.lo) / n as f64;
+        (0..n).map(|i| self.lo + (i as f64 + 0.5) * w).collect()
+    }
+
+    /// Probability density estimate per bin.
+    pub fn density(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        let norm = (self.total.max(1)) as f64 * w;
+        self.counts.iter().map(|&c| c as f64 / norm).collect()
+    }
+
+    /// Empirical mean from binned data.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        self.centers()
+            .iter()
+            .zip(&self.counts)
+            .map(|(c, &n)| c * n as f64)
+            .sum::<f64>()
+            / self.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_and_totals() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert_eq!(h.total, 10);
+        assert!(h.counts.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.add(-5.0);
+        h.add(7.0);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[3], 1);
+        assert_eq!(h.total, 2);
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        let mut h = Histogram::new(-4.0, 4.0, 64);
+        let mut g = crate::stats::GaussianSource::new(3);
+        for _ in 0..50_000 {
+            h.add(g.next());
+        }
+        let w = 8.0 / 64.0;
+        let integral: f64 = h.density().iter().map(|d| d * w).sum();
+        assert!((integral - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gaussian_histogram_mean() {
+        let mut h = Histogram::new(-6.0, 6.0, 128);
+        let mut g = crate::stats::GaussianSource::new(4);
+        for _ in 0..100_000 {
+            h.add(g.sample(1.5, 0.5));
+        }
+        assert!((h.mean() - 1.5).abs() < 0.01);
+    }
+}

@@ -1,0 +1,94 @@
+//! Two-sample Kolmogorov–Smirnov test — used by the engine-parity suite
+//! to compare whole *distributions* (not just means) across engines.
+
+/// KS statistic D = sup |F1(x) − F2(x)| for two samples.
+pub fn ks_statistic(a: &mut [f64], b: &mut [f64]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty());
+    a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let (mut i, mut j) = (0usize, 0usize);
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let mut d: f64 = 0.0;
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            i += 1;
+        } else {
+            j += 1;
+        }
+        d = d.max((i as f64 / na - j as f64 / nb).abs());
+    }
+    d
+}
+
+/// Approximate p-value for the two-sample KS statistic (asymptotic
+/// Kolmogorov distribution; good for n ≳ 35).
+pub fn ks_pvalue(d: f64, n1: usize, n2: usize) -> f64 {
+    let n = (n1 * n2) as f64 / (n1 + n2) as f64;
+    let lambda = (n.sqrt() + 0.12 + 0.11 / n.sqrt()) * d;
+    // P = 2 Σ (−1)^{k−1} e^{−2 k² λ²}
+    let mut p = 0.0;
+    let mut sign = 1.0;
+    for k in 1..=100 {
+        let term = (-2.0 * (k as f64) * (k as f64) * lambda * lambda).exp();
+        p += sign * term;
+        sign = -sign;
+        if term < 1e-10 {
+            break;
+        }
+    }
+    (2.0 * p).clamp(0.0, 1.0)
+}
+
+/// Convenience: do two samples plausibly come from the same distribution?
+pub fn same_distribution(a: &[f64], b: &[f64], alpha: f64) -> bool {
+    let mut a = a.to_vec();
+    let mut b = b.to_vec();
+    let d = ks_statistic(&mut a, &mut b);
+    ks_pvalue(d, a.len(), b.len()) > alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::GaussianSource;
+
+    fn normals(seed: u64, n: usize, mu: f64, sd: f64) -> Vec<f64> {
+        let mut g = GaussianSource::new(seed);
+        (0..n).map(|_| g.sample(mu, sd)).collect()
+    }
+
+    #[test]
+    fn identical_distributions_pass() {
+        let a = normals(1, 3000, 0.0, 1.0);
+        let b = normals(2, 3000, 0.0, 1.0);
+        assert!(same_distribution(&a, &b, 0.01));
+    }
+
+    #[test]
+    fn shifted_distributions_fail() {
+        let a = normals(3, 3000, 0.0, 1.0);
+        let b = normals(4, 3000, 0.4, 1.0);
+        assert!(!same_distribution(&a, &b, 0.01));
+    }
+
+    #[test]
+    fn scaled_distributions_fail() {
+        let a = normals(5, 4000, 0.0, 1.0);
+        let b = normals(6, 4000, 0.0, 1.6);
+        assert!(!same_distribution(&a, &b, 0.01));
+    }
+
+    #[test]
+    fn statistic_bounds() {
+        let mut a = vec![1.0, 2.0, 3.0];
+        let mut b = vec![10.0, 11.0];
+        let d = ks_statistic(&mut a, &mut b);
+        assert!((d - 1.0).abs() < 1e-12, "disjoint supports → D = 1");
+    }
+
+    #[test]
+    fn pvalue_monotone_in_d() {
+        assert!(ks_pvalue(0.01, 1000, 1000) > ks_pvalue(0.1, 1000, 1000));
+        assert!(ks_pvalue(0.5, 1000, 1000) < 1e-6);
+    }
+}

@@ -1,0 +1,22 @@
+//! Statistics substrate (DESIGN.md §4.1).
+//!
+//! The offline vendor set has no `rand`/`statrs`, so the simulator's
+//! randomness and special functions live here: a counter-free xoshiro256++
+//! PRNG, Gaussian sampling, `erf`, histograms, summaries and binomial
+//! confidence intervals.  Everything is deterministic given a seed —
+//! figure regeneration is reproducible bit-for-bit.
+
+pub mod ci;
+pub mod erf;
+pub mod gauss;
+pub mod hist;
+pub mod ks;
+pub mod rng;
+pub mod summary;
+
+pub use ci::wilson_interval;
+pub use erf::{erf, erfc, norm_cdf, probit_sigmoid};
+pub use gauss::GaussianSource;
+pub use hist::Histogram;
+pub use rng::Rng;
+pub use summary::Summary;

@@ -1,0 +1,122 @@
+//! Minimal benchmark harness (no criterion in the offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! timed iterations, mean ± std, and throughput reporting.  Results are
+//! also appended to `results/bench.csv` for the §Perf log.
+
+use std::time::{Duration, Instant};
+
+use crate::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+    /// Optional work units per iteration (for ops/s reporting).
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn units_per_sec(&self) -> f64 {
+        self.units_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:44} {:>10.3?} ±{:>9.3?} (min {:>9.3?}, {} iters",
+            self.name, self.mean, self.std, self.min, self.iters
+        )?;
+        if self.units_per_iter > 0.0 {
+            write!(f, ", {:.1} units/s", self.units_per_sec())?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench_units<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    units_per_iter: f64,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    let mut min = Duration::MAX;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        s.add(dt.as_secs_f64());
+        min = min.min(dt);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(s.mean()),
+        std: Duration::from_secs_f64(if s.count() > 1 { s.std() } else { 0.0 }),
+        min,
+        units_per_iter,
+    };
+    println!("{r}");
+    append_csv(&r);
+    r
+}
+
+/// Time `f` (no unit accounting).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> BenchResult {
+    bench_units(name, warmup, iters, 0.0, f)
+}
+
+fn append_csv(r: &BenchResult) {
+    let dir = std::path::PathBuf::from(
+        std::env::var("RACA_RESULTS").unwrap_or_else(|_| "results".into()),
+    );
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join("bench.csv");
+    let new = !path.exists();
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        use std::io::Write;
+        if new {
+            let _ = writeln!(f, "name,iters,mean_s,std_s,min_s,units_per_iter");
+        }
+        let _ = writeln!(
+            f,
+            "{},{},{:.9},{:.9},{:.9},{}",
+            r.name,
+            r.iters,
+            r.mean.as_secs_f64(),
+            r.std.as_secs_f64(),
+            r.min.as_secs_f64(),
+            r.units_per_iter
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench_units("spin", 1, 5, 1000.0, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.units_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! Tiny stderr logger backend for the `log` facade (no env_logger offline).
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger {
+    level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:5}] {}: {}", record.level(), record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; level from `RACA_LOG` (error..trace, default info).
+pub fn init() {
+    let level = match std::env::var("RACA_LOG").as_deref() {
+        Ok("trace") => Level::Trace,
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    };
+    let logger = Box::leak(Box::new(StderrLogger { level }));
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(LevelFilter::Trace);
+    }
+}

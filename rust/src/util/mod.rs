@@ -1,0 +1,6 @@
+//! Small self-contained utilities (the offline build has no serde/rand/clap).
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod table;

@@ -1,0 +1,155 @@
+//! Coordinator integration tests: server lifecycle, fairness, early
+//! stopping, backpressure and failure injection.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+use raca::coordinator::{InferRequest, Scheduler, SchedulerConfig, Server, TrialRunner};
+use raca::engine::{NativeEngine, TrialParams};
+use raca::nn::{ModelSpec, Weights};
+
+fn native() -> NativeEngine {
+    let w = Arc::new(Weights::random(ModelSpec::new(vec![784, 24, 10]), 5));
+    NativeEngine::new(w, 17)
+}
+
+#[test]
+fn server_serves_many_concurrent_clients() {
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = 16;
+    let server = Server::start(native(), cfg);
+    let mut joins = Vec::new();
+    for t in 0..6 {
+        let c = server.client();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..10 {
+                let x = vec![((t * 10 + i) % 7) as f32 / 7.0; 784];
+                let r = c.classify(x, 6, 0.0).expect("classify");
+                assert_eq!(r.trials_used, 6);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = server.metrics().snapshot();
+    assert_eq!(m.requests_completed, 60);
+    assert_eq!(m.trials_executed, 360);
+    assert!(m.fill_ratio(16) > 0.5, "fill {:.2}", m.fill_ratio(16));
+}
+
+#[test]
+fn early_stopping_saves_trials_on_decisive_inputs() {
+    // Decisive network: one class always wins → early stop at min_trials.
+    let spec = ModelSpec::new(vec![784, 8, 10]);
+    let mut w = Weights::random(spec, 1);
+    let last = w.mats.len() - 1;
+    for row in 0..9 {
+        w.mats[last][row * 10 + 3] = 4.0;
+    }
+    let engine = NativeEngine::new(Arc::new(w), 2);
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = 32;
+    cfg.min_trials = 5;
+    let mut s = Scheduler::new(engine, cfg, raca::coordinator::Metrics::new());
+    s.submit(InferRequest::new(1, vec![0.5; 784]).with_budget(100, 0.95)).unwrap();
+    let done = s.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].prediction, 3);
+    assert!(
+        done[0].trials_used < 40,
+        "expected early stop, used {}",
+        done[0].trials_used
+    );
+}
+
+#[test]
+fn zero_confidence_disables_early_stop() {
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = 8;
+    let mut s = Scheduler::new(native(), cfg, raca::coordinator::Metrics::new());
+    s.submit(InferRequest::new(1, vec![0.4; 784]).with_budget(23, 0.0)).unwrap();
+    let done = s.run_to_completion().unwrap();
+    assert_eq!(done[0].trials_used, 23);
+}
+
+/// Engine wrapper that fails the first `fail_n` batches.
+#[derive(Clone)]
+struct FlakyEngine {
+    inner: NativeEngine,
+    fails_left: Arc<AtomicU64>,
+}
+
+impl TrialRunner for FlakyEngine {
+    fn run(&self, x: &[f32], rows: usize, seed: u32, p: TrialParams) -> Result<Vec<i32>> {
+        if self.fails_left.load(Ordering::Relaxed) > 0 {
+            self.fails_left.fetch_sub(1, Ordering::Relaxed);
+            anyhow::bail!("injected engine failure");
+        }
+        self.inner.run(x, rows, seed, p)
+    }
+
+    fn preferred_batch(&self) -> usize {
+        8
+    }
+}
+
+#[test]
+fn failure_injection_batches_retry_without_losing_requests() {
+    let flaky = FlakyEngine { inner: native(), fails_left: Arc::new(AtomicU64::new(2)) };
+    let metrics = raca::coordinator::Metrics::new();
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = 8;
+    let mut s = Scheduler::new(flaky, cfg, metrics.clone());
+    for i in 0..3 {
+        s.submit(InferRequest::new(i, vec![0.2; 784]).with_budget(7, 0.0)).unwrap();
+    }
+    let done = s.run_to_completion().unwrap();
+    assert_eq!(done.len(), 3);
+    for r in &done {
+        assert_eq!(r.trials_used, 7, "failed batches must not burn budget");
+    }
+    assert_eq!(metrics.snapshot().engine_errors, 2);
+}
+
+#[test]
+fn persistent_engine_failure_surfaces_error() {
+    let flaky = FlakyEngine { inner: native(), fails_left: Arc::new(AtomicU64::new(u64::MAX)) };
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = 8;
+    let mut s = Scheduler::new(flaky, cfg, raca::coordinator::Metrics::new());
+    s.submit(InferRequest::new(1, vec![0.2; 784]).with_budget(4, 0.0)).unwrap();
+    assert!(s.run_to_completion().is_err());
+}
+
+#[test]
+fn latency_is_recorded() {
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = 4;
+    let server = Server::start(native(), cfg);
+    let c = server.client();
+    for _ in 0..5 {
+        c.classify(vec![0.1; 784], 4, 0.0).unwrap();
+    }
+    let m = server.metrics().snapshot();
+    assert!(m.latency_p50_us > 0);
+    assert!(m.latency_p99_us >= m.latency_p50_us);
+}
+
+#[test]
+fn mixed_budgets_complete_in_any_interleaving() {
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = 16;
+    let mut s = Scheduler::new(native(), cfg, raca::coordinator::Metrics::new());
+    let budgets = [1u32, 64, 3, 17, 32, 2];
+    for (i, &b) in budgets.iter().enumerate() {
+        s.submit(InferRequest::new(i as u64, vec![0.3; 784]).with_budget(b, 0.0)).unwrap();
+    }
+    let mut done = s.run_to_completion().unwrap();
+    done.sort_by_key(|r| r.id);
+    assert_eq!(done.len(), budgets.len());
+    for (r, &b) in done.iter().zip(&budgets) {
+        assert_eq!(r.trials_used, b);
+    }
+}

@@ -1,0 +1,249 @@
+//! Cross-engine parity: the three implementations of the RACA trial
+//! (native normalized, physical SI-unit, AOT-compiled XLA) must be
+//! statistically interchangeable at the calibrated design point, and the
+//! ideal-forward paths must agree numerically.
+//!
+//! Requires `make artifacts` (skips gracefully if missing so `cargo test`
+//! stays runnable on a fresh checkout).
+
+use std::sync::Arc;
+
+use raca::dataset::Dataset;
+use raca::engine::{NativeEngine, PhysicalEngine, TrialParams, XlaEngine};
+use raca::nn::{forward, Weights};
+use raca::runtime::ArtifactStore;
+
+fn artifacts_ready() -> Option<std::path::PathBuf> {
+    let dir = ArtifactStore::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+fn load_weights(dir: &std::path::Path) -> Weights {
+    Weights::load(&dir.join("weights").join("fcnn")).expect("weights load")
+}
+
+fn load_test_set(dir: &std::path::Path) -> Dataset {
+    Dataset::load(&dir.join("data").join("test")).expect("test set load")
+}
+
+fn accuracy(predictions: &[i32], labels: &[i32]) -> f64 {
+    let hit = predictions
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| p == l)
+        .count();
+    hit as f64 / labels.len() as f64
+}
+
+#[test]
+fn xla_ideal_matches_native_ideal() {
+    let Some(dir) = artifacts_ready() else { return };
+    let w = load_weights(&dir);
+    let ds = load_test_set(&dir).take(16);
+    let engine = XlaEngine::start(dir).expect("xla engine");
+    let h = engine.handle();
+
+    for i in 0..ds.len() {
+        let x = ds.image(i);
+        let xla_probs = h.run_ideal(x.to_vec(), 1).expect("ideal run");
+        let native_probs = forward::ideal_forward(&w, x);
+        for (a, b) in xla_probs.iter().zip(&native_probs) {
+            assert!(
+                (a - b).abs() < 5e-4,
+                "image {i}: xla {a} vs native {b} (probs {xla_probs:?} / {native_probs:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_trial_winners_valid_and_deterministic() {
+    let Some(dir) = artifacts_ready() else { return };
+    let ds = load_test_set(&dir).take(4);
+    let engine = XlaEngine::start(dir).expect("xla engine");
+    let h = engine.handle();
+    let p = TrialParams::default();
+    let x = ds.image(0).to_vec();
+
+    let a = h.run_trials(x.clone(), 1, 42, p).expect("trial");
+    let b = h.run_trials(x.clone(), 1, 42, p).expect("trial");
+    assert_eq!(a, b, "same seed must reproduce the same winner");
+    assert!((-1..10).contains(&a[0]));
+
+    // Different seeds must eventually vary (stochastic inference).
+    let winners: std::collections::HashSet<i32> = (0..24)
+        .map(|s| h.run_trials(x.clone(), 1, s, p).unwrap()[0])
+        .collect();
+    assert!(!winners.is_empty());
+}
+
+#[test]
+fn xla_and_native_vote_accuracy_agree() {
+    let Some(dir) = artifacts_ready() else { return };
+    let w = Arc::new(load_weights(&dir));
+    let ds = load_test_set(&dir).take(64);
+    let engine = XlaEngine::start(dir).expect("xla engine");
+    let h = engine.handle();
+    let p = TrialParams::default();
+    let trials = 15usize;
+
+    // --- XLA path: batch 32 rows = 32 images; `trials` passes ------------
+    let batch = 32usize;
+    let mut xla_pred = Vec::new();
+    for chunk in 0..ds.len() / batch {
+        let mut counts = vec![[0u32; 10]; batch];
+        let xs: Vec<f32> = (0..batch)
+            .flat_map(|i| ds.image(chunk * batch + i).to_vec())
+            .collect();
+        for t in 0..trials {
+            let winners = h
+                .run_trials(xs.clone(), batch, (chunk * 1000 + t) as u32, p)
+                .expect("trial batch");
+            for (i, &win) in winners.iter().enumerate() {
+                if win >= 0 {
+                    counts[i][win as usize] += 1;
+                }
+            }
+        }
+        for c in &counts {
+            let best = c.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+            xla_pred.push(best as i32);
+        }
+    }
+    let xla_acc = accuracy(&xla_pred, &ds.labels);
+
+    // --- native path: same trial count --------------------------------
+    let ne = NativeEngine::new(w, 99);
+    let native_pred: Vec<i32> = (0..ds.len())
+        .map(|i| ne.infer(ds.image(i), p, trials, (i * 7919) as u64).prediction())
+        .collect();
+    let native_acc = accuracy(&native_pred, &ds.labels);
+
+    eprintln!("vote accuracy: xla={xla_acc:.3} native={native_acc:.3}");
+    assert!(xla_acc > 0.7, "xla vote accuracy too low: {xla_acc}");
+    assert!(native_acc > 0.7, "native vote accuracy too low: {native_acc}");
+    assert!(
+        (xla_acc - native_acc).abs() < 0.12,
+        "engines disagree: xla={xla_acc} native={native_acc}"
+    );
+}
+
+#[test]
+fn physical_and_native_agree_statistically() {
+    let Some(dir) = artifacts_ready() else { return };
+    let w = load_weights(&dir);
+    let ds = load_test_set(&dir).take(24);
+    let p = TrialParams::default();
+    let trials = 9usize;
+
+    let ne = NativeEngine::new(Arc::new(w.clone()), 5);
+    let native_pred: Vec<i32> = (0..ds.len())
+        .map(|i| ne.infer(ds.image(i), p, trials, (i * 131) as u64).prediction())
+        .collect();
+
+    let mut pe = PhysicalEngine::paper_default(&w, 5);
+    let phys_pred: Vec<i32> = (0..ds.len())
+        .map(|i| pe.infer(ds.image(i), p, trials, (i * 131) as u64).prediction())
+        .collect();
+
+    let na = accuracy(&native_pred, &ds.labels);
+    let pa = accuracy(&phys_pred, &ds.labels);
+    eprintln!("physical={pa:.3} native={na:.3}");
+    assert!(pa > 0.6, "physical accuracy too low: {pa}");
+    assert!((na - pa).abs() < 0.2, "native {na} vs physical {pa}");
+}
+
+#[test]
+fn logit_distributions_match_across_native_and_physical() {
+    // Distribution-level parity (KS test), not just means: the normalized
+    // stochastic logits of the native engine and the (current-scaled)
+    // physical engine must be statistically indistinguishable.
+    use raca::crossbar::{CrossbarArray, ReadMode, WeightMapping};
+    use raca::device::noise::NoiseParams;
+    use raca::device::variation::VariationModel;
+    use raca::stats::{ks, GaussianSource};
+
+    let n_col = 64;
+    let z = 0.8f64;
+    let mapping = WeightMapping::default();
+    let vr = mapping.calibrate_vr(n_col, 1e9, 1.0);
+    let i_unit = vr * mapping.g0();
+
+    // Physical: repeated noisy reads of one column, normalized to z units.
+    let mut gauss = GaussianSource::new(21);
+    let mut arr = CrossbarArray::program(
+        n_col,
+        1,
+        &vec![(z / n_col as f64) as f32; n_col],
+        mapping.clone(),
+        &VariationModel::default(),
+        NoiseParams::thermal_only(1e9),
+        &mut gauss,
+    );
+    let v = vec![vr; n_col];
+    let mut out = [0.0f64];
+    let phys: Vec<f64> = (0..4000)
+        .map(|_| {
+            arr.read_differential(&v, ReadMode::ColumnAggregate, &mut out, &mut gauss);
+            out[0] / i_unit
+        })
+        .collect();
+
+    // Native: z + σ_z·n.
+    let mut g2 = GaussianSource::new(22);
+    let native: Vec<f64> = (0..4000).map(|_| z + 1.702 * g2.next()).collect();
+
+    assert!(
+        ks::same_distribution(&phys, &native, 0.01),
+        "normalized physical reads and native logits diverge"
+    );
+}
+
+#[test]
+fn snr_sweep_parity_native_vs_physical_single_column() {
+    // Firing probability of one crossbar column must match Φ(s·z/1.702)
+    // in BOTH engines for every SNR scale (Fig. 4c ground truth).
+    use raca::crossbar::{CrossbarArray, ReadMode, WeightMapping};
+    use raca::device::noise::NoiseParams;
+    use raca::device::variation::VariationModel;
+    use raca::stats::{erf::norm_cdf, GaussianSource};
+
+    let mapping = WeightMapping::default();
+    for &snr in &[0.5f64, 1.0, 2.0] {
+        let n_col = 32;
+        let z = 1.2f64;
+        let w_each = (z / n_col as f64) as f32;
+        let mut gauss = GaussianSource::new(42);
+        let mut arr = CrossbarArray::program(
+            n_col,
+            1,
+            &vec![w_each; n_col],
+            mapping.clone(),
+            &VariationModel::default(),
+            NoiseParams::thermal_only(1e9),
+            &mut gauss,
+        );
+        let vr = mapping.calibrate_vr(n_col, 1e9, snr);
+        let v = vec![vr; n_col];
+        let mut out = [0.0f64];
+        let n = 40_000;
+        let mut fired = 0;
+        for _ in 0..n {
+            arr.read_differential(&v, ReadMode::ColumnAggregate, &mut out[..].as_mut(), &mut gauss);
+            if out[0] > 0.0 {
+                fired += 1;
+            }
+        }
+        let p_phys = fired as f64 / n as f64;
+        let p_analytic = norm_cdf(snr * z / 1.702);
+        assert!(
+            (p_phys - p_analytic).abs() < 0.02,
+            "snr={snr}: physical {p_phys} vs analytic {p_analytic}"
+        );
+    }
+}

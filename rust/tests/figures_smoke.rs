@@ -1,0 +1,80 @@
+//! Smoke tests: every figure/table harness runs end-to-end at tiny scale
+//! and writes its CSV (the `results/` contract used by EXPERIMENTS.md).
+
+use raca::figures;
+
+fn results(name: &str) -> std::path::PathBuf {
+    figures::results_dir().join(format!("{name}.csv"))
+}
+
+#[test]
+fn fig4_all_panels_run() {
+    figures::fig4::run("all", 300).expect("fig4");
+    for csv in ["fig4_ab", "fig4_c", "fig4_d", "fig4_e", "fig4_f"] {
+        assert!(results(csv).exists(), "{csv} missing");
+    }
+}
+
+#[test]
+fn fig5_all_panels_run() {
+    figures::fig5::run("all", 500).expect("fig5");
+    for csv in ["fig5_a", "fig5_bc", "fig5_d"] {
+        assert!(results(csv).exists(), "{csv} missing");
+    }
+    // Panel (a) CSV must contain 3 completed decisions (winner column).
+    let text = std::fs::read_to_string(results("fig5_a")).unwrap();
+    let winners = text
+        .lines()
+        .skip(1)
+        .filter(|l| !l.ends_with(',') && !l.is_empty())
+        .count();
+    assert!(winners >= 3, "expected ≥3 winner rows, got {winners}");
+}
+
+#[test]
+fn fig6_runs_when_artifacts_exist() {
+    let dir = raca::runtime::ArtifactStore::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    figures::fig6::run("all", 60, false).expect("fig6");
+    assert!(results("fig6_a").exists());
+    assert!(results("fig6_b").exists());
+    // Header sanity: 5 SNR curves + ideal + trials column.
+    let head = std::fs::read_to_string(results("fig6_a")).unwrap();
+    let cols = head.lines().next().unwrap().split(',').count();
+    assert_eq!(cols, 7);
+}
+
+#[test]
+fn table1_and_ablations_run() {
+    figures::table1::run().expect("table1");
+    figures::table1::ablate_tiles().expect("tiles");
+    figures::table1::ablate_low_vr().expect("low_vr");
+    for csv in [
+        "table1",
+        "table1_energy_breakdown",
+        "table1_area_breakdown",
+        "ablation_tiles",
+        "ablation_low_vr",
+    ] {
+        assert!(results(csv).exists(), "{csv} missing");
+    }
+    // Table I change column must show the paper's directions.
+    let text = std::fs::read_to_string(results("table1")).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines[1].contains('-'), "energy row should decrease");
+    assert!(lines[3].contains('+'), "tops/w row should increase");
+}
+
+#[test]
+fn variation_ablation_runs_small() {
+    let dir = raca::runtime::ArtifactStore::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    figures::ablate::variation_sweep(20, 3).expect("variation");
+    assert!(results("ablation_variation").exists());
+}

@@ -1,0 +1,152 @@
+//! Whole-stack integration: artifacts → runtime → engines → coordinator →
+//! paper-level claims (accuracy rises with trials; voting recovers the
+//! software accuracy).  Skips gracefully when artifacts are missing.
+
+use std::sync::Arc;
+
+use raca::coordinator::{SchedulerConfig, Server};
+use raca::dataset::Dataset;
+use raca::engine::{NativeEngine, TrialParams, XlaEngine};
+use raca::nn::{forward, Weights};
+use raca::runtime::ArtifactStore;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = ArtifactStore::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn accuracy_increases_with_trials_native() {
+    let Some(dir) = artifacts() else { return };
+    let w = Arc::new(Weights::load(&dir.join("weights").join("fcnn")).unwrap());
+    let ds = Dataset::load(&dir.join("data").join("test")).unwrap().take(300);
+    let engine = NativeEngine::new(w, 3);
+    let p = TrialParams::default();
+    let max_trials = 33;
+    let acc_at = |k: usize, winners: &[Vec<i32>]| -> f64 {
+        let hits = winners
+            .iter()
+            .zip(&ds.labels)
+            .filter(|(ws, &l)| {
+                let mut c = [0u32; 10];
+                for &w in &ws[..k] {
+                    if w >= 0 {
+                        c[w as usize] += 1;
+                    }
+                }
+                c.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0 as i32 == l
+            })
+            .count();
+        hits as f64 / ds.len() as f64
+    };
+    let winners: Vec<Vec<i32>> = (0..ds.len())
+        .map(|i| (0..max_trials).map(|t| engine.trial(ds.image(i), p, (i * 7919 + t) as u64)).collect())
+        .collect();
+    let a1 = acc_at(1, &winners);
+    let a9 = acc_at(9, &winners);
+    let a33 = acc_at(33, &winners);
+    eprintln!("accuracy: 1 trial {a1:.3}, 9 trials {a9:.3}, 33 trials {a33:.3}");
+    assert!(a9 >= a1 - 0.02, "voting should not hurt: {a1} → {a9}");
+    assert!(a33 >= a9 - 0.02);
+    assert!(a33 > 0.9, "33-trial vote accuracy too low: {a33}");
+}
+
+#[test]
+fn voting_recovers_software_accuracy() {
+    // The paper's headline claim: stochastic inference + majority vote
+    // reaches the deterministic software accuracy.
+    let Some(dir) = artifacts() else { return };
+    let w = Arc::new(Weights::load(&dir.join("weights").join("fcnn")).unwrap());
+    let ds = Dataset::load(&dir.join("data").join("test")).unwrap().take(300);
+    let sw_hits = (0..ds.len())
+        .filter(|&i| {
+            let p = forward::ideal_forward(&w, ds.image(i));
+            p.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as i32
+                == ds.label(i)
+        })
+        .count();
+    let sw_acc = sw_hits as f64 / ds.len() as f64;
+
+    let engine = NativeEngine::new(w, 11);
+    let p = TrialParams::default();
+    let hits = (0..ds.len())
+        .filter(|&i| engine.infer(ds.image(i), p, 31, (i * 31) as u64).prediction() == ds.label(i))
+        .count();
+    let raca_acc = hits as f64 / ds.len() as f64;
+    eprintln!("software {sw_acc:.3} vs RACA-31-trials {raca_acc:.3}");
+    assert!(
+        raca_acc >= sw_acc - 0.03,
+        "vote accuracy {raca_acc} should approach software {sw_acc}"
+    );
+}
+
+#[test]
+fn full_stack_xla_coordinator_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let ds = Dataset::load(&dir.join("data").join("test")).unwrap().take(96);
+    let engine = XlaEngine::start(dir).unwrap();
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = 32;
+    let server = Server::start(engine.handle(), cfg);
+    let client = server.client();
+    let rxs: Vec<_> = (0..ds.len())
+        .map(|i| client.submit(ds.image(i).to_vec(), 15, 0.9).unwrap())
+        .collect();
+    let mut hits = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap();
+        assert!(r.trials_used >= 1 && r.trials_used <= 15);
+        if r.prediction == ds.label(i) {
+            hits += 1;
+        }
+    }
+    let acc = hits as f64 / ds.len() as f64;
+    eprintln!("end-to-end coordinator accuracy: {acc:.3}");
+    assert!(acc > 0.85, "end-to-end accuracy too low: {acc}");
+    let m = server.metrics().snapshot();
+    assert_eq!(m.requests_completed as usize, ds.len());
+    assert!(m.engine_errors == 0);
+}
+
+#[test]
+fn manifest_matches_weights_and_data() {
+    let Some(dir) = artifacts() else { return };
+    let store = ArtifactStore::open(&dir).unwrap();
+    assert_eq!(store.manifest.layers, vec![784, 500, 300, 10]);
+    assert_eq!(store.weights.spec.widths, store.manifest.layers);
+    assert!(store.manifest.sigma_z > 1.7 && store.manifest.sigma_z < 1.71);
+    let train = Dataset::load(&store.data_prefix("train")).unwrap();
+    let test = Dataset::load(&store.data_prefix("test")).unwrap();
+    assert!(train.len() >= 10 * test.len() / 10); // both non-trivial
+    assert!(test.len() >= 1000);
+}
+
+#[test]
+fn snr_extremes_behave_sanely() {
+    // Very low SNR → near-chance; very high SNR → near-deterministic
+    // argmax of the *binarized* network (not necessarily software argmax).
+    let Some(dir) = artifacts() else { return };
+    let w = Arc::new(Weights::load(&dir.join("weights").join("fcnn")).unwrap());
+    let ds = Dataset::load(&dir.join("data").join("test")).unwrap().take(100);
+    let engine = NativeEngine::new(w, 23);
+
+    let acc = |snr: f64, trials: usize| {
+        let p = TrialParams::with_snr_scale(snr);
+        (0..ds.len())
+            .filter(|&i| {
+                engine.infer(ds.image(i), p, trials, (i * 7) as u64).prediction() == ds.label(i)
+            })
+            .count() as f64
+            / ds.len() as f64
+    };
+    let low = acc(0.02, 9);
+    let cal = acc(1.0, 9);
+    eprintln!("snr 0.02x → {low:.3}; snr 1x → {cal:.3}");
+    assert!(cal > low + 0.2, "calibrated point must beat noise floor");
+    assert!(low < 0.6, "0.02x SNR should be near chance, got {low}");
+}

@@ -1,0 +1,279 @@
+//! Property-based tests (randomized, seeded, shrink-free) over coordinator
+//! and substrate invariants — the proptest-style suite (no proptest crate
+//! in the offline vendor set, so generation is explicit xoshiro-driven).
+//!
+//! Each property runs across many random cases; failures print the case
+//! seed so they reproduce exactly.
+
+use raca::coordinator::batcher::Batcher;
+use raca::coordinator::{InferRequest, Scheduler, SchedulerConfig};
+use raca::crossbar::{CrossbarArray, ReadMode, WeightMapping};
+use raca::device::noise::NoiseParams;
+use raca::device::variation::VariationModel;
+use raca::engine::{NativeEngine, TrialParams};
+use raca::neuron::WtaOutcome;
+use raca::nn::{forward, ModelSpec, Weights};
+use raca::stats::{GaussianSource, Rng};
+use raca::util::json::Json;
+
+const CASES: usize = 60;
+
+// ---------------------------------------------------------------------------
+// Batcher invariants (DESIGN: routing/batching state)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_never_overpacks_and_respects_budgets() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case as u64);
+        let mut b = Batcher::new();
+        let n_req = 1 + rng.below(12) as usize;
+        let mut budgets = std::collections::HashMap::new();
+        for id in 0..n_req as u64 {
+            let budget = 1 + rng.below(40) as u32;
+            budgets.insert(id, budget);
+            b.admit(id, budget);
+        }
+        let batch_size = 1 + rng.below(48) as usize;
+        let p = b.pack(batch_size);
+        assert!(p.len() <= batch_size, "case {case}: overpacked");
+        let mut per: std::collections::HashMap<u64, u32> = Default::default();
+        for &id in &p.rows {
+            assert!(budgets.contains_key(&id), "case {case}: unknown request");
+            *per.entry(id).or_insert(0) += 1;
+        }
+        for (id, used) in &per {
+            assert!(used <= &budgets[id], "case {case}: budget exceeded for {id}");
+        }
+        // Fairness: any two requests with remaining budget ≥ their count
+        // differ by at most 1 row (until a budget binds).
+        let unbound: Vec<u32> = per
+            .iter()
+            .filter(|(id, &u)| u < budgets[id])
+            .map(|(_, &u)| u)
+            .collect();
+        if unbound.len() >= 2 && p.len() == batch_size {
+            let mx = *unbound.iter().max().unwrap();
+            let mn = *unbound.iter().min().unwrap();
+            assert!(mx - mn <= 1, "case {case}: unfair pack {unbound:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_conservation_under_consume() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(1000 + case as u64);
+        let mut b = Batcher::new();
+        let mut remaining: std::collections::HashMap<u64, u32> = Default::default();
+        for id in 0..(1 + rng.below(8)) {
+            let budget = 1 + rng.below(20) as u32;
+            remaining.insert(id, budget);
+            b.admit(id, budget);
+        }
+        // Repeatedly pack + consume until drained; total consumed per
+        // request must equal its budget exactly.
+        let mut consumed: std::collections::HashMap<u64, u32> = Default::default();
+        let mut guard = 0;
+        while !b.is_idle() {
+            guard += 1;
+            assert!(guard < 10_000, "case {case}: batcher never drains");
+            let p = b.pack(1 + rng.below(16) as usize);
+            let mut per: std::collections::HashMap<u64, u32> = Default::default();
+            for &id in &p.rows {
+                *per.entry(id).or_insert(0) += 1;
+            }
+            for (id, used) in per {
+                b.consume(id, used);
+                *consumed.entry(id).or_insert(0) += used;
+            }
+        }
+        assert_eq!(consumed, remaining, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler invariants (vote-state management)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_trials_used_within_budget_and_counts_consistent() {
+    let w = std::sync::Arc::new(Weights::random(ModelSpec::new(vec![784, 12, 10]), 9));
+    for case in 0..12 {
+        let mut rng = Rng::new(2000 + case as u64);
+        let mut cfg = SchedulerConfig::default();
+        cfg.batch_size = 1 + rng.below(24) as usize;
+        cfg.min_trials = 1 + rng.below(6) as u32;
+        let engine = NativeEngine::new(w.clone(), case as u64);
+        let mut s = Scheduler::new(engine, cfg, raca::coordinator::Metrics::new());
+        let n_req = 1 + rng.below(6) as usize;
+        let mut budgets = Vec::new();
+        for i in 0..n_req {
+            let budget = 1 + rng.below(30) as u32;
+            let conf = if rng.next_f64() < 0.5 { 0.9 } else { 0.0 };
+            budgets.push(budget);
+            s.submit(InferRequest::new(i as u64, vec![0.3; 784]).with_budget(budget, conf))
+                .unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), n_req, "case {case}");
+        for r in &done {
+            let budget = budgets[r.id as usize];
+            assert!(r.trials_used >= 1 && r.trials_used <= budget, "case {case}");
+            let counted: u64 = r.outcome.counts.iter().sum::<u64>() + r.outcome.abstentions;
+            assert_eq!(counted, r.trials_used as u64, "case {case}");
+            assert!((-1..10).contains(&r.prediction), "case {case}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vote-state invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_wta_outcome_merge_is_commutative_and_lossless() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(3000 + case as u64);
+        let gen = |rng: &mut Rng| {
+            let mut o = WtaOutcome::new(10);
+            for _ in 0..rng.below(200) {
+                let w = rng.below(11) as i32 - 1;
+                o.record(w);
+            }
+            o
+        };
+        let a = gen(&mut rng);
+        let b = gen(&mut rng);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.counts, ba.counts, "case {case}");
+        assert_eq!(ab.trials, a.trials + b.trials);
+        assert_eq!(ab.abstentions, a.abstentions + b.abstentions);
+        let total: u64 = ab.counts.iter().sum();
+        assert_eq!(total + ab.abstentions, ab.trials, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Physics invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_weight_mapping_is_monotone_and_bounded() {
+    let m = WeightMapping::default();
+    for case in 0..CASES {
+        let mut rng = Rng::new(4000 + case as u64);
+        let a = rng.range_f64(-6.0, 6.0);
+        let b = rng.range_f64(-6.0, 6.0);
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        let gl = m.weight_to_g(lo);
+        let gh = m.weight_to_g(hi);
+        assert!(gl <= gh + 1e-18, "case {case}: not monotone");
+        for g in [gl, gh] {
+            assert!((m.g_min..=m.g_max).contains(&g), "case {case}: out of range");
+        }
+    }
+}
+
+#[test]
+fn prop_mean_read_is_linear_in_inputs() {
+    // Superposition: reading v1+v2 equals read(v1) + read(v2) (mean path).
+    for case in 0..10 {
+        let mut rng = Rng::new(5000 + case as u64);
+        let rows = 2 + rng.below(40) as usize;
+        let cols = 1 + rng.below(12) as usize;
+        let w: Vec<f32> = (0..rows * cols).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        let mut gauss = GaussianSource::new(case as u64);
+        let arr = CrossbarArray::program(
+            rows,
+            cols,
+            &w,
+            WeightMapping::default(),
+            &VariationModel::default(),
+            NoiseParams::thermal_only(1e9),
+            &mut gauss,
+        );
+        let v1: Vec<f64> = (0..rows).map(|_| rng.range_f64(0.0, 0.01)).collect();
+        let v2: Vec<f64> = (0..rows).map(|_| rng.range_f64(0.0, 0.01)).collect();
+        let vsum: Vec<f64> = v1.iter().zip(&v2).map(|(a, b)| a + b).collect();
+        let mut o1 = vec![0.0; cols];
+        let mut o2 = vec![0.0; cols];
+        let mut os = vec![0.0; cols];
+        arr.mean_differential(&v1, &mut o1);
+        arr.mean_differential(&v2, &mut o2);
+        arr.mean_differential(&vsum, &mut os);
+        for j in 0..cols {
+            assert!(
+                (o1[j] + o2[j] - os[j]).abs() < 1e-12,
+                "case {case} col {j}: superposition violated"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_softmax_invariances() {
+    // softmax(z + c) == softmax(z); output sums to 1; argmax preserved.
+    for case in 0..CASES {
+        let mut rng = Rng::new(6000 + case as u64);
+        let n = 2 + rng.below(12) as usize;
+        let z: Vec<f32> = (0..n).map(|_| (rng.range_f64(-8.0, 8.0)) as f32).collect();
+        let c = rng.range_f64(-50.0, 50.0) as f32;
+        let mut a = z.clone();
+        forward::softmax(&mut a);
+        let mut b: Vec<f32> = z.iter().map(|&v| v + c).collect();
+        forward::softmax(&mut b);
+        let sum: f32 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "case {case}");
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "case {case}: shift invariance");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine determinism / JSON round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_native_engine_is_pure_in_trial_index() {
+    let w = std::sync::Arc::new(Weights::random(ModelSpec::new(vec![16, 8, 6]), 2));
+    let e = NativeEngine::new(w, 42);
+    for case in 0..CASES {
+        let mut rng = Rng::new(7000 + case as u64);
+        let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
+        let t = rng.below(1000);
+        let p = TrialParams::default();
+        let a = e.trial(&x, p, t);
+        let b = e.trial(&x, p, t);
+        assert_eq!(a, b, "case {case}: trial not deterministic");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}—\"q\"\n", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..CASES {
+        let mut rng = Rng::new(8000 + case as u64);
+        let doc = gen(&mut rng, 0);
+        let text = doc.to_string();
+        let re = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} in {text}"));
+        assert_eq!(doc, re, "case {case}");
+    }
+}
