@@ -7,12 +7,12 @@ use std::sync::Arc;
 use raca::engine::{NativeEngine, TrialParams};
 use raca::figures::common::parallel_map;
 use raca::nn::Weights;
-use raca::runtime::ArtifactStore;
+
 use raca::util::bench::bench_units;
 
 fn main() {
     println!("== bench_fig6: end-to-end stochastic trials (native engine) ==");
-    let dir = ArtifactStore::default_dir();
+    let dir = raca::runtime::default_artifact_dir();
     let Ok(w) = Weights::load(&dir.join("weights").join("fcnn")) else {
         eprintln!("SKIP: run `make artifacts` first");
         return;

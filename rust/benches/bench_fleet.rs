@@ -1,0 +1,53 @@
+//! Bench: fleet fan-out — trial throughput scaling with replica count.
+//!
+//! Programs farms of 1/2/4/8 native-engine chips (σ=5% variation draws)
+//! and pushes the same fixed trial batch through `FleetRunner::run`, which
+//! shards rows across chips on scoped threads.  Throughput should scale
+//! close to linearly until the batch is too small to feed every die.
+
+use raca::coordinator::TrialRunner;
+use raca::device::VariationModel;
+use raca::engine::TrialParams;
+use raca::fleet::{Fleet, RoutePolicy};
+use raca::nn::{ModelSpec, Weights};
+use raca::util::bench::bench_units;
+
+fn main() {
+    println!("== bench_fleet: trial throughput vs replica count ==");
+    let w = Weights::random(ModelSpec::new(vec![784, 64, 10]), 7);
+    let rows = 128usize;
+    let x: Vec<f32> = (0..rows * 784).map(|i| (i % 23) as f32 / 23.0).collect();
+    let p = TrialParams::default();
+
+    let mut base = 0.0f64;
+    for &chips in &[1usize, 2, 4, 8] {
+        let fleet = Fleet::program_native(
+            &w,
+            chips,
+            &VariationModel::lognormal(0.05),
+            RoutePolicy::RoundRobin,
+            1234,
+        );
+        let runner = fleet.into_runner();
+        let mut seed = 0u32;
+        let r = bench_units(
+            &format!("fleet run {rows} rows, {chips} chip(s)"),
+            2,
+            12,
+            rows as f64,
+            || {
+                seed = seed.wrapping_add(1);
+                std::hint::black_box(runner.run(&x, rows, seed, p).expect("fleet run"));
+            },
+        );
+        let tps = r.units_per_sec();
+        if chips == 1 {
+            base = tps;
+            println!("  → {tps:.0} trials/s (baseline)");
+        } else {
+            println!("  → {tps:.0} trials/s ({:.2}x over 1 chip)", tps / base.max(1e-9));
+        }
+    }
+
+    println!("\n(per-chip rows are contiguous shards; see fleet::runner docs)");
+}

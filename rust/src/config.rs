@@ -19,6 +19,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::SchedulerConfig;
 use crate::engine::TrialParams;
+use crate::fleet::{FleetConfig, RoutePolicy};
 use crate::hwmodel::TechParams;
 use crate::util::json::Json;
 
@@ -38,6 +39,8 @@ pub struct RunConfig {
     pub scheduler: SchedulerConfig,
     pub engine: EngineKind,
     pub tech: TechParams,
+    /// Fleet-serving knobs (`raca fleet`).
+    pub fleet: FleetConfig,
     /// Default per-request vote confidence.
     pub confidence: f64,
 }
@@ -56,7 +59,7 @@ fn check_keys(obj: &Json, allowed: &[&str], section: &str) -> Result<()> {
 impl RunConfig {
     pub fn parse(text: &str) -> Result<Self> {
         let j = Json::parse(text).context("parsing run config")?;
-        check_keys(&j, &["trial", "scheduler", "engine", "tech", "confidence"], "root")?;
+        check_keys(&j, &["trial", "scheduler", "engine", "tech", "fleet", "confidence"], "root")?;
         let mut cfg = RunConfig { confidence: 0.95, ..Default::default() };
 
         if let Some(t) = j.get("trial") {
@@ -138,6 +141,49 @@ impl RunConfig {
                 cfg.tech.input_cycles = v;
             }
         }
+        if let Some(fl) = j.get("fleet") {
+            check_keys(
+                fl,
+                &[
+                    "chips", "sigma", "stuck_lo", "stuck_hi", "policy", "cal_images",
+                    "cal_trials", "serve_images", "serve_trials", "seed",
+                ],
+                "fleet",
+            )?;
+            if let Some(v) = fl.get("chips").and_then(Json::as_usize) {
+                cfg.fleet.chips = v;
+            }
+            if let Some(v) = fl.get("sigma").and_then(Json::as_f64) {
+                cfg.fleet.sigma = v;
+            }
+            if let Some(v) = fl.get("stuck_lo").and_then(Json::as_f64) {
+                cfg.fleet.stuck_lo = v;
+            }
+            if let Some(v) = fl.get("stuck_hi").and_then(Json::as_f64) {
+                cfg.fleet.stuck_hi = v;
+            }
+            if let Some(p) = fl.get("policy").and_then(Json::as_str) {
+                cfg.fleet.policy = RoutePolicy::parse(p)
+                    .with_context(|| format!("config: unknown fleet policy '{p}'"))?;
+            }
+            if let Some(v) = fl.get("cal_images").and_then(Json::as_usize) {
+                cfg.fleet.cal_images = v;
+            }
+            if let Some(v) = fl.get("cal_trials").and_then(Json::as_usize) {
+                cfg.fleet.cal_trials = v;
+            }
+            if let Some(v) = fl.get("serve_images").and_then(Json::as_usize) {
+                cfg.fleet.serve_images = v;
+            }
+            if let Some(v) = fl.get("serve_trials").and_then(Json::as_usize) {
+                cfg.fleet.serve_trials = v;
+            }
+            // JSON numbers are f64, so config seeds are exact only up to
+            // 2^53; pass --seed on the CLI for full-width u64 seeds.
+            if let Some(v) = fl.get("seed").and_then(Json::as_usize) {
+                cfg.fleet.seed = v as u64;
+            }
+        }
         cfg.scheduler.params = cfg.trial;
         Ok(cfg)
     }
@@ -186,5 +232,24 @@ mod tests {
         assert!(RunConfig::parse(r#"{"trail": {}}"#).is_err());
         assert!(RunConfig::parse(r#"{"trial": {"sigma": 1}}"#).is_err());
         assert!(RunConfig::parse(r#"{"engine": "gpu"}"#).is_err());
+        assert!(RunConfig::parse(r#"{"fleet": {"dies": 4}}"#).is_err());
+        assert!(RunConfig::parse(r#"{"fleet": {"policy": "random"}}"#).is_err());
+    }
+
+    #[test]
+    fn fleet_section_parses() {
+        let c = RunConfig::parse(
+            r#"{"fleet": {"chips": 4, "sigma": 0.05, "policy": "least-loaded",
+                          "cal_images": 32, "serve_trials": 5, "seed": 99}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.fleet.chips, 4);
+        assert!((c.fleet.sigma - 0.05).abs() < 1e-12);
+        assert_eq!(c.fleet.policy, crate::fleet::RoutePolicy::LeastLoaded);
+        assert_eq!(c.fleet.cal_images, 32);
+        assert_eq!(c.fleet.serve_trials, 5);
+        assert_eq!(c.fleet.seed, 99);
+        // Untouched keys keep their defaults.
+        assert_eq!(c.fleet.cal_trials, FleetConfig::default().cal_trials);
     }
 }

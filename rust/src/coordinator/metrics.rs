@@ -76,6 +76,23 @@ impl Metrics {
 }
 
 impl MetricsSnapshot {
+    /// Merge two snapshots (fleet aggregation over per-chip metrics):
+    /// counters add; latency percentiles take the elementwise max, a
+    /// conservative upper bound since the underlying reservoirs are gone.
+    pub fn combine(&self, other: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests_admitted: self.requests_admitted + other.requests_admitted,
+            requests_completed: self.requests_completed + other.requests_completed,
+            trials_executed: self.trials_executed + other.trials_executed,
+            batches_executed: self.batches_executed + other.batches_executed,
+            rows_packed: self.rows_packed + other.rows_packed,
+            trials_saved: self.trials_saved + other.trials_saved,
+            engine_errors: self.engine_errors + other.engine_errors,
+            latency_p50_us: self.latency_p50_us.max(other.latency_p50_us),
+            latency_p99_us: self.latency_p99_us.max(other.latency_p99_us),
+        }
+    }
+
     /// Mean batch occupancy in [0, 1] given the configured batch size.
     pub fn fill_ratio(&self, batch_size: usize) -> f64 {
         if self.batches_executed == 0 {
@@ -137,6 +154,30 @@ mod tests {
         m.batches_executed.fetch_add(4, Ordering::Relaxed);
         m.rows_packed.fetch_add(100, Ordering::Relaxed);
         assert!((m.snapshot().fill_ratio(32) - 100.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn combine_adds_counters_and_maxes_latency() {
+        let a = MetricsSnapshot {
+            requests_admitted: 3,
+            requests_completed: 2,
+            trials_executed: 40,
+            batches_executed: 4,
+            rows_packed: 60,
+            trials_saved: 5,
+            engine_errors: 1,
+            latency_p50_us: 100,
+            latency_p99_us: 900,
+        };
+        let mut b = a.clone();
+        b.latency_p50_us = 250;
+        b.latency_p99_us = 400;
+        let c = a.combine(&b);
+        assert_eq!(c.trials_executed, 80);
+        assert_eq!(c.requests_completed, 4);
+        assert_eq!(c.engine_errors, 2);
+        assert_eq!(c.latency_p50_us, 250);
+        assert_eq!(c.latency_p99_us, 900);
     }
 
     #[test]

@@ -21,8 +21,9 @@ use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::request::{InferRequest, InferResponse, RequestId};
 
-/// Engine abstraction the scheduler drives (both `XlaEngineHandle` and
-/// `NativeEngine` implement it).
+/// Engine abstraction the scheduler drives (`NativeEngine`, the fleet's
+/// [`crate::fleet::FleetRunner`], and — under the `pjrt` feature —
+/// `XlaEngineHandle` implement it).
 pub trait TrialRunner {
     /// Execute `rows.len()/features` trials; one winner per row.
     fn run(&self, x: &[f32], rows: usize, seed: u32, p: TrialParams) -> Result<Vec<i32>>;
@@ -30,6 +31,7 @@ pub trait TrialRunner {
     fn preferred_batch(&self) -> usize;
 }
 
+#[cfg(feature = "pjrt")]
 impl TrialRunner for crate::engine::XlaEngineHandle {
     fn run(&self, x: &[f32], rows: usize, seed: u32, p: TrialParams) -> Result<Vec<i32>> {
         let features = x.len() / rows;
@@ -139,6 +141,12 @@ impl<E: TrialRunner> Scheduler<E> {
 
     pub fn in_flight(&self) -> usize {
         self.active.len()
+    }
+
+    /// The engine behind this scheduler (fleet harnesses read per-chip
+    /// metrics off it after a run).
+    pub fn engine(&self) -> &E {
+        &self.engine
     }
 
     pub fn is_idle(&self) -> bool {

@@ -64,10 +64,17 @@ impl Dataset {
 
     /// First `n` examples as a view-copy (figure harness subsets).
     pub fn take(&self, n: usize) -> Dataset {
-        let n = n.min(self.len());
+        self.slice(0, n)
+    }
+
+    /// Examples `[lo, hi)` as a view-copy (disjoint calibration/serving
+    /// splits for the fleet harness); bounds are clamped to the set.
+    pub fn slice(&self, lo: usize, hi: usize) -> Dataset {
+        let hi = hi.min(self.len());
+        let lo = lo.min(hi);
         Dataset {
-            images: self.images[..n * IMG_PIXELS].to_vec(),
-            labels: self.labels[..n].to_vec(),
+            images: self.images[lo * IMG_PIXELS..hi * IMG_PIXELS].to_vec(),
+            labels: self.labels[lo..hi].to_vec(),
         }
     }
 
@@ -116,6 +123,12 @@ mod tests {
         assert_eq!(ds.image(0).len(), IMG_PIXELS);
         let t = ds.take(5);
         assert_eq!(t.len(), 5);
+        let s = ds.slice(5, 8);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.label(0), ds.label(5));
+        assert_eq!(s.image(0), ds.image(5));
+        assert_eq!(ds.slice(10, 99).len(), 2);
+        assert!(ds.slice(20, 5).is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -8,23 +8,31 @@
 //! * [`physical::PhysicalEngine`] — full analog simulation in SI units
 //!   (tiled crossbars, TIA, comparator, transient WTA; used for
 //!   validation and the non-ideality ablations),
-//! * [`xla::XlaEngine`] — the AOT-compiled L1/L2 HLO running on PJRT (the
-//!   production path; a dedicated worker thread owns the non-Send PJRT
+//! * `xla::XlaEngine` (feature `pjrt`) — the AOT-compiled L1/L2 HLO
+//!   running on PJRT (a dedicated worker thread owns the non-Send PJRT
 //!   state and serves requests over channels).
 //!
 //! All three are statistically interchangeable at the calibrated design
 //! point — `rust/tests/engine_parity.rs` holds them to that.
+//!
+//! [`TrialEngine`] abstracts over the in-process engines so higher layers
+//! (notably the [`crate::fleet`] subsystem) are generic over native vs
+//! physical chips.
 
 pub mod native;
 pub mod physical;
+#[cfg(feature = "pjrt")]
 pub mod xla;
 
 pub use native::NativeEngine;
 pub use physical::PhysicalEngine;
+#[cfg(feature = "pjrt")]
 pub use xla::{XlaEngine, XlaEngineHandle};
 
+use crate::neuron::WtaOutcome;
+
 /// Parameters of one stochastic trial batch (normalized units).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TrialParams {
     /// Comparator noise std in z units: 1.702/snr_scale.
     pub sigma_z: f32,
@@ -50,5 +58,70 @@ impl TrialParams {
     pub fn with_theta(mut self, theta: f32) -> Self {
         self.theta = theta;
         self
+    }
+
+    /// Scaled comparator noise (per-chip SNR calibration knob).
+    pub fn with_sigma_scale(mut self, scale: f32) -> Self {
+        self.sigma_z *= scale;
+        self
+    }
+}
+
+/// One in-process RACA trial engine: repeated stochastic WTA decisions on
+/// single images.
+///
+/// `&mut self` because the physical engine mutates per-read noise state;
+/// the native engine implements it by delegating to its `&self` methods.
+/// Fleet chips ([`crate::fleet::Chip`]) are generic over this trait.
+pub trait TrialEngine: Send {
+    /// Number of output classes.
+    fn output_dim(&self) -> usize;
+
+    /// One decision trial on one image; `trial_idx` selects the RNG
+    /// stream, so equal indices reproduce bit-identical decisions.
+    fn trial(&mut self, x: &[f32], p: TrialParams, trial_idx: u64) -> i32;
+
+    /// `trials` repeated decisions accumulated into vote counts.
+    fn infer(&mut self, x: &[f32], p: TrialParams, trials: usize, base_trial: u64) -> WtaOutcome {
+        let mut out = WtaOutcome::new(self.output_dim());
+        for t in 0..trials {
+            out.record(self.trial(x, p, base_trial.wrapping_add(t as u64)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{ModelSpec, Weights};
+    use std::sync::Arc;
+
+    fn engines() -> (NativeEngine, PhysicalEngine) {
+        let w = Weights::random(ModelSpec::new(vec![8, 6, 4]), 3);
+        let native = NativeEngine::new(Arc::new(w.clone()), 7);
+        let physical = PhysicalEngine::paper_default(&w, 7);
+        (native, physical)
+    }
+
+    #[test]
+    fn trait_objects_cover_native_and_physical() {
+        let (native, physical) = engines();
+        let mut dyn_engines: Vec<Box<dyn TrialEngine>> =
+            vec![Box::new(native), Box::new(physical)];
+        let x = vec![0.4f32; 8];
+        for e in dyn_engines.iter_mut() {
+            assert_eq!(e.output_dim(), 4);
+            let o = e.infer(&x, TrialParams::default(), 20, 0);
+            assert_eq!(o.trials, 20);
+            let again = e.trial(&x, TrialParams::default(), 5);
+            assert_eq!(again, e.trial(&x, TrialParams::default(), 5));
+        }
+    }
+
+    #[test]
+    fn sigma_scale_multiplies() {
+        let p = TrialParams::default().with_sigma_scale(0.5);
+        assert!((p.sigma_z - 0.851).abs() < 1e-4);
     }
 }

@@ -14,7 +14,7 @@ use crate::neuron::WtaOutcome;
 use crate::nn::{forward, Weights};
 use crate::stats::{GaussianSource, Rng};
 
-use super::TrialParams;
+use super::{TrialEngine, TrialParams};
 
 /// Pure-rust stochastic inference engine (Send + Sync; clone per worker).
 #[derive(Clone)]
@@ -101,7 +101,7 @@ impl NativeEngine {
         let mut scratch = forward::TrialScratch::default();
         let mut out = WtaOutcome::new(self.weights.spec.output_dim());
         for t in 0..trials {
-            out.record(self.trial_scratch(&z1, p, base_trial + t as u64, &mut scratch));
+            out.record(self.trial_scratch(&z1, p, base_trial.wrapping_add(t as u64), &mut scratch));
         }
         out
     }
@@ -115,6 +115,21 @@ impl NativeEngine {
             .map(|r| self.trial(&x[r * features..(r + 1) * features], p,
                                 seed.wrapping_add(r as u64)))
             .collect()
+    }
+}
+
+impl TrialEngine for NativeEngine {
+    fn output_dim(&self) -> usize {
+        self.weights.spec.output_dim()
+    }
+
+    fn trial(&mut self, x: &[f32], p: TrialParams, trial_idx: u64) -> i32 {
+        NativeEngine::trial(self, x, p, trial_idx)
+    }
+
+    fn infer(&mut self, x: &[f32], p: TrialParams, trials: usize, base_trial: u64) -> WtaOutcome {
+        // Delegate to the inherent fast path (cached layer-0 pre-activation).
+        NativeEngine::infer(self, x, p, trials, base_trial)
     }
 }
 

@@ -18,7 +18,7 @@ use crate::neuron::WtaOutcome;
 use crate::nn::Weights;
 use crate::stats::{GaussianSource, Rng};
 
-use super::TrialParams;
+use super::{TrialEngine, TrialParams};
 
 /// Per-layer physical configuration derived from calibration.
 #[derive(Debug, Clone)]
@@ -160,7 +160,7 @@ impl PhysicalEngine {
     pub fn infer(&mut self, x: &[f32], p: TrialParams, trials: usize, base: u64) -> WtaOutcome {
         let mut out = WtaOutcome::new(self.spec.output_dim());
         for t in 0..trials {
-            out.record(self.trial(x, p, base + t as u64));
+            out.record(self.trial(x, p, base.wrapping_add(t as u64)));
         }
         out
     }
@@ -181,6 +181,16 @@ impl PhysicalEngine {
     /// Per-layer calibration record: (read voltage [V], column σ_I [A]).
     pub fn calibration(&self) -> Vec<(f64, f64)> {
         self.phys.iter().map(|p| (p.vr, p.sigma_i)).collect()
+    }
+}
+
+impl TrialEngine for PhysicalEngine {
+    fn output_dim(&self) -> usize {
+        self.spec.output_dim()
+    }
+
+    fn trial(&mut self, x: &[f32], p: TrialParams, trial_idx: u64) -> i32 {
+        PhysicalEngine::trial(self, x, p, trial_idx)
     }
 }
 

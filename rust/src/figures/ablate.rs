@@ -12,13 +12,13 @@ use crate::device::variation::VariationModel;
 use crate::device::DELTA_F;
 use crate::engine::{PhysicalEngine, TrialParams};
 use crate::nn::Weights;
-use crate::runtime::ArtifactStore;
+use crate::runtime::default_artifact_dir;
 use crate::util::table::Table;
 
 use super::common::results_dir;
 
 fn load(n_images: usize) -> Result<(Weights, Dataset)> {
-    let dir = ArtifactStore::default_dir();
+    let dir = default_artifact_dir();
     let w = Weights::load(&dir.join("weights").join("fcnn")).context("weights")?;
     let ds = Dataset::load(&dir.join("data").join("test"))?.take(n_images);
     Ok((w, ds))

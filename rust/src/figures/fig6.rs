@@ -15,9 +15,9 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::dataset::Dataset;
-use crate::engine::{NativeEngine, TrialParams, XlaEngine};
+use crate::engine::{NativeEngine, TrialParams};
 use crate::nn::Weights;
-use crate::runtime::ArtifactStore;
+use crate::runtime::default_artifact_dir;
 use crate::util::table::Table;
 
 use super::common::{parallel_map, results_dir};
@@ -80,13 +80,14 @@ fn native_winners(
 }
 
 /// Run trials through the AOT/PJRT path (batch-packed).
+#[cfg(feature = "pjrt")]
 fn xla_winners(
     dir: std::path::PathBuf,
     ds: &Dataset,
     p: TrialParams,
     max_trials: usize,
 ) -> Result<Vec<Vec<i32>>> {
-    let engine = XlaEngine::start(dir)?;
+    let engine = crate::engine::XlaEngine::start(dir)?;
     let h = engine.handle();
     let batch = 32usize;
     let mut rows = vec![Vec::with_capacity(max_trials); ds.len()];
@@ -112,6 +113,20 @@ fn xla_winners(
     Ok(rows)
 }
 
+/// Non-PJRT builds reject `--engine xla` with a clear error.
+#[cfg(not(feature = "pjrt"))]
+fn xla_winners(
+    _dir: std::path::PathBuf,
+    _ds: &Dataset,
+    _p: TrialParams,
+    _max_trials: usize,
+) -> Result<Vec<Vec<i32>>> {
+    anyhow::bail!(
+        "this build has no PJRT runtime (the `pjrt` cargo feature is off); \
+         rebuild with `--features pjrt` or drop `--engine xla`"
+    )
+}
+
 fn load(dir: &std::path::Path, n_images: usize) -> Result<(Arc<Weights>, Dataset, f64)> {
     let w = Weights::load(&dir.join("weights").join("fcnn")).context("weights")?;
     let acc = w.ideal_test_accuracy;
@@ -121,7 +136,7 @@ fn load(dir: &std::path::Path, n_images: usize) -> Result<(Arc<Weights>, Dataset
 
 /// Panel (a): SNR sweep.
 pub fn panel_a(n_images: usize, use_xla: bool) -> Result<()> {
-    let dir = ArtifactStore::default_dir();
+    let dir = default_artifact_dir();
     let (w, ds, ideal_acc) = load(&dir, n_images)?;
     let snrs = [0.25, 0.5, 1.0, 2.0, 4.0];
     let mut headers: Vec<String> = vec!["trials".into()];
@@ -156,7 +171,7 @@ pub fn panel_a(n_images: usize, use_xla: bool) -> Result<()> {
 
 /// Panel (b): V_th0 sweep (θ_norm 0 ↔ 0 V, 3 ↔ 0.05 V).
 pub fn panel_b(n_images: usize, use_xla: bool) -> Result<()> {
-    let dir = ArtifactStore::default_dir();
+    let dir = default_artifact_dir();
     let (w, ds, ideal_acc) = load(&dir, n_images)?;
     let thetas: [(f32, &str); 2] = [(0.0, "Vth0=0V"), (3.0, "Vth0=0.05V")];
     let mut headers: Vec<String> = vec!["trials".into()];

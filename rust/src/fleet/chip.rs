@@ -1,0 +1,181 @@
+//! One fleet chip: a simulated RACA die with its own variation draw.
+//!
+//! Real deployments never get two identical dies — conductance programming
+//! lands lognormally off-target and a few devices stick (Fig. 6 / E-ABL2).
+//! A [`Chip`] models one die: the nominal weights are pushed through the
+//! weight→conductance mapping, perturbed by the chip's private
+//! [`VariationModel`] draw, and read back as the *effective* weights its
+//! engine computes with.  Every chip derives its RNG streams from
+//! `(fleet_seed, chip_id)`, so a fleet seed reproduces the exact same farm
+//! while chips within it stay mutually independent.
+
+use std::sync::Arc;
+
+use crate::crossbar::WeightMapping;
+use crate::device::noise::NoiseParams;
+use crate::device::{VariationModel, DELTA_F};
+use crate::engine::{NativeEngine, PhysicalEngine, TrialEngine, TrialParams};
+use crate::nn::Weights;
+use crate::stats::GaussianSource;
+
+/// Index of a chip within its fleet.
+pub type ChipId = usize;
+
+/// Derive a chip's private seed from the fleet seed (splitmix-style
+/// stream separation; id+1 keeps chip 0 distinct from the fleet seed).
+pub fn chip_seed(fleet_seed: u64, id: ChipId) -> u64 {
+    fleet_seed ^ (id as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Program-and-read-back: map each nominal weight to a conductance
+/// (Eq. 7), apply the die's programming variation, and map back.  The
+/// returned weights are what the die *actually* computes with.
+pub fn program_weights(
+    nominal: &Weights,
+    variation: &VariationModel,
+    gauss: &mut GaussianSource,
+) -> Weights {
+    let mapping = WeightMapping::default();
+    let mut out = nominal.clone();
+    for m in out.mats.iter_mut() {
+        for w in m.iter_mut() {
+            let g = mapping.weight_to_g(*w as f64);
+            let gv = variation.apply(g, mapping.g_min, mapping.g_max, gauss);
+            *w = mapping.g_to_weight(gv) as f32;
+        }
+    }
+    out
+}
+
+/// One simulated die: engine + its active (calibrated) trial parameters.
+pub struct Chip<E> {
+    pub id: ChipId,
+    pub engine: E,
+    /// Design-point parameters (calibration searches around these).
+    pub nominal: TrialParams,
+    /// Active parameters (== `nominal` until calibrated).
+    pub params: TrialParams,
+    /// Whether a calibrator has validated `params` (even if it chose the
+    /// nominal point — that is still a calibrated chip).
+    pub calibrated: bool,
+    /// This chip's private seed (derived from the fleet seed).
+    pub seed: u64,
+}
+
+impl<E: TrialEngine> Chip<E> {
+    /// Classify one image with the chip's active parameters; returns the
+    /// majority-vote prediction.
+    pub fn classify(&mut self, x: &[f32], trials: usize, base_trial: u64) -> i32 {
+        self.engine.infer(x, self.params, trials, base_trial).prediction()
+    }
+}
+
+impl Chip<NativeEngine> {
+    /// Program a native-engine die from nominal weights.
+    pub fn program_native(
+        id: ChipId,
+        nominal_weights: &Weights,
+        variation: &VariationModel,
+        fleet_seed: u64,
+    ) -> Self {
+        let seed = chip_seed(fleet_seed, id);
+        // Separate stream for programming so trial RNG stays comparable
+        // across variation settings.
+        let mut gauss = GaussianSource::new(seed ^ 0xD1E_5EED);
+        let w = program_weights(nominal_weights, variation, &mut gauss);
+        Chip {
+            id,
+            engine: NativeEngine::new(Arc::new(w), seed),
+            nominal: TrialParams::default(),
+            params: TrialParams::default(),
+            calibrated: false,
+            seed,
+        }
+    }
+}
+
+impl Chip<PhysicalEngine> {
+    /// Program a full analog-simulation die (validation-grade, slow).
+    pub fn program_physical(
+        id: ChipId,
+        nominal_weights: &Weights,
+        variation: &VariationModel,
+        tile: usize,
+        fleet_seed: u64,
+    ) -> Self {
+        let seed = chip_seed(fleet_seed, id);
+        let engine = PhysicalEngine::program(
+            nominal_weights,
+            tile,
+            variation,
+            &NoiseParams::thermal_only(DELTA_F),
+            1.0,
+            seed,
+        );
+        Chip {
+            id,
+            engine,
+            nominal: TrialParams::default(),
+            params: TrialParams::default(),
+            calibrated: false,
+            seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModelSpec;
+
+    fn nominal() -> Weights {
+        Weights::random(ModelSpec::new(vec![12, 8, 4]), 3)
+    }
+
+    #[test]
+    fn programming_is_reproducible_per_seed_and_chip() {
+        let w = nominal();
+        let v = VariationModel::lognormal(0.10);
+        let a = Chip::program_native(2, &w, &v, 77);
+        let b = Chip::program_native(2, &w, &v, 77);
+        assert_eq!(a.engine.weights.mats, b.engine.weights.mats);
+        assert_eq!(a.seed, b.seed);
+    }
+
+    #[test]
+    fn chips_differ_from_each_other_and_from_nominal() {
+        let w = nominal();
+        let v = VariationModel::lognormal(0.10);
+        let a = Chip::program_native(0, &w, &v, 77);
+        let b = Chip::program_native(1, &w, &v, 77);
+        assert_ne!(a.engine.weights.mats, b.engine.weights.mats);
+        assert_ne!(a.engine.weights.mats, w.mats);
+    }
+
+    #[test]
+    fn ideal_variation_is_identity_modulo_clip() {
+        let w = nominal();
+        let chip = Chip::program_native(0, &w, &VariationModel::default(), 5);
+        for (a, b) in chip.engine.weights.mats.iter().flatten().zip(w.mats.iter().flatten()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn programmed_weights_stay_in_clip_range() {
+        let w = nominal();
+        let v = VariationModel::with_defects(0.3, 0.02, 0.01);
+        let chip = Chip::program_native(1, &w, &v, 9);
+        chip.engine.weights.validate().expect("clip range preserved");
+    }
+
+    #[test]
+    fn physical_chip_programs_and_decides() {
+        let w = nominal();
+        let mut chip =
+            Chip::program_physical(0, &w, &VariationModel::lognormal(0.05), 8, 13);
+        let x = vec![0.4f32; 12];
+        let win = chip.classify(&x, 5, 0);
+        assert!((-1..4).contains(&win));
+    }
+}

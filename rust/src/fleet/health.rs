@@ -1,0 +1,254 @@
+//! Per-chip health tracking: rolling accuracy/latency windows, drift
+//! detection and eviction.
+//!
+//! ReRAM dies drift (retention loss, read disturb); at fleet level that
+//! shows up as one replica's rolling accuracy sagging below its peers.
+//! The monitor keeps a bounded window of recent labeled outcomes and
+//! latencies per chip, flags chips whose rolling accuracy falls more than
+//! `drift_margin` under the fleet median (→ recalibrate), and evicts
+//! chips below the hard `evict_floor` (→ drop from routing).
+
+use std::collections::VecDeque;
+
+use super::chip::ChipId;
+
+/// Monitor thresholds.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Rolling window length (labeled outcomes and latency samples).
+    pub window: usize,
+    /// Minimum labeled samples before a chip can be flagged.
+    pub min_samples: usize,
+    /// Flag a chip when rolling accuracy < fleet median − this margin.
+    pub drift_margin: f64,
+    /// Evict a chip when rolling accuracy < this absolute floor.
+    pub evict_floor: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self { window: 128, min_samples: 24, drift_margin: 0.15, evict_floor: 0.25 }
+    }
+}
+
+/// Rolling state for one chip.
+#[derive(Debug, Default)]
+pub struct ChipHealth {
+    correct: VecDeque<bool>,
+    latency_us: VecDeque<u64>,
+    pub served: u64,
+    pub abstained: u64,
+    pub evicted: bool,
+    pub recalibrations: u32,
+}
+
+impl ChipHealth {
+    /// Rolling accuracy over the labeled window (None until any labels).
+    pub fn rolling_accuracy(&self) -> Option<f64> {
+        if self.correct.is_empty() {
+            return None;
+        }
+        let hits = self.correct.iter().filter(|&&c| c).count();
+        Some(hits as f64 / self.correct.len() as f64)
+    }
+
+    /// Labeled samples currently in the window.
+    pub fn labeled_samples(&self) -> usize {
+        self.correct.len()
+    }
+
+    /// Mean latency over the window [µs].
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.latency_us.is_empty() {
+            return 0.0;
+        }
+        self.latency_us.iter().sum::<u64>() as f64 / self.latency_us.len() as f64
+    }
+
+    /// Abstention rate over everything served.
+    pub fn abstention_rate(&self) -> f64 {
+        if self.served == 0 {
+            return 0.0;
+        }
+        self.abstained as f64 / self.served as f64
+    }
+}
+
+/// Fleet-wide health state.
+#[derive(Debug)]
+pub struct HealthMonitor {
+    pub cfg: HealthConfig,
+    chips: Vec<ChipHealth>,
+}
+
+impl HealthMonitor {
+    pub fn new(n_chips: usize, cfg: HealthConfig) -> Self {
+        Self { cfg, chips: (0..n_chips).map(|_| ChipHealth::default()).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.chips.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chips.is_empty()
+    }
+
+    pub fn chip(&self, id: ChipId) -> &ChipHealth {
+        &self.chips[id]
+    }
+
+    /// Record one served request on `chip`.  `correct` is `Some` when the
+    /// request carried a label (probe traffic); `abstained` means every
+    /// trial timed out.
+    pub fn record(&mut self, chip: ChipId, correct: Option<bool>, abstained: bool, latency_us: u64) {
+        let h = &mut self.chips[chip];
+        h.served += 1;
+        if abstained {
+            h.abstained += 1;
+        }
+        if let Some(c) = correct {
+            if h.correct.len() >= self.cfg.window {
+                h.correct.pop_front();
+            }
+            h.correct.push_back(c);
+        }
+        if h.latency_us.len() >= self.cfg.window {
+            h.latency_us.pop_front();
+        }
+        h.latency_us.push_back(latency_us);
+    }
+
+    /// Ids still eligible for routing.
+    pub fn healthy(&self) -> Vec<ChipId> {
+        (0..self.chips.len()).filter(|&i| !self.chips[i].evicted).collect()
+    }
+
+    /// Median rolling accuracy over healthy chips with enough samples.
+    pub fn median_accuracy(&self) -> Option<f64> {
+        let mut accs: Vec<f64> = self
+            .chips
+            .iter()
+            .filter(|h| !h.evicted && h.labeled_samples() >= self.cfg.min_samples)
+            .filter_map(|h| h.rolling_accuracy())
+            .collect();
+        if accs.is_empty() {
+            return None;
+        }
+        accs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(accs[accs.len() / 2])
+    }
+
+    /// Chips whose rolling accuracy sags below the fleet median by more
+    /// than the drift margin (candidates for recalibration).
+    pub fn drifting(&self) -> Vec<ChipId> {
+        let Some(median) = self.median_accuracy() else { return Vec::new() };
+        (0..self.chips.len())
+            .filter(|&i| {
+                let h = &self.chips[i];
+                !h.evicted
+                    && h.labeled_samples() >= self.cfg.min_samples
+                    && h.rolling_accuracy().is_some_and(|a| a < median - self.cfg.drift_margin)
+            })
+            .collect()
+    }
+
+    /// Chips below the absolute accuracy floor (candidates for eviction).
+    pub fn evictable(&self) -> Vec<ChipId> {
+        (0..self.chips.len())
+            .filter(|&i| {
+                let h = &self.chips[i];
+                !h.evicted
+                    && h.labeled_samples() >= self.cfg.min_samples
+                    && h.rolling_accuracy().is_some_and(|a| a < self.cfg.evict_floor)
+            })
+            .collect()
+    }
+
+    /// Drop a chip from routing.
+    pub fn evict(&mut self, chip: ChipId) {
+        self.chips[chip].evicted = true;
+    }
+
+    /// Reset a chip's rolling window after recalibration (old samples no
+    /// longer describe its behaviour).
+    pub fn note_recalibrated(&mut self, chip: ChipId) {
+        let h = &mut self.chips[chip];
+        h.recalibrations += 1;
+        h.correct.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor(n: usize) -> HealthMonitor {
+        HealthMonitor::new(
+            n,
+            HealthConfig { window: 16, min_samples: 8, drift_margin: 0.2, evict_floor: 0.3 },
+        )
+    }
+
+    fn feed(m: &mut HealthMonitor, chip: ChipId, hits: usize, misses: usize) {
+        for _ in 0..hits {
+            m.record(chip, Some(true), false, 100);
+        }
+        for _ in 0..misses {
+            m.record(chip, Some(false), false, 100);
+        }
+    }
+
+    #[test]
+    fn rolling_window_bounds_and_accuracy() {
+        let mut m = monitor(1);
+        feed(&mut m, 0, 16, 16); // window keeps only the last 16 (all misses)
+        assert_eq!(m.chip(0).labeled_samples(), 16);
+        assert_eq!(m.chip(0).rolling_accuracy(), Some(0.0));
+        assert_eq!(m.chip(0).served, 32);
+    }
+
+    #[test]
+    fn drift_detection_flags_the_sagging_chip() {
+        let mut m = monitor(3);
+        feed(&mut m, 0, 15, 1);
+        feed(&mut m, 1, 14, 2);
+        feed(&mut m, 2, 6, 10); // well below median − 0.2
+        assert_eq!(m.drifting(), vec![2]);
+        assert!(m.evictable().is_empty());
+    }
+
+    #[test]
+    fn eviction_removes_from_routing_and_median() {
+        let mut m = monitor(3);
+        feed(&mut m, 0, 16, 0);
+        feed(&mut m, 1, 16, 0);
+        feed(&mut m, 2, 1, 15);
+        assert_eq!(m.evictable(), vec![2]);
+        m.evict(2);
+        assert_eq!(m.healthy(), vec![0, 1]);
+        assert!(m.evictable().is_empty());
+        assert_eq!(m.median_accuracy(), Some(1.0));
+    }
+
+    #[test]
+    fn recalibration_resets_the_window() {
+        let mut m = monitor(2);
+        feed(&mut m, 0, 16, 0);
+        feed(&mut m, 1, 2, 14);
+        m.note_recalibrated(1);
+        assert_eq!(m.chip(1).labeled_samples(), 0);
+        assert_eq!(m.chip(1).recalibrations, 1);
+        assert!(m.drifting().is_empty()); // not enough fresh samples
+    }
+
+    #[test]
+    fn abstentions_and_latency_tracked() {
+        let mut m = monitor(1);
+        m.record(0, None, true, 500);
+        m.record(0, None, false, 300);
+        assert!((m.chip(0).abstention_rate() - 0.5).abs() < 1e-12);
+        assert!((m.chip(0).mean_latency_us() - 400.0).abs() < 1e-12);
+        assert_eq!(m.chip(0).rolling_accuracy(), None);
+    }
+}

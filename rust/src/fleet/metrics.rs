@@ -1,0 +1,178 @@
+//! Per-chip and fleet-aggregate serving statistics.
+//!
+//! The coordinator's [`crate::coordinator::Metrics`] counts the request
+//! loop; these counters describe the *chips* behind it — who served what,
+//! how well, and how fast — so operators can see one replica dragging the
+//! farm down.  Snapshots are plain data: cheap to clone, merge and print.
+
+use std::fmt;
+
+use super::chip::ChipId;
+
+/// Cumulative serving counters for one chip.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChipStats {
+    /// Requests served.
+    pub served: u64,
+    /// Stochastic trials executed.
+    pub trials: u64,
+    /// Requests where every trial abstained.
+    pub abstentions: u64,
+    /// Served requests that carried a label.
+    pub labeled: u64,
+    /// Correct predictions among labeled requests.
+    pub hits: u64,
+    /// Total busy time [µs].
+    pub busy_us: u64,
+    /// Worst single-request latency [µs].
+    pub max_latency_us: u64,
+}
+
+impl ChipStats {
+    pub fn record(&mut self, trials: u64, abstained: bool, correct: Option<bool>, latency_us: u64) {
+        self.served += 1;
+        self.trials += trials;
+        if abstained {
+            self.abstentions += 1;
+        }
+        if let Some(c) = correct {
+            self.labeled += 1;
+            if c {
+                self.hits += 1;
+            }
+        }
+        self.busy_us += latency_us;
+        self.max_latency_us = self.max_latency_us.max(latency_us);
+    }
+
+    /// Accuracy over labeled traffic (None when unlabeled).
+    pub fn accuracy(&self) -> Option<f64> {
+        if self.labeled == 0 {
+            None
+        } else {
+            Some(self.hits as f64 / self.labeled as f64)
+        }
+    }
+
+    /// Mean latency per served request [µs].
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.served == 0 {
+            return 0.0;
+        }
+        self.busy_us as f64 / self.served as f64
+    }
+
+    pub fn merge(&mut self, other: &ChipStats) {
+        self.served += other.served;
+        self.trials += other.trials;
+        self.abstentions += other.abstentions;
+        self.labeled += other.labeled;
+        self.hits += other.hits;
+        self.busy_us += other.busy_us;
+        self.max_latency_us = self.max_latency_us.max(other.max_latency_us);
+    }
+}
+
+/// Point-in-time copy of every chip's stats.
+#[derive(Debug, Clone, Default)]
+pub struct FleetSnapshot {
+    pub chips: Vec<(ChipId, ChipStats)>,
+}
+
+impl FleetSnapshot {
+    /// Fleet-wide totals.
+    pub fn aggregate(&self) -> ChipStats {
+        let mut total = ChipStats::default();
+        for (_, s) in &self.chips {
+            total.merge(s);
+        }
+        total
+    }
+
+    /// Largest served-count imbalance between two *participating* chips
+    /// (router QA).  Chips that served nothing — evicted dies, or farms
+    /// larger than the workload — are excluded so eviction doesn't read
+    /// as a routing failure.
+    pub fn load_imbalance(&self) -> u64 {
+        let served: Vec<u64> = self
+            .chips
+            .iter()
+            .map(|(_, s)| s.served)
+            .filter(|&n| n > 0)
+            .collect();
+        match (served.iter().max(), served.iter().min()) {
+            (Some(mx), Some(mn)) => mx - mn,
+            _ => 0,
+        }
+    }
+}
+
+impl fmt::Display for FleetSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (id, s) in &self.chips {
+            let acc = s
+                .accuracy()
+                .map(|a| format!("{:.1}%", a * 100.0))
+                .unwrap_or_else(|| "n/a".into());
+            writeln!(
+                f,
+                "chip {id:>2}: served {:>6}  trials {:>7}  acc {acc:>6}  abstain {:>4}  mean {:>7.0}µs  max {:>6}µs",
+                s.served, s.trials, s.abstentions, s.mean_latency_us(), s.max_latency_us
+            )?;
+        }
+        let t = self.aggregate();
+        let acc = t
+            .accuracy()
+            .map(|a| format!("{:.1}%", a * 100.0))
+            .unwrap_or_else(|| "n/a".into());
+        write!(
+            f,
+            "fleet  : served {:>6}  trials {:>7}  acc {acc:>6}  abstain {:>4}  imbalance {}",
+            t.served, t.trials, t.abstentions, self.load_imbalance()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_accuracy() {
+        let mut s = ChipStats::default();
+        s.record(9, false, Some(true), 120);
+        s.record(9, false, Some(false), 80);
+        s.record(9, true, None, 400);
+        assert_eq!(s.served, 3);
+        assert_eq!(s.trials, 27);
+        assert_eq!(s.abstentions, 1);
+        assert_eq!(s.accuracy(), Some(0.5));
+        assert_eq!(s.max_latency_us, 400);
+        assert!((s.mean_latency_us() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_and_imbalance() {
+        let mut a = ChipStats::default();
+        let mut b = ChipStats::default();
+        for _ in 0..10 {
+            a.record(5, false, Some(true), 100);
+        }
+        for _ in 0..4 {
+            b.record(5, false, Some(false), 300);
+        }
+        let snap = FleetSnapshot { chips: vec![(0, a), (1, b)] };
+        let t = snap.aggregate();
+        assert_eq!(t.served, 14);
+        assert_eq!(t.trials, 70);
+        assert_eq!(t.accuracy(), Some(10.0 / 14.0));
+        assert_eq!(snap.load_imbalance(), 6);
+        // An idle (evicted / never-routed) chip must not inflate imbalance.
+        let mut snap2 = snap.clone();
+        snap2.chips.push((2, ChipStats::default()));
+        assert_eq!(snap2.load_imbalance(), 6);
+        let text = format!("{snap}");
+        assert!(text.contains("chip  0"));
+        assert!(text.contains("fleet"));
+    }
+}

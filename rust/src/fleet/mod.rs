@@ -1,0 +1,362 @@
+//! Fleet layer: serve inference across a farm of non-identical RACA chips.
+//!
+//! One simulated die is never the deployment story — production runs many
+//! chips, each with its own programming-variation draw, and compensates at
+//! the system level (Marinella et al.'s multiscale co-design argument).
+//! This subsystem is that level:
+//!
+//! * [`Chip`] — one die: `NativeEngine` (or `PhysicalEngine`) programmed
+//!   through the conductance mapping with a private [`VariationModel`]
+//!   draw and RNG stream derived from `(fleet_seed, chip_id)`;
+//! * [`Calibrator`] — per-chip (θ, σ_z) grid search against a held-out
+//!   calibration set; never worse than the nominal point on that set;
+//! * [`Router`] — round-robin / least-loaded dispatch over healthy chips;
+//! * [`HealthMonitor`] — rolling per-chip accuracy/latency, drift
+//!   flagging (→ recalibrate) and eviction (→ drop from routing);
+//! * [`FleetRunner`] — a [`crate::coordinator::TrialRunner`] that shards
+//!   scheduler batches across the farm, so the whole coordinator stack
+//!   (batcher, early-stopper, server) runs unchanged on top of N chips.
+//!
+//! `raca fleet --chips 8 --sigma 0.10` exercises the full loop:
+//! program → calibrate → serve → health report.
+
+pub mod calibrate;
+pub mod chip;
+pub mod health;
+pub mod metrics;
+pub mod router;
+pub mod runner;
+
+pub use calibrate::{CalibrationReport, Calibrator};
+pub use chip::{chip_seed, program_weights, Chip, ChipId};
+pub use health::{ChipHealth, HealthConfig, HealthMonitor};
+pub use metrics::{ChipStats, FleetSnapshot};
+pub use router::{RoutePolicy, Router};
+pub use runner::FleetRunner;
+
+use std::time::{Duration, Instant};
+
+use crate::dataset::Dataset;
+use crate::device::VariationModel;
+use crate::engine::{NativeEngine, TrialEngine};
+use crate::nn::Weights;
+
+/// Knobs of a fleet run (`raca fleet` flags / the `"fleet"` config block).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of chips to program.
+    pub chips: usize,
+    /// Lognormal programming-variation σ per die.
+    pub sigma: f64,
+    /// Stuck-at-G_min / stuck-at-G_max device probabilities.
+    pub stuck_lo: f64,
+    pub stuck_hi: f64,
+    pub policy: RoutePolicy,
+    /// Held-out calibration set size and vote trials per image.
+    pub cal_images: usize,
+    pub cal_trials: usize,
+    /// Served workload size and vote trials per request.
+    pub serve_images: usize,
+    pub serve_trials: usize,
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            chips: 8,
+            sigma: 0.10,
+            stuck_lo: 0.0,
+            stuck_hi: 0.0,
+            policy: RoutePolicy::RoundRobin,
+            cal_images: 96,
+            cal_trials: 7,
+            serve_images: 256,
+            serve_trials: 9,
+            seed: 0xF1EE7,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn variation(&self) -> VariationModel {
+        VariationModel::with_defects(self.sigma, self.stuck_lo, self.stuck_hi)
+    }
+}
+
+/// Result of serving a workload through the router.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub served: usize,
+    pub labeled: usize,
+    pub hits: usize,
+    pub abstentions: u64,
+    pub wall: Duration,
+    pub snapshot: FleetSnapshot,
+}
+
+impl ServeReport {
+    /// Accuracy over labeled requests (None for unlabeled traffic).
+    pub fn accuracy(&self) -> Option<f64> {
+        if self.labeled == 0 {
+            None
+        } else {
+            Some(self.hits as f64 / self.labeled as f64)
+        }
+    }
+
+    /// Served requests per wall-clock second.
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.served as f64 / self.wall.as_secs_f64()
+    }
+}
+
+/// A farm of programmed chips plus its router and health state.
+pub struct Fleet<E> {
+    pub chips: Vec<Chip<E>>,
+    pub router: Router,
+    pub health: HealthMonitor,
+    pub seed: u64,
+    stats: Vec<ChipStats>,
+}
+
+impl Fleet<NativeEngine> {
+    /// Program `n_chips` native-engine dies from one set of nominal
+    /// weights; every die draws its own variation from the fleet seed.
+    pub fn program_native(
+        nominal: &Weights,
+        n_chips: usize,
+        variation: &VariationModel,
+        policy: RoutePolicy,
+        seed: u64,
+    ) -> Self {
+        assert!(n_chips > 0, "a fleet needs at least one chip");
+        let chips = (0..n_chips)
+            .map(|id| Chip::program_native(id, nominal, variation, seed))
+            .collect();
+        Self {
+            chips,
+            router: Router::new(policy),
+            health: HealthMonitor::new(n_chips, HealthConfig::default()),
+            seed,
+            stats: vec![ChipStats::default(); n_chips],
+        }
+    }
+}
+
+impl<E: TrialEngine> Fleet<E> {
+    pub fn len(&self) -> usize {
+        self.chips.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chips.is_empty()
+    }
+
+    /// Calibrate every healthy chip against `cal`; returns one report per
+    /// calibrated chip.
+    pub fn calibrate(&mut self, cal: &Dataset, calibrator: &Calibrator) -> Vec<CalibrationReport> {
+        let mut reports = Vec::new();
+        for chip in self.chips.iter_mut() {
+            if self.health.chip(chip.id).evicted {
+                continue;
+            }
+            reports.push(calibrator.calibrate_chip(chip, cal));
+            self.health.note_recalibrated(chip.id);
+        }
+        reports
+    }
+
+    /// Mean per-chip vote accuracy on `ds` under each chip's *active*
+    /// parameters, scored with the calibrator's deterministic protocol.
+    /// This is the fleet-level "classifies a batch" number: every healthy
+    /// chip classifies the full set, and the fleet average is reported.
+    pub fn mean_accuracy(&mut self, ds: &Dataset, calibrator: &Calibrator) -> f64 {
+        let mut total = 0.0;
+        let mut counted = 0usize;
+        for chip in self.chips.iter_mut() {
+            if self.health.chip(chip.id).evicted {
+                continue;
+            }
+            total += calibrator.score(&mut chip.engine, chip.params, ds);
+            counted += 1;
+        }
+        if counted == 0 {
+            0.0
+        } else {
+            total / counted as f64
+        }
+    }
+
+    /// Serve a labeled workload request-by-request through the router,
+    /// recording health and per-chip stats.
+    pub fn serve(&mut self, ds: &Dataset, trials: usize, seed: u64) -> ServeReport {
+        let t0 = Instant::now();
+        let mut hits = 0usize;
+        let mut abstentions = 0u64;
+        let mut served = 0usize;
+        // Nothing evicts mid-serve, so the healthy set is loop-invariant;
+        // loads change by one element per request and are kept incrementally.
+        let healthy = self.health.healthy();
+        let mut loads: Vec<u64> = self.stats.iter().map(|s| s.served).collect();
+        for i in 0..ds.len() {
+            let Some(id) = self.router.pick(&healthy, &loads) else { break };
+            loads[id] += 1;
+            let req_t0 = Instant::now();
+            let pred = self.chips[id].classify(
+                ds.image(i),
+                trials,
+                // 2^32 trial indices per image — streams never overlap for
+                // any realistic --trials value.
+                seed.wrapping_add((i as u64) << 32),
+            );
+            let latency_us = req_t0.elapsed().as_micros() as u64;
+            let abstained = pred < 0;
+            let correct = pred == ds.label(i);
+            served += 1;
+            if correct {
+                hits += 1;
+            }
+            if abstained {
+                abstentions += 1;
+            }
+            self.health.record(id, Some(correct), abstained, latency_us);
+            self.stats[id].record(trials as u64, abstained, Some(correct), latency_us);
+        }
+        ServeReport {
+            served,
+            labeled: served,
+            hits,
+            abstentions,
+            wall: t0.elapsed(),
+            snapshot: self.snapshot(),
+        }
+    }
+
+    /// Recalibrate drifting chips and evict chips under the hard floor.
+    /// Returns `(recalibrated, evicted)` chip ids.
+    pub fn heal(&mut self, cal: &Dataset, calibrator: &Calibrator) -> (Vec<ChipId>, Vec<ChipId>) {
+        let evicted = self.health.evictable();
+        for &id in &evicted {
+            self.health.evict(id);
+        }
+        let drifting = self.health.drifting();
+        for &id in &drifting {
+            calibrator.calibrate_chip(&mut self.chips[id], cal);
+            self.health.note_recalibrated(id);
+        }
+        (drifting, evicted)
+    }
+
+    /// Point-in-time per-chip stats.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        FleetSnapshot {
+            chips: self
+                .chips
+                .iter()
+                .map(|c| (c.id, self.stats[c.id].clone()))
+                .collect(),
+        }
+    }
+
+    /// Hand the healthy chips to a scheduler-driven [`FleetRunner`].
+    pub fn into_runner(self) -> FleetRunner<E> {
+        FleetRunner::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModelSpec;
+
+    fn nominal() -> Weights {
+        Weights::random(ModelSpec::new(vec![784, 10, 10]), 4)
+    }
+
+    fn labeled_batch(n: usize) -> Dataset {
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..n {
+            images.extend((0..784).map(|j| ((i * 13 + j) % 17) as f32 / 17.0));
+            labels.push((i % 10) as i32);
+        }
+        Dataset { images, labels }
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_same_farm() {
+        let w = nominal();
+        let v = VariationModel::lognormal(0.10);
+        let a = Fleet::program_native(&w, 3, &v, RoutePolicy::RoundRobin, 7);
+        let b = Fleet::program_native(&w, 3, &v, RoutePolicy::RoundRobin, 7);
+        for (ca, cb) in a.chips.iter().zip(&b.chips) {
+            assert_eq!(ca.engine.weights.mats, cb.engine.weights.mats);
+        }
+        let c = Fleet::program_native(&w, 3, &v, RoutePolicy::RoundRobin, 8);
+        assert_ne!(
+            a.chips[0].engine.weights.mats,
+            c.chips[0].engine.weights.mats
+        );
+    }
+
+    #[test]
+    fn serve_balances_round_robin() {
+        let w = nominal();
+        let mut fleet = Fleet::program_native(
+            &w,
+            4,
+            &VariationModel::lognormal(0.05),
+            RoutePolicy::RoundRobin,
+            11,
+        );
+        let ds = labeled_batch(40);
+        let report = fleet.serve(&ds, 3, 123);
+        assert_eq!(report.served, 40);
+        assert_eq!(report.snapshot.load_imbalance(), 0);
+        let agg = report.snapshot.aggregate();
+        assert_eq!(agg.served, 40);
+        assert_eq!(agg.trials, 120);
+    }
+
+    #[test]
+    fn serve_skips_evicted_chips() {
+        let w = nominal();
+        let mut fleet = Fleet::program_native(
+            &w,
+            3,
+            &VariationModel::default(),
+            RoutePolicy::LeastLoaded,
+            13,
+        );
+        fleet.health.evict(1);
+        let ds = labeled_batch(12);
+        let report = fleet.serve(&ds, 2, 5);
+        assert_eq!(report.served, 12);
+        assert_eq!(report.snapshot.chips[1].1.served, 0);
+        assert_eq!(report.snapshot.chips[0].1.served + report.snapshot.chips[2].1.served, 12);
+    }
+
+    #[test]
+    fn calibrate_skips_evicted_and_reports_all_healthy() {
+        let w = nominal();
+        let mut fleet = Fleet::program_native(
+            &w,
+            3,
+            &VariationModel::lognormal(0.10),
+            RoutePolicy::RoundRobin,
+            17,
+        );
+        fleet.health.evict(0);
+        let ds = labeled_batch(8);
+        let reports = fleet.calibrate(&ds, &Calibrator::quick(3));
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|r| r.chip != 0));
+        for r in &reports {
+            assert!(r.calibrated_accuracy >= r.baseline_accuracy);
+        }
+    }
+}

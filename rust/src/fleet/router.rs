@@ -1,0 +1,116 @@
+//! Request routing across healthy replicas.
+//!
+//! The router only *picks* — it never owns chips — and drives the
+//! request-level [`crate::fleet::Fleet::serve`] loop.  (The scheduler-side
+//! [`crate::fleet::FleetRunner`] shards each batch evenly across healthy
+//! chips instead; `--policy` does not affect that path.)  Policies are
+//! deliberately pluggable: round-robin is the throughput-optimal choice
+//! for homogeneous trial costs, least-loaded wins once chips drift apart
+//! (eviction, recalibration pauses, heterogeneous dies).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::chip::ChipId;
+
+/// Dispatch policy over healthy replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    #[default]
+    RoundRobin,
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
+            "least-loaded" | "ll" => Some(RoutePolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Stateless-per-request picker (the round-robin cursor is the only
+/// internal state, and it is lock-free).
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    cursor: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Self { policy, cursor: AtomicUsize::new(0) }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick a chip from `healthy`.  `load` maps chip id → current load
+    /// (in-flight or cumulative served, caller's choice); only consulted
+    /// by [`RoutePolicy::LeastLoaded`], ties break toward the lower id.
+    pub fn pick(&self, healthy: &[ChipId], load: &[u64]) -> Option<ChipId> {
+        if healthy.is_empty() {
+            return None;
+        }
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let k = self.cursor.fetch_add(1, Ordering::Relaxed);
+                Some(healthy[k % healthy.len()])
+            }
+            RoutePolicy::LeastLoaded => healthy
+                .iter()
+                .copied()
+                .min_by_key(|&id| (load.get(id).copied().unwrap_or(0), id)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("least-loaded"), Some(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+        assert_eq!(RoutePolicy::RoundRobin.name(), "round-robin");
+    }
+
+    #[test]
+    fn round_robin_cycles_over_healthy_only() {
+        let r = Router::new(RoutePolicy::RoundRobin);
+        let healthy = vec![0usize, 2, 3]; // chip 1 evicted
+        let picks: Vec<ChipId> =
+            (0..6).map(|_| r.pick(&healthy, &[]).unwrap()).collect();
+        assert_eq!(picks, vec![0, 2, 3, 0, 2, 3]);
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum_then_lower_id() {
+        let r = Router::new(RoutePolicy::LeastLoaded);
+        let healthy = vec![0usize, 1, 2];
+        assert_eq!(r.pick(&healthy, &[5, 2, 9]), Some(1));
+        assert_eq!(r.pick(&healthy, &[4, 4, 9]), Some(0)); // tie → lower id
+        // Missing load entries count as zero load.
+        assert_eq!(r.pick(&[0, 1, 7], &[3, 1, 2]), Some(7));
+    }
+
+    #[test]
+    fn empty_fleet_yields_none() {
+        let r = Router::new(RoutePolicy::RoundRobin);
+        assert_eq!(r.pick(&[], &[]), None);
+        let r = Router::new(RoutePolicy::LeastLoaded);
+        assert_eq!(r.pick(&[], &[1, 2]), None);
+    }
+}

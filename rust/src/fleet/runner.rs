@@ -1,0 +1,193 @@
+//! Fleet-backed [`TrialRunner`]: the coordinator's scheduler drives a whole
+//! farm instead of one engine.
+//!
+//! `run` shards each packed batch across the healthy chips (contiguous
+//! row ranges, one scoped thread per chip) and reassembles winners in row
+//! order.  Each chip executes with *its own* calibrated parameters —
+//! the scheduler's nominal `TrialParams` only applies to chips that were
+//! never calibrated — and each row's trial seed depends only on the batch
+//! seed and row index, so routing never changes a row's RNG stream.
+//!
+//! Per-chip [`Metrics`] record batches/rows/latency, and
+//! [`FleetRunner::combined_metrics`] folds them with
+//! [`MetricsSnapshot::combine`] for the fleet-aggregate view.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::coordinator::{Metrics, MetricsSnapshot, TrialRunner};
+use crate::engine::{TrialEngine, TrialParams};
+
+use super::chip::Chip;
+use super::Fleet;
+
+/// `Clone + Send`-free owner of the chips behind a scheduler.
+pub struct FleetRunner<E> {
+    chips: Vec<Mutex<Chip<E>>>,
+    metrics: Vec<std::sync::Arc<Metrics>>,
+    /// Preferred rows per scheduler batch (scales with fleet width).
+    rows_per_batch: usize,
+}
+
+impl<E: TrialEngine> FleetRunner<E> {
+    /// Take ownership of a fleet's healthy chips.
+    pub fn new(fleet: Fleet<E>) -> Self {
+        let healthy = fleet.health.healthy();
+        let chips: Vec<Mutex<Chip<E>>> = fleet
+            .chips
+            .into_iter()
+            .filter(|c| healthy.contains(&c.id))
+            .map(Mutex::new)
+            .collect();
+        let n = chips.len().max(1);
+        let metrics = (0..chips.len()).map(|_| Metrics::new()).collect();
+        Self { chips, metrics, rows_per_batch: 32 * n }
+    }
+
+    pub fn num_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    /// Per-chip scheduler-side metrics (batches, rows, latency).
+    pub fn per_chip_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.metrics.iter().map(|m| m.snapshot()).collect()
+    }
+
+    /// Fleet-aggregate metrics.
+    pub fn combined_metrics(&self) -> MetricsSnapshot {
+        self.per_chip_metrics()
+            .into_iter()
+            .reduce(|a, b| a.combine(&b))
+            .unwrap_or_else(|| Metrics::new().snapshot())
+    }
+}
+
+impl<E: TrialEngine> TrialRunner for FleetRunner<E> {
+    fn run(&self, x: &[f32], rows: usize, seed: u32, p: TrialParams) -> Result<Vec<i32>> {
+        anyhow::ensure!(!self.chips.is_empty(), "fleet has no healthy chips");
+        anyhow::ensure!(rows > 0 && x.len() % rows == 0, "bad trial input shape");
+        let features = x.len() / rows;
+        let n = self.chips.len().min(rows);
+        // Contiguous shards, sizes differing by at most one row.
+        let base = rows / n;
+        let extra = rows % n;
+        let mut shards: Vec<(usize, usize)> = Vec::with_capacity(n); // (start, len)
+        let mut start = 0usize;
+        for k in 0..n {
+            let len = base + usize::from(k < extra);
+            shards.push((start, len));
+            start += len;
+        }
+        let mut winners = vec![-1i32; rows];
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n);
+            for (k, &(lo, len)) in shards.iter().enumerate() {
+                let chip = &self.chips[k];
+                let metrics = &self.metrics[k];
+                handles.push(s.spawn(move || {
+                    let t0 = std::time::Instant::now();
+                    let mut chip = chip.lock().unwrap();
+                    // Calibrated chips use their own validated params (even
+                    // when calibration chose the nominal point); only chips
+                    // never calibrated follow the scheduler.
+                    let cp = if chip.calibrated { chip.params } else { p };
+                    let mut out = Vec::with_capacity(len);
+                    for r in lo..lo + len {
+                        let xi = &x[r * features..(r + 1) * features];
+                        let trial_idx = (seed as u64).wrapping_add(r as u64);
+                        out.push(chip.engine.trial(xi, cp, trial_idx));
+                    }
+                    use std::sync::atomic::Ordering::Relaxed;
+                    metrics.batches_executed.fetch_add(1, Relaxed);
+                    metrics.rows_packed.fetch_add(len as u64, Relaxed);
+                    metrics.trials_executed.fetch_add(len as u64, Relaxed);
+                    metrics.record_latency(t0.elapsed());
+                    out
+                }));
+            }
+            for (h, &(lo, len)) in handles.into_iter().zip(shards.iter()) {
+                let part = h.join().expect("fleet shard thread panicked");
+                winners[lo..lo + len].copy_from_slice(&part);
+            }
+        });
+        Ok(winners)
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.rows_per_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Scheduler, SchedulerConfig};
+    use crate::device::VariationModel;
+    use crate::fleet::RoutePolicy;
+    use crate::nn::{ModelSpec, Weights};
+
+    fn runner(n_chips: usize) -> FleetRunner<crate::engine::NativeEngine> {
+        let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 5);
+        let fleet = Fleet::program_native(
+            &w,
+            n_chips,
+            &VariationModel::lognormal(0.05),
+            RoutePolicy::RoundRobin,
+            99,
+        );
+        FleetRunner::new(fleet)
+    }
+
+    #[test]
+    fn shards_cover_all_rows_in_order() {
+        let r = runner(3);
+        let rows = 10usize;
+        let x: Vec<f32> = (0..rows * 784).map(|i| (i % 11) as f32 / 11.0).collect();
+        let w1 = r.run(&x, rows, 42, TrialParams::default()).unwrap();
+        assert_eq!(w1.len(), rows);
+        assert!(w1.iter().all(|&v| (-1..10).contains(&v)));
+        // Deterministic given the same seed.
+        let w2 = r.run(&x, rows, 42, TrialParams::default()).unwrap();
+        assert_eq!(w1, w2);
+        let m = r.combined_metrics();
+        assert_eq!(m.rows_packed, 2 * rows as u64);
+        assert_eq!(m.batches_executed, 6);
+    }
+
+    #[test]
+    fn fewer_rows_than_chips_still_works() {
+        let r = runner(4);
+        let x: Vec<f32> = vec![0.3; 784];
+        let w = r.run(&x, 1, 7, TrialParams::default()).unwrap();
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn scheduler_drives_the_fleet_end_to_end() {
+        let r = runner(2);
+        let mut cfg = SchedulerConfig::default();
+        cfg.batch_size = 16;
+        let mut sched = Scheduler::new(r, cfg, Metrics::new());
+        for i in 0..5u64 {
+            sched
+                .submit(
+                    crate::coordinator::InferRequest::new(i, vec![0.4; 784])
+                        .with_budget(8, 0.0),
+                )
+                .unwrap();
+        }
+        let done = sched.run_to_completion().unwrap();
+        assert_eq!(done.len(), 5);
+        for resp in &done {
+            assert_eq!(resp.trials_used, 8);
+        }
+    }
+
+    #[test]
+    fn bad_shapes_are_rejected() {
+        let r = runner(2);
+        assert!(r.run(&[0.0; 100], 3, 1, TrialParams::default()).is_err());
+        assert!(r.run(&[], 0, 1, TrialParams::default()).is_err());
+    }
+}

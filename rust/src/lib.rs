@@ -13,9 +13,11 @@
 //!   hardware cost model that regenerates the paper's Table I.
 //!
 //! Module map (DESIGN.md §4): `stats` → `device` → `circuit` → `crossbar`
-//! → `neuron` → `nn` → `engine` → `runtime` → `coordinator`, with
-//! `hwmodel` (Table I), `dataset`, `figures` (Fig. 4/5/6) and `util` on
-//! the side.
+//! → `neuron` → `nn` → `engine` → `runtime` → `coordinator` → `fleet`,
+//! with `hwmodel` (Table I), `dataset`, `figures` (Fig. 4/5/6) and `util`
+//! on the side.  `fleet` is the first layer above "one chip": it programs,
+//! calibrates, health-checks and load-balances a farm of non-identical
+//! simulated RACA dies behind the coordinator's `TrialRunner` interface.
 
 pub mod arch;
 pub mod circuit;
@@ -27,6 +29,7 @@ pub mod dataset;
 pub mod device;
 pub mod engine;
 pub mod figures;
+pub mod fleet;
 pub mod hwmodel;
 pub mod neuron;
 pub mod nn;

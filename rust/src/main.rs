@@ -11,16 +11,28 @@
 //! raca table1                       # + breakdowns
 //! raca ablate --noise|--variation|--tiles|--low-vr [--images N]
 //! raca infer --images N [--trials K] [--confidence C]   # coordinator path
+//! raca fleet --chips N --sigma S    # multi-chip farm: program,
+//!                                   # calibrate, route, serve, report
 //! raca selftest                     # quick end-to-end smoke
 //! ```
+//!
+//! The AOT/PJRT paths (`--engine xla`, `infer`/`selftest` over artifacts)
+//! need the `pjrt` cargo feature; default builds use the native engine.
 
 use anyhow::Result;
 
 use raca::cli::Args;
-use raca::coordinator::{SchedulerConfig, Server};
-use raca::dataset::Dataset;
-use raca::engine::{TrialParams, XlaEngine};
+use raca::coordinator::{InferRequest, Metrics, Scheduler, SchedulerConfig, Server};
+use raca::dataset::{synth, Dataset};
+use raca::engine::{NativeEngine, TrialParams};
 use raca::figures;
+use raca::fleet::{Calibrator, Fleet, FleetConfig, RoutePolicy};
+use raca::nn::{ModelSpec, TrainConfig, Weights};
+use raca::runtime::default_artifact_dir;
+
+#[cfg(feature = "pjrt")]
+use raca::engine::XlaEngine;
+#[cfg(feature = "pjrt")]
 use raca::runtime::ArtifactStore;
 
 fn main() -> Result<()> {
@@ -77,6 +89,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some("infer") => infer(&args),
+        Some("fleet") => fleet(&args),
         Some("selftest") => selftest(),
         _ => {
             print!("{}", HELP);
@@ -95,16 +108,52 @@ USAGE: raca <subcommand> [flags]
   fig6        accuracy vs trials      --panel all|a|b --images N --engine native|xla
   table1      hardware metrics table + low-Vr ablation
   ablate      robustness ablations    --noise --variation --tiles --low-vr
-  infer       serve N test images through the coordinator (XLA engine)
+  infer       serve N test images through the coordinator
               --images N --trials K --confidence C --batch B
+  fleet       program + calibrate + serve a farm of non-identical chips
+              --chips N --sigma S --policy round-robin|least-loaded
+              --images N --trials K --cal-images N --cal-trials K
+              --seed S --config run.json
   selftest    quick end-to-end smoke test
 
 Add --fast to fig4/fig5/fig6 for CI-sized runs.
+XLA/PJRT paths require building with `--features pjrt`.
 "#;
 
+/// Load the trained artifacts if present; otherwise train a small native
+/// MLP on synthetic digits so every path works on a fresh checkout.
+/// Returns (weights, labeled evaluation set).
+fn load_or_train() -> Result<(Weights, Dataset)> {
+    let dir = default_artifact_dir();
+    let loaded = Weights::load(&dir.join("weights").join("fcnn")).and_then(|w| {
+        let ds = Dataset::load(&dir.join("data").join("test"))?;
+        Ok((w, ds))
+    });
+    match loaded {
+        Ok((w, ds)) => {
+            println!(
+                "model: trained artifacts from {} (ideal accuracy {:.1}%)",
+                dir.display(),
+                w.ideal_test_accuracy * 100.0
+            );
+            Ok((w, ds))
+        }
+        Err(e) => {
+            println!("model: artifacts unavailable ({e:#})");
+            println!("model: training a native 784-48-10 MLP on synthetic digits instead…");
+            let train_set = synth::generate(800, 0x7EA1);
+            let cfg = TrainConfig { epochs: 8, lr: 0.2, seed: 0x5EED };
+            let w = raca::nn::train(&train_set, ModelSpec::new(vec![784, 48, 10]), &cfg);
+            println!("model: trained, ideal train accuracy {:.1}%", w.ideal_test_accuracy * 100.0);
+            Ok((w, synth::generate(512, 0x7E57)))
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
 fn info() -> Result<()> {
     println!("raca {}", raca::version::VERSION);
-    let dir = ArtifactStore::default_dir();
+    let dir = default_artifact_dir();
     println!("artifacts: {}", dir.display());
     match ArtifactStore::open(&dir) {
         Ok(store) => {
@@ -128,13 +177,31 @@ fn info() -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn info() -> Result<()> {
+    println!("raca {}", raca::version::VERSION);
+    let dir = default_artifact_dir();
+    println!("artifacts: {}", dir.display());
+    match Weights::load(&dir.join("weights").join("fcnn")) {
+        Ok(w) => println!(
+            "  layers        : {:?} (ideal accuracy {:.2}%)",
+            w.spec.widths,
+            w.ideal_test_accuracy * 100.0
+        ),
+        Err(e) => println!("  weights       : unavailable ({e:#})"),
+    }
+    println!("  PJRT          : disabled (rebuild with --features pjrt)");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn infer(args: &Args) -> Result<()> {
     let n = args.get_usize("images", 64);
     let trials = args.get_usize("trials", 32) as u32;
     let confidence = args.get_f64("confidence", 0.95);
     let batch = args.get_usize("batch", 32);
 
-    let dir = ArtifactStore::default_dir();
+    let dir = default_artifact_dir();
     let ds = Dataset::load(&dir.join("data").join("test"))?.take(n);
     let engine = XlaEngine::start(dir)?;
     let handle = engine.handle();
@@ -144,8 +211,36 @@ fn infer(args: &Args) -> Result<()> {
     cfg.batch_size = batch;
     cfg.params = TrialParams::default();
     let server = Server::start(handle, cfg);
-    let client = server.client();
+    serve_and_report(&server, &ds, trials, confidence, batch)
+}
 
+#[cfg(not(feature = "pjrt"))]
+fn infer(args: &Args) -> Result<()> {
+    let n = args.get_usize("images", 64);
+    let trials = args.get_usize("trials", 32) as u32;
+    let confidence = args.get_f64("confidence", 0.95);
+    let batch = args.get_usize("batch", 32);
+
+    let (w, ds) = load_or_train()?;
+    let ds = ds.take(n);
+    let engine = NativeEngine::new(std::sync::Arc::new(w), 0x1FE2);
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = batch;
+    cfg.params = TrialParams::default();
+    let server = Server::start(engine, cfg);
+    serve_and_report(&server, &ds, trials, confidence, batch)
+}
+
+/// Shared tail of `raca infer`: push the set through the server, report
+/// accuracy / trial spend / throughput / fill.
+fn serve_and_report(
+    server: &Server,
+    ds: &Dataset,
+    trials: u32,
+    confidence: f64,
+    batch: usize,
+) -> Result<()> {
+    let client = server.client();
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..ds.len())
         .map(|i| client.submit(ds.image(i).to_vec(), trials, confidence).unwrap())
@@ -174,11 +269,162 @@ fn infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `raca fleet` — the full multi-chip loop: program N non-identical dies,
+/// calibrate each against a held-out set, serve a workload through the
+/// router, then fan scheduler batches across the farm.
+fn fleet(args: &Args) -> Result<()> {
+    use anyhow::Context as _;
+
+    let mut fc = match args.get("config") {
+        Some(path) => raca::config::RunConfig::load(std::path::Path::new(path))?.fleet,
+        None => FleetConfig::default(),
+    };
+    fc.chips = args.get_usize("chips", fc.chips);
+    fc.sigma = args.get_f64("sigma", fc.sigma);
+    if let Some(p) = args.get("policy") {
+        fc.policy = RoutePolicy::parse(p).with_context(|| format!("unknown policy '{p}'"))?;
+    }
+    fc.cal_images = args.get_usize("cal-images", fc.cal_images);
+    fc.cal_trials = args.get_usize("cal-trials", fc.cal_trials);
+    fc.serve_images = args.get_usize("images", fc.serve_images);
+    fc.serve_trials = args.get_usize("trials", fc.serve_trials);
+    fc.seed = args.get_usize("seed", fc.seed as usize) as u64;
+    anyhow::ensure!(fc.chips > 0, "--chips must be at least 1");
+
+    println!(
+        "fleet: {} chips @ programming σ={:.2} (stuck {:.3}/{:.3}), policy {}, seed {:#x}",
+        fc.chips, fc.sigma, fc.stuck_lo, fc.stuck_hi, fc.policy.name(), fc.seed
+    );
+
+    // ---- model + data splits ---------------------------------------------
+    let (weights, pool) = load_or_train()?;
+    anyhow::ensure!(!pool.is_empty(), "no evaluation data available");
+    let cal = pool.take(fc.cal_images.min(pool.len()));
+    let serve_lo = cal.len().min(pool.len());
+    let mut workload = pool.slice(serve_lo, serve_lo + fc.serve_images);
+    if workload.is_empty() {
+        workload = cal.clone();
+    }
+    println!(
+        "data : {} calibration images, {} serving requests",
+        cal.len(),
+        workload.len()
+    );
+
+    // ---- program the farm -------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let variation = fc.variation();
+    let mut farm = Fleet::program_native(&weights, fc.chips, &variation, fc.policy, fc.seed);
+    println!("programmed {} dies in {:.2?}", farm.len(), t0.elapsed());
+
+    // ---- calibrate: per-chip grid search ---------------------------------
+    // The reports carry both numbers (scoring is deterministic), so no
+    // extra mean_accuracy passes are needed.
+    let calibrator = Calibrator { trials: fc.cal_trials, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let reports = farm.calibrate(&cal, &calibrator);
+    let cal_time = t0.elapsed();
+    let n_rep = reports.len().max(1) as f64;
+    let uncal_acc = reports.iter().map(|r| r.baseline_accuracy).sum::<f64>() / n_rep;
+    let cal_acc = reports.iter().map(|r| r.calibrated_accuracy).sum::<f64>() / n_rep;
+
+    let mut table = raca::util::table::Table::new(
+        &format!(
+            "Per-chip calibration ({} candidates × {} images × {} trials)",
+            reports.first().map(|r| r.candidates_tried).unwrap_or(0),
+            cal.len(),
+            fc.cal_trials
+        ),
+        &["chip", "baseline", "calibrated", "θ", "σ_z"],
+    );
+    for r in &reports {
+        table.row(vec![
+            r.chip.to_string(),
+            format!("{:.4}", r.baseline_accuracy),
+            format!("{:.4}", r.calibrated_accuracy),
+            format!("{:.2}", r.chosen.theta),
+            format!("{:.3}", r.chosen.sigma_z),
+        ]);
+    }
+    table.emit(&figures::results_dir(), "fleet_calibration")?;
+    println!(
+        "fleet accuracy on calibration set: uncalibrated {:.2}% → calibrated {:.2}% ({} chips, {:.2?})",
+        uncal_acc * 100.0,
+        cal_acc * 100.0,
+        farm.len(),
+        cal_time
+    );
+    debug_assert!(cal_acc >= uncal_acc, "calibration must not hurt on the cal set");
+
+    // ---- serve through the router ----------------------------------------
+    let report = farm.serve(&workload, fc.serve_trials, fc.seed ^ 0x5E11E);
+    println!(
+        "served {} requests in {:.2?} ({:.0} req/s) — accuracy {:.2}%, {} abstentions",
+        report.served,
+        report.wall,
+        report.requests_per_sec(),
+        report.accuracy().unwrap_or(0.0) * 100.0,
+        report.abstentions
+    );
+    println!("{}", report.snapshot);
+    let drifting = farm.health.drifting();
+    let evictable = farm.health.evictable();
+    if !drifting.is_empty() || !evictable.is_empty() {
+        println!("health: drifting {drifting:?}, evictable {evictable:?}");
+        let (recal, evicted) = farm.heal(&cal, &calibrator);
+        println!("health: recalibrated {recal:?}, evicted {evicted:?}");
+    } else {
+        println!("health: all {} chips within drift margin", farm.len());
+    }
+
+    // ---- coordinator fan-out: scheduler batches across the farm -----------
+    let runner = farm.into_runner();
+    let n_chips = runner.num_chips();
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = (16 * n_chips).max(16);
+    cfg.params = TrialParams::default();
+    let mut sched = Scheduler::new(runner, cfg, Metrics::new());
+    let t0 = std::time::Instant::now();
+    let mut hits = 0usize;
+    let mut done_total = 0usize;
+    let confidence = 0.9;
+    for wave in (0..workload.len()).collect::<Vec<_>>().chunks(128) {
+        for &j in wave {
+            let req = InferRequest::new(j as u64, workload.image(j).to_vec())
+                .with_budget(fc.serve_trials.max(4) as u32 * 2, confidence);
+            sched.submit(req).map_err(|_| anyhow::anyhow!("scheduler rejected request"))?;
+        }
+        for resp in sched.run_to_completion()? {
+            if resp.prediction == workload.label(resp.id as usize) {
+                hits += 1;
+            }
+            done_total += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    let m = sched.engine().combined_metrics();
+    println!(
+        "scheduler fan-out: {} requests over {} chips in {:.2?} — accuracy {:.2}%, {:.0} trials/s, per-chip rows {:?}",
+        done_total,
+        n_chips,
+        dt,
+        hits as f64 / done_total.max(1) as f64 * 100.0,
+        m.trials_executed as f64 / dt.as_secs_f64().max(1e-9),
+        sched
+            .engine()
+            .per_chip_metrics()
+            .iter()
+            .map(|s| s.rows_packed)
+            .collect::<Vec<_>>()
+    );
+    println!("fleet aggregate (scheduler path): {m}");
+    Ok(())
+}
+
 /// Chip floorplan + pipeline report (arch module).
 fn arch_report(args: &Args) -> Result<()> {
     use raca::arch::{Floorplan, PipelineModel};
     use raca::hwmodel::{Architecture, TechParams};
-    use raca::nn::ModelSpec;
 
     let tile = args.get_usize("tile", 128);
     let mut tech = TechParams::default();
@@ -215,14 +461,12 @@ fn arch_report(args: &Args) -> Result<()> {
 
 /// Trial-budget planning from measured per-image win statistics.
 fn plan(args: &Args) -> Result<()> {
-    use raca::engine::NativeEngine;
-    use raca::nn::Weights;
     use raca::planner::vote_model_from_probs;
 
     let n = args.get_usize("images", 100);
     let target = args.get_f64("target", 0.97);
     let probe_trials = args.get_usize("probe-trials", 64);
-    let dir = ArtifactStore::default_dir();
+    let dir = default_artifact_dir();
     let ds = Dataset::load(&dir.join("data").join("test"))?.take(n);
     let w = std::sync::Arc::new(Weights::load(&dir.join("weights").join("fcnn"))?);
     let engine = NativeEngine::new(w, 77);
@@ -258,9 +502,10 @@ fn plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn selftest() -> Result<()> {
     println!("[1/3] PJRT smoke (artifacts/smoke.hlo.txt)…");
-    let dir = ArtifactStore::default_dir();
+    let dir = default_artifact_dir();
     let client = raca::runtime::RtClient::new()?;
     let exe = client.compile_hlo_text(&dir.join("smoke.hlo.txt"))?;
     let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
@@ -293,6 +538,55 @@ fn selftest() -> Result<()> {
         }
     }
     println!("      ok: {hits}/8 correct");
+    println!("selftest PASSED");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn selftest() -> Result<()> {
+    use raca::device::VariationModel;
+
+    println!("[1/3] native trainer on synthetic digits…");
+    let train_set = synth::generate(200, 0xA);
+    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0xB };
+    let w = raca::nn::train(&train_set, ModelSpec::new(vec![784, 16, 10]), &cfg);
+    anyhow::ensure!(
+        w.ideal_test_accuracy > 0.3,
+        "trainer underperformed: {:.3}",
+        w.ideal_test_accuracy
+    );
+    println!("      ok: train accuracy {:.1}%", w.ideal_test_accuracy * 100.0);
+
+    println!("[2/3] coordinator vote over the native engine…");
+    let engine = NativeEngine::new(std::sync::Arc::new(w.clone()), 7);
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = 16;
+    let server = Server::start(engine, cfg);
+    let client = server.client();
+    let mut hits = 0usize;
+    for i in 0..8 {
+        let r = client.classify(train_set.image(i).to_vec(), 15, 0.9)?;
+        if r.prediction == train_set.label(i) {
+            hits += 1;
+        }
+    }
+    println!("      ok: {hits}/8 correct");
+
+    println!("[3/3] two-chip fleet calibration (σ=10%)…");
+    let mut farm = Fleet::program_native(
+        &w,
+        2,
+        &VariationModel::lognormal(0.10),
+        RoutePolicy::RoundRobin,
+        0xC,
+    );
+    let cal = train_set.take(16);
+    let calibrator = Calibrator::quick(5);
+    let before = farm.mean_accuracy(&cal, &calibrator);
+    farm.calibrate(&cal, &calibrator);
+    let after = farm.mean_accuracy(&cal, &calibrator);
+    anyhow::ensure!(after >= before, "calibration regressed: {before} → {after}");
+    println!("      ok: fleet cal-set accuracy {:.1}% → {:.1}%", before * 100.0, after * 100.0);
     println!("selftest PASSED");
     Ok(())
 }

@@ -1,10 +1,13 @@
 //! Neural-network layer (DESIGN.md §4.6): model definition, trained-weight
-//! loading, and the two native forward passes (ideal float & stochastic).
+//! loading, the two native forward passes (ideal float & stochastic), and
+//! a native SGD trainer for artifact-free builds.
 
 pub mod forward;
 pub mod model;
+pub mod train;
 pub mod weights;
 
 pub use forward::{ideal_forward, ideal_logits, stochastic_logits};
 pub use model::ModelSpec;
+pub use train::{train, TrainConfig};
 pub use weights::Weights;

@@ -1,0 +1,193 @@
+//! Native MLP trainer: SGD + backprop over the synthetic digit set.
+//!
+//! The build-time python pipeline (`python/compile/train.py`) produces the
+//! paper-scale trained weights; this module is its small native twin so
+//! artifact-free builds still get a *classifying* network — the fleet
+//! subsystem, its tests and `raca fleet` train one on
+//! [`crate::dataset::synth`] digits in a few seconds instead of requiring
+//! `make artifacts`.
+//!
+//! The trained net transfers to the stochastic engines by construction:
+//! hidden sigmoids are exactly what the stochastic binary neuron emulates
+//! in expectation (firing frequency ≈ Φ(z/1.702) ≈ sigmoid(z), Fig. 4),
+//! and weights are clipped to ±W_CLIP so they stay inside the
+//! conductance-mappable range.
+
+use crate::dataset::Dataset;
+use crate::device::W_CLIP;
+use crate::stats::Rng;
+
+use super::forward::{affine_aug, sigmoid, softmax};
+use super::model::ModelSpec;
+use super::weights::Weights;
+
+/// SGD hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { epochs: 10, lr: 0.2, seed: 0x7121 }
+    }
+}
+
+/// He-style uniform init in ±sqrt(3/fan_in) (bias row zero).
+fn init_mats(spec: &ModelSpec, rng: &mut Rng) -> Vec<Vec<f32>> {
+    (0..spec.num_layers())
+        .map(|l| {
+            let (rows, cols) = spec.layer_shape(l);
+            let bound = (3.0 / (rows - 1) as f64).sqrt();
+            let mut m = vec![0.0f32; rows * cols];
+            for r in 0..rows - 1 {
+                for c in 0..cols {
+                    m[r * cols + c] = (rng.range_f64(-bound, bound)) as f32;
+                }
+            }
+            m
+        })
+        .collect()
+}
+
+/// Train an MLP (sigmoid hiddens, softmax output, cross-entropy loss) on
+/// `ds` and return paper-format [`Weights`] with `ideal_test_accuracy` set
+/// to the final training accuracy.
+pub fn train(ds: &Dataset, spec: ModelSpec, cfg: &TrainConfig) -> Weights {
+    assert!(!ds.is_empty(), "cannot train on an empty dataset");
+    assert_eq!(spec.input_dim(), crate::dataset::loader::IMG_PIXELS);
+    let classes = spec.output_dim();
+    let n_layers = spec.num_layers();
+    let mut rng = Rng::new(cfg.seed);
+    let mut mats = init_mats(&spec, &mut rng);
+
+    // Per-layer activation / delta buffers (activations[0] = input copy).
+    let mut activations: Vec<Vec<f32>> =
+        spec.widths.iter().map(|&w| vec![0.0f32; w]).collect();
+    let mut deltas: Vec<Vec<f32>> =
+        spec.widths[1..].iter().map(|&w| vec![0.0f32; w]).collect();
+
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for &i in &order {
+            activations[0].copy_from_slice(ds.image(i));
+            // Forward.
+            for l in 0..n_layers {
+                let (rows, cols, _) = layer_shape_of(&spec, &mats, l);
+                let (head, tail) = activations.split_at_mut(l + 1);
+                affine_aug(&head[l], rows, cols, &mats[l], &mut tail[0]);
+                if l + 1 < n_layers {
+                    for v in tail[0].iter_mut() {
+                        *v = sigmoid(*v);
+                    }
+                }
+            }
+            softmax(&mut activations[n_layers]);
+            // Output delta: p − onehot(label).
+            let label = ds.label(i) as usize;
+            for (j, d) in deltas[n_layers - 1].iter_mut().enumerate() {
+                *d = activations[n_layers][j] - if j == label { 1.0 } else { 0.0 };
+            }
+            debug_assert_eq!(deltas[n_layers - 1].len(), classes);
+            // Backward + update.
+            for l in (0..n_layers).rev() {
+                let (rows, cols, _) = layer_shape_of(&spec, &mats, l);
+                // Hidden delta for layer l-1 inputs (before overwriting W_l).
+                if l > 0 {
+                    let (dl, dprev) = {
+                        let (a, b) = deltas.split_at_mut(l);
+                        (&b[0], &mut a[l - 1])
+                    };
+                    let w = &mats[l];
+                    let act = &activations[l];
+                    for i_in in 0..rows - 1 {
+                        let mut s = 0.0f32;
+                        let row = &w[i_in * cols..(i_in + 1) * cols];
+                        for (wv, d) in row.iter().zip(dl.iter()) {
+                            s += wv * d;
+                        }
+                        dprev[i_in] = s * act[i_in] * (1.0 - act[i_in]);
+                    }
+                }
+                // SGD update: W -= lr · a_aug ⊗ delta, clipped to ±W_CLIP.
+                let w = &mut mats[l];
+                let dl = &deltas[l];
+                let act = &activations[l];
+                let clip = W_CLIP as f32;
+                for i_in in 0..rows {
+                    let a = if i_in + 1 == rows { 1.0 } else { act[i_in] };
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let row = &mut w[i_in * cols..(i_in + 1) * cols];
+                    for (wv, d) in row.iter_mut().zip(dl.iter()) {
+                        *wv = (*wv - cfg.lr * a * d).clamp(-clip, clip);
+                    }
+                }
+            }
+        }
+    }
+
+    let mut w = Weights { spec, mats, ideal_test_accuracy: -1.0 };
+    w.ideal_test_accuracy = ideal_accuracy(&w, ds);
+    w
+}
+
+fn layer_shape_of(spec: &ModelSpec, mats: &[Vec<f32>], l: usize) -> (usize, usize, usize) {
+    let (rows, cols) = spec.layer_shape(l);
+    debug_assert_eq!(mats[l].len(), rows * cols);
+    (rows, cols, rows * cols)
+}
+
+/// Ideal (float softmax) accuracy of `w` on `ds`.
+pub fn ideal_accuracy(w: &Weights, ds: &Dataset) -> f64 {
+    if ds.is_empty() {
+        return 0.0;
+    }
+    let hits = (0..ds.len())
+        .filter(|&i| {
+            let p = super::forward::ideal_forward(w, ds.image(i));
+            argmax(&p) == ds.label(i)
+        })
+        .count();
+    hits as f64 / ds.len() as f64
+}
+
+fn argmax(p: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in p.iter().enumerate() {
+        if v > p[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    #[test]
+    fn training_beats_chance_and_weights_validate() {
+        let ds = synth::generate(120, 11);
+        let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 5 };
+        let w = train(&ds, ModelSpec::new(vec![784, 12, 10]), &cfg);
+        w.validate().expect("trained weights inside clip range");
+        let acc = ideal_accuracy(&w, &ds);
+        assert!(acc > 0.3, "3-epoch training accuracy too low: {acc}");
+        assert!((w.ideal_test_accuracy - acc).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = synth::generate(40, 3);
+        let cfg = TrainConfig { epochs: 1, lr: 0.2, seed: 9 };
+        let a = train(&ds, ModelSpec::new(vec![784, 8, 10]), &cfg);
+        let b = train(&ds, ModelSpec::new(vec![784, 8, 10]), &cfg);
+        assert_eq!(a.mats, b.mats);
+    }
+}

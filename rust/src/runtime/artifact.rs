@@ -123,19 +123,10 @@ impl ArtifactStore {
         })
     }
 
-    /// Resolve the default artifact directory.
+    /// Resolve the default artifact directory (see
+    /// [`super::default_artifact_dir`], which is feature-independent).
     pub fn default_dir() -> PathBuf {
-        if let Ok(d) = std::env::var("RACA_ARTIFACTS") {
-            return PathBuf::from(d);
-        }
-        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
-            let p = PathBuf::from(cand);
-            if p.join("manifest.json").exists() {
-                return p;
-            }
-        }
-        // Fall back to the crate-root artifacts dir (tests run from target/).
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        super::default_artifact_dir()
     }
 
     pub fn open_default() -> Result<Self> {

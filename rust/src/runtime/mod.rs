@@ -3,11 +3,40 @@
 //! Wraps the `xla` crate (PJRT C API, CPU plugin).  The interchange format
 //! is HLO *text* — see DESIGN.md §7 and /opt/xla-example/README.md for why
 //! serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1.
+//!
+//! The whole PJRT surface is gated behind the `pjrt` cargo feature
+//! (default off): the offline build links an API-shaped stub, so the
+//! AOT/XLA engine only exists when a real plugin is available.  Artifact
+//! *location* ([`default_artifact_dir`]) stays available in every build —
+//! the native engine and figure harnesses load weights/datasets from the
+//! same directory without touching PJRT.
 
+#[cfg(feature = "pjrt")]
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 
+#[cfg(feature = "pjrt")]
 pub use artifact::{ArtifactStore, Manifest};
+#[cfg(feature = "pjrt")]
 pub use client::RtClient;
-pub use executor::{Executor, TrialExecutor, IdealExecutor};
+#[cfg(feature = "pjrt")]
+pub use executor::{Executor, IdealExecutor, TrialExecutor};
+
+/// Resolve the default artifact directory: `$RACA_ARTIFACTS`, then
+/// `./artifacts` walking up, then the crate-root `artifacts/` (tests run
+/// from `target/`).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("RACA_ARTIFACTS") {
+        return std::path::PathBuf::from(d);
+    }
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -8,7 +8,7 @@
 //! the 256-layer ziggurat: ~97.5% of samples take the rejection-free
 //! fast path.
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 use super::rng::Rng;
 
@@ -26,26 +26,30 @@ fn pdf(x: f64) -> f64 {
     (-0.5 * x * x).exp()
 }
 
-static ZIG: Lazy<ZigTables> = Lazy::new(|| {
-    let mut x = [0.0f64; ZIG_LAYERS + 1];
-    let mut y = [0.0f64; ZIG_LAYERS + 1];
-    x[0] = ZIG_R;
-    y[0] = pdf(ZIG_R);
-    // x[1] chosen so layer 0 (tail) has area V: V = R·f(R) + tail(R).
-    x[1] = ZIG_R;
-    y[1] = y[0];
-    for i in 2..=ZIG_LAYERS {
-        // y_{i} = y_{i-1} + V / x_{i-1}
-        y[i] = y[i - 1] + ZIG_V / x[i - 1];
-        if y[i] >= 1.0 {
-            x[i] = 0.0;
-            y[i] = 1.0;
-        } else {
-            x[i] = (-2.0 * y[i].ln()).sqrt();
+static ZIG: OnceLock<ZigTables> = OnceLock::new();
+
+fn zig_tables() -> &'static ZigTables {
+    ZIG.get_or_init(|| {
+        let mut x = [0.0f64; ZIG_LAYERS + 1];
+        let mut y = [0.0f64; ZIG_LAYERS + 1];
+        x[0] = ZIG_R;
+        y[0] = pdf(ZIG_R);
+        // x[1] chosen so layer 0 (tail) has area V: V = R·f(R) + tail(R).
+        x[1] = ZIG_R;
+        y[1] = y[0];
+        for i in 2..=ZIG_LAYERS {
+            // y_{i} = y_{i-1} + V / x_{i-1}
+            y[i] = y[i - 1] + ZIG_V / x[i - 1];
+            if y[i] >= 1.0 {
+                x[i] = 0.0;
+                y[i] = 1.0;
+            } else {
+                x[i] = (-2.0 * y[i].ln()).sqrt();
+            }
         }
-    }
-    ZigTables { x, y }
-});
+        ZigTables { x, y }
+    })
+}
 
 /// Stateful standard-normal source over an owned [`Rng`].
 #[derive(Debug, Clone)]
@@ -66,7 +70,7 @@ impl GaussianSource {
     /// One standard normal sample (ziggurat).
     #[inline]
     pub fn next(&mut self) -> f64 {
-        let zig = &*ZIG;
+        let zig = zig_tables();
         loop {
             let bits = self.rng.next_u64();
             let i = (bits & 0xFF) as usize; // layer

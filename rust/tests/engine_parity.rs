@@ -9,12 +9,16 @@
 use std::sync::Arc;
 
 use raca::dataset::Dataset;
-use raca::engine::{NativeEngine, PhysicalEngine, TrialParams, XlaEngine};
-use raca::nn::{forward, Weights};
-use raca::runtime::ArtifactStore;
+use raca::engine::{NativeEngine, PhysicalEngine, TrialParams};
+use raca::nn::Weights;
+
+#[cfg(feature = "pjrt")]
+use raca::engine::XlaEngine;
+#[cfg(feature = "pjrt")]
+use raca::nn::forward;
 
 fn artifacts_ready() -> Option<std::path::PathBuf> {
-    let dir = ArtifactStore::default_dir();
+    let dir = raca::runtime::default_artifact_dir();
     if dir.join("manifest.json").exists() {
         Some(dir)
     } else {
@@ -40,6 +44,7 @@ fn accuracy(predictions: &[i32], labels: &[i32]) -> f64 {
     hit as f64 / labels.len() as f64
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn xla_ideal_matches_native_ideal() {
     let Some(dir) = artifacts_ready() else { return };
@@ -61,6 +66,7 @@ fn xla_ideal_matches_native_ideal() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn xla_trial_winners_valid_and_deterministic() {
     let Some(dir) = artifacts_ready() else { return };
@@ -82,6 +88,7 @@ fn xla_trial_winners_valid_and_deterministic() {
     assert!(!winners.is_empty());
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn xla_and_native_vote_accuracy_agree() {
     let Some(dir) = artifacts_ready() else { return };

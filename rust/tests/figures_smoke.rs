@@ -33,7 +33,7 @@ fn fig5_all_panels_run() {
 
 #[test]
 fn fig6_runs_when_artifacts_exist() {
-    let dir = raca::runtime::ArtifactStore::default_dir();
+    let dir = raca::runtime::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts missing");
         return;
@@ -70,7 +70,7 @@ fn table1_and_ablations_run() {
 
 #[test]
 fn variation_ablation_runs_small() {
-    let dir = raca::runtime::ArtifactStore::default_dir();
+    let dir = raca::runtime::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts missing");
         return;

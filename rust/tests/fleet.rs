@@ -1,0 +1,173 @@
+//! Fleet subsystem integration: reproducible per-chip RNG streams,
+//! calibration that never hurts, routing, and scheduler fan-out.
+//!
+//! Everything here is artifact-free: the model is trained natively on
+//! synthetic digits (`nn::train`), so the suite runs on a fresh checkout.
+
+use raca::coordinator::{InferRequest, Metrics, Scheduler, SchedulerConfig};
+use raca::dataset::synth;
+use raca::device::VariationModel;
+use raca::engine::TrialParams;
+use raca::fleet::{Calibrator, Fleet, RoutePolicy};
+use raca::nn::{ModelSpec, TrainConfig, Weights};
+
+/// Small trained net shared across tests (accuracy matters for (b)).
+fn trained() -> Weights {
+    let ds = synth::generate(160, 0x7A);
+    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0x7B };
+    raca::nn::train(&ds, ModelSpec::new(vec![784, 16, 10]), &cfg)
+}
+
+fn farm(w: &Weights, chips: usize, sigma: f64, seed: u64) -> Fleet<raca::engine::NativeEngine> {
+    Fleet::program_native(
+        w,
+        chips,
+        &VariationModel::lognormal(sigma),
+        RoutePolicy::RoundRobin,
+        seed,
+    )
+}
+
+// ---- (a) per-chip RNG streams: reproducible and independent ---------------
+
+#[test]
+fn same_fleet_seed_reproduces_identical_chips() {
+    let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 1);
+    let mut a = farm(&w, 4, 0.10, 42);
+    let mut b = farm(&w, 4, 0.10, 42);
+
+    let x: Vec<f32> = (0..784).map(|i| (i % 19) as f32 / 19.0).collect();
+    let p = TrialParams::default();
+    for (ca, cb) in a.chips.iter_mut().zip(b.chips.iter_mut()) {
+        // Identical programmed weights…
+        assert_eq!(ca.engine.weights.mats, cb.engine.weights.mats);
+        // …and identical trial streams, decision by decision.
+        for t in 0..50u64 {
+            assert_eq!(
+                ca.engine.trial(&x, p, t),
+                cb.engine.trial(&x, p, t),
+                "chip {} trial {t} diverged across identically-seeded fleets",
+                ca.id
+            );
+        }
+    }
+}
+
+#[test]
+fn chips_within_a_fleet_are_independent() {
+    let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 1);
+    let fleet = farm(&w, 4, 0.10, 42);
+    // Distinct variation draws per die…
+    for i in 0..fleet.len() {
+        for j in i + 1..fleet.len() {
+            assert_ne!(
+                fleet.chips[i].engine.weights.mats, fleet.chips[j].engine.weights.mats,
+                "chips {i} and {j} got identical variation draws"
+            );
+        }
+    }
+    // …and distinct trial-noise streams: zero the output layer so the WTA
+    // winner is pure comparator noise (uniform over classes), then compare
+    // the two chips' winner sequences at identical trial indices.
+    let mut wz = w.clone();
+    let last = wz.mats.len() - 1;
+    for v in wz.mats[last].iter_mut() {
+        *v = 0.0;
+    }
+    let mut ideal = farm(&wz, 2, 0.0, 42);
+    let x: Vec<f32> = (0..784).map(|i| (i % 7) as f32 / 7.0).collect();
+    let p = TrialParams::default();
+    let (c0, c1) = {
+        let (lo, hi) = ideal.chips.split_at_mut(1);
+        (&mut lo[0], &mut hi[0])
+    };
+    let a: Vec<i32> = (0..200).map(|t| c0.engine.trial(&x, p, t)).collect();
+    let b: Vec<i32> = (0..200).map(|t| c1.engine.trial(&x, p, t)).collect();
+    assert_ne!(a, b, "two chips produced identical 200-trial winner streams");
+}
+
+#[test]
+fn different_fleet_seed_changes_the_farm() {
+    let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 1);
+    let a = farm(&w, 2, 0.10, 7);
+    let b = farm(&w, 2, 0.10, 8);
+    assert_ne!(a.chips[0].engine.weights.mats, b.chips[0].engine.weights.mats);
+}
+
+// ---- (b) calibration recovers accuracy ------------------------------------
+
+#[test]
+fn calibrated_sigma10_fleet_is_no_worse_than_uncalibrated() {
+    let w = trained();
+    let mut fleet = farm(&w, 4, 0.10, 1234);
+    let batch = synth::generate(24, 0x5E7);
+    let calibrator = Calibrator::quick(5);
+
+    let uncalibrated = fleet.mean_accuracy(&batch, &calibrator);
+    let reports = fleet.calibrate(&batch, &calibrator);
+    let calibrated = fleet.mean_accuracy(&batch, &calibrator);
+
+    // Per-chip: argmax over a grid that contains the nominal point.
+    for r in &reports {
+        assert!(
+            r.calibrated_accuracy >= r.baseline_accuracy,
+            "chip {}: calibration regressed {} → {}",
+            r.chip,
+            r.baseline_accuracy,
+            r.calibrated_accuracy
+        );
+    }
+    // Fleet aggregate on the same batch, same seeds.
+    assert!(
+        calibrated >= uncalibrated,
+        "fleet calibration regressed: {uncalibrated} → {calibrated}"
+    );
+}
+
+// ---- routing + scheduler fan-out ------------------------------------------
+
+#[test]
+fn router_spreads_a_served_workload_and_health_tracks_it() {
+    let w = trained();
+    let mut fleet = farm(&w, 3, 0.05, 99);
+    let batch = synth::generate(30, 0xF00D);
+    let report = fleet.serve(&batch, 5, 4242);
+    assert_eq!(report.served, 30);
+    assert_eq!(report.snapshot.load_imbalance(), 0, "round-robin must balance");
+    let agg = report.snapshot.aggregate();
+    assert_eq!(agg.served, 30);
+    assert_eq!(agg.trials, 150);
+    for id in 0..fleet.len() {
+        assert_eq!(fleet.health.chip(id).served, 10);
+    }
+}
+
+#[test]
+fn scheduler_fans_batches_across_the_fleet() {
+    let w = trained();
+    let fleet = farm(&w, 2, 0.05, 31);
+    let runner = fleet.into_runner();
+    let mut cfg = SchedulerConfig::default();
+    cfg.batch_size = 16;
+    let mut sched = Scheduler::new(runner, cfg, Metrics::new());
+    let batch = synth::generate(10, 0xBEE);
+    for i in 0..batch.len() {
+        sched
+            .submit(InferRequest::new(i as u64, batch.image(i).to_vec()).with_budget(6, 0.0))
+            .unwrap();
+    }
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 10);
+    for r in &done {
+        assert_eq!(r.trials_used, 6);
+    }
+    // Both chips actually executed rows.
+    let per_chip = sched.engine().per_chip_metrics();
+    assert_eq!(per_chip.len(), 2);
+    assert!(per_chip.iter().all(|m| m.rows_packed > 0));
+    assert_eq!(
+        per_chip.iter().map(|m| m.rows_packed).sum::<u64>(),
+        60,
+        "every (request, trial) row lands on exactly one chip"
+    );
+}

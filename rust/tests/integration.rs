@@ -4,14 +4,19 @@
 
 use std::sync::Arc;
 
-use raca::coordinator::{SchedulerConfig, Server};
 use raca::dataset::Dataset;
-use raca::engine::{NativeEngine, TrialParams, XlaEngine};
+use raca::engine::{NativeEngine, TrialParams};
 use raca::nn::{forward, Weights};
+
+#[cfg(feature = "pjrt")]
+use raca::coordinator::{SchedulerConfig, Server};
+#[cfg(feature = "pjrt")]
+use raca::engine::XlaEngine;
+#[cfg(feature = "pjrt")]
 use raca::runtime::ArtifactStore;
 
 fn artifacts() -> Option<std::path::PathBuf> {
-    let dir = ArtifactStore::default_dir();
+    let dir = raca::runtime::default_artifact_dir();
     if dir.join("manifest.json").exists() {
         Some(dir)
     } else {
@@ -85,6 +90,7 @@ fn voting_recovers_software_accuracy() {
     );
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn full_stack_xla_coordinator_end_to_end() {
     let Some(dir) = artifacts() else { return };
@@ -113,6 +119,7 @@ fn full_stack_xla_coordinator_end_to_end() {
     assert!(m.engine_errors == 0);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn manifest_matches_weights_and_data() {
     let Some(dir) = artifacts() else { return };

@@ -1,0 +1,263 @@
+//! Offline vendored mini-`anyhow`.
+//!
+//! The build environment has no crates.io access, so this path dependency
+//! re-implements exactly the subset of the `anyhow` 1.x API the workspace
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait on
+//! `Result`/`Option`, and the `anyhow!`/`bail!`/`ensure!` macros.
+//!
+//! Semantics intentionally mirror upstream where it matters here:
+//! * `Error` does **not** implement `std::error::Error`, so the blanket
+//!   `From<E: std::error::Error>` conversion (what makes `?` work) cannot
+//!   conflict with `From<Error>`;
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole context chain separated by `": "`;
+//! * `.context(..)` wraps both plain `std::error::Error` values and
+//!   already-wrapped `anyhow::Error`s, and turns `Option::None` into an
+//!   error.
+
+use std::fmt::{self, Debug, Display};
+
+/// Context-chain error type (outermost message first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `std::result::Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message or value.
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: Display + Send + Sync + 'static,
+    {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C>(mut self, context: C) -> Self
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost message first.
+    pub fn chain_messages(&self) -> &[String] {
+        &self.chain
+    }
+
+    fn from_std<E>(err: E) -> Self
+    where
+        E: std::error::Error,
+    {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirrors anyhow's unwrap-friendly debug output: message, then the
+        // cause chain.
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        Error::from_std(err)
+    }
+}
+
+/// Conversion into [`Error`] — implemented both for `std` errors and for
+/// [`Error`] itself, so [`Context`] works on any `Result` in the workspace.
+/// (Mirrors anyhow's private `ext::StdError` trick.)
+#[doc(hidden)]
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+impl<E> IntoError for E
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn into_error(self) -> Error {
+        Error::from_std(self)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T>: Sized {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(::std::concat!("condition failed: ", ::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($tt)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading weights").unwrap_err();
+        assert_eq!(format!("{e}"), "reading weights");
+        assert_eq!(format!("{e:#}"), "reading weights: missing file");
+        let e2 = e.context("outer");
+        assert_eq!(format!("{e2:#}"), "outer: reading weights: missing file");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn macros_formats() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        let e = anyhow!(String::from("from a String"));
+        assert_eq!(format!("{e}"), "from a String");
+    }
+}
