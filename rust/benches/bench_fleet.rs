@@ -1,53 +1,120 @@
-//! Bench: fleet fan-out — trial throughput scaling with replica count.
+//! Bench: serving throughput across `Backend` implementations.
 //!
-//! Programs farms of 1/2/4/8 native-engine chips (σ=5% variation draws)
-//! and pushes the same fixed trial batch through `FleetRunner::run`, which
-//! shards rows across chips on scoped threads.  Throughput should scale
-//! close to linearly until the batch is too small to feed every die.
+//! One 4-layer model, three deployment shapes behind the same trait:
+//!
+//! * single-chip — the coordinator's batched scheduler on one engine;
+//! * replicated × {2,4,8} — per-chip worker threads + router dispatch
+//!   (whole requests per die, σ=5% variation draws);
+//! * pipelined × {2,4} — the model's layers sharded across dies,
+//!   activations streaming die-to-die.  The input die caches the
+//!   per-request layer-0 pre-activation, so the deepest matmul leaves the
+//!   per-trial path entirely — which is why the pipeline beats a single
+//!   chip even before thread-level parallelism kicks in.
+//!
+//! `--smoke` runs a CI-sized workload and *asserts* the acceptance bar:
+//! pipelined @ 4 dies ≥ 2× single-chip trial throughput.
 
-use raca::coordinator::TrialRunner;
+use std::sync::Arc;
+use std::time::Instant;
+
+use raca::coordinator::SchedulerConfig;
 use raca::device::VariationModel;
-use raca::engine::TrialParams;
+use raca::engine::NativeEngine;
 use raca::fleet::{Fleet, RoutePolicy};
 use raca::nn::{ModelSpec, Weights};
-use raca::util::bench::bench_units;
+use raca::serve::{
+    Backend, InferRequest, PipelineOptions, PipelinedFleetBackend, ReplicatedFleetBackend,
+    ReplicatedOptions, SingleChipBackend,
+};
+
+/// Push `reqs` fixed-budget requests through `backend`; trials/second.
+fn throughput(backend: &dyn Backend, images: &[Vec<f32>], trials: u32, reqs: usize) -> f64 {
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..reqs)
+        .map(|i| {
+            backend
+                .submit(
+                    InferRequest::new(i as u64, images[i % images.len()].clone())
+                        .with_budget(trials, 0.0),
+                )
+                .expect("submit")
+        })
+        .collect();
+    let mut total = 0u64;
+    for t in tickets {
+        total += backend.wait(t).expect("wait").trials_used as u64;
+    }
+    total as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
 
 fn main() {
-    println!("== bench_fleet: trial throughput vs replica count ==");
-    let w = Weights::random(ModelSpec::new(vec![784, 64, 10]), 7);
-    let rows = 128usize;
-    let x: Vec<f32> = (0..rows * 784).map(|i| (i % 23) as f32 / 23.0).collect();
-    let p = TrialParams::default();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warmup, reqs, trials) = if smoke { (12, 48, 8u32) } else { (24, 192, 12u32) };
+    let spec = ModelSpec::new(vec![784, 256, 192, 128, 10]);
+    let w = Weights::random(spec, 7);
+    let seed = 0xBE7C;
+    // Dense pseudo-images (~4% zeros): keeps the single-chip baseline
+    // honest — sparse inputs would hand it an affine_aug shortcut.
+    let images: Vec<Vec<f32>> = (0..32)
+        .map(|i| (0..784).map(|j| ((i * 31 + j) % 23) as f32 / 23.0).collect())
+        .collect();
 
-    let mut base = 0.0f64;
-    for &chips in &[1usize, 2, 4, 8] {
+    println!(
+        "== bench_fleet: serving throughput by backend ({reqs} reqs × {trials} trials, 4-layer model) =="
+    );
+
+    let single_tps = {
+        let engine = NativeEngine::new(Arc::new(w.clone()), seed);
+        let mut cfg = SchedulerConfig::default();
+        cfg.batch_size = 32;
+        let b = SingleChipBackend::start(engine, cfg);
+        let _ = throughput(&b, &images, trials, warmup);
+        let tps = throughput(&b, &images, trials, reqs);
+        println!("  single-chip (batched scheduler)  : {tps:>9.0} trials/s  (baseline)");
+        tps
+    };
+
+    for chips in [2usize, 4, 8] {
         let fleet = Fleet::program_native(
             &w,
             chips,
             &VariationModel::lognormal(0.05),
             RoutePolicy::RoundRobin,
-            1234,
+            seed,
         );
-        let runner = fleet.into_runner();
-        let mut seed = 0u32;
-        let r = bench_units(
-            &format!("fleet run {rows} rows, {chips} chip(s)"),
-            2,
-            12,
-            rows as f64,
-            || {
-                seed = seed.wrapping_add(1);
-                std::hint::black_box(runner.run(&x, rows, seed, p).expect("fleet run"));
-            },
+        let b = ReplicatedFleetBackend::start(fleet, None, ReplicatedOptions::default());
+        let _ = throughput(&b, &images, trials, warmup);
+        let tps = throughput(&b, &images, trials, reqs);
+        println!(
+            "  replicated × {chips} chips             : {tps:>9.0} trials/s  ({:.2}x)",
+            tps / single_tps.max(1e-9)
         );
-        let tps = r.units_per_sec();
-        if chips == 1 {
-            base = tps;
-            println!("  → {tps:.0} trials/s (baseline)");
-        } else {
-            println!("  → {tps:.0} trials/s ({:.2}x over 1 chip)", tps / base.max(1e-9));
-        }
     }
 
-    println!("\n(per-chip rows are contiguous shards; see fleet::runner docs)");
+    let mut pipelined_at_4 = 0.0f64;
+    for dies in [2usize, 4] {
+        let b = PipelinedFleetBackend::start(
+            &w,
+            PipelineOptions { dies, seed, ..Default::default() },
+        )
+        .expect("building pipelined backend");
+        let _ = throughput(&b, &images, trials, warmup);
+        let tps = throughput(&b, &images, trials, reqs);
+        if dies == 4 {
+            pipelined_at_4 = tps;
+        }
+        println!(
+            "  pipelined  × {dies} dies              : {tps:>9.0} trials/s  ({:.2}x)",
+            tps / single_tps.max(1e-9)
+        );
+    }
+
+    if smoke {
+        let ratio = pipelined_at_4 / single_tps.max(1e-9);
+        assert!(
+            ratio >= 2.0,
+            "--smoke: pipelined @ 4 dies must be ≥2x single-chip throughput, got {ratio:.2}x"
+        );
+        println!("smoke OK: pipelined @ 4 dies = {ratio:.2}x single-chip (≥ 2x required)");
+    }
 }

@@ -9,6 +9,8 @@
 
 pub mod floorplan;
 pub mod pipeline;
+pub mod shard;
 
 pub use floorplan::{Floorplan, TileAssignment};
 pub use pipeline::{PipelineModel, PipelineReport};
+pub use shard::ShardPlan;

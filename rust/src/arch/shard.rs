@@ -1,0 +1,213 @@
+//! Shard plan: split one model's layers across multiple dies.
+//!
+//! The paper's architecture supports a configurable number of layers per
+//! chip (§III-C); when a model outgrows one die — or when throughput
+//! demands a deeper hardware pipeline — consecutive layers are placed on
+//! *different* chips and activations stream die-to-die (the tiled /
+//! pipelined multi-chip organizations surveyed in Smagulova et al.,
+//! arXiv:2109.03934).  The layer is the atomic stage: its crossbars must
+//! share a die because a column's currents sum in analog.
+//!
+//! [`ShardPlan::balanced`] partitions the layer sequence into contiguous
+//! ranges, one per die, minimizing the worst die's crossbar-tile demand
+//! as computed by the [`Floorplan`] — tile count is the die's area/
+//! capacity budget, the quantity a real multi-die deployment must bound.
+//! [`crate::serve::PipelinedFleetBackend`] executes this plan.
+
+use crate::nn::ModelSpec;
+
+use super::floorplan::Floorplan;
+
+/// Contiguous layer-range-per-die assignment.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub spec: ModelSpec,
+    /// Crossbar tile edge used for the balance criterion.
+    pub tile: usize,
+    /// Global-layer range each die owns, in pipeline order.
+    pub ranges: Vec<std::ops::Range<usize>>,
+    /// Tiles each die must provision (sum over its layers' floorplans).
+    pub tiles_per_die: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Optimal contiguous partition of `spec`'s layers across `dies`
+    /// chips, minimizing the maximum per-die tile demand.
+    ///
+    /// Errors (instead of a downstream panic) when `dies == 0` or when
+    /// `dies` exceeds the layer count — a layer cannot straddle dies.
+    pub fn balanced(spec: &ModelSpec, tile: usize, dies: usize) -> Result<Self, String> {
+        let n = spec.num_layers();
+        if dies == 0 {
+            return Err("shard plan needs at least one die".into());
+        }
+        if dies > n {
+            return Err(format!(
+                "cannot shard a {n}-layer model across {dies} dies: a layer is the \
+                 atomic pipeline stage, so at most {n} dies are usable"
+            ));
+        }
+        // Per-layer tile demand from the single-chip floorplan.
+        let fp = Floorplan::place(spec.clone(), tile, 8);
+        let layer_tiles: Vec<usize> = (0..n).map(|l| fp.layer_tiles(l).len()).collect();
+        // Prefix sums: weight of layers [a, b) = pre[b] - pre[a].
+        let mut pre = vec![0usize; n + 1];
+        for (l, &t) in layer_tiles.iter().enumerate() {
+            pre[l + 1] = pre[l] + t;
+        }
+        let seg = |a: usize, b: usize| pre[b] - pre[a];
+
+        // DP over contiguous partitions: best[k][i] = minimal possible
+        // maximum die weight when the first i layers occupy k dies.
+        let inf = usize::MAX;
+        let mut best = vec![vec![inf; n + 1]; dies + 1];
+        let mut cut = vec![vec![0usize; n + 1]; dies + 1];
+        best[0][0] = 0;
+        for k in 1..=dies {
+            for i in k..=n {
+                for j in (k - 1)..i {
+                    if best[k - 1][j] == inf {
+                        continue;
+                    }
+                    let cand = best[k - 1][j].max(seg(j, i));
+                    if cand < best[k][i] {
+                        best[k][i] = cand;
+                        cut[k][i] = j;
+                    }
+                }
+            }
+        }
+        // Reconstruct the cut points back-to-front.
+        let mut bounds = vec![n];
+        let mut i = n;
+        for k in (1..=dies).rev() {
+            i = cut[k][i];
+            bounds.push(i);
+        }
+        bounds.reverse();
+        debug_assert_eq!(bounds[0], 0);
+        let ranges: Vec<std::ops::Range<usize>> =
+            bounds.windows(2).map(|w| w[0]..w[1]).collect();
+        let tiles_per_die = ranges.iter().map(|r| seg(r.start, r.end)).collect();
+        Ok(Self { spec: spec.clone(), tile, ranges, tiles_per_die })
+    }
+
+    pub fn dies(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The worst die's tile demand (the balance objective).
+    pub fn max_tiles(&self) -> usize {
+        self.tiles_per_die.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Sub-network topology of one die: `widths[start..=end]` of the
+    /// global spec (a die's last layer's outputs are the next die's
+    /// inputs).
+    pub fn sub_spec(&self, die: usize) -> ModelSpec {
+        let r = &self.ranges[die];
+        ModelSpec::new(self.spec.widths[r.start..=r.end].to_vec())
+    }
+
+    /// Gaussian draws consumed per trial by all dies *upstream* of `die`:
+    /// one comparator-noise draw per binarized hidden neuron, i.e.
+    /// `widths[l+1]` for every global layer `l` before this die's range.
+    /// The die skips that many draws off the shared per-trial stream so
+    /// sharded execution consumes bit-identical noise to the unsharded
+    /// engine.
+    pub fn noise_skip(&self, die: usize) -> usize {
+        (0..self.ranges[die].start)
+            .map(|l| self.spec.widths[l + 1])
+            .sum()
+    }
+
+    /// Sanity: ranges are non-empty, contiguous, and cover every layer.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut next = 0usize;
+        for (d, r) in self.ranges.iter().enumerate() {
+            if r.start != next || r.is_empty() {
+                return Err(format!("die {d} owns {r:?}, expected to start at {next}"));
+            }
+            next = r.end;
+        }
+        if next != self.spec.num_layers() {
+            return Err(format!(
+                "plan covers {next} layers, model has {}",
+                self.spec.num_layers()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_zero_and_oversharded() {
+        let spec = ModelSpec::paper(); // 3 layers
+        assert!(ShardPlan::balanced(&spec, 128, 0).is_err());
+        assert!(ShardPlan::balanced(&spec, 128, 4).is_err());
+        assert!(ShardPlan::balanced(&spec, 128, 3).is_ok());
+    }
+
+    #[test]
+    fn paper_model_across_two_dies_balances_tiles() {
+        // Paper layers need 28 / 12 / 3 tiles; the optimal contiguous
+        // 2-split is [28] | [12, 3] with max 28.
+        let plan = ShardPlan::balanced(&ModelSpec::paper(), 128, 2).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.ranges, vec![0..1, 1..3]);
+        assert_eq!(plan.tiles_per_die, vec![28, 15]);
+        assert_eq!(plan.max_tiles(), 28);
+    }
+
+    #[test]
+    fn one_die_per_layer_when_fully_sharded() {
+        let plan = ShardPlan::balanced(&ModelSpec::paper(), 128, 3).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.ranges, vec![0..1, 1..2, 2..3]);
+        assert_eq!(plan.tiles_per_die, vec![28, 12, 3]);
+    }
+
+    #[test]
+    fn sub_specs_chain_input_to_output() {
+        let spec = ModelSpec::new(vec![784, 256, 128, 64, 10]);
+        let plan = ShardPlan::balanced(&spec, 128, 3).unwrap();
+        plan.validate().unwrap();
+        // Consecutive dies agree on the activation width at the seam, and
+        // the chain preserves the end-to-end dimensions.
+        for d in 0..plan.dies() - 1 {
+            assert_eq!(
+                plan.sub_spec(d).output_dim(),
+                plan.sub_spec(d + 1).input_dim(),
+                "die {d} → {} seam width mismatch",
+                d + 1
+            );
+        }
+        assert_eq!(plan.sub_spec(0).input_dim(), 784);
+        assert_eq!(plan.sub_spec(plan.dies() - 1).output_dim(), 10);
+    }
+
+    #[test]
+    fn noise_skip_counts_upstream_hidden_neurons() {
+        let spec = ModelSpec::new(vec![784, 256, 128, 64, 10]);
+        let plan = ShardPlan::balanced(&spec, 128, 4).unwrap();
+        // Fully sharded: die d skips every upstream layer's fan-out.
+        assert_eq!(plan.noise_skip(0), 0);
+        assert_eq!(plan.noise_skip(1), 256);
+        assert_eq!(plan.noise_skip(2), 256 + 128);
+        assert_eq!(plan.noise_skip(3), 256 + 128 + 64);
+    }
+
+    #[test]
+    fn balance_is_optimal_for_a_known_split() {
+        // Weights 14/6/2/2 (the bench model at tile 128): the optimal
+        // 2-split is [14] | [6, 2, 2] (max 14), not [14, 6] | [2, 2].
+        let spec = ModelSpec::new(vec![784, 256, 192, 128, 10]);
+        let plan = ShardPlan::balanced(&spec, 128, 2).unwrap();
+        assert_eq!(plan.ranges, vec![0..1, 1..4]);
+        assert_eq!(plan.max_tiles(), 14);
+    }
+}

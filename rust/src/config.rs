@@ -15,12 +15,13 @@
 //!
 //! Unknown keys are rejected (catch typos); missing keys take defaults.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::SchedulerConfig;
 use crate::engine::TrialParams;
 use crate::fleet::{FleetConfig, RoutePolicy};
 use crate::hwmodel::TechParams;
+use crate::serve::{BackendKind, ServeConfig};
 use crate::util::json::Json;
 
 /// Which engine backs the scheduler.
@@ -41,6 +42,8 @@ pub struct RunConfig {
     pub tech: TechParams,
     /// Fleet-serving knobs (`raca fleet`).
     pub fleet: FleetConfig,
+    /// Backend selection for `raca serve` (single/replicated/pipelined).
+    pub serve: ServeConfig,
     /// Default per-request vote confidence.
     pub confidence: f64,
 }
@@ -59,13 +62,17 @@ fn check_keys(obj: &Json, allowed: &[&str], section: &str) -> Result<()> {
 impl RunConfig {
     pub fn parse(text: &str) -> Result<Self> {
         let j = Json::parse(text).context("parsing run config")?;
-        check_keys(&j, &["trial", "scheduler", "engine", "tech", "fleet", "confidence"], "root")?;
+        check_keys(
+            &j,
+            &["trial", "scheduler", "engine", "tech", "fleet", "serve", "confidence"],
+            "root",
+        )?;
         let mut cfg = RunConfig { confidence: 0.95, ..Default::default() };
 
         if let Some(t) = j.get("trial") {
             check_keys(t, &["snr_scale", "sigma_z", "theta", "wta_steps"], "trial")?;
             if let Some(s) = t.get("snr_scale").and_then(Json::as_f64) {
-                cfg.trial = TrialParams::with_snr_scale(s);
+                cfg.trial = TrialParams::with_snr_scale(s as f32);
             }
             if let Some(s) = t.get("sigma_z").and_then(Json::as_f64) {
                 cfg.trial.sigma_z = s as f32;
@@ -184,6 +191,35 @@ impl RunConfig {
                 cfg.fleet.seed = v as u64;
             }
         }
+        if let Some(s) = j.get("serve") {
+            check_keys(s, &["backend", "chips", "shards", "depth", "seed"], "serve")?;
+            if let Some(b) = s.get("backend").and_then(Json::as_str) {
+                cfg.serve.backend = BackendKind::parse(b).with_context(|| {
+                    format!("config: unknown serve backend '{b}' (single|replicated|pipelined)")
+                })?;
+            }
+            if let Some(v) = s.get("chips").and_then(Json::as_usize) {
+                cfg.serve.chips = v;
+            }
+            if let Some(v) = s.get("shards").and_then(Json::as_usize) {
+                cfg.serve.shards = v;
+            }
+            if let Some(v) = s.get("depth").and_then(Json::as_usize) {
+                cfg.serve.depth = v;
+            }
+            if let Some(v) = s.get("seed").and_then(Json::as_usize) {
+                cfg.serve.seed = v as u64;
+            }
+        }
+        // Zero-sized farms/pipelines panic deep in the stack; reject them
+        // here with a clear error instead.  (Shard count vs. layer count is
+        // checked against the actual model when the shard plan is built.)
+        ensure!(cfg.fleet.chips > 0, "config: fleet.chips must be at least 1");
+        ensure!(cfg.serve.chips > 0, "config: serve.chips must be at least 1");
+        ensure!(
+            cfg.serve.shards > 0,
+            "config: serve.shards must be at least 1 (and at most the model's layer count)"
+        );
         cfg.scheduler.params = cfg.trial;
         Ok(cfg)
     }
@@ -234,6 +270,36 @@ mod tests {
         assert!(RunConfig::parse(r#"{"engine": "gpu"}"#).is_err());
         assert!(RunConfig::parse(r#"{"fleet": {"dies": 4}}"#).is_err());
         assert!(RunConfig::parse(r#"{"fleet": {"policy": "random"}}"#).is_err());
+        assert!(RunConfig::parse(r#"{"serve": {"backend": "sharded"}}"#).is_err());
+        assert!(RunConfig::parse(r#"{"serve": {"dies": 2}}"#).is_err());
+    }
+
+    #[test]
+    fn serve_section_parses() {
+        let c = RunConfig::parse(
+            r#"{"serve": {"backend": "pipelined", "shards": 3, "chips": 6,
+                          "depth": 64, "seed": 12}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.backend, crate::serve::BackendKind::Pipelined);
+        assert_eq!(c.serve.shards, 3);
+        assert_eq!(c.serve.chips, 6);
+        assert_eq!(c.serve.depth, 64);
+        assert_eq!(c.serve.seed, 12);
+        // Untouched keys keep their defaults.
+        let d = RunConfig::parse(r#"{"serve": {"backend": "replicated"}}"#).unwrap();
+        assert_eq!(d.serve.chips, 4);
+        assert_eq!(d.serve.shards, 2);
+    }
+
+    #[test]
+    fn zero_sized_farms_rejected_with_clear_errors() {
+        let e = RunConfig::parse(r#"{"fleet": {"chips": 0}}"#).unwrap_err();
+        assert!(format!("{e}").contains("fleet.chips"), "{e}");
+        let e = RunConfig::parse(r#"{"serve": {"chips": 0}}"#).unwrap_err();
+        assert!(format!("{e}").contains("serve.chips"), "{e}");
+        let e = RunConfig::parse(r#"{"serve": {"shards": 0}}"#).unwrap_err();
+        assert!(format!("{e}").contains("serve.shards"), "{e}");
     }
 
     #[test]

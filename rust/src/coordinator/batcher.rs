@@ -16,7 +16,7 @@
 
 use std::collections::VecDeque;
 
-use super::request::RequestId;
+use crate::serve::RequestId;
 
 /// A request's packing view.
 #[derive(Debug, Clone)]

@@ -1,5 +1,10 @@
-//! L3 coordinator (DESIGN.md §4.9) — the serving layer around the RACA
-//! trial engines.
+//! L3 coordinator (DESIGN.md §4.9) — the batched scheduling machinery
+//! behind the serving layer.
+//!
+//! **Entry point note:** applications should serve through the
+//! [`crate::serve::Backend`] trait (`serve::SingleChipBackend` wraps this
+//! module's [`Server`]); the pieces here are the building blocks, not the
+//! public serving API.
 //!
 //! Stochastic inference needs *many* trials per request; the coordinator's
 //! job is to keep the trial executable's batch full while spending as few
@@ -15,15 +20,18 @@
 //!   client handle with submit/await semantics;
 //! * [`metrics`] counts everything (trials, batches, fill ratio,
 //!   early-stop savings, latency percentiles).
+//!
+//! The request/response vocabulary ([`InferRequest`], [`InferResponse`])
+//! lives in [`crate::serve`] and is re-exported here for compatibility.
 
 pub mod batcher;
 pub mod metrics;
-pub mod request;
 pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batcher, PackedBatch};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{InferRequest, InferResponse, RequestId};
 pub use scheduler::{Scheduler, SchedulerConfig, TrialRunner};
 pub use server::{Server, ServerClient};
+
+pub use crate::serve::{InferRequest, InferResponse, RequestId};

@@ -19,7 +19,7 @@ use crate::stats::ci::lead_is_decided;
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
-use super::request::{InferRequest, InferResponse, RequestId};
+use crate::serve::{InferRequest, InferResponse, RequestId};
 
 /// Engine abstraction the scheduler drives (`NativeEngine`, the fleet's
 /// [`crate::fleet::FleetRunner`], and — under the `pjrt` feature —

@@ -14,8 +14,8 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use super::metrics::Metrics;
-use super::request::{InferRequest, InferResponse};
 use super::scheduler::{Scheduler, SchedulerConfig, TrialRunner};
+use crate::serve::{InferRequest, InferResponse};
 
 enum Msg {
     Submit(InferRequest, mpsc::Sender<InferResponse>),
@@ -77,7 +77,12 @@ impl ServerClient {
         confidence: f64,
     ) -> Result<mpsc::Receiver<InferResponse>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = InferRequest::new(id, image).with_budget(max_trials, confidence);
+        self.submit_request(InferRequest::new(id, image).with_budget(max_trials, confidence))
+    }
+
+    /// Submit a fully-formed request (the [`crate::serve::Backend`] path;
+    /// the caller owns id uniqueness).
+    pub fn submit_request(&self, req: InferRequest) -> Result<mpsc::Receiver<InferResponse>> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Submit(req, reply))

@@ -24,7 +24,7 @@ pub mod physical;
 #[cfg(feature = "pjrt")]
 pub mod xla;
 
-pub use native::NativeEngine;
+pub use native::{trial_rng, wta_race, NativeEngine};
 pub use physical::PhysicalEngine;
 #[cfg(feature = "pjrt")]
 pub use xla::{XlaEngine, XlaEngineHandle};
@@ -49,9 +49,11 @@ impl Default for TrialParams {
 }
 
 impl TrialParams {
-    /// Design point at a given SNR scale (Fig. 6a sweeps this).
-    pub fn with_snr_scale(snr_scale: f64) -> Self {
-        Self { sigma_z: (1.702 / snr_scale) as f32, ..Default::default() }
+    /// Design point at a given SNR scale (Fig. 6a sweeps this).  Takes
+    /// `f32` like every other trial knob — `sigma_z` is f32, so a f64
+    /// scale only added a silent precision-laundering cast.
+    pub fn with_snr_scale(snr_scale: f32) -> Self {
+        Self { sigma_z: 1.702 / snr_scale, ..Default::default() }
     }
 
     /// Paper's V_th0 = 0 ablation (threshold at the static mean).

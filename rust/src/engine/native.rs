@@ -23,6 +23,15 @@ pub struct NativeEngine {
     pub seed: u64,
 }
 
+/// Per-trial RNG stream: one deterministic identity per `(seed, trial
+/// index)` pair.  Every execution path that claims bit-parity with this
+/// engine — notably each die of the pipelined serving backend — must
+/// derive its stream through this function; the mixing constant is
+/// load-bearing for those contracts.
+pub fn trial_rng(seed: u64, trial_idx: u64) -> Rng {
+    Rng::new(seed ^ trial_idx.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
 impl NativeEngine {
     pub fn new(weights: std::sync::Arc<Weights>, seed: u64) -> Self {
         Self { weights, seed }
@@ -30,9 +39,7 @@ impl NativeEngine {
 
     /// One decision trial on one image; `trial_idx` selects the RNG stream.
     pub fn trial(&self, x: &[f32], p: TrialParams, trial_idx: u64) -> i32 {
-        let mut gauss = GaussianSource::from_rng(Rng::new(
-            self.seed ^ trial_idx.wrapping_mul(0x9E3779B97F4A7C15),
-        ));
+        let mut gauss = GaussianSource::from_rng(trial_rng(self.seed, trial_idx));
         self.trial_with(x, p, &mut gauss)
     }
 
@@ -56,13 +63,11 @@ impl NativeEngine {
         trial_idx: u64,
         scratch: &mut forward::TrialScratch,
     ) -> i32 {
-        let mut gauss = GaussianSource::from_rng(Rng::new(
-            self.seed ^ trial_idx.wrapping_mul(0x9E3779B97F4A7C15),
-        ));
+        let mut gauss = GaussianSource::from_rng(trial_rng(self.seed, trial_idx));
         forward::stochastic_logits_into(&self.weights, z1, p.sigma_z as f64, &mut gauss,
                                         scratch);
         let logits = std::mem::take(&mut scratch.logits);
-        let w = self.wta_race(&logits, p, &mut gauss);
+        let w = wta_race(&logits, p, &mut gauss);
         scratch.logits = logits;
         w
     }
@@ -70,28 +75,7 @@ impl NativeEngine {
     /// Trial with an explicit noise source (tests / shared streams).
     pub fn trial_with(&self, x: &[f32], p: TrialParams, gauss: &mut GaussianSource) -> i32 {
         let z = forward::stochastic_logits(&self.weights, x, p.sigma_z as f64, gauss);
-        self.wta_race(&z, p, gauss)
-    }
-
-    fn wta_race(&self, z: &[f32], p: TrialParams, gauss: &mut GaussianSource) -> i32 {
-        let mean = z.iter().sum::<f32>() / z.len() as f32;
-        let sigma = p.sigma_z as f64;
-        let theta = p.theta as f64;
-        for _ in 0..p.wta_steps {
-            let mut winner = -1i32;
-            let mut best = f64::NEG_INFINITY;
-            for (j, &zj) in z.iter().enumerate() {
-                let v = (zj - mean) as f64 + sigma * gauss.next() - theta;
-                if v > 0.0 && v > best {
-                    best = v;
-                    winner = j as i32;
-                }
-            }
-            if winner >= 0 {
-                return winner;
-            }
-        }
-        -1
+        wta_race(&z, p, gauss)
     }
 
     /// `trials` repeated decisions on one image, accumulated into counts.
@@ -116,6 +100,33 @@ impl NativeEngine {
                                 seed.wrapping_add(r as u64)))
             .collect()
     }
+}
+
+/// The T-step first-crossing WTA race over output logits: threshold at
+/// the static row mean plus θ, fresh comparator noise per step, ties
+/// toward the largest instantaneous value, −1 on timeout.  Shared by
+/// [`NativeEngine`] and the sharded output die of
+/// [`crate::serve::PipelinedFleetBackend`] — bit-identical decisions
+/// whichever die runs the race.
+pub fn wta_race(z: &[f32], p: TrialParams, gauss: &mut GaussianSource) -> i32 {
+    let mean = z.iter().sum::<f32>() / z.len() as f32;
+    let sigma = p.sigma_z as f64;
+    let theta = p.theta as f64;
+    for _ in 0..p.wta_steps {
+        let mut winner = -1i32;
+        let mut best = f64::NEG_INFINITY;
+        for (j, &zj) in z.iter().enumerate() {
+            let v = (zj - mean) as f64 + sigma * gauss.next() - theta;
+            if v > 0.0 && v > best {
+                best = v;
+                winner = j as i32;
+            }
+        }
+        if winner >= 0 {
+            return winner;
+        }
+    }
+    -1
 }
 
 impl TrialEngine for NativeEngine {

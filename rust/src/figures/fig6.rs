@@ -138,7 +138,7 @@ fn load(dir: &std::path::Path, n_images: usize) -> Result<(Arc<Weights>, Dataset
 pub fn panel_a(n_images: usize, use_xla: bool) -> Result<()> {
     let dir = default_artifact_dir();
     let (w, ds, ideal_acc) = load(&dir, n_images)?;
-    let snrs = [0.25, 0.5, 1.0, 2.0, 4.0];
+    let snrs = [0.25f32, 0.5, 1.0, 2.0, 4.0];
     let mut headers: Vec<String> = vec!["trials".into()];
     headers.extend(snrs.iter().map(|s| format!("acc[snr={s}x]")));
     headers.push("ideal(software)".into());

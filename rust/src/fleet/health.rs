@@ -177,6 +177,43 @@ impl HealthMonitor {
         h.recalibrations += 1;
         h.correct.clear();
     }
+
+    /// Live traffic weights for [`super::Router`]'s weighted policy: how
+    /// much in-flight work each die should carry *right now*, relative to
+    /// its peers.  Evicted dies weigh 0.  A die's weight is its speed
+    /// factor (fleet mean latency / its mean latency, clamped to [¼, 4])
+    /// discounted by its abstention rate and — when labeled probes are in
+    /// the window — its rolling accuracy.  This is the monitor *steering*
+    /// traffic continuously, not just the evict/recalibrate cliff edges.
+    pub fn traffic_weights(&self) -> Vec<f64> {
+        let lats: Vec<f64> = self
+            .chips
+            .iter()
+            .filter(|h| !h.evicted && h.served > 0)
+            .map(|h| h.mean_latency_us())
+            .filter(|&l| l > 0.0)
+            .collect();
+        let fleet_mean = if lats.is_empty() {
+            0.0
+        } else {
+            lats.iter().sum::<f64>() / lats.len() as f64
+        };
+        self.chips
+            .iter()
+            .map(|h| {
+                if h.evicted {
+                    return 0.0;
+                }
+                let speed = match (fleet_mean > 0.0, h.mean_latency_us()) {
+                    (true, l) if l > 0.0 => (fleet_mean / l).clamp(0.25, 4.0),
+                    _ => 1.0,
+                };
+                let yield_rate = (1.0 - h.abstention_rate()).max(0.05);
+                let acc = h.rolling_accuracy().unwrap_or(1.0).max(0.05);
+                speed * yield_rate * acc
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -240,6 +277,30 @@ mod tests {
         assert_eq!(m.chip(1).labeled_samples(), 0);
         assert_eq!(m.chip(1).recalibrations, 1);
         assert!(m.drifting().is_empty()); // not enough fresh samples
+    }
+
+    #[test]
+    fn traffic_weights_follow_speed_health_and_eviction() {
+        let mut m = monitor(3);
+        // Chip 0: fast and accurate; chip 1: 4x slower; chip 2: evicted.
+        for _ in 0..8 {
+            m.record(0, Some(true), false, 100);
+            m.record(1, Some(true), false, 400);
+            m.record(2, Some(true), false, 100);
+        }
+        m.evict(2);
+        let w = m.traffic_weights();
+        assert_eq!(w.len(), 3);
+        assert!(w[0] > w[1], "fast chip must outweigh slow chip: {w:?}");
+        assert_eq!(w[2], 0.0, "evicted chip must get zero traffic");
+        // Abstentions discount the weight further.
+        let mut m2 = monitor(2);
+        for _ in 0..8 {
+            m2.record(0, None, false, 100);
+            m2.record(1, None, true, 100); // always abstains
+        }
+        let w2 = m2.traffic_weights();
+        assert!(w2[0] > 5.0 * w2[1], "abstaining chip must be starved: {w2:?}");
     }
 
     #[test]

@@ -1,24 +1,32 @@
-//! Fleet layer: serve inference across a farm of non-identical RACA chips.
+//! Fleet layer: program, calibrate and health-model a farm of
+//! non-identical RACA chips.
 //!
 //! One simulated die is never the deployment story — production runs many
 //! chips, each with its own programming-variation draw, and compensates at
 //! the system level (Marinella et al.'s multiscale co-design argument).
-//! This subsystem is that level:
+//! This subsystem owns the *chips*; **serving goes through the
+//! [`crate::serve::Backend`] trait**, which is the only public entry point
+//! ([`crate::serve::ReplicatedFleetBackend`] lifts a programmed `Fleet`
+//! onto per-chip worker threads; [`crate::serve::PipelinedFleetBackend`]
+//! shards one model's layers across dies):
 //!
 //! * [`Chip`] — one die: `NativeEngine` (or `PhysicalEngine`) programmed
 //!   through the conductance mapping with a private [`VariationModel`]
 //!   draw and RNG stream derived from `(fleet_seed, chip_id)`;
 //! * [`Calibrator`] — per-chip (θ, σ_z) grid search against a held-out
 //!   calibration set; never worse than the nominal point on that set;
-//! * [`Router`] — round-robin / least-loaded dispatch over healthy chips;
+//! * [`Router`] — round-robin / least-loaded / health-weighted dispatch
+//!   over healthy chips;
 //! * [`HealthMonitor`] — rolling per-chip accuracy/latency, drift
-//!   flagging (→ recalibrate) and eviction (→ drop from routing);
+//!   flagging (→ recalibrate), eviction (→ drop from routing) and live
+//!   traffic reweighting ([`HealthMonitor::traffic_weights`]);
 //! * [`FleetRunner`] — a [`crate::coordinator::TrialRunner`] that shards
 //!   scheduler batches across the farm, so the whole coordinator stack
 //!   (batcher, early-stopper, server) runs unchanged on top of N chips.
 //!
 //! `raca fleet --chips 8 --sigma 0.10` exercises the full loop:
-//! program → calibrate → serve → health report.
+//! program → calibrate → serve (through the replicated backend) →
+//! health report.
 
 pub mod calibrate;
 pub mod chip;
@@ -33,8 +41,6 @@ pub use health::{ChipHealth, HealthConfig, HealthMonitor};
 pub use metrics::{ChipStats, FleetSnapshot};
 pub use router::{RoutePolicy, Router};
 pub use runner::FleetRunner;
-
-use std::time::{Duration, Instant};
 
 use crate::dataset::Dataset;
 use crate::device::VariationModel;
@@ -84,43 +90,16 @@ impl FleetConfig {
     }
 }
 
-/// Result of serving a workload through the router.
-#[derive(Debug, Clone)]
-pub struct ServeReport {
-    pub served: usize,
-    pub labeled: usize,
-    pub hits: usize,
-    pub abstentions: u64,
-    pub wall: Duration,
-    pub snapshot: FleetSnapshot,
-}
-
-impl ServeReport {
-    /// Accuracy over labeled requests (None for unlabeled traffic).
-    pub fn accuracy(&self) -> Option<f64> {
-        if self.labeled == 0 {
-            None
-        } else {
-            Some(self.hits as f64 / self.labeled as f64)
-        }
-    }
-
-    /// Served requests per wall-clock second.
-    pub fn requests_per_sec(&self) -> f64 {
-        if self.wall.is_zero() {
-            return 0.0;
-        }
-        self.served as f64 / self.wall.as_secs_f64()
-    }
-}
-
 /// A farm of programmed chips plus its router and health state.
+///
+/// This is chip *ownership*, not a serving loop: hand it to
+/// [`crate::serve::ReplicatedFleetBackend::start`] for threaded serving,
+/// or [`Fleet::into_runner`] for scheduler-side batch sharding.
 pub struct Fleet<E> {
     pub chips: Vec<Chip<E>>,
     pub router: Router,
     pub health: HealthMonitor,
     pub seed: u64,
-    stats: Vec<ChipStats>,
 }
 
 impl Fleet<NativeEngine> {
@@ -142,7 +121,6 @@ impl Fleet<NativeEngine> {
             router: Router::new(policy),
             health: HealthMonitor::new(n_chips, HealthConfig::default()),
             seed,
-            stats: vec![ChipStats::default(); n_chips],
         }
     }
 }
@@ -191,77 +169,6 @@ impl<E: TrialEngine> Fleet<E> {
         }
     }
 
-    /// Serve a labeled workload request-by-request through the router,
-    /// recording health and per-chip stats.
-    pub fn serve(&mut self, ds: &Dataset, trials: usize, seed: u64) -> ServeReport {
-        let t0 = Instant::now();
-        let mut hits = 0usize;
-        let mut abstentions = 0u64;
-        let mut served = 0usize;
-        // Nothing evicts mid-serve, so the healthy set is loop-invariant;
-        // loads change by one element per request and are kept incrementally.
-        let healthy = self.health.healthy();
-        let mut loads: Vec<u64> = self.stats.iter().map(|s| s.served).collect();
-        for i in 0..ds.len() {
-            let Some(id) = self.router.pick(&healthy, &loads) else { break };
-            loads[id] += 1;
-            let req_t0 = Instant::now();
-            let pred = self.chips[id].classify(
-                ds.image(i),
-                trials,
-                // 2^32 trial indices per image — streams never overlap for
-                // any realistic --trials value.
-                seed.wrapping_add((i as u64) << 32),
-            );
-            let latency_us = req_t0.elapsed().as_micros() as u64;
-            let abstained = pred < 0;
-            let correct = pred == ds.label(i);
-            served += 1;
-            if correct {
-                hits += 1;
-            }
-            if abstained {
-                abstentions += 1;
-            }
-            self.health.record(id, Some(correct), abstained, latency_us);
-            self.stats[id].record(trials as u64, abstained, Some(correct), latency_us);
-        }
-        ServeReport {
-            served,
-            labeled: served,
-            hits,
-            abstentions,
-            wall: t0.elapsed(),
-            snapshot: self.snapshot(),
-        }
-    }
-
-    /// Recalibrate drifting chips and evict chips under the hard floor.
-    /// Returns `(recalibrated, evicted)` chip ids.
-    pub fn heal(&mut self, cal: &Dataset, calibrator: &Calibrator) -> (Vec<ChipId>, Vec<ChipId>) {
-        let evicted = self.health.evictable();
-        for &id in &evicted {
-            self.health.evict(id);
-        }
-        let drifting = self.health.drifting();
-        for &id in &drifting {
-            calibrator.calibrate_chip(&mut self.chips[id], cal);
-            self.health.note_recalibrated(id);
-        }
-        (drifting, evicted)
-    }
-
-    /// Point-in-time per-chip stats.
-    pub fn snapshot(&self) -> FleetSnapshot {
-        FleetSnapshot {
-            chips: self
-                .chips
-                .iter()
-                .map(|c| (c.id, self.stats[c.id].clone()))
-                .collect(),
-        }
-    }
-
     /// Hand the healthy chips to a scheduler-driven [`FleetRunner`].
     pub fn into_runner(self) -> FleetRunner<E> {
         FleetRunner::new(self)
@@ -301,43 +208,6 @@ mod tests {
             a.chips[0].engine.weights.mats,
             c.chips[0].engine.weights.mats
         );
-    }
-
-    #[test]
-    fn serve_balances_round_robin() {
-        let w = nominal();
-        let mut fleet = Fleet::program_native(
-            &w,
-            4,
-            &VariationModel::lognormal(0.05),
-            RoutePolicy::RoundRobin,
-            11,
-        );
-        let ds = labeled_batch(40);
-        let report = fleet.serve(&ds, 3, 123);
-        assert_eq!(report.served, 40);
-        assert_eq!(report.snapshot.load_imbalance(), 0);
-        let agg = report.snapshot.aggregate();
-        assert_eq!(agg.served, 40);
-        assert_eq!(agg.trials, 120);
-    }
-
-    #[test]
-    fn serve_skips_evicted_chips() {
-        let w = nominal();
-        let mut fleet = Fleet::program_native(
-            &w,
-            3,
-            &VariationModel::default(),
-            RoutePolicy::LeastLoaded,
-            13,
-        );
-        fleet.health.evict(1);
-        let ds = labeled_batch(12);
-        let report = fleet.serve(&ds, 2, 5);
-        assert_eq!(report.served, 12);
-        assert_eq!(report.snapshot.chips[1].1.served, 0);
-        assert_eq!(report.snapshot.chips[0].1.served + report.snapshot.chips[2].1.served, 12);
     }
 
     #[test]

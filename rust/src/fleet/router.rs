@@ -1,12 +1,15 @@
 //! Request routing across healthy replicas.
 //!
 //! The router only *picks* — it never owns chips — and drives the
-//! request-level [`crate::fleet::Fleet::serve`] loop.  (The scheduler-side
-//! [`crate::fleet::FleetRunner`] shards each batch evenly across healthy
-//! chips instead; `--policy` does not affect that path.)  Policies are
-//! deliberately pluggable: round-robin is the throughput-optimal choice
-//! for homogeneous trial costs, least-loaded wins once chips drift apart
-//! (eviction, recalibration pauses, heterogeneous dies).
+//! [`crate::serve::ReplicatedFleetBackend`]'s per-request dispatch.  (The
+//! scheduler-side [`crate::fleet::FleetRunner`] shards each batch evenly
+//! across healthy chips instead; `--policy` does not affect that path.)
+//! Policies are deliberately pluggable: round-robin is the
+//! throughput-optimal choice for homogeneous trial costs, least-loaded
+//! wins once chips drift apart (eviction, recalibration pauses,
+//! heterogeneous dies), and weighted follows the health monitor's live
+//! traffic weights (slow or abstention-prone dies get fewer requests
+//! without being evicted).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -18,6 +21,10 @@ pub enum RoutePolicy {
     #[default]
     RoundRobin,
     LeastLoaded,
+    /// Least loaded *per unit of traffic weight*: the health monitor's
+    /// [`crate::fleet::HealthMonitor::traffic_weights`] scale how much
+    /// in-flight work each die should carry.
+    Weighted,
 }
 
 impl RoutePolicy {
@@ -26,6 +33,7 @@ impl RoutePolicy {
         match s {
             "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
             "least-loaded" | "ll" => Some(RoutePolicy::LeastLoaded),
+            "weighted" | "wt" => Some(RoutePolicy::Weighted),
             _ => None,
         }
     }
@@ -34,6 +42,7 @@ impl RoutePolicy {
         match self {
             RoutePolicy::RoundRobin => "round-robin",
             RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::Weighted => "weighted",
         }
     }
 }
@@ -56,9 +65,12 @@ impl Router {
     }
 
     /// Pick a chip from `healthy`.  `load` maps chip id → current load
-    /// (in-flight or cumulative served, caller's choice); only consulted
-    /// by [`RoutePolicy::LeastLoaded`], ties break toward the lower id.
-    pub fn pick(&self, healthy: &[ChipId], load: &[u64]) -> Option<ChipId> {
+    /// (in-flight or cumulative served, caller's choice) and is consulted
+    /// by [`RoutePolicy::LeastLoaded`] and [`RoutePolicy::Weighted`];
+    /// `weights` maps chip id → relative traffic share and is consulted
+    /// only by `Weighted` (missing entries count as 1.0).  Ties break
+    /// toward the lower id.
+    pub fn pick(&self, healthy: &[ChipId], load: &[u64], weights: &[f64]) -> Option<ChipId> {
         if healthy.is_empty() {
             return None;
         }
@@ -71,6 +83,20 @@ impl Router {
                 .iter()
                 .copied()
                 .min_by_key(|&id| (load.get(id).copied().unwrap_or(0), id)),
+            RoutePolicy::Weighted => healthy
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    let cost = |id: ChipId| {
+                        let l = load.get(id).copied().unwrap_or(0) as f64 + 1.0;
+                        let w = weights.get(id).copied().unwrap_or(1.0).max(1e-6);
+                        l / w
+                    };
+                    cost(a)
+                        .partial_cmp(&cost(b))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                }),
         }
     }
 }
@@ -83,8 +109,10 @@ mod tests {
     fn parse_spellings() {
         assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
         assert_eq!(RoutePolicy::parse("least-loaded"), Some(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("weighted"), Some(RoutePolicy::Weighted));
         assert_eq!(RoutePolicy::parse("nope"), None);
         assert_eq!(RoutePolicy::RoundRobin.name(), "round-robin");
+        assert_eq!(RoutePolicy::Weighted.name(), "weighted");
     }
 
     #[test]
@@ -92,7 +120,7 @@ mod tests {
         let r = Router::new(RoutePolicy::RoundRobin);
         let healthy = vec![0usize, 2, 3]; // chip 1 evicted
         let picks: Vec<ChipId> =
-            (0..6).map(|_| r.pick(&healthy, &[]).unwrap()).collect();
+            (0..6).map(|_| r.pick(&healthy, &[], &[]).unwrap()).collect();
         assert_eq!(picks, vec![0, 2, 3, 0, 2, 3]);
     }
 
@@ -100,17 +128,31 @@ mod tests {
     fn least_loaded_picks_minimum_then_lower_id() {
         let r = Router::new(RoutePolicy::LeastLoaded);
         let healthy = vec![0usize, 1, 2];
-        assert_eq!(r.pick(&healthy, &[5, 2, 9]), Some(1));
-        assert_eq!(r.pick(&healthy, &[4, 4, 9]), Some(0)); // tie → lower id
+        assert_eq!(r.pick(&healthy, &[5, 2, 9], &[]), Some(1));
+        assert_eq!(r.pick(&healthy, &[4, 4, 9], &[]), Some(0)); // tie → lower id
         // Missing load entries count as zero load.
-        assert_eq!(r.pick(&[0, 1, 7], &[3, 1, 2]), Some(7));
+        assert_eq!(r.pick(&[0, 1, 7], &[3, 1, 2], &[]), Some(7));
+    }
+
+    #[test]
+    fn weighted_prefers_the_heavier_weight_at_equal_load() {
+        let r = Router::new(RoutePolicy::Weighted);
+        let healthy = vec![0usize, 1, 2];
+        // Equal load: chip 2's double weight wins.
+        assert_eq!(r.pick(&healthy, &[3, 3, 3], &[1.0, 1.0, 2.0]), Some(2));
+        // The heavy chip absorbs proportionally more load before losing.
+        assert_eq!(r.pick(&healthy, &[0, 0, 1], &[1.0, 1.0, 2.0]), Some(0));
+        // Missing weights default to 1.0; ties break toward the lower id.
+        assert_eq!(r.pick(&healthy, &[1, 1, 1], &[]), Some(0));
+        // Near-zero weight starves the chip without dividing by zero.
+        assert_eq!(r.pick(&[0, 1], &[9, 0], &[1.0, 0.0]), Some(0));
     }
 
     #[test]
     fn empty_fleet_yields_none() {
         let r = Router::new(RoutePolicy::RoundRobin);
-        assert_eq!(r.pick(&[], &[]), None);
+        assert_eq!(r.pick(&[], &[], &[]), None);
         let r = Router::new(RoutePolicy::LeastLoaded);
-        assert_eq!(r.pick(&[], &[1, 2]), None);
+        assert_eq!(r.pick(&[], &[1, 2], &[]), None);
     }
 }

@@ -13,11 +13,15 @@
 //!   hardware cost model that regenerates the paper's Table I.
 //!
 //! Module map (DESIGN.md §4): `stats` → `device` → `circuit` → `crossbar`
-//! → `neuron` → `nn` → `engine` → `runtime` → `coordinator` → `fleet`,
-//! with `hwmodel` (Table I), `dataset`, `figures` (Fig. 4/5/6) and `util`
-//! on the side.  `fleet` is the first layer above "one chip": it programs,
-//! calibrates, health-checks and load-balances a farm of non-identical
-//! simulated RACA dies behind the coordinator's `TrialRunner` interface.
+//! → `neuron` → `nn` → `engine` → `runtime` → `coordinator` → `fleet` →
+//! `serve`, with `hwmodel` (Table I), `arch` (floorplan/pipeline/shard),
+//! `dataset`, `figures` (Fig. 4/5/6) and `util` on the side.  `fleet`
+//! programs, calibrates and health-models a farm of non-identical
+//! simulated RACA dies; `serve` is the single public serving entry point —
+//! the [`serve::Backend`] trait over one batched chip
+//! (`SingleChipBackend`), a router-dispatched replica farm
+//! (`ReplicatedFleetBackend`), and a layer-sharded die pipeline
+//! (`PipelinedFleetBackend`).
 
 pub mod arch;
 pub mod circuit;
@@ -35,6 +39,7 @@ pub mod neuron;
 pub mod nn;
 pub mod planner;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod util;
 

@@ -10,25 +10,33 @@
 //! raca fig6  --panel all|a|b [--images N] [--engine native|xla] [--fast]
 //! raca table1                       # + breakdowns
 //! raca ablate --noise|--variation|--tiles|--low-vr [--images N]
-//! raca infer --images N [--trials K] [--confidence C]   # coordinator path
+//! raca infer --images N [--trials K] [--confidence C]   # single-chip path
+//! raca serve --backend single|replicated|pipelined      # Backend trait
+//!            [--chips N] [--shards S] [--widths 784,...,10]
 //! raca fleet --chips N --sigma S    # multi-chip farm: program,
-//!                                   # calibrate, route, serve, report
+//!                                   # calibrate, serve, health report
 //! raca selftest                     # quick end-to-end smoke
 //! ```
 //!
-//! The AOT/PJRT paths (`--engine xla`, `infer`/`selftest` over artifacts)
-//! need the `pjrt` cargo feature; default builds use the native engine.
+//! All serving goes through [`raca::serve::Backend`]; the AOT/PJRT paths
+//! (`--engine xla`, `infer`/`selftest` over artifacts) need the `pjrt`
+//! cargo feature; default builds use the native engine.
 
 use anyhow::Result;
 
 use raca::cli::Args;
-use raca::coordinator::{InferRequest, Metrics, Scheduler, SchedulerConfig, Server};
+use raca::coordinator::SchedulerConfig;
 use raca::dataset::{synth, Dataset};
+use raca::device::VariationModel;
 use raca::engine::{NativeEngine, TrialParams};
 use raca::figures;
 use raca::fleet::{Calibrator, Fleet, FleetConfig, RoutePolicy};
 use raca::nn::{ModelSpec, TrainConfig, Weights};
 use raca::runtime::default_artifact_dir;
+use raca::serve::{
+    Backend, BackendKind, InferRequest, PipelineOptions, PipelinedFleetBackend,
+    ReplicatedFleetBackend, ReplicatedOptions, SingleChipBackend,
+};
 
 #[cfg(feature = "pjrt")]
 use raca::engine::XlaEngine;
@@ -89,6 +97,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some("infer") => infer(&args),
+        Some("serve") => serve(&args),
         Some("fleet") => fleet(&args),
         Some("selftest") => selftest(),
         _ => {
@@ -108,10 +117,17 @@ USAGE: raca <subcommand> [flags]
   fig6        accuracy vs trials      --panel all|a|b --images N --engine native|xla
   table1      hardware metrics table + low-Vr ablation
   ablate      robustness ablations    --noise --variation --tiles --low-vr
-  infer       serve N test images through the coordinator
+  infer       serve N test images through the single-chip backend
               --images N --trials K --confidence C --batch B
+  serve       serve through a selected Backend implementation
+              --backend single|replicated|pipelined
+              --chips N (replicated)  --shards S (pipelined)
+              --images N --trials K --confidence C --sigma S --seed S
+              --widths 784,256,128,10   (train a custom-depth model)
+              --config run.json         ({"serve": {"backend": ..., ...}})
   fleet       program + calibrate + serve a farm of non-identical chips
-              --chips N --sigma S --policy round-robin|least-loaded
+              (replicated backend: worker threads + live health steering)
+              --chips N --sigma S --policy round-robin|least-loaded|weighted
               --images N --trials K --cal-images N --cal-trials K
               --seed S --config run.json
   selftest    quick end-to-end smoke test
@@ -210,8 +226,8 @@ fn infer(args: &Args) -> Result<()> {
     let mut cfg = SchedulerConfig::default();
     cfg.batch_size = batch;
     cfg.params = TrialParams::default();
-    let server = Server::start(handle, cfg);
-    serve_and_report(&server, &ds, trials, confidence, batch)
+    let backend = SingleChipBackend::start(handle, cfg);
+    serve_and_report(&backend, &ds, trials, confidence, Some(batch))
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -227,51 +243,181 @@ fn infer(args: &Args) -> Result<()> {
     let mut cfg = SchedulerConfig::default();
     cfg.batch_size = batch;
     cfg.params = TrialParams::default();
-    let server = Server::start(engine, cfg);
-    serve_and_report(&server, &ds, trials, confidence, batch)
+    let backend = SingleChipBackend::start(engine, cfg);
+    serve_and_report(&backend, &ds, trials, confidence, Some(batch))
 }
 
-/// Shared tail of `raca infer`: push the set through the server, report
-/// accuracy / trial spend / throughput / fill.
+/// Shared serving tail: push a labeled set through any [`Backend`], report
+/// accuracy / trial spend / throughput (+ fill ratio for batched backends).
 fn serve_and_report(
-    server: &Server,
+    backend: &dyn Backend,
     ds: &Dataset,
     trials: u32,
     confidence: f64,
-    batch: usize,
+    batch: Option<usize>,
 ) -> Result<()> {
-    let client = server.client();
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..ds.len())
-        .map(|i| client.submit(ds.image(i).to_vec(), trials, confidence).unwrap())
-        .collect();
+    let tickets = (0..ds.len())
+        .map(|i| {
+            backend.submit(
+                InferRequest::new(i as u64, ds.image(i).to_vec())
+                    .with_budget(trials, confidence)
+                    .with_label(ds.label(i)),
+            )
+        })
+        .collect::<Result<Vec<_>>>()?;
     let mut hits = 0usize;
     let mut trials_used = 0u64;
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let r = rx.recv()?;
+    let mut abstentions = 0u64;
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = backend.wait(t)?;
         if r.prediction == ds.label(i) {
             hits += 1;
+        }
+        if r.prediction < 0 {
+            abstentions += 1;
         }
         trials_used += r.trials_used as u64;
     }
     let dt = t0.elapsed();
-    let m = server.metrics().snapshot();
+    let m = backend.metrics();
     println!(
-        "classified {} images in {:.2}s — accuracy {:.2}%, {:.1} trials/request (cap {trials}), {:.0} trials/s",
+        "classified {} images in {:.2}s — accuracy {:.2}%, {:.1} trials/request (cap {trials}), {:.0} trials/s, {abstentions} abstentions",
         ds.len(),
         dt.as_secs_f64(),
-        hits as f64 / ds.len() as f64 * 100.0,
-        trials_used as f64 / ds.len() as f64,
-        m.trials_executed as f64 / dt.as_secs_f64()
+        hits as f64 / ds.len().max(1) as f64 * 100.0,
+        trials_used as f64 / ds.len().max(1) as f64,
+        m.trials_executed as f64 / dt.as_secs_f64().max(1e-9),
     );
-    println!("coordinator: {m}");
-    println!("batch fill ratio: {:.1}%", m.fill_ratio(batch) * 100.0);
+    println!("backend: {m}");
+    if let Some(b) = batch {
+        println!("batch fill ratio: {:.1}%", m.fill_ratio(b) * 100.0);
+    }
+    Ok(())
+}
+
+/// `raca serve` — one workload, any deployment shape: build the selected
+/// [`Backend`] implementation and push the evaluation set through it.
+fn serve(args: &Args) -> Result<()> {
+    use anyhow::Context as _;
+
+    let cfg = match args.get("config") {
+        Some(path) => raca::config::RunConfig::load(std::path::Path::new(path))?,
+        None => raca::config::RunConfig::parse("{}").expect("empty config"),
+    };
+    let mut sc = cfg.serve.clone();
+    if let Some(b) = args.get("backend") {
+        sc.backend = BackendKind::parse(b)
+            .with_context(|| format!("unknown backend '{b}' (single|replicated|pipelined)"))?;
+    }
+    sc.chips = args.get_usize("chips", sc.chips);
+    sc.shards = args.get_usize("shards", sc.shards);
+    sc.seed = args.get_usize("seed", sc.seed as usize) as u64;
+    anyhow::ensure!(sc.chips > 0, "--chips must be at least 1");
+    anyhow::ensure!(sc.shards > 0, "--shards must be at least 1");
+    let n = args.get_usize("images", 256);
+    let trials = args.get_usize("trials", 16) as u32;
+    let confidence = args.get_f64("confidence", 0.0);
+    let sigma = args.get_f64("sigma", 0.0);
+
+    // Model: `--widths 784,256,128,10` trains a custom-depth native model
+    // (deep pipelines need ≥ as many layers as shards); default is the
+    // artifact (or fallback-trained) network.
+    let (w, pool) = match args.get("widths") {
+        Some(spec_str) => {
+            let widths = spec_str
+                .split(',')
+                .map(|s| s.trim().parse::<usize>())
+                .collect::<std::result::Result<Vec<_>, _>>()
+                .map_err(|e| anyhow::anyhow!("bad --widths '{spec_str}': {e}"))?;
+            anyhow::ensure!(
+                widths.first() == Some(&784) && widths.last() == Some(&10),
+                "--widths must start at 784 and end at 10 (dataset contract)"
+            );
+            println!("model: training a native {widths:?} MLP on synthetic digits…");
+            let train_set = synth::generate(800, 0x7EA1);
+            let tc = TrainConfig { epochs: 6, lr: 0.2, seed: 0x5EED };
+            let w = raca::nn::train(&train_set, ModelSpec::new(widths), &tc);
+            (w, synth::generate(n + 64, 0x7E57))
+        }
+        None => load_or_train()?,
+    };
+    anyhow::ensure!(!pool.is_empty(), "no evaluation data available");
+    // Carve the calibration split FIRST (the fleet subcommand's order), so
+    // calibration never tunes on the images it is then scored against.
+    let cal = pool.take(48.min(pool.len()));
+    let ds = {
+        let d = pool.slice(cal.len(), cal.len() + n);
+        if d.is_empty() {
+            // Degenerate pools (< 49 images) fall back to serving the cal
+            // set itself — small-sample demos, not evaluation runs.
+            cal.clone()
+        } else {
+            d
+        }
+    };
+
+    let backend: Box<dyn Backend> = match sc.backend {
+        BackendKind::Single => {
+            let engine = NativeEngine::new(std::sync::Arc::new(w.clone()), sc.seed);
+            let mut scfg = cfg.scheduler.clone();
+            scfg.params = cfg.trial;
+            println!("serve: single-chip backend (batched scheduler, batch {})", scfg.batch_size);
+            Box::new(SingleChipBackend::start(engine, scfg))
+        }
+        BackendKind::Replicated => {
+            let variation = if sigma > 0.0 {
+                VariationModel::lognormal(sigma)
+            } else {
+                VariationModel::default()
+            };
+            let mut farm =
+                Fleet::program_native(&w, sc.chips, &variation, cfg.fleet.policy, sc.seed);
+            let calibrator = Calibrator::quick(5);
+            if sigma > 0.0 {
+                farm.calibrate(&cal, &calibrator);
+            }
+            println!(
+                "serve: replicated backend — {} dies @ σ={sigma:.2}, policy {}",
+                sc.chips,
+                cfg.fleet.policy.name()
+            );
+            Box::new(ReplicatedFleetBackend::start(
+                farm,
+                Some((cal.clone(), calibrator)),
+                ReplicatedOptions { seed: sc.seed, ..Default::default() },
+            ))
+        }
+        BackendKind::Pipelined => {
+            let opts = PipelineOptions {
+                dies: sc.shards,
+                params: cfg.trial,
+                variation: (sigma > 0.0).then(|| VariationModel::lognormal(sigma)),
+                seed: sc.seed,
+                depth: sc.depth,
+                ..Default::default()
+            };
+            let b = PipelinedFleetBackend::start(&w, opts)?;
+            let plan = b.plan();
+            println!(
+                "serve: pipelined backend — {} layers over {} dies, ranges {:?}, tiles/die {:?}",
+                plan.spec.num_layers(),
+                plan.dies(),
+                plan.ranges,
+                plan.tiles_per_die
+            );
+            Box::new(b)
+        }
+    };
+    serve_and_report(backend.as_ref(), &ds, trials, confidence, None)?;
+    backend.shutdown();
     Ok(())
 }
 
 /// `raca fleet` — the full multi-chip loop: program N non-identical dies,
-/// calibrate each against a held-out set, serve a workload through the
-/// router, then fan scheduler batches across the farm.
+/// calibrate each against a held-out set, then serve a workload through
+/// the replicated [`Backend`] (per-chip worker threads, router dispatch,
+/// live health steering).
 fn fleet(args: &Args) -> Result<()> {
     use anyhow::Context as _;
 
@@ -356,74 +502,30 @@ fn fleet(args: &Args) -> Result<()> {
     );
     debug_assert!(cal_acc >= uncal_acc, "calibration must not hurt on the cal set");
 
-    // ---- serve through the router ----------------------------------------
-    let report = farm.serve(&workload, fc.serve_trials, fc.seed ^ 0x5E11E);
-    println!(
-        "served {} requests in {:.2?} ({:.0} req/s) — accuracy {:.2}%, {} abstentions",
-        report.served,
-        report.wall,
-        report.requests_per_sec(),
-        report.accuracy().unwrap_or(0.0) * 100.0,
-        report.abstentions
+    // ---- serve through the replicated backend -----------------------------
+    // The farm moves onto per-chip worker threads behind the Backend
+    // trait; labeled requests double as health probes, so the monitor
+    // steers traffic (reweight/recalibrate/evict) *while* serving.
+    let backend = ReplicatedFleetBackend::start(
+        farm,
+        Some((cal.clone(), calibrator.clone())),
+        ReplicatedOptions { seed: fc.seed ^ 0x5E11E, ..Default::default() },
     );
-    println!("{}", report.snapshot);
-    let drifting = farm.health.drifting();
-    let evictable = farm.health.evictable();
-    if !drifting.is_empty() || !evictable.is_empty() {
-        println!("health: drifting {drifting:?}, evictable {evictable:?}");
-        let (recal, evicted) = farm.heal(&cal, &calibrator);
-        println!("health: recalibrated {recal:?}, evicted {evicted:?}");
-    } else {
-        println!("health: all {} chips within drift margin", farm.len());
-    }
-
-    // ---- coordinator fan-out: scheduler batches across the farm -----------
-    let runner = farm.into_runner();
-    let n_chips = runner.num_chips();
-    let mut cfg = SchedulerConfig::default();
-    cfg.batch_size = (16 * n_chips).max(16);
-    cfg.params = TrialParams::default();
-    let mut sched = Scheduler::new(runner, cfg, Metrics::new());
-    let t0 = std::time::Instant::now();
-    let mut hits = 0usize;
-    let mut done_total = 0usize;
-    let confidence = 0.9;
-    for wave in (0..workload.len()).collect::<Vec<_>>().chunks(128) {
-        for &j in wave {
-            let req = InferRequest::new(j as u64, workload.image(j).to_vec())
-                .with_budget(fc.serve_trials.max(4) as u32 * 2, confidence);
-            sched.submit(req).map_err(|_| anyhow::anyhow!("scheduler rejected request"))?;
-        }
-        for resp in sched.run_to_completion()? {
-            if resp.prediction == workload.label(resp.id as usize) {
-                hits += 1;
-            }
-            done_total += 1;
-        }
-    }
-    let dt = t0.elapsed();
-    let m = sched.engine().combined_metrics();
-    println!(
-        "scheduler fan-out: {} requests over {} chips in {:.2?} — accuracy {:.2}%, {:.0} trials/s, per-chip rows {:?}",
-        done_total,
-        n_chips,
-        dt,
-        hits as f64 / done_total.max(1) as f64 * 100.0,
-        m.trials_executed as f64 / dt.as_secs_f64().max(1e-9),
-        sched
-            .engine()
-            .per_chip_metrics()
-            .iter()
-            .map(|s| s.rows_packed)
-            .collect::<Vec<_>>()
-    );
-    println!("fleet aggregate (scheduler path): {m}");
+    serve_and_report(&backend, &workload, fc.serve_trials as u32, 0.0, None)?;
+    println!("{}", backend.snapshot());
+    let tw: Vec<f64> = backend
+        .traffic_weights()
+        .iter()
+        .map(|w| (w * 100.0).round() / 100.0)
+        .collect();
+    println!("health: healthy chips {:?}, traffic weights {tw:?}", backend.healthy());
+    Box::new(backend).shutdown();
     Ok(())
 }
 
 /// Chip floorplan + pipeline report (arch module).
 fn arch_report(args: &Args) -> Result<()> {
-    use raca::arch::{Floorplan, PipelineModel};
+    use raca::arch::{Floorplan, PipelineModel, ShardPlan};
     use raca::hwmodel::{Architecture, TechParams};
 
     let tile = args.get_usize("tile", 128);
@@ -455,6 +557,19 @@ fn arch_report(args: &Args) -> Result<()> {
             r.trials_per_sec / 1e6,
             r.bottleneck
         );
+    }
+
+    // Multi-die shard plans (the pipelined backend executes these).
+    for dies in [2usize, 3] {
+        match ShardPlan::balanced(&ModelSpec::paper(), tile, dies) {
+            Ok(plan) => println!(
+                "shard [{dies} dies]: layer ranges {:?}, tiles/die {:?} (max {})",
+                plan.ranges,
+                plan.tiles_per_die,
+                plan.max_tiles()
+            ),
+            Err(e) => println!("shard [{dies} dies]: {e}"),
+        }
     }
     Ok(())
 }
@@ -525,14 +640,15 @@ fn selftest() -> Result<()> {
     anyhow::ensure!((-1..10).contains(&w[0]), "bad winner {w:?}");
     println!("      ok: winner={}", w[0]);
 
-    println!("[3/3] coordinator vote on 8 images…");
+    println!("[3/3] single-chip backend vote on 8 images…");
     let mut cfg = SchedulerConfig::default();
     cfg.batch_size = 32;
-    let server = Server::start(h, cfg);
-    let client = server.client();
+    let backend = SingleChipBackend::start(h, cfg);
     let mut hits = 0;
     for i in 0..8 {
-        let r = client.classify(ds.image(i).to_vec(), 15, 0.9)?;
+        let r = backend.classify(
+            InferRequest::new(i as u64, ds.image(i).to_vec()).with_budget(15, 0.9),
+        )?;
         if r.prediction == ds.label(i) {
             hits += 1;
         }
@@ -544,9 +660,7 @@ fn selftest() -> Result<()> {
 
 #[cfg(not(feature = "pjrt"))]
 fn selftest() -> Result<()> {
-    use raca::device::VariationModel;
-
-    println!("[1/3] native trainer on synthetic digits…");
+    println!("[1/4] native trainer on synthetic digits…");
     let train_set = synth::generate(200, 0xA);
     let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0xB };
     let w = raca::nn::train(&train_set, ModelSpec::new(vec![784, 16, 10]), &cfg);
@@ -557,22 +671,23 @@ fn selftest() -> Result<()> {
     );
     println!("      ok: train accuracy {:.1}%", w.ideal_test_accuracy * 100.0);
 
-    println!("[2/3] coordinator vote over the native engine…");
+    println!("[2/4] single-chip backend vote over the native engine…");
     let engine = NativeEngine::new(std::sync::Arc::new(w.clone()), 7);
     let mut cfg = SchedulerConfig::default();
     cfg.batch_size = 16;
-    let server = Server::start(engine, cfg);
-    let client = server.client();
+    let backend = SingleChipBackend::start(engine, cfg);
     let mut hits = 0usize;
     for i in 0..8 {
-        let r = client.classify(train_set.image(i).to_vec(), 15, 0.9)?;
+        let r = backend.classify(
+            InferRequest::new(i as u64, train_set.image(i).to_vec()).with_budget(15, 0.9),
+        )?;
         if r.prediction == train_set.label(i) {
             hits += 1;
         }
     }
     println!("      ok: {hits}/8 correct");
 
-    println!("[3/3] two-chip fleet calibration (σ=10%)…");
+    println!("[3/4] two-chip fleet calibration (σ=10%)…");
     let mut farm = Fleet::program_native(
         &w,
         2,
@@ -587,6 +702,27 @@ fn selftest() -> Result<()> {
     let after = farm.mean_accuracy(&cal, &calibrator);
     anyhow::ensure!(after >= before, "calibration regressed: {before} → {after}");
     println!("      ok: fleet cal-set accuracy {:.1}% → {:.1}%", before * 100.0, after * 100.0);
+
+    println!("[4/4] 2-die pipelined backend vs unsharded engine…");
+    let seed = 0xD1E5;
+    let reference = NativeEngine::new(std::sync::Arc::new(w.clone()), seed);
+    let pb = PipelinedFleetBackend::start(
+        &w,
+        PipelineOptions { dies: 2, seed, ..Default::default() },
+    )?;
+    let x = train_set.image(0).to_vec();
+    let want = reference.infer(
+        &x,
+        TrialParams::default(),
+        12,
+        raca::serve::trial_stream_base(seed, 0),
+    );
+    let got = pb.classify(InferRequest::new(0, x).with_budget(12, 0.0))?;
+    anyhow::ensure!(
+        got.outcome.counts == want.counts,
+        "pipelined votes diverged from the unsharded engine"
+    );
+    println!("      ok: votes match bit-for-bit across 2 dies");
     println!("selftest PASSED");
     Ok(())
 }

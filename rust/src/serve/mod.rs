@@ -1,0 +1,180 @@
+//! Serving layer: one `Backend` session API over every deployment shape.
+//!
+//! The paper's architecture is explicitly configurable — "the number of
+//! neural network layers and specifications supported by this architecture
+//! can be flexibly configured" (§III-C) — and at system level the same
+//! flexibility applies to how dies are composed into a service (Marinella
+//! et al.'s multiscale co-design; the tiled/pipelined organizations in
+//! Smagulova et al.'s survey).  This module is the single entry point for
+//! all of it:
+//!
+//! ```text
+//!                          ┌────────────────────────────┐
+//!     submit / wait        │        trait Backend       │
+//!     metrics / shutdown──▶│  submit(InferRequest)      │
+//!                          │    -> Ticket               │
+//!                          │  wait(Ticket)              │
+//!                          │    -> InferResponse        │
+//!                          └──────┬───────┬───────┬─────┘
+//!                  ┌──────────────┘       │       └──────────────┐
+//!      SingleChipBackend      ReplicatedFleetBackend   PipelinedFleetBackend
+//!      Server + Scheduler     per-chip worker threads  layers sharded across
+//!      over one TrialRunner   + Router + live health   dies; activations
+//!      (batched, early-stop)  reweighting              stream die-to-die
+//! ```
+//!
+//! * [`SingleChipBackend`] — the coordinator's batched scheduler thread
+//!   over one engine (native, physical, or — under `pjrt` — XLA);
+//! * [`ReplicatedFleetBackend`] — one worker thread per programmed die, a
+//!   shared [`crate::fleet::Router`] choosing the die per request, and the
+//!   [`crate::fleet::HealthMonitor`] driving *live* traffic reweighting,
+//!   recalibration and eviction while the fleet serves;
+//! * [`PipelinedFleetBackend`] — one *model* split layer-ranges-per-die
+//!   over an [`crate::arch::ShardPlan`], partial activations streamed
+//!   die-to-die over channels, so model capacity scales with fleet size.
+//!
+//! All three speak [`InferRequest`]/[`InferResponse`] (promoted from the
+//! coordinator into this shared vocabulary) and report the coordinator's
+//! [`MetricsSnapshot`].
+
+pub mod pipelined;
+pub mod replicated;
+pub mod request;
+pub mod single;
+
+pub use pipelined::{PipelineOptions, PipelinedFleetBackend};
+pub use replicated::{ReplicatedFleetBackend, ReplicatedOptions};
+pub use request::{InferRequest, InferResponse, RequestId};
+pub use single::SingleChipBackend;
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::MetricsSnapshot;
+
+/// Claim ticket for a submitted request: hold it, do other work, then
+/// [`Backend::wait`] on it.  The thread-based analogue of a future.
+pub struct Ticket {
+    pub id: RequestId,
+    rx: mpsc::Receiver<InferResponse>,
+}
+
+impl Ticket {
+    pub(crate) fn new(id: RequestId, rx: mpsc::Receiver<InferResponse>) -> Self {
+        Self { id, rx }
+    }
+}
+
+/// A serving session: submit/await classification requests against some
+/// arrangement of RACA dies.  `Box<dyn Backend>` is the deployment-shape
+/// switch (`raca serve --backend single|replicated|pipelined`).
+pub trait Backend: Send {
+    /// Admit a request; returns a [`Ticket`] to wait on.  Request ids must
+    /// be unique among in-flight requests of this backend.
+    fn submit(&self, req: InferRequest) -> Result<Ticket>;
+
+    /// Block until the ticketed request completes.
+    fn wait(&self, ticket: Ticket) -> Result<InferResponse> {
+        let id = ticket.id;
+        ticket
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("backend dropped request {id}"))
+    }
+
+    /// Submit and block for the answer.
+    fn classify(&self, req: InferRequest) -> Result<InferResponse> {
+        let t = self.submit(req)?;
+        self.wait(t)
+    }
+
+    /// Aggregate serving metrics since start.
+    fn metrics(&self) -> MetricsSnapshot;
+
+    /// Finish in-flight work and tear the session down (worker threads are
+    /// joined).  Dropping a backend has the same effect; `shutdown` makes
+    /// the point explicit for `Box<dyn Backend>` callers.
+    fn shutdown(self: Box<Self>);
+}
+
+/// Which [`Backend`] implementation a config/CLI run selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    #[default]
+    Single,
+    Replicated,
+    Pipelined,
+}
+
+impl BackendKind {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "single" => Some(BackendKind::Single),
+            "replicated" => Some(BackendKind::Replicated),
+            "pipelined" => Some(BackendKind::Pipelined),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Single => "single",
+            BackendKind::Replicated => "replicated",
+            BackendKind::Pipelined => "pipelined",
+        }
+    }
+}
+
+/// The `"serve"` config block: which deployment shape `raca serve`
+/// builds, and how big.  Parsed by [`crate::config::RunConfig`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub backend: BackendKind,
+    /// Replicas for the replicated backend.
+    pub chips: usize,
+    /// Dies for the pipelined backend (≤ the model's layer count).
+    pub shards: usize,
+    /// Pipeline flow-control window (trials in flight).
+    pub depth: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { backend: BackendKind::Single, chips: 4, shards: 2, depth: 256, seed: 0x5EB0E }
+    }
+}
+
+/// Base trial index of a request's RNG stream: 2^32 indices per request,
+/// so per-request streams stay disjoint for any realistic trial budget
+/// (the fleet-wide idiom — calibration and serving use the same shape).
+/// Fleet backends derive every trial of request `id` as `base + t`, which
+/// is what makes sharded execution reproduce the unsharded
+/// [`crate::engine::NativeEngine`] vote-for-vote at equal seeds.
+pub fn trial_stream_base(seed: u64, id: RequestId) -> u64 {
+    seed.wrapping_add(id << 32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_spellings() {
+        assert_eq!(BackendKind::parse("single"), Some(BackendKind::Single));
+        assert_eq!(BackendKind::parse("replicated"), Some(BackendKind::Replicated));
+        assert_eq!(BackendKind::parse("pipelined"), Some(BackendKind::Pipelined));
+        assert_eq!(BackendKind::parse("sharded"), None);
+        assert_eq!(BackendKind::Pipelined.name(), "pipelined");
+    }
+
+    #[test]
+    fn trial_streams_disjoint_across_requests() {
+        let a = trial_stream_base(7, 1);
+        let b = trial_stream_base(7, 2);
+        // 2^32 indices of headroom between consecutive request streams.
+        assert_eq!(b.wrapping_sub(a), 1u64 << 32);
+    }
+}

@@ -1,0 +1,650 @@
+//! [`Backend`] #3: one model sharded layer-ranges-per-die, activations
+//! streamed die-to-die — capacity and throughput scale with fleet size.
+//!
+//! An [`crate::arch::ShardPlan`] (floorplan-balanced contiguous layer
+//! partition) assigns each die its layer range; each die runs on its own
+//! thread and the binary hidden activations flow die-to-die over
+//! channels, exactly like the chip-to-chip links of a tiled multi-die
+//! deployment.  The first die holds the input crossbar and caches the
+//! deterministic layer-0 pre-activation per request (the mean column
+//! current is fixed per image — only comparator noise resamples between
+//! trials), the last die runs the WTA race.
+//!
+//! **Bit-parity invariant:** every die continues the *same* per-trial
+//! noise stream the unsharded [`NativeEngine`] would use — the stream is
+//! seeded from `(backend seed, trial index)` and each die skips exactly
+//! the draws its upstream neighbours consumed
+//! ([`crate::arch::ShardPlan::noise_skip`]).  With `variation: None` the
+//! sharded pipeline therefore reproduces `NativeEngine` votes
+//! bit-for-bit at equal `(seed, trial_idx)`, across any die count —
+//! `rust/tests/serve.rs` holds it to that.  With a variation model, each
+//! die programs its slice through the conductance mapping with its own
+//! `(fleet_seed, die)` draw, like any other fleet chip.
+//!
+//! A control thread owns vote state: it keeps up to `depth` trials in
+//! flight across the pipeline (round-robin over active requests, so the
+//! slowest die stays saturated), counts returned winners, applies the
+//! Wilson-interval early stopper, and answers tickets.
+//!
+//! [`NativeEngine`]: crate::engine::NativeEngine
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::arch::ShardPlan;
+use crate::coordinator::{Metrics, MetricsSnapshot};
+use crate::device::VariationModel;
+use crate::engine::{trial_rng, wta_race, TrialParams};
+use crate::fleet::{chip_seed, program_weights};
+use crate::neuron::WtaOutcome;
+use crate::nn::{forward, Weights};
+use crate::stats::ci::lead_is_decided;
+use crate::stats::GaussianSource;
+
+use super::{trial_stream_base, Backend, InferRequest, InferResponse, RequestId, Ticket};
+
+/// Knobs of the pipelined backend.
+#[derive(Debug, Clone)]
+pub struct PipelineOptions {
+    /// Dies to shard the model's layers across (≤ layer count).
+    pub dies: usize,
+    /// Crossbar tile edge for the shard-balance criterion.
+    pub tile: usize,
+    /// Trial physics (σ_z, θ, WTA steps) — shared by every die.
+    pub params: TrialParams,
+    /// Per-die programming variation.  `None` programs exact nominal
+    /// weight slices (the bit-parity configuration).
+    pub variation: Option<VariationModel>,
+    /// Fleet seed: the shared trial-RNG identity *and* the root of
+    /// per-die variation draws.
+    pub seed: u64,
+    /// Minimum recorded trials before early stopping may fire.
+    pub min_trials: u32,
+    /// Maximum trials in flight across the pipeline (flow control).
+    pub depth: usize,
+    /// Admission cap on concurrent requests.
+    pub max_in_flight: usize,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        Self {
+            dies: 2,
+            tile: 128,
+            params: TrialParams::default(),
+            variation: None,
+            seed: 0xF1E7D,
+            min_trials: 5,
+            depth: 256,
+            max_in_flight: 256,
+        }
+    }
+}
+
+/// One die of the pipeline: a contiguous range of the model's layers.
+struct LayerStage {
+    /// Global index of this die's first layer.
+    first_layer: usize,
+    /// This die's programmed weight slice (`widths[first..=last+1]`).
+    weights: Weights,
+    /// Noise draws consumed upstream per trial (skipped off the stream).
+    noise_skip: usize,
+    /// Shared logical-chip RNG identity (equal across dies — the pipeline
+    /// *is* one chip's trial stream, spread over dies).
+    engine_seed: u64,
+    /// Whether this die owns the output layer (runs the WTA race).
+    is_output: bool,
+}
+
+enum StageOut {
+    Hidden(Vec<f32>),
+    Winner(i32),
+}
+
+/// Reusable per-die buffers (mirrors `forward::TrialScratch` — per-trial
+/// Vec churn was ~11% of the trial profile, §Perf iteration 3).  Only the
+/// outgoing activation of a non-output die is freshly allocated, because
+/// its ownership moves to the next die over the channel.
+#[derive(Default)]
+struct StageScratch {
+    h: Vec<f32>,
+    z: Vec<f32>,
+}
+
+impl LayerStage {
+    /// Position the shared per-trial noise stream at this die's first
+    /// neuron: the engine's own [`trial_rng`] derivation, then skip the
+    /// upstream dies' draws.
+    fn gauss(&self, trial_idx: u64) -> GaussianSource {
+        let mut g = GaussianSource::from_rng(trial_rng(self.engine_seed, trial_idx));
+        for _ in 0..self.noise_skip {
+            g.next();
+        }
+        g
+    }
+
+    /// Run this die's layers for one trial.  `input` is the cached z1
+    /// pre-activation when this die holds the input layer, otherwise the
+    /// upstream die's binary activations.
+    fn run(&self, input: &[f32], p: TrialParams, trial_idx: u64, s: &mut StageScratch) -> StageOut {
+        let mut g = self.gauss(trial_idx);
+        let sigma = p.sigma_z as f64;
+        let n_local = self.weights.spec.num_layers();
+        let start;
+        s.h.clear();
+        if self.first_layer == 0 {
+            // Input die: binarize the cached mean pre-activation with
+            // fresh comparator noise (mirrors stochastic_logits_into).
+            s.h.extend(
+                input
+                    .iter()
+                    .map(|&z| if (z as f64) + sigma * g.next() > 0.0 { 1.0f32 } else { 0.0 }),
+            );
+            start = 1;
+        } else {
+            s.h.extend_from_slice(input);
+            start = 0;
+        }
+        for l in start..n_local {
+            let (rows, cols, m) = self.weights.layer(l);
+            s.z.resize(cols, 0.0);
+            forward::affine_aug(&s.h, rows, cols, m, &mut s.z);
+            if self.is_output && l == n_local - 1 {
+                return StageOut::Winner(wta_race(&s.z, p, &mut g));
+            }
+            for v in s.z.iter_mut() {
+                *v = if (*v as f64) + sigma * g.next() > 0.0 { 1.0 } else { 0.0 };
+            }
+            std::mem::swap(&mut s.h, &mut s.z);
+        }
+        StageOut::Hidden(std::mem::take(&mut s.h))
+    }
+}
+
+enum CtrlMsg {
+    Submit(InferRequest, mpsc::Sender<InferResponse>, Instant),
+    Shutdown,
+}
+
+enum StageMsg {
+    /// New request: the input die computes and caches its z1.
+    Open { req: RequestId, image: Vec<f32> },
+    /// One trial flowing down the pipeline (`h` is empty into die 0).
+    /// `gen` is the admission generation of the request — it lets the
+    /// control thread discard speculative winners that land after the
+    /// request completed (and possibly after its id was reused).
+    Trial { req: RequestId, gen: u64, trial_idx: u64, h: Vec<f32> },
+    /// Request finished: the input die drops its cache entry.
+    Close { req: RequestId },
+}
+
+enum StageSink {
+    Next(mpsc::Sender<StageMsg>),
+    Collect(mpsc::Sender<(RequestId, u64, i32)>),
+}
+
+/// Pipeline-sharded serving session.
+pub struct PipelinedFleetBackend {
+    sub_tx: mpsc::Sender<CtrlMsg>,
+    control: Option<JoinHandle<()>>,
+    stages: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    stage_metrics: Vec<Arc<Metrics>>,
+    plan: ShardPlan,
+}
+
+impl PipelinedFleetBackend {
+    /// Shard `nominal`'s layers across `opts.dies` dies and spawn the
+    /// pipeline (one thread per die + a control thread).  Errors — rather
+    /// than panicking downstream — when the die count exceeds the layer
+    /// count.
+    pub fn start(nominal: &Weights, opts: PipelineOptions) -> Result<Self> {
+        ensure!(
+            nominal.spec.num_layers() >= 2,
+            "pipelined backend needs a model with at least 2 layers"
+        );
+        let plan = ShardPlan::balanced(&nominal.spec, opts.tile, opts.dies)
+            .map_err(|e| anyhow!("building shard plan: {e}"))?;
+        let dies = plan.dies();
+
+        let mut stage_defs = Vec::with_capacity(dies);
+        for d in 0..dies {
+            let r = plan.ranges[d].clone();
+            let mut w = Weights {
+                spec: plan.sub_spec(d),
+                mats: nominal.mats[r.clone()].to_vec(),
+                ideal_test_accuracy: nominal.ideal_test_accuracy,
+            };
+            if let Some(v) = &opts.variation {
+                // Each die is still a real programmed chip: its slice goes
+                // through the conductance mapping with a private draw.
+                let mut gauss = GaussianSource::new(chip_seed(opts.seed, d) ^ 0xD1E_5EED);
+                w = program_weights(&w, v, &mut gauss);
+            }
+            stage_defs.push(LayerStage {
+                first_layer: r.start,
+                weights: w,
+                noise_skip: plan.noise_skip(d),
+                engine_seed: opts.seed,
+                is_output: d == dies - 1,
+            });
+        }
+
+        // Wire die-to-die channels back-to-front so each thread owns the
+        // sender to its successor; the last die reports winners to the
+        // control thread.
+        let (win_tx, win_rx) = mpsc::channel();
+        let mut next_sink = StageSink::Collect(win_tx);
+        let mut stages = Vec::with_capacity(dies);
+        let mut stage_metrics = Vec::with_capacity(dies);
+        for (d, stage) in stage_defs.into_iter().enumerate().rev() {
+            let (tx, rx) = mpsc::channel::<StageMsg>();
+            let sink = std::mem::replace(&mut next_sink, StageSink::Next(tx));
+            let m = Metrics::new();
+            stage_metrics.push(m.clone());
+            let params = opts.params;
+            let handle = std::thread::Builder::new()
+                .name(format!("raca-die-{d}"))
+                .spawn(move || stage_loop(stage, rx, sink, params, m))
+                .expect("spawning pipeline die thread");
+            stages.push(handle);
+        }
+        stages.reverse();
+        stage_metrics.reverse();
+        let StageSink::Next(stage0_tx) = next_sink else { unreachable!("dies >= 1") };
+
+        let metrics = Metrics::new();
+        let (sub_tx, sub_rx) = mpsc::channel();
+        let classes = nominal.spec.output_dim();
+        let ctrl_metrics = metrics.clone();
+        let ctrl_opts = opts.clone();
+        let control = std::thread::Builder::new()
+            .name("raca-pipeline-ctrl".into())
+            .spawn(move || control_loop(sub_rx, stage0_tx, win_rx, ctrl_metrics, ctrl_opts, classes))
+            .expect("spawning pipeline control thread");
+
+        Ok(Self {
+            sub_tx,
+            control: Some(control),
+            stages,
+            metrics,
+            stage_metrics,
+            plan,
+        })
+    }
+
+    /// The layer-to-die assignment this backend executes.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn num_dies(&self) -> usize {
+        self.stage_metrics.len()
+    }
+
+    /// Per-die trial counts and stage latencies.
+    pub fn per_die_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.stage_metrics.iter().map(|m| m.snapshot()).collect()
+    }
+}
+
+impl Backend for PipelinedFleetBackend {
+    fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        ensure!(
+            req.image.len() == self.plan.spec.input_dim(),
+            "request {} has {} features, the sharded model expects {}",
+            req.id,
+            req.image.len(),
+            self.plan.spec.input_dim()
+        );
+        let id = req.id;
+        let (reply, rx) = mpsc::channel();
+        self.sub_tx
+            .send(CtrlMsg::Submit(req, reply, Instant::now()))
+            .map_err(|_| anyhow!("pipelined backend is shut down"))?;
+        Ok(Ticket::new(id, rx))
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    fn shutdown(self: Box<Self>) {
+        // Drop signals the control thread, which drains in-flight work,
+        // then the die threads cascade-exit as their inputs close.
+        drop(self);
+    }
+}
+
+impl Drop for PipelinedFleetBackend {
+    fn drop(&mut self) {
+        let _ = self.sub_tx.send(CtrlMsg::Shutdown);
+        if let Some(c) = self.control.take() {
+            let _ = c.join();
+        }
+        for s in self.stages.drain(..) {
+            let _ = s.join();
+        }
+    }
+}
+
+fn stage_loop(
+    stage: LayerStage,
+    rx: mpsc::Receiver<StageMsg>,
+    sink: StageSink,
+    params: TrialParams,
+    metrics: Arc<Metrics>,
+) {
+    // Input-die cache: request id → deterministic z1 pre-activation.
+    let mut z1_cache: HashMap<RequestId, Vec<f32>> = HashMap::new();
+    let mut scratch = StageScratch::default();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            StageMsg::Open { req, image } => {
+                z1_cache.insert(req, forward::layer0_preactivation(&stage.weights, &image));
+            }
+            StageMsg::Close { req } => {
+                z1_cache.remove(&req);
+            }
+            StageMsg::Trial { req, gen, trial_idx, h } => {
+                // The control thread sends every Trial before the Close of
+                // the same request on this FIFO channel, so a cache miss
+                // here is a protocol bug, not a race.
+                let input: &[f32] = if stage.first_layer == 0 {
+                    z1_cache.get(&req).expect("trial for unopened request").as_slice()
+                } else {
+                    h.as_slice()
+                };
+                let t0 = Instant::now();
+                let out = stage.run(input, params, trial_idx, &mut scratch);
+                metrics.trials_executed.fetch_add(1, Relaxed);
+                metrics.record_latency(t0.elapsed());
+                let delivered = match (&sink, out) {
+                    (StageSink::Next(tx), StageOut::Hidden(h2)) => {
+                        tx.send(StageMsg::Trial { req, gen, trial_idx, h: h2 }).is_ok()
+                    }
+                    (StageSink::Collect(tx), StageOut::Winner(w)) => {
+                        tx.send((req, gen, w)).is_ok()
+                    }
+                    _ => unreachable!("stage/sink shape mismatch"),
+                };
+                if !delivered {
+                    return; // downstream died — tear the pipeline down
+                }
+            }
+        }
+    }
+}
+
+/// Vote state of one in-flight request on the control thread.  An entry
+/// is removed the moment its response is sent; speculative winners that
+/// land later are discarded by the `gen` tag, so a caller may reuse the
+/// id immediately after `wait` returns.
+struct Active {
+    req: InferRequest,
+    reply: mpsc::Sender<InferResponse>,
+    submitted: Instant,
+    outcome: WtaOutcome,
+    /// Admission generation (unique across the backend's lifetime).
+    gen: u64,
+    base: u64,
+    issued: u32,
+}
+
+fn control_loop(
+    sub_rx: mpsc::Receiver<CtrlMsg>,
+    stage0: mpsc::Sender<StageMsg>,
+    win_rx: mpsc::Receiver<(RequestId, u64, i32)>,
+    metrics: Arc<Metrics>,
+    opts: PipelineOptions,
+    classes: usize,
+) {
+    let depth = opts.depth.max(1);
+    let max_in_flight = opts.max_in_flight.max(1);
+    let mut active: HashMap<RequestId, Active> = HashMap::new();
+    // Round-robin issue order over requests with budget left (may hold
+    // stale ids of completed requests; skipped at issue time).
+    let mut queue: VecDeque<RequestId> = VecDeque::new();
+    let mut pending: VecDeque<(InferRequest, mpsc::Sender<InferResponse>, Instant)> =
+        VecDeque::new();
+    let mut outstanding: usize = 0;
+    let mut next_gen: u64 = 0;
+    let mut shutdown = false;
+
+    loop {
+        // Drain the submission inbox without blocking.
+        loop {
+            match sub_rx.try_recv() {
+                Ok(CtrlMsg::Submit(req, reply, t0)) => pending.push_back((req, reply, t0)),
+                Ok(CtrlMsg::Shutdown) => shutdown = true,
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        // Admit pending requests up to the in-flight cap.
+        while active.len() < max_in_flight {
+            let Some((req, reply, t0)) = pending.pop_front() else { break };
+            metrics.requests_admitted.fetch_add(1, Relaxed);
+            let id = req.id;
+            if req.max_trials == 0 {
+                let latency = t0.elapsed();
+                metrics.requests_completed.fetch_add(1, Relaxed);
+                metrics.record_latency(latency);
+                let _ = reply.send(InferResponse {
+                    id,
+                    prediction: -1,
+                    outcome: WtaOutcome::new(classes),
+                    trials_used: 0,
+                    latency,
+                });
+                continue;
+            }
+            if stage0.send(StageMsg::Open { req: id, image: req.image.clone() }).is_err() {
+                return;
+            }
+            let base = trial_stream_base(opts.seed, id);
+            next_gen += 1;
+            active.insert(
+                id,
+                Active {
+                    req,
+                    reply,
+                    submitted: t0,
+                    outcome: WtaOutcome::new(classes),
+                    gen: next_gen,
+                    base,
+                    issued: 0,
+                },
+            );
+            queue.push_back(id);
+        }
+        // Keep the pipeline full: one trial per issuable request,
+        // round-robin, while the in-flight window has room.
+        while outstanding < depth {
+            let Some(id) = queue.pop_front() else { break };
+            let Some(a) = active.get_mut(&id) else { continue };
+            if a.issued >= a.req.max_trials {
+                continue;
+            }
+            let trial_idx = a.base.wrapping_add(a.issued as u64);
+            let msg = StageMsg::Trial { req: id, gen: a.gen, trial_idx, h: Vec::new() };
+            if stage0.send(msg).is_err() {
+                return;
+            }
+            a.issued += 1;
+            outstanding += 1;
+            if a.issued < a.req.max_trials {
+                queue.push_back(id);
+            }
+        }
+        // Reap winners: block only when trials are in flight (they are
+        // guaranteed to come back — a dead die closes win_rx instead).
+        if outstanding > 0 {
+            match win_rx.recv() {
+                Ok((id, gen, w)) => handle_winner(
+                    id, gen, w, &mut active, &mut queue, &mut outstanding, &stage0, &metrics,
+                    &opts,
+                ),
+                Err(_) => return,
+            }
+            while let Ok((id, gen, w)) = win_rx.try_recv() {
+                handle_winner(
+                    id, gen, w, &mut active, &mut queue, &mut outstanding, &stage0, &metrics,
+                    &opts,
+                );
+            }
+        } else if pending.is_empty() && active.is_empty() {
+            if shutdown {
+                return;
+            }
+            // Idle: block for the next submission.
+            match sub_rx.recv() {
+                Ok(CtrlMsg::Submit(req, reply, t0)) => pending.push_back((req, reply, t0)),
+                Ok(CtrlMsg::Shutdown) => shutdown = true,
+                Err(_) => return,
+            }
+        }
+        if shutdown && pending.is_empty() && active.is_empty() && outstanding == 0 {
+            return;
+        }
+    }
+}
+
+fn handle_winner(
+    id: RequestId,
+    gen: u64,
+    winner: i32,
+    active: &mut HashMap<RequestId, Active>,
+    queue: &mut VecDeque<RequestId>,
+    outstanding: &mut usize,
+    stage0: &mpsc::Sender<StageMsg>,
+    metrics: &Metrics,
+    opts: &PipelineOptions,
+) {
+    *outstanding -= 1;
+    metrics.trials_executed.fetch_add(1, Relaxed);
+    // Stale speculation: the request completed (and its id may even have
+    // been reused by a new request — the `gen` mismatch catches that)
+    // while this trial was in the pipe.  It is paid for, not counted.
+    let Some(a) = active.get_mut(&id) else { return };
+    if a.gen != gen {
+        return;
+    }
+    a.outcome.record(winner);
+    let recorded = a.outcome.trials as u32;
+    let decided = a.req.confidence > 0.0 && recorded >= opts.min_trials && {
+        let (lead, runner) = a.outcome.top_two();
+        lead_is_decided(lead, runner, a.req.confidence)
+    };
+    if recorded >= a.req.max_trials || decided {
+        // Budget never issued is saved; trials already in the pipe are
+        // speculation and stay counted as executed when they land.
+        metrics
+            .trials_saved
+            .fetch_add((a.req.max_trials - a.issued) as u64, Relaxed);
+        let latency = a.submitted.elapsed();
+        metrics.requests_completed.fetch_add(1, Relaxed);
+        metrics.record_latency(latency);
+        let _ = a.reply.send(InferResponse {
+            id,
+            prediction: a.outcome.prediction(),
+            outcome: a.outcome.clone(),
+            trials_used: recorded,
+            latency,
+        });
+        active.remove(&id);
+        // Purge any stale issue-queue entry (early stop can leave one), so
+        // a later request reusing this id never gets two round-robin slots.
+        queue.retain(|&q| q != id);
+        // FIFO on the control→die-0 channel guarantees every Trial of this
+        // request is processed before this Close drops the z1 cache entry.
+        let _ = stage0.send(StageMsg::Close { req: id });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::nn::ModelSpec;
+    use std::sync::Arc as StdArc;
+
+    fn model() -> Weights {
+        Weights::random(ModelSpec::new(vec![784, 16, 12, 10]), 11)
+    }
+
+    #[test]
+    fn rejects_more_dies_than_layers() {
+        let w = model(); // 3 layers
+        let opts = PipelineOptions { dies: 4, ..Default::default() };
+        let err = PipelinedFleetBackend::start(&w, opts).unwrap_err();
+        assert!(format!("{err:#}").contains("3-layer"), "unexpected error: {err:#}");
+    }
+
+    #[test]
+    fn pipeline_votes_match_the_unsharded_engine() {
+        let w = model();
+        let seed = 0xAB5E;
+        let p = TrialParams::default();
+        let engine = NativeEngine::new(StdArc::new(w.clone()), seed);
+        let opts =
+            PipelineOptions { dies: 3, seed, params: p, ..Default::default() };
+        let b = PipelinedFleetBackend::start(&w, opts).unwrap();
+        for id in 0..3u64 {
+            let x: Vec<f32> = (0..784).map(|j| ((j as u64 + id * 31) % 13) as f32 / 13.0).collect();
+            let want = engine.infer(&x, p, 20, trial_stream_base(seed, id));
+            let t = b.submit(InferRequest::new(id, x).with_budget(20, 0.0)).unwrap();
+            let got = b.wait(t).unwrap();
+            assert_eq!(got.outcome.counts, want.counts, "request {id} votes diverged");
+            assert_eq!(got.outcome.abstentions, want.abstentions);
+            assert_eq!(got.trials_used, 20);
+        }
+        // Every die saw every trial.
+        for (d, m) in b.per_die_metrics().iter().enumerate() {
+            assert_eq!(m.trials_executed, 60, "die {d} trial count");
+        }
+    }
+
+    #[test]
+    fn early_stop_responds_before_the_pipe_drains() {
+        // Plant a dominant class so the Wilson stopper fires quickly.
+        let mut w = model();
+        let last = w.mats.len() - 1;
+        let cols = 10;
+        for row in 0..12 {
+            w.mats[last][row * cols + 4] = 3.0;
+        }
+        let b = PipelinedFleetBackend::start(&w, PipelineOptions::default()).unwrap();
+        let t = b
+            .submit(InferRequest::new(1, vec![0.7; 784]).with_budget(400, 0.95))
+            .unwrap();
+        let r = b.wait(t).unwrap();
+        assert_eq!(r.prediction, 4);
+        assert!(r.trials_used < 400, "expected early stop, used {}", r.trials_used);
+    }
+
+    #[test]
+    fn zero_budget_answers_immediately() {
+        let w = model();
+        let b = PipelinedFleetBackend::start(&w, PipelineOptions::default()).unwrap();
+        let t = b.submit(InferRequest::new(9, vec![0.1; 784]).with_budget(0, 0.0)).unwrap();
+        let r = b.wait(t).unwrap();
+        assert_eq!(r.trials_used, 0);
+        assert_eq!(r.prediction, -1);
+    }
+
+    #[test]
+    fn wrong_feature_count_is_rejected_at_submit() {
+        let w = model();
+        let b = PipelinedFleetBackend::start(&w, PipelineOptions::default()).unwrap();
+        assert!(b.submit(InferRequest::new(1, vec![0.1; 100])).is_err());
+    }
+}

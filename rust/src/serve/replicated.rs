@@ -1,0 +1,402 @@
+//! [`Backend`] #2: one worker thread per programmed die, router-dispatched.
+//!
+//! This is PR-1's synchronous `Fleet::serve` loop lifted onto real
+//! concurrency: every [`Chip`] lives on its own worker thread pulling
+//! requests from a per-chip queue, [`Router`] picks the die at submit
+//! time, and the [`HealthMonitor`] runs *live* — every `reweigh_every`
+//! completions it refreshes the router's traffic weights
+//! ([`HealthMonitor::traffic_weights`]), flags drifting dies for in-place
+//! recalibration (the worker recalibrates between requests, on its own
+//! thread), and evicts dies under the accuracy floor.  Labeled probe
+//! requests ([`InferRequest::with_label`]) are what feed accuracy-based
+//! drift detection; unlabeled traffic still drives latency/abstention
+//! reweighting.
+//!
+//! Each worker applies the early stopper per request (Wilson interval on
+//! the top-two votes, like the coordinator's scheduler).  The request's
+//! trial indices derive from `(backend seed, request id)` only, but the
+//! comparator-noise stream at those indices is the *serving die's* — each
+//! chip keeps the private RNG identity PR-1 gave it — so a response is
+//! reproducible for a fixed fleet (same fleet seed, chip count, routing),
+//! not across fleets of different shapes.  For shape-independent votes
+//! use the pipelined backend, whose dies share one logical stream.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Metrics, MetricsSnapshot};
+use crate::dataset::Dataset;
+use crate::engine::TrialEngine;
+use crate::fleet::{
+    Calibrator, Chip, ChipId, ChipStats, Fleet, FleetSnapshot, HealthMonitor, Router,
+};
+use crate::neuron::WtaOutcome;
+use crate::stats::ci::lead_is_decided;
+
+use super::{trial_stream_base, Backend, InferRequest, InferResponse, Ticket};
+
+/// Knobs of the replicated backend.
+#[derive(Debug, Clone)]
+pub struct ReplicatedOptions {
+    /// Base seed of per-request trial streams.
+    pub seed: u64,
+    /// Minimum trials before the early stopper may fire.
+    pub min_trials: u32,
+    /// Refresh traffic weights / drift flags every this many completions.
+    pub reweigh_every: u64,
+}
+
+impl Default for ReplicatedOptions {
+    fn default() -> Self {
+        Self { seed: 0x5E12E, min_trials: 5, reweigh_every: 32 }
+    }
+}
+
+struct Job {
+    req: InferRequest,
+    reply: mpsc::Sender<InferResponse>,
+    submitted: Instant,
+}
+
+/// State shared between the submit path and every worker.
+struct Shared {
+    health: Mutex<HealthMonitor>,
+    /// Router traffic weights (health-driven, refreshed live).
+    weights: Mutex<Vec<f64>>,
+    /// In-flight requests per chip.
+    loads: Vec<AtomicU64>,
+    /// Per-chip "recalibrate before your next request" flags.
+    recal: Vec<AtomicBool>,
+    stats: Mutex<Vec<ChipStats>>,
+    completed: AtomicU64,
+}
+
+/// Replicated-fleet serving session.
+pub struct ReplicatedFleetBackend {
+    txs: Vec<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    router: Router,
+    shared: Arc<Shared>,
+    metrics: Arc<Metrics>,
+}
+
+impl ReplicatedFleetBackend {
+    /// Take ownership of a programmed (and ideally calibrated) fleet and
+    /// spawn one worker thread per die.  `cal` supplies the held-out set
+    /// + calibrator that drifting dies recalibrate against live; without
+    /// it, drift flags are still raised but recalibration is skipped.
+    pub fn start<E: TrialEngine + 'static>(
+        fleet: Fleet<E>,
+        cal: Option<(Dataset, Calibrator)>,
+        opts: ReplicatedOptions,
+    ) -> Self {
+        let Fleet { chips, router, health, .. } = fleet;
+        let n = chips.len();
+        let initial_weights = health.traffic_weights();
+        let shared = Arc::new(Shared {
+            health: Mutex::new(health),
+            weights: Mutex::new(initial_weights),
+            loads: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            recal: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            stats: Mutex::new(vec![ChipStats::default(); n]),
+            completed: AtomicU64::new(0),
+        });
+        let metrics = Metrics::new();
+        let cal = cal.map(Arc::new);
+        let mut txs = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for (idx, chip) in chips.into_iter().enumerate() {
+            debug_assert_eq!(chip.id, idx, "chips must arrive in id order");
+            let (tx, rx) = mpsc::channel::<Job>();
+            txs.push(tx);
+            let shared = shared.clone();
+            let metrics = metrics.clone();
+            let cal = cal.clone();
+            let opts = opts.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("raca-chip-{idx}"))
+                .spawn(move || worker_loop(chip, rx, shared, metrics, cal, opts))
+                .expect("spawning fleet worker thread");
+            workers.push(worker);
+        }
+        Self { txs, workers, router, shared, metrics }
+    }
+
+    pub fn num_chips(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Ids still eligible for routing.
+    pub fn healthy(&self) -> Vec<ChipId> {
+        self.shared.health.lock().unwrap().healthy()
+    }
+
+    /// Current health-driven router weights.
+    pub fn traffic_weights(&self) -> Vec<f64> {
+        self.shared.weights.lock().unwrap().clone()
+    }
+
+    /// Point-in-time per-chip serving stats.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        FleetSnapshot {
+            chips: self
+                .shared
+                .stats
+                .lock()
+                .unwrap()
+                .iter()
+                .enumerate()
+                .map(|(id, s)| (id, s.clone()))
+                .collect(),
+        }
+    }
+}
+
+impl Backend for ReplicatedFleetBackend {
+    fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        let healthy = self.shared.health.lock().unwrap().healthy();
+        let loads: Vec<u64> = self.shared.loads.iter().map(|l| l.load(Relaxed)).collect();
+        let weights = self.shared.weights.lock().unwrap().clone();
+        let chip = self
+            .router
+            .pick(&healthy, &loads, &weights)
+            .ok_or_else(|| anyhow!("no healthy chips left in the fleet"))?;
+        let id = req.id;
+        let (reply, rx) = mpsc::channel();
+        self.metrics.requests_admitted.fetch_add(1, Relaxed);
+        self.shared.loads[chip].fetch_add(1, Relaxed);
+        if self.txs[chip]
+            .send(Job { req, reply, submitted: Instant::now() })
+            .is_err()
+        {
+            self.shared.loads[chip].fetch_sub(1, Relaxed);
+            return Err(anyhow!("fleet worker {chip} is gone"));
+        }
+        Ok(Ticket::new(id, rx))
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    fn shutdown(self: Box<Self>) {
+        // Drop closes the queues; workers drain in-flight jobs and exit.
+        drop(self);
+    }
+}
+
+impl Drop for ReplicatedFleetBackend {
+    fn drop(&mut self) {
+        self.txs.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop<E: TrialEngine>(
+    mut chip: Chip<E>,
+    rx: mpsc::Receiver<Job>,
+    shared: Arc<Shared>,
+    metrics: Arc<Metrics>,
+    cal: Option<Arc<(Dataset, Calibrator)>>,
+    opts: ReplicatedOptions,
+) {
+    let id = chip.id;
+    let reweigh_every = opts.reweigh_every.max(1);
+    while let Ok(job) = rx.recv() {
+        // Health monitor flagged this die as drifting → recalibrate on
+        // our own thread before taking the next request.
+        if shared.recal[id].swap(false, Relaxed) {
+            if let Some(cal) = &cal {
+                cal.1.calibrate_chip(&mut chip, &cal.0);
+                shared.health.lock().unwrap().note_recalibrated(id);
+            }
+        }
+
+        let base = trial_stream_base(opts.seed, job.req.id);
+        let params = chip.params;
+        let service_t0 = Instant::now();
+        let mut outcome = WtaOutcome::new(chip.engine.output_dim());
+        if job.req.confidence <= 0.0 {
+            // Fixed budget: one engine call, so `NativeEngine::infer` can
+            // reuse its cached layer-0 pre-activation across every trial.
+            outcome = chip
+                .engine
+                .infer(&job.req.image, params, job.req.max_trials as usize, base);
+        } else {
+            // Early stopping: vote in min_trials-sized chunks — the engine
+            // still amortizes the input layer between Wilson checks, and
+            // trial indices stay `base + k` so votes are bit-identical to
+            // an unchunked run.
+            let chunk = opts.min_trials.max(1);
+            while (outcome.trials as u32) < job.req.max_trials {
+                let take = chunk.min(job.req.max_trials - outcome.trials as u32);
+                let part = chip.engine.infer(
+                    &job.req.image,
+                    params,
+                    take as usize,
+                    base.wrapping_add(outcome.trials),
+                );
+                outcome.merge(&part);
+                let (lead, runner) = outcome.top_two();
+                if lead_is_decided(lead, runner, job.req.confidence) {
+                    break;
+                }
+            }
+        }
+        let used = outcome.trials as u32;
+
+        // Health/stats get on-chip *service* time (die speed); the
+        // response and backend metrics keep end-to-end latency, which
+        // includes queue wait.
+        let service_us = service_t0.elapsed().as_micros() as u64;
+        let latency = job.submitted.elapsed();
+        let prediction = outcome.prediction();
+        let abstained = outcome.abstentions == outcome.trials;
+        let correct = job.req.label.map(|l| prediction == l);
+
+        metrics.trials_executed.fetch_add(used as u64, Relaxed);
+        metrics.trials_saved.fetch_add((job.req.max_trials - used) as u64, Relaxed);
+        metrics.requests_completed.fetch_add(1, Relaxed);
+        metrics.record_latency(latency);
+        // A zero-budget request executed nothing: answering it must not
+        // charge the die an abstention/miss (the pipelined backend's
+        // zero-budget path likewise bypasses all per-die accounting).
+        if job.req.max_trials > 0 {
+            shared.health.lock().unwrap().record(id, correct, abstained, service_us);
+            shared.stats.lock().unwrap()[id].record(used as u64, abstained, correct, service_us);
+        }
+        shared.loads[id].fetch_sub(1, Relaxed);
+        let _ = job.reply.send(InferResponse {
+            id: job.req.id,
+            prediction,
+            outcome,
+            trials_used: used,
+            latency,
+        });
+
+        // Periodic live steering: evict floor-breakers, flag drifters for
+        // recalibration, refresh the router's traffic weights.
+        let done = shared.completed.fetch_add(1, Relaxed) + 1;
+        if done % reweigh_every == 0 {
+            let mut h = shared.health.lock().unwrap();
+            for c in h.evictable() {
+                // Never evict the last healthy die: a degraded fleet that
+                // still answers beats a submit path that hard-errors.
+                if h.healthy().len() > 1 {
+                    h.evict(c);
+                }
+            }
+            for c in h.drifting() {
+                shared.recal[c].store(true, Relaxed);
+            }
+            *shared.weights.lock().unwrap() = h.traffic_weights();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::VariationModel;
+    use crate::fleet::RoutePolicy;
+    use crate::nn::{ModelSpec, Weights};
+
+    fn backend(chips: usize, policy: RoutePolicy) -> ReplicatedFleetBackend {
+        let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 5);
+        let fleet =
+            Fleet::program_native(&w, chips, &VariationModel::lognormal(0.05), policy, 99);
+        ReplicatedFleetBackend::start(fleet, None, ReplicatedOptions::default())
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_across_workers() {
+        let b = backend(3, RoutePolicy::RoundRobin);
+        let mut tickets = Vec::new();
+        for i in 0..9u64 {
+            let img = vec![(i % 5) as f32 / 5.0; 784];
+            tickets.push(b.submit(InferRequest::new(i, img).with_budget(4, 0.0)).unwrap());
+        }
+        for t in tickets {
+            let r = b.wait(t).unwrap();
+            assert_eq!(r.trials_used, 4);
+        }
+        let snap = b.snapshot();
+        assert_eq!(snap.aggregate().served, 9);
+        assert_eq!(snap.load_imbalance(), 0, "round-robin must balance: {snap}");
+        assert_eq!(b.metrics().requests_completed, 9);
+        assert_eq!(b.metrics().trials_executed, 36);
+    }
+
+    #[test]
+    fn responses_are_independent_of_fleet_width() {
+        // Trial *indices* depend only on (seed, id); the noise stream at
+        // those indices is the serving die's own.  With zero variation
+        // and every die pinned to one RNG identity, a 1-die and a 3-die
+        // fleet must return bit-identical votes — isolating the index
+        // derivation from routing.
+        let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 5);
+        let votes = |chips: usize| -> Vec<Vec<u64>> {
+            let fleet = Fleet::program_native(
+                &w,
+                chips,
+                &VariationModel::default(),
+                RoutePolicy::RoundRobin,
+                7,
+            );
+            // Zero-variation dies still have distinct engine seeds, so pin
+            // every chip to the same trial-RNG identity for this check.
+            let mut fleet = fleet;
+            for c in fleet.chips.iter_mut() {
+                c.engine.seed = 7;
+            }
+            let b = ReplicatedFleetBackend::start(fleet, None, ReplicatedOptions::default());
+            let tickets: Vec<Ticket> = (0..6u64)
+                .map(|i| {
+                    let img = vec![(i % 3) as f32 / 3.0; 784];
+                    b.submit(InferRequest::new(i, img).with_budget(8, 0.0)).unwrap()
+                })
+                .collect();
+            tickets.into_iter().map(|t| b.wait(t).unwrap().outcome.counts).collect()
+        };
+        assert_eq!(votes(1), votes(3));
+    }
+
+    #[test]
+    fn labeled_probes_drive_health_and_weights() {
+        let b = backend(2, RoutePolicy::Weighted);
+        let mut tickets = Vec::new();
+        for i in 0..40u64 {
+            let img = vec![(i % 7) as f32 / 7.0; 784];
+            // Label everything 0 — some will be wrong, which is fine; the
+            // point is that the monitor accumulates labeled samples.
+            tickets.push(
+                b.submit(InferRequest::new(i, img).with_budget(3, 0.0).with_label(0)).unwrap(),
+            );
+        }
+        for t in tickets {
+            b.wait(t).unwrap();
+        }
+        let h = b.shared.health.lock().unwrap();
+        let labeled: usize = (0..2).map(|c| h.chip(c).labeled_samples()).sum();
+        assert_eq!(labeled, 40);
+        drop(h);
+        assert_eq!(b.traffic_weights().len(), 2);
+    }
+
+    #[test]
+    fn shutdown_completes_in_flight_work() {
+        let b = Box::new(backend(2, RoutePolicy::LeastLoaded));
+        let t = b.submit(InferRequest::new(1, vec![0.3; 784]).with_budget(6, 0.0)).unwrap();
+        let rx_alive = t; // hold the ticket across shutdown
+        b.shutdown();
+        // The worker finished the job before exiting.
+        let r = rx_alive.rx.recv().unwrap();
+        assert_eq!(r.trials_used, 6);
+    }
+}

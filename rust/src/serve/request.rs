@@ -1,10 +1,22 @@
-//! Request/response types of the serving API.
+//! Shared request/response vocabulary of the serving API.
+//!
+//! Every [`crate::serve::Backend`] speaks these types; the coordinator
+//! re-exports them for backward compatibility (they started life there
+//! and were promoted when serving grew beyond one chip).
 
 use crate::neuron::WtaOutcome;
 
 pub type RequestId = u64;
 
 /// One classification request.
+///
+/// `id` must be unique among a backend's in-flight requests — it keys
+/// response routing and (for the fleet backends) the request's trial
+/// indices.  Equal `(backend seed, id)` reproduce identical votes on the
+/// pipelined backend (whose dies share one logical RNG stream); on the
+/// replicated backend the votes additionally depend on which die served
+/// the request (each die keeps its own RNG identity), so reproducibility
+/// holds per fixed fleet shape and routing.
 #[derive(Debug, Clone)]
 pub struct InferRequest {
     pub id: RequestId,
@@ -14,16 +26,25 @@ pub struct InferRequest {
     pub max_trials: u32,
     /// Early-stop confidence on the top-two Wilson interval (0 disables).
     pub confidence: f64,
+    /// Ground-truth label for probe traffic (`None` for live traffic).
+    /// Labeled requests feed the fleet backends' health monitors.
+    pub label: Option<i32>,
 }
 
 impl InferRequest {
     pub fn new(id: RequestId, image: Vec<f32>) -> Self {
-        Self { id, image, max_trials: 32, confidence: 0.95 }
+        Self { id, image, max_trials: 32, confidence: 0.95, label: None }
     }
 
     pub fn with_budget(mut self, max_trials: u32, confidence: f64) -> Self {
         self.max_trials = max_trials;
         self.confidence = confidence;
+        self
+    }
+
+    /// Attach a ground-truth label (health-probe traffic).
+    pub fn with_label(mut self, label: i32) -> Self {
+        self.label = Some(label);
         self
     }
 }
@@ -51,8 +72,10 @@ mod tests {
         let r = InferRequest::new(7, vec![0.0; 784]);
         assert_eq!(r.max_trials, 32);
         assert!(r.confidence > 0.9);
-        let r = r.with_budget(64, 0.0);
+        assert_eq!(r.label, None);
+        let r = r.with_budget(64, 0.0).with_label(3);
         assert_eq!(r.max_trials, 64);
         assert_eq!(r.confidence, 0.0);
+        assert_eq!(r.label, Some(3));
     }
 }

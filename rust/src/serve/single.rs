@@ -1,0 +1,90 @@
+//! [`Backend`] #1: one chip behind the coordinator's batched scheduler.
+//!
+//! Thin adapter over [`crate::coordinator::Server`]: the scheduler thread
+//! packs (request, trial) pairs into batches, runs them on a single
+//! [`TrialRunner`] engine and applies Wilson-interval early stopping.
+//! This is the deployment shape of PR-0/PR-1's `raca infer`, now reached
+//! through the same trait as the fleet backends.
+
+use anyhow::Result;
+
+use crate::coordinator::{MetricsSnapshot, Server, SchedulerConfig, TrialRunner};
+
+use super::{Backend, InferRequest, Ticket};
+
+/// Single-die serving session (scheduler thread + batched engine).
+pub struct SingleChipBackend {
+    server: Server,
+}
+
+impl SingleChipBackend {
+    /// Spawn the scheduler loop over `engine`.
+    pub fn start<E: TrialRunner + Send + 'static>(engine: E, cfg: SchedulerConfig) -> Self {
+        Self { server: Server::start(engine, cfg) }
+    }
+}
+
+impl Backend for SingleChipBackend {
+    fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        let id = req.id;
+        let rx = self.server.client().submit_request(req)?;
+        Ok(Ticket::new(id, rx))
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        self.server.metrics().snapshot()
+    }
+
+    fn shutdown(self: Box<Self>) {
+        // Server::drop signals the scheduler thread and joins it after
+        // in-flight requests complete.
+        drop(self);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::nn::{ModelSpec, Weights};
+
+    fn backend() -> SingleChipBackend {
+        let w = std::sync::Arc::new(Weights::random(ModelSpec::new(vec![784, 16, 10]), 3));
+        let mut cfg = SchedulerConfig::default();
+        cfg.batch_size = 16;
+        SingleChipBackend::start(NativeEngine::new(w, 7), cfg)
+    }
+
+    #[test]
+    fn submit_wait_roundtrip() {
+        let b = backend();
+        let t = b
+            .submit(InferRequest::new(1, vec![0.5; 784]).with_budget(9, 0.0))
+            .unwrap();
+        assert_eq!(t.id, 1);
+        let r = b.wait(t).unwrap();
+        assert_eq!(r.id, 1);
+        assert_eq!(r.trials_used, 9);
+        assert!((-1..10).contains(&r.prediction));
+        assert_eq!(b.metrics().requests_completed, 1);
+    }
+
+    #[test]
+    fn works_as_a_trait_object() {
+        let b: Box<dyn Backend> = Box::new(backend());
+        let mut tickets = Vec::new();
+        for i in 0..4u64 {
+            tickets.push(
+                b.submit(InferRequest::new(i, vec![0.1 * i as f32; 784]).with_budget(5, 0.0))
+                    .unwrap(),
+            );
+        }
+        for t in tickets {
+            assert_eq!(b.wait(t).unwrap().trials_used, 5);
+        }
+        let m = b.metrics();
+        assert_eq!(m.requests_completed, 4);
+        assert_eq!(m.trials_executed, 20);
+        b.shutdown();
+    }
+}

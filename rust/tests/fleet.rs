@@ -127,18 +127,37 @@ fn calibrated_sigma10_fleet_is_no_worse_than_uncalibrated() {
 // ---- routing + scheduler fan-out ------------------------------------------
 
 #[test]
-fn router_spreads_a_served_workload_and_health_tracks_it() {
+fn replicated_backend_spreads_a_served_workload_and_health_tracks_it() {
+    // `Fleet::serve` is gone (PR-2): request-level serving goes through
+    // the Backend trait, with one worker thread per chip.
+    use raca::serve::{Backend, InferRequest as Req, ReplicatedFleetBackend, ReplicatedOptions};
+
     let w = trained();
-    let mut fleet = farm(&w, 3, 0.05, 99);
+    let fleet = farm(&w, 3, 0.05, 99);
     let batch = synth::generate(30, 0xF00D);
-    let report = fleet.serve(&batch, 5, 4242);
-    assert_eq!(report.served, 30);
-    assert_eq!(report.snapshot.load_imbalance(), 0, "round-robin must balance");
-    let agg = report.snapshot.aggregate();
+    let backend = ReplicatedFleetBackend::start(fleet, None, ReplicatedOptions::default());
+    let tickets: Vec<_> = (0..batch.len())
+        .map(|i| {
+            backend
+                .submit(
+                    Req::new(i as u64, batch.image(i).to_vec())
+                        .with_budget(5, 0.0)
+                        .with_label(batch.label(i)),
+                )
+                .unwrap()
+        })
+        .collect();
+    for t in tickets {
+        assert_eq!(backend.wait(t).unwrap().trials_used, 5);
+    }
+    let snap = backend.snapshot();
+    assert_eq!(snap.load_imbalance(), 0, "round-robin must balance");
+    let agg = snap.aggregate();
     assert_eq!(agg.served, 30);
     assert_eq!(agg.trials, 150);
-    for id in 0..fleet.len() {
-        assert_eq!(fleet.health.chip(id).served, 10);
+    assert_eq!(agg.labeled, 30, "labeled probes must reach the health monitor");
+    for (_, s) in &snap.chips {
+        assert_eq!(s.served, 10);
     }
 }
 

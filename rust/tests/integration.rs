@@ -142,7 +142,7 @@ fn snr_extremes_behave_sanely() {
     let ds = Dataset::load(&dir.join("data").join("test")).unwrap().take(100);
     let engine = NativeEngine::new(w, 23);
 
-    let acc = |snr: f64, trials: usize| {
+    let acc = |snr: f32, trials: usize| {
         let p = TrialParams::with_snr_scale(snr);
         (0..ds.len())
             .filter(|&i| {

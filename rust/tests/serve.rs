@@ -1,0 +1,256 @@
+//! Serving-API integration: the `Backend` trait end-to-end over all three
+//! implementations, and the sharded-pipeline bit-parity contract against
+//! `arch::{Floorplan, ShardPlan}`.
+//!
+//! Everything is artifact-free (models are `Weights::random` or trained
+//! natively on synthetic digits), so the suite runs on a fresh checkout.
+
+use std::sync::Arc;
+
+use raca::arch::{Floorplan, ShardPlan};
+use raca::coordinator::SchedulerConfig;
+use raca::dataset::synth;
+use raca::device::VariationModel;
+use raca::engine::{NativeEngine, TrialParams};
+use raca::fleet::{Calibrator, Fleet, RoutePolicy};
+use raca::nn::{ModelSpec, TrainConfig, Weights};
+use raca::serve::{
+    trial_stream_base, Backend, BackendKind, InferRequest, PipelineOptions,
+    PipelinedFleetBackend, ReplicatedFleetBackend, ReplicatedOptions, SingleChipBackend,
+};
+
+/// Small trained net shared across tests (3 layers, so it shards 2 or 3 ways).
+fn trained() -> Weights {
+    let ds = synth::generate(160, 0x7A);
+    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0x7B };
+    raca::nn::train(&ds, ModelSpec::new(vec![784, 20, 12, 10]), &cfg)
+}
+
+fn image(i: u64) -> Vec<f32> {
+    (0..784).map(|j| ((j as u64 * 7 + i * 131) % 17) as f32 / 17.0).collect()
+}
+
+// ---- the tentpole contract: one trait, three deployment shapes ------------
+
+#[test]
+fn every_backend_serves_the_same_workload() {
+    let w = trained();
+    let seed = 0x5EED5;
+    let backends: Vec<(&str, Box<dyn Backend>)> = vec![
+        ("single", {
+            let mut cfg = SchedulerConfig::default();
+            cfg.batch_size = 16;
+            Box::new(SingleChipBackend::start(
+                NativeEngine::new(Arc::new(w.clone()), seed),
+                cfg,
+            ))
+        }),
+        ("replicated", {
+            let fleet = Fleet::program_native(
+                &w,
+                3,
+                &VariationModel::lognormal(0.05),
+                RoutePolicy::RoundRobin,
+                seed,
+            );
+            Box::new(ReplicatedFleetBackend::start(
+                fleet,
+                None,
+                ReplicatedOptions::default(),
+            ))
+        }),
+        ("pipelined", {
+            Box::new(
+                PipelinedFleetBackend::start(
+                    &w,
+                    PipelineOptions { dies: 3, seed, ..Default::default() },
+                )
+                .unwrap(),
+            )
+        }),
+    ];
+    for (name, b) in backends {
+        let tickets: Vec<_> = (0..12u64)
+            .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(6, 0.0)).unwrap())
+            .collect();
+        for t in tickets {
+            let r = b.wait(t).unwrap();
+            assert_eq!(r.trials_used, 6, "[{name}] wrong trial spend");
+            assert!((-1..10).contains(&r.prediction), "[{name}] bad prediction");
+            assert_eq!(r.outcome.trials, 6);
+        }
+        let m = b.metrics();
+        assert_eq!(m.requests_completed, 12, "[{name}] completion count");
+        assert!(m.trials_executed >= 72, "[{name}] trial count {m}");
+        b.shutdown();
+    }
+}
+
+// ---- sharded pipeline vs arch::{Floorplan, ShardPlan} ---------------------
+
+#[test]
+fn shard_plan_agrees_with_the_floorplan() {
+    let spec = ModelSpec::new(vec![784, 20, 12, 10]);
+    let fp = Floorplan::place(spec.clone(), 128, 8);
+    for dies in [2usize, 3] {
+        let plan = ShardPlan::balanced(&spec, 128, dies).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.dies(), dies);
+        // Every die's tile budget is exactly the floorplan demand of its
+        // layers, and the plan covers the whole chip's tile count.
+        let mut total = 0usize;
+        for (d, r) in plan.ranges.iter().enumerate() {
+            let want: usize = r.clone().map(|l| fp.layer_tiles(l).len()).sum();
+            assert_eq!(plan.tiles_per_die[d], want, "die {d} tile demand");
+            total += want;
+        }
+        assert_eq!(total, fp.num_tiles());
+    }
+}
+
+/// The acceptance bar: a 3-layer model split across 2 and 3 dies produces
+/// bit-identical votes to the unsharded `NativeEngine` at equal
+/// `(seed, trial_idx)`.
+#[test]
+fn pipelined_votes_are_bit_identical_to_unsharded_native() {
+    let w = trained();
+    let seed = 0xACA5;
+    let p = TrialParams::default();
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    for dies in [2usize, 3] {
+        let b = PipelinedFleetBackend::start(
+            &w,
+            PipelineOptions { dies, seed, params: p, ..Default::default() },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..8u64)
+            .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(24, 0.0)).unwrap())
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let got = b.wait(t).unwrap();
+            let want = reference.infer(
+                &image(i as u64),
+                p,
+                24,
+                trial_stream_base(seed, i as u64),
+            );
+            assert_eq!(
+                got.outcome.counts, want.counts,
+                "{dies}-die pipeline diverged from the unsharded engine on request {i}"
+            );
+            assert_eq!(got.outcome.abstentions, want.abstentions);
+            assert_eq!(got.prediction, want.prediction());
+        }
+        b.shutdown();
+    }
+}
+
+#[test]
+fn pipelined_variation_draws_differ_per_die_but_stay_deterministic() {
+    // Random weights give near-tied logits, so vote patterns are a
+    // sensitive fingerprint of the programmed conductances.
+    let w = Weights::random(ModelSpec::new(vec![784, 16, 12, 10]), 3);
+    let votes = |seed: u64, variation: Option<VariationModel>| -> Vec<Vec<u64>> {
+        let opts = PipelineOptions { dies: 2, seed, variation, ..Default::default() };
+        let b = PipelinedFleetBackend::start(&w, opts).unwrap();
+        let tickets: Vec<_> = (0..8u64)
+            .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(24, 0.0)).unwrap())
+            .collect();
+        tickets.into_iter().map(|t| b.wait(t).unwrap().outcome.counts).collect()
+    };
+    let varied = Some(VariationModel::lognormal(0.08));
+    // Same seed reproduces the same programmed pipeline…
+    assert_eq!(votes(42, varied.clone()), votes(42, varied.clone()));
+    // …a different seed programs different dies…
+    assert_ne!(votes(42, varied.clone()), votes(43, varied.clone()));
+    // …and a varied pipeline differs from the nominal one.
+    assert_ne!(votes(42, varied), votes(42, None));
+}
+
+// ---- validation: clear errors instead of downstream panics ----------------
+
+#[test]
+fn oversharding_and_zero_configs_error_clearly() {
+    let w = trained(); // 3 layers
+    let err = PipelinedFleetBackend::start(
+        &w,
+        PipelineOptions { dies: 4, ..Default::default() },
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("3-layer") && msg.contains("4 dies"), "unhelpful error: {msg}");
+
+    assert!(raca::config::RunConfig::parse(r#"{"fleet": {"chips": 0}}"#).is_err());
+    assert!(raca::config::RunConfig::parse(r#"{"serve": {"shards": 0}}"#).is_err());
+    let c = raca::config::RunConfig::parse(
+        r#"{"serve": {"backend": "pipelined", "shards": 2}}"#,
+    )
+    .unwrap();
+    assert_eq!(c.serve.backend, BackendKind::Pipelined);
+}
+
+// ---- replicated: router spread, early stop, labeled health ----------------
+
+#[test]
+fn replicated_backend_spreads_load_and_tracks_health() {
+    let w = trained();
+    let fleet = Fleet::program_native(
+        &w,
+        3,
+        &VariationModel::lognormal(0.05),
+        RoutePolicy::RoundRobin,
+        99,
+    );
+    let batch = synth::generate(30, 0xF00D);
+    let cal = synth::generate(12, 0xCA1);
+    let b = ReplicatedFleetBackend::start(
+        fleet,
+        Some((cal, Calibrator::quick(3))),
+        ReplicatedOptions::default(),
+    );
+    let tickets: Vec<_> = (0..batch.len())
+        .map(|i| {
+            b.submit(
+                InferRequest::new(i as u64, batch.image(i).to_vec())
+                    .with_budget(5, 0.0)
+                    .with_label(batch.label(i)),
+            )
+            .unwrap()
+        })
+        .collect();
+    for t in tickets {
+        assert_eq!(b.wait(t).unwrap().trials_used, 5);
+    }
+    let snap = b.snapshot();
+    assert_eq!(snap.aggregate().served, 30);
+    assert_eq!(snap.aggregate().trials, 150);
+    assert_eq!(snap.load_imbalance(), 0, "round-robin must balance: {snap}");
+    // Labeled traffic reached the monitor on every chip.
+    assert_eq!(snap.aggregate().labeled, 30);
+    assert_eq!(b.healthy().len(), 3);
+}
+
+#[test]
+fn replicated_early_stop_saves_trials() {
+    // Decisive network: plant a dominant output class (the same
+    // construction the coordinator's early-stop test uses).
+    let mut w = Weights::random(ModelSpec::new(vec![784, 8, 10]), 1);
+    let last = w.mats.len() - 1;
+    for row in 0..9 {
+        w.mats[last][row * 10 + 3] = 4.0;
+    }
+    let fleet = Fleet::program_native(
+        &w,
+        2,
+        &VariationModel::default(),
+        RoutePolicy::LeastLoaded,
+        7,
+    );
+    let b = ReplicatedFleetBackend::start(fleet, None, ReplicatedOptions::default());
+    let r = b
+        .classify(InferRequest::new(1, vec![0.5; 784]).with_budget(300, 0.95))
+        .unwrap();
+    assert_eq!(r.prediction, 3);
+    assert!(r.trials_used < 300, "expected early stop, used {}", r.trials_used);
+    assert!(b.metrics().trials_saved > 0);
+}
