@@ -1,31 +1,31 @@
-//! Bench: serving throughput across `Backend` implementations.
+//! Bench: serving throughput across deployment topologies.
 //!
-//! One 4-layer model, three deployment shapes behind the same trait:
+//! One 4-layer model, every shape built from the same `serve::plan`
+//! compiler:
 //!
-//! * single-chip — the coordinator's batched scheduler on one engine;
-//! * replicated × {2,4,8} — per-chip worker threads + router dispatch
+//! * `die` — the coordinator's batched scheduler on one engine (baseline);
+//! * `Nx(die)` × {2,4,8} — fused per-chip worker threads + router dispatch
 //!   (whole requests per die, σ=5% variation draws);
-//! * pipelined × {2,4} — the model's layers sharded across dies,
-//!   activations streaming die-to-die.  The input die caches the
-//!   per-request layer-0 pre-activation, so the deepest matmul leaves the
-//!   per-trial path entirely — which is why the pipeline beats a single
-//!   chip even before thread-level parallelism kicks in.
+//! * `pipeline:N` × {2,4} — the model's layers sharded across dies,
+//!   activation blocks streaming die-to-die (`:b8` message batching).
+//!   The input die caches the per-request layer-0 pre-activation, so the
+//!   deepest matmul leaves the per-trial path entirely — which is why the
+//!   pipeline beats a single chip even before thread-level parallelism
+//!   kicks in;
+//! * `2x(pipeline:2)` — replicas of pipelines: the tree the flat backend
+//!   switch could not express.  At equal die count it beats the deep
+//!   pipeline because replication halves the bottleneck stage's load
+//!   instead of adding more underutilized stages.
 //!
-//! `--smoke` runs a CI-sized workload and *asserts* the acceptance bar:
-//! pipelined @ 4 dies ≥ 2× single-chip trial throughput.
+//! `--smoke` runs a CI-sized workload and *asserts* the acceptance bars:
+//! `pipeline:4` ≥ 2× the single-die trial throughput, and
+//! `2x(pipeline:2)` ≥ `pipeline:4` at the same 4 dies.
 
-use std::sync::Arc;
 use std::time::Instant;
 
-use raca::coordinator::SchedulerConfig;
 use raca::device::VariationModel;
-use raca::engine::NativeEngine;
-use raca::fleet::{Fleet, RoutePolicy};
 use raca::nn::{ModelSpec, Weights};
-use raca::serve::{
-    Backend, InferRequest, PipelineOptions, PipelinedFleetBackend, ReplicatedFleetBackend,
-    ReplicatedOptions, SingleChipBackend,
-};
+use raca::serve::{build, Backend, BuildOptions, InferRequest, Topology};
 
 /// Push `reqs` fixed-budget requests through `backend`; trials/second.
 fn throughput(backend: &dyn Backend, images: &[Vec<f32>], trials: u32, reqs: usize) -> f64 {
@@ -60,61 +60,62 @@ fn main() {
         .collect();
 
     println!(
-        "== bench_fleet: serving throughput by backend ({reqs} reqs × {trials} trials, 4-layer model) =="
+        "== bench_fleet: serving throughput by topology ({reqs} reqs × {trials} trials, 4-layer model) =="
     );
 
-    let single_tps = {
-        let engine = NativeEngine::new(Arc::new(w.clone()), seed);
-        let mut cfg = SchedulerConfig::default();
-        cfg.batch_size = 32;
-        let b = SingleChipBackend::start(engine, cfg);
-        let _ = throughput(&b, &images, trials, warmup);
-        let tps = throughput(&b, &images, trials, reqs);
-        println!("  single-chip (batched scheduler)  : {tps:>9.0} trials/s  (baseline)");
+    let measure = |topo_spec: &str, variation: Option<VariationModel>| -> f64 {
+        let topo = Topology::parse(topo_spec).expect("topology spec");
+        let opts = BuildOptions { seed, variation, ..Default::default() };
+        let b = build(&topo, &w, &opts).expect("building deployment");
+        let _ = throughput(b.as_ref(), &images, trials, warmup);
+        let tps = throughput(b.as_ref(), &images, trials, reqs);
+        b.shutdown();
         tps
     };
 
+    let single_tps = measure("die", None);
+    println!("  die (batched scheduler)        : {single_tps:>9.0} trials/s  (baseline)");
+
     for chips in [2usize, 4, 8] {
-        let fleet = Fleet::program_native(
-            &w,
-            chips,
-            &VariationModel::lognormal(0.05),
-            RoutePolicy::RoundRobin,
-            seed,
-        );
-        let b = ReplicatedFleetBackend::start(fleet, None, ReplicatedOptions::default());
-        let _ = throughput(&b, &images, trials, warmup);
-        let tps = throughput(&b, &images, trials, reqs);
+        let tps = measure(&format!("{chips}x(die)"), Some(VariationModel::lognormal(0.05)));
         println!(
-            "  replicated × {chips} chips             : {tps:>9.0} trials/s  ({:.2}x)",
+            "  {chips}x(die) worker fleet          : {tps:>9.0} trials/s  ({:.2}x)",
             tps / single_tps.max(1e-9)
         );
     }
 
     let mut pipelined_at_4 = 0.0f64;
     for dies in [2usize, 4] {
-        let b = PipelinedFleetBackend::start(
-            &w,
-            PipelineOptions { dies, seed, ..Default::default() },
-        )
-        .expect("building pipelined backend");
-        let _ = throughput(&b, &images, trials, warmup);
-        let tps = throughput(&b, &images, trials, reqs);
+        let tps = measure(&format!("pipeline:{dies}"), None);
         if dies == 4 {
             pipelined_at_4 = tps;
         }
         println!(
-            "  pipelined  × {dies} dies              : {tps:>9.0} trials/s  ({:.2}x)",
+            "  pipeline:{dies} die-sharded         : {tps:>9.0} trials/s  ({:.2}x)",
             tps / single_tps.max(1e-9)
         );
     }
+
+    // Replicas of pipelines: the topology the flat BackendKind switch
+    // could not express — throughput × capacity scaling in one tree.
+    let replicated_pipes = measure("2x(pipeline:2)", None);
+    println!(
+        "  2x(pipeline:2) replicated pipes: {replicated_pipes:>9.0} trials/s  ({:.2}x)",
+        replicated_pipes / single_tps.max(1e-9)
+    );
 
     if smoke {
         let ratio = pipelined_at_4 / single_tps.max(1e-9);
         assert!(
             ratio >= 2.0,
-            "--smoke: pipelined @ 4 dies must be ≥2x single-chip throughput, got {ratio:.2}x"
+            "--smoke: pipeline:4 must be ≥2x single-die throughput, got {ratio:.2}x"
         );
-        println!("smoke OK: pipelined @ 4 dies = {ratio:.2}x single-chip (≥ 2x required)");
+        println!("smoke OK: pipeline:4 = {ratio:.2}x single-die (≥ 2x required)");
+        let rp = replicated_pipes / pipelined_at_4.max(1e-9);
+        assert!(
+            rp >= 1.0,
+            "--smoke: 2x(pipeline:2) must be ≥ pipeline:4 at equal dies, got {rp:.2}x"
+        );
+        println!("smoke OK: 2x(pipeline:2) = {rp:.2}x pipeline:4 at 4 dies (≥ 1x required)");
     }
 }

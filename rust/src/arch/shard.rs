@@ -12,7 +12,10 @@
 //! ranges, one per die, minimizing the worst die's crossbar-tile demand
 //! as computed by the [`Floorplan`] — tile count is the die's area/
 //! capacity budget, the quantity a real multi-die deployment must bound.
-//! [`crate::serve::PipelinedFleetBackend`] executes this plan.
+//! [`crate::serve::PipelinedFleetBackend`] executes this plan; every
+//! `pipeline:<dies>` leaf of a [`crate::serve::Topology`] tree gets its
+//! own instance (replicated pipelines re-plan identically but program
+//! distinct silicon — the topology compiler numbers their dies apart).
 
 use crate::nn::ModelSpec;
 

@@ -21,7 +21,7 @@ use crate::coordinator::SchedulerConfig;
 use crate::engine::TrialParams;
 use crate::fleet::{FleetConfig, RoutePolicy};
 use crate::hwmodel::TechParams;
-use crate::serve::{BackendKind, ServeConfig};
+use crate::serve::{BackendKind, ServeConfig, Topology};
 use crate::util::json::Json;
 
 /// Which engine backs the scheduler.
@@ -170,8 +170,12 @@ impl RunConfig {
                 cfg.fleet.stuck_hi = v;
             }
             if let Some(p) = fl.get("policy").and_then(Json::as_str) {
-                cfg.fleet.policy = RoutePolicy::parse(p)
-                    .with_context(|| format!("config: unknown fleet policy '{p}'"))?;
+                cfg.fleet.policy = RoutePolicy::parse(p).with_context(|| {
+                    format!(
+                        "config: unknown fleet policy '{p}' (valid: {})",
+                        RoutePolicy::SPELLINGS
+                    )
+                })?;
             }
             if let Some(v) = fl.get("cal_images").and_then(Json::as_usize) {
                 cfg.fleet.cal_images = v;
@@ -192,11 +196,25 @@ impl RunConfig {
             }
         }
         if let Some(s) = j.get("serve") {
-            check_keys(s, &["backend", "chips", "shards", "depth", "seed"], "serve")?;
+            check_keys(
+                s,
+                &["backend", "topology", "chips", "shards", "depth", "batch", "seed"],
+                "serve",
+            )?;
             if let Some(b) = s.get("backend").and_then(Json::as_str) {
                 cfg.serve.backend = BackendKind::parse(b).with_context(|| {
-                    format!("config: unknown serve backend '{b}' (single|replicated|pipelined)")
+                    format!(
+                        "config: unknown serve backend '{b}' (valid: {}; case-insensitive — \
+                         or use \"topology\")",
+                        BackendKind::SPELLINGS
+                    )
                 })?;
+            }
+            if let Some(t) = s.get("topology").and_then(Json::as_str) {
+                // `Topology::parse` validates the tree, rejecting 0-sized
+                // replicas/pipelines like the fleet checks below.
+                cfg.serve.topology =
+                    Some(Topology::parse(t).context("config: serve.topology")?);
             }
             if let Some(v) = s.get("chips").and_then(Json::as_usize) {
                 cfg.serve.chips = v;
@@ -207,19 +225,24 @@ impl RunConfig {
             if let Some(v) = s.get("depth").and_then(Json::as_usize) {
                 cfg.serve.depth = v;
             }
+            if let Some(v) = s.get("batch").and_then(Json::as_usize) {
+                cfg.serve.batch = v;
+            }
             if let Some(v) = s.get("seed").and_then(Json::as_usize) {
                 cfg.serve.seed = v as u64;
             }
         }
         // Zero-sized farms/pipelines panic deep in the stack; reject them
         // here with a clear error instead.  (Shard count vs. layer count is
-        // checked against the actual model when the shard plan is built.)
+        // checked against the actual model when the shard plan is built;
+        // explicit topology trees were validated at parse time above.)
         ensure!(cfg.fleet.chips > 0, "config: fleet.chips must be at least 1");
         ensure!(cfg.serve.chips > 0, "config: serve.chips must be at least 1");
         ensure!(
             cfg.serve.shards > 0,
             "config: serve.shards must be at least 1 (and at most the model's layer count)"
         );
+        ensure!(cfg.serve.batch > 0, "config: serve.batch must be at least 1");
         cfg.scheduler.params = cfg.trial;
         Ok(cfg)
     }
@@ -278,18 +301,42 @@ mod tests {
     fn serve_section_parses() {
         let c = RunConfig::parse(
             r#"{"serve": {"backend": "pipelined", "shards": 3, "chips": 6,
-                          "depth": 64, "seed": 12}}"#,
+                          "depth": 64, "batch": 4, "seed": 12}}"#,
         )
         .unwrap();
         assert_eq!(c.serve.backend, crate::serve::BackendKind::Pipelined);
         assert_eq!(c.serve.shards, 3);
         assert_eq!(c.serve.chips, 6);
         assert_eq!(c.serve.depth, 64);
+        assert_eq!(c.serve.batch, 4);
         assert_eq!(c.serve.seed, 12);
         // Untouched keys keep their defaults.
         let d = RunConfig::parse(r#"{"serve": {"backend": "replicated"}}"#).unwrap();
         assert_eq!(d.serve.chips, 4);
         assert_eq!(d.serve.shards, 2);
+        assert_eq!(d.serve.topology, None);
+    }
+
+    #[test]
+    fn serve_topology_parses_and_wins_over_backend() {
+        let c = RunConfig::parse(
+            r#"{"serve": {"backend": "single", "topology": "2x(pipeline:3)"}}"#,
+        )
+        .unwrap();
+        let t = c.serve.topology.clone().unwrap();
+        assert_eq!(t.to_string(), "2x(pipeline:3)");
+        assert_eq!(t.dies(), 6);
+        assert_eq!(
+            c.serve.tree(crate::fleet::RoutePolicy::RoundRobin).to_string(),
+            "2x(pipeline:3)"
+        );
+        // Spellings are case-insensitive across backend and topology.
+        let c = RunConfig::parse(
+            r#"{"serve": {"backend": "Replicated", "topology": "4X(DIE)@Weighted"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.backend, crate::serve::BackendKind::Replicated);
+        assert_eq!(c.serve.topology.unwrap().to_string(), "4x(die)@weighted");
     }
 
     #[test]
@@ -300,6 +347,16 @@ mod tests {
         assert!(format!("{e}").contains("serve.chips"), "{e}");
         let e = RunConfig::parse(r#"{"serve": {"shards": 0}}"#).unwrap_err();
         assert!(format!("{e}").contains("serve.shards"), "{e}");
+        let e = RunConfig::parse(r#"{"serve": {"batch": 0}}"#).unwrap_err();
+        assert!(format!("{e}").contains("serve.batch"), "{e}");
+        // Zero-sized topology nodes are rejected at parse, like the above.
+        let e = RunConfig::parse(r#"{"serve": {"topology": "0x(die)"}}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("at least 1"), "{e:#}");
+        let e = RunConfig::parse(r#"{"serve": {"topology": "pipeline:0"}}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("at least one die"), "{e:#}");
+        // Unknown spellings list the valid ones.
+        let e = RunConfig::parse(r#"{"serve": {"backend": "sharded"}}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("single, replicated, pipelined"), "{e:#}");
     }
 
     #[test]

@@ -78,7 +78,22 @@ impl Chip<NativeEngine> {
         variation: &VariationModel,
         fleet_seed: u64,
     ) -> Self {
-        let seed = chip_seed(fleet_seed, id);
+        Self::program_native_global(id, id, nominal_weights, variation, fleet_seed)
+    }
+
+    /// Program a die whose RNG identity derives from `global` — its
+    /// fleet-wide chip id under a composed deployment tree
+    /// ([`crate::serve::plan`] numbers every physical die once across the
+    /// whole topology) — while `id` stays the local index within its
+    /// serving group.  `global == id` reproduces a flat fleet exactly.
+    pub fn program_native_global(
+        id: ChipId,
+        global: ChipId,
+        nominal_weights: &Weights,
+        variation: &VariationModel,
+        fleet_seed: u64,
+    ) -> Self {
+        let seed = chip_seed(fleet_seed, global);
         // Separate stream for programming so trial RNG stays comparable
         // across variation settings.
         let mut gauss = GaussianSource::new(seed ^ 0xD1E_5EED);
@@ -103,7 +118,22 @@ impl Chip<PhysicalEngine> {
         tile: usize,
         fleet_seed: u64,
     ) -> Self {
-        let seed = chip_seed(fleet_seed, id);
+        Self::program_physical_global(id, id, nominal_weights, variation, tile, fleet_seed)
+    }
+
+    /// Physical twin of [`Chip::program_native_global`]: the die's RNG
+    /// identity comes from `global` (its fleet-wide chip id under a
+    /// composed deployment tree), `id` stays the local index within its
+    /// serving group.
+    pub fn program_physical_global(
+        id: ChipId,
+        global: ChipId,
+        nominal_weights: &Weights,
+        variation: &VariationModel,
+        tile: usize,
+        fleet_seed: u64,
+    ) -> Self {
+        let seed = chip_seed(fleet_seed, global);
         let engine = PhysicalEngine::program(
             nominal_weights,
             tile,
@@ -140,6 +170,21 @@ mod tests {
         let b = Chip::program_native(2, &w, &v, 77);
         assert_eq!(a.engine.weights.mats, b.engine.weights.mats);
         assert_eq!(a.seed, b.seed);
+    }
+
+    #[test]
+    fn global_identity_decides_the_die_not_the_local_index() {
+        let w = nominal();
+        let v = VariationModel::lognormal(0.10);
+        // A replica group's local chip 0 with global id 3 is the *same
+        // physical die* as a flat fleet's chip 3 — and not chip 0.
+        let flat = Chip::program_native(3, &w, &v, 77);
+        let grouped = Chip::program_native_global(0, 3, &w, &v, 77);
+        assert_eq!(flat.engine.weights.mats, grouped.engine.weights.mats);
+        assert_eq!(flat.seed, grouped.seed);
+        assert_eq!(grouped.id, 0);
+        let local = Chip::program_native(0, &w, &v, 77);
+        assert_ne!(local.engine.weights.mats, grouped.engine.weights.mats);
     }
 
     #[test]

@@ -74,6 +74,18 @@ impl ChipHealth {
     }
 }
 
+/// Outcome of one [`HealthMonitor::steer`] pass.
+#[derive(Debug, Clone)]
+pub struct SteerReport {
+    /// Members evicted this pass (floor-breakers, never the last one).
+    pub evicted: Vec<ChipId>,
+    /// Members sagging under the group median (recalibration candidates —
+    /// actionable only where the caller owns calibratable chips).
+    pub drifting: Vec<ChipId>,
+    /// Refreshed router traffic weights.
+    pub weights: Vec<f64>,
+}
+
 /// Fleet-wide health state.
 #[derive(Debug)]
 pub struct HealthMonitor {
@@ -168,6 +180,23 @@ impl HealthMonitor {
     /// Drop a chip from routing.
     pub fn evict(&mut self, chip: ChipId) {
         self.chips[chip].evicted = true;
+    }
+
+    /// One periodic steering pass, shared by every serving layer that
+    /// wraps a monitor (the replicated backend's workers, the topology
+    /// router over child backends): evict floor-breakers — but never the
+    /// last healthy member, a degraded group that still answers beats a
+    /// submit path that hard-errors — and report who is drifting plus the
+    /// refreshed traffic weights.
+    pub fn steer(&mut self) -> SteerReport {
+        let mut evicted = Vec::new();
+        for c in self.evictable() {
+            if self.healthy().len() > 1 {
+                self.evict(c);
+                evicted.push(c);
+            }
+        }
+        SteerReport { evicted, drifting: self.drifting(), weights: self.traffic_weights() }
     }
 
     /// Reset a chip's rolling window after recalibration (old samples no
@@ -266,6 +295,22 @@ mod tests {
         assert_eq!(m.healthy(), vec![0, 1]);
         assert!(m.evictable().is_empty());
         assert_eq!(m.median_accuracy(), Some(1.0));
+    }
+
+    #[test]
+    fn steer_evicts_floor_breakers_but_never_the_last_member() {
+        let mut m = monitor(2);
+        feed(&mut m, 0, 16, 0);
+        feed(&mut m, 1, 1, 15);
+        let r = m.steer();
+        assert_eq!(r.evicted, vec![1]);
+        assert_eq!(r.weights[1], 0.0);
+        assert_eq!(m.healthy(), vec![0]);
+        // Now chip 0 collapses too — it stays routable anyway.
+        feed(&mut m, 0, 0, 16);
+        let r = m.steer();
+        assert!(r.evicted.is_empty(), "last member must survive: {r:?}");
+        assert_eq!(m.healthy(), vec![0]);
     }
 
     #[test]

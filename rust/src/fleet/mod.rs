@@ -37,7 +37,7 @@ pub mod runner;
 
 pub use calibrate::{CalibrationReport, Calibrator};
 pub use chip::{chip_seed, program_weights, Chip, ChipId};
-pub use health::{ChipHealth, HealthConfig, HealthMonitor};
+pub use health::{ChipHealth, HealthConfig, HealthMonitor, SteerReport};
 pub use metrics::{ChipStats, FleetSnapshot};
 pub use router::{RoutePolicy, Router};
 pub use runner::FleetRunner;
@@ -112,9 +112,24 @@ impl Fleet<NativeEngine> {
         policy: RoutePolicy,
         seed: u64,
     ) -> Self {
+        Self::program_native_span(nominal, n_chips, 0, variation, policy, seed)
+    }
+
+    /// Program `n_chips` dies whose *global* identities start at
+    /// `chip_base` — the topology compiler's fleet-wide die numbering, so
+    /// replica groups inside one deployment tree never share a variation
+    /// draw.  `chip_base == 0` is exactly [`Fleet::program_native`].
+    pub fn program_native_span(
+        nominal: &Weights,
+        n_chips: usize,
+        chip_base: usize,
+        variation: &VariationModel,
+        policy: RoutePolicy,
+        seed: u64,
+    ) -> Self {
         assert!(n_chips > 0, "a fleet needs at least one chip");
         let chips = (0..n_chips)
-            .map(|id| Chip::program_native(id, nominal, variation, seed))
+            .map(|id| Chip::program_native_global(id, chip_base + id, nominal, variation, seed))
             .collect();
         Self {
             chips,

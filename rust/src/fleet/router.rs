@@ -28,9 +28,12 @@ pub enum RoutePolicy {
 }
 
 impl RoutePolicy {
-    /// Parse a CLI/config spelling.
+    /// Accepted spellings, for `parse` error messages.
+    pub const SPELLINGS: &'static str = "round-robin|rr, least-loaded|ll, weighted|wt";
+
+    /// Parse a CLI/config/topology spelling (case-insensitive).
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
             "least-loaded" | "ll" => Some(RoutePolicy::LeastLoaded),
             "weighted" | "wt" => Some(RoutePolicy::Weighted),
@@ -110,6 +113,9 @@ mod tests {
         assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
         assert_eq!(RoutePolicy::parse("least-loaded"), Some(RoutePolicy::LeastLoaded));
         assert_eq!(RoutePolicy::parse("weighted"), Some(RoutePolicy::Weighted));
+        // Case-insensitive, like every other CLI/config spelling.
+        assert_eq!(RoutePolicy::parse("Round-Robin"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("WEIGHTED"), Some(RoutePolicy::Weighted));
         assert_eq!(RoutePolicy::parse("nope"), None);
         assert_eq!(RoutePolicy::RoundRobin.name(), "round-robin");
         assert_eq!(RoutePolicy::Weighted.name(), "weighted");

@@ -18,10 +18,13 @@
 //! `dataset`, `figures` (Fig. 4/5/6) and `util` on the side.  `fleet`
 //! programs, calibrates and health-models a farm of non-identical
 //! simulated RACA dies; `serve` is the single public serving entry point —
-//! the [`serve::Backend`] trait over one batched chip
-//! (`SingleChipBackend`), a router-dispatched replica farm
-//! (`ReplicatedFleetBackend`), and a layer-sharded die pipeline
-//! (`PipelinedFleetBackend`).
+//! a composable [`serve::Topology`] tree (`die` / `pipeline:<dies>`
+//! leaves, `<n>x(…)` replication) compiled by [`serve::plan`] into nested
+//! [`serve::Backend`]s: one batched chip (`SingleChipBackend`), a
+//! router-dispatched replica farm (`ReplicatedFleetBackend`), a
+//! layer-sharded die pipeline (`PipelinedFleetBackend`), and a
+//! health-reweighted router over arbitrary subtrees
+//! (`serve::RouterBackend`).
 
 pub mod arch;
 pub mod circuit;

@@ -11,14 +11,16 @@
 //! raca table1                       # + breakdowns
 //! raca ablate --noise|--variation|--tiles|--low-vr [--images N]
 //! raca infer --images N [--trials K] [--confidence C]   # single-chip path
-//! raca serve --backend single|replicated|pipelined      # Backend trait
+//! raca serve --topology "2x(pipeline:3)"                # deployment tree
+//!            [--backend single|replicated|pipelined]    # legacy sugar
 //!            [--chips N] [--shards S] [--widths 784,...,10]
 //! raca fleet --chips N --sigma S    # multi-chip farm: program,
 //!                                   # calibrate, serve, health report
 //! raca selftest                     # quick end-to-end smoke
 //! ```
 //!
-//! All serving goes through [`raca::serve::Backend`]; the AOT/PJRT paths
+//! All serving goes through [`raca::serve::Backend`], built from a
+//! [`raca::serve::Topology`] by [`raca::serve::plan`]; the AOT/PJRT paths
 //! (`--engine xla`, `infer`/`selftest` over artifacts) need the `pjrt`
 //! cargo feature; default builds use the native engine.
 
@@ -33,10 +35,7 @@ use raca::figures;
 use raca::fleet::{Calibrator, Fleet, FleetConfig, RoutePolicy};
 use raca::nn::{ModelSpec, TrainConfig, Weights};
 use raca::runtime::default_artifact_dir;
-use raca::serve::{
-    Backend, BackendKind, InferRequest, PipelineOptions, PipelinedFleetBackend,
-    ReplicatedFleetBackend, ReplicatedOptions, SingleChipBackend,
-};
+use raca::serve::{Backend, BackendKind, BuildOptions, DeployPlan, InferRequest, Topology};
 
 #[cfg(feature = "pjrt")]
 use raca::engine::XlaEngine;
@@ -119,12 +118,15 @@ USAGE: raca <subcommand> [flags]
   ablate      robustness ablations    --noise --variation --tiles --low-vr
   infer       serve N test images through the single-chip backend
               --images N --trials K --confidence C --batch B
-  serve       serve through a selected Backend implementation
-              --backend single|replicated|pipelined
-              --chips N (replicated)  --shards S (pipelined)
+  serve       serve through a deployment topology (compiled to backends)
+              --topology "2x(pipeline:3)"   die | pipeline:<dies>[:b<batch>]
+                                            | <n>x(<node>)[@policy]
+              --backend single|replicated|pipelined   (legacy sugar:
+                die | <chips>x(die) | pipeline:<shards>)
+              --chips N --shards S --batch B (die-to-die trial block)
               --images N --trials K --confidence C --sigma S --seed S
               --widths 784,256,128,10   (train a custom-depth model)
-              --config run.json         ({"serve": {"backend": ..., ...}})
+              --config run.json         ({"serve": {"topology": ..., ...}})
   fleet       program + calibrate + serve a farm of non-identical chips
               (replicated backend: worker threads + live health steering)
               --chips N --sigma S --policy round-robin|least-loaded|weighted
@@ -156,10 +158,13 @@ fn load_or_train() -> Result<(Weights, Dataset)> {
         }
         Err(e) => {
             println!("model: artifacts unavailable ({e:#})");
-            println!("model: training a native 784-48-10 MLP on synthetic digits instead…");
+            // Three layers so the fallback shards up to `pipeline:3` (and
+            // `2x(pipeline:3)`) out of the box; minibatched gradients keep
+            // the deeper net's training off the serving critical path.
+            println!("model: training a native 784-48-24-10 MLP on synthetic digits instead…");
             let train_set = synth::generate(800, 0x7EA1);
-            let cfg = TrainConfig { epochs: 8, lr: 0.2, seed: 0x5EED };
-            let w = raca::nn::train(&train_set, ModelSpec::new(vec![784, 48, 10]), &cfg);
+            let cfg = TrainConfig { epochs: 8, lr: 0.2, seed: 0x5EED, minibatch: 8 };
+            let w = raca::nn::train(&train_set, ModelSpec::new(vec![784, 48, 24, 10]), &cfg);
             println!("model: trained, ideal train accuracy {:.1}%", w.ideal_test_accuracy * 100.0);
             Ok((w, synth::generate(512, 0x7E57)))
         }
@@ -226,7 +231,7 @@ fn infer(args: &Args) -> Result<()> {
     let mut cfg = SchedulerConfig::default();
     cfg.batch_size = batch;
     cfg.params = TrialParams::default();
-    let backend = SingleChipBackend::start(handle, cfg);
+    let backend = raca::serve::plan::single_die(handle, cfg);
     serve_and_report(&backend, &ds, trials, confidence, Some(batch))
 }
 
@@ -243,7 +248,7 @@ fn infer(args: &Args) -> Result<()> {
     let mut cfg = SchedulerConfig::default();
     cfg.batch_size = batch;
     cfg.params = TrialParams::default();
-    let backend = SingleChipBackend::start(engine, cfg);
+    let backend = raca::serve::plan::single_die(engine, cfg);
     serve_and_report(&backend, &ds, trials, confidence, Some(batch))
 }
 
@@ -296,8 +301,8 @@ fn serve_and_report(
     Ok(())
 }
 
-/// `raca serve` — one workload, any deployment shape: build the selected
-/// [`Backend`] implementation and push the evaluation set through it.
+/// `raca serve` — one workload, any deployment tree: compile the selected
+/// [`Topology`] into a [`Backend`] and push the evaluation set through it.
 fn serve(args: &Args) -> Result<()> {
     use anyhow::Context as _;
 
@@ -306,19 +311,36 @@ fn serve(args: &Args) -> Result<()> {
         None => raca::config::RunConfig::parse("{}").expect("empty config"),
     };
     let mut sc = cfg.serve.clone();
-    if let Some(b) = args.get("backend") {
-        sc.backend = BackendKind::parse(b)
-            .with_context(|| format!("unknown backend '{b}' (single|replicated|pipelined)"))?;
+    match (args.get("topology"), args.get("backend")) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("pass either --topology or --backend, not both")
+        }
+        (Some(spec), None) => sc.topology = Some(Topology::parse(spec)?),
+        (None, Some(b)) => {
+            sc.backend = BackendKind::parse(b).with_context(|| {
+                format!(
+                    "unknown backend '{b}' (valid: {}; case-insensitive — or use --topology)",
+                    BackendKind::SPELLINGS
+                )
+            })?;
+            // An explicit CLI shape beats a config-file tree.
+            sc.topology = None;
+        }
+        (None, None) => {}
     }
     sc.chips = args.get_usize("chips", sc.chips);
     sc.shards = args.get_usize("shards", sc.shards);
+    sc.batch = args.get_usize("batch", sc.batch);
     sc.seed = args.get_usize("seed", sc.seed as usize) as u64;
     anyhow::ensure!(sc.chips > 0, "--chips must be at least 1");
     anyhow::ensure!(sc.shards > 0, "--shards must be at least 1");
+    anyhow::ensure!(sc.batch > 0, "--batch must be at least 1");
     let n = args.get_usize("images", 256);
     let trials = args.get_usize("trials", 16) as u32;
     let confidence = args.get_f64("confidence", 0.0);
     let sigma = args.get_f64("sigma", 0.0);
+
+    let topo = sc.tree(cfg.fleet.policy);
 
     // Model: `--widths 784,256,128,10` trains a custom-depth native model
     // (deep pipelines need ≥ as many layers as shards); default is the
@@ -336,7 +358,9 @@ fn serve(args: &Args) -> Result<()> {
             );
             println!("model: training a native {widths:?} MLP on synthetic digits…");
             let train_set = synth::generate(800, 0x7EA1);
-            let tc = TrainConfig { epochs: 6, lr: 0.2, seed: 0x5EED };
+            // Parallel minibatch gradients: custom-depth training was the
+            // wall-time sink of `raca serve --widths` setup.
+            let tc = TrainConfig { epochs: 6, lr: 0.2, seed: 0x5EED, minibatch: 8 };
             let w = raca::nn::train(&train_set, ModelSpec::new(widths), &tc);
             (w, synth::generate(n + 64, 0x7E57))
         }
@@ -357,58 +381,20 @@ fn serve(args: &Args) -> Result<()> {
         }
     };
 
-    let backend: Box<dyn Backend> = match sc.backend {
-        BackendKind::Single => {
-            let engine = NativeEngine::new(std::sync::Arc::new(w.clone()), sc.seed);
-            let mut scfg = cfg.scheduler.clone();
-            scfg.params = cfg.trial;
-            println!("serve: single-chip backend (batched scheduler, batch {})", scfg.batch_size);
-            Box::new(SingleChipBackend::start(engine, scfg))
-        }
-        BackendKind::Replicated => {
-            let variation = if sigma > 0.0 {
-                VariationModel::lognormal(sigma)
-            } else {
-                VariationModel::default()
-            };
-            let mut farm =
-                Fleet::program_native(&w, sc.chips, &variation, cfg.fleet.policy, sc.seed);
-            let calibrator = Calibrator::quick(5);
-            if sigma > 0.0 {
-                farm.calibrate(&cal, &calibrator);
-            }
-            println!(
-                "serve: replicated backend — {} dies @ σ={sigma:.2}, policy {}",
-                sc.chips,
-                cfg.fleet.policy.name()
-            );
-            Box::new(ReplicatedFleetBackend::start(
-                farm,
-                Some((cal.clone(), calibrator)),
-                ReplicatedOptions { seed: sc.seed, ..Default::default() },
-            ))
-        }
-        BackendKind::Pipelined => {
-            let opts = PipelineOptions {
-                dies: sc.shards,
-                params: cfg.trial,
-                variation: (sigma > 0.0).then(|| VariationModel::lognormal(sigma)),
-                seed: sc.seed,
-                depth: sc.depth,
-                ..Default::default()
-            };
-            let b = PipelinedFleetBackend::start(&w, opts)?;
-            let plan = b.plan();
-            println!(
-                "serve: pipelined backend — {} layers over {} dies, ranges {:?}, tiles/die {:?}",
-                plan.spec.num_layers(),
-                plan.dies(),
-                plan.ranges,
-                plan.tiles_per_die
-            );
-            Box::new(b)
-        }
+    let plan = DeployPlan::compile(&topo)?;
+    println!("serve: topology {topo} ({} dies @ σ={sigma:.2})", plan.total_dies);
+    print!("{}", plan.describe(&w.spec));
+    let opts = BuildOptions {
+        seed: sc.seed,
+        trial: cfg.trial,
+        scheduler: cfg.scheduler.clone(),
+        variation: (sigma > 0.0).then(|| VariationModel::lognormal(sigma)),
+        depth: sc.depth,
+        batch: sc.batch,
+        calibration: Some((cal.clone(), Calibrator::quick(5))),
+        ..Default::default()
     };
+    let backend = raca::serve::plan::build(&topo, &w, &opts)?;
     serve_and_report(backend.as_ref(), &ds, trials, confidence, None)?;
     backend.shutdown();
     Ok(())
@@ -428,7 +414,9 @@ fn fleet(args: &Args) -> Result<()> {
     fc.chips = args.get_usize("chips", fc.chips);
     fc.sigma = args.get_f64("sigma", fc.sigma);
     if let Some(p) = args.get("policy") {
-        fc.policy = RoutePolicy::parse(p).with_context(|| format!("unknown policy '{p}'"))?;
+        fc.policy = RoutePolicy::parse(p).with_context(|| {
+            format!("unknown policy '{p}' (valid: {})", RoutePolicy::SPELLINGS)
+        })?;
     }
     fc.cal_images = args.get_usize("cal-images", fc.cal_images);
     fc.cal_trials = args.get_usize("cal-trials", fc.cal_trials);
@@ -504,12 +492,14 @@ fn fleet(args: &Args) -> Result<()> {
 
     // ---- serve through the replicated backend -----------------------------
     // The farm moves onto per-chip worker threads behind the Backend
-    // trait; labeled requests double as health probes, so the monitor
-    // steers traffic (reweight/recalibrate/evict) *while* serving.
-    let backend = ReplicatedFleetBackend::start(
+    // trait (`serve::plan::lift_fleet` — the one externally-programmed
+    // path into the topology runtime); labeled requests double as health
+    // probes, so the monitor steers traffic (reweight/recalibrate/evict)
+    // *while* serving.
+    let backend = raca::serve::plan::lift_fleet(
         farm,
         Some((cal.clone(), calibrator.clone())),
-        ReplicatedOptions { seed: fc.seed ^ 0x5E11E, ..Default::default() },
+        raca::serve::ReplicatedOptions { seed: fc.seed ^ 0x5E11E, ..Default::default() },
     );
     serve_and_report(&backend, &workload, fc.serve_trials as u32, 0.0, None)?;
     println!("{}", backend.snapshot());
@@ -643,7 +633,7 @@ fn selftest() -> Result<()> {
     println!("[3/3] single-chip backend vote on 8 images…");
     let mut cfg = SchedulerConfig::default();
     cfg.batch_size = 32;
-    let backend = SingleChipBackend::start(h, cfg);
+    let backend = raca::serve::plan::single_die(h, cfg);
     let mut hits = 0;
     for i in 0..8 {
         let r = backend.classify(
@@ -662,7 +652,7 @@ fn selftest() -> Result<()> {
 fn selftest() -> Result<()> {
     println!("[1/4] native trainer on synthetic digits…");
     let train_set = synth::generate(200, 0xA);
-    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0xB };
+    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0xB, minibatch: 1 };
     let w = raca::nn::train(&train_set, ModelSpec::new(vec![784, 16, 10]), &cfg);
     anyhow::ensure!(
         w.ideal_test_accuracy > 0.3,
@@ -671,11 +661,12 @@ fn selftest() -> Result<()> {
     );
     println!("      ok: train accuracy {:.1}%", w.ideal_test_accuracy * 100.0);
 
-    println!("[2/4] single-chip backend vote over the native engine…");
-    let engine = NativeEngine::new(std::sync::Arc::new(w.clone()), 7);
-    let mut cfg = SchedulerConfig::default();
-    cfg.batch_size = 16;
-    let backend = SingleChipBackend::start(engine, cfg);
+    println!("[2/4] single-die topology vote over the native engine…");
+    let backend = raca::serve::plan::build(
+        &Topology::parse("die")?,
+        &w,
+        &BuildOptions { seed: 7, ..Default::default() },
+    )?;
     let mut hits = 0usize;
     for i in 0..8 {
         let r = backend.classify(
@@ -703,12 +694,13 @@ fn selftest() -> Result<()> {
     anyhow::ensure!(after >= before, "calibration regressed: {before} → {after}");
     println!("      ok: fleet cal-set accuracy {:.1}% → {:.1}%", before * 100.0, after * 100.0);
 
-    println!("[4/4] 2-die pipelined backend vs unsharded engine…");
+    println!("[4/4] 2x(pipeline:2) topology vs unsharded engine…");
     let seed = 0xD1E5;
     let reference = NativeEngine::new(std::sync::Arc::new(w.clone()), seed);
-    let pb = PipelinedFleetBackend::start(
+    let pb = raca::serve::plan::build(
+        &Topology::parse("2x(pipeline:2)")?,
         &w,
-        PipelineOptions { dies: 2, seed, ..Default::default() },
+        &BuildOptions { seed, ..Default::default() },
     )?;
     let x = train_set.image(0).to_vec();
     let want = reference.infer(
@@ -720,9 +712,9 @@ fn selftest() -> Result<()> {
     let got = pb.classify(InferRequest::new(0, x).with_budget(12, 0.0))?;
     anyhow::ensure!(
         got.outcome.counts == want.counts,
-        "pipelined votes diverged from the unsharded engine"
+        "replicated-pipeline votes diverged from the unsharded engine"
     );
-    println!("      ok: votes match bit-for-bit across 2 dies");
+    println!("      ok: votes match bit-for-bit, either replica of 2 dies");
     println!("selftest PASSED");
     Ok(())
 }

@@ -1,48 +1,48 @@
-//! Serving layer: one `Backend` session API over every deployment shape.
+//! Serving layer: one `Backend` session API over every deployment shape,
+//! described by a composable [`Topology`] tree.
 //!
 //! The paper's architecture is explicitly configurable — "the number of
 //! neural network layers and specifications supported by this architecture
 //! can be flexibly configured" (§III-C) — and at system level the same
 //! flexibility applies to how dies are composed into a service (Marinella
 //! et al.'s multiscale co-design; the tiled/pipelined organizations in
-//! Smagulova et al.'s survey).  This module is the single entry point for
-//! all of it:
+//! Smagulova et al.'s survey).  Replication and pipelining are orthogonal
+//! axes, so the deployment is a *tree*, not a flat switch:
 //!
 //! ```text
-//!                          ┌────────────────────────────┐
-//!     submit / wait        │        trait Backend       │
-//!     metrics / shutdown──▶│  submit(InferRequest)      │
-//!                          │    -> Ticket               │
-//!                          │  wait(Ticket)              │
-//!                          │    -> InferResponse        │
-//!                          └──────┬───────┬───────┬─────┘
-//!                  ┌──────────────┘       │       └──────────────┐
-//!      SingleChipBackend      ReplicatedFleetBackend   PipelinedFleetBackend
-//!      Server + Scheduler     per-chip worker threads  layers sharded across
-//!      over one TrialRunner   + Router + live health   dies; activations
-//!      (batched, early-stop)  reweighting              stream die-to-die
+//!              Topology ──compile──▶ DeployPlan ──build──▶ Box<dyn Backend>
+//!
+//!   "2x(pipeline:3)"        replicate × 2 (router + health reweighting)
+//!                           ├─ pipeline × 3 dies [chips 0..3]
+//!                           │    activations stream die-to-die
+//!                           └─ pipeline × 3 dies [chips 3..6]
+//!
+//!   leaves:      die[:native|physical|pjrt]   pipeline:<dies>[:b<batch>]
+//!   combinator:  <n>x(<node>)[@policy]        (nests to any depth)
 //! ```
 //!
-//! * [`SingleChipBackend`] — the coordinator's batched scheduler thread
-//!   over one engine (native, physical, or — under `pjrt` — XLA);
-//! * [`ReplicatedFleetBackend`] — one worker thread per programmed die, a
-//!   shared [`crate::fleet::Router`] choosing the die per request, and the
-//!   [`crate::fleet::HealthMonitor`] driving *live* traffic reweighting,
-//!   recalibration and eviction while the fleet serves;
-//! * [`PipelinedFleetBackend`] — one *model* split layer-ranges-per-die
-//!   over an [`crate::arch::ShardPlan`], partial activations streamed
-//!   die-to-die over channels, so model capacity scales with fleet size.
+//! Every shape speaks the same [`Backend`] session API (`submit` →
+//! [`Ticket`] → `wait`), reports the coordinator's [`MetricsSnapshot`],
+//! and derives per-request trial streams from
+//! [`trial_stream_base`]`(seed, id)` — the parity discipline that makes a
+//! pipeline's votes bit-identical to the unsharded engine at equal
+//! `(seed, trial_idx)`, wherever the leaf sits in the tree.
 //!
-//! All three speak [`InferRequest`]/[`InferResponse`] (promoted from the
-//! coordinator into this shared vocabulary) and report the coordinator's
-//! [`MetricsSnapshot`].
+//! [`BackendKind`] (`single|replicated|pipelined`) survives as parse-only
+//! compatibility sugar: each spelling maps onto its canonical tree via
+//! [`BackendKind::to_topology`], and [`plan`] compiles the tree.  The
+//! concrete backend types ([`SingleChipBackend`],
+//! [`ReplicatedFleetBackend`], [`PipelinedFleetBackend`],
+//! [`plan::RouterBackend`]) are constructed only by [`plan`].
 
 pub mod pipelined;
+pub mod plan;
 pub mod replicated;
 pub mod request;
 pub mod single;
 
 pub use pipelined::{PipelineOptions, PipelinedFleetBackend};
+pub use plan::{build, BuildOptions, DeployPlan, EngineSel, PlanNode, RouterBackend, Topology};
 pub use replicated::{ReplicatedFleetBackend, ReplicatedOptions};
 pub use request::{InferRequest, InferResponse, RequestId};
 pub use single::SingleChipBackend;
@@ -52,6 +52,7 @@ use std::sync::mpsc;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::MetricsSnapshot;
+use crate::fleet::RoutePolicy;
 
 /// Claim ticket for a submitted request: hold it, do other work, then
 /// [`Backend::wait`] on it.  The thread-based analogue of a future.
@@ -67,8 +68,9 @@ impl Ticket {
 }
 
 /// A serving session: submit/await classification requests against some
-/// arrangement of RACA dies.  `Box<dyn Backend>` is the deployment-shape
-/// switch (`raca serve --backend single|replicated|pipelined`).
+/// arrangement of RACA dies.  `Box<dyn Backend>` is what
+/// [`plan::build`] returns for any [`Topology`]
+/// (`raca serve --topology "2x(pipeline:3)"`).
 pub trait Backend: Send {
     /// Admit a request; returns a [`Ticket`] to wait on.  Request ids must
     /// be unique among in-flight requests of this backend.
@@ -98,7 +100,10 @@ pub trait Backend: Send {
     fn shutdown(self: Box<Self>);
 }
 
-/// Which [`Backend`] implementation a config/CLI run selects.
+/// Legacy deployment-shape spellings, kept as parse-only convenience:
+/// each maps onto a canonical [`Topology`] tree
+/// ([`BackendKind::to_topology`]); nothing constructs backends from a
+/// `BackendKind` directly anymore.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum BackendKind {
     #[default]
@@ -108,9 +113,12 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
-    /// Parse a CLI/config spelling.
+    /// Accepted spellings, for error messages.
+    pub const SPELLINGS: &'static str = "single, replicated, pipelined";
+
+    /// Parse a CLI/config spelling (case-insensitive).
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "single" => Some(BackendKind::Single),
             "replicated" => Some(BackendKind::Replicated),
             "pipelined" => Some(BackendKind::Pipelined),
@@ -125,34 +133,74 @@ impl BackendKind {
             BackendKind::Pipelined => "pipelined",
         }
     }
+
+    /// The canonical topology tree of this legacy spelling:
+    /// `single` ⇒ `die`, `replicated` ⇒ `<chips>x(die)`,
+    /// `pipelined` ⇒ `pipeline:<shards>`.
+    pub fn to_topology(self, chips: usize, shards: usize, policy: RoutePolicy) -> Topology {
+        match self {
+            BackendKind::Single => Topology::Die { engine: EngineSel::Native },
+            BackendKind::Replicated => Topology::Replicate {
+                n: chips,
+                policy,
+                child: Box::new(Topology::Die { engine: EngineSel::Native }),
+            },
+            BackendKind::Pipelined => Topology::Pipeline { shards, batch: None },
+        }
+    }
 }
 
-/// The `"serve"` config block: which deployment shape `raca serve`
-/// builds, and how big.  Parsed by [`crate::config::RunConfig`].
+/// The `"serve"` config block: which deployment tree `raca serve` builds,
+/// and how big.  Parsed by [`crate::config::RunConfig`].
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Legacy shape selector (compatibility sugar over [`Topology`]).
     pub backend: BackendKind,
-    /// Replicas for the replicated backend.
+    /// Explicit deployment tree (`"topology": "2x(pipeline:3)"`); wins
+    /// over `backend`/`chips`/`shards` when set.
+    pub topology: Option<Topology>,
+    /// Replicas for the legacy `replicated` spelling.
     pub chips: usize,
-    /// Dies for the pipelined backend (≤ the model's layer count).
+    /// Dies for the legacy `pipelined` spelling (≤ the model's layers).
     pub shards: usize,
     /// Pipeline flow-control window (trials in flight).
     pub depth: usize,
+    /// Default trials per die-to-die message for pipeline leaves.
+    pub batch: usize,
     pub seed: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { backend: BackendKind::Single, chips: 4, shards: 2, depth: 256, seed: 0x5EB0E }
+        Self {
+            backend: BackendKind::Single,
+            topology: None,
+            chips: 4,
+            shards: 2,
+            depth: 256,
+            batch: 8,
+            seed: 0x5EB0E,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The deployment tree this config selects: an explicit `topology`
+    /// wins; otherwise the legacy knobs map onto their canonical trees.
+    pub fn tree(&self, policy: RoutePolicy) -> Topology {
+        self.topology
+            .clone()
+            .unwrap_or_else(|| self.backend.to_topology(self.chips, self.shards, policy))
     }
 }
 
 /// Base trial index of a request's RNG stream: 2^32 indices per request,
 /// so per-request streams stay disjoint for any realistic trial budget
 /// (the fleet-wide idiom — calibration and serving use the same shape).
-/// Fleet backends derive every trial of request `id` as `base + t`, which
-/// is what makes sharded execution reproduce the unsharded
-/// [`crate::engine::NativeEngine`] vote-for-vote at equal seeds.
+/// Backends derive every trial of request `id` as `base + t`, which is
+/// what makes sharded execution reproduce the unsharded
+/// [`crate::engine::NativeEngine`] vote-for-vote at equal seeds — at any
+/// position in a deployment tree.
 pub fn trial_stream_base(seed: u64, id: RequestId) -> u64 {
     seed.wrapping_add(id << 32)
 }
@@ -166,8 +214,34 @@ mod tests {
         assert_eq!(BackendKind::parse("single"), Some(BackendKind::Single));
         assert_eq!(BackendKind::parse("replicated"), Some(BackendKind::Replicated));
         assert_eq!(BackendKind::parse("pipelined"), Some(BackendKind::Pipelined));
+        // Case-insensitive, like every other CLI/config spelling.
+        assert_eq!(BackendKind::parse("Single"), Some(BackendKind::Single));
+        assert_eq!(BackendKind::parse("PIPELINED"), Some(BackendKind::Pipelined));
         assert_eq!(BackendKind::parse("sharded"), None);
         assert_eq!(BackendKind::Pipelined.name(), "pipelined");
+    }
+
+    #[test]
+    fn backend_kinds_map_onto_canonical_trees() {
+        let policy = RoutePolicy::RoundRobin;
+        assert_eq!(
+            BackendKind::Single.to_topology(4, 2, policy).to_string(),
+            "die"
+        );
+        assert_eq!(
+            BackendKind::Replicated.to_topology(4, 2, policy).to_string(),
+            "4x(die)"
+        );
+        assert_eq!(
+            BackendKind::Pipelined.to_topology(4, 2, policy).to_string(),
+            "pipeline:2"
+        );
+        // ServeConfig resolves the same way, unless an explicit tree wins.
+        let mut sc = ServeConfig::default();
+        sc.backend = BackendKind::Replicated;
+        assert_eq!(sc.tree(policy).to_string(), "4x(die)");
+        sc.topology = Some(Topology::parse("2x(pipeline:3)").unwrap());
+        assert_eq!(sc.tree(policy).to_string(), "2x(pipeline:3)");
     }
 
     #[test]

@@ -24,7 +24,10 @@
 //! A control thread owns vote state: it keeps up to `depth` trials in
 //! flight across the pipeline (round-robin over active requests, so the
 //! slowest die stays saturated), counts returned winners, applies the
-//! Wilson-interval early stopper, and answers tickets.
+//! Wilson-interval early stopper, and answers tickets.  Trials travel in
+//! blocks of up to [`PipelineOptions::batch`] per die-to-die message —
+//! one channel send moves a whole activation slab, amortizing per-message
+//! overhead without touching the per-trial noise streams.
 //!
 //! [`NativeEngine`]: crate::engine::NativeEngine
 
@@ -63,12 +66,23 @@ pub struct PipelineOptions {
     /// Fleet seed: the shared trial-RNG identity *and* the root of
     /// per-die variation draws.
     pub seed: u64,
+    /// Fleet-wide id of this pipeline's first die.  Composed deployments
+    /// ([`crate::serve::plan`]) number every physical die once across the
+    /// whole topology; variation draws key off `chip_seed(seed,
+    /// chip_base + d)`, so two replicas of the same shard plan are
+    /// distinct silicon.  0 for a standalone pipeline (the PR-2 shape).
+    pub chip_base: usize,
     /// Minimum recorded trials before early stopping may fire.
     pub min_trials: u32,
     /// Maximum trials in flight across the pipeline (flow control).
     pub depth: usize,
     /// Admission cap on concurrent requests.
     pub max_in_flight: usize,
+    /// Trials carried per die-to-die message.  Each channel send moves a
+    /// `batch`-trial block (one activation slab), amortizing per-message
+    /// overhead; trial indices inside a block stay `base + k`, so batching
+    /// is invisible to the bit-parity contract.
+    pub batch: usize,
 }
 
 impl Default for PipelineOptions {
@@ -79,9 +93,11 @@ impl Default for PipelineOptions {
             params: TrialParams::default(),
             variation: None,
             seed: 0xF1E7D,
+            chip_base: 0,
             min_trials: 5,
             depth: 256,
             max_in_flight: 256,
+            batch: 8,
         }
     }
 }
@@ -101,15 +117,10 @@ struct LayerStage {
     is_output: bool,
 }
 
-enum StageOut {
-    Hidden(Vec<f32>),
-    Winner(i32),
-}
-
 /// Reusable per-die buffers (mirrors `forward::TrialScratch` — per-trial
-/// Vec churn was ~11% of the trial profile, §Perf iteration 3).  Only the
-/// outgoing activation of a non-output die is freshly allocated, because
-/// its ownership moves to the next die over the channel.
+/// Vec churn was ~11% of the trial profile, §Perf iteration 3).  Outgoing
+/// activations of a non-output die append to a per-*block* slab whose
+/// ownership moves to the next die over the channel.
 #[derive(Default)]
 struct StageScratch {
     h: Vec<f32>,
@@ -130,8 +141,17 @@ impl LayerStage {
 
     /// Run this die's layers for one trial.  `input` is the cached z1
     /// pre-activation when this die holds the input layer, otherwise the
-    /// upstream die's binary activations.
-    fn run(&self, input: &[f32], p: TrialParams, trial_idx: u64, s: &mut StageScratch) -> StageOut {
+    /// upstream die's binary activations.  Non-output dies append their
+    /// outgoing activation to `out` (the block slab for the next die) and
+    /// return `None`; the output die returns the WTA winner.
+    fn run_one(
+        &self,
+        input: &[f32],
+        p: TrialParams,
+        trial_idx: u64,
+        s: &mut StageScratch,
+        out: &mut Vec<f32>,
+    ) -> Option<i32> {
         let mut g = self.gauss(trial_idx);
         let sigma = p.sigma_z as f64;
         let n_local = self.weights.spec.num_layers();
@@ -155,14 +175,15 @@ impl LayerStage {
             s.z.resize(cols, 0.0);
             forward::affine_aug(&s.h, rows, cols, m, &mut s.z);
             if self.is_output && l == n_local - 1 {
-                return StageOut::Winner(wta_race(&s.z, p, &mut g));
+                return Some(wta_race(&s.z, p, &mut g));
             }
             for v in s.z.iter_mut() {
                 *v = if (*v as f64) + sigma * g.next() > 0.0 { 1.0 } else { 0.0 };
             }
             std::mem::swap(&mut s.h, &mut s.z);
         }
-        StageOut::Hidden(std::mem::take(&mut s.h))
+        out.extend_from_slice(&s.h);
+        None
     }
 }
 
@@ -174,18 +195,21 @@ enum CtrlMsg {
 enum StageMsg {
     /// New request: the input die computes and caches its z1.
     Open { req: RequestId, image: Vec<f32> },
-    /// One trial flowing down the pipeline (`h` is empty into die 0).
-    /// `gen` is the admission generation of the request — it lets the
-    /// control thread discard speculative winners that land after the
-    /// request completed (and possibly after its id was reused).
-    Trial { req: RequestId, gen: u64, trial_idx: u64, h: Vec<f32> },
+    /// A block of `count` consecutive trials (`base_idx + k`, k < count)
+    /// flowing down the pipeline as one message — the die-to-die channel
+    /// amortization.  `h` holds `count` concatenated activation rows
+    /// (empty into die 0, which reads its cached z1 instead).  `gen` is
+    /// the admission generation of the request — it lets the control
+    /// thread discard speculative winners that land after the request
+    /// completed (and possibly after its id was reused).
+    Trials { req: RequestId, gen: u64, base_idx: u64, count: u32, h: Vec<f32> },
     /// Request finished: the input die drops its cache entry.
     Close { req: RequestId },
 }
 
 enum StageSink {
     Next(mpsc::Sender<StageMsg>),
-    Collect(mpsc::Sender<(RequestId, u64, i32)>),
+    Collect(mpsc::Sender<(RequestId, u64, Vec<i32>)>),
 }
 
 /// Pipeline-sharded serving session.
@@ -203,7 +227,10 @@ impl PipelinedFleetBackend {
     /// pipeline (one thread per die + a control thread).  Errors — rather
     /// than panicking downstream — when the die count exceeds the layer
     /// count.
-    pub fn start(nominal: &Weights, opts: PipelineOptions) -> Result<Self> {
+    ///
+    /// Crate-private: deployments are built by [`crate::serve::plan`]
+    /// (a standalone pipeline is the `pipeline:<dies>` topology leaf).
+    pub(crate) fn start(nominal: &Weights, opts: PipelineOptions) -> Result<Self> {
         ensure!(
             nominal.spec.num_layers() >= 2,
             "pipelined backend needs a model with at least 2 layers"
@@ -222,8 +249,11 @@ impl PipelinedFleetBackend {
             };
             if let Some(v) = &opts.variation {
                 // Each die is still a real programmed chip: its slice goes
-                // through the conductance mapping with a private draw.
-                let mut gauss = GaussianSource::new(chip_seed(opts.seed, d) ^ 0xD1E_5EED);
+                // through the conductance mapping with a private draw keyed
+                // by its *fleet-wide* id, so replicated pipelines program
+                // distinct silicon.
+                let mut gauss =
+                    GaussianSource::new(chip_seed(opts.seed, opts.chip_base + d) ^ 0xD1E_5EED);
                 w = program_weights(&w, v, &mut gauss);
             }
             stage_defs.push(LayerStage {
@@ -351,27 +381,50 @@ fn stage_loop(
             StageMsg::Close { req } => {
                 z1_cache.remove(&req);
             }
-            StageMsg::Trial { req, gen, trial_idx, h } => {
-                // The control thread sends every Trial before the Close of
-                // the same request on this FIFO channel, so a cache miss
-                // here is a protocol bug, not a race.
-                let input: &[f32] = if stage.first_layer == 0 {
-                    z1_cache.get(&req).expect("trial for unopened request").as_slice()
-                } else {
-                    h.as_slice()
-                };
+            StageMsg::Trials { req, gen, base_idx, count, h } => {
+                // The control thread sends every Trials block before the
+                // Close of the same request on this FIFO channel, so a
+                // cache miss here is a protocol bug, not a race.
+                let in_width = stage.weights.spec.input_dim();
+                let out_width = stage.weights.spec.output_dim();
                 let t0 = Instant::now();
-                let out = stage.run(input, params, trial_idx, &mut scratch);
-                metrics.trials_executed.fetch_add(1, Relaxed);
+                let mut out_h: Vec<f32> = Vec::new();
+                let mut winners: Vec<i32> = Vec::new();
+                if stage.is_output {
+                    winners.reserve(count as usize);
+                } else {
+                    out_h.reserve(count as usize * out_width);
+                }
+                let z1: Option<&[f32]> = if stage.first_layer == 0 {
+                    Some(z1_cache.get(&req).expect("trials for unopened request").as_slice())
+                } else {
+                    None
+                };
+                for k in 0..count as u64 {
+                    let input: &[f32] = match z1 {
+                        Some(z) => z,
+                        None => {
+                            let k = k as usize;
+                            &h[k * in_width..(k + 1) * in_width]
+                        }
+                    };
+                    if let Some(w) = stage.run_one(
+                        input,
+                        params,
+                        base_idx.wrapping_add(k),
+                        &mut scratch,
+                        &mut out_h,
+                    ) {
+                        winners.push(w);
+                    }
+                }
+                metrics.trials_executed.fetch_add(count as u64, Relaxed);
                 metrics.record_latency(t0.elapsed());
-                let delivered = match (&sink, out) {
-                    (StageSink::Next(tx), StageOut::Hidden(h2)) => {
-                        tx.send(StageMsg::Trial { req, gen, trial_idx, h: h2 }).is_ok()
-                    }
-                    (StageSink::Collect(tx), StageOut::Winner(w)) => {
-                        tx.send((req, gen, w)).is_ok()
-                    }
-                    _ => unreachable!("stage/sink shape mismatch"),
+                let delivered = match &sink {
+                    StageSink::Next(tx) => tx
+                        .send(StageMsg::Trials { req, gen, base_idx, count, h: out_h })
+                        .is_ok(),
+                    StageSink::Collect(tx) => tx.send((req, gen, winners)).is_ok(),
                 };
                 if !delivered {
                     return; // downstream died — tear the pipeline down
@@ -399,12 +452,13 @@ struct Active {
 fn control_loop(
     sub_rx: mpsc::Receiver<CtrlMsg>,
     stage0: mpsc::Sender<StageMsg>,
-    win_rx: mpsc::Receiver<(RequestId, u64, i32)>,
+    win_rx: mpsc::Receiver<(RequestId, u64, Vec<i32>)>,
     metrics: Arc<Metrics>,
     opts: PipelineOptions,
     classes: usize,
 ) {
     let depth = opts.depth.max(1);
+    let batch = opts.batch.max(1) as u32;
     let max_in_flight = opts.max_in_flight.max(1);
     let mut active: HashMap<RequestId, Active> = HashMap::new();
     // Round-robin issue order over requests with budget left (may hold
@@ -466,37 +520,41 @@ fn control_loop(
             );
             queue.push_back(id);
         }
-        // Keep the pipeline full: one trial per issuable request,
-        // round-robin, while the in-flight window has room.
+        // Keep the pipeline full: one block of up to `batch` trials per
+        // issuable request, round-robin, while the in-flight window has
+        // room (`outstanding` counts trials, not messages).
         while outstanding < depth {
             let Some(id) = queue.pop_front() else { break };
             let Some(a) = active.get_mut(&id) else { continue };
             if a.issued >= a.req.max_trials {
                 continue;
             }
-            let trial_idx = a.base.wrapping_add(a.issued as u64);
-            let msg = StageMsg::Trial { req: id, gen: a.gen, trial_idx, h: Vec::new() };
+            let room = (depth - outstanding) as u32;
+            let take = batch.min(a.req.max_trials - a.issued).min(room);
+            let base_idx = a.base.wrapping_add(a.issued as u64);
+            let msg =
+                StageMsg::Trials { req: id, gen: a.gen, base_idx, count: take, h: Vec::new() };
             if stage0.send(msg).is_err() {
                 return;
             }
-            a.issued += 1;
-            outstanding += 1;
+            a.issued += take;
+            outstanding += take as usize;
             if a.issued < a.req.max_trials {
                 queue.push_back(id);
             }
         }
-        // Reap winners: block only when trials are in flight (they are
-        // guaranteed to come back — a dead die closes win_rx instead).
+        // Reap winner blocks: block only when trials are in flight (they
+        // are guaranteed to come back — a dead die closes win_rx instead).
         if outstanding > 0 {
             match win_rx.recv() {
-                Ok((id, gen, w)) => handle_winner(
+                Ok((id, gen, w)) => handle_winners(
                     id, gen, w, &mut active, &mut queue, &mut outstanding, &stage0, &metrics,
                     &opts,
                 ),
                 Err(_) => return,
             }
             while let Ok((id, gen, w)) = win_rx.try_recv() {
-                handle_winner(
+                handle_winners(
                     id, gen, w, &mut active, &mut queue, &mut outstanding, &stage0, &metrics,
                     &opts,
                 );
@@ -518,10 +576,10 @@ fn control_loop(
     }
 }
 
-fn handle_winner(
+fn handle_winners(
     id: RequestId,
     gen: u64,
-    winner: i32,
+    winners: Vec<i32>,
     active: &mut HashMap<RequestId, Active>,
     queue: &mut VecDeque<RequestId>,
     outstanding: &mut usize,
@@ -529,45 +587,56 @@ fn handle_winner(
     metrics: &Metrics,
     opts: &PipelineOptions,
 ) {
-    *outstanding -= 1;
-    metrics.trials_executed.fetch_add(1, Relaxed);
+    *outstanding -= winners.len();
+    metrics.trials_executed.fetch_add(winners.len() as u64, Relaxed);
     // Stale speculation: the request completed (and its id may even have
     // been reused by a new request — the `gen` mismatch catches that)
-    // while this trial was in the pipe.  It is paid for, not counted.
+    // while this block was in the pipe.  It is paid for, not counted.
     let Some(a) = active.get_mut(&id) else { return };
     if a.gen != gen {
         return;
     }
-    a.outcome.record(winner);
-    let recorded = a.outcome.trials as u32;
-    let decided = a.req.confidence > 0.0 && recorded >= opts.min_trials && {
-        let (lead, runner) = a.outcome.top_two();
-        lead_is_decided(lead, runner, a.req.confidence)
-    };
-    if recorded >= a.req.max_trials || decided {
-        // Budget never issued is saved; trials already in the pipe are
-        // speculation and stay counted as executed when they land.
-        metrics
-            .trials_saved
-            .fetch_add((a.req.max_trials - a.issued) as u64, Relaxed);
-        let latency = a.submitted.elapsed();
-        metrics.requests_completed.fetch_add(1, Relaxed);
-        metrics.record_latency(latency);
-        let _ = a.reply.send(InferResponse {
-            id,
-            prediction: a.outcome.prediction(),
-            outcome: a.outcome.clone(),
-            trials_used: recorded,
-            latency,
-        });
-        active.remove(&id);
-        // Purge any stale issue-queue entry (early stop can leave one), so
-        // a later request reusing this id never gets two round-robin slots.
-        queue.retain(|&q| q != id);
-        // FIFO on the control→die-0 channel guarantees every Trial of this
-        // request is processed before this Close drops the z1 cache entry.
-        let _ = stage0.send(StageMsg::Close { req: id });
+    let mut done = false;
+    for winner in winners {
+        a.outcome.record(winner);
+        let recorded = a.outcome.trials as u32;
+        let decided = a.req.confidence > 0.0 && recorded >= opts.min_trials && {
+            let (lead, runner) = a.outcome.top_two();
+            lead_is_decided(lead, runner, a.req.confidence)
+        };
+        if recorded >= a.req.max_trials || decided {
+            // The tail of this block past the decision point is paid-for
+            // speculation: counted as executed above, never recorded.
+            done = true;
+            break;
+        }
     }
+    if !done {
+        return;
+    }
+    let a = active.remove(&id).expect("completed request still active");
+    let recorded = a.outcome.trials as u32;
+    // Budget never issued is saved; trials already in the pipe are
+    // speculation and stay counted as executed when they land.
+    metrics
+        .trials_saved
+        .fetch_add((a.req.max_trials - a.issued) as u64, Relaxed);
+    let latency = a.submitted.elapsed();
+    metrics.requests_completed.fetch_add(1, Relaxed);
+    metrics.record_latency(latency);
+    let _ = a.reply.send(InferResponse {
+        id,
+        prediction: a.outcome.prediction(),
+        outcome: a.outcome,
+        trials_used: recorded,
+        latency,
+    });
+    // Purge any stale issue-queue entry (early stop can leave one), so a
+    // later request reusing this id never gets two round-robin slots.
+    queue.retain(|&q| q != id);
+    // FIFO on the control→die-0 channel guarantees every Trials block of
+    // this request is processed before this Close drops the z1 cache entry.
+    let _ = stage0.send(StageMsg::Close { req: id });
 }
 
 #[cfg(test)]
@@ -611,6 +680,27 @@ mod tests {
         for (d, m) in b.per_die_metrics().iter().enumerate() {
             assert_eq!(m.trials_executed, 60, "die {d} trial count");
         }
+    }
+
+    #[test]
+    fn batching_is_invisible_to_votes() {
+        // Trial indices inside a block stay `base + k`, so the die-to-die
+        // message batch size must never change a single vote.
+        let w = model();
+        let votes = |batch: usize| -> Vec<Vec<u64>> {
+            let opts = PipelineOptions { dies: 3, batch, ..Default::default() };
+            let b = PipelinedFleetBackend::start(&w, opts).unwrap();
+            let tickets: Vec<_> = (0..4u64)
+                .map(|i| {
+                    let x: Vec<f32> =
+                        (0..784).map(|j| ((j + i as usize * 7) % 11) as f32 / 11.0).collect();
+                    b.submit(InferRequest::new(i, x).with_budget(23, 0.0)).unwrap()
+                })
+                .collect();
+            tickets.into_iter().map(|t| b.wait(t).unwrap().outcome.counts).collect()
+        };
+        assert_eq!(votes(1), votes(5));
+        assert_eq!(votes(1), votes(64));
     }
 
     #[test]

@@ -1,0 +1,965 @@
+//! Deployment topologies: a recursive tree of serving shapes, compiled
+//! into nested [`Backend`]s.
+//!
+//! The paper's architecture is "flexibly configured" at the layer/spec
+//! level (§III-C); this module applies the same flexibility to how dies
+//! compose into a *service*.  Replication and pipelining are orthogonal
+//! axes (Marinella et al.'s multiscale co-design; the tiled/pipelined
+//! organizations in Smagulova et al.'s survey), so instead of a flat
+//! backend switch the deployment is a [`Topology`] tree:
+//!
+//! * [`Topology::Die`] — leaf: one chip (native, physical, or — under the
+//!   `pjrt` feature — an AOT/XLA die);
+//! * [`Topology::Pipeline`] — leaf: one model sharded layer-ranges-per-die
+//!   across N chips ([`crate::arch::ShardPlan`]), activations streamed
+//!   die-to-die;
+//! * [`Topology::Replicate`] — combinator: N copies of any subtree behind
+//!   a health-reweighted [`Router`].
+//!
+//! [`DeployPlan::compile`] walks the tree and numbers every physical die
+//! once (fleet-wide chip ids ⇒ distinct variation draws per replica);
+//! [`build`] turns the plan into a `Box<dyn Backend>`: replicate-over-die
+//! fuses into the per-chip worker [`ReplicatedFleetBackend`], every other
+//! replicate becomes a [`RouterBackend`] over recursively built children,
+//! so health reweighting and eviction work at *any* level of the tree.
+//!
+//! **Parity discipline:** every leaf derives per-request trial indices
+//! from `trial_stream_base(seed, request id)`.  Pipeline leaves (and a
+//! bare `die` root) additionally draw trial noise from the deployment
+//! seed itself, so with `variation: None` their votes are bit-identical
+//! to the unsharded [`crate::engine::NativeEngine`] at equal
+//! `(seed, trial_idx)` — regardless of where the pipeline sits in the
+//! tree (`rust/tests/serve.rs` holds `2x(pipeline:3)` to that).  Fused
+//! `<n>x(die)` worker fleets keep the flat-fleet semantics instead:
+//! each die serves with its private `chip_seed` RNG identity, so their
+//! responses are reproducible per fixed tree and routing, not
+//! shape-independent ([`crate::serve::ReplicatedFleetBackend`] docs).
+//!
+//! # Spec grammar (case-insensitive)
+//!
+//! ```text
+//! node   := '(' node ')'
+//!         | COUNT 'x' node [ '@' policy ]       N replicas of node
+//!         | 'die' [ ':' engine ]                engine: native|physical|pjrt
+//!         | 'pipeline' ':' COUNT [ ':b' COUNT ] COUNT dies; :bN = trials per
+//!                                               die-to-die message
+//! policy := round-robin|rr | least-loaded|ll | weighted|wt
+//! ```
+//!
+//! Examples: `die`, `8x(die)@weighted`, `pipeline:3`, `2x(pipeline:3)`,
+//! `pipeline:4:b16`, `2x(2x(die))`.  `raca serve --topology "<spec>"`
+//! and the `"serve": {"topology": "<spec>"}` config key accept this
+//! grammar; the legacy `BackendKind` spellings are parse-only sugar that
+//! map onto canonical trees ([`super::BackendKind::to_topology`]).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::arch::ShardPlan;
+use crate::coordinator::{Metrics, MetricsSnapshot, SchedulerConfig, TrialRunner};
+use crate::dataset::Dataset;
+use crate::device::VariationModel;
+use crate::engine::{NativeEngine, TrialEngine, TrialParams};
+use crate::fleet::{
+    chip_seed, program_weights, Calibrator, Chip, ChipId, Fleet, HealthConfig, HealthMonitor,
+    RoutePolicy, Router,
+};
+use crate::nn::{ModelSpec, Weights};
+use crate::stats::GaussianSource;
+
+use super::{
+    Backend, InferRequest, InferResponse, PipelineOptions, PipelinedFleetBackend,
+    ReplicatedFleetBackend, ReplicatedOptions, SingleChipBackend, Ticket,
+};
+
+/// Crossbar tile edge used for shard balancing (the repo-wide default).
+const TILE: usize = 128;
+
+/// Which engine a [`Topology::Die`] leaf runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineSel {
+    #[default]
+    Native,
+    /// Full analog simulation (validation-grade, slow).
+    Physical,
+    /// AOT/XLA over PJRT (requires the `pjrt` feature + artifacts).
+    Pjrt,
+}
+
+impl EngineSel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineSel::Native => "native",
+            EngineSel::Physical => "physical",
+            EngineSel::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// A deployment shape: how simulated RACA dies compose into one service.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Topology {
+    /// One chip behind the batched scheduler.
+    Die { engine: EngineSel },
+    /// One model sharded layer-ranges-per-die across `shards` chips.
+    /// `batch` pins the trials-per-message block size (`None` = the
+    /// deployment default, [`BuildOptions::batch`]).
+    Pipeline { shards: usize, batch: Option<usize> },
+    /// `n` copies of `child` behind a health-reweighted router.
+    Replicate { n: usize, policy: RoutePolicy, child: Box<Topology> },
+}
+
+impl Topology {
+    /// Parse a topology spec (case-insensitive; grammar in module docs).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let lower = spec.trim().to_ascii_lowercase();
+        let (node, rest) =
+            parse_node(&lower).map_err(|e| anyhow!("topology '{spec}': {e}"))?;
+        let rest = rest.trim();
+        if !rest.is_empty() {
+            bail!("topology '{spec}': trailing input '{rest}'");
+        }
+        node.validate().map_err(|e| anyhow!("topology '{spec}': {e}"))?;
+        Ok(node)
+    }
+
+    /// Structural validation (also applied by [`Topology::parse`] and at
+    /// config-validation time): zero-sized nodes are rejected like the
+    /// existing zero-sized fleet checks.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        match self {
+            Topology::Die { .. } => Ok(()),
+            Topology::Pipeline { shards, batch } => {
+                if *shards == 0 {
+                    return Err("a pipeline needs at least one die (got pipeline:0)".into());
+                }
+                if *batch == Some(0) {
+                    return Err("a pipeline trial batch must be at least 1 (got :b0)".into());
+                }
+                Ok(())
+            }
+            Topology::Replicate { n, child, .. } => {
+                if *n == 0 {
+                    return Err(
+                        "a replication factor must be at least 1 (got 0x(…))".into()
+                    );
+                }
+                child.validate()
+            }
+        }
+    }
+
+    /// Total physical dies this tree deploys.
+    pub fn dies(&self) -> usize {
+        match self {
+            Topology::Die { .. } => 1,
+            Topology::Pipeline { shards, .. } => *shards,
+            Topology::Replicate { n, child, .. } => n * child.dies(),
+        }
+    }
+}
+
+impl fmt::Display for Topology {
+    /// Canonical spec spelling; `Topology::parse(t.to_string()) == t`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Topology::Die { engine: EngineSel::Native } => write!(f, "die"),
+            Topology::Die { engine } => write!(f, "die:{}", engine.name()),
+            Topology::Pipeline { shards, batch: None } => write!(f, "pipeline:{shards}"),
+            Topology::Pipeline { shards, batch: Some(b) } => {
+                write!(f, "pipeline:{shards}:b{b}")
+            }
+            Topology::Replicate { n, policy, child } => {
+                write!(f, "{n}x({child})")?;
+                if *policy != RoutePolicy::default() {
+                    write!(f, "@{}", policy.name())?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Leading decimal digits of `s`, split off.
+fn split_digits(s: &str) -> (&str, &str) {
+    let end = s.find(|c: char| !c.is_ascii_digit()).unwrap_or(s.len());
+    s.split_at(end)
+}
+
+/// Recursive-descent parser over a lower-cased spec; returns the node and
+/// the unconsumed remainder.
+fn parse_node(s: &str) -> std::result::Result<(Topology, &str), String> {
+    let s = s.trim_start();
+    // Parenthesized node.
+    if let Some(inner) = s.strip_prefix('(') {
+        let (node, rest) = parse_node(inner)?;
+        let rest = rest.trim_start();
+        let rest = rest
+            .strip_prefix(')')
+            .ok_or_else(|| format!("missing ')' after '{node}'"))?;
+        return Ok((node, rest));
+    }
+    // Replicate: `<n>x<node>[@policy]`.
+    let (digits, after) = split_digits(s);
+    if !digits.is_empty() && after.starts_with('x') {
+        let n: usize = digits
+            .parse()
+            .map_err(|_| format!("bad replica count '{digits}'"))?;
+        let (child, rest) = parse_node(&after[1..])?;
+        let mut rest = rest.trim_start();
+        let mut policy = RoutePolicy::default();
+        if let Some(p) = rest.strip_prefix('@') {
+            let end = p
+                .find(|c: char| c == ')' || c.is_whitespace())
+                .unwrap_or(p.len());
+            policy = RoutePolicy::parse(&p[..end]).ok_or_else(|| {
+                format!(
+                    "unknown route policy '{}' (valid: {})",
+                    &p[..end],
+                    RoutePolicy::SPELLINGS
+                )
+            })?;
+            rest = &p[end..];
+        }
+        return Ok((Topology::Replicate { n, policy, child: Box::new(child) }, rest));
+    }
+    // Pipeline leaf: `pipeline:<dies>[:b<batch>]`.
+    if let Some(rest) = s.strip_prefix("pipeline") {
+        let rest = rest.strip_prefix(':').ok_or_else(|| {
+            "pipeline needs a die count: pipeline:<dies>[:b<batch>]".to_string()
+        })?;
+        let (digits, mut rest) = split_digits(rest);
+        if digits.is_empty() {
+            return Err("pipeline needs a die count: pipeline:<dies>[:b<batch>]".into());
+        }
+        let shards: usize = digits
+            .parse()
+            .map_err(|_| format!("bad pipeline die count '{digits}'"))?;
+        let mut batch = None;
+        if let Some(b) = rest.strip_prefix(":b") {
+            let (digits, after) = split_digits(b);
+            if digits.is_empty() {
+                return Err("pipeline batch needs a count: pipeline:<dies>:b<batch>".into());
+            }
+            batch = Some(
+                digits
+                    .parse()
+                    .map_err(|_| format!("bad pipeline batch '{digits}'"))?,
+            );
+            rest = after;
+        }
+        return Ok((Topology::Pipeline { shards, batch }, rest));
+    }
+    // Die leaf: `die[:engine]`.
+    if let Some(mut rest) = s.strip_prefix("die") {
+        let mut engine = EngineSel::Native;
+        if let Some(e) = rest.strip_prefix(':') {
+            let end = e
+                .find(|c: char| !c.is_ascii_alphanumeric())
+                .unwrap_or(e.len());
+            engine = match &e[..end] {
+                "native" => EngineSel::Native,
+                "physical" => EngineSel::Physical,
+                "pjrt" | "xla" => EngineSel::Pjrt,
+                other => {
+                    return Err(format!(
+                        "unknown die engine '{other}' (valid: native, physical, pjrt)"
+                    ))
+                }
+            };
+            rest = &e[end..];
+        }
+        return Ok((Topology::Die { engine }, rest));
+    }
+    Err(format!(
+        "expected a topology node at '{s}' — valid: die[:native|physical|pjrt], \
+         pipeline:<dies>[:b<batch>], <n>x(<node>)[@policy]"
+    ))
+}
+
+/// Compiled topology: the tree with every physical die numbered once.
+///
+/// Chip ids are allocated depth-first, so a replica group's dies are a
+/// contiguous span and two replicas of the same subtree never share an
+/// id — which is what keys distinct per-die variation draws while the
+/// *trial* streams stay the deployment seed (the parity discipline).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanNode {
+    Die { engine: EngineSel, chip: ChipId },
+    Pipeline { shards: usize, batch: Option<usize>, chip_base: ChipId },
+    Replicate { policy: RoutePolicy, children: Vec<PlanNode> },
+}
+
+/// `Topology -> DeployPlan -> Box<dyn Backend>`, step one.
+#[derive(Debug, Clone)]
+pub struct DeployPlan {
+    pub root: PlanNode,
+    /// Total physical dies across the tree.
+    pub total_dies: usize,
+}
+
+impl DeployPlan {
+    /// Validate the tree and allocate fleet-wide chip ids.
+    pub fn compile(topo: &Topology) -> Result<Self> {
+        topo.validate().map_err(|e| anyhow!("invalid topology: {e}"))?;
+        let mut next = 0usize;
+        let root = alloc(topo, &mut next);
+        Ok(Self { root, total_dies: next })
+    }
+
+    /// Human-readable tree, with per-pipeline shard detail for `spec`.
+    pub fn describe(&self, spec: &ModelSpec) -> String {
+        let mut out = String::new();
+        render(&self.root, spec, 0, &mut out);
+        out
+    }
+}
+
+fn alloc(t: &Topology, next: &mut usize) -> PlanNode {
+    match t {
+        Topology::Die { engine } => {
+            let chip = *next;
+            *next += 1;
+            PlanNode::Die { engine: *engine, chip }
+        }
+        Topology::Pipeline { shards, batch } => {
+            let chip_base = *next;
+            *next += shards;
+            PlanNode::Pipeline { shards: *shards, batch: *batch, chip_base }
+        }
+        Topology::Replicate { n, policy, child } => PlanNode::Replicate {
+            policy: *policy,
+            children: (0..*n).map(|_| alloc(child, next)).collect(),
+        },
+    }
+}
+
+fn render(node: &PlanNode, spec: &ModelSpec, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    match node {
+        PlanNode::Die { engine, chip } => {
+            out.push_str(&format!("{pad}die [chip {chip}] ({})\n", engine.name()));
+        }
+        PlanNode::Pipeline { shards, batch, chip_base } => {
+            let detail = match ShardPlan::balanced(spec, TILE, *shards) {
+                Ok(p) => format!(
+                    "layer ranges {:?}, tiles/die {:?}",
+                    p.ranges, p.tiles_per_die
+                ),
+                Err(e) => format!("unplannable for this model: {e}"),
+            };
+            let b = batch.map(|b| format!(", batch {b}")).unwrap_or_default();
+            out.push_str(&format!(
+                "{pad}pipeline × {shards} dies [chips {chip_base}..{}]{b} — {detail}\n",
+                chip_base + shards
+            ));
+        }
+        PlanNode::Replicate { policy, children } => {
+            out.push_str(&format!(
+                "{pad}replicate × {} ({})\n",
+                children.len(),
+                policy.name()
+            ));
+            for c in children {
+                render(c, spec, indent + 1, out);
+            }
+        }
+    }
+}
+
+/// Everything the compiler needs besides the tree and the weights.
+#[derive(Clone)]
+pub struct BuildOptions {
+    /// Deployment seed: the shared trial-stream identity of every leaf
+    /// *and* the root of per-die variation/programming draws.
+    pub seed: u64,
+    /// Trial physics (σ_z, θ, WTA steps), shared by every die.
+    pub trial: TrialParams,
+    /// Scheduler knobs for die leaves (batch size, min_trials,
+    /// max_in_flight); `params`/`seed` are overwritten from this struct.
+    pub scheduler: SchedulerConfig,
+    /// Per-die programming variation; `None` programs exact nominal
+    /// weights (the bit-parity configuration).
+    pub variation: Option<VariationModel>,
+    /// Pipeline flow-control window (trials in flight per pipeline).
+    pub depth: usize,
+    /// Default trials per die-to-die message for pipeline leaves that
+    /// don't pin their own `:bN`.
+    pub batch: usize,
+    /// Held-out set + calibrator: fused replica fleets calibrate against
+    /// it up front (when variation is on) and recalibrate drifting dies
+    /// live.
+    pub calibration: Option<(Dataset, Calibrator)>,
+    /// Health steering cadence (completions between reweigh passes).
+    pub reweigh_every: u64,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        Self {
+            seed: 0x5EB0E,
+            trial: TrialParams::default(),
+            scheduler: SchedulerConfig::default(),
+            variation: None,
+            depth: 256,
+            batch: 8,
+            calibration: None,
+            reweigh_every: 32,
+        }
+    }
+}
+
+/// Compile `topo` and build the deployment over `nominal` weights — the
+/// one entry point every serving caller goes through (`raca serve`,
+/// benches, tests).
+pub fn build(topo: &Topology, nominal: &Weights, opts: &BuildOptions) -> Result<Box<dyn Backend>> {
+    let plan = DeployPlan::compile(topo)?;
+    build_node(&plan.root, nominal, opts)
+}
+
+fn build_node(node: &PlanNode, nominal: &Weights, opts: &BuildOptions) -> Result<Box<dyn Backend>> {
+    match node {
+        PlanNode::Die { engine, chip } => build_die(*engine, *chip, nominal, opts),
+        PlanNode::Pipeline { shards, batch, chip_base } => {
+            let popts = PipelineOptions {
+                dies: *shards,
+                tile: TILE,
+                params: opts.trial,
+                variation: opts.variation.clone(),
+                seed: opts.seed,
+                chip_base: *chip_base,
+                min_trials: opts.scheduler.min_trials,
+                depth: opts.depth,
+                max_in_flight: opts.scheduler.max_in_flight,
+                batch: batch.unwrap_or(opts.batch).max(1),
+            };
+            Ok(Box::new(PipelinedFleetBackend::start(nominal, popts)?))
+        }
+        PlanNode::Replicate { policy, children } => {
+            if let Some(fused) = fuse_native_dies(children, *policy, nominal, opts)? {
+                return Ok(fused);
+            }
+            let built = children
+                .iter()
+                .map(|c| build_node(c, nominal, opts))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Box::new(RouterBackend::start(built, *policy, opts.reweigh_every)))
+        }
+    }
+}
+
+/// Replicate-over-native-die fuses into the per-chip worker backend (one
+/// thread per die, live recalibration) instead of a router over N
+/// single-chip schedulers — same tree semantics, tighter runtime.
+fn fuse_native_dies(
+    children: &[PlanNode],
+    policy: RoutePolicy,
+    nominal: &Weights,
+    opts: &BuildOptions,
+) -> Result<Option<Box<dyn Backend>>> {
+    let mut base = None;
+    for (i, c) in children.iter().enumerate() {
+        match c {
+            PlanNode::Die { engine: EngineSel::Native, chip } => {
+                let b = *base.get_or_insert(*chip);
+                debug_assert_eq!(*chip, b + i, "replica chip ids must be contiguous");
+            }
+            _ => return Ok(None),
+        }
+    }
+    let Some(base) = base else { return Ok(None) };
+    let variation = opts.variation.clone().unwrap_or_default();
+    let mut fleet = Fleet::program_native_span(
+        nominal,
+        children.len(),
+        base,
+        &variation,
+        policy,
+        opts.seed,
+    );
+    if opts.variation.is_some() {
+        if let Some((cal, calibrator)) = &opts.calibration {
+            fleet.calibrate(cal, calibrator);
+        }
+    }
+    Ok(Some(Box::new(ReplicatedFleetBackend::start(
+        fleet,
+        opts.calibration.clone(),
+        ReplicatedOptions {
+            seed: opts.seed,
+            min_trials: opts.scheduler.min_trials,
+            reweigh_every: opts.reweigh_every,
+        },
+    ))))
+}
+
+fn build_die(
+    engine: EngineSel,
+    chip: ChipId,
+    nominal: &Weights,
+    opts: &BuildOptions,
+) -> Result<Box<dyn Backend>> {
+    match engine {
+        EngineSel::Native => {
+            // A die is a physical chip: programming variation applies when
+            // configured, keyed by the fleet-wide chip id; the *trial*
+            // stream stays the deployment seed so the `(seed, trial_idx)`
+            // parity discipline holds at any tree position.
+            let w = match &opts.variation {
+                Some(v) => {
+                    let mut gauss =
+                        GaussianSource::new(chip_seed(opts.seed, chip) ^ 0xD1E_5EED);
+                    program_weights(nominal, v, &mut gauss)
+                }
+                None => nominal.clone(),
+            };
+            let mut cfg = opts.scheduler.clone();
+            cfg.params = opts.trial;
+            cfg.seed = opts.seed;
+            let e = NativeEngine::new(Arc::new(w), opts.seed);
+            Ok(Box::new(SingleChipBackend::start(e, cfg)))
+        }
+        EngineSel::Physical => {
+            // The physical engine speaks `TrialEngine` (not the batched
+            // scheduler's `TrialRunner`), so it serves as a 1-die worker
+            // group — with the same fleet-wide RNG identity discipline as
+            // a native die: `chip_seed(seed, global chip id)`.
+            let variation = opts.variation.clone().unwrap_or_default();
+            let die =
+                Chip::program_physical_global(0, chip, nominal, &variation, TILE, opts.seed);
+            let fleet = Fleet {
+                chips: vec![die],
+                router: Router::new(RoutePolicy::RoundRobin),
+                health: HealthMonitor::new(1, HealthConfig::default()),
+                seed: opts.seed,
+            };
+            Ok(Box::new(ReplicatedFleetBackend::start(
+                fleet,
+                None,
+                ReplicatedOptions {
+                    seed: opts.seed,
+                    min_trials: opts.scheduler.min_trials,
+                    reweigh_every: opts.reweigh_every,
+                },
+            )))
+        }
+        EngineSel::Pjrt => build_pjrt_die(opts),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn build_pjrt_die(opts: &BuildOptions) -> Result<Box<dyn Backend>> {
+    // An XLA die takes its weights from the compiled artifact store, not
+    // from the nominal weights (they are baked into the executable).
+    let engine = crate::engine::XlaEngine::start(crate::runtime::default_artifact_dir())?;
+    let handle = engine.handle();
+    handle.warmup(opts.scheduler.batch_size)?;
+    let mut cfg = opts.scheduler.clone();
+    cfg.params = opts.trial;
+    cfg.seed = opts.seed;
+    let inner = SingleChipBackend::start(handle, cfg);
+    Ok(Box::new(PjrtDie { inner, _engine: engine }))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt_die(_opts: &BuildOptions) -> Result<Box<dyn Backend>> {
+    bail!("die:pjrt needs a build with `--features pjrt` (and compiled artifacts)")
+}
+
+/// Keeps the PJRT worker alive for as long as its scheduler serves.
+#[cfg(feature = "pjrt")]
+struct PjrtDie {
+    inner: SingleChipBackend,
+    _engine: crate::engine::XlaEngine,
+}
+
+#[cfg(feature = "pjrt")]
+impl Backend for PjrtDie {
+    fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        self.inner.submit(req)
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        self.inner.metrics()
+    }
+
+    fn shutdown(self: Box<Self>) {
+        drop(self);
+    }
+}
+
+/// One batched-scheduler die over an explicit engine — the `raca infer`
+/// path, including PJRT handles.  Weights-from-config dies go through
+/// [`build`]; this is for callers that already hold an engine.
+pub fn single_die<E: TrialRunner + Send + 'static>(
+    engine: E,
+    cfg: SchedulerConfig,
+) -> SingleChipBackend {
+    SingleChipBackend::start(engine, cfg)
+}
+
+/// Lift an externally programmed (and possibly calibrated) fleet onto the
+/// replicated worker-thread backend — the `raca fleet` path, which
+/// programs and grid-search-calibrates its farm before serving.  Fleets
+/// described purely by a topology go through [`build`] instead.
+pub fn lift_fleet<E: TrialEngine + 'static>(
+    fleet: Fleet<E>,
+    cal: Option<(Dataset, Calibrator)>,
+    opts: ReplicatedOptions,
+) -> ReplicatedFleetBackend {
+    ReplicatedFleetBackend::start(fleet, cal, opts)
+}
+
+// ---------------------------------------------------------------------------
+// RouterBackend: the generic Replicate combinator at runtime.
+// ---------------------------------------------------------------------------
+
+struct RelayJob {
+    /// The child's response channel for this request.
+    rx: mpsc::Receiver<InferResponse>,
+    /// The caller's ticket channel.
+    reply: mpsc::Sender<InferResponse>,
+    label: Option<i32>,
+    max_trials: u32,
+    submitted: Instant,
+}
+
+struct RouterShared {
+    health: Mutex<HealthMonitor>,
+    /// Health-driven router weights, refreshed live.
+    weights: Mutex<Vec<f64>>,
+    /// In-flight requests per child.
+    loads: Vec<AtomicU64>,
+    completed: AtomicU64,
+    reweigh_every: u64,
+}
+
+/// A [`Backend`] routing over child backends — the runtime of a
+/// [`Topology::Replicate`] whose child is itself a subtree (pipelines,
+/// nested replicas, heterogeneous dies).  Each child gets a relay thread
+/// that awaits its tickets, feeds the shared [`HealthMonitor`] (labeled
+/// probe traffic drives accuracy; everything drives latency/abstention),
+/// and periodically reweighs traffic / evicts floor-breakers — the same
+/// live steering the flat replicated fleet does, one level up.
+///
+/// Children have no recalibrate hook from up here: fleets recalibrate
+/// their *own* dies; the router only reweighs and evicts.
+pub struct RouterBackend {
+    children: Vec<Box<dyn Backend>>,
+    txs: Vec<mpsc::Sender<RelayJob>>,
+    relays: Vec<JoinHandle<()>>,
+    router: Router,
+    shared: Arc<RouterShared>,
+    metrics: Arc<Metrics>,
+}
+
+impl RouterBackend {
+    /// Route over `children` with `policy`; reweigh health every
+    /// `reweigh_every` completions.
+    pub fn start(
+        children: Vec<Box<dyn Backend>>,
+        policy: RoutePolicy,
+        reweigh_every: u64,
+    ) -> Self {
+        assert!(!children.is_empty(), "a replicate node needs at least one child");
+        let n = children.len();
+        let health = HealthMonitor::new(n, HealthConfig::default());
+        let initial_weights = health.traffic_weights();
+        let shared = Arc::new(RouterShared {
+            health: Mutex::new(health),
+            weights: Mutex::new(initial_weights),
+            loads: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            completed: AtomicU64::new(0),
+            reweigh_every: reweigh_every.max(1),
+        });
+        let metrics = Metrics::new();
+        let mut txs = Vec::with_capacity(n);
+        let mut relays = Vec::with_capacity(n);
+        for idx in 0..n {
+            let (tx, rx) = mpsc::channel::<RelayJob>();
+            txs.push(tx);
+            let shared = shared.clone();
+            let metrics = metrics.clone();
+            let relay = std::thread::Builder::new()
+                .name(format!("raca-route-{idx}"))
+                .spawn(move || relay_loop(idx, rx, shared, metrics))
+                .expect("spawning router relay thread");
+            relays.push(relay);
+        }
+        Self { children, txs, relays, router: Router::new(policy), shared, metrics }
+    }
+
+    pub fn num_children(&self) -> usize {
+        self.children.len()
+    }
+
+    /// Child indices still eligible for routing.
+    pub fn healthy(&self) -> Vec<ChipId> {
+        self.shared.health.lock().unwrap().healthy()
+    }
+
+    /// Current health-driven router weights.
+    pub fn traffic_weights(&self) -> Vec<f64> {
+        self.shared.weights.lock().unwrap().clone()
+    }
+}
+
+impl Backend for RouterBackend {
+    fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        let healthy = self.shared.health.lock().unwrap().healthy();
+        let loads: Vec<u64> = self.shared.loads.iter().map(|l| l.load(Relaxed)).collect();
+        let weights = self.shared.weights.lock().unwrap().clone();
+        let child = self
+            .router
+            .pick(&healthy, &loads, &weights)
+            .ok_or_else(|| anyhow!("no healthy children left under the router"))?;
+        let id = req.id;
+        let label = req.label;
+        let max_trials = req.max_trials;
+        let submitted = Instant::now();
+        let inner = self.children[child].submit(req)?;
+        self.metrics.requests_admitted.fetch_add(1, Relaxed);
+        self.shared.loads[child].fetch_add(1, Relaxed);
+        let (reply, rx) = mpsc::channel();
+        if self.txs[child]
+            .send(RelayJob { rx: inner.rx, reply, label, max_trials, submitted })
+            .is_err()
+        {
+            self.shared.loads[child].fetch_sub(1, Relaxed);
+            return Err(anyhow!("router relay {child} is gone"));
+        }
+        Ok(Ticket::new(id, rx))
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    fn shutdown(self: Box<Self>) {
+        drop(self);
+    }
+}
+
+impl Drop for RouterBackend {
+    fn drop(&mut self) {
+        // Close relay inboxes first; the relays drain their in-flight
+        // tickets (the children are still alive as fields) and exit, then
+        // each child tears its own workers down on drop.
+        self.txs.clear();
+        for r in self.relays.drain(..) {
+            let _ = r.join();
+        }
+    }
+}
+
+fn relay_loop(
+    child: usize,
+    rx: mpsc::Receiver<RelayJob>,
+    shared: Arc<RouterShared>,
+    metrics: Arc<Metrics>,
+) {
+    while let Ok(job) = rx.recv() {
+        let resp = match job.rx.recv() {
+            Ok(r) => r,
+            Err(_) => {
+                // The child died with this request in flight; dropping
+                // `job.reply` surfaces the loss to the caller's wait().
+                shared.loads[child].fetch_sub(1, Relaxed);
+                continue;
+            }
+        };
+        shared.loads[child].fetch_sub(1, Relaxed);
+        let latency = job.submitted.elapsed();
+        let abstained =
+            resp.outcome.trials > 0 && resp.outcome.abstentions == resp.outcome.trials;
+        let correct = job.label.map(|l| resp.prediction == l);
+        metrics.trials_executed.fetch_add(resp.trials_used as u64, Relaxed);
+        metrics
+            .trials_saved
+            .fetch_add(job.max_trials.saturating_sub(resp.trials_used) as u64, Relaxed);
+        metrics.requests_completed.fetch_add(1, Relaxed);
+        metrics.record_latency(latency);
+        if job.max_trials > 0 {
+            // The child-reported latency is the service-time signal; the
+            // relay's own `latency` additionally includes router queue
+            // wait and is what this backend's metrics report.
+            let service_us = resp.latency.as_micros() as u64;
+            shared.health.lock().unwrap().record(child, correct, abstained, service_us);
+        }
+        let _ = job.reply.send(resp);
+        let done = shared.completed.fetch_add(1, Relaxed) + 1;
+        if done % shared.reweigh_every == 0 {
+            let steer = shared.health.lock().unwrap().steer();
+            *shared.weights.lock().unwrap() = steer.weights;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModelSpec;
+
+    fn parse(s: &str) -> Topology {
+        Topology::parse(s).unwrap()
+    }
+
+    #[test]
+    fn grammar_round_trips_through_display() {
+        for spec in [
+            "die",
+            "die:physical",
+            "die:pjrt",
+            "pipeline:3",
+            "pipeline:4:b16",
+            "2x(die)",
+            "8x(die)@weighted",
+            "2x(pipeline:3)",
+            "3x(pipeline:2:b4)@least-loaded",
+            "2x(2x(die)@weighted)",
+        ] {
+            let t = parse(spec);
+            assert_eq!(t.to_string(), spec, "canonical spelling");
+            assert_eq!(parse(&t.to_string()), t, "round trip");
+        }
+    }
+
+    #[test]
+    fn parse_is_case_insensitive_and_whitespace_tolerant() {
+        assert_eq!(parse("2X(PIPELINE:3)"), parse("2x(pipeline:3)"));
+        assert_eq!(parse("Die:Physical"), parse("die:physical"));
+        assert_eq!(parse(" 4x( die )@Weighted "), parse("4x(die)@weighted"));
+        assert_eq!(parse("2xdie"), parse("2x(die)"));
+        assert_eq!(parse("2x4x(die)").dies(), 8);
+    }
+
+    #[test]
+    fn parse_errors_name_the_valid_spellings() {
+        let e = format!("{:#}", Topology::parse("blob").unwrap_err());
+        assert!(e.contains("die") && e.contains("pipeline"), "unhelpful: {e}");
+        let e = format!("{:#}", Topology::parse("2x(die)@fastest").unwrap_err());
+        assert!(e.contains("round-robin"), "unhelpful: {e}");
+        let e = format!("{:#}", Topology::parse("die:gpu").unwrap_err());
+        assert!(e.contains("native") && e.contains("physical"), "unhelpful: {e}");
+        assert!(Topology::parse("pipeline").is_err());
+        assert!(Topology::parse("2x(die").is_err());
+        assert!(Topology::parse("die die").is_err());
+    }
+
+    #[test]
+    fn zero_sized_nodes_are_rejected() {
+        assert!(Topology::parse("0x(die)").is_err());
+        assert!(Topology::parse("pipeline:0").is_err());
+        assert!(Topology::parse("pipeline:2:b0").is_err());
+        assert!(Topology::parse("2x(0x(die))").is_err());
+        // Programmatically built trees hit the same validation in compile.
+        let t = Topology::Replicate {
+            n: 0,
+            policy: RoutePolicy::RoundRobin,
+            child: Box::new(Topology::Die { engine: EngineSel::Native }),
+        };
+        assert!(DeployPlan::compile(&t).is_err());
+    }
+
+    #[test]
+    fn compile_numbers_every_die_once() {
+        let plan = DeployPlan::compile(&parse("2x(pipeline:3)")).unwrap();
+        assert_eq!(plan.total_dies, 6);
+        let PlanNode::Replicate { children, .. } = &plan.root else {
+            panic!("expected replicate root")
+        };
+        let bases: Vec<usize> = children
+            .iter()
+            .map(|c| match c {
+                PlanNode::Pipeline { chip_base, shards: 3, .. } => *chip_base,
+                other => panic!("expected 3-die pipeline, got {other:?}"),
+            })
+            .collect();
+        assert_eq!(bases, vec![0, 3]);
+
+        let plan = DeployPlan::compile(&parse("2x(2x(die))")).unwrap();
+        assert_eq!(plan.total_dies, 4);
+        let desc = plan.describe(&ModelSpec::paper());
+        assert_eq!(desc.matches("die [chip").count(), 4, "{desc}");
+    }
+
+    #[test]
+    fn describe_renders_shard_detail() {
+        let plan = DeployPlan::compile(&parse("2x(pipeline:2)")).unwrap();
+        let desc = plan.describe(&ModelSpec::paper());
+        assert!(desc.contains("replicate × 2"), "{desc}");
+        assert!(desc.contains("chips 0..2") && desc.contains("chips 2..4"), "{desc}");
+        assert!(desc.contains("layer ranges"), "{desc}");
+    }
+
+    #[test]
+    fn router_backend_spreads_load_and_tracks_health() {
+        let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 5);
+        let opts = BuildOptions::default();
+        let children: Vec<Box<dyn Backend>> = (0..2)
+            .map(|_| build(&parse("die"), &w, &opts).unwrap())
+            .collect();
+        let b = RouterBackend::start(children, RoutePolicy::RoundRobin, 8);
+        assert_eq!(b.num_children(), 2);
+        let tickets: Vec<_> = (0..10u64)
+            .map(|i| {
+                let img = vec![(i % 5) as f32 / 5.0; 784];
+                b.submit(InferRequest::new(i, img).with_budget(4, 0.0).with_label(0)).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            assert_eq!(b.wait(t).unwrap().trials_used, 4);
+        }
+        let m = b.metrics();
+        assert_eq!(m.requests_completed, 10);
+        assert_eq!(m.trials_executed, 40);
+        assert_eq!(b.healthy(), vec![0, 1]);
+        assert_eq!(b.traffic_weights().len(), 2);
+        // Labeled probes reached the health monitor.
+        let h = b.shared.health.lock().unwrap();
+        let labeled: usize = (0..2).map(|c| h.chip(c).labeled_samples()).sum();
+        assert_eq!(labeled, 10);
+    }
+
+    #[test]
+    fn replicated_pipelines_serve_and_complete() {
+        let w = Weights::random(ModelSpec::new(vec![784, 16, 12, 10]), 11);
+        let b = build(&parse("2x(pipeline:3)"), &w, &BuildOptions::default()).unwrap();
+        let tickets: Vec<_> = (0..8u64)
+            .map(|i| {
+                let img = vec![(i % 3) as f32 / 3.0; 784];
+                b.submit(InferRequest::new(i, img).with_budget(6, 0.0)).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            assert_eq!(b.wait(t).unwrap().trials_used, 6);
+        }
+        assert_eq!(b.metrics().requests_completed, 8);
+        b.shutdown();
+    }
+
+    #[test]
+    fn fused_replicate_matches_the_flat_fleet_programming() {
+        // `3x(die)` at σ>0 must program the same three dies as the flat
+        // PR-1 fleet at the same seed — the compatibility mapping is
+        // bit-exact, not just shape-equivalent.
+        let w = Weights::random(ModelSpec::new(vec![784, 10, 10]), 4);
+        let variation = VariationModel::lognormal(0.08);
+        let flat = Fleet::program_native(&w, 3, &variation, RoutePolicy::RoundRobin, 99);
+        let spanned = Fleet::program_native_span(&w, 3, 0, &variation, RoutePolicy::RoundRobin, 99);
+        for (a, b) in flat.chips.iter().zip(&spanned.chips) {
+            assert_eq!(a.engine.weights.mats, b.engine.weights.mats);
+        }
+        // A second replica group (chips 3..6) programs different silicon.
+        let shifted = Fleet::program_native_span(&w, 3, 3, &variation, RoutePolicy::RoundRobin, 99);
+        assert_ne!(
+            flat.chips[0].engine.weights.mats,
+            shifted.chips[0].engine.weights.mats
+        );
+    }
+}

@@ -89,7 +89,11 @@ impl ReplicatedFleetBackend {
     /// spawn one worker thread per die.  `cal` supplies the held-out set
     /// + calibrator that drifting dies recalibrate against live; without
     /// it, drift flags are still raised but recalibration is skipped.
-    pub fn start<E: TrialEngine + 'static>(
+    ///
+    /// Crate-private: deployments are built by [`crate::serve::plan`]
+    /// (external callers with a hand-programmed fleet go through
+    /// [`crate::serve::plan::lift_fleet`]).
+    pub(crate) fn start<E: TrialEngine + 'static>(
         fleet: Fleet<E>,
         cal: Option<(Dataset, Calibrator)>,
         opts: ReplicatedOptions,
@@ -284,18 +288,11 @@ fn worker_loop<E: TrialEngine>(
         // recalibration, refresh the router's traffic weights.
         let done = shared.completed.fetch_add(1, Relaxed) + 1;
         if done % reweigh_every == 0 {
-            let mut h = shared.health.lock().unwrap();
-            for c in h.evictable() {
-                // Never evict the last healthy die: a degraded fleet that
-                // still answers beats a submit path that hard-errors.
-                if h.healthy().len() > 1 {
-                    h.evict(c);
-                }
-            }
-            for c in h.drifting() {
+            let steer = shared.health.lock().unwrap().steer();
+            for c in steer.drifting {
                 shared.recal[c].store(true, Relaxed);
             }
-            *shared.weights.lock().unwrap() = h.traffic_weights();
+            *shared.weights.lock().unwrap() = steer.weights;
         }
     }
 }

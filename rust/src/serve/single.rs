@@ -19,7 +19,11 @@ pub struct SingleChipBackend {
 
 impl SingleChipBackend {
     /// Spawn the scheduler loop over `engine`.
-    pub fn start<E: TrialRunner + Send + 'static>(engine: E, cfg: SchedulerConfig) -> Self {
+    ///
+    /// Crate-private: deployments are built by [`crate::serve::plan`]
+    /// (callers that already hold an engine — e.g. a PJRT handle — go
+    /// through [`crate::serve::plan::single_die`]).
+    pub(crate) fn start<E: TrialRunner + Send + 'static>(engine: E, cfg: SchedulerConfig) -> Self {
         Self { server: Server::start(engine, cfg) }
     }
 }

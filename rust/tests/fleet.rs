@@ -14,7 +14,7 @@ use raca::nn::{ModelSpec, TrainConfig, Weights};
 /// Small trained net shared across tests (accuracy matters for (b)).
 fn trained() -> Weights {
     let ds = synth::generate(160, 0x7A);
-    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0x7B };
+    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0x7B, minibatch: 1 };
     raca::nn::train(&ds, ModelSpec::new(vec![784, 16, 10]), &cfg)
 }
 
@@ -129,13 +129,14 @@ fn calibrated_sigma10_fleet_is_no_worse_than_uncalibrated() {
 #[test]
 fn replicated_backend_spreads_a_served_workload_and_health_tracks_it() {
     // `Fleet::serve` is gone (PR-2): request-level serving goes through
-    // the Backend trait, with one worker thread per chip.
-    use raca::serve::{Backend, InferRequest as Req, ReplicatedFleetBackend, ReplicatedOptions};
+    // the Backend trait, with one worker thread per chip — reached via
+    // `serve::plan::lift_fleet` since the topology redesign (PR-3).
+    use raca::serve::{plan, Backend, InferRequest as Req, ReplicatedOptions};
 
     let w = trained();
     let fleet = farm(&w, 3, 0.05, 99);
     let batch = synth::generate(30, 0xF00D);
-    let backend = ReplicatedFleetBackend::start(fleet, None, ReplicatedOptions::default());
+    let backend = plan::lift_fleet(fleet, None, ReplicatedOptions::default());
     let tickets: Vec<_> = (0..batch.len())
         .map(|i| {
             backend

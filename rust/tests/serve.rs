@@ -1,6 +1,7 @@
-//! Serving-API integration: the `Backend` trait end-to-end over all three
-//! implementations, and the sharded-pipeline bit-parity contract against
-//! `arch::{Floorplan, ShardPlan}`.
+//! Serving-API integration: deployment topologies end-to-end through
+//! `serve::plan` (the only way to construct backends), the sharded
+//! pipeline's bit-parity contract against `arch::{Floorplan, ShardPlan}`,
+//! and the `--topology` grammar.
 //!
 //! Everything is artifact-free (models are `Weights::random` or trained
 //! natively on synthetic digits), so the suite runs on a fresh checkout.
@@ -8,21 +9,20 @@
 use std::sync::Arc;
 
 use raca::arch::{Floorplan, ShardPlan};
-use raca::coordinator::SchedulerConfig;
 use raca::dataset::synth;
 use raca::device::VariationModel;
 use raca::engine::{NativeEngine, TrialParams};
 use raca::fleet::{Calibrator, Fleet, RoutePolicy};
 use raca::nn::{ModelSpec, TrainConfig, Weights};
 use raca::serve::{
-    trial_stream_base, Backend, BackendKind, InferRequest, PipelineOptions,
-    PipelinedFleetBackend, ReplicatedFleetBackend, ReplicatedOptions, SingleChipBackend,
+    build, trial_stream_base, Backend, BackendKind, BuildOptions, DeployPlan, InferRequest,
+    Topology,
 };
 
 /// Small trained net shared across tests (3 layers, so it shards 2 or 3 ways).
 fn trained() -> Weights {
     let ds = synth::generate(160, 0x7A);
-    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0x7B };
+    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0x7B, minibatch: 1 };
     raca::nn::train(&ds, ModelSpec::new(vec![784, 20, 12, 10]), &cfg)
 }
 
@@ -30,58 +30,41 @@ fn image(i: u64) -> Vec<f32> {
     (0..784).map(|j| ((j as u64 * 7 + i * 131) % 17) as f32 / 17.0).collect()
 }
 
-// ---- the tentpole contract: one trait, three deployment shapes ------------
+fn topo(spec: &str) -> Topology {
+    Topology::parse(spec).unwrap()
+}
+
+// ---- the tentpole contract: one trait, any deployment tree ----------------
 
 #[test]
-fn every_backend_serves_the_same_workload() {
+fn every_topology_serves_the_same_workload() {
     let w = trained();
     let seed = 0x5EED5;
-    let backends: Vec<(&str, Box<dyn Backend>)> = vec![
-        ("single", {
-            let mut cfg = SchedulerConfig::default();
-            cfg.batch_size = 16;
-            Box::new(SingleChipBackend::start(
-                NativeEngine::new(Arc::new(w.clone()), seed),
-                cfg,
-            ))
-        }),
-        ("replicated", {
-            let fleet = Fleet::program_native(
-                &w,
-                3,
-                &VariationModel::lognormal(0.05),
-                RoutePolicy::RoundRobin,
-                seed,
-            );
-            Box::new(ReplicatedFleetBackend::start(
-                fleet,
-                None,
-                ReplicatedOptions::default(),
-            ))
-        }),
-        ("pipelined", {
-            Box::new(
-                PipelinedFleetBackend::start(
-                    &w,
-                    PipelineOptions { dies: 3, seed, ..Default::default() },
-                )
-                .unwrap(),
-            )
-        }),
-    ];
-    for (name, b) in backends {
+    // Leaves, the fused combinator, and a replicas-of-pipelines tree —
+    // all through the same compile-and-build path.
+    for spec in ["die", "3x(die)", "pipeline:3", "2x(pipeline:2)", "2x(2x(die))@weighted"] {
+        let opts = BuildOptions {
+            seed,
+            variation: if spec == "3x(die)" {
+                Some(VariationModel::lognormal(0.05))
+            } else {
+                None
+            },
+            ..Default::default()
+        };
+        let b = build(&topo(spec), &w, &opts).unwrap();
         let tickets: Vec<_> = (0..12u64)
             .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(6, 0.0)).unwrap())
             .collect();
         for t in tickets {
             let r = b.wait(t).unwrap();
-            assert_eq!(r.trials_used, 6, "[{name}] wrong trial spend");
-            assert!((-1..10).contains(&r.prediction), "[{name}] bad prediction");
+            assert_eq!(r.trials_used, 6, "[{spec}] wrong trial spend");
+            assert!((-1..10).contains(&r.prediction), "[{spec}] bad prediction");
             assert_eq!(r.outcome.trials, 6);
         }
         let m = b.metrics();
-        assert_eq!(m.requests_completed, 12, "[{name}] completion count");
-        assert!(m.trials_executed >= 72, "[{name}] trial count {m}");
+        assert_eq!(m.requests_completed, 12, "[{spec}] completion count");
+        assert!(m.trials_executed >= 72, "[{spec}] trial count {m}");
         b.shutdown();
     }
 }
@@ -108,21 +91,17 @@ fn shard_plan_agrees_with_the_floorplan() {
     }
 }
 
-/// The acceptance bar: a 3-layer model split across 2 and 3 dies produces
-/// bit-identical votes to the unsharded `NativeEngine` at equal
-/// `(seed, trial_idx)`.
+/// The PR-2 acceptance bar, preserved: a 3-layer model split across 2 and
+/// 3 dies produces bit-identical votes to the unsharded `NativeEngine` at
+/// equal `(seed, trial_idx)`.
 #[test]
 fn pipelined_votes_are_bit_identical_to_unsharded_native() {
     let w = trained();
     let seed = 0xACA5;
     let p = TrialParams::default();
     let reference = NativeEngine::new(Arc::new(w.clone()), seed);
-    for dies in [2usize, 3] {
-        let b = PipelinedFleetBackend::start(
-            &w,
-            PipelineOptions { dies, seed, params: p, ..Default::default() },
-        )
-        .unwrap();
+    for spec in ["pipeline:2", "pipeline:3", "pipeline:3:b1", "pipeline:3:b64"] {
+        let b = build(&topo(spec), &w, &BuildOptions { seed, ..Default::default() }).unwrap();
         let tickets: Vec<_> = (0..8u64)
             .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(24, 0.0)).unwrap())
             .collect();
@@ -136,7 +115,7 @@ fn pipelined_votes_are_bit_identical_to_unsharded_native() {
             );
             assert_eq!(
                 got.outcome.counts, want.counts,
-                "{dies}-die pipeline diverged from the unsharded engine on request {i}"
+                "[{spec}] diverged from the unsharded engine on request {i}"
             );
             assert_eq!(got.outcome.abstentions, want.abstentions);
             assert_eq!(got.prediction, want.prediction());
@@ -145,14 +124,46 @@ fn pipelined_votes_are_bit_identical_to_unsharded_native() {
     }
 }
 
+/// The tentpole parity bar: with `variation: None`, a `2x(pipeline:3)`
+/// tree answers with votes bit-identical to the single-chip reference —
+/// the unsharded `NativeEngine` evaluated at equal `(seed, trial_idx)`,
+/// i.e. `trial_stream_base(seed, request id) + t` — no matter which
+/// replica the router picks, because every leaf of the tree shares the
+/// deployment seed's trial stream.
+#[test]
+fn replicated_pipeline_votes_match_the_single_chip_reference() {
+    let w = trained();
+    let seed = 0x70B0;
+    let p = TrialParams::default();
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    let t = topo("2x(pipeline:3)");
+    assert_eq!(t.dies(), 6);
+    let b = build(&t, &w, &BuildOptions { seed, ..Default::default() }).unwrap();
+    // More requests than replicas, so both pipelines definitely serve.
+    let tickets: Vec<_> = (0..10u64)
+        .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(24, 0.0)).unwrap())
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let got = b.wait(t).unwrap();
+        let want = reference.infer(&image(i as u64), p, 24, trial_stream_base(seed, i as u64));
+        assert_eq!(
+            got.outcome.counts, want.counts,
+            "2x(pipeline:3) diverged from the single-chip reference on request {i}"
+        );
+        assert_eq!(got.prediction, want.prediction());
+    }
+    assert_eq!(b.metrics().requests_completed, 10);
+    b.shutdown();
+}
+
 #[test]
 fn pipelined_variation_draws_differ_per_die_but_stay_deterministic() {
     // Random weights give near-tied logits, so vote patterns are a
     // sensitive fingerprint of the programmed conductances.
     let w = Weights::random(ModelSpec::new(vec![784, 16, 12, 10]), 3);
     let votes = |seed: u64, variation: Option<VariationModel>| -> Vec<Vec<u64>> {
-        let opts = PipelineOptions { dies: 2, seed, variation, ..Default::default() };
-        let b = PipelinedFleetBackend::start(&w, opts).unwrap();
+        let opts = BuildOptions { seed, variation, ..Default::default() };
+        let b = build(&topo("pipeline:2"), &w, &opts).unwrap();
         let tickets: Vec<_> = (0..8u64)
             .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(24, 0.0)).unwrap())
             .collect();
@@ -167,26 +178,72 @@ fn pipelined_variation_draws_differ_per_die_but_stay_deterministic() {
     assert_ne!(votes(42, varied), votes(42, None));
 }
 
+// ---- the --topology grammar ----------------------------------------------
+
+#[test]
+fn topology_grammar_round_trips() {
+    for spec in [
+        "die",
+        "die:physical",
+        "pipeline:3",
+        "pipeline:4:b16",
+        "2x(die)",
+        "8x(die)@weighted",
+        "2x(pipeline:3)",
+        "2x(2x(die)@weighted)",
+    ] {
+        let t = topo(spec);
+        assert_eq!(t.to_string(), spec, "canonical spelling of '{spec}'");
+        assert_eq!(topo(&t.to_string()), t, "round trip of '{spec}'");
+    }
+    // Case-insensitive spellings normalize to the same trees.
+    assert_eq!(topo("2X(PIPELINE:3)"), topo("2x(pipeline:3)"));
+    assert_eq!(topo("4x(Die)@Weighted"), topo("4x(die)@weighted"));
+    // The legacy BackendKind spellings are sugar over canonical trees.
+    assert_eq!(
+        BackendKind::parse("Replicated").unwrap().to_topology(4, 2, RoutePolicy::RoundRobin),
+        topo("4x(die)")
+    );
+    assert_eq!(
+        BackendKind::parse("pipelined").unwrap().to_topology(4, 3, RoutePolicy::RoundRobin),
+        topo("pipeline:3")
+    );
+}
+
+#[test]
+fn topology_compile_allocates_disjoint_chip_ids() {
+    let plan = DeployPlan::compile(&topo("2x(pipeline:3)")).unwrap();
+    assert_eq!(plan.total_dies, 6);
+    let desc = plan.describe(&ModelSpec::new(vec![784, 20, 12, 10]));
+    assert!(desc.contains("chips 0..3") && desc.contains("chips 3..6"), "{desc}");
+}
+
 // ---- validation: clear errors instead of downstream panics ----------------
 
 #[test]
 fn oversharding_and_zero_configs_error_clearly() {
     let w = trained(); // 3 layers
-    let err = PipelinedFleetBackend::start(
-        &w,
-        PipelineOptions { dies: 4, ..Default::default() },
-    )
-    .unwrap_err();
+    let err = build(&topo("pipeline:4"), &w, &BuildOptions::default()).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("3-layer") && msg.contains("4 dies"), "unhelpful error: {msg}");
 
+    // Zero-sized nodes die at parse/validation time with the spellings
+    // named, like the zero-sized fleet checks.
+    assert!(Topology::parse("0x(die)").is_err());
+    assert!(Topology::parse("pipeline:0").is_err());
+    assert!(Topology::parse("pipeline:2:b0").is_err());
+    let e = format!("{:#}", Topology::parse("warp:3").unwrap_err());
+    assert!(e.contains("die") && e.contains("pipeline"), "unhelpful error: {e}");
+
     assert!(raca::config::RunConfig::parse(r#"{"fleet": {"chips": 0}}"#).is_err());
     assert!(raca::config::RunConfig::parse(r#"{"serve": {"shards": 0}}"#).is_err());
+    assert!(raca::config::RunConfig::parse(r#"{"serve": {"topology": "0x(die)"}}"#).is_err());
     let c = raca::config::RunConfig::parse(
         r#"{"serve": {"backend": "pipelined", "shards": 2}}"#,
     )
     .unwrap();
     assert_eq!(c.serve.backend, BackendKind::Pipelined);
+    assert_eq!(c.serve.tree(RoutePolicy::RoundRobin), topo("pipeline:2"));
 }
 
 // ---- replicated: router spread, early stop, labeled health ----------------
@@ -194,20 +251,15 @@ fn oversharding_and_zero_configs_error_clearly() {
 #[test]
 fn replicated_backend_spreads_load_and_tracks_health() {
     let w = trained();
-    let fleet = Fleet::program_native(
-        &w,
-        3,
-        &VariationModel::lognormal(0.05),
-        RoutePolicy::RoundRobin,
-        99,
-    );
     let batch = synth::generate(30, 0xF00D);
     let cal = synth::generate(12, 0xCA1);
-    let b = ReplicatedFleetBackend::start(
-        fleet,
-        Some((cal, Calibrator::quick(3))),
-        ReplicatedOptions::default(),
-    );
+    let opts = BuildOptions {
+        seed: 99,
+        variation: Some(VariationModel::lognormal(0.05)),
+        calibration: Some((cal, Calibrator::quick(3))),
+        ..Default::default()
+    };
+    let b = build(&topo("3x(die)"), &w, &opts).unwrap();
     let tickets: Vec<_> = (0..batch.len())
         .map(|i| {
             b.submit(
@@ -221,13 +273,10 @@ fn replicated_backend_spreads_load_and_tracks_health() {
     for t in tickets {
         assert_eq!(b.wait(t).unwrap().trials_used, 5);
     }
-    let snap = b.snapshot();
-    assert_eq!(snap.aggregate().served, 30);
-    assert_eq!(snap.aggregate().trials, 150);
-    assert_eq!(snap.load_imbalance(), 0, "round-robin must balance: {snap}");
-    // Labeled traffic reached the monitor on every chip.
-    assert_eq!(snap.aggregate().labeled, 30);
-    assert_eq!(b.healthy().len(), 3);
+    let m = b.metrics();
+    assert_eq!(m.requests_completed, 30);
+    assert_eq!(m.trials_executed, 150);
+    b.shutdown();
 }
 
 #[test]
@@ -239,18 +288,46 @@ fn replicated_early_stop_saves_trials() {
     for row in 0..9 {
         w.mats[last][row * 10 + 3] = 4.0;
     }
-    let fleet = Fleet::program_native(
+    let b = build(
+        &topo("2x(die)@least-loaded"),
         &w,
-        2,
-        &VariationModel::default(),
-        RoutePolicy::LeastLoaded,
-        7,
-    );
-    let b = ReplicatedFleetBackend::start(fleet, None, ReplicatedOptions::default());
+        &BuildOptions { seed: 7, ..Default::default() },
+    )
+    .unwrap();
     let r = b
         .classify(InferRequest::new(1, vec![0.5; 784]).with_budget(300, 0.95))
         .unwrap();
     assert_eq!(r.prediction, 3);
     assert!(r.trials_used < 300, "expected early stop, used {}", r.trials_used);
     assert!(b.metrics().trials_saved > 0);
+    b.shutdown();
+}
+
+/// `lift_fleet` is the one externally-programmed path into the topology
+/// runtime (`raca fleet` programs + grid-search-calibrates first).
+#[test]
+fn lifted_fleet_serves_with_snapshots() {
+    let w = trained();
+    let fleet = Fleet::program_native(
+        &w,
+        3,
+        &VariationModel::lognormal(0.05),
+        RoutePolicy::RoundRobin,
+        99,
+    );
+    let b = raca::serve::plan::lift_fleet(
+        fleet,
+        None,
+        raca::serve::ReplicatedOptions::default(),
+    );
+    let tickets: Vec<_> = (0..9u64)
+        .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(4, 0.0)).unwrap())
+        .collect();
+    for t in tickets {
+        assert_eq!(b.wait(t).unwrap().trials_used, 4);
+    }
+    let snap = b.snapshot();
+    assert_eq!(snap.aggregate().served, 9);
+    assert_eq!(snap.load_imbalance(), 0, "round-robin must balance: {snap}");
+    assert_eq!(b.healthy().len(), 3);
 }
