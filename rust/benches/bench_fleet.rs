@@ -17,9 +17,14 @@
 //!   pipeline because replication halves the bottleneck stage's load
 //!   instead of adding more underutilized stages.
 //!
+//! * `remote:die` — the same single die served over a loopback listener
+//!   (the `serve::net` wire layer): a latency lane, catching socket-path
+//!   regressions (frame codec bloat, missing TCP_NODELAY, relay stalls).
+//!
 //! `--smoke` runs a CI-sized workload and *asserts* the acceptance bars:
-//! `pipeline:4` ≥ 2× the single-die trial throughput, and
-//! `2x(pipeline:2)` ≥ `pipeline:4` at the same 4 dies.
+//! `pipeline:4` ≥ 2× the single-die trial throughput,
+//! `2x(pipeline:2)` ≥ `pipeline:4` at the same 4 dies, and loopback
+//! `remote:die` within 2× the local single-die request latency.
 
 use std::time::Instant;
 
@@ -104,6 +109,48 @@ fn main() {
         replicated_pipes / single_tps.max(1e-9)
     );
 
+    // Wire lane: the same die, reached through a loopback listener via
+    // the remote:<addr> topology leaf.  Latency (not throughput): mean
+    // submit→wait wall time of sequential requests, remote vs local —
+    // the socket, codec and relay are the only difference.
+    let mean_latency = |b: &dyn Backend, reqs: usize, lat_trials: u32| -> f64 {
+        let mut total = 0.0;
+        for i in 0..reqs {
+            let t0 = Instant::now();
+            let r = b
+                .classify(
+                    InferRequest::new(i as u64, images[i % images.len()].clone())
+                        .with_budget(lat_trials, 0.0),
+                )
+                .expect("classify");
+            assert_eq!(r.trials_used, lat_trials);
+            total += t0.elapsed().as_secs_f64();
+        }
+        total / reqs.max(1) as f64
+    };
+    let (lat_reqs, lat_trials) = if smoke { (24usize, 48u32) } else { (64, 48) };
+    let die = |s: u64| {
+        let opts = BuildOptions { seed: s, ..Default::default() };
+        build(&Topology::parse("die").unwrap(), &w, &opts).expect("building die")
+    };
+    let local = die(seed);
+    let _ = mean_latency(local.as_ref(), 8, lat_trials); // warmup
+    let local_lat = mean_latency(local.as_ref(), lat_reqs, lat_trials);
+    local.shutdown();
+
+    let server = raca::serve::net::serve(die(seed), "127.0.0.1:0").expect("loopback listener");
+    let remote_topo = Topology::parse(&format!("remote:{}", server.addr())).unwrap();
+    let remote = build(&remote_topo, &w, &BuildOptions::default()).expect("remote backend");
+    let _ = mean_latency(remote.as_ref(), 8, lat_trials); // warmup
+    let remote_lat = mean_latency(remote.as_ref(), lat_reqs, lat_trials);
+    remote.shutdown();
+    let lat_ratio = remote_lat / local_lat.max(1e-12);
+    println!(
+        "  remote:die loopback wire       : {:>9.0} µs/req vs {:.0} µs/req local ({lat_ratio:.2}x, {lat_trials} trials/req)",
+        remote_lat * 1e6,
+        local_lat * 1e6,
+    );
+
     if smoke {
         let ratio = pipelined_at_4 / single_tps.max(1e-9);
         assert!(
@@ -117,5 +164,12 @@ fn main() {
             "--smoke: 2x(pipeline:2) must be ≥ pipeline:4 at equal dies, got {rp:.2}x"
         );
         println!("smoke OK: 2x(pipeline:2) = {rp:.2}x pipeline:4 at 4 dies (≥ 1x required)");
+        assert!(
+            lat_ratio <= 2.0,
+            "--smoke: loopback remote:die must stay within 2x local single-die latency, got {lat_ratio:.2}x"
+        );
+        println!(
+            "smoke OK: remote:die loopback = {lat_ratio:.2}x local latency (≤ 2x required)"
+        );
     }
 }

@@ -198,7 +198,10 @@ impl RunConfig {
         if let Some(s) = j.get("serve") {
             check_keys(
                 s,
-                &["backend", "topology", "chips", "shards", "depth", "batch", "seed"],
+                &[
+                    "backend", "topology", "chips", "shards", "depth", "batch",
+                    "probe_rate", "listen", "seed",
+                ],
                 "serve",
             )?;
             if let Some(b) = s.get("backend").and_then(Json::as_str) {
@@ -228,6 +231,12 @@ impl RunConfig {
             if let Some(v) = s.get("batch").and_then(Json::as_usize) {
                 cfg.serve.batch = v;
             }
+            if let Some(v) = s.get("probe_rate").and_then(Json::as_f64) {
+                cfg.serve.probe_rate = v;
+            }
+            if let Some(v) = s.get("listen").and_then(Json::as_str) {
+                cfg.serve.listen = Some(v.to_string());
+            }
             if let Some(v) = s.get("seed").and_then(Json::as_usize) {
                 cfg.serve.seed = v as u64;
             }
@@ -243,6 +252,16 @@ impl RunConfig {
             "config: serve.shards must be at least 1 (and at most the model's layer count)"
         );
         ensure!(cfg.serve.batch > 0, "config: serve.batch must be at least 1");
+        ensure!(
+            (0.0..=1.0).contains(&cfg.serve.probe_rate),
+            "config: serve.probe_rate must be in [0, 1] (probes per caller request)"
+        );
+        if let Some(l) = &cfg.serve.listen {
+            ensure!(
+                l.contains(':'),
+                "config: serve.listen must be a <host:port> bind address"
+            );
+        }
         cfg.scheduler.params = cfg.trial;
         Ok(cfg)
     }
@@ -301,7 +320,8 @@ mod tests {
     fn serve_section_parses() {
         let c = RunConfig::parse(
             r#"{"serve": {"backend": "pipelined", "shards": 3, "chips": 6,
-                          "depth": 64, "batch": 4, "seed": 12}}"#,
+                          "depth": 64, "batch": 4, "probe_rate": 0.1,
+                          "listen": "0.0.0.0:7433", "seed": 12}}"#,
         )
         .unwrap();
         assert_eq!(c.serve.backend, crate::serve::BackendKind::Pipelined);
@@ -309,12 +329,32 @@ mod tests {
         assert_eq!(c.serve.chips, 6);
         assert_eq!(c.serve.depth, 64);
         assert_eq!(c.serve.batch, 4);
+        assert!((c.serve.probe_rate - 0.1).abs() < 1e-12);
+        assert_eq!(c.serve.listen.as_deref(), Some("0.0.0.0:7433"));
         assert_eq!(c.serve.seed, 12);
         // Untouched keys keep their defaults.
         let d = RunConfig::parse(r#"{"serve": {"backend": "replicated"}}"#).unwrap();
         assert_eq!(d.serve.chips, 4);
         assert_eq!(d.serve.shards, 2);
         assert_eq!(d.serve.topology, None);
+        assert_eq!(d.serve.probe_rate, 0.0);
+        assert_eq!(d.serve.listen, None);
+        // Remote leaves parse like any other topology node.
+        let r = RunConfig::parse(
+            r#"{"serve": {"topology": "(remote:a:7433, remote:b:7433)@weighted"}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r.serve.topology.unwrap().to_string(),
+            "(remote:a:7433, remote:b:7433)@weighted"
+        );
+        // Out-of-range knobs are rejected with the key named.
+        let e = RunConfig::parse(r#"{"serve": {"probe_rate": 1.5}}"#).unwrap_err();
+        assert!(format!("{e}").contains("probe_rate"), "{e}");
+        let e = RunConfig::parse(r#"{"serve": {"probe_rate": -0.1}}"#).unwrap_err();
+        assert!(format!("{e}").contains("probe_rate"), "{e}");
+        let e = RunConfig::parse(r#"{"serve": {"listen": "no-port"}}"#).unwrap_err();
+        assert!(format!("{e}").contains("listen"), "{e}");
     }
 
     #[test]

@@ -228,6 +228,7 @@ impl<E: TrialRunner> Scheduler<E> {
                     trials_used: a.issued,
                     outcome: a.outcome,
                     latency,
+                    error: None,
                 });
             }
         }

@@ -84,10 +84,21 @@ impl ServerClient {
     /// the caller owns id uniqueness).
     pub fn submit_request(&self, req: InferRequest) -> Result<mpsc::Receiver<InferResponse>> {
         let (reply, rx) = mpsc::channel();
+        self.submit_request_to(req, reply)?;
+        Ok(rx)
+    }
+
+    /// Submit with a caller-owned reply channel — the primitive behind
+    /// [`crate::serve::Backend::submit_to`]: many requests may share one
+    /// channel, so routers/sessions can multiplex completions.
+    pub fn submit_request_to(
+        &self,
+        req: InferRequest,
+        reply: mpsc::Sender<InferResponse>,
+    ) -> Result<()> {
         self.tx
             .send(Msg::Submit(req, reply))
-            .map_err(|_| anyhow!("server is gone"))?;
-        Ok(rx)
+            .map_err(|_| anyhow!("server is gone"))
     }
 
     /// Submit and block for the answer.
@@ -136,6 +147,16 @@ fn server_loop<E: TrialRunner>(
         // Move parked submissions into the scheduler while capacity lasts.
         while let Some((r, tx)) = pending.pop_front() {
             let id = r.id;
+            if replies.contains_key(&id) {
+                // Duplicate in-flight id (e.g. two network sessions that
+                // failed to split the id space): reject this request
+                // in-band instead of silently orphaning the first one.
+                let _ = tx.send(InferResponse::failed(
+                    id,
+                    format!("request id {id} is already in flight on this scheduler"),
+                ));
+                continue;
+            }
             match sched.submit(r) {
                 Ok(()) => {
                     replies.insert(id, tx);

@@ -45,6 +45,31 @@ impl Dataset {
         Ok(ds)
     }
 
+    /// Write `<prefix>.img.bin` + `<prefix>.lbl.bin` in the python
+    /// toolchain's format ([`Dataset::load`] round-trips exactly) — the
+    /// `raca train` path that regenerates artifacts natively.
+    pub fn save(&self, prefix: &Path) -> Result<()> {
+        if let Some(dir) = prefix.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        let mut img = Vec::with_capacity(self.images.len() * 4);
+        for p in &self.images {
+            img.extend_from_slice(&p.to_le_bytes());
+        }
+        let mut lbl = Vec::with_capacity(self.labels.len() * 4);
+        for l in &self.labels {
+            lbl.extend_from_slice(&l.to_le_bytes());
+        }
+        let img_path = with_suffix(prefix, ".img.bin");
+        std::fs::write(&img_path, img)
+            .with_context(|| format!("writing {}", img_path.display()))?;
+        let lbl_path = with_suffix(prefix, ".lbl.bin");
+        std::fs::write(&lbl_path, lbl)
+            .with_context(|| format!("writing {}", lbl_path.display()))?;
+        Ok(())
+    }
+
     pub fn len(&self) -> usize {
         self.labels.len()
     }
@@ -129,6 +154,17 @@ mod tests {
         assert_eq!(s.image(0), ds.image(5));
         assert_eq!(ds.slice(10, 99).len(), 2);
         assert!(ds.slice(20, 5).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_load_round_trips_bit_exactly() {
+        let dir = std::env::temp_dir().join(format!("raca_dssave_{}", std::process::id()));
+        let ds = crate::dataset::synth::generate(9, 0x5A);
+        ds.save(&dir.join("data").join("test")).unwrap(); // creates subdirs
+        let r = Dataset::load(&dir.join("data").join("test")).unwrap();
+        assert_eq!(r.labels, ds.labels);
+        assert_eq!(r.images, ds.images, "f32 pixels must survive exactly");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -22,9 +22,11 @@
 //! leaves, `<n>x(…)` replication) compiled by [`serve::plan`] into nested
 //! [`serve::Backend`]s: one batched chip (`SingleChipBackend`), a
 //! router-dispatched replica farm (`ReplicatedFleetBackend`), a
-//! layer-sharded die pipeline (`PipelinedFleetBackend`), and a
+//! layer-sharded die pipeline (`PipelinedFleetBackend`), a
 //! health-reweighted router over arbitrary subtrees
-//! (`serve::RouterBackend`).
+//! (`serve::RouterBackend`) — and, through the [`serve::net`] wire layer
+//! (`raca serve --listen`, `remote:<host:port>` leaves), trees that span
+//! hosts.
 
 pub mod arch;
 pub mod circuit;

@@ -14,6 +14,11 @@
 //! raca serve --topology "2x(pipeline:3)"                # deployment tree
 //!            [--backend single|replicated|pipelined]    # legacy sugar
 //!            [--chips N] [--shards S] [--widths 784,...,10]
+//!            [--listen 0.0.0.0:7433]   # host the topology on a socket
+//!            [--probe-rate 0.05]       # labeled health probes
+//! raca serve --topology "(remote:a:7433, remote:b:7433)"  # multi-host tree
+//! raca train [--widths 784,500,300,10] # regenerate weight artifacts
+//!                                   # natively (no python toolchain)
 //! raca fleet --chips N --sigma S    # multi-chip farm: program,
 //!                                   # calibrate, serve, health report
 //! raca selftest                     # quick end-to-end smoke
@@ -97,6 +102,7 @@ fn main() -> Result<()> {
         }
         Some("infer") => infer(&args),
         Some("serve") => serve(&args),
+        Some("train") => train_cmd(&args),
         Some("fleet") => fleet(&args),
         Some("selftest") => selftest(),
         _ => {
@@ -120,13 +126,24 @@ USAGE: raca <subcommand> [flags]
               --images N --trials K --confidence C --batch B
   serve       serve through a deployment topology (compiled to backends)
               --topology "2x(pipeline:3)"   die | pipeline:<dies>[:b<batch>]
+                                            | remote:<host:port>
                                             | <n>x(<node>)[@policy]
+                                            | (<node>, <node>, …)[@policy]
               --backend single|replicated|pipelined   (legacy sugar:
                 die | <chips>x(die) | pipeline:<shards>)
+              --listen <host:port>      host the compiled topology on a
+                                        socket (peers reach it as
+                                        remote:<host:port>); blocks
+              --probe-rate R            labeled health probes per request
+                                        (0..1, from the calibration slice)
               --chips N --shards S --batch B (die-to-die trial block)
               --images N --trials K --confidence C --sigma S --seed S
               --widths 784,256,128,10   (train a custom-depth model)
               --config run.json         ({"serve": {"topology": ..., ...}})
+  train       train + save weight/dataset artifacts natively (replaces the
+              python toolchain for paper-scale weights)
+              --widths 784,500,300,10 --samples N --epochs E --lr F
+              --minibatch M --seed S --test-samples N --out DIR --force
   fleet       program + calibrate + serve a farm of non-identical chips
               (replicated backend: worker threads + live health steering)
               --chips N --sigma S --policy round-robin|least-loaded|weighted
@@ -137,6 +154,21 @@ USAGE: raca <subcommand> [flags]
 Add --fast to fig4/fig5/fig6 for CI-sized runs.
 XLA/PJRT paths require building with `--features pjrt`.
 "#;
+
+/// Parse a `--widths 784,...,10` layer spec and enforce the dataset
+/// contract (28×28 inputs, 10 classes) — shared by `serve` and `train`.
+fn parse_widths(spec_str: &str) -> Result<Vec<usize>> {
+    let widths = spec_str
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<std::result::Result<Vec<_>, _>>()
+        .map_err(|e| anyhow::anyhow!("bad --widths '{spec_str}': {e}"))?;
+    anyhow::ensure!(
+        widths.first() == Some(&784) && widths.last() == Some(&10),
+        "--widths must start at 784 and end at 10 (dataset contract)"
+    );
+    Ok(widths)
+}
 
 /// Load the trained artifacts if present; otherwise train a small native
 /// MLP on synthetic digits so every path works on a fresh checkout.
@@ -331,10 +363,18 @@ fn serve(args: &Args) -> Result<()> {
     sc.chips = args.get_usize("chips", sc.chips);
     sc.shards = args.get_usize("shards", sc.shards);
     sc.batch = args.get_usize("batch", sc.batch);
+    sc.probe_rate = args.get_f64("probe-rate", sc.probe_rate);
+    if let Some(l) = args.get("listen") {
+        sc.listen = Some(l.to_string());
+    }
     sc.seed = args.get_usize("seed", sc.seed as usize) as u64;
     anyhow::ensure!(sc.chips > 0, "--chips must be at least 1");
     anyhow::ensure!(sc.shards > 0, "--shards must be at least 1");
     anyhow::ensure!(sc.batch > 0, "--batch must be at least 1");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&sc.probe_rate),
+        "--probe-rate must be in [0, 1] (probes per caller request)"
+    );
     let n = args.get_usize("images", 256);
     let trials = args.get_usize("trials", 16) as u32;
     let confidence = args.get_f64("confidence", 0.0);
@@ -347,15 +387,7 @@ fn serve(args: &Args) -> Result<()> {
     // artifact (or fallback-trained) network.
     let (w, pool) = match args.get("widths") {
         Some(spec_str) => {
-            let widths = spec_str
-                .split(',')
-                .map(|s| s.trim().parse::<usize>())
-                .collect::<std::result::Result<Vec<_>, _>>()
-                .map_err(|e| anyhow::anyhow!("bad --widths '{spec_str}': {e}"))?;
-            anyhow::ensure!(
-                widths.first() == Some(&784) && widths.last() == Some(&10),
-                "--widths must start at 784 and end at 10 (dataset contract)"
-            );
+            let widths = parse_widths(spec_str)?;
             println!("model: training a native {widths:?} MLP on synthetic digits…");
             let train_set = synth::generate(800, 0x7EA1);
             // Parallel minibatch gradients: custom-depth training was the
@@ -392,11 +424,85 @@ fn serve(args: &Args) -> Result<()> {
         depth: sc.depth,
         batch: sc.batch,
         calibration: Some((cal.clone(), Calibrator::quick(5))),
+        probe_rate: sc.probe_rate,
         ..Default::default()
     };
     let backend = raca::serve::plan::build(&topo, &w, &opts)?;
+
+    // Listener mode: host the compiled topology on a socket instead of
+    // pushing a local workload — peers reach it as `remote:<this addr>`.
+    if let Some(listen) = &sc.listen {
+        let server = raca::serve::net::serve(backend, listen)?;
+        println!(
+            "serve: listening on {} (wire protocol v{}) — reach this topology as \
+             \"remote:{}\"; ctrl-c to stop",
+            server.addr(),
+            raca::serve::net::PROTOCOL_VERSION,
+            server.addr()
+        );
+        server.join();
+        return Ok(());
+    }
+
     serve_and_report(backend.as_ref(), &ds, trials, confidence, None)?;
     backend.shutdown();
+    Ok(())
+}
+
+/// `raca train` — regenerate weight + dataset artifacts natively: the
+/// minibatch-parallel [`raca::nn::train`] at any `--widths` (paper scale
+/// by default), saved in the python toolchain's on-disk format so every
+/// artifact consumer (`raca serve`, `infer`, the figures) loads them —
+/// no python required.
+fn train_cmd(args: &Args) -> Result<()> {
+    let widths = match args.get("widths") {
+        Some(spec_str) => parse_widths(spec_str)?,
+        None => ModelSpec::paper().widths,
+    };
+    let samples = args.get_usize("samples", 4000);
+    let test_samples = args.get_usize("test-samples", 2000);
+    let seed = args.get_usize("seed", 0x7121) as u64;
+    let tc = TrainConfig {
+        epochs: args.get_usize("epochs", 6),
+        lr: args.get_f64("lr", 0.2) as f32,
+        seed,
+        minibatch: args.get_usize("minibatch", 16).max(1),
+    };
+    let out = args
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let wpath = out.join("weights").join("fcnn");
+    anyhow::ensure!(
+        args.has("force") || !wpath.with_extension("json").exists(),
+        "{} already exists — pass --force to overwrite",
+        wpath.with_extension("json").display()
+    );
+
+    println!(
+        "train: {widths:?} on {samples} synthetic digits ({} epochs, lr {}, minibatch {})…",
+        tc.epochs, tc.lr, tc.minibatch
+    );
+    let train_set = synth::generate(samples, seed ^ 0x7EA1C);
+    let t0 = std::time::Instant::now();
+    let mut w = raca::nn::train(&train_set, ModelSpec::new(widths), &tc);
+    println!(
+        "train: done in {:.2?}, train accuracy {:.2}%",
+        t0.elapsed(),
+        w.ideal_test_accuracy * 100.0
+    );
+    // Score + record held-out accuracy (the number every consumer prints).
+    let test_set = synth::generate(test_samples, seed ^ 0x7E57);
+    w.ideal_test_accuracy = raca::nn::train::ideal_accuracy(&w, &test_set);
+    println!("train: held-out accuracy {:.2}% on {test_samples} images", w.ideal_test_accuracy * 100.0);
+
+    w.save(&wpath)?;
+    test_set.save(&out.join("data").join("test"))?;
+    println!(
+        "train: artifacts saved under {} (weights/fcnn.{{bin,json}}, data/test.*) — \
+         `raca serve`/`infer` will load them from here",
+        out.display()
+    );
     Ok(())
 }
 
@@ -650,7 +756,7 @@ fn selftest() -> Result<()> {
 
 #[cfg(not(feature = "pjrt"))]
 fn selftest() -> Result<()> {
-    println!("[1/4] native trainer on synthetic digits…");
+    println!("[1/5] native trainer on synthetic digits…");
     let train_set = synth::generate(200, 0xA);
     let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0xB, minibatch: 1 };
     let w = raca::nn::train(&train_set, ModelSpec::new(vec![784, 16, 10]), &cfg);
@@ -661,7 +767,7 @@ fn selftest() -> Result<()> {
     );
     println!("      ok: train accuracy {:.1}%", w.ideal_test_accuracy * 100.0);
 
-    println!("[2/4] single-die topology vote over the native engine…");
+    println!("[2/5] single-die topology vote over the native engine…");
     let backend = raca::serve::plan::build(
         &Topology::parse("die")?,
         &w,
@@ -678,7 +784,7 @@ fn selftest() -> Result<()> {
     }
     println!("      ok: {hits}/8 correct");
 
-    println!("[3/4] two-chip fleet calibration (σ=10%)…");
+    println!("[3/5] two-chip fleet calibration (σ=10%)…");
     let mut farm = Fleet::program_native(
         &w,
         2,
@@ -694,7 +800,7 @@ fn selftest() -> Result<()> {
     anyhow::ensure!(after >= before, "calibration regressed: {before} → {after}");
     println!("      ok: fleet cal-set accuracy {:.1}% → {:.1}%", before * 100.0, after * 100.0);
 
-    println!("[4/4] 2x(pipeline:2) topology vs unsharded engine…");
+    println!("[4/5] 2x(pipeline:2) topology vs unsharded engine…");
     let seed = 0xD1E5;
     let reference = NativeEngine::new(std::sync::Arc::new(w.clone()), seed);
     let pb = raca::serve::plan::build(
@@ -715,6 +821,36 @@ fn selftest() -> Result<()> {
         "replicated-pipeline votes diverged from the unsharded engine"
     );
     println!("      ok: votes match bit-for-bit, either replica of 2 dies");
+
+    println!("[5/5] remote:die over a loopback listener vs the local engine…");
+    let seed = 0x11E7;
+    let host = raca::serve::plan::build(
+        &Topology::parse("die")?,
+        &w,
+        &BuildOptions { seed, ..Default::default() },
+    )?;
+    let listener = raca::serve::net::serve(host, "127.0.0.1:0")?;
+    let remote = raca::serve::plan::build(
+        &Topology::parse(&format!("remote:{}", listener.addr()))?,
+        &w,
+        &BuildOptions::default(), // the client seed is irrelevant: the listener's governs
+    )?;
+    let x = train_set.image(1).to_vec();
+    let reference = NativeEngine::new(std::sync::Arc::new(w.clone()), seed);
+    let want = reference.infer(
+        &x,
+        TrialParams::default(),
+        10,
+        raca::serve::trial_stream_base(seed, 5),
+    );
+    let got = remote.classify(InferRequest::new(5, x).with_budget(10, 0.0))?;
+    anyhow::ensure!(
+        got.outcome.counts == want.counts,
+        "remote:die votes diverged from the local engine across the socket"
+    );
+    remote.shutdown();
+    println!("      ok: votes match bit-for-bit across the wire (protocol v{})",
+        raca::serve::net::PROTOCOL_VERSION);
     println!("selftest PASSED");
     Ok(())
 }

@@ -9,7 +9,7 @@ use crate::circuit::{WtaCircuit, WtaParams};
 use crate::stats::{erf::norm_cdf, GaussianSource};
 
 /// Outcome of a batch of WTA decision trials on one input.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WtaOutcome {
     /// Win counts per class.
     pub counts: Vec<u64>,

@@ -88,6 +88,45 @@ impl Weights {
         Ok(w)
     }
 
+    /// Write `<prefix>.bin` + `<prefix>.json` in the python toolchain's
+    /// format, so natively trained weights (`raca train`) are loadable by
+    /// every artifact consumer ([`Weights::load`] round-trips exactly).
+    pub fn save(&self, prefix: &Path) -> Result<()> {
+        use crate::util::json::{obj, Json};
+        if let Some(dir) = prefix.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        let mut bytes = Vec::with_capacity(self.spec.num_params() * 4);
+        for m in &self.mats {
+            for v in m {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let bin_path = prefix.with_extension("bin");
+        std::fs::write(&bin_path, &bytes)
+            .with_context(|| format!("writing {}", bin_path.display()))?;
+        let layers =
+            Json::Arr(self.spec.widths.iter().map(|&w| Json::Num(w as f64)).collect());
+        let shapes = Json::Arr(
+            (0..self.spec.num_layers())
+                .map(|l| {
+                    let (r, c) = self.spec.layer_shape(l);
+                    Json::Arr(vec![Json::Num(r as f64), Json::Num(c as f64)])
+                })
+                .collect(),
+        );
+        let meta = obj(vec![
+            ("layers", layers),
+            ("shapes", shapes),
+            ("ideal_test_accuracy", Json::Num(self.ideal_test_accuracy)),
+        ]);
+        let json_path = prefix.with_extension("json");
+        std::fs::write(&json_path, meta.to_string())
+            .with_context(|| format!("writing {}", json_path.display()))?;
+        Ok(())
+    }
+
     /// Sanity-check invariants (finite, inside the conductance clip range).
     pub fn validate(&self) -> Result<()> {
         for (l, m) in self.mats.iter().enumerate() {
@@ -173,6 +212,20 @@ mod tests {
         // shapes say (5,3) but layers say [4,3] → expects (5,3)... make them disagree:
         write_fixture(&dir, &[(9, 3)], &[4, 3]);
         assert!(Weights::load(&dir.join("w")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_load_round_trips_bit_exactly() {
+        let dir = std::env::temp_dir().join(format!("raca_wsave_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = Weights::random(ModelSpec::new(vec![784, 6, 10]), 9);
+        w.ideal_test_accuracy = 0.625;
+        w.save(&dir.join("weights").join("fcnn")).unwrap(); // creates subdir
+        let r = Weights::load(&dir.join("weights").join("fcnn")).unwrap();
+        assert_eq!(r.spec.widths, w.spec.widths);
+        assert_eq!(r.mats, w.mats, "f32 payload must survive exactly");
+        assert!((r.ideal_test_accuracy - 0.625).abs() < 1e-12);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -18,8 +18,16 @@
 //!                           └─ pipeline × 3 dies [chips 3..6]
 //!
 //!   leaves:      die[:native|physical|pjrt]   pipeline:<dies>[:b<batch>]
-//!   combinator:  <n>x(<node>)[@policy]        (nests to any depth)
+//!                remote:<host:port>           (a peer's --listen socket)
+//!   combinators: <n>x(<node>)[@policy]        (nests to any depth)
+//!                (<node>, <node>, …)[@policy] (route across distinct children)
 //! ```
+//!
+//! Trees span hosts: the [`net`] wire layer serves any compiled topology
+//! behind `raca serve --listen <addr>`, and a `remote:` leaf compiles to
+//! a [`net::RemoteBackend`] speaking length-prefixed JSON frames — so
+//! `(remote:a, remote:b)` health-steers across machines with the same
+//! router code that steers local replicas.
 //!
 //! Every shape speaks the same [`Backend`] session API (`submit` →
 //! [`Ticket`] → `wait`), reports the coordinator's [`MetricsSnapshot`],
@@ -35,21 +43,25 @@
 //! [`ReplicatedFleetBackend`], [`PipelinedFleetBackend`],
 //! [`plan::RouterBackend`]) are constructed only by [`plan`].
 
+pub mod net;
 pub mod pipelined;
 pub mod plan;
+pub mod probe;
 pub mod replicated;
 pub mod request;
 pub mod single;
 
+pub use net::{NetServer, RemoteBackend};
 pub use pipelined::{PipelineOptions, PipelinedFleetBackend};
 pub use plan::{build, BuildOptions, DeployPlan, EngineSel, PlanNode, RouterBackend, Topology};
+pub use probe::ProbeInjector;
 pub use replicated::{ReplicatedFleetBackend, ReplicatedOptions};
 pub use request::{InferRequest, InferResponse, RequestId};
 pub use single::SingleChipBackend;
 
 use std::sync::mpsc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::MetricsSnapshot;
 use crate::fleet::RoutePolicy;
@@ -70,19 +82,46 @@ impl Ticket {
 /// A serving session: submit/await classification requests against some
 /// arrangement of RACA dies.  `Box<dyn Backend>` is what
 /// [`plan::build`] returns for any [`Topology`]
-/// (`raca serve --topology "2x(pipeline:3)"`).
-pub trait Backend: Send {
-    /// Admit a request; returns a [`Ticket`] to wait on.  Request ids must
-    /// be unique among in-flight requests of this backend.
-    fn submit(&self, req: InferRequest) -> Result<Ticket>;
+/// (`raca serve --topology "2x(pipeline:3)"`) — including trees whose
+/// leaves live on other hosts (`remote:<host:port>` ⇒
+/// [`net::RemoteBackend`]).  `Sync` because one backend serves many
+/// concurrent callers: the network listener shares it across every
+/// client connection.
+pub trait Backend: Send + Sync {
+    /// The submission primitive: admit a request and deliver its
+    /// response to `reply`.  Request ids must be unique among in-flight
+    /// requests of this backend.
+    ///
+    /// Callers hand in the channel (rather than receiving a fresh one)
+    /// so that *many* requests can share one completion channel — what
+    /// lets routers and network sessions multiplex all their in-flight
+    /// tickets over a single relay thread, delivering responses in
+    /// completion order with no per-request threads and no head-of-line
+    /// blocking.
+    fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()>;
 
-    /// Block until the ticketed request completes.
+    /// Admit a request; returns a [`Ticket`] to wait on.
+    fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        let id = req.id;
+        let (tx, rx) = mpsc::channel();
+        self.submit_to(req, tx)?;
+        Ok(Ticket::new(id, rx))
+    }
+
+    /// Block until the ticketed request completes.  A response carrying
+    /// an in-band [`InferResponse::error`] (the request was admitted but
+    /// could not be served — dead remote peer, duplicate id) surfaces as
+    /// an `Err`, exactly like a dropped reply channel.
     fn wait(&self, ticket: Ticket) -> Result<InferResponse> {
         let id = ticket.id;
-        ticket
+        let resp = ticket
             .rx
             .recv()
-            .map_err(|_| anyhow!("backend dropped request {id}"))
+            .map_err(|_| anyhow!("backend dropped request {id}"))?;
+        if let Some(e) = &resp.error {
+            bail!("request {id} failed: {e}");
+        }
+        Ok(resp)
     }
 
     /// Submit and block for the answer.
@@ -167,6 +206,15 @@ pub struct ServeConfig {
     pub depth: usize,
     /// Default trials per die-to-die message for pipeline leaves.
     pub batch: usize,
+    /// Labeled health probes injected per caller request, in [0, 1]
+    /// (0 disables).  Probes come from the held-out calibration slice, so
+    /// accuracy-based health steering works even when callers never send
+    /// labels ([`probe::ProbeInjector`]).
+    pub probe_rate: f64,
+    /// Host a listener instead of pushing a local workload:
+    /// `raca serve --listen <addr>` / `"serve": {"listen": "..."}` —
+    /// the compiled topology goes behind a [`net::NetServer`] socket.
+    pub listen: Option<String>,
     pub seed: u64,
 }
 
@@ -179,6 +227,8 @@ impl Default for ServeConfig {
             shards: 2,
             depth: 256,
             batch: 8,
+            probe_rate: 0.0,
+            listen: None,
             seed: 0x5EB0E,
         }
     }

@@ -1,0 +1,238 @@
+//! Client side: a [`Backend`] whose dies live on another host.
+//!
+//! [`RemoteBackend`] dials a `raca serve --listen` peer and speaks the
+//! [`super::wire`] protocol over one TCP connection.  It implements the
+//! same [`Backend`] trait as every local deployment shape, so
+//! `remote:<host:port>` is a first-class [`crate::serve::Topology`] leaf:
+//! a `(remote:a, remote:b)` group routes across machines with the exact
+//! router/health code that steers local replicas, and a tree can mix
+//! local pipelines with remote peers freely.
+//!
+//! Multiplexing: `submit_to` registers the caller's reply channel in a
+//! pending map keyed by request id and writes one `Submit` frame; a
+//! single reader thread routes incoming `Response` frames (completion
+//! order) back to their callers.  No per-request threads, no
+//! head-of-line blocking.
+//!
+//! Parity: the remote host derives trial indices from its *own*
+//! deployment seed and the request id, exactly as a local backend would —
+//! so with both ends seeded alike and `variation: None`, `remote:die`
+//! votes bit-identically to a local `die` (held to that in
+//! `rust/tests/serve.rs`).  The client's `BuildOptions::seed` does not
+//! reach the wire.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::BufReader;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::{Metrics, MetricsSnapshot};
+use crate::util::json;
+
+use super::super::{Backend, InferRequest, InferResponse, RequestId};
+use super::wire::{self, WireMsg, PROTOCOL_VERSION};
+
+/// How long `metrics()` waits for the remote snapshot before falling
+/// back to the locally tracked counters.
+const METRICS_TIMEOUT: Duration = Duration::from_secs(10);
+
+type Pending = Arc<Mutex<HashMap<RequestId, mpsc::Sender<InferResponse>>>>;
+type MetricsWaiters = Arc<Mutex<VecDeque<mpsc::Sender<MetricsSnapshot>>>>;
+
+/// A serving session against a remote listener (one TCP connection).
+pub struct RemoteBackend {
+    addr: String,
+    write: Mutex<TcpStream>,
+    pending: Pending,
+    waiters: MetricsWaiters,
+    /// Local admission counters — the fallback when the peer cannot
+    /// answer a metrics request in time.
+    local: Arc<Metrics>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl RemoteBackend {
+    /// Dial `addr` and complete the protocol handshake.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to remote backend {addr}"))?;
+        stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+        let mut read = BufReader::new(stream.try_clone().context("cloning stream")?);
+        let mut wstream = stream;
+
+        // The listener speaks first; refuse anything that is not a
+        // version-compatible raca hello.
+        let j = json::read_frame(&mut read)
+            .with_context(|| format!("reading hello from {addr}"))?
+            .ok_or_else(|| anyhow!("{addr} closed the connection during the handshake"))?;
+        match wire::decode(&j).with_context(|| format!("bad hello from {addr}"))? {
+            WireMsg::Hello { version } => {
+                wire::check_version(version).with_context(|| format!("peer {addr}"))?
+            }
+            WireMsg::Error { msg, .. } => bail!("{addr} refused the session: {msg}"),
+            other => bail!("{addr} opened with {other:?} instead of hello"),
+        }
+        json::write_frame(&mut wstream, &wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION }))
+            .with_context(|| format!("answering hello to {addr}"))?;
+
+        let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
+        let waiters: MetricsWaiters = Arc::new(Mutex::new(VecDeque::new()));
+        let reader = {
+            let pending = pending.clone();
+            let waiters = waiters.clone();
+            let addr = addr.to_string();
+            std::thread::Builder::new()
+                .name("raca-remote-read".into())
+                .spawn(move || reader_loop(read, pending, waiters, addr))
+                .context("spawning remote reader thread")?
+        };
+        Ok(Self {
+            addr: addr.to_string(),
+            write: Mutex::new(wstream),
+            pending,
+            waiters,
+            local: Metrics::new(),
+            reader: Some(reader),
+        })
+    }
+
+    /// The peer this session is connected to.
+    pub fn peer(&self) -> &str {
+        &self.addr
+    }
+
+    /// Requests currently awaiting a remote response.
+    pub fn in_flight(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+}
+
+impl Backend for RemoteBackend {
+    fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+        let id = req.id;
+        {
+            let mut p = self.pending.lock().unwrap();
+            ensure!(
+                !p.contains_key(&id),
+                "request id {id} is already in flight on the session to {}",
+                self.addr
+            );
+            p.insert(id, reply);
+        }
+        let frame = wire::encode(&WireMsg::Submit(req));
+        let sent = {
+            let mut w = self.write.lock().unwrap();
+            json::write_frame(&mut *w, &frame)
+        };
+        if let Err(e) = sent {
+            self.pending.lock().unwrap().remove(&id);
+            bail!("sending request {id} to {}: {e}", self.addr);
+        }
+        self.local.requests_admitted.fetch_add(1, Relaxed);
+        Ok(())
+    }
+
+    /// The *remote* backend's metrics (the listener answers for the whole
+    /// hosted deployment — shared across every client connection).  Falls
+    /// back to this session's local admission counters if the peer does
+    /// not answer within [`METRICS_TIMEOUT`].
+    fn metrics(&self) -> MetricsSnapshot {
+        let (tx, rx) = mpsc::channel();
+        let sent = {
+            // Holding the waiter lock across the write keeps the waiter
+            // queue aligned with the request order on the wire.
+            let mut ws = self.waiters.lock().unwrap();
+            let ok = {
+                let mut w = self.write.lock().unwrap();
+                json::write_frame(&mut *w, &wire::encode(&WireMsg::MetricsReq)).is_ok()
+            };
+            if ok {
+                ws.push_back(tx);
+            }
+            ok
+        };
+        if sent {
+            if let Ok(m) = rx.recv_timeout(METRICS_TIMEOUT) {
+                return m;
+            }
+            log::warn!("{}: no metrics answer in {METRICS_TIMEOUT:?}; using local counters", self.addr);
+        }
+        self.local.snapshot()
+    }
+
+    fn shutdown(self: Box<Self>) {
+        drop(self);
+    }
+}
+
+impl Drop for RemoteBackend {
+    fn drop(&mut self) {
+        // Polite goodbye + half-close: the listener finishes in-flight
+        // work and flushes every remaining Response before closing its
+        // end, which is what unblocks (and ends) our reader thread.
+        {
+            let mut w = self.write.lock().unwrap();
+            let _ = json::write_frame(&mut *w, &wire::encode(&WireMsg::Goodbye));
+            let _ = w.shutdown(Shutdown::Write);
+        }
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+fn reader_loop(mut read: BufReader<TcpStream>, pending: Pending, waiters: MetricsWaiters, addr: String) {
+    loop {
+        let j = match json::read_frame(&mut read) {
+            Ok(Some(j)) => j,
+            Ok(None) => break, // peer closed
+            Err(e) => {
+                log::warn!("{addr}: unreadable frame, dropping session: {e}");
+                break;
+            }
+        };
+        match wire::decode(&j) {
+            Ok(WireMsg::Response(resp)) => {
+                if let Some(tx) = pending.lock().unwrap().remove(&resp.id) {
+                    let _ = tx.send(resp); // caller may have given up; fine
+                } else {
+                    log::warn!("{addr}: response for unknown request {}", resp.id);
+                }
+            }
+            Ok(WireMsg::Metrics(m)) => {
+                if let Some(tx) = waiters.lock().unwrap().pop_front() {
+                    let _ = tx.send(m);
+                }
+            }
+            Ok(WireMsg::Error { id: Some(id), msg }) => {
+                log::warn!("{addr}: rejected request {id}: {msg}");
+                // An in-band failure (not a dropped sender): shared
+                // completion channels — a router relay, another session —
+                // need the response to learn which request died.
+                if let Some(tx) = pending.lock().unwrap().remove(&id) {
+                    let _ = tx.send(InferResponse::failed(id, format!("{addr}: {msg}")));
+                }
+            }
+            Ok(WireMsg::Error { id: None, msg }) => {
+                log::warn!("{addr}: session error: {msg}");
+            }
+            Ok(other) => log::warn!("{addr}: unexpected {other:?}"),
+            Err(e) => {
+                log::warn!("{addr}: undecodable frame, dropping session: {e}");
+                break;
+            }
+        }
+    }
+    // Anything still pending will never complete: answer every waiter
+    // with an in-band failure (shared completion channels cannot observe
+    // a dropped sender clone, so silence would hang a routing caller).
+    for (id, tx) in pending.lock().unwrap().drain() {
+        let _ = tx.send(InferResponse::failed(id, format!("session to {addr} closed")));
+    }
+    waiters.lock().unwrap().clear();
+}

@@ -1,0 +1,41 @@
+//! The wire layer: topology trees that span hosts.
+//!
+//! The RACA pitch is system-level — drop the DACs/ADCs and scale out as
+//! cheap dies instead of fat chips — and at deployment scale the binding
+//! constraint moves to inter-chip and inter-node communication (Marinella
+//! et al.'s multiscale co-design analysis; the accelerator-network
+//! organizations in Smagulova et al.'s survey).  This module makes the
+//! process boundary an ordinary edge of the [`crate::serve::Topology`]
+//! tree:
+//!
+//! ```text
+//!   host A (raca serve --listen 0.0.0.0:7433 --topology "pipeline:3")
+//!   host B (raca serve --listen 0.0.0.0:7433 --topology "pipeline:3")
+//!   client: --topology "(remote:a:7433, remote:b:7433)"
+//!            └ RouterBackend health-steers across machines,
+//!              zero new routing code
+//! ```
+//!
+//! Three pieces:
+//! * [`wire`] — the codec: length-prefixed JSON frames (vendored
+//!   [`crate::util::json`], no serde), protocol version handshake,
+//!   request ids as strings so full-width u64 ids survive;
+//! * [`server`] — the listener: an accept loop hosting *any*
+//!   `Box<dyn Backend>`; each connection is a session multiplexing
+//!   tickets over one completion channel;
+//! * [`client`] — [`RemoteBackend`]: the same [`crate::serve::Backend`]
+//!   trait over a TCP session, compiled from the `remote:<host:port>`
+//!   topology leaf by [`crate::serve::plan`].
+//!
+//! The parity discipline survives the wire: ids and images cross
+//! bit-exactly, the remote host derives trial streams from its own seed
+//! and the unchanged id, so `remote:die` ≡ local `die` at equal seeds
+//! with `variation: None`.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::RemoteBackend;
+pub use server::{serve, NetServer};
+pub use wire::{WireError, WireMsg, PROTOCOL_VERSION};

@@ -1,0 +1,256 @@
+//! Listener side: host any compiled topology behind a TCP accept loop.
+//!
+//! [`serve`] takes the `Box<dyn Backend>` that [`crate::serve::plan`]
+//! built — a die, a pipeline, a whole replicated tree — and exposes it on
+//! a socket.  Each accepted connection becomes a *session*: the session's
+//! read loop admits `Submit` frames straight into the shared backend via
+//! [`Backend::submit_to`], handing every request the session's one
+//! completion channel; a pump thread drains that channel and writes
+//! `Response` frames back in **completion order**.  A remote host is
+//! therefore just another backend — same trait, same ticket semantics —
+//! and one listener serves any number of client connections
+//! concurrently.
+//!
+//! Request ids pass through the wire *verbatim* (they key the remote
+//! host's trial streams — the bit-parity discipline), so id uniqueness is
+//! the clients' contract: clients of a shared listener must carve up the
+//! id space (the natural fleet idiom: client `k` of `n` uses ids
+//! `k + i*n`).  A colliding id is rejected per-request with an `Error`
+//! frame, never by dropping the session.
+//!
+//! Teardown: client EOF/`Goodbye` ends the read loop; the pump still
+//! flushes every in-flight response before the session closes (the
+//! backend finishes admitted work by contract).  Dropping the
+//! [`NetServer`] stops the accept loop; live sessions keep the backend
+//! alive through their `Arc` until they drain.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json;
+
+use super::super::{Backend, InferResponse};
+use super::wire::{self, WireMsg, PROTOCOL_VERSION};
+
+/// A topology hosted behind a socket.  Dropping it stops the accept
+/// loop; [`NetServer::join`] instead blocks forever (the `raca serve
+/// --listen` foreground mode).
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    sessions_started: Arc<AtomicU64>,
+    /// Keeps the hosted backend alive at least as long as the listener.
+    _backend: Arc<dyn Backend>,
+}
+
+/// Bind `addr` (e.g. `"0.0.0.0:7433"`; port 0 picks a free port — see
+/// [`NetServer::addr`]) and serve `backend` to every connection.
+pub fn serve(backend: Box<dyn Backend>, addr: &str) -> Result<NetServer> {
+    let backend: Arc<dyn Backend> = Arc::from(backend);
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding serve listener on {addr}"))?;
+    let local = listener.local_addr().context("reading listener address")?;
+    // Non-blocking accept + poll, so the accept thread can notice `stop`
+    // without a connection arriving to wake it.
+    listener
+        .set_nonblocking(true)
+        .context("setting listener non-blocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let sessions_started = Arc::new(AtomicU64::new(0));
+    let accept = {
+        let stop = stop.clone();
+        let backend = backend.clone();
+        let sessions_started = sessions_started.clone();
+        std::thread::Builder::new()
+            .name("raca-net-accept".into())
+            .spawn(move || accept_loop(listener, backend, stop, sessions_started))
+            .context("spawning accept thread")?
+    };
+    log::info!("serve listener on {local} (protocol v{PROTOCOL_VERSION})");
+    Ok(NetServer { addr: local, stop, accept: Some(accept), sessions_started, _backend: backend })
+}
+
+impl NetServer {
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Sessions accepted since start.
+    pub fn sessions_started(&self) -> u64 {
+        self.sessions_started.load(Relaxed)
+    }
+
+    /// Block on the accept loop — the foreground `--listen` mode.  Only
+    /// ends if the listener socket breaks; kill the process to stop.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Session threads are deliberately not joined: they hold their own
+        // Arc<dyn Backend> and exit when their client hangs up.
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    backend: Arc<dyn Backend>,
+    stop: Arc<AtomicBool>,
+    sessions_started: Arc<AtomicU64>,
+) {
+    while !stop.load(Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                // Frames are small request/response messages: Nagle would
+                // add artificial latency to every round trip.
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_nonblocking(false);
+                sessions_started.fetch_add(1, Relaxed);
+                let backend = backend.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("raca-net-session".into())
+                    .spawn(move || {
+                        if let Err(e) = session(stream, backend) {
+                            log::warn!("session with {peer} ended with error: {e:#}");
+                        }
+                    });
+                if spawned.is_err() {
+                    log::warn!("could not spawn session thread for {peer}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => {
+                log::warn!("accept failed: {e}; listener exiting");
+                return;
+            }
+        }
+    }
+}
+
+/// Write one frame under the session's write lock (frames from the pump
+/// and the read loop interleave whole, never byte-wise).
+fn send(w: &Mutex<TcpStream>, msg: &WireMsg) -> std::io::Result<()> {
+    let mut guard = w.lock().unwrap();
+    json::write_frame(&mut *guard, &wire::encode(msg))
+}
+
+fn session(stream: TcpStream, backend: Arc<dyn Backend>) -> Result<()> {
+    let write = Arc::new(Mutex::new(stream.try_clone().context("cloning session stream")?));
+    let mut read = BufReader::new(stream);
+
+    // Handshake: the listener speaks first, the client must answer with a
+    // matching hello before anything else.
+    send(&write, &WireMsg::Hello { version: PROTOCOL_VERSION }).context("sending hello")?;
+    let Some(j) = json::read_frame(&mut read).context("reading client hello")? else {
+        return Ok(()); // probed-and-closed (port scan, health check)
+    };
+    match wire::decode(&j) {
+        Ok(WireMsg::Hello { version }) => {
+            if let Err(e) = wire::check_version(version) {
+                let _ = send(&write, &WireMsg::Error { id: None, msg: e.to_string() });
+                bail!("{e}");
+            }
+        }
+        Ok(other) => {
+            let _ = send(
+                &write,
+                &WireMsg::Error { id: None, msg: format!("expected hello, got {other:?}") },
+            );
+            bail!("client opened with {other:?} instead of hello");
+        }
+        Err(e) => {
+            let _ = send(&write, &WireMsg::Error { id: None, msg: e.to_string() });
+            bail!("bad client hello: {e}");
+        }
+    }
+
+    // One completion channel per session: every submitted request replies
+    // here, and the pump writes Response frames in completion order.
+    let (done_tx, done_rx) = mpsc::channel::<InferResponse>();
+    let pump = {
+        let write = write.clone();
+        std::thread::Builder::new()
+            .name("raca-net-pump".into())
+            .spawn(move || {
+                while let Ok(resp) = done_rx.recv() {
+                    if send(&write, &WireMsg::Response(resp)).is_err() {
+                        return; // client is gone; stop writing
+                    }
+                }
+            })
+            .context("spawning session pump")?
+    };
+
+    let result = session_read_loop(&mut read, &write, &backend, &done_tx);
+
+    // Close our half of the completion channel; the pump drains whatever
+    // in-flight requests still hold clones, then exits.
+    drop(done_tx);
+    let _ = pump.join();
+    result
+}
+
+fn session_read_loop(
+    read: &mut BufReader<TcpStream>,
+    write: &Mutex<TcpStream>,
+    backend: &Arc<dyn Backend>,
+    done_tx: &mpsc::Sender<InferResponse>,
+) -> Result<()> {
+    loop {
+        let j = match json::read_frame(read) {
+            Ok(Some(j)) => j,
+            Ok(None) => return Ok(()), // clean client EOF
+            Err(e) => {
+                let _ = send(
+                    write,
+                    &WireMsg::Error { id: None, msg: format!("unreadable frame: {e}") },
+                );
+                bail!("unreadable frame from client: {e}");
+            }
+        };
+        match wire::decode(&j) {
+            Ok(WireMsg::Submit(req)) => {
+                let id = req.id;
+                if let Err(e) = backend.submit_to(req, done_tx.clone()) {
+                    // Per-request failure (id collision, unhealthy tree):
+                    // report it, keep the session alive.
+                    let _ =
+                        send(write, &WireMsg::Error { id: Some(id), msg: format!("{e:#}") });
+                }
+            }
+            Ok(WireMsg::MetricsReq) => {
+                let m = backend.metrics();
+                send(write, &WireMsg::Metrics(m)).context("sending metrics")?;
+            }
+            Ok(WireMsg::Goodbye) => return Ok(()),
+            Ok(other) => {
+                let _ = send(
+                    write,
+                    &WireMsg::Error { id: None, msg: format!("unexpected {other:?}") },
+                );
+            }
+            Err(e) => {
+                let _ = send(write, &WireMsg::Error { id: None, msg: e.to_string() });
+                bail!("undecodable frame from client: {e}");
+            }
+        }
+    }
+}

@@ -1,0 +1,438 @@
+//! Wire codec: the serving vocabulary as length-prefixed JSON frames.
+//!
+//! Every message is one [`crate::util::json`] frame (4-byte big-endian
+//! length + compact JSON) whose object carries a `"t"` tag.  The codec is
+//! deliberately boring — the vendored JSON layer, no serde — because the
+//! interesting contract is semantic, not syntactic: a request's `id` and
+//! `image` must survive the wire **bit-identically** so that
+//! `trial_stream_base(seed, id)` derives the same trial indices on the
+//! remote host as it would locally.  Pixels are f32; f32 → f64 → shortest
+//! round-trip decimal → f64 → f32 is exact, so JSON numbers are safe for
+//! them.  Request ids are full-width u64 (probe ids live at `1 << 63`),
+//! which JSON's f64 numbers would silently round — ids therefore travel
+//! as decimal *strings* (the decoder also accepts small integers for
+//! hand-written frames).
+//!
+//! Handshake: the listener speaks first with [`WireMsg::Hello`]; the
+//! client checks `magic`/`proto` ([`check_version`]) and answers with its
+//! own hello.  Either side closes on a mismatch.  Version bumps are
+//! explicit: change [`PROTOCOL_VERSION`] whenever a frame's shape changes.
+
+use std::time::Duration;
+
+use crate::coordinator::MetricsSnapshot;
+use crate::neuron::WtaOutcome;
+use crate::util::json::{obj, Json};
+
+use super::super::{InferRequest, InferResponse, RequestId};
+
+/// Bump on any frame-shape change; both ends refuse mismatched peers.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Distinguishes a raca listener from an arbitrary TCP service.
+pub const MAGIC: &str = "raca-serve";
+
+/// One protocol message (either direction).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMsg {
+    /// Handshake: listener sends first, client answers.
+    Hello { version: u32 },
+    /// Client → server: admit this request.
+    Submit(InferRequest),
+    /// Server → client: a completed request (completion order, not
+    /// submission order — the session multiplexes tickets).
+    Response(InferResponse),
+    /// Client → server: snapshot the hosted backend's metrics.
+    MetricsReq,
+    /// Server → client: answer to [`WireMsg::MetricsReq`].
+    Metrics(MetricsSnapshot),
+    /// Either direction: a request-level (`id: Some`) or session-level
+    /// (`id: None`) failure.
+    Error { id: Option<RequestId>, msg: String },
+    /// Client → server: clean session end (EOF works too).
+    Goodbye,
+}
+
+/// Decode failure: the peer sent bytes we refuse to act on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The peer speaks a different protocol revision.
+    Version { peer: u32, ours: u32 },
+    /// A frame decoded as JSON but not as a protocol message.
+    Malformed { what: &'static str, detail: String },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Version { peer, ours } => write!(
+                f,
+                "protocol version mismatch: peer speaks v{peer}, this build speaks v{ours}"
+            ),
+            WireError::Malformed { what, detail } => {
+                write!(f, "malformed {what} frame: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn malformed(what: &'static str, detail: impl Into<String>) -> WireError {
+    WireError::Malformed { what, detail: detail.into() }
+}
+
+/// Refuse peers from a different protocol revision.
+pub fn check_version(peer: u32) -> Result<(), WireError> {
+    if peer == PROTOCOL_VERSION {
+        Ok(())
+    } else {
+        Err(WireError::Version { peer, ours: PROTOCOL_VERSION })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode
+// ---------------------------------------------------------------------------
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn n(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// u64 ids travel as decimal strings — JSON numbers are f64 and would
+/// round ids above 2^53 (probe ids sit at 2^63).
+fn id_json(v: RequestId) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn u64_arr(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// Encode a message as the JSON value of one frame.
+pub fn encode(msg: &WireMsg) -> Json {
+    match msg {
+        WireMsg::Hello { version } => obj(vec![
+            ("t", s("hello")),
+            ("magic", s(MAGIC)),
+            ("proto", n(*version as f64)),
+        ]),
+        WireMsg::Submit(r) => request_to_json(r),
+        WireMsg::Response(r) => response_to_json(r),
+        WireMsg::MetricsReq => obj(vec![("t", s("metrics_req"))]),
+        WireMsg::Metrics(m) => metrics_to_json(m),
+        WireMsg::Error { id, msg } => {
+            let mut pairs = vec![("t", s("error")), ("msg", s(msg))];
+            if let Some(id) = id {
+                pairs.push(("id", id_json(*id)));
+            }
+            obj(pairs)
+        }
+        WireMsg::Goodbye => obj(vec![("t", s("goodbye"))]),
+    }
+}
+
+fn request_to_json(r: &InferRequest) -> Json {
+    let mut pairs = vec![
+        ("t", s("submit")),
+        ("id", id_json(r.id)),
+        ("image", Json::Arr(r.image.iter().map(|&p| Json::Num(p as f64)).collect())),
+        ("max_trials", n(r.max_trials as f64)),
+        ("confidence", n(r.confidence)),
+    ];
+    if let Some(l) = r.label {
+        pairs.push(("label", n(l as f64)));
+    }
+    obj(pairs)
+}
+
+fn response_to_json(r: &InferResponse) -> Json {
+    let mut pairs = vec![
+        ("t", s("response")),
+        ("id", id_json(r.id)),
+        ("prediction", n(r.prediction as f64)),
+        ("counts", u64_arr(&r.outcome.counts)),
+        ("abstentions", n(r.outcome.abstentions as f64)),
+        ("trials", n(r.outcome.trials as f64)),
+        ("trials_used", n(r.trials_used as f64)),
+        ("latency_us", n(r.latency.as_micros() as f64)),
+    ];
+    if let Some(e) = &r.error {
+        pairs.push(("error", s(e)));
+    }
+    obj(pairs)
+}
+
+fn metrics_to_json(m: &MetricsSnapshot) -> Json {
+    obj(vec![
+        ("t", s("metrics")),
+        ("requests_admitted", n(m.requests_admitted as f64)),
+        ("requests_completed", n(m.requests_completed as f64)),
+        ("trials_executed", n(m.trials_executed as f64)),
+        ("batches_executed", n(m.batches_executed as f64)),
+        ("rows_packed", n(m.rows_packed as f64)),
+        ("trials_saved", n(m.trials_saved as f64)),
+        ("engine_errors", n(m.engine_errors as f64)),
+        ("latency_p50_us", n(m.latency_p50_us as f64)),
+        ("latency_p99_us", n(m.latency_p99_us as f64)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Decode
+// ---------------------------------------------------------------------------
+
+/// Decode one frame's JSON value into a protocol message.
+pub fn decode(j: &Json) -> Result<WireMsg, WireError> {
+    let t = j
+        .get("t")
+        .and_then(Json::as_str)
+        .ok_or_else(|| malformed("frame", "missing 't' tag"))?;
+    match t {
+        "hello" => {
+            let magic = j.get("magic").and_then(Json::as_str).unwrap_or("");
+            if magic != MAGIC {
+                return Err(malformed(
+                    "hello",
+                    format!("bad magic '{magic}' — peer is not a raca serve listener"),
+                ));
+            }
+            Ok(WireMsg::Hello { version: u64_field(j, "hello", "proto")? as u32 })
+        }
+        "submit" => Ok(WireMsg::Submit(request_from_json(j)?)),
+        "response" => Ok(WireMsg::Response(response_from_json(j)?)),
+        "metrics_req" => Ok(WireMsg::MetricsReq),
+        "metrics" => Ok(WireMsg::Metrics(metrics_from_json(j)?)),
+        "error" => {
+            let id = match j.get("id") {
+                Some(v) => Some(parse_u64("error", "id", v)?),
+                None => None,
+            };
+            let msg =
+                j.get("msg").and_then(Json::as_str).unwrap_or("unspecified").to_string();
+            Ok(WireMsg::Error { id, msg })
+        }
+        "goodbye" => Ok(WireMsg::Goodbye),
+        other => Err(malformed("frame", format!("unknown message type '{other}'"))),
+    }
+}
+
+/// Accepts decimal strings (the canonical id encoding) and exact
+/// non-negative integers (hand-written frames, counters).
+fn parse_u64(what: &'static str, field: &str, v: &Json) -> Result<u64, WireError> {
+    match v {
+        Json::Num(f) if *f >= 0.0 && f.fract() == 0.0 && *f <= 9007199254740992.0 => {
+            Ok(*f as u64)
+        }
+        Json::Str(sv) => sv
+            .parse()
+            .map_err(|_| malformed(what, format!("field '{field}': bad u64 '{sv}'"))),
+        other => Err(malformed(what, format!("field '{field}': expected u64, got {other}"))),
+    }
+}
+
+fn u64_field(j: &Json, what: &'static str, field: &str) -> Result<u64, WireError> {
+    let v = j
+        .get(field)
+        .ok_or_else(|| malformed(what, format!("missing field '{field}'")))?;
+    parse_u64(what, field, v)
+}
+
+fn f64_field(j: &Json, what: &'static str, field: &str) -> Result<f64, WireError> {
+    j.get(field)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| malformed(what, format!("missing or non-numeric field '{field}'")))
+}
+
+fn request_from_json(j: &Json) -> Result<InferRequest, WireError> {
+    let id = u64_field(j, "submit", "id")?;
+    let image: Vec<f32> = j
+        .get("image")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| malformed("submit", "missing 'image' array"))?
+        .iter()
+        .map(|p| p.as_f64().map(|v| v as f32))
+        .collect::<Option<_>>()
+        .ok_or_else(|| malformed("submit", "non-numeric pixel in 'image'"))?;
+    let max_trials = u64_field(j, "submit", "max_trials")? as u32;
+    let confidence = f64_field(j, "submit", "confidence")?;
+    let label = match j.get("label") {
+        Some(v) => Some(
+            v.as_f64()
+                .ok_or_else(|| malformed("submit", "non-numeric 'label'"))? as i32,
+        ),
+        None => None,
+    };
+    Ok(InferRequest { id, image, max_trials, confidence, label })
+}
+
+fn response_from_json(j: &Json) -> Result<InferResponse, WireError> {
+    let counts: Vec<u64> = j
+        .get("counts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| malformed("response", "missing 'counts' array"))?
+        .iter()
+        .map(|c| parse_u64("response", "counts[]", c))
+        .collect::<Result<_, _>>()?;
+    Ok(InferResponse {
+        id: u64_field(j, "response", "id")?,
+        prediction: f64_field(j, "response", "prediction")? as i32,
+        outcome: WtaOutcome {
+            counts,
+            abstentions: u64_field(j, "response", "abstentions")?,
+            trials: u64_field(j, "response", "trials")?,
+        },
+        trials_used: u64_field(j, "response", "trials_used")? as u32,
+        latency: Duration::from_micros(u64_field(j, "response", "latency_us")?),
+        error: j.get("error").and_then(Json::as_str).map(str::to_string),
+    })
+}
+
+fn metrics_from_json(j: &Json) -> Result<MetricsSnapshot, WireError> {
+    Ok(MetricsSnapshot {
+        requests_admitted: u64_field(j, "metrics", "requests_admitted")?,
+        requests_completed: u64_field(j, "metrics", "requests_completed")?,
+        trials_executed: u64_field(j, "metrics", "trials_executed")?,
+        batches_executed: u64_field(j, "metrics", "batches_executed")?,
+        rows_packed: u64_field(j, "metrics", "rows_packed")?,
+        trials_saved: u64_field(j, "metrics", "trials_saved")?,
+        engine_errors: u64_field(j, "metrics", "engine_errors")?,
+        latency_p50_us: u64_field(j, "metrics", "latency_p50_us")?,
+        latency_p99_us: u64_field(j, "metrics", "latency_p99_us")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::probe::PROBE_ID_BASE;
+
+    /// Encode → serialize → parse → decode: the full wire path of a value.
+    fn round_trip(msg: &WireMsg) -> WireMsg {
+        let text = encode(msg).to_string();
+        decode(&Json::parse(&text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn request_round_trips_bit_identically() {
+        // Awkward pixels: values whose decimal forms exercise the shortest
+        // round-trip printer, not just tidy fractions.
+        let image: Vec<f32> = (0..784).map(|i| (i as f32 / 783.0).powf(1.37)).collect();
+        let req = InferRequest::new(7, image).with_budget(64, 0.95).with_label(3);
+        let WireMsg::Submit(got) = round_trip(&WireMsg::Submit(req.clone())) else {
+            panic!("wrong variant")
+        };
+        assert_eq!(got, req); // f32 pixels must survive exactly
+        // Unlabeled requests omit the label field entirely.
+        let req = InferRequest::new(9, vec![0.5; 4]);
+        let j = encode(&WireMsg::Submit(req.clone()));
+        assert!(j.get("label").is_none());
+        assert_eq!(round_trip(&WireMsg::Submit(req.clone())), WireMsg::Submit(req));
+    }
+
+    #[test]
+    fn full_width_ids_survive_the_wire() {
+        // Probe ids live at 2^63 — far beyond f64's exact-integer range.
+        let id = PROBE_ID_BASE + 12_345;
+        let req = InferRequest::new(id, vec![0.0; 4]);
+        let WireMsg::Submit(got) = round_trip(&WireMsg::Submit(req)) else {
+            panic!("wrong variant")
+        };
+        assert_eq!(got.id, id);
+    }
+
+    #[test]
+    fn response_and_metrics_round_trip() {
+        let resp = InferResponse {
+            id: 42,
+            prediction: 7,
+            outcome: WtaOutcome { counts: vec![0, 1, 2, 3, 4, 5, 6, 9, 0, 0], abstentions: 2, trials: 32 },
+            trials_used: 30,
+            latency: Duration::from_micros(1234),
+            error: None,
+        };
+        assert_eq!(round_trip(&WireMsg::Response(resp.clone())), WireMsg::Response(resp));
+
+        // In-band failures survive the wire too (the signal a shared
+        // completion channel needs to name the request that died).
+        let failed = InferResponse::failed(43, "peer went away");
+        assert_eq!(
+            round_trip(&WireMsg::Response(failed.clone())),
+            WireMsg::Response(failed)
+        );
+
+        let m = MetricsSnapshot {
+            requests_admitted: 10,
+            requests_completed: 9,
+            trials_executed: 288,
+            batches_executed: 9,
+            rows_packed: 288,
+            trials_saved: 32,
+            engine_errors: 0,
+            latency_p50_us: 120,
+            latency_p99_us: 900,
+        };
+        assert_eq!(round_trip(&WireMsg::Metrics(m.clone())), WireMsg::Metrics(m));
+    }
+
+    #[test]
+    fn control_messages_round_trip() {
+        assert_eq!(
+            round_trip(&WireMsg::Hello { version: PROTOCOL_VERSION }),
+            WireMsg::Hello { version: PROTOCOL_VERSION }
+        );
+        assert_eq!(round_trip(&WireMsg::MetricsReq), WireMsg::MetricsReq);
+        assert_eq!(round_trip(&WireMsg::Goodbye), WireMsg::Goodbye);
+        assert_eq!(
+            round_trip(&WireMsg::Error { id: Some(5), msg: "no healthy children".into() }),
+            WireMsg::Error { id: Some(5), msg: "no healthy children".into() }
+        );
+        assert_eq!(
+            round_trip(&WireMsg::Error { id: None, msg: "x".into() }),
+            WireMsg::Error { id: None, msg: "x".into() }
+        );
+    }
+
+    #[test]
+    fn malformed_frames_are_rejected_with_field_names() {
+        // Not an object / missing tag.
+        assert!(decode(&Json::parse("[1,2]").unwrap()).is_err());
+        let e = decode(&Json::parse(r#"{"t":"warp"}"#).unwrap()).unwrap_err();
+        assert!(format!("{e}").contains("warp"), "{e}");
+        // Submit with a missing image.
+        let e = decode(
+            &Json::parse(r#"{"t":"submit","id":"1","max_trials":4,"confidence":0}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("image"), "{e}");
+        // Response with a non-numeric count.
+        let e = decode(
+            &Json::parse(
+                r#"{"t":"response","id":"1","prediction":0,"counts":[1,"x"],
+                    "abstentions":0,"trials":2,"trials_used":2,"latency_us":5}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("counts"), "{e}");
+        // Hello from something that is not a raca listener.
+        let e = decode(&Json::parse(r#"{"t":"hello","magic":"http","proto":1}"#).unwrap())
+            .unwrap_err();
+        assert!(format!("{e}").contains("magic"), "{e}");
+    }
+
+    #[test]
+    fn version_gate() {
+        assert!(check_version(PROTOCOL_VERSION).is_ok());
+        let e = check_version(PROTOCOL_VERSION + 1).unwrap_err();
+        assert_eq!(
+            e,
+            WireError::Version { peer: PROTOCOL_VERSION + 1, ours: PROTOCOL_VERSION }
+        );
+        assert!(format!("{e}").contains("version mismatch"), "{e}");
+    }
+}

@@ -49,7 +49,7 @@ use crate::nn::{forward, Weights};
 use crate::stats::ci::lead_is_decided;
 use crate::stats::GaussianSource;
 
-use super::{trial_stream_base, Backend, InferRequest, InferResponse, RequestId, Ticket};
+use super::{trial_stream_base, Backend, InferRequest, InferResponse, RequestId};
 
 /// Knobs of the pipelined backend.
 #[derive(Debug, Clone)]
@@ -324,7 +324,7 @@ impl PipelinedFleetBackend {
 }
 
 impl Backend for PipelinedFleetBackend {
-    fn submit(&self, req: InferRequest) -> Result<Ticket> {
+    fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
         ensure!(
             req.image.len() == self.plan.spec.input_dim(),
             "request {} has {} features, the sharded model expects {}",
@@ -332,12 +332,9 @@ impl Backend for PipelinedFleetBackend {
             req.image.len(),
             self.plan.spec.input_dim()
         );
-        let id = req.id;
-        let (reply, rx) = mpsc::channel();
         self.sub_tx
             .send(CtrlMsg::Submit(req, reply, Instant::now()))
-            .map_err(|_| anyhow!("pipelined backend is shut down"))?;
-        Ok(Ticket::new(id, rx))
+            .map_err(|_| anyhow!("pipelined backend is shut down"))
     }
 
     fn metrics(&self) -> MetricsSnapshot {
@@ -486,8 +483,17 @@ fn control_loop(
         // Admit pending requests up to the in-flight cap.
         while active.len() < max_in_flight {
             let Some((req, reply, t0)) = pending.pop_front() else { break };
-            metrics.requests_admitted.fetch_add(1, Relaxed);
             let id = req.id;
+            if active.contains_key(&id) {
+                // Duplicate in-flight id: reject in-band rather than
+                // corrupting the first request's vote state.
+                let _ = reply.send(InferResponse::failed(
+                    id,
+                    format!("request id {id} is already in flight on this pipeline"),
+                ));
+                continue;
+            }
+            metrics.requests_admitted.fetch_add(1, Relaxed);
             if req.max_trials == 0 {
                 let latency = t0.elapsed();
                 metrics.requests_completed.fetch_add(1, Relaxed);
@@ -498,6 +504,7 @@ fn control_loop(
                     outcome: WtaOutcome::new(classes),
                     trials_used: 0,
                     latency,
+                    error: None,
                 });
                 continue;
             }
@@ -630,6 +637,7 @@ fn handle_winners(
         outcome: a.outcome,
         trials_used: recorded,
         latency,
+        error: None,
     });
     // Purge any stale issue-queue entry (early stop can leave one), so a
     // later request reusing this id never gets two round-robin slots.

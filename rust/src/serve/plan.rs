@@ -13,8 +13,14 @@
 //! * [`Topology::Pipeline`] — leaf: one model sharded layer-ranges-per-die
 //!   across N chips ([`crate::arch::ShardPlan`]), activations streamed
 //!   die-to-die;
+//! * [`Topology::Remote`] — leaf: a peer host's `raca serve --listen`
+//!   socket ([`crate::serve::net::RemoteBackend`]) — the tree crosses
+//!   process and machine boundaries here;
 //! * [`Topology::Replicate`] — combinator: N copies of any subtree behind
-//!   a health-reweighted [`Router`].
+//!   a health-reweighted [`Router`];
+//! * [`Topology::Group`] — combinator: *distinct* subtrees behind the
+//!   same router — the multi-host shape `(remote:a, remote:b)` that
+//!   health-steers across machines with zero new routing code.
 //!
 //! [`DeployPlan::compile`] walks the tree and numbers every physical die
 //! once (fleet-wide chip ids ⇒ distinct variation draws per replica);
@@ -38,20 +44,34 @@
 //! # Spec grammar (case-insensitive)
 //!
 //! ```text
-//! node   := '(' node ')'
+//! node   := '(' node { ',' node } ')' [ '@' policy ]
+//!                                               1 node: plain grouping;
+//!                                               2+: route across the
+//!                                               listed (distinct) children
 //!         | COUNT 'x' node [ '@' policy ]       N replicas of node
 //!         | 'die' [ ':' engine ]                engine: native|physical|pjrt
 //!         | 'pipeline' ':' COUNT [ ':b' COUNT ] COUNT dies; :bN = trials per
 //!                                               die-to-die message
+//!         | 'remote' ':' ADDR                   ADDR = host:port of a peer's
+//!                                               `raca serve --listen` socket
 //! policy := round-robin|rr | least-loaded|ll | weighted|wt
 //! ```
 //!
 //! Examples: `die`, `8x(die)@weighted`, `pipeline:3`, `2x(pipeline:3)`,
-//! `pipeline:4:b16`, `2x(2x(die))`.  `raca serve --topology "<spec>"`
-//! and the `"serve": {"topology": "<spec>"}` config key accept this
-//! grammar; the legacy `BackendKind` spellings are parse-only sugar that
-//! map onto canonical trees ([`super::BackendKind::to_topology`]).
+//! `pipeline:4:b16`, `2x(2x(die))`, `remote:10.0.0.7:7433`,
+//! `(remote:a:7433, remote:b:7433)@weighted`, `(pipeline:3, remote:b:7433)`.
+//! `raca serve --topology "<spec>"` and the `"serve": {"topology":
+//! "<spec>"}` config key accept this grammar; the legacy `BackendKind`
+//! spellings are parse-only sugar that map onto canonical trees
+//! ([`super::BackendKind::to_topology`]).
+//!
+//! A `remote:` leaf contributes **no local dies**: its chips are
+//! numbered, programmed and seeded by the host that serves it, which is
+//! also where its bit-parity seed lives — seed the listener and a local
+//! reference alike and `remote:die` votes bit-identically to `die`
+//! (`rust/tests/serve.rs`).
 
+use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{mpsc, Arc, Mutex};
@@ -72,9 +92,11 @@ use crate::fleet::{
 use crate::nn::{ModelSpec, Weights};
 use crate::stats::GaussianSource;
 
+use super::net::RemoteBackend;
+use super::probe::ProbeInjector;
 use super::{
     Backend, InferRequest, InferResponse, PipelineOptions, PipelinedFleetBackend,
-    ReplicatedFleetBackend, ReplicatedOptions, SingleChipBackend, Ticket,
+    ReplicatedFleetBackend, ReplicatedOptions, RequestId, SingleChipBackend,
 };
 
 /// Crossbar tile edge used for shard balancing (the repo-wide default).
@@ -110,8 +132,15 @@ pub enum Topology {
     /// `batch` pins the trials-per-message block size (`None` = the
     /// deployment default, [`BuildOptions::batch`]).
     Pipeline { shards: usize, batch: Option<usize> },
+    /// A peer host's `raca serve --listen` socket: whatever topology that
+    /// listener hosts, reached over the [`crate::serve::net`] wire.
+    Remote { addr: String },
     /// `n` copies of `child` behind a health-reweighted router.
     Replicate { n: usize, policy: RoutePolicy, child: Box<Topology> },
+    /// Distinct children behind one health-reweighted router — the
+    /// heterogeneous/multi-host combinator (`(remote:a, remote:b)`,
+    /// `(pipeline:3, remote:b:7433)`).
+    Group { policy: RoutePolicy, children: Vec<Topology> },
 }
 
 impl Topology {
@@ -143,6 +172,15 @@ impl Topology {
                 }
                 Ok(())
             }
+            Topology::Remote { addr } => {
+                let (host, port) = addr
+                    .rsplit_once(':')
+                    .ok_or_else(|| format!("remote:{addr}: expected remote:<host:port>"))?;
+                if host.is_empty() || port.is_empty() {
+                    return Err(format!("remote:{addr}: expected remote:<host:port>"));
+                }
+                Ok(())
+            }
             Topology::Replicate { n, child, .. } => {
                 if *n == 0 {
                     return Err(
@@ -151,15 +189,25 @@ impl Topology {
                 }
                 child.validate()
             }
+            Topology::Group { children, .. } => {
+                if children.is_empty() {
+                    return Err("a group needs at least one child".into());
+                }
+                children.iter().try_for_each(Topology::validate)
+            }
         }
     }
 
-    /// Total physical dies this tree deploys.
+    /// Total *local* physical dies this tree deploys.  A `remote:` leaf
+    /// contributes zero: its dies are owned (numbered, programmed,
+    /// seeded) by the host serving it.
     pub fn dies(&self) -> usize {
         match self {
             Topology::Die { .. } => 1,
             Topology::Pipeline { shards, .. } => *shards,
+            Topology::Remote { .. } => 0,
             Topology::Replicate { n, child, .. } => n * child.dies(),
+            Topology::Group { children, .. } => children.iter().map(Topology::dies).sum(),
         }
     }
 }
@@ -174,8 +222,23 @@ impl fmt::Display for Topology {
             Topology::Pipeline { shards, batch: Some(b) } => {
                 write!(f, "pipeline:{shards}:b{b}")
             }
+            Topology::Remote { addr } => write!(f, "remote:{addr}"),
             Topology::Replicate { n, policy, child } => {
                 write!(f, "{n}x({child})")?;
+                if *policy != RoutePolicy::default() {
+                    write!(f, "@{}", policy.name())?;
+                }
+                Ok(())
+            }
+            Topology::Group { policy, children } => {
+                write!(f, "(")?;
+                for (i, c) in children.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{c}")?;
+                }
+                write!(f, ")")?;
                 if *policy != RoutePolicy::default() {
                     write!(f, "@{}", policy.name())?;
                 }
@@ -191,18 +254,49 @@ fn split_digits(s: &str) -> (&str, &str) {
     s.split_at(end)
 }
 
+/// Optional `@policy` suffix; returns (policy, remainder).  Terminated by
+/// anything that can follow a node: `)`, `,`, whitespace, or the end.
+fn parse_policy_suffix(s: &str) -> std::result::Result<(RoutePolicy, &str), String> {
+    let Some(p) = s.strip_prefix('@') else {
+        return Ok((RoutePolicy::default(), s));
+    };
+    let end = p
+        .find(|c: char| c == ')' || c == ',' || c.is_whitespace())
+        .unwrap_or(p.len());
+    let policy = RoutePolicy::parse(&p[..end]).ok_or_else(|| {
+        format!(
+            "unknown route policy '{}' (valid: {})",
+            &p[..end],
+            RoutePolicy::SPELLINGS
+        )
+    })?;
+    Ok((policy, &p[end..]))
+}
+
 /// Recursive-descent parser over a lower-cased spec; returns the node and
 /// the unconsumed remainder.
 fn parse_node(s: &str) -> std::result::Result<(Topology, &str), String> {
     let s = s.trim_start();
-    // Parenthesized node.
+    // Parenthesized node, or — with commas — a group of distinct children
+    // routed like replicas: `(remote:a:1, remote:b:1)@weighted`.
     if let Some(inner) = s.strip_prefix('(') {
-        let (node, rest) = parse_node(inner)?;
-        let rest = rest.trim_start();
+        let (first, rest) = parse_node(inner)?;
+        let mut children = vec![first];
+        let mut rest = rest.trim_start();
+        while let Some(r) = rest.strip_prefix(',') {
+            let (node, r) = parse_node(r)?;
+            children.push(node);
+            rest = r.trim_start();
+        }
         let rest = rest
             .strip_prefix(')')
-            .ok_or_else(|| format!("missing ')' after '{node}'"))?;
-        return Ok((node, rest));
+            .ok_or_else(|| format!("missing ')' after '{}'", children.last().unwrap()))?;
+        if children.len() == 1 {
+            // Plain grouping parens: transparent, no policy of their own.
+            return Ok((children.pop().unwrap(), rest));
+        }
+        let (policy, rest) = parse_policy_suffix(rest.trim_start())?;
+        return Ok((Topology::Group { policy, children }, rest));
     }
     // Replicate: `<n>x<node>[@policy]`.
     let (digits, after) = split_digits(s);
@@ -211,22 +305,23 @@ fn parse_node(s: &str) -> std::result::Result<(Topology, &str), String> {
             .parse()
             .map_err(|_| format!("bad replica count '{digits}'"))?;
         let (child, rest) = parse_node(&after[1..])?;
-        let mut rest = rest.trim_start();
-        let mut policy = RoutePolicy::default();
-        if let Some(p) = rest.strip_prefix('@') {
-            let end = p
-                .find(|c: char| c == ')' || c.is_whitespace())
-                .unwrap_or(p.len());
-            policy = RoutePolicy::parse(&p[..end]).ok_or_else(|| {
-                format!(
-                    "unknown route policy '{}' (valid: {})",
-                    &p[..end],
-                    RoutePolicy::SPELLINGS
-                )
-            })?;
-            rest = &p[end..];
-        }
+        let (policy, rest) = parse_policy_suffix(rest.trim_start())?;
         return Ok((Topology::Replicate { n, policy, child: Box::new(child) }, rest));
+    }
+    // Remote leaf: `remote:<host:port>` — the address runs to the next
+    // structural character (`,`, `)`, whitespace) or the end of input.
+    if let Some(rest) = s.strip_prefix("remote") {
+        let rest = rest.strip_prefix(':').ok_or_else(|| {
+            "remote needs an address: remote:<host:port>".to_string()
+        })?;
+        let end = rest
+            .find(|c: char| c == ')' || c == ',' || c.is_whitespace())
+            .unwrap_or(rest.len());
+        let addr = &rest[..end];
+        if addr.is_empty() {
+            return Err("remote needs an address: remote:<host:port>".into());
+        }
+        return Ok((Topology::Remote { addr: addr.to_string() }, &rest[end..]));
     }
     // Pipeline leaf: `pipeline:<dies>[:b<batch>]`.
     if let Some(rest) = s.strip_prefix("pipeline") {
@@ -278,7 +373,8 @@ fn parse_node(s: &str) -> std::result::Result<(Topology, &str), String> {
     }
     Err(format!(
         "expected a topology node at '{s}' — valid: die[:native|physical|pjrt], \
-         pipeline:<dies>[:b<batch>], <n>x(<node>)[@policy]"
+         pipeline:<dies>[:b<batch>], remote:<host:port>, <n>x(<node>)[@policy], \
+         (<node>, <node>, …)[@policy]"
     ))
 }
 
@@ -292,7 +388,12 @@ fn parse_node(s: &str) -> std::result::Result<(Topology, &str), String> {
 pub enum PlanNode {
     Die { engine: EngineSel, chip: ChipId },
     Pipeline { shards: usize, batch: Option<usize>, chip_base: ChipId },
+    /// A peer listener: consumes no local chip ids (the remote host
+    /// numbers and seeds its own dies).
+    Remote { addr: String },
     Replicate { policy: RoutePolicy, children: Vec<PlanNode> },
+    /// Distinct children behind one router (the multi-host combinator).
+    Group { policy: RoutePolicy, children: Vec<PlanNode> },
 }
 
 /// `Topology -> DeployPlan -> Box<dyn Backend>`, step one.
@@ -332,9 +433,14 @@ fn alloc(t: &Topology, next: &mut usize) -> PlanNode {
             *next += shards;
             PlanNode::Pipeline { shards: *shards, batch: *batch, chip_base }
         }
+        Topology::Remote { addr } => PlanNode::Remote { addr: addr.clone() },
         Topology::Replicate { n, policy, child } => PlanNode::Replicate {
             policy: *policy,
             children: (0..*n).map(|_| alloc(child, next)).collect(),
+        },
+        Topology::Group { policy, children } => PlanNode::Group {
+            policy: *policy,
+            children: children.iter().map(|c| alloc(c, next)).collect(),
         },
     }
 }
@@ -359,9 +465,25 @@ fn render(node: &PlanNode, spec: &ModelSpec, indent: usize, out: &mut String) {
                 chip_base + shards
             ));
         }
+        PlanNode::Remote { addr } => {
+            out.push_str(&format!(
+                "{pad}remote {addr} (wire protocol v{}, peer-owned dies)\n",
+                crate::serve::net::PROTOCOL_VERSION
+            ));
+        }
         PlanNode::Replicate { policy, children } => {
             out.push_str(&format!(
                 "{pad}replicate × {} ({})\n",
+                children.len(),
+                policy.name()
+            ));
+            for c in children {
+                render(c, spec, indent + 1, out);
+            }
+        }
+        PlanNode::Group { policy, children } => {
+            out.push_str(&format!(
+                "{pad}group × {} ({})\n",
                 children.len(),
                 policy.name()
             ));
@@ -393,10 +515,14 @@ pub struct BuildOptions {
     pub batch: usize,
     /// Held-out set + calibrator: fused replica fleets calibrate against
     /// it up front (when variation is on) and recalibrate drifting dies
-    /// live.
+    /// live.  Also the image source for injected health probes.
     pub calibration: Option<(Dataset, Calibrator)>,
     /// Health steering cadence (completions between reweigh passes).
     pub reweigh_every: u64,
+    /// Labeled health probes per caller request, in [0, 1] (0 disables).
+    /// Applied at every routing level (fused fleets and routers alike),
+    /// drawing from `calibration`'s held-out set.
+    pub probe_rate: f64,
 }
 
 impl Default for BuildOptions {
@@ -410,6 +536,7 @@ impl Default for BuildOptions {
             batch: 8,
             calibration: None,
             reweigh_every: 32,
+            probe_rate: 0.0,
         }
     }
 }
@@ -420,6 +547,12 @@ impl Default for BuildOptions {
 pub fn build(topo: &Topology, nominal: &Weights, opts: &BuildOptions) -> Result<Box<dyn Backend>> {
     let plan = DeployPlan::compile(topo)?;
     build_node(&plan.root, nominal, opts)
+}
+
+/// Probe source for a router level: the held-out calibration slice.
+fn probe_injector(opts: &BuildOptions) -> Option<ProbeInjector> {
+    let (ds, _) = opts.calibration.as_ref()?;
+    ProbeInjector::new(ds.clone(), opts.probe_rate)
 }
 
 fn build_node(node: &PlanNode, nominal: &Weights, opts: &BuildOptions) -> Result<Box<dyn Backend>> {
@@ -440,6 +573,9 @@ fn build_node(node: &PlanNode, nominal: &Weights, opts: &BuildOptions) -> Result
             };
             Ok(Box::new(PipelinedFleetBackend::start(nominal, popts)?))
         }
+        // The process boundary: dies on the other side belong to the
+        // listener (its weights, its seed, its chip numbering).
+        PlanNode::Remote { addr } => Ok(Box::new(RemoteBackend::connect(addr)?)),
         PlanNode::Replicate { policy, children } => {
             if let Some(fused) = fuse_native_dies(children, *policy, nominal, opts)? {
                 return Ok(fused);
@@ -448,7 +584,24 @@ fn build_node(node: &PlanNode, nominal: &Weights, opts: &BuildOptions) -> Result
                 .iter()
                 .map(|c| build_node(c, nominal, opts))
                 .collect::<Result<Vec<_>>>()?;
-            Ok(Box::new(RouterBackend::start(built, *policy, opts.reweigh_every)))
+            Ok(Box::new(RouterBackend::start(
+                built,
+                *policy,
+                probe_injector(opts),
+                opts.reweigh_every,
+            )))
+        }
+        PlanNode::Group { policy, children } => {
+            let built = children
+                .iter()
+                .map(|c| build_node(c, nominal, opts))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Box::new(RouterBackend::start(
+                built,
+                *policy,
+                probe_injector(opts),
+                opts.reweigh_every,
+            )))
         }
     }
 }
@@ -494,6 +647,7 @@ fn fuse_native_dies(
             seed: opts.seed,
             min_trials: opts.scheduler.min_trials,
             reweigh_every: opts.reweigh_every,
+            probe_rate: opts.probe_rate,
         },
     ))))
 }
@@ -545,6 +699,7 @@ fn build_die(
                     seed: opts.seed,
                     min_trials: opts.scheduler.min_trials,
                     reweigh_every: opts.reweigh_every,
+                    probe_rate: opts.probe_rate,
                 },
             )))
         }
@@ -580,8 +735,8 @@ struct PjrtDie {
 
 #[cfg(feature = "pjrt")]
 impl Backend for PjrtDie {
-    fn submit(&self, req: InferRequest) -> Result<Ticket> {
-        self.inner.submit(req)
+    fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+        self.inner.submit_to(req, reply)
     }
 
     fn metrics(&self) -> MetricsSnapshot {
@@ -616,17 +771,17 @@ pub fn lift_fleet<E: TrialEngine + 'static>(
 }
 
 // ---------------------------------------------------------------------------
-// RouterBackend: the generic Replicate combinator at runtime.
+// RouterBackend: the generic Replicate/Group combinator at runtime.
 // ---------------------------------------------------------------------------
 
-struct RelayJob {
-    /// The child's response channel for this request.
-    rx: mpsc::Receiver<InferResponse>,
-    /// The caller's ticket channel.
-    reply: mpsc::Sender<InferResponse>,
+/// Book-keeping for one in-flight routed request, keyed by request id.
+struct PendingJob {
+    child: usize,
     label: Option<i32>,
     max_trials: u32,
     submitted: Instant,
+    /// `None` for injected probes: the relay consumes their responses.
+    reply: Option<mpsc::Sender<InferResponse>>,
 }
 
 struct RouterShared {
@@ -635,38 +790,49 @@ struct RouterShared {
     weights: Mutex<Vec<f64>>,
     /// In-flight requests per child.
     loads: Vec<AtomicU64>,
+    /// In-flight requests by id (the relay removes entries on completion).
+    pending: Mutex<HashMap<RequestId, PendingJob>>,
     completed: AtomicU64,
     reweigh_every: u64,
 }
 
 /// A [`Backend`] routing over child backends — the runtime of a
-/// [`Topology::Replicate`] whose child is itself a subtree (pipelines,
-/// nested replicas, heterogeneous dies).  Each child gets a relay thread
-/// that awaits its tickets, feeds the shared [`HealthMonitor`] (labeled
-/// probe traffic drives accuracy; everything drives latency/abstention),
-/// and periodically reweighs traffic / evicts floor-breakers — the same
-/// live steering the flat replicated fleet does, one level up.
+/// [`Topology::Replicate`] whose child is itself a subtree, and of every
+/// [`Topology::Group`] (pipelines, nested replicas, remote hosts,
+/// heterogeneous dies).  All children complete into **one** relay
+/// channel ([`Backend::submit_to`] with a shared sender), so responses
+/// are delivered in completion order — a slow request never delays the
+/// delivery of requests that finished behind it — while the single relay
+/// thread feeds the shared [`HealthMonitor`] (labeled traffic and
+/// injected probes drive accuracy; everything drives
+/// latency/abstention) and periodically reweighs traffic / evicts
+/// floor-breakers: the same live steering the flat replicated fleet
+/// does, one level up.
 ///
 /// Children have no recalibrate hook from up here: fleets recalibrate
 /// their *own* dies; the router only reweighs and evicts.
 pub struct RouterBackend {
     children: Vec<Box<dyn Backend>>,
-    txs: Vec<mpsc::Sender<RelayJob>>,
-    relays: Vec<JoinHandle<()>>,
+    /// The shared completion channel (cloned into every child submit).
+    /// `Option` so drop can close it *after* the children flush.
+    done_tx: Option<mpsc::Sender<InferResponse>>,
+    relay: Option<JoinHandle<()>>,
     router: Router,
+    probes: Option<ProbeInjector>,
     shared: Arc<RouterShared>,
     metrics: Arc<Metrics>,
 }
 
 impl RouterBackend {
     /// Route over `children` with `policy`; reweigh health every
-    /// `reweigh_every` completions.
+    /// `reweigh_every` completions; optionally inject labeled probes.
     pub fn start(
         children: Vec<Box<dyn Backend>>,
         policy: RoutePolicy,
+        probes: Option<ProbeInjector>,
         reweigh_every: u64,
     ) -> Self {
-        assert!(!children.is_empty(), "a replicate node needs at least one child");
+        assert!(!children.is_empty(), "a replicate/group node needs at least one child");
         let n = children.len();
         let health = HealthMonitor::new(n, HealthConfig::default());
         let initial_weights = health.traffic_weights();
@@ -674,24 +840,29 @@ impl RouterBackend {
             health: Mutex::new(health),
             weights: Mutex::new(initial_weights),
             loads: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            pending: Mutex::new(HashMap::new()),
             completed: AtomicU64::new(0),
             reweigh_every: reweigh_every.max(1),
         });
         let metrics = Metrics::new();
-        let mut txs = Vec::with_capacity(n);
-        let mut relays = Vec::with_capacity(n);
-        for idx in 0..n {
-            let (tx, rx) = mpsc::channel::<RelayJob>();
-            txs.push(tx);
+        let (done_tx, done_rx) = mpsc::channel::<InferResponse>();
+        let relay = {
             let shared = shared.clone();
             let metrics = metrics.clone();
-            let relay = std::thread::Builder::new()
-                .name(format!("raca-route-{idx}"))
-                .spawn(move || relay_loop(idx, rx, shared, metrics))
-                .expect("spawning router relay thread");
-            relays.push(relay);
+            std::thread::Builder::new()
+                .name("raca-route-relay".into())
+                .spawn(move || relay_loop(done_rx, shared, metrics))
+                .expect("spawning router relay thread")
+        };
+        Self {
+            children,
+            done_tx: Some(done_tx),
+            relay: Some(relay),
+            router: Router::new(policy),
+            probes,
+            shared,
+            metrics,
         }
-        Self { children, txs, relays, router: Router::new(policy), shared, metrics }
     }
 
     pub fn num_children(&self) -> usize {
@@ -707,10 +878,18 @@ impl RouterBackend {
     pub fn traffic_weights(&self) -> Vec<f64> {
         self.shared.weights.lock().unwrap().clone()
     }
-}
 
-impl Backend for RouterBackend {
-    fn submit(&self, req: InferRequest) -> Result<Ticket> {
+    /// Health probes injected so far ([`BuildOptions::probe_rate`]).
+    pub fn probes_sent(&self) -> u64 {
+        self.probes.as_ref().map(|p| p.sent()).unwrap_or(0)
+    }
+
+    /// Route one job (caller request or probe) onto a healthy child.
+    fn dispatch(
+        &self,
+        req: InferRequest,
+        reply: Option<mpsc::Sender<InferResponse>>,
+    ) -> Result<()> {
         let healthy = self.shared.health.lock().unwrap().healthy();
         let loads: Vec<u64> = self.shared.loads.iter().map(|l| l.load(Relaxed)).collect();
         let weights = self.shared.weights.lock().unwrap().clone();
@@ -719,21 +898,55 @@ impl Backend for RouterBackend {
             .pick(&healthy, &loads, &weights)
             .ok_or_else(|| anyhow!("no healthy children left under the router"))?;
         let id = req.id;
-        let label = req.label;
-        let max_trials = req.max_trials;
-        let submitted = Instant::now();
-        let inner = self.children[child].submit(req)?;
-        self.metrics.requests_admitted.fetch_add(1, Relaxed);
-        self.shared.loads[child].fetch_add(1, Relaxed);
-        let (reply, rx) = mpsc::channel();
-        if self.txs[child]
-            .send(RelayJob { rx: inner.rx, reply, label, max_trials, submitted })
-            .is_err()
+        let caller = reply.is_some();
         {
-            self.shared.loads[child].fetch_sub(1, Relaxed);
-            return Err(anyhow!("router relay {child} is gone"));
+            let mut pending = self.shared.pending.lock().unwrap();
+            if pending.contains_key(&id) {
+                bail!("request id {id} is already in flight under this router");
+            }
+            pending.insert(
+                id,
+                PendingJob {
+                    child,
+                    label: req.label,
+                    max_trials: req.max_trials,
+                    submitted: Instant::now(),
+                    reply,
+                },
+            );
         }
-        Ok(Ticket::new(id, rx))
+        // Load up BEFORE the child sees the request: a fast completion
+        // may hit the relay's decrement before this thread resumes, and
+        // the counter must never wrap below zero.
+        self.shared.loads[child].fetch_add(1, Relaxed);
+        let done_tx = self.done_tx.as_ref().expect("router alive").clone();
+        if let Err(e) = self.children[child].submit_to(req, done_tx) {
+            self.shared.pending.lock().unwrap().remove(&id);
+            self.shared.loads[child].fetch_sub(1, Relaxed);
+            return Err(e);
+        }
+        if caller {
+            self.metrics.requests_admitted.fetch_add(1, Relaxed);
+        }
+        Ok(())
+    }
+}
+
+impl Backend for RouterBackend {
+    fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+        let budget = req.max_trials;
+        self.dispatch(req, Some(reply))?;
+        // Piggyback a labeled probe when one is due — routed like any
+        // request, so the health monitor's accuracy signal stays fed even
+        // on fully unlabeled traffic.
+        if let Some(probes) = &self.probes {
+            if let Some(probe) = probes.next(budget) {
+                if let Err(e) = self.dispatch(probe, None) {
+                    log::warn!("probe injection failed: {e:#}");
+                }
+            }
+        }
+        Ok(())
     }
 
     fn metrics(&self) -> MetricsSnapshot {
@@ -747,57 +960,74 @@ impl Backend for RouterBackend {
 
 impl Drop for RouterBackend {
     fn drop(&mut self) {
-        // Close relay inboxes first; the relays drain their in-flight
-        // tickets (the children are still alive as fields) and exit, then
-        // each child tears its own workers down on drop.
-        self.txs.clear();
-        for r in self.relays.drain(..) {
+        // Children first: each finishes its in-flight work and flushes the
+        // responses into the still-running relay (callers' waits complete
+        // across shutdown).  Then closing our completion sender ends the
+        // relay once it has drained.
+        for c in self.children.drain(..) {
+            c.shutdown();
+        }
+        self.done_tx.take();
+        if let Some(r) = self.relay.take() {
             let _ = r.join();
         }
     }
 }
 
+/// The single completion relay: responses from *all* children arrive
+/// here in completion order; each is matched to its pending entry,
+/// recorded, and forwarded to its caller immediately.
 fn relay_loop(
-    child: usize,
-    rx: mpsc::Receiver<RelayJob>,
+    done_rx: mpsc::Receiver<InferResponse>,
     shared: Arc<RouterShared>,
     metrics: Arc<Metrics>,
 ) {
-    while let Ok(job) = rx.recv() {
-        let resp = match job.rx.recv() {
-            Ok(r) => r,
-            Err(_) => {
-                // The child died with this request in flight; dropping
-                // `job.reply` surfaces the loss to the caller's wait().
-                shared.loads[child].fetch_sub(1, Relaxed);
-                continue;
-            }
+    while let Ok(resp) = done_rx.recv() {
+        let Some(job) = shared.pending.lock().unwrap().remove(&resp.id) else {
+            log::warn!("router relay: response for unknown request {}", resp.id);
+            continue;
         };
-        shared.loads[child].fetch_sub(1, Relaxed);
+        shared.loads[job.child].fetch_sub(1, Relaxed);
+        // An in-band failure (dead remote peer, duplicate id downstream):
+        // clean up and forward — the caller's wait() turns it into an
+        // error — but record nothing: the request never ran.
+        if resp.error.is_some() {
+            if let Some(reply) = job.reply {
+                let _ = reply.send(resp);
+            }
+            continue;
+        }
         let latency = job.submitted.elapsed();
         let abstained =
             resp.outcome.trials > 0 && resp.outcome.abstentions == resp.outcome.trials;
         let correct = job.label.map(|l| resp.prediction == l);
-        metrics.trials_executed.fetch_add(resp.trials_used as u64, Relaxed);
-        metrics
-            .trials_saved
-            .fetch_add(job.max_trials.saturating_sub(resp.trials_used) as u64, Relaxed);
-        metrics.requests_completed.fetch_add(1, Relaxed);
-        metrics.record_latency(latency);
         if job.max_trials > 0 {
             // The child-reported latency is the service-time signal; the
-            // relay's own `latency` additionally includes router queue
-            // wait and is what this backend's metrics report.
+            // router's own `latency` additionally includes queue wait and
+            // is what this backend's metrics report.
             let service_us = resp.latency.as_micros() as u64;
-            shared.health.lock().unwrap().record(child, correct, abstained, service_us);
+            shared.health.lock().unwrap().record(job.child, correct, abstained, service_us);
         }
-        let _ = job.reply.send(resp);
+        // Probe trials are real engine work (counted); probes are not
+        // caller traffic (request counters/latency stay caller-only).
+        metrics.trials_executed.fetch_add(resp.trials_used as u64, Relaxed);
+        if let Some(reply) = job.reply {
+            metrics
+                .trials_saved
+                .fetch_add(job.max_trials.saturating_sub(resp.trials_used) as u64, Relaxed);
+            metrics.requests_completed.fetch_add(1, Relaxed);
+            metrics.record_latency(latency);
+            let _ = reply.send(resp);
+        }
         let done = shared.completed.fetch_add(1, Relaxed) + 1;
         if done % shared.reweigh_every == 0 {
             let steer = shared.health.lock().unwrap().steer();
             *shared.weights.lock().unwrap() = steer.weights;
         }
     }
+    // All senders gone (teardown): anything still pending will never
+    // complete — drop the reply senders so blocked waits error out.
+    shared.pending.lock().unwrap().clear();
 }
 
 #[cfg(test)]
@@ -822,6 +1052,12 @@ mod tests {
             "2x(pipeline:3)",
             "3x(pipeline:2:b4)@least-loaded",
             "2x(2x(die)@weighted)",
+            "remote:10.0.0.7:7433",
+            "2x(remote:10.0.0.7:7433)",
+            "(remote:a:1, remote:b:2)",
+            "(remote:a:1, pipeline:2)@weighted",
+            "2x((remote:a:1, remote:b:2))",
+            "(die, die, die)@least-loaded",
         ] {
             let t = parse(spec);
             assert_eq!(t.to_string(), spec, "canonical spelling");
@@ -836,6 +1072,43 @@ mod tests {
         assert_eq!(parse(" 4x( die )@Weighted "), parse("4x(die)@weighted"));
         assert_eq!(parse("2xdie"), parse("2x(die)"));
         assert_eq!(parse("2x4x(die)").dies(), 8);
+    }
+
+    #[test]
+    fn remote_and_group_parse_with_clear_errors() {
+        // Addresses run to the next structural character; case folding is
+        // harmless (DNS names are case-insensitive).
+        assert_eq!(
+            parse("Remote:Host.Example:7433"),
+            Topology::Remote { addr: "host.example:7433".into() }
+        );
+        assert_eq!(parse(" ( remote:a:1 , remote:b:2 ) "), parse("(remote:a:1, remote:b:2)"));
+        // A remote leaf owns no local dies; groups sum their children.
+        assert_eq!(parse("remote:a:1").dies(), 0);
+        assert_eq!(parse("(remote:a:1, pipeline:3)").dies(), 3);
+        assert_eq!(parse("2x((remote:a:1, remote:b:2))").dies(), 0);
+        // Errors: missing address, missing port, dangling commas.
+        assert!(Topology::parse("remote").is_err());
+        assert!(Topology::parse("remote:").is_err());
+        let e = format!("{:#}", Topology::parse("remote:justahost").unwrap_err());
+        assert!(e.contains("host:port"), "unhelpful: {e}");
+        assert!(Topology::parse("(die, die").is_err());
+        assert!(Topology::parse("(die,)").is_err());
+        let e = format!("{:#}", Topology::parse("(die, die)@fastest").unwrap_err());
+        assert!(e.contains("round-robin"), "unhelpful: {e}");
+        // Programmatic empty groups die at compile.
+        let t = Topology::Group { policy: RoutePolicy::RoundRobin, children: vec![] };
+        assert!(DeployPlan::compile(&t).is_err());
+    }
+
+    #[test]
+    fn remote_leaves_consume_no_chip_ids() {
+        let plan = DeployPlan::compile(&parse("(pipeline:2, remote:h:1, die)")).unwrap();
+        assert_eq!(plan.total_dies, 3, "2 pipeline dies + 1 die, none for the remote");
+        let desc = plan.describe(&ModelSpec::paper());
+        assert!(desc.contains("remote h:1"), "{desc}");
+        assert!(desc.contains("group × 3"), "{desc}");
+        assert!(desc.contains("die [chip 2]"), "{desc}");
     }
 
     #[test]
@@ -904,7 +1177,7 @@ mod tests {
         let children: Vec<Box<dyn Backend>> = (0..2)
             .map(|_| build(&parse("die"), &w, &opts).unwrap())
             .collect();
-        let b = RouterBackend::start(children, RoutePolicy::RoundRobin, 8);
+        let b = RouterBackend::start(children, RoutePolicy::RoundRobin, None, 8);
         assert_eq!(b.num_children(), 2);
         let tickets: Vec<_> = (0..10u64)
             .map(|i| {
@@ -924,6 +1197,121 @@ mod tests {
         let h = b.shared.health.lock().unwrap();
         let labeled: usize = (0..2).map(|c| h.chip(c).labeled_samples()).sum();
         assert_eq!(labeled, 10);
+    }
+
+    type HeldJob = (InferRequest, mpsc::Sender<InferResponse>);
+
+    /// Test double for the completion-order contract: completes every
+    /// request immediately except the one id it is told to hold.
+    #[derive(Default)]
+    struct Gate {
+        held: Mutex<Vec<HeldJob>>,
+    }
+
+    impl Gate {
+        fn release(&self) {
+            for (req, tx) in self.held.lock().unwrap().drain(..) {
+                let _ = tx.send(canned_response(&req));
+            }
+        }
+    }
+
+    fn canned_response(req: &InferRequest) -> InferResponse {
+        InferResponse {
+            id: req.id,
+            prediction: 0,
+            outcome: crate::neuron::WtaOutcome::new(10),
+            trials_used: req.max_trials,
+            latency: std::time::Duration::from_micros(1),
+            error: None,
+        }
+    }
+
+    struct OutOfOrderChild {
+        gate: Arc<Gate>,
+        hold: u64,
+    }
+
+    impl Backend for OutOfOrderChild {
+        fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+            if req.id == self.hold {
+                self.gate.held.lock().unwrap().push((req, reply));
+            } else {
+                let _ = reply.send(canned_response(&req));
+            }
+            Ok(())
+        }
+
+        fn metrics(&self) -> MetricsSnapshot {
+            Metrics::new().snapshot()
+        }
+
+        fn shutdown(self: Box<Self>) {}
+    }
+
+    impl Drop for OutOfOrderChild {
+        fn drop(&mut self) {
+            // Abandon held requests so the router relay can drain at
+            // teardown even when a test fails before releasing the gate.
+            self.gate.held.lock().unwrap().clear();
+        }
+    }
+
+    /// Regression for the PR-3 note: relays delivered completions FIFO
+    /// per child, so one slow request inflated the tail latency of every
+    /// request that finished behind it on the same child.  Delivery is
+    /// now completion-order.
+    #[test]
+    fn router_delivers_completions_out_of_submission_order() {
+        let gate = Arc::new(Gate::default());
+        let child: Box<dyn Backend> =
+            Box::new(OutOfOrderChild { gate: gate.clone(), hold: 0 });
+        let b = RouterBackend::start(vec![child], RoutePolicy::RoundRobin, None, 8);
+        let slow = b.submit(InferRequest::new(0, vec![0.1; 4]).with_budget(4, 0.0)).unwrap();
+        let fast = b.submit(InferRequest::new(1, vec![0.2; 4]).with_budget(4, 0.0)).unwrap();
+        // Request 1 finished first and must be delivered while request 0
+        // is still in flight — a FIFO relay parks it behind 0 forever.
+        let r = fast
+            .rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("request 1 completed but its delivery was blocked behind request 0");
+        assert_eq!(r.id, 1);
+        gate.release();
+        assert_eq!(b.wait(slow).unwrap().id, 0);
+        assert_eq!(b.metrics().requests_completed, 2);
+    }
+
+    #[test]
+    fn router_probes_feed_health_on_unlabeled_traffic() {
+        let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 5);
+        let opts = BuildOptions::default();
+        let children: Vec<Box<dyn Backend>> = (0..2)
+            .map(|_| build(&parse("die"), &w, &opts).unwrap())
+            .collect();
+        let cal = crate::dataset::synth::generate(8, 0xCA1);
+        let probes = ProbeInjector::new(cal, 1.0);
+        assert!(probes.is_some());
+        let b = RouterBackend::start(children, RoutePolicy::RoundRobin, probes, 8);
+        let tickets: Vec<_> = (0..6u64)
+            .map(|i| {
+                // Callers never label anything.
+                let img = vec![(i % 5) as f32 / 5.0; 784];
+                b.submit(InferRequest::new(i, img).with_budget(4, 0.0)).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            b.wait(t).unwrap();
+        }
+        assert_eq!(b.probes_sent(), 6, "rate 1.0 ⇒ one probe per request");
+        // Probes are invisible in caller-facing request metrics.
+        let m = b.metrics();
+        assert_eq!(m.requests_admitted, 6);
+        assert_eq!(m.requests_completed, 6);
+        let shared = b.shared.clone();
+        Box::new(b).shutdown(); // flush in-flight probes deterministically
+        let h = shared.health.lock().unwrap();
+        let labeled: usize = (0..2).map(|c| h.chip(c).labeled_samples()).sum();
+        assert_eq!(labeled, 6, "every probe reached the health monitor");
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Auto-probe traffic: synthesized labeled requests that keep health
+//! monitors fed when callers never send labels.
+//!
+//! The fleet backends reweight traffic by *accuracy* only when requests
+//! carry ground-truth labels ([`InferRequest::with_label`]) — live
+//! traffic never does.  A [`ProbeInjector`] closes that gap (the ROADMAP
+//! open item): it holds a slice of the held-out calibration set and, at a
+//! configurable rate (`serve.probe_rate` probes per caller request, in
+//! [0, 1]), emits a labeled probe request alongside real traffic.  Probes
+//! ride the normal dispatch path — router pick, worker execution, health
+//! recording — so the accuracy signal measures exactly what live requests
+//! experience; their responses are discarded and they are excluded from
+//! the caller-facing request metrics (trial counters still include them:
+//! probe trials are real engine work).
+//!
+//! Probe ids live in a reserved upper half of the id space
+//! ([`PROBE_ID_BASE`]) so they can never collide with caller request ids;
+//! the wire codec encodes ids as strings precisely so these full-width
+//! ids survive JSON.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::Mutex;
+
+use crate::dataset::Dataset;
+
+use super::{InferRequest, RequestId};
+
+/// Probe ids occupy `[2^63, 2^64)`; callers own everything below.
+pub const PROBE_ID_BASE: RequestId = 1 << 63;
+
+/// Id-lane width per injector: each [`ProbeInjector`] instance numbers
+/// its probes from `PROBE_ID_BASE + lane·2^44`, so nested probed routers
+/// in one process (each level owns an injector) can never collide on an
+/// in-flight probe id.  2^19 lanes × 2^44 probes each.
+const LANE_SHIFT: u32 = 44;
+const LANE_MASK: u64 = (1 << (63 - LANE_SHIFT)) - 1;
+
+/// Process-wide lane allocator.
+static INJECTOR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Deterministic probe source: cycles through a labeled dataset, one
+/// probe per `1/rate` caller submissions (fractional credit accumulates).
+pub struct ProbeInjector {
+    set: Dataset,
+    rate: f64,
+    /// First id of this injector's reserved lane.
+    id_base: RequestId,
+    credit: Mutex<f64>,
+    cursor: AtomicUsize,
+    next_id: AtomicU64,
+    sent: AtomicU64,
+}
+
+impl ProbeInjector {
+    /// `None` when probing is disabled (`rate <= 0`) or there is nothing
+    /// to probe with.  Rates above 1 are clamped: at most one probe per
+    /// caller request (config validation enforces the same bound).
+    pub fn new(set: Dataset, rate: f64) -> Option<Self> {
+        if !(rate > 0.0) || set.is_empty() {
+            return None;
+        }
+        let lane = INJECTOR_SEQ.fetch_add(1, Relaxed) & LANE_MASK;
+        Some(Self {
+            set,
+            rate: rate.min(1.0),
+            id_base: PROBE_ID_BASE + (lane << LANE_SHIFT),
+            credit: Mutex::new(0.0),
+            cursor: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+            sent: AtomicU64::new(0),
+        })
+    }
+
+    /// Whether an id belongs to the reserved probe space.
+    pub fn is_probe(id: RequestId) -> bool {
+        id >= PROBE_ID_BASE
+    }
+
+    /// Probes emitted so far.
+    pub fn sent(&self) -> u64 {
+        self.sent.load(Relaxed)
+    }
+
+    /// Call once per caller submission; returns a labeled probe request
+    /// when enough credit has accumulated.  The probe mirrors the
+    /// triggering request's trial budget (fixed spend — confidence 0 —
+    /// so the health monitor's latency signal is comparable across dies).
+    pub fn next(&self, max_trials: u32) -> Option<InferRequest> {
+        {
+            let mut c = self.credit.lock().unwrap();
+            *c += self.rate;
+            if *c < 1.0 {
+                return None;
+            }
+            *c -= 1.0;
+        }
+        let i = self.cursor.fetch_add(1, Relaxed) % self.set.len();
+        let id = self.id_base + self.next_id.fetch_add(1, Relaxed);
+        self.sent.fetch_add(1, Relaxed);
+        Some(
+            InferRequest::new(id, self.set.image(i).to_vec())
+                .with_budget(max_trials.max(1), 0.0)
+                .with_label(self.set.label(i)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    #[test]
+    fn disabled_rates_and_empty_sets_yield_no_injector() {
+        let ds = synth::generate(8, 1);
+        assert!(ProbeInjector::new(ds.clone(), 0.0).is_none());
+        assert!(ProbeInjector::new(ds.clone(), -1.0).is_none());
+        assert!(ProbeInjector::new(ds, f64::NAN).is_none());
+        assert!(ProbeInjector::new(ds_empty(), 0.5).is_none());
+    }
+
+    fn ds_empty() -> Dataset {
+        Dataset { images: Vec::new(), labels: Vec::new() }
+    }
+
+    #[test]
+    fn fractional_rate_accumulates_credit() {
+        let p = ProbeInjector::new(synth::generate(8, 1), 0.25).unwrap();
+        let fired: Vec<bool> = (0..8).map(|_| p.next(4).is_some()).collect();
+        // One probe per four submissions, deterministically.
+        assert_eq!(fired.iter().filter(|&&f| f).count(), 2);
+        assert_eq!(p.sent(), 2);
+    }
+
+    #[test]
+    fn probes_are_labeled_cycled_and_id_reserved() {
+        let ds = synth::generate(3, 2);
+        let p = ProbeInjector::new(ds.clone(), 1.0).unwrap();
+        let base = p.next(6).unwrap().id;
+        assert!(ProbeInjector::is_probe(base));
+        for k in 1..5u64 {
+            let probe = p.next(6).unwrap();
+            assert!(ProbeInjector::is_probe(probe.id));
+            // Sequential within this injector's reserved lane.
+            assert_eq!(probe.id, base + k);
+            let i = (k as usize) % ds.len();
+            assert_eq!(probe.label, Some(ds.label(i)));
+            assert_eq!(probe.image, ds.image(i));
+            assert_eq!(probe.max_trials, 6);
+            assert_eq!(probe.confidence, 0.0);
+        }
+        assert!(!ProbeInjector::is_probe(0));
+        assert!(!ProbeInjector::is_probe(PROBE_ID_BASE - 1));
+    }
+
+    #[test]
+    fn injectors_get_disjoint_id_lanes() {
+        // Nested probed routers each own an injector; their in-flight
+        // probe ids must never collide with one another.
+        let ds = synth::generate(2, 4);
+        let a = ProbeInjector::new(ds.clone(), 1.0).unwrap();
+        let b = ProbeInjector::new(ds, 1.0).unwrap();
+        let ia = a.next(4).unwrap().id;
+        let ib = b.next(4).unwrap().id;
+        assert_ne!(ia, ib, "two injectors shared an id lane");
+        assert!(ia.abs_diff(ib) >= 1 << LANE_SHIFT);
+        assert!(ProbeInjector::is_probe(ia) && ProbeInjector::is_probe(ib));
+    }
+
+    #[test]
+    fn rates_above_one_clamp_to_one_probe_per_request() {
+        let p = ProbeInjector::new(synth::generate(4, 3), 7.5).unwrap();
+        for _ in 0..4 {
+            assert!(p.next(4).is_some());
+        }
+        assert_eq!(p.sent(), 4);
+    }
+}

@@ -37,7 +37,8 @@ use crate::fleet::{
 use crate::neuron::WtaOutcome;
 use crate::stats::ci::lead_is_decided;
 
-use super::{trial_stream_base, Backend, InferRequest, InferResponse, Ticket};
+use super::probe::ProbeInjector;
+use super::{trial_stream_base, Backend, InferRequest, InferResponse};
 
 /// Knobs of the replicated backend.
 #[derive(Debug, Clone)]
@@ -48,11 +49,17 @@ pub struct ReplicatedOptions {
     pub min_trials: u32,
     /// Refresh traffic weights / drift flags every this many completions.
     pub reweigh_every: u64,
+    /// Labeled health probes injected per caller request, in [0, 1]
+    /// (0 disables).  Probes draw from the calibration set handed to
+    /// [`ReplicatedFleetBackend::start`], so accuracy steering works on
+    /// unlabeled traffic; they are excluded from the request metrics but
+    /// their trials count as executed (real engine work).
+    pub probe_rate: f64,
 }
 
 impl Default for ReplicatedOptions {
     fn default() -> Self {
-        Self { seed: 0x5E12E, min_trials: 5, reweigh_every: 32 }
+        Self { seed: 0x5E12E, min_trials: 5, reweigh_every: 32, probe_rate: 0.0 }
     }
 }
 
@@ -60,6 +67,8 @@ struct Job {
     req: InferRequest,
     reply: mpsc::Sender<InferResponse>,
     submitted: Instant,
+    /// Injected health probe: feeds the monitor, skips request metrics.
+    probe: bool,
 }
 
 /// State shared between the submit path and every worker.
@@ -80,6 +89,7 @@ pub struct ReplicatedFleetBackend {
     txs: Vec<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     router: Router,
+    probes: Option<ProbeInjector>,
     shared: Arc<Shared>,
     metrics: Arc<Metrics>,
 }
@@ -110,6 +120,11 @@ impl ReplicatedFleetBackend {
             completed: AtomicU64::new(0),
         });
         let metrics = Metrics::new();
+        // Probes draw from the same held-out set the calibrator uses — the
+        // slice callers never see, so probe accuracy is honest.
+        let probes = cal
+            .as_ref()
+            .and_then(|(ds, _)| ProbeInjector::new(ds.clone(), opts.probe_rate));
         let cal = cal.map(Arc::new);
         let mut txs = Vec::with_capacity(n);
         let mut workers = Vec::with_capacity(n);
@@ -127,11 +142,44 @@ impl ReplicatedFleetBackend {
                 .expect("spawning fleet worker thread");
             workers.push(worker);
         }
-        Self { txs, workers, router, shared, metrics }
+        Self { txs, workers, router, probes, shared, metrics }
     }
 
     pub fn num_chips(&self) -> usize {
         self.txs.len()
+    }
+
+    /// Health probes injected so far ([`ReplicatedOptions::probe_rate`]).
+    pub fn probes_sent(&self) -> u64 {
+        self.probes.as_ref().map(|p| p.sent()).unwrap_or(0)
+    }
+
+    /// Route one job (caller request or probe) onto a healthy worker.
+    fn enqueue(
+        &self,
+        req: InferRequest,
+        reply: mpsc::Sender<InferResponse>,
+        probe: bool,
+    ) -> Result<()> {
+        let healthy = self.shared.health.lock().unwrap().healthy();
+        let loads: Vec<u64> = self.shared.loads.iter().map(|l| l.load(Relaxed)).collect();
+        let weights = self.shared.weights.lock().unwrap().clone();
+        let chip = self
+            .router
+            .pick(&healthy, &loads, &weights)
+            .ok_or_else(|| anyhow!("no healthy chips left in the fleet"))?;
+        if !probe {
+            self.metrics.requests_admitted.fetch_add(1, Relaxed);
+        }
+        self.shared.loads[chip].fetch_add(1, Relaxed);
+        if self.txs[chip]
+            .send(Job { req, reply, submitted: Instant::now(), probe })
+            .is_err()
+        {
+            self.shared.loads[chip].fetch_sub(1, Relaxed);
+            return Err(anyhow!("fleet worker {chip} is gone"));
+        }
+        Ok(())
     }
 
     /// Ids still eligible for routing.
@@ -161,26 +209,21 @@ impl ReplicatedFleetBackend {
 }
 
 impl Backend for ReplicatedFleetBackend {
-    fn submit(&self, req: InferRequest) -> Result<Ticket> {
-        let healthy = self.shared.health.lock().unwrap().healthy();
-        let loads: Vec<u64> = self.shared.loads.iter().map(|l| l.load(Relaxed)).collect();
-        let weights = self.shared.weights.lock().unwrap().clone();
-        let chip = self
-            .router
-            .pick(&healthy, &loads, &weights)
-            .ok_or_else(|| anyhow!("no healthy chips left in the fleet"))?;
-        let id = req.id;
-        let (reply, rx) = mpsc::channel();
-        self.metrics.requests_admitted.fetch_add(1, Relaxed);
-        self.shared.loads[chip].fetch_add(1, Relaxed);
-        if self.txs[chip]
-            .send(Job { req, reply, submitted: Instant::now() })
-            .is_err()
-        {
-            self.shared.loads[chip].fetch_sub(1, Relaxed);
-            return Err(anyhow!("fleet worker {chip} is gone"));
+    fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+        let budget = req.max_trials;
+        self.enqueue(req, reply, false)?;
+        // Piggyback a labeled probe on live traffic when one is due: the
+        // worker records its health sample like any labeled request; the
+        // response goes nowhere (the receiver is dropped right here).
+        if let Some(probes) = &self.probes {
+            if let Some(probe) = probes.next(budget) {
+                let (tx, _rx) = mpsc::channel();
+                if let Err(e) = self.enqueue(probe, tx, true) {
+                    log::warn!("probe injection failed: {e:#}");
+                }
+            }
         }
-        Ok(Ticket::new(id, rx))
+        Ok(())
     }
 
     fn metrics(&self) -> MetricsSnapshot {
@@ -264,10 +307,14 @@ fn worker_loop<E: TrialEngine>(
         let abstained = outcome.abstentions == outcome.trials;
         let correct = job.req.label.map(|l| prediction == l);
 
+        // Probe trials are real engine work (counted); probes are not
+        // caller traffic (requests/latency stay caller-only).
         metrics.trials_executed.fetch_add(used as u64, Relaxed);
-        metrics.trials_saved.fetch_add((job.req.max_trials - used) as u64, Relaxed);
-        metrics.requests_completed.fetch_add(1, Relaxed);
-        metrics.record_latency(latency);
+        if !job.probe {
+            metrics.trials_saved.fetch_add((job.req.max_trials - used) as u64, Relaxed);
+            metrics.requests_completed.fetch_add(1, Relaxed);
+            metrics.record_latency(latency);
+        }
         // A zero-budget request executed nothing: answering it must not
         // charge the die an abstention/miss (the pipelined backend's
         // zero-budget path likewise bypasses all per-die accounting).
@@ -282,6 +329,7 @@ fn worker_loop<E: TrialEngine>(
             outcome,
             trials_used: used,
             latency,
+            error: None,
         });
 
         // Periodic live steering: evict floor-breakers, flag drifters for
@@ -353,7 +401,7 @@ mod tests {
                 c.engine.seed = 7;
             }
             let b = ReplicatedFleetBackend::start(fleet, None, ReplicatedOptions::default());
-            let tickets: Vec<Ticket> = (0..6u64)
+            let tickets: Vec<_> = (0..6u64)
                 .map(|i| {
                     let img = vec![(i % 3) as f32 / 3.0; 784];
                     b.submit(InferRequest::new(i, img).with_budget(8, 0.0)).unwrap()
@@ -384,6 +432,45 @@ mod tests {
         assert_eq!(labeled, 40);
         drop(h);
         assert_eq!(b.traffic_weights().len(), 2);
+    }
+
+    #[test]
+    fn probe_injection_feeds_health_from_unlabeled_traffic() {
+        let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 5);
+        let fleet = Fleet::program_native(
+            &w,
+            2,
+            &VariationModel::lognormal(0.05),
+            RoutePolicy::RoundRobin,
+            99,
+        );
+        let cal = crate::dataset::synth::generate(12, 0xCA1);
+        let b = ReplicatedFleetBackend::start(
+            fleet,
+            Some((cal, Calibrator::quick(3))),
+            ReplicatedOptions { probe_rate: 0.5, ..Default::default() },
+        );
+        // Callers never label anything — probes must close the gap.
+        let tickets: Vec<_> = (0..10u64)
+            .map(|i| {
+                let img = vec![(i % 5) as f32 / 5.0; 784];
+                b.submit(InferRequest::new(i, img).with_budget(3, 0.0)).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            b.wait(t).unwrap();
+        }
+        assert_eq!(b.probes_sent(), 5, "rate 0.5 over 10 requests");
+        // Caller-facing request metrics exclude probes; trial counters
+        // include them (probes run real trials: 10×3 + 5×3).
+        let m = b.metrics();
+        assert_eq!(m.requests_admitted, 10);
+        assert_eq!(m.requests_completed, 10);
+        let shared = b.shared.clone();
+        Box::new(b).shutdown(); // flush in-flight probes deterministically
+        let h = shared.health.lock().unwrap();
+        let labeled: usize = (0..2).map(|c| h.chip(c).labeled_samples()).sum();
+        assert_eq!(labeled, 5, "every probe reached the health monitor");
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub type RequestId = u64;
 /// replicated backend the votes additionally depend on which die served
 /// the request (each die keeps its own RNG identity), so reproducibility
 /// holds per fixed fleet shape and routing.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct InferRequest {
     pub id: RequestId,
     /// 784 pixels in [0, 1].
@@ -50,7 +50,7 @@ impl InferRequest {
 }
 
 /// Completed classification.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct InferResponse {
     pub id: RequestId,
     /// Majority-vote class (−1 if every trial abstained).
@@ -61,6 +61,27 @@ pub struct InferResponse {
     pub trials_used: u32,
     /// Wall-clock latency from submit to completion.
     pub latency: std::time::Duration,
+    /// In-band failure: the request was admitted but could not be served
+    /// (duplicate in-flight id, dead remote peer, …).
+    /// [`crate::serve::Backend::wait`] turns this into an `Err`, and the
+    /// signal survives shared completion channels — a router relay or a
+    /// network session multiplexing many tickets still learns exactly
+    /// which request died (a dropped sender could not say).
+    pub error: Option<String>,
+}
+
+impl InferResponse {
+    /// Synthesize a failure response for `id` (zero trials, no votes).
+    pub fn failed(id: RequestId, msg: impl Into<String>) -> Self {
+        Self {
+            id,
+            prediction: -1,
+            outcome: WtaOutcome::new(0),
+            trials_used: 0,
+            latency: std::time::Duration::ZERO,
+            error: Some(msg.into()),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -6,11 +6,13 @@
 //! This is the deployment shape of PR-0/PR-1's `raca infer`, now reached
 //! through the same trait as the fleet backends.
 
+use std::sync::mpsc;
+
 use anyhow::Result;
 
 use crate::coordinator::{MetricsSnapshot, Server, SchedulerConfig, TrialRunner};
 
-use super::{Backend, InferRequest, Ticket};
+use super::{Backend, InferRequest, InferResponse};
 
 /// Single-die serving session (scheduler thread + batched engine).
 pub struct SingleChipBackend {
@@ -29,10 +31,8 @@ impl SingleChipBackend {
 }
 
 impl Backend for SingleChipBackend {
-    fn submit(&self, req: InferRequest) -> Result<Ticket> {
-        let id = req.id;
-        let rx = self.server.client().submit_request(req)?;
-        Ok(Ticket::new(id, rx))
+    fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+        self.server.client().submit_request_to(req, reply)
     }
 
     fn metrics(&self) -> MetricsSnapshot {

@@ -1,10 +1,15 @@
 //! Minimal JSON parser/writer (no serde in the offline vendor set).
 //!
 //! Supports the full JSON grammar; numbers are f64 (adequate for the
-//! manifest/weights metadata this repo reads).  Not performance-critical.
+//! manifest/weights metadata this repo reads — u64 request ids travel as
+//! decimal strings on the wire, see [`crate::serve::net::wire`]).  Also
+//! home of the length-prefixed frame reader/writer the serving wire layer
+//! streams JSON values over ([`read_frame`]/[`write_frame`]).
+//! Not performance-critical.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io::{self, Read, Write};
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -95,12 +100,19 @@ impl Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json error at byte {at}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
     pub at: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -339,6 +351,77 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
     write!(f, "\"")
 }
 
+// ---------------------------------------------------------------------------
+// Length-prefixed JSON frames (the serve::net wire format)
+// ---------------------------------------------------------------------------
+
+/// Hard cap on a single frame's payload.  A length prefix beyond this is
+/// treated as a corrupt (or hostile) stream instead of an allocation
+/// request; a full 784-pixel request frame is ~20 KiB, so 16 MiB leaves
+/// three orders of magnitude of headroom.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Write `j` as one frame: a 4-byte big-endian payload length, then the
+/// compact JSON bytes.  Flushes, so a frame is on the wire when this
+/// returns.
+pub fn write_frame<W: Write>(w: &mut W, j: &Json) -> io::Result<()> {
+    let payload = j.to_string();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("refusing to write a {}-byte frame (cap {MAX_FRAME_BYTES})", bytes.len()),
+        ));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Read one frame off a byte stream.  `Ok(None)` on a clean EOF at a
+/// frame boundary (the peer hung up between messages); EOF inside a
+/// frame, an oversized length prefix, or a payload that is not valid
+/// JSON all surface as `InvalidData` errors — the caller should drop the
+/// connection, not retry.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Json>> {
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "stream ended inside a frame header",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let n = u32::from_be_bytes(len) as usize;
+    if n > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {n} exceeds the {MAX_FRAME_BYTES}-byte cap"),
+        ));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            io::Error::new(io::ErrorKind::InvalidData, "stream ended inside a frame payload")
+        } else {
+            e
+        }
+    })?;
+    let text = std::str::from_utf8(&buf)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame payload is not UTF-8"))?;
+    Json::parse(text)
+        .map(Some)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("bad frame payload: {e}")))
+}
+
 /// Convenience builders used by the figure/CSV writers.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -392,5 +475,40 @@ mod tests {
         for (s, v) in [("0", 0.0), ("-0.5", -0.5), ("1e3", 1000.0), ("2.5E-2", 0.025)] {
             assert_eq!(Json::parse(s).unwrap().as_f64(), Some(v), "{s}");
         }
+    }
+
+    #[test]
+    fn frames_round_trip_back_to_back() {
+        let a = obj(vec![("x", num(1.5)), ("s", Json::Str("hé\"llo".into()))]);
+        let b = Json::Arr(vec![Json::Null, Json::Bool(true)]);
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &a).unwrap();
+        write_frame(&mut buf, &b).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), Some(a));
+        assert_eq!(read_frame(&mut r).unwrap(), Some(b));
+        // Clean EOF at the frame boundary.
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_error() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &num(7.0)).unwrap();
+        // EOF inside the header.
+        let mut r = &buf[..2];
+        assert!(read_frame(&mut r).is_err());
+        // EOF inside the payload.
+        let mut r = &buf[..buf.len() - 1];
+        assert!(read_frame(&mut r).is_err());
+        // Length prefix beyond the cap.
+        let huge = ((MAX_FRAME_BYTES + 1) as u32).to_be_bytes();
+        let mut r = &huge[..];
+        assert!(read_frame(&mut r).is_err());
+        // Valid length, garbage payload.
+        let mut bad: Vec<u8> = 4u32.to_be_bytes().to_vec();
+        bad.extend_from_slice(b"zzzz");
+        let mut r = &bad[..];
+        assert!(read_frame(&mut r).is_err());
     }
 }

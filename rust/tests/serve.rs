@@ -191,6 +191,9 @@ fn topology_grammar_round_trips() {
         "8x(die)@weighted",
         "2x(pipeline:3)",
         "2x(2x(die)@weighted)",
+        "remote:10.0.0.7:7433",
+        "(remote:a:7433, remote:b:7433)@weighted",
+        "(pipeline:3, remote:b:7433)",
     ] {
         let t = topo(spec);
         assert_eq!(t.to_string(), spec, "canonical spelling of '{spec}'");
@@ -330,4 +333,188 @@ fn lifted_fleet_serves_with_snapshots() {
     assert_eq!(snap.aggregate().served, 9);
     assert_eq!(snap.load_imbalance(), 0, "round-robin must balance: {snap}");
     assert_eq!(b.healthy().len(), 3);
+}
+
+// ---- the wire layer: remote:<addr> as a first-class topology leaf --------
+
+/// The tentpole acceptance bar: `remote:die` over a loopback listener
+/// votes **bit-identically** to a local `die` backend at equal
+/// `(seed, trial_idx)` with `variation: None`.  Ids and images cross the
+/// wire exactly; the listener derives trial streams from its own seed and
+/// the unchanged request id — so the socket is invisible to the votes.
+#[test]
+fn remote_die_votes_bit_identical_to_local_die() {
+    let w = trained();
+    let seed = 0x11E7;
+    let p = TrialParams::default();
+
+    // Host: a single die behind a loopback listener (port 0 = ephemeral).
+    let host = build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap();
+    let server = raca::serve::net::serve(host, "127.0.0.1:0").unwrap();
+
+    // Client: the same die reached through the remote leaf.  The client's
+    // own seed is deliberately different — only the listener's governs.
+    let remote_spec = format!("remote:{}", server.addr());
+    let t = Topology::parse(&remote_spec).unwrap();
+    assert_eq!(t.dies(), 0, "a remote leaf owns no local dies");
+    let remote =
+        build(&t, &w, &BuildOptions { seed: 0xDEAD, ..Default::default() }).unwrap();
+
+    // Local twin + unsharded reference.
+    let local = build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap();
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+
+    for i in 0..6u64 {
+        let img = image(i);
+        let got = remote
+            .classify(InferRequest::new(i, img.clone()).with_budget(18, 0.0))
+            .unwrap();
+        let want_local = local
+            .classify(InferRequest::new(i, img.clone()).with_budget(18, 0.0))
+            .unwrap();
+        let want = reference.infer(&img, p, 18, trial_stream_base(seed, i));
+        assert_eq!(
+            got.outcome.counts, want.counts,
+            "remote:die diverged from the unsharded engine on request {i}"
+        );
+        assert_eq!(got.outcome.counts, want_local.outcome.counts);
+        assert_eq!(got.outcome.abstentions, want.abstentions);
+        assert_eq!(got.prediction, want.prediction());
+        assert_eq!(got.trials_used, 18);
+        assert_eq!(got.id, i);
+    }
+
+    // metrics() crosses the wire: the listener answers for its backend.
+    let m = remote.metrics();
+    assert_eq!(m.requests_completed, 6, "remote metrics snapshot: {m}");
+    assert!(m.trials_executed >= 6 * 18);
+    assert_eq!(server.sessions_started(), 1);
+
+    remote.shutdown();
+    local.shutdown();
+    drop(server);
+}
+
+/// The `2x(remote:pipeline:2)` shape: two loopback listeners each hosting
+/// a `pipeline:2`, routed by a group tree.  Pipeline parity makes the
+/// whole thing shape-independent: whichever host serves a request, its
+/// votes match the unsharded reference at the *listeners'* shared seed.
+#[test]
+fn group_of_remote_pipelines_matches_reference_over_two_listeners() {
+    let w = trained();
+    let seed = 0xD157;
+    let p = TrialParams::default();
+    let mk_listener = || {
+        let b =
+            build(&topo("pipeline:2"), &w, &BuildOptions { seed, ..Default::default() })
+                .unwrap();
+        raca::serve::net::serve(b, "127.0.0.1:0").unwrap()
+    };
+    let s1 = mk_listener();
+    let s2 = mk_listener();
+
+    let spec = format!("(remote:{}, remote:{})", s1.addr(), s2.addr());
+    let t = Topology::parse(&spec).unwrap();
+    assert_eq!(t.to_string(), spec, "canonical spelling");
+    let b = build(&t, &w, &BuildOptions::default()).unwrap();
+
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    // More requests than hosts: both listeners definitely serve.
+    let tickets: Vec<_> = (0..10u64)
+        .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(16, 0.0)).unwrap())
+        .collect();
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let got = b.wait(ticket).unwrap();
+        let want = reference.infer(&image(i as u64), p, 16, trial_stream_base(seed, i as u64));
+        assert_eq!(
+            got.outcome.counts, want.counts,
+            "request {i} diverged from the reference (whichever host served it)"
+        );
+        assert_eq!(got.prediction, want.prediction());
+    }
+    assert_eq!(b.metrics().requests_completed, 10);
+    assert_eq!(s1.sessions_started() + s2.sessions_started(), 2);
+    b.shutdown();
+}
+
+/// Version mismatches and malformed frames produce an `Error` frame and a
+/// closed connection — never a hang, never a crash of the listener.
+#[test]
+fn listener_rejects_version_mismatch_and_malformed_frames() {
+    use raca::serve::net::{WireMsg, PROTOCOL_VERSION};
+    use raca::util::json;
+
+    let w = trained();
+    let host = build(&topo("die"), &w, &BuildOptions::default()).unwrap();
+    let server = raca::serve::net::serve(host, "127.0.0.1:0").unwrap();
+
+    // Peer speaking a future protocol: refused with an error frame.
+    {
+        let mut s = std::net::TcpStream::connect(server.addr()).unwrap();
+        let hello = json::read_frame(&mut s).unwrap().expect("server speaks first");
+        let WireMsg::Hello { version } = raca::serve::net::wire::decode(&hello).unwrap()
+        else {
+            panic!("expected hello")
+        };
+        assert_eq!(version, PROTOCOL_VERSION);
+        json::write_frame(
+            &mut s,
+            &raca::serve::net::wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION + 9 }),
+        )
+        .unwrap();
+        let err = json::read_frame(&mut s).unwrap().expect("error frame");
+        let WireMsg::Error { msg, .. } = raca::serve::net::wire::decode(&err).unwrap() else {
+            panic!("expected error frame")
+        };
+        assert!(msg.contains("version mismatch"), "{msg}");
+        // …and the server closes the session.
+        assert_eq!(json::read_frame(&mut s).unwrap(), None);
+    }
+
+    // Valid handshake, then a garbage frame: per the codec contract the
+    // session reports the malformed frame and closes.
+    {
+        let mut s = std::net::TcpStream::connect(server.addr()).unwrap();
+        let _hello = json::read_frame(&mut s).unwrap().expect("server speaks first");
+        json::write_frame(
+            &mut s,
+            &raca::serve::net::wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION }),
+        )
+        .unwrap();
+        // A frame that parses as JSON but not as a protocol message…
+        json::write_frame(&mut s, &raca::util::json::Json::Str("junk".into())).unwrap();
+        let err = json::read_frame(&mut s).unwrap().expect("error frame");
+        assert!(matches!(
+            raca::serve::net::wire::decode(&err).unwrap(),
+            WireMsg::Error { .. }
+        ));
+        assert_eq!(json::read_frame(&mut s).unwrap(), None, "session closed");
+    }
+
+    // The listener survived both bad sessions and still serves real ones.
+    let remote = raca::serve::RemoteBackend::connect(&server.addr().to_string()).unwrap();
+    let r = remote
+        .classify(InferRequest::new(1, image(1)).with_budget(4, 0.0))
+        .unwrap();
+    assert_eq!(r.trials_used, 4);
+    Box::new(remote).shutdown();
+}
+
+/// Duplicate in-flight ids are a per-request error, not a session or
+/// listener failure (the client refuses before the frame is even sent).
+#[test]
+fn duplicate_in_flight_ids_fail_cleanly_over_the_wire() {
+    let w = trained();
+    let host = build(&topo("die"), &w, &BuildOptions::default()).unwrap();
+    let server = raca::serve::net::serve(host, "127.0.0.1:0").unwrap();
+    let remote = raca::serve::RemoteBackend::connect(&server.addr().to_string()).unwrap();
+    // A big budget keeps request 7 in flight while we reuse its id.
+    let slow = remote
+        .submit(InferRequest::new(7, image(0)).with_budget(200, 0.0))
+        .unwrap();
+    let dup = remote.submit(InferRequest::new(7, image(1)).with_budget(4, 0.0));
+    assert!(dup.is_err(), "client-side duplicate detection");
+    let r = remote.wait(slow).unwrap();
+    assert_eq!(r.trials_used, 200);
+    Box::new(remote).shutdown();
 }
