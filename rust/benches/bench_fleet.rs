@@ -21,16 +21,30 @@
 //!   (the `serve::net` wire layer): a latency lane, catching socket-path
 //!   regressions (frame codec bloat, missing TCP_NODELAY, relay stalls).
 //!
+//! Before the topology lanes, a **native-kernel comparison** times the
+//! raw engine on one image: the scalar one-trial-at-a-time loop vs the
+//! §Perf iteration-5 trial-blocked bit-packed kernel at B ∈ {1, 8, 64}
+//! (single-threaded `trials_cached`, so the B lanes isolate the kernel
+//! itself), plus the full `infer` path (B=64 + block-level thread
+//! sharding) — the production lane the smoke gate asserts on.
+//!
+//! `--json <path>` additionally writes every lane to a machine-readable
+//! report (`BENCH_native.json` by convention — see README §Performance).
+//!
 //! `--smoke` runs a CI-sized workload and *asserts* the acceptance bars:
+//! blocked native infer (B=64) ≥ 1.5× the scalar kernel,
 //! `pipeline:4` ≥ 2× the single-die trial throughput,
 //! `2x(pipeline:2)` ≥ `pipeline:4` at the same 4 dies, and loopback
 //! `remote:die` within 2× the local single-die request latency.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use raca::device::VariationModel;
+use raca::engine::{NativeEngine, TrialParams};
 use raca::nn::{ModelSpec, Weights};
 use raca::serve::{build, Backend, BuildOptions, InferRequest, Topology};
+use raca::util::json::{self, Json};
 
 /// Push `reqs` fixed-budget requests through `backend`; trials/second.
 fn throughput(backend: &dyn Backend, images: &[Vec<f32>], trials: u32, reqs: usize) -> f64 {
@@ -53,9 +67,15 @@ fn throughput(backend: &dyn Backend, images: &[Vec<f32>], trials: u32, reqs: usi
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let json_path = argv
+        .windows(2)
+        .find(|w| w[0] == "--json")
+        .map(|w| w[1].clone());
     let (warmup, reqs, trials) = if smoke { (12, 48, 8u32) } else { (24, 192, 12u32) };
     let spec = ModelSpec::new(vec![784, 256, 192, 128, 10]);
+    let model_name = "784-256-192-128-10";
     let w = Weights::random(spec, 7);
     let seed = 0xBE7C;
     // Dense pseudo-images (~4% zeros): keeps the single-chip baseline
@@ -64,17 +84,67 @@ fn main() {
         .map(|i| (0..784).map(|j| ((i * 31 + j) % 23) as f32 / 23.0).collect())
         .collect();
 
+    // --- native-kernel lanes: scalar loop vs trial-blocked kernel ----------
+    // Raw engine on one image, no serving stack: isolates the §Perf
+    // iteration-5 win (weight traffic amortized across a block + blocks
+    // sharded over threads) from scheduler/channel effects.
+    let p = TrialParams::default();
+    let kernel_trials = if smoke { 4096usize } else { 16384 };
+    let engine = NativeEngine::new(Arc::new(w.clone()), seed);
+    let kimg = &images[0];
+    println!("== bench_fleet: native kernel, scalar vs blocked ({kernel_trials} trials/image) ==");
+    let time_tps = |f: &mut dyn FnMut()| -> f64 {
+        f(); // warmup (touches weights, fills scratch)
+        let t0 = Instant::now();
+        f();
+        kernel_trials as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+    };
+    let scalar_tps = time_tps(&mut || {
+        std::hint::black_box(engine.infer_scalar(kimg, p, kernel_trials, 0));
+    });
+    println!("  scalar (one trial at a time)   : {scalar_tps:>9.0} trials/s  (baseline)");
+    // Kernel-only lanes: `trials_cached` is the raw blocked kernel with NO
+    // thread sharding, so B = 1 really isolates loop-inversion overhead
+    // and B = 64 is the pure weight-traffic amortization — one thread on
+    // both sides of the comparison.
+    let z1 = engine.precompute(kimg);
+    let kernel_indices: Vec<u64> = (0..kernel_trials as u64).collect();
+    let mut blocked_lanes: Vec<(String, f64)> = Vec::new();
+    for b in [1usize, 8, 64] {
+        let eb = engine.clone().with_trial_block(b);
+        let tps = time_tps(&mut || {
+            std::hint::black_box(eb.trials_cached(&z1, p, &kernel_indices));
+        });
+        println!(
+            "  blocked B={b:<3} (1 thread)       : {tps:>9.0} trials/s  ({:.2}x)",
+            tps / scalar_tps.max(1e-9)
+        );
+        blocked_lanes.push((format!("b{b}"), tps));
+    }
+    // The full production path: blocked kernel at B=64 *plus* block-level
+    // thread sharding inside `NativeEngine::infer` — this is the lane the
+    // smoke gate holds to ≥ 1.5× scalar.
+    let blocked_infer_tps = time_tps(&mut || {
+        std::hint::black_box(engine.infer(kimg, p, kernel_trials, 0));
+    });
+    println!(
+        "  blocked infer B=64 + threads   : {blocked_infer_tps:>9.0} trials/s  ({:.2}x)",
+        blocked_infer_tps / scalar_tps.max(1e-9)
+    );
+
     println!(
         "== bench_fleet: serving throughput by topology ({reqs} reqs × {trials} trials, 4-layer model) =="
     );
 
-    let measure = |topo_spec: &str, variation: Option<VariationModel>| -> f64 {
+    let mut backend_lanes: Vec<(String, f64)> = Vec::new();
+    let mut measure = |topo_spec: &str, variation: Option<VariationModel>| -> f64 {
         let topo = Topology::parse(topo_spec).expect("topology spec");
         let opts = BuildOptions { seed, variation, ..Default::default() };
         let b = build(&topo, &w, &opts).expect("building deployment");
         let _ = throughput(b.as_ref(), &images, trials, warmup);
         let tps = throughput(b.as_ref(), &images, trials, reqs);
         b.shutdown();
+        backend_lanes.push((topo_spec.to_string(), tps));
         tps
     };
 
@@ -151,7 +221,62 @@ fn main() {
         local_lat * 1e6,
     );
 
+    // Machine-readable trajectory: every lane of this run as one JSON
+    // object (written before the smoke gates, so a failing gate still
+    // leaves the evidence on disk).
+    if let Some(path) = &json_path {
+        let j = json::obj(vec![
+            ("bench", Json::Str("bench_fleet".into())),
+            ("smoke", Json::Bool(smoke)),
+            ("model", Json::Str(model_name.into())),
+            ("trials_per_request", json::num(trials as f64)),
+            (
+                "native_kernel",
+                json::obj(vec![
+                    ("trials_per_image", json::num(kernel_trials as f64)),
+                    ("scalar_trials_per_s", json::num(scalar_tps)),
+                    (
+                        "blocked_trials_per_s",
+                        json::obj(
+                            blocked_lanes
+                                .iter()
+                                .map(|(k, v)| (k.as_str(), json::num(*v)))
+                                .collect(),
+                        ),
+                    ),
+                    ("blocked_infer_trials_per_s", json::num(blocked_infer_tps)),
+                ]),
+            ),
+            (
+                "backend_trials_per_s",
+                json::obj(
+                    backend_lanes
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), json::num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "loopback_us_per_req",
+                json::obj(vec![
+                    ("local_die", json::num(local_lat * 1e6)),
+                    ("remote_die", json::num(remote_lat * 1e6)),
+                ]),
+            ),
+        ]);
+        std::fs::write(path, format!("{j}\n")).expect("writing --json report");
+        println!("wrote {path}");
+    }
+
     if smoke {
+        let blocked_ratio = blocked_infer_tps / scalar_tps.max(1e-9);
+        assert!(
+            blocked_ratio >= 1.5,
+            "--smoke: blocked native infer (B=64 + thread sharding) must be ≥1.5x the scalar path, got {blocked_ratio:.2}x"
+        );
+        println!(
+            "smoke OK: blocked infer = {blocked_ratio:.2}x scalar native path (≥ 1.5x required)"
+        );
         let ratio = pipelined_at_4 / single_tps.max(1e-9);
         assert!(
             ratio >= 2.0,

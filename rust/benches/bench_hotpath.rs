@@ -1,20 +1,53 @@
 //! Bench: the production hot path — AOT/PJRT trial executables at every
 //! batch size, the ideal executable, and coordinator overhead vs raw
 //! engine calls.  This is the §Perf reference workload (EXPERIMENTS.md).
+//!
+//! `--json <path>` writes each lane's units/s to a machine-readable
+//! report (same shape as `bench_fleet --json`); a missing artifact store
+//! writes `{"skipped": true}` so trajectory tooling can tell "not run"
+//! from "ran and regressed".
 
 use raca::coordinator::{SchedulerConfig, Server};
 use raca::dataset::Dataset;
 use raca::engine::{TrialParams, XlaEngine};
 use raca::runtime::ArtifactStore;
-use raca::util::bench::bench_units;
+use raca::util::bench::{bench_units, BenchResult};
+use raca::util::json::{self, Json};
+
+fn write_report(path: &str, skipped: bool, lanes: &[BenchResult]) {
+    let j = json::obj(vec![
+        ("bench", Json::Str("bench_hotpath".into())),
+        ("skipped", Json::Bool(skipped)),
+        (
+            "units_per_s",
+            json::obj(
+                lanes
+                    .iter()
+                    .map(|r| (r.name.as_str(), json::num(r.units_per_sec())))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(path, format!("{j}\n")).expect("writing --json report");
+    println!("wrote {path}");
+}
 
 fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let json_path = argv
+        .windows(2)
+        .find(|w| w[0] == "--json")
+        .map(|w| w[1].clone());
     println!("== bench_hotpath: AOT/PJRT + coordinator ==");
     let dir = ArtifactStore::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: run `make artifacts` first");
+        if let Some(path) = &json_path {
+            write_report(path, true, &[]);
+        }
         return;
     }
+    let mut lanes: Vec<BenchResult> = Vec::new();
     let ds = Dataset::load(&dir.join("data").join("test")).expect("dataset");
     let engine = XlaEngine::start(dir).expect("engine");
     let h = engine.handle();
@@ -29,10 +62,16 @@ fn main() {
             xs.extend_from_slice(ds.image(i % ds.len()));
         }
         let mut seed = 0u32;
-        bench_units(&format!("trial_fwd_b{b} execute (trials/iter={b})"), 3, 15, b as f64, || {
-            seed = seed.wrapping_add(1);
-            std::hint::black_box(h.run_trials(xs.clone(), b, seed, p).expect("run"));
-        });
+        lanes.push(bench_units(
+            &format!("trial_fwd_b{b} execute (trials/iter={b})"),
+            3,
+            15,
+            b as f64,
+            || {
+                seed = seed.wrapping_add(1);
+                std::hint::black_box(h.run_trials(xs.clone(), b, seed, p).expect("run"));
+            },
+        ));
     }
 
     // --- ideal executable ------------------------------------------------
@@ -41,9 +80,15 @@ fn main() {
         for i in 0..b {
             xs.extend_from_slice(ds.image(i % ds.len()));
         }
-        bench_units(&format!("ideal_fwd_b{b} execute (images/iter={b})"), 3, 15, b as f64, || {
-            std::hint::black_box(h.run_ideal(xs.clone(), b).expect("run"));
-        });
+        lanes.push(bench_units(
+            &format!("ideal_fwd_b{b} execute (images/iter={b})"),
+            3,
+            15,
+            b as f64,
+            || {
+                std::hint::black_box(h.run_ideal(xs.clone(), b).expect("run"));
+            },
+        ));
     }
 
     // --- coordinator overhead -----------------------------------------
@@ -58,7 +103,7 @@ fn main() {
         xs32.extend_from_slice(ds.image(i));
     }
     let mut seed = 1000u32;
-    bench_units(
+    lanes.push(bench_units(
         &format!("raw engine: {raw_batches} batch-32 executes ({total_trials} trials)"),
         1,
         8,
@@ -69,9 +114,9 @@ fn main() {
                 std::hint::black_box(h.run_trials(xs32.clone(), 32, seed, p).expect("run"));
             }
         },
-    );
+    ));
 
-    bench_units(
+    lanes.push(bench_units(
         &format!("coordinator: {n_req} requests x {trials_per} trials (batch 32)"),
         1,
         8,
@@ -88,5 +133,9 @@ fn main() {
                 rx.recv().expect("response");
             }
         },
-    );
+    ));
+
+    if let Some(path) = &json_path {
+        write_report(path, false, &lanes);
+    }
 }

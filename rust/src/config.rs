@@ -200,7 +200,7 @@ impl RunConfig {
                 s,
                 &[
                     "backend", "topology", "chips", "shards", "depth", "batch",
-                    "probe_rate", "listen", "seed",
+                    "trial_block", "probe_rate", "listen", "seed",
                 ],
                 "serve",
             )?;
@@ -231,6 +231,9 @@ impl RunConfig {
             if let Some(v) = s.get("batch").and_then(Json::as_usize) {
                 cfg.serve.batch = v;
             }
+            if let Some(v) = s.get("trial_block").and_then(Json::as_usize) {
+                cfg.serve.trial_block = v;
+            }
             if let Some(v) = s.get("probe_rate").and_then(Json::as_f64) {
                 cfg.serve.probe_rate = v;
             }
@@ -252,6 +255,10 @@ impl RunConfig {
             "config: serve.shards must be at least 1 (and at most the model's layer count)"
         );
         ensure!(cfg.serve.batch > 0, "config: serve.batch must be at least 1");
+        ensure!(
+            cfg.serve.trial_block > 0,
+            "config: serve.trial_block must be at least 1 (trials per blocked-kernel pass)"
+        );
         ensure!(
             (0.0..=1.0).contains(&cfg.serve.probe_rate),
             "config: serve.probe_rate must be in [0, 1] (probes per caller request)"
@@ -320,7 +327,8 @@ mod tests {
     fn serve_section_parses() {
         let c = RunConfig::parse(
             r#"{"serve": {"backend": "pipelined", "shards": 3, "chips": 6,
-                          "depth": 64, "batch": 4, "probe_rate": 0.1,
+                          "depth": 64, "batch": 4, "trial_block": 32,
+                          "probe_rate": 0.1,
                           "listen": "0.0.0.0:7433", "seed": 12}}"#,
         )
         .unwrap();
@@ -329,6 +337,7 @@ mod tests {
         assert_eq!(c.serve.chips, 6);
         assert_eq!(c.serve.depth, 64);
         assert_eq!(c.serve.batch, 4);
+        assert_eq!(c.serve.trial_block, 32);
         assert!((c.serve.probe_rate - 0.1).abs() < 1e-12);
         assert_eq!(c.serve.listen.as_deref(), Some("0.0.0.0:7433"));
         assert_eq!(c.serve.seed, 12);
@@ -339,6 +348,7 @@ mod tests {
         assert_eq!(d.serve.topology, None);
         assert_eq!(d.serve.probe_rate, 0.0);
         assert_eq!(d.serve.listen, None);
+        assert_eq!(d.serve.trial_block, 64, "default = one u64 lane");
         // Remote leaves parse like any other topology node.
         let r = RunConfig::parse(
             r#"{"serve": {"topology": "(remote:a:7433, remote:b:7433)@weighted"}}"#,
@@ -389,6 +399,8 @@ mod tests {
         assert!(format!("{e}").contains("serve.shards"), "{e}");
         let e = RunConfig::parse(r#"{"serve": {"batch": 0}}"#).unwrap_err();
         assert!(format!("{e}").contains("serve.batch"), "{e}");
+        let e = RunConfig::parse(r#"{"serve": {"trial_block": 0}}"#).unwrap_err();
+        assert!(format!("{e}").contains("serve.trial_block"), "{e}");
         // Zero-sized topology nodes are rejected at parse, like the above.
         let e = RunConfig::parse(r#"{"serve": {"topology": "0x(die)"}}"#).unwrap_err();
         assert!(format!("{e:#}").contains("at least 1"), "{e:#}");

@@ -24,7 +24,9 @@ pub mod physical;
 #[cfg(feature = "pjrt")]
 pub mod xla;
 
-pub use native::{trial_rng, wta_race, NativeEngine};
+pub use native::{
+    trial_rng, wta_race, wta_race_block, wta_race_centered, NativeEngine, DEFAULT_TRIAL_BLOCK,
+};
 pub use physical::PhysicalEngine;
 #[cfg(feature = "pjrt")]
 pub use xla::{XlaEngine, XlaEngineHandle};
@@ -91,6 +93,49 @@ pub trait TrialEngine: Send {
         }
         out
     }
+
+    /// Winners for explicit per-trial stream indices on one image, in
+    /// index order.  The default loops [`TrialEngine::trial`]; engines
+    /// with a trial-blocked kernel (the native engine) override it so
+    /// batch shards ([`crate::fleet::FleetRunner`]) amortize weight
+    /// traffic across every trial of an image.
+    fn trial_indices(&mut self, x: &[f32], p: TrialParams, indices: &[u64]) -> Vec<i32> {
+        indices.iter().map(|&t| self.trial(x, p, t)).collect()
+    }
+}
+
+/// Group row indices of a packed `rows × features` batch whose feature
+/// slices are bit-identical — i.e. trials of the same image.  The blocked
+/// kernel shares one cached layer-0 pre-activation (and one weight sweep
+/// per block) within each group; each row keeps its own trial stream, so
+/// grouping never changes a winner.  Grouping order is first occurrence,
+/// so results are deterministic.
+pub fn group_equal_rows(x: &[f32], features: usize, rows: usize) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut hashes: Vec<u64> = Vec::new();
+    for r in 0..rows {
+        let row = &x[r * features..(r + 1) * features];
+        // FNV-1a over the raw f32 bit patterns (cheap prefilter; equality
+        // is verified against the group representative before joining).
+        let mut h = 0xcbf29ce484222325u64;
+        for &v in row {
+            h ^= v.to_bits() as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        let mut placed = false;
+        for (gi, g) in groups.iter_mut().enumerate() {
+            if hashes[gi] == h && &x[g[0] * features..(g[0] + 1) * features] == row {
+                g.push(r);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            groups.push(vec![r]);
+            hashes.push(h);
+        }
+    }
+    groups
 }
 
 #[cfg(test)]
@@ -125,5 +170,32 @@ mod tests {
     fn sigma_scale_multiplies() {
         let p = TrialParams::default().with_sigma_scale(0.5);
         assert!((p.sigma_z - 0.851).abs() < 1e-4);
+    }
+
+    #[test]
+    fn group_equal_rows_groups_repeated_images() {
+        let a = [0.1f32, 0.2, 0.3];
+        let b = [0.4f32, 0.5, 0.6];
+        let mut x = Vec::new();
+        for r in [&a, &b, &a, &a, &b] {
+            x.extend_from_slice(r);
+        }
+        let g = group_equal_rows(&x, 3, 5);
+        assert_eq!(g, vec![vec![0, 2, 3], vec![1, 4]]);
+        // All-distinct batches degrade to singleton groups, in row order.
+        let x: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        assert_eq!(group_equal_rows(&x, 3, 3), vec![vec![0], vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn trial_indices_default_matches_trial_loop() {
+        let (_, physical) = engines();
+        let mut e: Box<dyn TrialEngine> = Box::new(physical);
+        let x = vec![0.4f32; 8];
+        let p = TrialParams::default();
+        let idx = [3u64, 9, 3, 40];
+        let got = e.trial_indices(&x, p, &idx);
+        let want: Vec<i32> = idx.iter().map(|&t| e.trial(&x, p, t)).collect();
+        assert_eq!(got, want);
     }
 }

@@ -8,19 +8,45 @@
 //!    timeout.
 //!
 //! The per-trial RNG is seeded from (engine seed, trial index) so trials
-//! are reproducible and embarrassingly parallel.
+//! are reproducible and embarrassingly parallel — which §Perf iteration 5
+//! finally cashes in: [`NativeEngine::infer`] runs the **trial-blocked
+//! bit-packed kernel** ([`crate::nn::forward::stochastic_logits_block`]),
+//! processing [`NativeEngine::block`] trials per pass (each f32 weight row
+//! read once per block instead of once per trial) and sharding blocks
+//! across threads via [`crate::figures::common::parallel_map`] with a
+//! deterministic merge.  Every trial keeps its private
+//! [`trial_rng`]`(seed, base + t)` stream consuming draws in the scalar
+//! order, so the blocked path is bit-identical to
+//! [`NativeEngine::trial_scratch`] — the same parity contract the
+//! pipelined serving backend pins (rust/tests/blocked.rs).
+//! [`NativeEngine::infer_scalar`] keeps the one-trial-at-a-time loop as
+//! the parity/bench reference.
 
 use crate::neuron::WtaOutcome;
 use crate::nn::{forward, Weights};
 use crate::stats::{GaussianSource, Rng};
 
-use super::{TrialEngine, TrialParams};
+use super::{group_equal_rows, TrialEngine, TrialParams};
+
+/// Re-export of the kernel's default block size (one `u64` lane).
+pub use crate::nn::forward::DEFAULT_TRIAL_BLOCK;
+
+/// Blocks per [`NativeEngine::infer`] call before trial-level threading
+/// kicks in (below this, scoped-thread spawn overhead beats the win;
+/// figure sweeps already parallelize across images one level up).
+const PARALLEL_MIN_BLOCKS: usize = 4;
+/// …and never thread a budget this small, whatever the block size.
+const PARALLEL_MIN_TRIALS: usize = 256;
 
 /// Pure-rust stochastic inference engine (Send + Sync; clone per worker).
 #[derive(Clone)]
 pub struct NativeEngine {
     pub weights: std::sync::Arc<Weights>,
     pub seed: u64,
+    /// Trials per blocked-kernel pass (≥ 1; the `serve.trial_block`
+    /// knob).  Purely a performance parameter: votes are bit-identical at
+    /// any value.
+    pub block: usize,
 }
 
 /// Per-trial RNG stream: one deterministic identity per `(seed, trial
@@ -34,7 +60,13 @@ pub fn trial_rng(seed: u64, trial_idx: u64) -> Rng {
 
 impl NativeEngine {
     pub fn new(weights: std::sync::Arc<Weights>, seed: u64) -> Self {
-        Self { weights, seed }
+        Self { weights, seed, block: DEFAULT_TRIAL_BLOCK }
+    }
+
+    /// Pin the blocked kernel's trials-per-pass (clamped to ≥ 1).
+    pub fn with_trial_block(mut self, block: usize) -> Self {
+        self.block = block.max(1);
+        self
     }
 
     /// One decision trial on one image; `trial_idx` selects the RNG stream.
@@ -67,7 +99,9 @@ impl NativeEngine {
         forward::stochastic_logits_into(&self.weights, z1, p.sigma_z as f64, &mut gauss,
                                         scratch);
         let logits = std::mem::take(&mut scratch.logits);
-        let w = wta_race(&logits, p, &mut gauss);
+        let mut centered = std::mem::take(&mut scratch.centered);
+        let w = wta_race_centered(&logits, p, &mut gauss, &mut centered);
+        scratch.centered = centered;
         scratch.logits = logits;
         w
     }
@@ -78,9 +112,114 @@ impl NativeEngine {
         wta_race(&z, p, gauss)
     }
 
+    /// Winners of one trial block (any length) on a cached
+    /// pre-activation: seeds one noise stream per index, runs the
+    /// bit-packed blocked forward, then races each trial's WTA.  Appends
+    /// winners to `out` in index order.  Bit-identical to calling
+    /// [`NativeEngine::trial_scratch`] per index.
+    pub fn trial_block(
+        &self,
+        z1: &[f32],
+        p: TrialParams,
+        indices: &[u64],
+        s: &mut forward::BlockScratch,
+        out: &mut Vec<i32>,
+    ) {
+        s.gauss.clear();
+        s.gauss.extend(
+            indices
+                .iter()
+                .map(|&t| GaussianSource::from_rng(trial_rng(self.seed, t))),
+        );
+        forward::stochastic_logits_block(&self.weights, z1, p.sigma_z as f64, s);
+        let classes = self.weights.spec.output_dim();
+        wta_race_block(&s.logits, classes, p, &mut s.gauss, out);
+    }
+
+    /// Winners for arbitrary per-trial stream indices on one cached
+    /// pre-activation, processed in blocks of [`NativeEngine::block`].
+    pub fn trials_cached(&self, z1: &[f32], p: TrialParams, indices: &[u64]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(indices.len());
+        let mut s = forward::BlockScratch::default();
+        for chunk in indices.chunks(self.block.max(1)) {
+            self.trial_block(z1, p, chunk, &mut s, &mut out);
+        }
+        out
+    }
+
     /// `trials` repeated decisions on one image, accumulated into counts.
-    /// Uses the cached layer-0 pre-activation across trials.
+    /// Runs the trial-blocked kernel over the cached layer-0
+    /// pre-activation; large budgets shard whole blocks across threads
+    /// (deterministic merge — votes are independent of the thread count).
     pub fn infer(&self, x: &[f32], p: TrialParams, trials: usize, base_trial: u64) -> WtaOutcome {
+        let z1 = self.precompute(x);
+        self.infer_cached(&z1, p, trials, base_trial)
+    }
+
+    /// [`NativeEngine::infer`] over an already-cached pre-activation.
+    pub fn infer_cached(
+        &self,
+        z1: &[f32],
+        p: TrialParams,
+        trials: usize,
+        base_trial: u64,
+    ) -> WtaOutcome {
+        let mut out = WtaOutcome::new(self.weights.spec.output_dim());
+        if trials == 0 {
+            return out;
+        }
+        let block = self.block.max(1);
+        let n_blocks = trials.div_ceil(block);
+        if n_blocks >= PARALLEL_MIN_BLOCKS && trials >= PARALLEL_MIN_TRIALS {
+            // (start index, length) per block; merged in block order.
+            let ranges: Vec<(u64, usize)> = (0..n_blocks)
+                .map(|b| {
+                    (
+                        base_trial.wrapping_add((b * block) as u64),
+                        block.min(trials - b * block),
+                    )
+                })
+                .collect();
+            let winner_blocks =
+                crate::figures::common::parallel_map(&ranges, |_, &(lo, len)| {
+                    let idx: Vec<u64> = (0..len as u64).map(|k| lo.wrapping_add(k)).collect();
+                    self.trials_cached(z1, p, &idx)
+                });
+            for wb in &winner_blocks {
+                for &w in wb {
+                    out.record(w);
+                }
+            }
+        } else {
+            let mut s = forward::BlockScratch::default();
+            let mut winners = Vec::with_capacity(block);
+            let mut idx = Vec::with_capacity(block);
+            let mut done = 0usize;
+            while done < trials {
+                let take = block.min(trials - done);
+                idx.clear();
+                idx.extend((0..take as u64).map(|k| base_trial.wrapping_add(done as u64 + k)));
+                winners.clear();
+                self.trial_block(z1, p, &idx, &mut s, &mut winners);
+                for &w in &winners {
+                    out.record(w);
+                }
+                done += take;
+            }
+        }
+        out
+    }
+
+    /// The pre-iteration-5 one-trial-at-a-time loop: the bit-parity
+    /// reference the blocked kernel is held to (rust/tests/blocked.rs),
+    /// and the baseline lane of `bench_fleet`'s kernel comparison.
+    pub fn infer_scalar(
+        &self,
+        x: &[f32],
+        p: TrialParams,
+        trials: usize,
+        base_trial: u64,
+    ) -> WtaOutcome {
         let z1 = self.precompute(x);
         let mut scratch = forward::TrialScratch::default();
         let mut out = WtaOutcome::new(self.weights.spec.output_dim());
@@ -91,14 +230,31 @@ impl NativeEngine {
     }
 
     /// Batched API mirroring the XLA trial executable: one trial per row.
+    /// Rows carrying the *same image* (the batcher interleaves trials of
+    /// in-flight requests round-robin, so a batch usually holds several
+    /// trials of each) are grouped and run through the blocked kernel —
+    /// each row keeps its own `seed + row` stream, so winners are
+    /// bit-identical to the scalar per-row loop.
     pub fn run_trial_batch(&self, x: &[f32], features: usize, p: TrialParams,
                            seed: u64) -> Vec<i32> {
         assert_eq!(x.len() % features, 0);
         let rows = x.len() / features;
-        (0..rows)
-            .map(|r| self.trial(&x[r * features..(r + 1) * features], p,
-                                seed.wrapping_add(r as u64)))
-            .collect()
+        let mut winners = vec![-1i32; rows];
+        let mut s = forward::BlockScratch::default();
+        let mut group_winners: Vec<i32> = Vec::new();
+        for g in group_equal_rows(x, features, rows) {
+            let z1 = self.precompute(&x[g[0] * features..(g[0] + 1) * features]);
+            group_winners.clear();
+            for chunk in g.chunks(self.block.max(1)) {
+                let idx: Vec<u64> =
+                    chunk.iter().map(|&r| seed.wrapping_add(r as u64)).collect();
+                self.trial_block(&z1, p, &idx, &mut s, &mut group_winners);
+            }
+            for (&r, &w) in g.iter().zip(&group_winners) {
+                winners[r] = w;
+            }
+        }
+        winners
     }
 }
 
@@ -109,14 +265,31 @@ impl NativeEngine {
 /// [`crate::serve::PipelinedFleetBackend`] — bit-identical decisions
 /// whichever die runs the race.
 pub fn wta_race(z: &[f32], p: TrialParams, gauss: &mut GaussianSource) -> i32 {
+    let mut centered = Vec::with_capacity(z.len());
+    wta_race_centered(z, p, gauss, &mut centered)
+}
+
+/// [`wta_race`] over a caller-owned centering buffer.  §Perf iteration 5
+/// micro-fix: the per-candidate `(z_j − mean) − θ` term is static across
+/// the whole race, yet the old loop recomputed it every step for every
+/// candidate — it is now hoisted into `centered`, leaving one
+/// multiply-add per candidate per step in the T-step loop.
+pub fn wta_race_centered(
+    z: &[f32],
+    p: TrialParams,
+    gauss: &mut GaussianSource,
+    centered: &mut Vec<f64>,
+) -> i32 {
     let mean = z.iter().sum::<f32>() / z.len() as f32;
     let sigma = p.sigma_z as f64;
     let theta = p.theta as f64;
+    centered.clear();
+    centered.extend(z.iter().map(|&zj| (zj - mean) as f64 - theta));
     for _ in 0..p.wta_steps {
         let mut winner = -1i32;
         let mut best = f64::NEG_INFINITY;
-        for (j, &zj) in z.iter().enumerate() {
-            let v = (zj - mean) as f64 + sigma * gauss.next() - theta;
+        for (j, &cj) in centered.iter().enumerate() {
+            let v = cj + sigma * gauss.next();
             if v > 0.0 && v > best {
                 best = v;
                 winner = j as i32;
@@ -129,6 +302,26 @@ pub fn wta_race(z: &[f32], p: TrialParams, gauss: &mut GaussianSource) -> i32 {
     -1
 }
 
+/// Race every trial of a block: `logits` holds `gauss.len()` trial-major
+/// rows of `classes` logits; each trial races with its own noise stream
+/// (draw-compatible with per-trial [`wta_race`]) over one shared
+/// centering buffer.  Winners append to `out` in trial order.
+pub fn wta_race_block(
+    logits: &[f32],
+    classes: usize,
+    p: TrialParams,
+    gauss: &mut [GaussianSource],
+    out: &mut Vec<i32>,
+) {
+    debug_assert_eq!(logits.len(), classes * gauss.len());
+    let mut centered = Vec::with_capacity(classes);
+    out.reserve(gauss.len());
+    for (t, g) in gauss.iter_mut().enumerate() {
+        let z = &logits[t * classes..(t + 1) * classes];
+        out.push(wta_race_centered(z, p, g, &mut centered));
+    }
+}
+
 impl TrialEngine for NativeEngine {
     fn output_dim(&self) -> usize {
         self.weights.spec.output_dim()
@@ -139,8 +332,14 @@ impl TrialEngine for NativeEngine {
     }
 
     fn infer(&mut self, x: &[f32], p: TrialParams, trials: usize, base_trial: u64) -> WtaOutcome {
-        // Delegate to the inherent fast path (cached layer-0 pre-activation).
+        // Delegate to the inherent fast path (blocked kernel over the
+        // cached layer-0 pre-activation).
         NativeEngine::infer(self, x, p, trials, base_trial)
+    }
+
+    fn trial_indices(&mut self, x: &[f32], p: TrialParams, indices: &[u64]) -> Vec<i32> {
+        let z1 = self.precompute(x);
+        self.trials_cached(&z1, p, indices)
     }
 }
 
@@ -213,6 +412,62 @@ mod tests {
         let batch = e.run_trial_batch(&x, 8, p, 100);
         for (r, &w) in batch.iter().enumerate() {
             assert_eq!(w, e.trial(&x[r * 8..(r + 1) * 8], p, 100 + r as u64));
+        }
+    }
+
+    #[test]
+    fn batch_groups_interleaved_repeats_bitexactly() {
+        // The batcher interleaves requests round-robin, so repeated images
+        // land on non-adjacent rows; grouping must keep every row's own
+        // trial stream (`seed + row`).
+        let e = engine();
+        let a: Vec<f32> = (0..8).map(|i| i as f32 / 9.0).collect();
+        let b: Vec<f32> = (0..8).map(|i| (7 - i) as f32 / 9.0).collect();
+        let mut x = Vec::new();
+        for img in [&a, &b, &a, &b, &a] {
+            x.extend_from_slice(img);
+        }
+        let p = TrialParams::default();
+        let batch = e.run_trial_batch(&x, 8, p, 31);
+        for (r, &w) in batch.iter().enumerate() {
+            assert_eq!(w, e.trial(&x[r * 8..(r + 1) * 8], p, 31 + r as u64), "row {r}");
+        }
+    }
+
+    #[test]
+    fn blocked_infer_matches_scalar_reference() {
+        let e = engine();
+        let x: Vec<f32> = (0..8).map(|i| (i % 3) as f32 / 3.0).collect();
+        let p = TrialParams::default();
+        for block in [1usize, 7, 64] {
+            let eb = e.clone().with_trial_block(block);
+            for trials in [1usize, 63, 64, 65, 200] {
+                let a = eb.infer_scalar(&x, p, trials, 900);
+                let b = eb.infer(&x, p, trials, 900);
+                assert_eq!(a.counts, b.counts, "block {block}, {trials} trials");
+                assert_eq!(a.abstentions, b.abstentions);
+            }
+        }
+        // Large budget → the parallel_map shard path, still bit-identical.
+        let a = e.infer_scalar(&x, p, 700, 0);
+        let b = e.infer(&x, p, 700, 0);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.abstentions, b.abstentions);
+    }
+
+    #[test]
+    fn wta_race_block_matches_per_trial_race() {
+        let p = TrialParams::default();
+        let classes = 5usize;
+        let logits: Vec<f32> = (0..3 * classes).map(|i| ((i * 7) % 11) as f32 - 5.0).collect();
+        let mut block: Vec<GaussianSource> =
+            (0..3).map(|t| GaussianSource::new(50 + t)).collect();
+        let mut out = Vec::new();
+        wta_race_block(&logits, classes, p, &mut block, &mut out);
+        for t in 0..3usize {
+            let mut g = GaussianSource::new(50 + t as u64);
+            let want = wta_race(&logits[t * classes..(t + 1) * classes], p, &mut g);
+            assert_eq!(out[t], want, "trial {t}");
         }
     }
 

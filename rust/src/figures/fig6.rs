@@ -22,10 +22,6 @@ use crate::util::table::Table;
 
 use super::common::{parallel_map, results_dir};
 
-fn raca_scratch() -> crate::nn::forward::TrialScratch {
-    crate::nn::forward::TrialScratch::default()
-}
-
 /// Trial counts reported on the x-axis.
 pub const TRIAL_POINTS: &[usize] = &[1, 2, 4, 8, 16, 32, 64];
 
@@ -60,7 +56,10 @@ fn curve(winner_rows: &[Vec<i32>], labels: &[i32]) -> Vec<f64> {
         .collect()
 }
 
-/// Run `max_trials` native-engine trials per image (parallel over images).
+/// Run `max_trials` native-engine trials per image (parallel over images,
+/// trial-blocked bit-packed kernel within each image — §Perf iteration 5;
+/// per-trial indices are unchanged, so winner sequences are bit-identical
+/// to the old scalar loop).
 fn native_winners(
     weights: &Arc<Weights>,
     ds: &Dataset,
@@ -72,10 +71,8 @@ fn native_winners(
     let idx: Vec<usize> = (0..ds.len()).collect();
     parallel_map(&idx, |_, &i| {
         let z1 = engine.precompute(ds.image(i));
-        let mut scratch = raca_scratch();
-        (0..max_trials)
-            .map(|t| engine.trial_scratch(&z1, p, (i * 100_003 + t) as u64, &mut scratch))
-            .collect::<Vec<i32>>()
+        let indices: Vec<u64> = (0..max_trials).map(|t| (i * 100_003 + t) as u64).collect();
+        engine.trials_cached(&z1, p, &indices)
     })
 }
 

@@ -92,11 +92,23 @@ impl<E: TrialEngine> TrialRunner for FleetRunner<E> {
                     // when calibration chose the nominal point); only chips
                     // never calibrated follow the scheduler.
                     let cp = if chip.calibrated { chip.params } else { p };
-                    let mut out = Vec::with_capacity(len);
-                    for r in lo..lo + len {
-                        let xi = &x[r * features..(r + 1) * features];
-                        let trial_idx = (seed as u64).wrapping_add(r as u64);
-                        out.push(chip.engine.trial(xi, cp, trial_idx));
+                    // Rows repeating one image (k trials of one request in
+                    // a packed batch) run as trial blocks — one weight
+                    // sweep per block (§Perf iteration 5).  Each row keeps
+                    // its `seed + row` stream, so routing and grouping
+                    // never change a winner.
+                    let shard = &x[lo * features..(lo + len) * features];
+                    let mut out = vec![-1i32; len];
+                    for g in crate::engine::group_equal_rows(shard, features, len) {
+                        let xi = &shard[g[0] * features..(g[0] + 1) * features];
+                        let idx: Vec<u64> = g
+                            .iter()
+                            .map(|&r| (seed as u64).wrapping_add((lo + r) as u64))
+                            .collect();
+                        let winners_g = chip.engine.trial_indices(xi, cp, &idx);
+                        for (&r, &w) in g.iter().zip(&winners_g) {
+                            out[r] = w;
+                        }
                     }
                     use std::sync::atomic::Ordering::Relaxed;
                     metrics.batches_executed.fetch_add(1, Relaxed);

@@ -137,6 +137,8 @@ USAGE: raca <subcommand> [flags]
               --probe-rate R            labeled health probes per request
                                         (0..1, from the calibration slice)
               --chips N --shards S --batch B (die-to-die trial block)
+              --trial-block B           trials per blocked-kernel pass on
+                                        native dies (default 64, ≥ 1)
               --images N --trials K --confidence C --sigma S --seed S
               --widths 784,256,128,10   (train a custom-depth model)
               --config run.json         ({"serve": {"topology": ..., ...}})
@@ -363,6 +365,7 @@ fn serve(args: &Args) -> Result<()> {
     sc.chips = args.get_usize("chips", sc.chips);
     sc.shards = args.get_usize("shards", sc.shards);
     sc.batch = args.get_usize("batch", sc.batch);
+    sc.trial_block = args.get_usize("trial-block", sc.trial_block);
     sc.probe_rate = args.get_f64("probe-rate", sc.probe_rate);
     if let Some(l) = args.get("listen") {
         sc.listen = Some(l.to_string());
@@ -371,6 +374,10 @@ fn serve(args: &Args) -> Result<()> {
     anyhow::ensure!(sc.chips > 0, "--chips must be at least 1");
     anyhow::ensure!(sc.shards > 0, "--shards must be at least 1");
     anyhow::ensure!(sc.batch > 0, "--batch must be at least 1");
+    anyhow::ensure!(
+        sc.trial_block > 0,
+        "--trial-block must be at least 1 (trials per blocked-kernel pass)"
+    );
     anyhow::ensure!(
         (0.0..=1.0).contains(&sc.probe_rate),
         "--probe-rate must be in [0, 1] (probes per caller request)"
@@ -423,6 +430,7 @@ fn serve(args: &Args) -> Result<()> {
         variation: (sigma > 0.0).then(|| VariationModel::lognormal(sigma)),
         depth: sc.depth,
         batch: sc.batch,
+        trial_block: sc.trial_block,
         calibration: Some((cal.clone(), Calibrator::quick(5))),
         probe_rate: sc.probe_rate,
         ..Default::default()

@@ -1,0 +1,153 @@
+//! Bit-packed binary activations for the trial-blocked forward kernel.
+//!
+//! The RACA hidden state is a *binary* spike vector (h = 1[z + σ_z·n > 0],
+//! paper §III-A) — one bit of information per neuron that the scalar
+//! forward nevertheless stores as an f32 and re-multiplies against the
+//! full weight matrix once per trial.  [`BitBlock`] packs the hidden
+//! vectors of a whole block of trials into `u64` words so the matmul loop
+//! can be inverted: each f32 weight row is read **once per block** and
+//! accumulated into exactly the trials whose bit is set (§Perf iteration
+//! 5, `nn::forward::hidden_layer_block`).
+//!
+//! Layout is **neuron-major**: for each neuron the block stores
+//! `lanes = ceil(trials/64)` words whose bit *t* says "trial *t* fired".
+//! That orientation is what makes the inverted loop a straight
+//! `trailing_zeros` walk per weight row — the per-trial view only matters
+//! at the block boundary (packing a pipeline's activation slab in,
+//! unpacking one out), where [`BitBlock::append_trial_row`] and
+//! [`nn::forward::pack_rows_block`] convert.
+//!
+//! [`nn::forward::pack_rows_block`]: crate::nn::forward::pack_rows_block
+
+/// Binary activations of one trial block: `trials × neurons` bits,
+/// neuron-major (`lanes` words of trial mask per neuron).
+#[derive(Debug, Default, Clone)]
+pub struct BitBlock {
+    /// `neurons * lanes` words; neuron `i`'s trial masks start at
+    /// `i * lanes`.
+    words: Vec<u64>,
+    lanes: usize,
+    trials: usize,
+    neurons: usize,
+}
+
+impl BitBlock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear and resize to `trials × neurons` (all bits zero).
+    pub fn reset(&mut self, trials: usize, neurons: usize) {
+        self.lanes = trials.div_ceil(64).max(1);
+        self.trials = trials;
+        self.neurons = neurons;
+        self.words.clear();
+        self.words.resize(neurons * self.lanes, 0);
+    }
+
+    pub fn trials(&self) -> usize {
+        self.trials
+    }
+
+    pub fn neurons(&self) -> usize {
+        self.neurons
+    }
+
+    /// Words per neuron (`ceil(trials/64)`).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Mark trial `t`'s activation of neuron `i` as fired.
+    #[inline]
+    pub fn set(&mut self, t: usize, i: usize) {
+        debug_assert!(t < self.trials && i < self.neurons);
+        self.words[i * self.lanes + (t >> 6)] |= 1u64 << (t & 63);
+    }
+
+    /// Whether trial `t` fired neuron `i`.
+    #[inline]
+    pub fn get(&self, t: usize, i: usize) -> bool {
+        self.words[i * self.lanes + (t >> 6)] & (1u64 << (t & 63)) != 0
+    }
+
+    /// Neuron `i`'s trial masks (`lanes` words) — the unit the inverted
+    /// matmul loop walks with `trailing_zeros`.
+    #[inline]
+    pub fn neuron_masks(&self, i: usize) -> &[u64] {
+        &self.words[i * self.lanes..(i + 1) * self.lanes]
+    }
+
+    /// Append trial `t`'s activation row as 0.0/1.0 f32 (the die-to-die
+    /// slab format of the pipelined backend).
+    pub fn append_trial_row(&self, t: usize, out: &mut Vec<f32>) {
+        out.reserve(self.neurons);
+        for i in 0..self.neurons {
+            out.push(if self.get(t, i) { 1.0 } else { 0.0 });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip_across_lanes() {
+        let mut b = BitBlock::new();
+        b.reset(130, 5); // 3 lanes
+        assert_eq!(b.lanes(), 3);
+        let fired = [(0usize, 0usize), (63, 1), (64, 1), (129, 4), (65, 0)];
+        for &(t, i) in &fired {
+            b.set(t, i);
+        }
+        for t in 0..130 {
+            for i in 0..5 {
+                assert_eq!(b.get(t, i), fired.contains(&(t, i)), "bit ({t},{i})");
+            }
+        }
+    }
+
+    #[test]
+    fn neuron_masks_walk_matches_get() {
+        let mut b = BitBlock::new();
+        b.reset(70, 3);
+        for t in (0..70).step_by(7) {
+            b.set(t, 1);
+        }
+        let mut seen = Vec::new();
+        for (lane, &mask) in b.neuron_masks(1).iter().enumerate() {
+            let mut m = mask;
+            while m != 0 {
+                seen.push((lane << 6) + m.trailing_zeros() as usize);
+                m &= m - 1;
+            }
+        }
+        assert_eq!(seen, (0..70).step_by(7).collect::<Vec<_>>());
+        assert!(b.neuron_masks(0).iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn reset_clears_previous_contents() {
+        let mut b = BitBlock::new();
+        b.reset(10, 4);
+        b.set(3, 2);
+        b.reset(10, 4);
+        assert!(!b.get(3, 2));
+        b.reset(0, 0); // degenerate sizes stay well-formed
+        assert_eq!(b.lanes(), 1);
+    }
+
+    #[test]
+    fn append_trial_row_unpacks_binary_f32() {
+        let mut b = BitBlock::new();
+        b.reset(2, 4);
+        b.set(0, 1);
+        b.set(0, 3);
+        b.set(1, 0);
+        let mut out = Vec::new();
+        b.append_trial_row(0, &mut out);
+        b.append_trial_row(1, &mut out);
+        assert_eq!(out, vec![0.0, 1.0, 0.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+}

@@ -1,14 +1,33 @@
 //! Native forward passes over loaded weights.
 //!
-//! Two flavours:
+//! Three flavours:
 //! * [`ideal_forward`]/[`ideal_logits`] — float sigmoid/softmax, the
 //!   software reference the analog system emulates;
 //! * [`stochastic_logits`] — the *normalized-unit* stochastic forward
 //!   (binary hidden activations via z + σ_z·n > 0), statistically
 //!   identical to the physical crossbar simulation at the calibrated
 //!   point and to the L1/L2 HLO path (parity-tested in
-//!   rust/tests/engine_parity.rs).
+//!   rust/tests/engine_parity.rs);
+//! * [`stochastic_logits_block`] — the same forward for a whole *block*
+//!   of trials at once (§Perf iteration 5): binary hidden vectors live
+//!   bit-packed in a [`BitBlock`] and the matmul loop is inverted so each
+//!   f32 weight row is read **once per block** and accumulated into the
+//!   trials whose bit is set, with [`GaussianSource::fill`] batching the
+//!   noise draws.  Each trial keeps its own noise stream consuming draws
+//!   in the scalar order, so the blocked path is **bit-identical** to
+//!   [`stochastic_logits_into`] per trial at equal streams
+//!   (rust/tests/blocked.rs holds the whole matrix of widths × block
+//!   sizes × tail shapes to that).
+//!
+//! §Perf iteration 5 (trial-blocked bit-packed kernel): the scalar hot
+//! loop streamed the full f32 weight matrix per trial — the binary
+//! structure the paper exploits in hardware was thrown away in software.
+//! Blocking B trials per pass amortizes weight traffic B×; the per-trial
+//! FLOP count is unchanged (the scalar path already skipped silent
+//! neurons), so the win is pure memory-hierarchy behaviour plus branchless
+//! mask iteration.
 
+use super::bitvec::BitBlock;
 use super::weights::Weights;
 use crate::stats::GaussianSource;
 
@@ -115,6 +134,9 @@ pub struct TrialScratch {
     z: Vec<f32>,
     /// Output logits (valid after `stochastic_logits_into`).
     pub logits: Vec<f32>,
+    /// WTA centering buffer (`engine::wta_race_centered` reuses it so the
+    /// per-trial race stays allocation-free).
+    pub centered: Vec<f64>,
 }
 
 /// Stochastic pass given the precomputed layer-0 pre-activation.
@@ -164,6 +186,147 @@ pub fn stochastic_logits_into(
     let (rows, cols, m) = w.layer(l);
     s.logits.resize(cols, 0.0);
     affine_aug(&s.h, rows, cols, m, &mut s.logits);
+}
+
+/// Default trials per blocked-kernel pass: one full `u64` lane, so every
+/// neuron's trial mask is a single word in the hot loop.
+pub const DEFAULT_TRIAL_BLOCK: usize = 64;
+
+/// Reusable buffers of the trial-blocked bit-packed forward (§Perf
+/// iteration 5).  One scratch serves any block size; buffers grow to the
+/// largest block/layer seen and stay allocated.
+#[derive(Debug, Default, Clone)]
+pub struct BlockScratch {
+    /// One noise stream per trial in the block.  The caller positions
+    /// these (engine: `trial_rng(seed, idx)`; pipeline die: same plus the
+    /// upstream `noise_skip`) before running the layer primitives.
+    pub gauss: Vec<GaussianSource>,
+    /// Bit-packed binary activations of the current layer.
+    bits: BitBlock,
+    /// Per-trial affine accumulators (`trials × cols`, trial-major).
+    acc: Vec<f32>,
+    /// Batched noise draws of one trial (`cols` f64s).
+    noise: Vec<f64>,
+    /// Output logits, `trials × output_dim` (valid after
+    /// [`stochastic_logits_block`] / [`output_layer_block`]).
+    pub logits: Vec<f32>,
+}
+
+impl BlockScratch {
+    /// Trials in the current block (the noise streams define it).
+    pub fn trials(&self) -> usize {
+        self.gauss.len()
+    }
+}
+
+/// Layer 0 of a block: binarize the *shared* cached pre-activation with
+/// fresh per-trial noise.  Per trial this draws exactly what the scalar
+/// path draws, in the same order — `σ_z·n` via the batched
+/// [`GaussianSource::fill`], then the same f64 add/compare.
+pub fn binarize_shared_block(z_mean: &[f32], sigma_z: f64, s: &mut BlockScratch) {
+    let n = s.gauss.len();
+    let cols = z_mean.len();
+    s.bits.reset(n, cols);
+    s.noise.resize(cols, 0.0);
+    for t in 0..n {
+        s.gauss[t].fill(&mut s.noise, sigma_z);
+        for (j, (&z, &nz)) in z_mean.iter().zip(s.noise.iter()).enumerate() {
+            if (z as f64) + nz > 0.0 {
+                s.bits.set(t, j);
+            }
+        }
+    }
+}
+
+/// Pack `n` binary activation rows (0.0/1.0 f32, trial-major — the
+/// pipelined backend's die-to-die slab format) into the block's bits.
+/// Draws no noise.
+pub fn pack_rows_block(rows: &[f32], width: usize, n: usize, s: &mut BlockScratch) {
+    debug_assert_eq!(rows.len(), n * width);
+    s.bits.reset(n, width);
+    for t in 0..n {
+        for (j, &v) in rows[t * width..(t + 1) * width].iter().enumerate() {
+            if v != 0.0 {
+                s.bits.set(t, j);
+            }
+        }
+    }
+}
+
+/// The inverted matmul: `out[t] = [h_t; 1]·W` for every trial of the
+/// block, reading each f32 weight row once.  Per trial the additions
+/// happen in ascending row order — exactly [`affine_aug`]'s order over a
+/// binary `h` — so the accumulators are bit-identical f32s.
+fn affine_bits_block(rows: usize, cols: usize, m: &[f32], bits: &BitBlock, out: &mut Vec<f32>) {
+    let n = bits.trials();
+    debug_assert_eq!(bits.neurons() + 1, rows);
+    out.clear();
+    out.reserve(n * cols);
+    let bias = &m[(rows - 1) * cols..rows * cols];
+    for _ in 0..n {
+        out.extend_from_slice(bias);
+    }
+    for i in 0..rows - 1 {
+        let row = &m[i * cols..(i + 1) * cols];
+        for (lane, &mask) in bits.neuron_masks(i).iter().enumerate() {
+            let mut mk = mask;
+            while mk != 0 {
+                let t = (lane << 6) + mk.trailing_zeros() as usize;
+                for (o, &wv) in out[t * cols..(t + 1) * cols].iter_mut().zip(row) {
+                    *o += wv;
+                }
+                mk &= mk - 1;
+            }
+        }
+    }
+}
+
+/// One hidden layer of a block: inverted affine over the packed bits,
+/// then per-trial binarization with fresh batched noise.
+pub fn hidden_layer_block(rows: usize, cols: usize, m: &[f32], sigma_z: f64, s: &mut BlockScratch) {
+    let n = s.gauss.len();
+    affine_bits_block(rows, cols, m, &s.bits, &mut s.acc);
+    s.bits.reset(n, cols);
+    s.noise.resize(cols, 0.0);
+    for t in 0..n {
+        s.gauss[t].fill(&mut s.noise, sigma_z);
+        let z = &s.acc[t * cols..(t + 1) * cols];
+        for (j, (&zj, &nz)) in z.iter().zip(s.noise.iter()).enumerate() {
+            if (zj as f64) + nz > 0.0 {
+                s.bits.set(t, j);
+            }
+        }
+    }
+}
+
+/// The output layer of a block: inverted affine straight into
+/// `s.logits` (`trials × cols`).  Draws no noise — the WTA race owns the
+/// output-side draws.
+pub fn output_layer_block(rows: usize, cols: usize, m: &[f32], s: &mut BlockScratch) {
+    affine_bits_block(rows, cols, m, &s.bits, &mut s.logits);
+}
+
+/// Unpack the block's current binary activations to trial-major 0.0/1.0
+/// rows (a pipeline die's outgoing slab).
+pub fn unpack_block_rows(s: &BlockScratch, out: &mut Vec<f32>) {
+    for t in 0..s.bits.trials() {
+        s.bits.append_trial_row(t, out);
+    }
+}
+
+/// Blocked stochastic forward from the cached layer-0 pre-activation:
+/// the trial-block twin of [`stochastic_logits_into`].  Caller seeds
+/// `s.gauss` (one positioned stream per trial); logits land in
+/// `s.logits`, trial-major.
+pub fn stochastic_logits_block(w: &Weights, z1_mean: &[f32], sigma_z: f64, s: &mut BlockScratch) {
+    binarize_shared_block(z1_mean, sigma_z, s);
+    for l in 1..w.spec.num_layers() - 1 {
+        let (rows, cols, m) = w.layer(l);
+        hidden_layer_block(rows, cols, m, sigma_z, s);
+    }
+    let l = w.spec.num_layers() - 1;
+    let (rows, cols, m) = w.layer(l);
+    output_layer_block(rows, cols, m, s);
 }
 
 #[cfg(test)]
@@ -240,6 +403,39 @@ mod tests {
         let z = stochastic_logits(&w, &x, 1.702, &mut g);
         assert_eq!(z.len(), 3);
         assert!(z.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn blocked_forward_is_bit_identical_per_trial() {
+        // The §Perf iteration-5 contract at the forward level: every
+        // trial of a block reproduces the scalar pass bit-for-bit and
+        // leaves its noise stream at the same position.
+        let w = tiny_weights();
+        let x: Vec<f32> = (0..6).map(|i| i as f32 / 7.0).collect();
+        let z1 = layer0_preactivation(&w, &x);
+        let sigma = 1.702f64;
+        let n = 7; // partial lane on purpose
+        let mut s = BlockScratch::default();
+        s.gauss = (0..n).map(|t| GaussianSource::new(100 + t as u64)).collect();
+        stochastic_logits_block(&w, &z1, sigma, &mut s);
+        for t in 0..n {
+            let mut g = GaussianSource::new(100 + t as u64);
+            let mut scratch = TrialScratch::default();
+            stochastic_logits_into(&w, &z1, sigma, &mut g, &mut scratch);
+            assert_eq!(&s.logits[t * 3..(t + 1) * 3], &scratch.logits[..], "trial {t}");
+            assert_eq!(s.gauss[t].next(), g.next(), "stream {t} misaligned");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_rows_roundtrip() {
+        let rows: Vec<f32> = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 1.0];
+        let mut s = BlockScratch::default();
+        s.gauss = (0..3).map(|t| GaussianSource::new(t)).collect();
+        pack_rows_block(&rows, 4, 3, &mut s);
+        let mut out = Vec::new();
+        unpack_block_rows(&s, &mut out);
+        assert_eq!(out, rows);
     }
 
     #[test]

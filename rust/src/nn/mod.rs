@@ -1,12 +1,16 @@
 //! Neural-network layer (DESIGN.md §4.6): model definition, trained-weight
-//! loading, the two native forward passes (ideal float & stochastic), and
-//! a native SGD trainer for artifact-free builds.
+//! loading, the two native forward passes (ideal float & stochastic) plus
+//! their trial-blocked bit-packed variant ([`forward::BlockScratch`] over
+//! [`bitvec::BitBlock`]), and a native SGD trainer for artifact-free
+//! builds.
 
+pub mod bitvec;
 pub mod forward;
 pub mod model;
 pub mod train;
 pub mod weights;
 
+pub use bitvec::BitBlock;
 pub use forward::{ideal_forward, ideal_logits, stochastic_logits};
 pub use model::ModelSpec;
 pub use train::{train, TrainConfig};

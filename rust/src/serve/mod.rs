@@ -206,6 +206,10 @@ pub struct ServeConfig {
     pub depth: usize,
     /// Default trials per die-to-die message for pipeline leaves.
     pub batch: usize,
+    /// Trials per blocked-kernel pass on native dies (`--trial-block`;
+    /// ≥ 1, default 64 = one `u64` lane).  Performance-only: votes are
+    /// bit-identical at any value.
+    pub trial_block: usize,
     /// Labeled health probes injected per caller request, in [0, 1]
     /// (0 disables).  Probes come from the held-out calibration slice, so
     /// accuracy-based health steering works even when callers never send
@@ -227,6 +231,7 @@ impl Default for ServeConfig {
             shards: 2,
             depth: 256,
             batch: 8,
+            trial_block: crate::engine::DEFAULT_TRIAL_BLOCK,
             probe_rate: 0.0,
             listen: None,
             seed: 0x5EB0E,

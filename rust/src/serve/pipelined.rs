@@ -27,7 +27,13 @@
 //! Wilson-interval early stopper, and answers tickets.  Trials travel in
 //! blocks of up to [`PipelineOptions::batch`] per die-to-die message —
 //! one channel send moves a whole activation slab, amortizing per-message
-//! overhead without touching the per-trial noise streams.
+//! overhead without touching the per-trial noise streams.  Since §Perf
+//! iteration 5 each die also *executes* the block as one pass of the
+//! bit-packed trial kernel ([`crate::nn::forward::stochastic_logits_block`]):
+//! a `StageMsg::Trials` block maps 1:1 onto a kernel block, so every f32
+//! weight row of the die's layers is read once per message instead of
+//! once per trial — larger `:bN` now amortizes weight traffic, not just
+//! channel overhead, still without touching the noise streams.
 //!
 //! [`NativeEngine`]: crate::engine::NativeEngine
 
@@ -42,7 +48,7 @@ use anyhow::{anyhow, ensure, Result};
 use crate::arch::ShardPlan;
 use crate::coordinator::{Metrics, MetricsSnapshot};
 use crate::device::VariationModel;
-use crate::engine::{trial_rng, wta_race, TrialParams};
+use crate::engine::{trial_rng, wta_race_block, TrialParams};
 use crate::fleet::{chip_seed, program_weights};
 use crate::neuron::WtaOutcome;
 use crate::nn::{forward, Weights};
@@ -117,73 +123,64 @@ struct LayerStage {
     is_output: bool,
 }
 
-/// Reusable per-die buffers (mirrors `forward::TrialScratch` — per-trial
-/// Vec churn was ~11% of the trial profile, §Perf iteration 3).  Outgoing
-/// activations of a non-output die append to a per-*block* slab whose
-/// ownership moves to the next die over the channel.
-#[derive(Default)]
-struct StageScratch {
-    h: Vec<f32>,
-    z: Vec<f32>,
-}
-
 impl LayerStage {
-    /// Position the shared per-trial noise stream at this die's first
-    /// neuron: the engine's own [`trial_rng`] derivation, then skip the
-    /// upstream dies' draws.
-    fn gauss(&self, trial_idx: u64) -> GaussianSource {
-        let mut g = GaussianSource::from_rng(trial_rng(self.engine_seed, trial_idx));
-        for _ in 0..self.noise_skip {
-            g.next();
+    /// Position one noise stream per trial of a block at this die's first
+    /// neuron: the engine's own [`trial_rng`] derivation per
+    /// `base_idx + k`, then skip the upstream dies' draws.
+    fn block_gauss(&self, base_idx: u64, count: usize, out: &mut Vec<GaussianSource>) {
+        out.clear();
+        out.reserve(count);
+        for k in 0..count as u64 {
+            let mut g =
+                GaussianSource::from_rng(trial_rng(self.engine_seed, base_idx.wrapping_add(k)));
+            for _ in 0..self.noise_skip {
+                g.next();
+            }
+            out.push(g);
         }
-        g
     }
 
-    /// Run this die's layers for one trial.  `input` is the cached z1
-    /// pre-activation when this die holds the input layer, otherwise the
-    /// upstream die's binary activations.  Non-output dies append their
-    /// outgoing activation to `out` (the block slab for the next die) and
-    /// return `None`; the output die returns the WTA winner.
-    fn run_one(
+    /// Run this die's layers for one `count`-trial block through the
+    /// bit-packed kernel (§Perf iteration 5): a `StageMsg::Trials` block
+    /// maps 1:1 onto a kernel block, so each weight row of every local
+    /// layer is read once per *message*, not once per trial.  `input` is
+    /// the cached z1 pre-activation when this die holds the input layer
+    /// (shared by the whole block — trials of one request), otherwise the
+    /// upstream die's slab of `count` binary activation rows.  Non-output
+    /// dies append their outgoing slab to `out_h`; the output die pushes
+    /// one WTA winner per trial onto `winners`.  Per trial this consumes
+    /// the exact draws the scalar path did, so bit-parity with the
+    /// unsharded engine is preserved at any batch size.
+    fn run_block(
         &self,
         input: &[f32],
         p: TrialParams,
-        trial_idx: u64,
-        s: &mut StageScratch,
-        out: &mut Vec<f32>,
-    ) -> Option<i32> {
-        let mut g = self.gauss(trial_idx);
+        base_idx: u64,
+        count: usize,
+        s: &mut forward::BlockScratch,
+        out_h: &mut Vec<f32>,
+        winners: &mut Vec<i32>,
+    ) {
         let sigma = p.sigma_z as f64;
         let n_local = self.weights.spec.num_layers();
-        let start;
-        s.h.clear();
-        if self.first_layer == 0 {
-            // Input die: binarize the cached mean pre-activation with
-            // fresh comparator noise (mirrors stochastic_logits_into).
-            s.h.extend(
-                input
-                    .iter()
-                    .map(|&z| if (z as f64) + sigma * g.next() > 0.0 { 1.0f32 } else { 0.0 }),
-            );
-            start = 1;
+        self.block_gauss(base_idx, count, &mut s.gauss);
+        let start = if self.first_layer == 0 {
+            forward::binarize_shared_block(input, sigma, s);
+            1
         } else {
-            s.h.extend_from_slice(input);
-            start = 0;
-        }
+            forward::pack_rows_block(input, self.weights.spec.input_dim(), count, s);
+            0
+        };
         for l in start..n_local {
             let (rows, cols, m) = self.weights.layer(l);
-            s.z.resize(cols, 0.0);
-            forward::affine_aug(&s.h, rows, cols, m, &mut s.z);
             if self.is_output && l == n_local - 1 {
-                return Some(wta_race(&s.z, p, &mut g));
+                forward::output_layer_block(rows, cols, m, s);
+                wta_race_block(&s.logits, cols, p, &mut s.gauss, winners);
+                return;
             }
-            for v in s.z.iter_mut() {
-                *v = if (*v as f64) + sigma * g.next() > 0.0 { 1.0 } else { 0.0 };
-            }
-            std::mem::swap(&mut s.h, &mut s.z);
+            forward::hidden_layer_block(rows, cols, m, sigma, s);
         }
-        out.extend_from_slice(&s.h);
-        None
+        forward::unpack_block_rows(s, out_h);
     }
 }
 
@@ -369,7 +366,7 @@ fn stage_loop(
 ) {
     // Input-die cache: request id → deterministic z1 pre-activation.
     let mut z1_cache: HashMap<RequestId, Vec<f32>> = HashMap::new();
-    let mut scratch = StageScratch::default();
+    let mut scratch = forward::BlockScratch::default();
     while let Ok(msg) = rx.recv() {
         match msg {
             StageMsg::Open { req, image } => {
@@ -382,7 +379,6 @@ fn stage_loop(
                 // The control thread sends every Trials block before the
                 // Close of the same request on this FIFO channel, so a
                 // cache miss here is a protocol bug, not a race.
-                let in_width = stage.weights.spec.input_dim();
                 let out_width = stage.weights.spec.output_dim();
                 let t0 = Instant::now();
                 let mut out_h: Vec<f32> = Vec::new();
@@ -392,29 +388,23 @@ fn stage_loop(
                 } else {
                     out_h.reserve(count as usize * out_width);
                 }
-                let z1: Option<&[f32]> = if stage.first_layer == 0 {
-                    Some(z1_cache.get(&req).expect("trials for unopened request").as_slice())
+                // One blocked-kernel pass per message: the input die reads
+                // its cached z1 (shared across the block — the trials all
+                // belong to `req`), downstream dies read the slab.
+                let input: &[f32] = if stage.first_layer == 0 {
+                    z1_cache.get(&req).expect("trials for unopened request")
                 } else {
-                    None
+                    &h
                 };
-                for k in 0..count as u64 {
-                    let input: &[f32] = match z1 {
-                        Some(z) => z,
-                        None => {
-                            let k = k as usize;
-                            &h[k * in_width..(k + 1) * in_width]
-                        }
-                    };
-                    if let Some(w) = stage.run_one(
-                        input,
-                        params,
-                        base_idx.wrapping_add(k),
-                        &mut scratch,
-                        &mut out_h,
-                    ) {
-                        winners.push(w);
-                    }
-                }
+                stage.run_block(
+                    input,
+                    params,
+                    base_idx,
+                    count as usize,
+                    &mut scratch,
+                    &mut out_h,
+                    &mut winners,
+                );
                 metrics.trials_executed.fetch_add(count as u64, Relaxed);
                 metrics.record_latency(t0.elapsed());
                 let delivered = match &sink {

@@ -513,6 +513,11 @@ pub struct BuildOptions {
     /// Default trials per die-to-die message for pipeline leaves that
     /// don't pin their own `:bN`.
     pub batch: usize,
+    /// Trials per blocked-kernel pass on every native die (the
+    /// `serve.trial_block` knob; ≥ 1).  Purely a performance parameter —
+    /// votes are bit-identical at any value.  Pipeline leaves block per
+    /// die-to-die message instead (`batch` / `:bN`).
+    pub trial_block: usize,
     /// Held-out set + calibrator: fused replica fleets calibrate against
     /// it up front (when variation is on) and recalibrate drifting dies
     /// live.  Also the image source for injected health probes.
@@ -534,6 +539,7 @@ impl Default for BuildOptions {
             variation: None,
             depth: 256,
             batch: 8,
+            trial_block: crate::engine::DEFAULT_TRIAL_BLOCK,
             calibration: None,
             reweigh_every: 32,
             probe_rate: 0.0,
@@ -576,22 +582,15 @@ fn build_node(node: &PlanNode, nominal: &Weights, opts: &BuildOptions) -> Result
         // The process boundary: dies on the other side belong to the
         // listener (its weights, its seed, its chip numbering).
         PlanNode::Remote { addr } => Ok(Box::new(RemoteBackend::connect(addr)?)),
-        PlanNode::Replicate { policy, children } => {
-            if let Some(fused) = fuse_native_dies(children, *policy, nominal, opts)? {
-                return Ok(fused);
+        // Replicate and Group share one runtime (children behind a
+        // health-reweighted router); Replicate-over-native-die fuses into
+        // the per-chip worker fleet first.
+        PlanNode::Replicate { policy, children } | PlanNode::Group { policy, children } => {
+            if matches!(node, PlanNode::Replicate { .. }) {
+                if let Some(fused) = fuse_native_dies(children, *policy, nominal, opts)? {
+                    return Ok(fused);
+                }
             }
-            let built = children
-                .iter()
-                .map(|c| build_node(c, nominal, opts))
-                .collect::<Result<Vec<_>>>()?;
-            Ok(Box::new(RouterBackend::start(
-                built,
-                *policy,
-                probe_injector(opts),
-                opts.reweigh_every,
-            )))
-        }
-        PlanNode::Group { policy, children } => {
             let built = children
                 .iter()
                 .map(|c| build_node(c, nominal, opts))
@@ -635,6 +634,10 @@ fn fuse_native_dies(
         policy,
         opts.seed,
     );
+    // The worker fleet's engines run the blocked kernel per request.
+    for c in fleet.chips.iter_mut() {
+        c.engine.block = opts.trial_block.max(1);
+    }
     if opts.variation.is_some() {
         if let Some((cal, calibrator)) = &opts.calibration {
             fleet.calibrate(cal, calibrator);
@@ -675,7 +678,7 @@ fn build_die(
             let mut cfg = opts.scheduler.clone();
             cfg.params = opts.trial;
             cfg.seed = opts.seed;
-            let e = NativeEngine::new(Arc::new(w), opts.seed);
+            let e = NativeEngine::new(Arc::new(w), opts.seed).with_trial_block(opts.trial_block);
             Ok(Box::new(SingleChipBackend::start(e, cfg)))
         }
         EngineSel::Physical => {

@@ -1,0 +1,154 @@
+//! Bit-parity of the §Perf iteration-5 trial-blocked bit-packed kernel.
+//!
+//! The contract: at equal `(seed, trial_idx)` the blocked path —
+//! `NativeEngine::infer` / `trials_cached` / the pipelined backend's
+//! per-message stage kernel — reproduces the scalar
+//! `NativeEngine::trial_scratch` loop **bit-for-bit**, for every layer
+//! width (including widths that are not multiples of 64), every block
+//! size (including B = 1 and B > 64, which needs multi-lane trial
+//! masks), partial tail blocks (trials % B ≠ 0), and abstention-heavy
+//! parameter points (huge θ, where the WTA race runs its full horizon).
+
+use std::sync::Arc;
+
+use raca::engine::{NativeEngine, TrialParams};
+use raca::nn::{ModelSpec, Weights};
+use raca::serve::{build, trial_stream_base, BuildOptions, InferRequest, Topology};
+
+fn image(dim: usize, salt: u64) -> Vec<f32> {
+    (0..dim)
+        .map(|j| ((j as u64 * 13 + salt * 31) % 11) as f32 / 11.0)
+        .collect()
+}
+
+#[test]
+fn blocked_matches_scalar_across_widths_blocks_and_tails() {
+    // Odd widths on purpose: no layer is a multiple of 64, so the bit
+    // masks always carry a ragged tail; 100 > 64 exercises two mask
+    // lanes per neuron.
+    let specs: [Vec<usize>; 3] = [
+        vec![23, 17, 10, 5],
+        vec![97, 65, 33, 10],
+        vec![50, 129, 7],
+    ];
+    let p = TrialParams::default();
+    for widths in &specs {
+        let w = Weights::random(ModelSpec::new(widths.clone()), 9);
+        let x = image(widths[0], 3);
+        for block in [1usize, 3, 64, 100] {
+            let e = NativeEngine::new(Arc::new(w.clone()), 0xB10C).with_trial_block(block);
+            for trials in [1usize, 5, 63, 64, 65, 130] {
+                let a = e.infer_scalar(&x, p, trials, 77);
+                let b = e.infer(&x, p, trials, 77);
+                assert_eq!(
+                    a.counts, b.counts,
+                    "votes diverged: widths {widths:?}, B={block}, {trials} trials"
+                );
+                assert_eq!(a.abstentions, b.abstentions);
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_parallel_shard_path_matches_scalar() {
+    // Enough trials to cross the thread-sharding threshold: the
+    // deterministic merge must not change a single vote.
+    let w = Weights::random(ModelSpec::new(vec![97, 65, 33, 10]), 4);
+    let x = image(97, 8);
+    let p = TrialParams::default();
+    let e = NativeEngine::new(Arc::new(w), 0x5AAD);
+    let a = e.infer_scalar(&x, p, 1000, 0xFFFF_FFFF_0000_0000);
+    let b = e.infer(&x, p, 1000, 0xFFFF_FFFF_0000_0000);
+    assert_eq!(a.counts, b.counts);
+    assert_eq!(a.abstentions, b.abstentions);
+}
+
+#[test]
+fn blocked_winners_match_per_trial_at_arbitrary_indices() {
+    // Stronger than vote equality: each individual winner, at
+    // non-consecutive stream indices (the fleet runner's sharded rows).
+    let w = Weights::random(ModelSpec::new(vec![41, 19, 6]), 2);
+    let x = image(41, 1);
+    let p = TrialParams::default();
+    let e = NativeEngine::new(Arc::new(w), 0xCAFE).with_trial_block(5);
+    let z1 = e.precompute(&x);
+    let indices: Vec<u64> = (0..37u64).map(|k| k * k + 7).collect();
+    let blocked = e.trials_cached(&z1, p, &indices);
+    for (k, &idx) in indices.iter().enumerate() {
+        assert_eq!(blocked[k], e.trial_cached(&z1, p, idx), "index {idx}");
+    }
+}
+
+#[test]
+fn abstention_heavy_params_stay_bit_identical() {
+    // A huge θ forces every race to time out: the blocked WTA runs the
+    // full T-step horizon per trial, drawing exactly the scalar stream.
+    let w = Weights::random(ModelSpec::new(vec![23, 17, 10, 5]), 9);
+    let x = image(23, 5);
+    let p = TrialParams::default().with_theta(1e6);
+    let e = NativeEngine::new(Arc::new(w), 0xDEAD).with_trial_block(8);
+    let a = e.infer_scalar(&x, p, 50, 0);
+    let b = e.infer(&x, p, 50, 0);
+    assert_eq!(a.abstentions, 50);
+    assert_eq!(b.abstentions, 50);
+    assert_eq!(a.counts, b.counts);
+}
+
+#[test]
+fn pipeline3_blocked_stages_match_the_scalar_reference() {
+    // The serving-layer leg of the contract: a 3-die pipeline (whose
+    // stages now execute StageMsg::Trials blocks through the bit-packed
+    // kernel) still votes bit-identically to the *scalar* unsharded
+    // engine at equal (seed, trial_idx), across message batch sizes.
+    let w = Weights::random(ModelSpec::new(vec![784, 40, 24, 10]), 5);
+    let seed = 0xB10C7;
+    let p = TrialParams::default();
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    for spec in ["pipeline:3", "pipeline:3:b1", "pipeline:3:b64"] {
+        let topo = Topology::parse(spec).unwrap();
+        let opts = BuildOptions { seed, trial: p, ..Default::default() };
+        let b = build(&topo, &w, &opts).unwrap();
+        for id in 0..3u64 {
+            let x = image(784, id);
+            let want = reference.infer_scalar(&x, p, 21, trial_stream_base(seed, id));
+            let got = b
+                .classify(InferRequest::new(id, x).with_budget(21, 0.0))
+                .unwrap();
+            assert_eq!(
+                got.outcome.counts, want.counts,
+                "{spec}: request {id} votes diverged"
+            );
+            assert_eq!(got.outcome.abstentions, want.abstentions);
+            assert_eq!(got.trials_used, 21);
+        }
+        b.shutdown();
+    }
+}
+
+#[test]
+fn trial_block_knob_never_changes_votes_through_a_worker_fleet() {
+    // serve.trial_block is performance-only: the same deployment at
+    // B ∈ {1, 64} answers bit-identically.  The fused worker fleet's
+    // per-request streams are `trial_stream_base(seed, id) + t` and
+    // routing is decided at submit time, so the comparison is
+    // deterministic (the scheduler-batched bare `die`, whose per-trial
+    // seeds depend on batch composition, is deliberately not used here).
+    let w = Weights::random(ModelSpec::new(vec![784, 20, 10]), 3);
+    let votes = |trial_block: usize| -> Vec<Vec<u64>> {
+        let opts = BuildOptions { seed: 0x7B, trial_block, ..Default::default() };
+        let b = build(&Topology::parse("2x(die)").unwrap(), &w, &opts).unwrap();
+        let tickets: Vec<_> = (0..4u64)
+            .map(|i| {
+                b.submit(InferRequest::new(i, image(784, i)).with_budget(9, 0.0)).unwrap()
+            })
+            .collect();
+        let out = tickets
+            .into_iter()
+            .map(|t| b.wait(t).unwrap().outcome.counts)
+            .collect();
+        b.shutdown();
+        out
+    };
+    assert_eq!(votes(1), votes(64));
+}
