@@ -137,12 +137,19 @@ fn main() {
     );
 
     let mut backend_lanes: Vec<(String, f64)> = Vec::new();
+    // Per-node telemetry of the richest lane (replicas of pipelines),
+    // snapshotted before shutdown and embedded in the --json report so
+    // BENCH_*.json doubles as a per-node regression baseline.
+    let mut final_tree: Option<Json> = None;
     let mut measure = |topo_spec: &str, variation: Option<VariationModel>| -> f64 {
         let topo = Topology::parse(topo_spec).expect("topology spec");
         let opts = BuildOptions { seed, variation, ..Default::default() };
         let b = build(&topo, &w, &opts).expect("building deployment");
         let _ = throughput(b.as_ref(), &images, trials, warmup);
         let tps = throughput(b.as_ref(), &images, trials, reqs);
+        if topo_spec == "2x(pipeline:2)" {
+            final_tree = Some(b.metrics_tree().to_json());
+        }
         b.shutdown();
         backend_lanes.push((topo_spec.to_string(), tps));
         tps
@@ -263,6 +270,8 @@ fn main() {
                     ("remote_die", json::num(remote_lat * 1e6)),
                 ]),
             ),
+            // Final per-node MetricsTree of the 2x(pipeline:2) lane.
+            ("metrics_tree", final_tree.take().unwrap_or(Json::Null)),
         ]);
         std::fs::write(path, format!("{j}\n")).expect("writing --json report");
         println!("wrote {path}");

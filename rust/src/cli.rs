@@ -10,6 +10,9 @@ pub struct Args {
     pub subcommand: Option<String>,
     flags: HashMap<String, String>,
     switches: Vec<String>,
+    /// Bare (non-flag) arguments after the subcommand, in order — e.g.
+    /// the target of `raca top <addr|topology>`.
+    positionals: Vec<String>,
 }
 
 impl Args {
@@ -32,8 +35,10 @@ impl Args {
                     _ => out.switches.push(name.to_string()),
                 }
             } else {
-                // Bare positional after flags — treat as a switch value.
-                out.switches.push(a);
+                // Bare positional — keep the historical switch behavior
+                // (so `has` still sees it) and record the order.
+                out.switches.push(a.clone());
+                out.positionals.push(a);
             }
         }
         out
@@ -62,6 +67,11 @@ impl Args {
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
     }
+
+    /// The `i`-th bare argument after the subcommand, if any.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
 }
 
 #[cfg(test)]
@@ -88,6 +98,16 @@ mod tests {
         assert_eq!(a.get_or("panel", "all"), "all");
         assert_eq!(a.get_usize("images", 200), 200);
         assert_eq!(a.get_f64("snr", 1.0), 1.0);
+    }
+
+    #[test]
+    fn positionals_keep_order_and_skip_flag_values() {
+        let a = parse("top 127.0.0.1:7433 --interval 2 --json");
+        assert_eq!(a.subcommand.as_deref(), Some("top"));
+        assert_eq!(a.positional(0), Some("127.0.0.1:7433"));
+        assert_eq!(a.positional(1), None);
+        assert_eq!(a.get("interval"), Some("2"));
+        assert!(a.has("json"));
     }
 
     #[test]

@@ -1,9 +1,15 @@
-//! Coordinator metrics: lock-free counters + latency reservoir.
+//! Coordinator metrics: lock-free counters + striped latency reservoir.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Shared metric sink (cheap atomics on the hot path).
+///
+/// Latency samples go to a **striped** reservoir: an atomic cursor
+/// rotates writers over [`SHARDS`] independent locks, so concurrent
+/// workers (fleet worker threads, pipeline stages, router relays) never
+/// serialize on one `Mutex<Vec>` the way they did pre-PR-6.  Shards are
+/// merged (and sorted once) at snapshot time — the cold path.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests_admitted: AtomicU64,
@@ -15,8 +21,10 @@ pub struct Metrics {
     /// Trials saved by early stopping (budget − used, summed).
     pub trials_saved: AtomicU64,
     pub engine_errors: AtomicU64,
-    /// Latency samples in µs (bounded reservoir).
-    latencies_us: Mutex<Vec<u64>>,
+    /// Round-robin shard selector for [`Self::record_latency`].
+    cursor: AtomicUsize,
+    /// Latency samples in µs (bounded recency-weighted window, striped).
+    latencies_us: [Mutex<Vec<u64>>; SHARDS],
 }
 
 /// Point-in-time copy for reporting.
@@ -34,6 +42,9 @@ pub struct MetricsSnapshot {
 }
 
 const RESERVOIR: usize = 65_536;
+/// Stripes for the latency window (power of two; index is a mask).
+const SHARDS: usize = 8;
+const SHARD_CAP: usize = RESERVOIR / SHARDS;
 
 impl Metrics {
     pub fn new() -> std::sync::Arc<Self> {
@@ -41,18 +52,31 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, d: std::time::Duration) {
-        let mut v = self.latencies_us.lock().unwrap();
-        if v.len() >= RESERVOIR {
-            // Halve the reservoir (keep every other sample) — bounded
-            // memory with a still-representative distribution.
-            let kept: Vec<u64> = v.iter().copied().step_by(2).collect();
-            *v = kept;
+        let shard = self.cursor.fetch_add(1, Ordering::Relaxed) & (SHARDS - 1);
+        let mut v = self.latencies_us[shard].lock().unwrap();
+        if v.len() >= SHARD_CAP {
+            // Drop the oldest half.  The pre-PR-6 `step_by(2)` halving
+            // kept index 0 (the very first sample) forever while thinning
+            // the *newest* half on every overflow — repeated halvings
+            // skewed the percentiles toward ancient samples.  Discarding
+            // from the old end keeps the window recency-weighted: the
+            // newest sample always survives, and what ages out is always
+            // the oldest data.
+            v.drain(..SHARD_CAP / 2);
         }
         v.push(d.as_micros() as u64);
     }
 
+    /// Samples currently retained across all shards (tests/diagnostics).
+    pub fn latency_samples(&self) -> usize {
+        self.latencies_us.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat = self.latencies_us.lock().unwrap().clone();
+        let mut lat: Vec<u64> = Vec::new();
+        for shard in &self.latencies_us {
+            lat.extend_from_slice(&shard.lock().unwrap());
+        }
         lat.sort_unstable();
         let pct = |p: f64| -> u64 {
             if lat.is_empty() {
@@ -186,9 +210,51 @@ mod tests {
         for i in 0..(RESERVOIR * 2 + 10) {
             m.record_latency(Duration::from_micros(i as u64));
         }
-        let len = m.latencies_us.lock().unwrap().len();
-        assert!(len <= RESERVOIR + 1);
+        assert!(m.latency_samples() <= RESERVOIR);
         let s = m.snapshot();
         assert!(s.latency_p99_us > s.latency_p50_us);
+    }
+
+    #[test]
+    fn overflow_discards_oldest_not_newest() {
+        // Fill far past capacity with monotonically increasing samples:
+        // a correctly recency-weighted window must retain the *latest*
+        // sample and every retained sample must come from the newer half
+        // of the stream.  (The old `step_by(2)` halving kept sample #0
+        // forever and thinned the newest half on each overflow.)
+        let m = Metrics::new();
+        let total = RESERVOIR * 4;
+        for i in 0..total {
+            m.record_latency(Duration::from_micros(i as u64));
+        }
+        let mut all: Vec<u64> = Vec::new();
+        for shard in &m.latencies_us {
+            all.extend_from_slice(&shard.lock().unwrap());
+        }
+        assert!(all.contains(&(total as u64 - 1)), "newest sample must survive overflow");
+        let oldest = *all.iter().min().unwrap();
+        assert!(
+            oldest >= (total / 2) as u64,
+            "sample {oldest} predates the newer half of a {total}-long stream"
+        );
+        // p99 over a 0..total ramp restricted to the recent window.
+        assert!(m.snapshot().latency_p99_us > (total as f64 * 0.9) as u64);
+    }
+
+    #[test]
+    fn striped_writes_merge_at_snapshot() {
+        // One sample per shard: the snapshot must see all of them even
+        // though no single shard holds more than one.
+        let m = Metrics::new();
+        for us in [100u64, 200, 300, 400, 500, 600, 700, 800] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert_eq!(m.latency_samples(), 8);
+        for shard in &m.latencies_us {
+            assert!(shard.lock().unwrap().len() <= 1);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latency_p50_us, 500); // ceil((8-1) * 0.5) = idx 4
+        assert_eq!(s.latency_p99_us, 800);
     }
 }

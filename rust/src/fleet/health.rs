@@ -9,6 +9,9 @@
 //! chips below the hard `evict_floor` (→ drop from routing).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::telemetry::{EventKind, Journal};
 
 use super::chip::ChipId;
 
@@ -91,11 +94,34 @@ pub struct SteerReport {
 pub struct HealthMonitor {
     pub cfg: HealthConfig,
     chips: Vec<ChipHealth>,
+    /// Event sink + per-member labels (`die#3`, `remote:a:7433`, …):
+    /// evictions, reweighs and recalibrations become journal events.
+    journal: Option<(Arc<Journal>, Vec<String>)>,
 }
 
 impl HealthMonitor {
     pub fn new(n_chips: usize, cfg: HealthConfig) -> Self {
-        Self { cfg, chips: (0..n_chips).map(|_| ChipHealth::default()).collect() }
+        Self {
+            cfg,
+            chips: (0..n_chips).map(|_| ChipHealth::default()).collect(),
+            journal: None,
+        }
+    }
+
+    /// Route health events (evict/reweigh/recalibrate) into `journal`,
+    /// naming members by `labels[chip]` (falls back to `chip#<id>`).
+    pub fn attach_journal(&mut self, journal: Arc<Journal>, labels: Vec<String>) {
+        self.journal = Some((journal, labels));
+    }
+
+    fn log(&self, kind: EventKind, chip: Option<ChipId>, detail: String) {
+        if let Some((journal, labels)) = &self.journal {
+            let node = match chip {
+                Some(c) => labels.get(c).cloned().unwrap_or_else(|| format!("chip#{c}")),
+                None => "health".to_string(),
+            };
+            journal.record(kind, &node, detail);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -179,6 +205,17 @@ impl HealthMonitor {
 
     /// Drop a chip from routing.
     pub fn evict(&mut self, chip: ChipId) {
+        if !self.chips[chip].evicted {
+            let acc = self.chips[chip].rolling_accuracy();
+            self.log(
+                EventKind::HealthEvict,
+                Some(chip),
+                match acc {
+                    Some(a) => format!("rolling accuracy {a:.2} < floor {:.2}", self.cfg.evict_floor),
+                    None => "evicted by caller".to_string(),
+                },
+            );
+        }
         self.chips[chip].evicted = true;
     }
 
@@ -196,12 +233,31 @@ impl HealthMonitor {
                 evicted.push(c);
             }
         }
-        SteerReport { evicted, drifting: self.drifting(), weights: self.traffic_weights() }
+        let report =
+            SteerReport { evicted, drifting: self.drifting(), weights: self.traffic_weights() };
+        for &c in &report.drifting {
+            let acc = self.chips[c].rolling_accuracy().unwrap_or(0.0);
+            self.log(
+                EventKind::HealthRecalibrate,
+                Some(c),
+                format!("drifting: rolling accuracy {acc:.2} under fleet median"),
+            );
+        }
+        self.log(
+            EventKind::HealthReweigh,
+            None,
+            format!(
+                "weights {:?}",
+                report.weights.iter().map(|w| (w * 100.0).round() / 100.0).collect::<Vec<_>>()
+            ),
+        );
+        report
     }
 
     /// Reset a chip's rolling window after recalibration (old samples no
     /// longer describe its behaviour).
     pub fn note_recalibrated(&mut self, chip: ChipId) {
+        self.log(EventKind::HealthRecalibrate, Some(chip), "window reset after recalibration".into());
         let h = &mut self.chips[chip];
         h.recalibrations += 1;
         h.correct.clear();
@@ -346,6 +402,29 @@ mod tests {
         }
         let w2 = m2.traffic_weights();
         assert!(w2[0] > 5.0 * w2[1], "abstaining chip must be starved: {w2:?}");
+    }
+
+    #[test]
+    fn journal_records_evictions_and_reweighs() {
+        let j = Journal::new(64);
+        let mut m = monitor(2);
+        m.attach_journal(j.clone(), vec!["die#0".into(), "die#1".into()]);
+        feed(&mut m, 0, 16, 0);
+        feed(&mut m, 1, 1, 15);
+        let r = m.steer();
+        assert_eq!(r.evicted, vec![1]);
+        let evs = j.tail(64);
+        assert!(
+            evs.iter().any(|e| e.kind == EventKind::HealthEvict && e.node == "die#1"),
+            "eviction must land in the journal: {evs:?}"
+        );
+        assert!(evs.iter().any(|e| e.kind == EventKind::HealthReweigh), "{evs:?}");
+        // Re-evicting an already-evicted chip adds no duplicate event.
+        let evictions = evs.iter().filter(|e| e.kind == EventKind::HealthEvict).count();
+        m.evict(1);
+        let after =
+            j.tail(64).iter().filter(|e| e.kind == EventKind::HealthEvict).count();
+        assert_eq!(after, evictions);
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub struct ChipStats {
     pub busy_us: u64,
     /// Worst single-request latency [µs].
     pub max_latency_us: u64,
+    /// Total queue wait [µs]: end-to-end latency minus on-chip service
+    /// time, summed.  Separates "the die is slow" from "the die is
+    /// swamped" in the telemetry tree ([`ChipStats::mean_wait_us`]).
+    pub wait_us: u64,
 }
 
 impl ChipStats {
@@ -62,6 +66,19 @@ impl ChipStats {
         self.busy_us as f64 / self.served as f64
     }
 
+    /// Fold in one request's queue wait (end-to-end minus service time).
+    pub fn record_wait(&mut self, wait_us: u64) {
+        self.wait_us += wait_us;
+    }
+
+    /// Mean queue wait per served request [µs].
+    pub fn mean_wait_us(&self) -> f64 {
+        if self.served == 0 {
+            return 0.0;
+        }
+        self.wait_us as f64 / self.served as f64
+    }
+
     pub fn merge(&mut self, other: &ChipStats) {
         self.served += other.served;
         self.trials += other.trials;
@@ -70,6 +87,7 @@ impl ChipStats {
         self.hits += other.hits;
         self.busy_us += other.busy_us;
         self.max_latency_us = self.max_latency_us.max(other.max_latency_us);
+        self.wait_us += other.wait_us;
     }
 }
 
@@ -149,6 +167,13 @@ mod tests {
         assert_eq!(s.accuracy(), Some(0.5));
         assert_eq!(s.max_latency_us, 400);
         assert!((s.mean_latency_us() - 200.0).abs() < 1e-9);
+        s.record_wait(30);
+        s.record_wait(60);
+        assert!((s.mean_wait_us() - 30.0).abs() < 1e-9);
+        let mut other = ChipStats::default();
+        other.record_wait(10);
+        other.merge(&s);
+        assert_eq!(other.wait_us, 100);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //! Module map (DESIGN.md §4): `stats` → `device` → `circuit` → `crossbar`
 //! → `neuron` → `nn` → `engine` → `runtime` → `coordinator` → `fleet` →
 //! `serve`, with `hwmodel` (Table I), `arch` (floorplan/pipeline/shard),
-//! `dataset`, `figures` (Fig. 4/5/6) and `util` on the side.  `fleet`
+//! `dataset`, `figures` (Fig. 4/5/6), `telemetry` (per-node
+//! [`telemetry::MetricsTree`] + event [`telemetry::Journal`]) and `util`
+//! on the side.  `fleet`
 //! programs, calibrates and health-models a farm of non-identical
 //! simulated RACA dies; `serve` is the single public serving entry point —
 //! a composable [`serve::Topology`] tree (`die` / `pipeline:<dies>`
@@ -46,6 +48,7 @@ pub mod planner;
 pub mod runtime;
 pub mod serve;
 pub mod stats;
+pub mod telemetry;
 pub mod util;
 
 pub mod version {

@@ -102,6 +102,7 @@ fn main() -> Result<()> {
         }
         Some("infer") => infer(&args),
         Some("serve") => serve(&args),
+        Some("top") => top(&args),
         Some("train") => train_cmd(&args),
         Some("fleet") => fleet(&args),
         Some("selftest") => selftest(),
@@ -142,6 +143,15 @@ USAGE: raca <subcommand> [flags]
               --images N --trials K --confidence C --sigma S --seed S
               --widths 784,256,128,10   (train a custom-depth model)
               --config run.json         ({"serve": {"topology": ..., ...}})
+  top         render a serving tree's per-node telemetry + recent events
+              raca top <host:port>        sample a live listener twice and
+                                          show per-node p50/p99, trials/s,
+                                          health notes, journal tail
+              raca top "<topology>"       build locally, drive a small
+                                          labeled workload, then render
+              --interval S   seconds between remote samples (default 1)
+              --events N     journal events to show (default 12)
+              --images N --trials K --probe-rate R   local workload shape
   train       train + save weight/dataset artifacts natively (replaces the
               python toolchain for paper-scale weights)
               --widths 784,500,300,10 --samples N --epochs E --lr F
@@ -455,6 +465,120 @@ fn serve(args: &Args) -> Result<()> {
     serve_and_report(backend.as_ref(), &ds, trials, confidence, None)?;
     backend.shutdown();
     Ok(())
+}
+
+/// `raca top` — observability console for a serving tree.
+///
+/// `raca top <host:port>` samples a live `raca serve --listen` peer twice
+/// over `--interval` seconds and renders its [`raca::telemetry::MetricsTree`]
+/// (per-node p50/p99, queue-wait vs. service split, probe accuracy,
+/// eviction state) plus the tail of its event journal; `raca top
+/// "<topology>"` builds the tree locally, drives a small labeled workload
+/// through it, and renders the same report.
+fn top(args: &Args) -> Result<()> {
+    let Some(target) = args.positional(0) else {
+        anyhow::bail!(
+            "usage: raca top <host:port | topology>\n  e.g. `raca top 127.0.0.1:7433` \
+             or `raca top \"2x(pipeline:2)\"`"
+        );
+    };
+    // A target that parses as a topology is built locally (this covers
+    // `remote:<addr>` too — a client-side view of the peer); anything
+    // else is treated as a listener address.
+    match Topology::parse(target) {
+        Ok(topo) => top_local(args, &topo),
+        Err(_) => top_remote(args, target),
+    }
+}
+
+fn top_remote(args: &Args, addr: &str) -> Result<()> {
+    use raca::serve::net::RemoteBackend;
+
+    let interval = args.get_f64("interval", 1.0).max(0.1);
+    let n_events = args.get_usize("events", 12);
+    let remote = RemoteBackend::connect(addr)?;
+    let (first, _) = remote
+        .remote_telemetry()
+        .ok_or_else(|| anyhow::anyhow!("{addr}: no telemetry answer"))?;
+    std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    let (tree, events) = remote
+        .remote_telemetry()
+        .ok_or_else(|| anyhow::anyhow!("{addr}: telemetry stopped mid-sample"))?;
+    let dtrials = tree.snapshot.trials_executed.saturating_sub(first.snapshot.trials_executed);
+    println!(
+        "raca top — {addr} (wire v{}): {} nodes, {:.0} trials/s over the last {interval:.1}s",
+        raca::serve::net::PROTOCOL_VERSION,
+        tree.num_nodes(),
+        dtrials as f64 / interval,
+    );
+    print!("{}", tree.render());
+    print_events(&events, n_events);
+    Box::new(remote).shutdown();
+    Ok(())
+}
+
+fn top_local(args: &Args, topo: &Topology) -> Result<()> {
+    let n = args.get_usize("images", 64);
+    let trials = args.get_usize("trials", 12) as u32;
+    let probe_rate = args.get_f64("probe-rate", 0.1);
+    let n_events = args.get_usize("events", 12);
+
+    let (w, pool) = load_or_train()?;
+    anyhow::ensure!(!pool.is_empty(), "no evaluation data available");
+    let cal = pool.take(48.min(pool.len()));
+    let ds = {
+        let d = pool.slice(cal.len(), cal.len() + n);
+        if d.is_empty() { cal.clone() } else { d }
+    };
+    let plan = DeployPlan::compile(topo)?;
+    println!("top: topology {topo} ({} dies), {} labeled requests…", plan.total_dies, ds.len());
+    let opts = BuildOptions {
+        seed: args.get_usize("seed", 0x70B) as u64,
+        calibration: Some((cal.clone(), Calibrator::quick(5))),
+        probe_rate,
+        ..Default::default()
+    };
+    let backend = raca::serve::plan::build(topo, &w, &opts)?;
+
+    let t0 = std::time::Instant::now();
+    let tickets = (0..ds.len())
+        .map(|i| {
+            backend.submit(
+                InferRequest::new(i as u64, ds.image(i).to_vec())
+                    .with_budget(trials, 0.0)
+                    .with_label(ds.label(i)),
+            )
+        })
+        .collect::<Result<Vec<_>>>()?;
+    for t in tickets {
+        backend.wait(t)?;
+    }
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let tree = backend.metrics_tree();
+    println!(
+        "raca top — local: {} nodes, {:.0} trials/s over {:.2}s",
+        tree.num_nodes(),
+        tree.snapshot.trials_executed as f64 / dt,
+        dt
+    );
+    print!("{}", tree.render());
+    if let Some(j) = backend.journal() {
+        print_events(&j.tail(n_events), n_events);
+    }
+    backend.shutdown();
+    Ok(())
+}
+
+fn print_events(events: &[raca::telemetry::Event], n: usize) {
+    if events.is_empty() || n == 0 {
+        return;
+    }
+    println!("recent events:");
+    let skip = events.len().saturating_sub(n);
+    for e in &events[skip..] {
+        println!("  {e}");
+    }
 }
 
 /// `raca train` — regenerate weight + dataset artifacts natively: the

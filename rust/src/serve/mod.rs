@@ -65,6 +65,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::MetricsSnapshot;
 use crate::fleet::RoutePolicy;
+use crate::telemetry::{Journal, MetricsTree};
 
 /// Claim ticket for a submitted request: hold it, do other work, then
 /// [`Backend::wait`] on it.  The thread-based analogue of a future.
@@ -132,6 +133,24 @@ pub trait Backend: Send + Sync {
 
     /// Aggregate serving metrics since start.
     fn metrics(&self) -> MetricsSnapshot;
+
+    /// Per-node metrics, shaped like the deployment tree: this node's
+    /// own snapshot plus one labeled subtree per child (`die#3`,
+    /// `stage1`, `remote:host:port`).  Leaves fall back to a single
+    /// node wrapping [`Backend::metrics`]; composite backends (router,
+    /// pipeline, remote) override to expose their children, annotated
+    /// with service-time vs. queue-wait, probe accuracy, eviction state
+    /// and in-band error counts ([`crate::telemetry::NodeNotes`]).
+    fn metrics_tree(&self) -> MetricsTree {
+        MetricsTree::leaf("die", self.metrics())
+    }
+
+    /// The deployment tree's shared event [`Journal`], if this backend
+    /// writes one (topologies built by [`plan::build`] all share one
+    /// ring; hand-constructed backends may have none).
+    fn journal(&self) -> Option<std::sync::Arc<Journal>> {
+        None
+    }
 
     /// Finish in-flight work and tear the session down (worker threads are
     /// joined).  Dropping a backend has the same effect; `shutdown` makes

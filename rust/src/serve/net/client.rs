@@ -14,6 +14,13 @@
 //! order) back to their callers.  No per-request threads, no
 //! head-of-line blocking.
 //!
+//! Death: the reader thread flips a `dead` flag when the session ends
+//! (peer closed, unreadable frame).  From then on every `submit_to`
+//! answers in-band with `InferResponse::failed` — so a routing parent
+//! keeps observing the failures and evicts this leaf — and telemetry
+//! calls return the **last cached** peer snapshot tagged `stale: true`
+//! instead of stalling on a wire that will never answer.
+//!
 //! Parity: the remote host derives trial indices from its *own*
 //! deployment seed and the request id, exactly as a local backend would —
 //! so with both ends seeded alike and `variation: None`, `remote:die`
@@ -24,7 +31,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::io::BufReader;
 use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::Ordering::Relaxed;
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -32,17 +39,25 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::coordinator::{Metrics, MetricsSnapshot};
+use crate::telemetry::{Event, EventKind, Journal, MetricsTree};
 use crate::util::json;
 
 use super::super::{Backend, InferRequest, InferResponse, RequestId};
 use super::wire::{self, WireMsg, PROTOCOL_VERSION};
 
-/// How long `metrics()` waits for the remote snapshot before falling
-/// back to the locally tracked counters.
+/// How long telemetry calls wait for the remote answer before falling
+/// back to cached / locally tracked numbers.  Only reached on a *live*
+/// but slow session — a known-dead one fails fast.
 const METRICS_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// What one metrics exchange yields: the peer's tree plus the tail of
+/// its journal (empty when the peer is v1 and answered flat metrics).
+type TreeReply = (MetricsTree, Vec<Event>);
+
 type Pending = Arc<Mutex<HashMap<RequestId, mpsc::Sender<InferResponse>>>>;
-type MetricsWaiters = Arc<Mutex<VecDeque<mpsc::Sender<MetricsSnapshot>>>>;
+type MetricsWaiters = Arc<Mutex<VecDeque<mpsc::Sender<TreeReply>>>>;
+type TreeCache = Arc<Mutex<Option<TreeReply>>>;
+type JournalSlot = Arc<Mutex<Option<Arc<Journal>>>>;
 
 /// A serving session against a remote listener (one TCP connection).
 pub struct RemoteBackend {
@@ -50,9 +65,18 @@ pub struct RemoteBackend {
     write: Mutex<TcpStream>,
     pending: Pending,
     waiters: MetricsWaiters,
-    /// Local admission counters — the fallback when the peer cannot
-    /// answer a metrics request in time.
+    /// Local admission counters — the fallback when the peer has never
+    /// answered a metrics request.
     local: Arc<Metrics>,
+    /// Set by the reader thread when the session ends; checked by every
+    /// path that would otherwise wait on the wire.
+    dead: Arc<AtomicBool>,
+    /// Last successfully fetched peer telemetry, served (tagged stale)
+    /// once the session is dead.
+    last_tree: TreeCache,
+    /// Deployment journal, attached after connect by [`Self::with_journal`]
+    /// (shared with the reader thread so session drop is recorded).
+    journal: JournalSlot,
     reader: Option<JoinHandle<()>>,
 }
 
@@ -82,13 +106,21 @@ impl RemoteBackend {
 
         let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
         let waiters: MetricsWaiters = Arc::new(Mutex::new(VecDeque::new()));
+        let dead = Arc::new(AtomicBool::new(false));
+        let last_tree: TreeCache = Arc::new(Mutex::new(None));
+        let journal: JournalSlot = Arc::new(Mutex::new(None));
         let reader = {
-            let pending = pending.clone();
-            let waiters = waiters.clone();
-            let addr = addr.to_string();
+            let ctx = ReaderCtx {
+                pending: pending.clone(),
+                waiters: waiters.clone(),
+                dead: dead.clone(),
+                last_tree: last_tree.clone(),
+                journal: journal.clone(),
+                addr: addr.to_string(),
+            };
             std::thread::Builder::new()
                 .name("raca-remote-read".into())
-                .spawn(move || reader_loop(read, pending, waiters, addr))
+                .spawn(move || reader_loop(read, ctx))
                 .context("spawning remote reader thread")?
         };
         Ok(Self {
@@ -97,8 +129,23 @@ impl RemoteBackend {
             pending,
             waiters,
             local: Metrics::new(),
+            dead,
+            last_tree,
+            journal,
             reader: Some(reader),
         })
+    }
+
+    /// Route this session's connect/drop events into the deployment's
+    /// shared journal (records the connect immediately).
+    pub(crate) fn with_journal(self, journal: Arc<Journal>) -> Self {
+        journal.record(
+            EventKind::SessionConnect,
+            &format!("remote:{}", self.addr),
+            format!("proto v{PROTOCOL_VERSION}"),
+        );
+        *self.journal.lock().unwrap() = Some(journal);
+        self
     }
 
     /// The peer this session is connected to.
@@ -110,11 +157,89 @@ impl RemoteBackend {
     pub fn in_flight(&self) -> usize {
         self.pending.lock().unwrap().len()
     }
+
+    /// The session ended (peer closed or protocol error); all calls now
+    /// answer from local/cached state.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Relaxed)
+    }
+
+    /// One metrics exchange with the peer: its [`MetricsTree`] plus
+    /// recent journal [`Event`]s (empty from a v1 peer, which answers
+    /// flat metrics — wrapped here into a single-node tree).
+    ///
+    /// `None` when the session is dead or the peer did not answer within
+    /// [`METRICS_TIMEOUT`]; callers then fall back to [`Self::cached`].
+    pub fn remote_telemetry(&self) -> Option<TreeReply> {
+        if self.is_dead() {
+            return None;
+        }
+        let (tx, rx) = mpsc::channel();
+        let sent = {
+            // Holding the waiter lock across the write keeps the waiter
+            // queue aligned with the request order on the wire.
+            let mut ws = self.waiters.lock().unwrap();
+            let ok = {
+                let mut w = self.write.lock().unwrap();
+                json::write_frame(&mut *w, &wire::encode(&WireMsg::MetricsReq { tree: true }))
+                    .is_ok()
+            };
+            if ok {
+                ws.push_back(tx);
+                // Reader may have died (and cleared the queue) before the
+                // push — reclaim the waiter ourselves in that case.
+                if self.is_dead() {
+                    ws.pop_back();
+                    return None;
+                }
+            }
+            ok
+        };
+        // The reader clears the waiter queue when it exits, so a session
+        // dying mid-wait drops our sender and recv fails immediately —
+        // no 10 s stall, no leaked waiter.
+        if !sent {
+            return None;
+        }
+        match rx.recv_timeout(METRICS_TIMEOUT) {
+            Ok(reply) => Some(reply),
+            Err(_) => {
+                if !self.is_dead() {
+                    log::warn!(
+                        "{}: no metrics answer in {METRICS_TIMEOUT:?}; using cached/local",
+                        self.addr
+                    );
+                }
+                None
+            }
+        }
+    }
+
+    /// Last successfully fetched peer telemetry, tree tagged `stale`.
+    pub fn cached(&self) -> Option<TreeReply> {
+        self.last_tree
+            .lock()
+            .unwrap()
+            .clone()
+            .map(|(tree, events)| (tree.tagged_stale(), events))
+    }
 }
 
 impl Backend for RemoteBackend {
     fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
         let id = req.id;
+        if self.is_dead() {
+            // In-band failure, not Err: a routing parent sees the failed
+            // response through its relay, records it against this child's
+            // health, and evicts the leaf — an Err from submit would
+            // bypass that accounting.
+            self.local.engine_errors.fetch_add(1, Relaxed);
+            let _ = reply.send(InferResponse::failed(
+                id,
+                format!("session to {} is closed", self.addr),
+            ));
+            return Ok(());
+        }
         {
             let mut p = self.pending.lock().unwrap();
             ensure!(
@@ -133,36 +258,47 @@ impl Backend for RemoteBackend {
             self.pending.lock().unwrap().remove(&id);
             bail!("sending request {id} to {}: {e}", self.addr);
         }
+        // The reader may have died (and drained pending) between the
+        // liveness check and our insert; reclaim the entry ourselves so
+        // the caller is not left waiting on a response that never comes.
+        if self.is_dead() {
+            if let Some(tx) = self.pending.lock().unwrap().remove(&id) {
+                let _ = tx.send(InferResponse::failed(
+                    id,
+                    format!("session to {} is closed", self.addr),
+                ));
+            }
+            return Ok(());
+        }
         self.local.requests_admitted.fetch_add(1, Relaxed);
         Ok(())
     }
 
     /// The *remote* backend's metrics (the listener answers for the whole
     /// hosted deployment — shared across every client connection).  Falls
-    /// back to this session's local admission counters if the peer does
-    /// not answer within [`METRICS_TIMEOUT`].
+    /// back to the cached peer snapshot, then to this session's local
+    /// admission counters.
     fn metrics(&self) -> MetricsSnapshot {
-        let (tx, rx) = mpsc::channel();
-        let sent = {
-            // Holding the waiter lock across the write keeps the waiter
-            // queue aligned with the request order on the wire.
-            let mut ws = self.waiters.lock().unwrap();
-            let ok = {
-                let mut w = self.write.lock().unwrap();
-                json::write_frame(&mut *w, &wire::encode(&WireMsg::MetricsReq)).is_ok()
-            };
-            if ok {
-                ws.push_back(tx);
-            }
-            ok
-        };
-        if sent {
-            if let Ok(m) = rx.recv_timeout(METRICS_TIMEOUT) {
-                return m;
-            }
-            log::warn!("{}: no metrics answer in {METRICS_TIMEOUT:?}; using local counters", self.addr);
+        self.remote_telemetry()
+            .or_else(|| self.cached())
+            .map(|(tree, _)| tree.snapshot)
+            .unwrap_or_else(|| self.local.snapshot())
+    }
+
+    /// `remote:<addr>` node carrying this session's local counters, with
+    /// the peer's whole subtree as its one child (tagged stale if it is
+    /// a cached copy of a dead session).
+    fn metrics_tree(&self) -> MetricsTree {
+        let root = MetricsTree::leaf(format!("remote:{}", self.addr), self.local.snapshot());
+        match self.remote_telemetry().or_else(|| self.cached()) {
+            Some((tree, _)) => root.with_children(vec![tree]),
+            None if self.is_dead() => root.tagged_stale(),
+            None => root,
         }
-        self.local.snapshot()
+    }
+
+    fn journal(&self) -> Option<Arc<Journal>> {
+        self.journal.lock().unwrap().clone()
     }
 
     fn shutdown(self: Box<Self>) {
@@ -186,13 +322,26 @@ impl Drop for RemoteBackend {
     }
 }
 
-fn reader_loop(mut read: BufReader<TcpStream>, pending: Pending, waiters: MetricsWaiters, addr: String) {
+/// Everything the reader thread shares with the session object.
+struct ReaderCtx {
+    pending: Pending,
+    waiters: MetricsWaiters,
+    dead: Arc<AtomicBool>,
+    last_tree: TreeCache,
+    journal: JournalSlot,
+    addr: String,
+}
+
+fn reader_loop(mut read: BufReader<TcpStream>, ctx: ReaderCtx) {
+    let ReaderCtx { pending, waiters, dead, last_tree, journal, addr } = ctx;
+    let mut why = "peer closed";
     loop {
         let j = match json::read_frame(&mut read) {
             Ok(Some(j)) => j,
             Ok(None) => break, // peer closed
             Err(e) => {
                 log::warn!("{addr}: unreadable frame, dropping session: {e}");
+                why = "unreadable frame";
                 break;
             }
         };
@@ -204,9 +353,21 @@ fn reader_loop(mut read: BufReader<TcpStream>, pending: Pending, waiters: Metric
                     log::warn!("{addr}: response for unknown request {}", resp.id);
                 }
             }
+            // v1 peers answer flat metrics even when we asked for the
+            // tree — wrap into a single-node tree so every waiter sees
+            // one shape.
             Ok(WireMsg::Metrics(m)) => {
+                let reply = (MetricsTree::leaf("peer", m), Vec::new());
+                *last_tree.lock().unwrap() = Some(reply.clone());
                 if let Some(tx) = waiters.lock().unwrap().pop_front() {
-                    let _ = tx.send(m);
+                    let _ = tx.send(reply);
+                }
+            }
+            Ok(WireMsg::MetricsTree { tree, events }) => {
+                let reply = (tree, events);
+                *last_tree.lock().unwrap() = Some(reply.clone());
+                if let Some(tx) = waiters.lock().unwrap().pop_front() {
+                    let _ = tx.send(reply);
                 }
             }
             Ok(WireMsg::Error { id: Some(id), msg }) => {
@@ -224,9 +385,15 @@ fn reader_loop(mut read: BufReader<TcpStream>, pending: Pending, waiters: Metric
             Ok(other) => log::warn!("{addr}: unexpected {other:?}"),
             Err(e) => {
                 log::warn!("{addr}: undecodable frame, dropping session: {e}");
+                why = "undecodable frame";
                 break;
             }
         }
+    }
+    // Known dead from here on: submit/metrics on this session fail fast.
+    dead.store(true, Relaxed);
+    if let Some(j) = &*journal.lock().unwrap() {
+        j.record(EventKind::SessionDrop, &format!("remote:{addr}"), why);
     }
     // Anything still pending will never complete: answer every waiter
     // with an in-band failure (shared completion channels cannot observe

@@ -33,10 +33,14 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::telemetry::EventKind;
 use crate::util::json;
 
 use super::super::{Backend, InferResponse};
 use super::wire::{self, WireMsg, PROTOCOL_VERSION};
+
+/// How many recent journal events ride along with a metrics-tree answer.
+const JOURNAL_TAIL: usize = 32;
 
 /// A topology hosted behind a socket.  Dropping it stops the accept
 /// loop; [`NetServer::join`] instead blocks forever (the `raca serve
@@ -153,6 +157,10 @@ fn send(w: &Mutex<TcpStream>, msg: &WireMsg) -> std::io::Result<()> {
 }
 
 fn session(stream: TcpStream, backend: Arc<dyn Backend>) -> Result<()> {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
     let write = Arc::new(Mutex::new(stream.try_clone().context("cloning session stream")?));
     let mut read = BufReader::new(stream);
 
@@ -182,6 +190,10 @@ fn session(stream: TcpStream, backend: Arc<dyn Backend>) -> Result<()> {
         }
     }
 
+    if let Some(j) = backend.journal() {
+        j.record(EventKind::SessionConnect, "listener", format!("client {peer}"));
+    }
+
     // One completion channel per session: every submitted request replies
     // here, and the pump writes Response frames in completion order.
     let (done_tx, done_rx) = mpsc::channel::<InferResponse>();
@@ -205,6 +217,10 @@ fn session(stream: TcpStream, backend: Arc<dyn Backend>) -> Result<()> {
     // in-flight requests still hold clones, then exits.
     drop(done_tx);
     let _ = pump.join();
+    if let Some(j) = backend.journal() {
+        let how = if result.is_ok() { "clean" } else { "error" };
+        j.record(EventKind::SessionDrop, "listener", format!("client {peer} ({how})"));
+    }
     result
 }
 
@@ -236,9 +252,17 @@ fn session_read_loop(
                         send(write, &WireMsg::Error { id: Some(id), msg: format!("{e:#}") });
                 }
             }
-            Ok(WireMsg::MetricsReq) => {
+            Ok(WireMsg::MetricsReq { tree: false }) => {
+                // v1 clients (and v2 clients asking flat): old answer shape.
                 let m = backend.metrics();
                 send(write, &WireMsg::Metrics(m)).context("sending metrics")?;
+            }
+            Ok(WireMsg::MetricsReq { tree: true }) => {
+                let tree = backend.metrics_tree();
+                let events =
+                    backend.journal().map(|j| j.tail(JOURNAL_TAIL)).unwrap_or_default();
+                send(write, &WireMsg::MetricsTree { tree, events })
+                    .context("sending metrics tree")?;
             }
             Ok(WireMsg::Goodbye) => return Ok(()),
             Ok(other) => {

@@ -15,19 +15,47 @@
 //!
 //! Handshake: the listener speaks first with [`WireMsg::Hello`]; the
 //! client checks `magic`/`proto` ([`check_version`]) and answers with its
-//! own hello.  Either side closes on a mismatch.  Version bumps are
-//! explicit: change [`PROTOCOL_VERSION`] whenever a frame's shape changes.
+//! own hello.  Either side closes on a mismatch.
+//!
+//! # Protocol bump rules
+//!
+//! [`PROTOCOL_VERSION`] is this build's revision; [`check_version`]
+//! accepts any peer in `1..=PROTOCOL_VERSION` and refuses *newer* peers
+//! (they know about frames we can't parse; an older peer is safe because
+//! every revision so far is additive).  The rules when changing frames:
+//!
+//! * **Additive change** (new message type, new optional field): bump
+//!   [`PROTOCOL_VERSION`], keep decoding the old shapes, and degrade
+//!   gracefully when the peer is older — e.g. a v1 peer ignores the
+//!   `tree` flag in [`WireMsg::MetricsReq`] and answers with a flat
+//!   [`WireMsg::Metrics`]; the v2 client wraps that into a single-node
+//!   tree instead of failing.  Decoders must ignore unknown fields (the
+//!   vendored JSON layer does this for free) so the *next* additive bump
+//!   stays backward compatible too.
+//! * **Breaking change** (field removed/renamed, semantics changed):
+//!   bump [`PROTOCOL_VERSION`] **and** raise the floor in
+//!   [`check_version`] so pre-break peers are refused outright — a wrong
+//!   answer on the serving path is worse than no answer.
+//!
+//! History: v1 — initial protocol; v2 (PR-6) — `metrics_req` gained the
+//! `tree` flag, new `metrics_tree` reply carrying a recursive
+//! [`MetricsTree`] plus recent journal [`Event`]s.
 
 use std::time::Duration;
 
 use crate::coordinator::MetricsSnapshot;
 use crate::neuron::WtaOutcome;
+use crate::telemetry::{Event, MetricsTree};
 use crate::util::json::{obj, Json};
 
 use super::super::{InferRequest, InferResponse, RequestId};
 
-/// Bump on any frame-shape change; both ends refuse mismatched peers.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// Bump on any frame-shape change; see the module docs for the rules.
+pub const PROTOCOL_VERSION: u32 = 2;
+
+/// Oldest peer revision this build still understands (see the breaking-
+/// change rule in the module docs).
+pub const MIN_PROTOCOL_VERSION: u32 = 1;
 
 /// Distinguishes a raca listener from an arbitrary TCP service.
 pub const MAGIC: &str = "raca-serve";
@@ -42,10 +70,16 @@ pub enum WireMsg {
     /// Server → client: a completed request (completion order, not
     /// submission order — the session multiplexes tickets).
     Response(InferResponse),
-    /// Client → server: snapshot the hosted backend's metrics.
-    MetricsReq,
-    /// Server → client: answer to [`WireMsg::MetricsReq`].
+    /// Client → server: snapshot the hosted backend's metrics.  With
+    /// `tree: true` (v2+) the server answers [`WireMsg::MetricsTree`];
+    /// a v1 listener ignores the flag and answers flat
+    /// [`WireMsg::Metrics`] — callers must accept either reply.
+    MetricsReq { tree: bool },
+    /// Server → client: flat answer to [`WireMsg::MetricsReq`].
     Metrics(MetricsSnapshot),
+    /// Server → client (v2+): recursive per-node metrics for the hosted
+    /// deployment, plus the tail of its event journal.
+    MetricsTree { tree: MetricsTree, events: Vec<Event> },
     /// Either direction: a request-level (`id: Some`) or session-level
     /// (`id: None`) failure.
     Error { id: Option<RequestId>, msg: String },
@@ -82,9 +116,11 @@ fn malformed(what: &'static str, detail: impl Into<String>) -> WireError {
     WireError::Malformed { what, detail: detail.into() }
 }
 
-/// Refuse peers from a different protocol revision.
+/// Refuse peers we cannot serve correctly: anything *newer* than this
+/// build (they may send frames we can't parse) or older than
+/// [`MIN_PROTOCOL_VERSION`] (pre-break revisions).
 pub fn check_version(peer: u32) -> Result<(), WireError> {
-    if peer == PROTOCOL_VERSION {
+    if (MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&peer) {
         Ok(())
     } else {
         Err(WireError::Version { peer, ours: PROTOCOL_VERSION })
@@ -123,8 +159,22 @@ pub fn encode(msg: &WireMsg) -> Json {
         ]),
         WireMsg::Submit(r) => request_to_json(r),
         WireMsg::Response(r) => response_to_json(r),
-        WireMsg::MetricsReq => obj(vec![("t", s("metrics_req"))]),
+        WireMsg::MetricsReq { tree } => {
+            // `tree: false` encodes byte-identically to the v1 frame, so
+            // a v2 client asking for flat metrics is indistinguishable
+            // from a v1 client.
+            let mut pairs = vec![("t", s("metrics_req"))];
+            if *tree {
+                pairs.push(("tree", Json::Bool(true)));
+            }
+            obj(pairs)
+        }
         WireMsg::Metrics(m) => metrics_to_json(m),
+        WireMsg::MetricsTree { tree, events } => obj(vec![
+            ("t", s("metrics_tree")),
+            ("tree", tree.to_json()),
+            ("events", Json::Arr(events.iter().map(Event::to_json).collect())),
+        ]),
         WireMsg::Error { id, msg } => {
             let mut pairs = vec![("t", s("error")), ("msg", s(msg))];
             if let Some(id) = id {
@@ -205,8 +255,34 @@ pub fn decode(j: &Json) -> Result<WireMsg, WireError> {
         }
         "submit" => Ok(WireMsg::Submit(request_from_json(j)?)),
         "response" => Ok(WireMsg::Response(response_from_json(j)?)),
-        "metrics_req" => Ok(WireMsg::MetricsReq),
+        // v1 frames carry no `tree` field: default false.
+        "metrics_req" => Ok(WireMsg::MetricsReq {
+            tree: matches!(j.get("tree"), Some(Json::Bool(true))),
+        }),
         "metrics" => Ok(WireMsg::Metrics(metrics_from_json(j)?)),
+        "metrics_tree" => {
+            let tree = j
+                .get("tree")
+                .ok_or_else(|| malformed("metrics_tree", "missing 'tree' object"))
+                .and_then(|v| {
+                    MetricsTree::from_json(v)
+                        .map_err(|e| malformed("metrics_tree", e.to_string()))
+                })?;
+            let events = j
+                .get("events")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .map(|e| {
+                            Event::from_json(e)
+                                .map_err(|e| malformed("metrics_tree", e.to_string()))
+                        })
+                        .collect::<Result<Vec<_>, _>>()
+                })
+                .transpose()?
+                .unwrap_or_default();
+            Ok(WireMsg::MetricsTree { tree, events })
+        }
         "error" => {
             let id = match j.get("id") {
                 Some(v) => Some(parse_u64("error", "id", v)?),
@@ -385,7 +461,14 @@ mod tests {
             round_trip(&WireMsg::Hello { version: PROTOCOL_VERSION }),
             WireMsg::Hello { version: PROTOCOL_VERSION }
         );
-        assert_eq!(round_trip(&WireMsg::MetricsReq), WireMsg::MetricsReq);
+        assert_eq!(
+            round_trip(&WireMsg::MetricsReq { tree: false }),
+            WireMsg::MetricsReq { tree: false }
+        );
+        assert_eq!(
+            round_trip(&WireMsg::MetricsReq { tree: true }),
+            WireMsg::MetricsReq { tree: true }
+        );
         assert_eq!(round_trip(&WireMsg::Goodbye), WireMsg::Goodbye);
         assert_eq!(
             round_trip(&WireMsg::Error { id: Some(5), msg: "no healthy children".into() }),
@@ -427,12 +510,73 @@ mod tests {
 
     #[test]
     fn version_gate() {
-        assert!(check_version(PROTOCOL_VERSION).is_ok());
+        // Every revision from the floor to the current one is welcome…
+        for v in MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION {
+            assert!(check_version(v).is_ok(), "v{v} should be accepted");
+        }
+        // …but peers newer than this build, or pre-floor, are refused.
         let e = check_version(PROTOCOL_VERSION + 1).unwrap_err();
         assert_eq!(
             e,
             WireError::Version { peer: PROTOCOL_VERSION + 1, ours: PROTOCOL_VERSION }
         );
         assert!(format!("{e}").contains("version mismatch"), "{e}");
+        assert!(check_version(0).is_err());
+    }
+
+    #[test]
+    fn v1_metrics_req_decodes_as_flat() {
+        // A v1 peer sends the bare frame — no `tree` field.  It must
+        // decode to the flat-metrics request, and our own flat request
+        // must encode byte-identically to the v1 shape.
+        let old = Json::parse(r#"{"t":"metrics_req"}"#).unwrap();
+        assert_eq!(decode(&old).unwrap(), WireMsg::MetricsReq { tree: false });
+        assert_eq!(
+            encode(&WireMsg::MetricsReq { tree: false }).to_string(),
+            r#"{"t":"metrics_req"}"#
+        );
+    }
+
+    #[test]
+    fn metrics_tree_round_trips_with_notes_and_events() {
+        use crate::telemetry::{EventKind, Journal, NodeNotes};
+
+        let m = |c: u64| MetricsSnapshot {
+            requests_admitted: c + 1,
+            requests_completed: c,
+            trials_executed: 32 * c,
+            batches_executed: c,
+            rows_packed: 32 * c,
+            trials_saved: 3,
+            engine_errors: 0,
+            latency_p50_us: 120,
+            latency_p99_us: 900,
+        };
+        let mut child = MetricsTree::leaf("die#0", m(5));
+        child.notes = NodeNotes {
+            service_us: Some(118.5),
+            queue_wait_us: Some(42.0),
+            probe_accuracy: Some(0.875),
+            evicted: Some(false),
+            errors: Some(2),
+            weight: Some(0.5),
+            stale: true,
+        };
+        let tree = MetricsTree::leaf("replicate ×2", m(11)).with_children(vec![
+            child,
+            MetricsTree::leaf("die#1", m(6)),
+        ]);
+
+        let journal = Journal::new(8);
+        journal.record(EventKind::RequestAdmitted, "die#0", "id 1");
+        journal.record(EventKind::HealthEvict, "die#1", "accuracy 0.12");
+        let events = journal.tail(8);
+
+        let msg = WireMsg::MetricsTree { tree, events };
+        assert_eq!(round_trip(&msg), msg);
+
+        // Missing subtree is an error with the frame name in it.
+        let e = decode(&Json::parse(r#"{"t":"metrics_tree"}"#).unwrap()).unwrap_err();
+        assert!(format!("{e}").contains("metrics_tree"), "{e}");
     }
 }

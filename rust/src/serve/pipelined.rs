@@ -54,6 +54,7 @@ use crate::neuron::WtaOutcome;
 use crate::nn::{forward, Weights};
 use crate::stats::ci::lead_is_decided;
 use crate::stats::GaussianSource;
+use crate::telemetry::{EventKind, Journal, MetricsTree};
 
 use super::{trial_stream_base, Backend, InferRequest, InferResponse, RequestId};
 
@@ -89,6 +90,9 @@ pub struct PipelineOptions {
     /// overhead; trial indices inside a block stay `base + k`, so batching
     /// is invisible to the bit-parity contract.
     pub batch: usize,
+    /// Deployment-wide event journal (admissions, completions, in-band
+    /// failures).  `None` disables event logging for this pipeline.
+    pub journal: Option<Arc<Journal>>,
 }
 
 impl Default for PipelineOptions {
@@ -104,6 +108,7 @@ impl Default for PipelineOptions {
             depth: 256,
             max_in_flight: 256,
             batch: 8,
+            journal: None,
         }
     }
 }
@@ -217,6 +222,9 @@ pub struct PipelinedFleetBackend {
     metrics: Arc<Metrics>,
     stage_metrics: Vec<Arc<Metrics>>,
     plan: ShardPlan,
+    /// Telemetry name (`pipeline:<dies> [chips a..b]`).
+    label: String,
+    journal: Option<Arc<Journal>>,
 }
 
 impl PipelinedFleetBackend {
@@ -295,6 +303,8 @@ impl PipelinedFleetBackend {
             .spawn(move || control_loop(sub_rx, stage0_tx, win_rx, ctrl_metrics, ctrl_opts, classes))
             .expect("spawning pipeline control thread");
 
+        let label =
+            format!("pipeline:{dies} [chips {}..{}]", opts.chip_base, opts.chip_base + dies);
         Ok(Self {
             sub_tx,
             control: Some(control),
@@ -302,6 +312,8 @@ impl PipelinedFleetBackend {
             metrics,
             stage_metrics,
             plan,
+            label,
+            journal: opts.journal,
         })
     }
 
@@ -336,6 +348,29 @@ impl Backend for PipelinedFleetBackend {
 
     fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    fn metrics_tree(&self) -> MetricsTree {
+        // One child per stage: its counters are per-die (trials through
+        // that die, per-message stage latency), so a slow shard stands
+        // out against its siblings.
+        let children = self
+            .stage_metrics
+            .iter()
+            .enumerate()
+            .map(|(d, m)| {
+                let r = &self.plan.ranges[d];
+                MetricsTree::leaf(
+                    format!("stage{d} [layers {}..{}]", r.start, r.end),
+                    m.snapshot(),
+                )
+            })
+            .collect();
+        MetricsTree::leaf(self.label.clone(), self.metrics()).with_children(children)
+    }
+
+    fn journal(&self) -> Option<Arc<Journal>> {
+        self.journal.clone()
     }
 
     fn shutdown(self: Box<Self>) {
@@ -447,6 +482,17 @@ fn control_loop(
     let depth = opts.depth.max(1);
     let batch = opts.batch.max(1) as u32;
     let max_in_flight = opts.max_in_flight.max(1);
+    // (journal, node label) — resolved once so the hot loop formats the
+    // label zero times when event logging is off.
+    let jlabel: Option<(Arc<Journal>, String)> = opts.journal.clone().map(|j| {
+        let label = format!(
+            "pipeline:{} [chips {}..{}]",
+            opts.dies,
+            opts.chip_base,
+            opts.chip_base + opts.dies
+        );
+        (j, label)
+    });
     let mut active: HashMap<RequestId, Active> = HashMap::new();
     // Round-robin issue order over requests with budget left (may hold
     // stale ids of completed requests; skipped at issue time).
@@ -477,6 +523,13 @@ fn control_loop(
             if active.contains_key(&id) {
                 // Duplicate in-flight id: reject in-band rather than
                 // corrupting the first request's vote state.
+                if let Some((j, label)) = &jlabel {
+                    j.record(
+                        EventKind::RequestFailed,
+                        label,
+                        format!("id {id}: duplicate in-flight id"),
+                    );
+                }
                 let _ = reply.send(InferResponse::failed(
                     id,
                     format!("request id {id} is already in flight on this pipeline"),
@@ -484,6 +537,9 @@ fn control_loop(
                 continue;
             }
             metrics.requests_admitted.fetch_add(1, Relaxed);
+            if let Some((j, label)) = &jlabel {
+                j.record(EventKind::RequestAdmitted, label, format!("id {id}"));
+            }
             if req.max_trials == 0 {
                 let latency = t0.elapsed();
                 metrics.requests_completed.fetch_add(1, Relaxed);
@@ -546,14 +602,14 @@ fn control_loop(
             match win_rx.recv() {
                 Ok((id, gen, w)) => handle_winners(
                     id, gen, w, &mut active, &mut queue, &mut outstanding, &stage0, &metrics,
-                    &opts,
+                    &opts, jlabel.as_ref(),
                 ),
                 Err(_) => return,
             }
             while let Ok((id, gen, w)) = win_rx.try_recv() {
                 handle_winners(
                     id, gen, w, &mut active, &mut queue, &mut outstanding, &stage0, &metrics,
-                    &opts,
+                    &opts, jlabel.as_ref(),
                 );
             }
         } else if pending.is_empty() && active.is_empty() {
@@ -573,6 +629,7 @@ fn control_loop(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_winners(
     id: RequestId,
     gen: u64,
@@ -583,6 +640,7 @@ fn handle_winners(
     stage0: &mpsc::Sender<StageMsg>,
     metrics: &Metrics,
     opts: &PipelineOptions,
+    jlabel: Option<&(Arc<Journal>, String)>,
 ) {
     *outstanding -= winners.len();
     metrics.trials_executed.fetch_add(winners.len() as u64, Relaxed);
@@ -621,6 +679,9 @@ fn handle_winners(
     let latency = a.submitted.elapsed();
     metrics.requests_completed.fetch_add(1, Relaxed);
     metrics.record_latency(latency);
+    if let Some((j, label)) = jlabel {
+        j.record(EventKind::RequestCompleted, label, format!("id {id} trials {recorded}"));
+    }
     let _ = a.reply.send(InferResponse {
         id,
         prediction: a.outcome.prediction(),

@@ -91,6 +91,7 @@ use crate::fleet::{
 };
 use crate::nn::{ModelSpec, Weights};
 use crate::stats::GaussianSource;
+use crate::telemetry::{journal::DEFAULT_CAPACITY, EventKind, Journal, MetricsTree};
 
 use super::net::RemoteBackend;
 use super::probe::ProbeInjector;
@@ -528,6 +529,10 @@ pub struct BuildOptions {
     /// Applied at every routing level (fused fleets and routers alike),
     /// drawing from `calibration`'s held-out set.
     pub probe_rate: f64,
+    /// Event journal shared by every node of the deployment tree
+    /// (admissions, failures, probe verdicts, health steering).  `None`
+    /// lets [`build`] allocate a fresh default-capacity ring.
+    pub journal: Option<Arc<Journal>>,
 }
 
 impl Default for BuildOptions {
@@ -543,6 +548,7 @@ impl Default for BuildOptions {
             calibration: None,
             reweigh_every: 32,
             probe_rate: 0.0,
+            journal: None,
         }
     }
 }
@@ -552,7 +558,9 @@ impl Default for BuildOptions {
 /// benches, tests).
 pub fn build(topo: &Topology, nominal: &Weights, opts: &BuildOptions) -> Result<Box<dyn Backend>> {
     let plan = DeployPlan::compile(topo)?;
-    build_node(&plan.root, nominal, opts)
+    let journal =
+        opts.journal.clone().unwrap_or_else(|| Journal::new(DEFAULT_CAPACITY));
+    build_node(&plan.root, nominal, opts, &journal)
 }
 
 /// Probe source for a router level: the held-out calibration slice.
@@ -561,9 +569,33 @@ fn probe_injector(opts: &BuildOptions) -> Option<ProbeInjector> {
     ProbeInjector::new(ds.clone(), opts.probe_rate)
 }
 
-fn build_node(node: &PlanNode, nominal: &Weights, opts: &BuildOptions) -> Result<Box<dyn Backend>> {
+/// Telemetry label of a plan node — what the node is called in the
+/// [`MetricsTree`] and in journal events (`die#3`, `pipeline:2 [chips
+/// 2..4]`, `remote:host:port`, `replicate ×2 (weighted)`).
+pub fn node_label(node: &PlanNode) -> String {
     match node {
-        PlanNode::Die { engine, chip } => build_die(*engine, *chip, nominal, opts),
+        PlanNode::Die { chip, .. } => format!("die#{chip}"),
+        PlanNode::Pipeline { shards, chip_base, .. } => {
+            format!("pipeline:{shards} [chips {chip_base}..{}]", chip_base + shards)
+        }
+        PlanNode::Remote { addr } => format!("remote:{addr}"),
+        PlanNode::Replicate { policy, children } => {
+            format!("replicate ×{} ({})", children.len(), policy.name())
+        }
+        PlanNode::Group { policy, children } => {
+            format!("group ×{} ({})", children.len(), policy.name())
+        }
+    }
+}
+
+fn build_node(
+    node: &PlanNode,
+    nominal: &Weights,
+    opts: &BuildOptions,
+    journal: &Arc<Journal>,
+) -> Result<Box<dyn Backend>> {
+    match node {
+        PlanNode::Die { engine, chip } => build_die(*engine, *chip, nominal, opts, journal),
         PlanNode::Pipeline { shards, batch, chip_base } => {
             let popts = PipelineOptions {
                 dies: *shards,
@@ -576,30 +608,39 @@ fn build_node(node: &PlanNode, nominal: &Weights, opts: &BuildOptions) -> Result
                 depth: opts.depth,
                 max_in_flight: opts.scheduler.max_in_flight,
                 batch: batch.unwrap_or(opts.batch).max(1),
+                journal: Some(journal.clone()),
             };
             Ok(Box::new(PipelinedFleetBackend::start(nominal, popts)?))
         }
         // The process boundary: dies on the other side belong to the
         // listener (its weights, its seed, its chip numbering).
-        PlanNode::Remote { addr } => Ok(Box::new(RemoteBackend::connect(addr)?)),
+        PlanNode::Remote { addr } => {
+            Ok(Box::new(RemoteBackend::connect(addr)?.with_journal(journal.clone())))
+        }
         // Replicate and Group share one runtime (children behind a
         // health-reweighted router); Replicate-over-native-die fuses into
         // the per-chip worker fleet first.
         PlanNode::Replicate { policy, children } | PlanNode::Group { policy, children } => {
             if matches!(node, PlanNode::Replicate { .. }) {
-                if let Some(fused) = fuse_native_dies(children, *policy, nominal, opts)? {
+                if let Some(fused) =
+                    fuse_native_dies(children, *policy, nominal, opts, journal)?
+                {
                     return Ok(fused);
                 }
             }
             let built = children
                 .iter()
-                .map(|c| build_node(c, nominal, opts))
+                .map(|c| build_node(c, nominal, opts, journal))
                 .collect::<Result<Vec<_>>>()?;
-            Ok(Box::new(RouterBackend::start(
+            let labels = children.iter().map(node_label).collect();
+            Ok(Box::new(RouterBackend::start_labeled(
                 built,
                 *policy,
                 probe_injector(opts),
                 opts.reweigh_every,
+                node_label(node),
+                labels,
+                journal.clone(),
             )))
         }
     }
@@ -613,6 +654,7 @@ fn fuse_native_dies(
     policy: RoutePolicy,
     nominal: &Weights,
     opts: &BuildOptions,
+    journal: &Arc<Journal>,
 ) -> Result<Option<Box<dyn Backend>>> {
     let mut base = None;
     for (i, c) in children.iter().enumerate() {
@@ -651,6 +693,8 @@ fn fuse_native_dies(
             min_trials: opts.scheduler.min_trials,
             reweigh_every: opts.reweigh_every,
             probe_rate: opts.probe_rate,
+            label_base: base,
+            journal: Some(journal.clone()),
         },
     ))))
 }
@@ -660,6 +704,7 @@ fn build_die(
     chip: ChipId,
     nominal: &Weights,
     opts: &BuildOptions,
+    journal: &Arc<Journal>,
 ) -> Result<Box<dyn Backend>> {
     match engine {
         EngineSel::Native => {
@@ -679,7 +724,10 @@ fn build_die(
             cfg.params = opts.trial;
             cfg.seed = opts.seed;
             let e = NativeEngine::new(Arc::new(w), opts.seed).with_trial_block(opts.trial_block);
-            Ok(Box::new(SingleChipBackend::start(e, cfg)))
+            Ok(Box::new(
+                SingleChipBackend::start(e, cfg)
+                    .with_telemetry(format!("die#{chip}"), journal.clone()),
+            ))
         }
         EngineSel::Physical => {
             // The physical engine speaks `TrialEngine` (not the batched
@@ -703,15 +751,17 @@ fn build_die(
                     min_trials: opts.scheduler.min_trials,
                     reweigh_every: opts.reweigh_every,
                     probe_rate: opts.probe_rate,
+                    label_base: chip,
+                    journal: Some(journal.clone()),
                 },
             )))
         }
-        EngineSel::Pjrt => build_pjrt_die(opts),
+        EngineSel::Pjrt => build_pjrt_die(opts, journal),
     }
 }
 
 #[cfg(feature = "pjrt")]
-fn build_pjrt_die(opts: &BuildOptions) -> Result<Box<dyn Backend>> {
+fn build_pjrt_die(opts: &BuildOptions, journal: &Arc<Journal>) -> Result<Box<dyn Backend>> {
     // An XLA die takes its weights from the compiled artifact store, not
     // from the nominal weights (they are baked into the executable).
     let engine = crate::engine::XlaEngine::start(crate::runtime::default_artifact_dir())?;
@@ -720,12 +770,13 @@ fn build_pjrt_die(opts: &BuildOptions) -> Result<Box<dyn Backend>> {
     let mut cfg = opts.scheduler.clone();
     cfg.params = opts.trial;
     cfg.seed = opts.seed;
-    let inner = SingleChipBackend::start(handle, cfg);
+    let inner =
+        SingleChipBackend::start(handle, cfg).with_telemetry("die:pjrt", journal.clone());
     Ok(Box::new(PjrtDie { inner, _engine: engine }))
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn build_pjrt_die(_opts: &BuildOptions) -> Result<Box<dyn Backend>> {
+fn build_pjrt_die(_opts: &BuildOptions, _journal: &Arc<Journal>) -> Result<Box<dyn Backend>> {
     bail!("die:pjrt needs a build with `--features pjrt` (and compiled artifacts)")
 }
 
@@ -744,6 +795,14 @@ impl Backend for PjrtDie {
 
     fn metrics(&self) -> MetricsSnapshot {
         self.inner.metrics()
+    }
+
+    fn metrics_tree(&self) -> MetricsTree {
+        self.inner.metrics_tree()
+    }
+
+    fn journal(&self) -> Option<Arc<Journal>> {
+        self.inner.journal()
     }
 
     fn shutdown(self: Box<Self>) {
@@ -797,6 +856,16 @@ struct RouterShared {
     pending: Mutex<HashMap<RequestId, PendingJob>>,
     completed: AtomicU64,
     reweigh_every: u64,
+    /// In-band `InferResponse::failed` responses relayed per child.
+    errors: Vec<AtomicU64>,
+    /// Σ queue wait per child [µs] (router latency − child service time).
+    queue_us: Vec<AtomicU64>,
+    /// Completions behind each `queue_us` sum.
+    waits: Vec<AtomicU64>,
+    /// Telemetry names: this node and one per child.
+    label: String,
+    labels: Vec<String>,
+    journal: Arc<Journal>,
 }
 
 /// A [`Backend`] routing over child backends — the runtime of a
@@ -829,15 +898,45 @@ pub struct RouterBackend {
 impl RouterBackend {
     /// Route over `children` with `policy`; reweigh health every
     /// `reweigh_every` completions; optionally inject labeled probes.
+    /// Children get generic `child#i` telemetry names and a private
+    /// journal; [`build`] goes through [`RouterBackend::start_labeled`]
+    /// to name them after their plan nodes instead.
     pub fn start(
         children: Vec<Box<dyn Backend>>,
         policy: RoutePolicy,
         probes: Option<ProbeInjector>,
         reweigh_every: u64,
     ) -> Self {
+        let labels = (0..children.len()).map(|i| format!("child#{i}")).collect();
+        Self::start_labeled(
+            children,
+            policy,
+            probes,
+            reweigh_every,
+            "router".to_string(),
+            labels,
+            Journal::new(DEFAULT_CAPACITY),
+        )
+    }
+
+    /// [`RouterBackend::start`] with explicit telemetry names: `label` is
+    /// this node's own, `labels[i]` the name child `i`'s subtree is
+    /// re-rooted under in the [`MetricsTree`] and in journal events.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_labeled(
+        children: Vec<Box<dyn Backend>>,
+        policy: RoutePolicy,
+        probes: Option<ProbeInjector>,
+        reweigh_every: u64,
+        label: String,
+        labels: Vec<String>,
+        journal: Arc<Journal>,
+    ) -> Self {
         assert!(!children.is_empty(), "a replicate/group node needs at least one child");
         let n = children.len();
-        let health = HealthMonitor::new(n, HealthConfig::default());
+        debug_assert_eq!(labels.len(), n, "one telemetry label per child");
+        let mut health = HealthMonitor::new(n, HealthConfig::default());
+        health.attach_journal(journal.clone(), labels.clone());
         let initial_weights = health.traffic_weights();
         let shared = Arc::new(RouterShared {
             health: Mutex::new(health),
@@ -846,6 +945,12 @@ impl RouterBackend {
             pending: Mutex::new(HashMap::new()),
             completed: AtomicU64::new(0),
             reweigh_every: reweigh_every.max(1),
+            errors: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            queue_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            waits: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            label,
+            labels,
+            journal,
         });
         let metrics = Metrics::new();
         let (done_tx, done_rx) = mpsc::channel::<InferResponse>();
@@ -926,10 +1031,25 @@ impl RouterBackend {
         if let Err(e) = self.children[child].submit_to(req, done_tx) {
             self.shared.pending.lock().unwrap().remove(&id);
             self.shared.loads[child].fetch_sub(1, Relaxed);
+            // A child that cannot even admit work is as unhealthy as one
+            // answering in-band failures: record the observation so the
+            // steering pass can evict it, not just the relayed errors.
+            self.shared.errors[child].fetch_add(1, Relaxed);
+            self.shared.health.lock().unwrap().record(child, Some(false), false, 0);
+            self.shared.journal.record(
+                EventKind::RequestFailed,
+                &self.shared.labels[child],
+                format!("id {id}: submit failed: {e:#}"),
+            );
             return Err(e);
         }
         if caller {
             self.metrics.requests_admitted.fetch_add(1, Relaxed);
+            self.shared.journal.record(
+                EventKind::RequestAdmitted,
+                &self.shared.label,
+                format!("id {id} → {}", self.shared.labels[child]),
+            );
         }
         Ok(())
     }
@@ -954,6 +1074,38 @@ impl Backend for RouterBackend {
 
     fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    fn metrics_tree(&self) -> MetricsTree {
+        // Collect child subtrees before touching our own locks: a remote
+        // child's tree is fetched over the wire and may block; holding the
+        // health lock across that would stall the relay thread.
+        let mut children: Vec<MetricsTree> =
+            self.children.iter().map(|c| c.metrics_tree()).collect();
+        let weights = self.shared.weights.lock().unwrap().clone();
+        let health = self.shared.health.lock().unwrap();
+        for (i, child) in children.iter_mut().enumerate() {
+            let h = health.chip(i);
+            // Re-root the child under its plan-node name: a bare die's
+            // own tree calls itself `die`; the router knows it as `die#3`.
+            child.label = self.shared.labels[i].clone();
+            child.notes.service_us = Some(h.mean_latency_us());
+            let waits = self.shared.waits[i].load(Relaxed);
+            if waits > 0 {
+                child.notes.queue_wait_us =
+                    Some(self.shared.queue_us[i].load(Relaxed) as f64 / waits as f64);
+            }
+            child.notes.probe_accuracy = h.rolling_accuracy();
+            child.notes.evicted = Some(h.evicted);
+            child.notes.errors = Some(self.shared.errors[i].load(Relaxed));
+            child.notes.weight = weights.get(i).copied();
+        }
+        drop(health);
+        MetricsTree::leaf(self.shared.label.clone(), self.metrics()).with_children(children)
+    }
+
+    fn journal(&self) -> Option<Arc<Journal>> {
+        Some(self.shared.journal.clone())
     }
 
     fn shutdown(self: Box<Self>) {
@@ -991,37 +1143,77 @@ fn relay_loop(
             continue;
         };
         shared.loads[job.child].fetch_sub(1, Relaxed);
-        // An in-band failure (dead remote peer, duplicate id downstream):
-        // clean up and forward — the caller's wait() turns it into an
-        // error — but record nothing: the request never ran.
-        if resp.error.is_some() {
+        let latency = job.submitted.elapsed();
+        let child_label = &shared.labels[job.child];
+        if let Some(msg) = &resp.error {
+            // An in-band failure (dead remote peer, duplicate id
+            // downstream) IS a health observation: the child was picked,
+            // failed to answer, and must lose routing weight — a child
+            // that fails every request would otherwise never be evicted
+            // (pre-PR-6 this branch recorded nothing, so a dead remote
+            // kept its full share of traffic forever).
+            shared.errors[job.child].fetch_add(1, Relaxed);
+            metrics.engine_errors.fetch_add(1, Relaxed);
+            shared.journal.record(
+                EventKind::RequestFailed,
+                child_label,
+                format!("id {}: {msg}", resp.id),
+            );
+            if job.max_trials > 0 {
+                shared.health.lock().unwrap().record(
+                    job.child,
+                    Some(false), // a failure is a known-wrong answer
+                    false,
+                    latency.as_micros() as u64,
+                );
+            }
             if let Some(reply) = job.reply {
                 let _ = reply.send(resp);
             }
-            continue;
-        }
-        let latency = job.submitted.elapsed();
-        let abstained =
-            resp.outcome.trials > 0 && resp.outcome.abstentions == resp.outcome.trials;
-        let correct = job.label.map(|l| resp.prediction == l);
-        if job.max_trials > 0 {
+        } else {
+            let abstained =
+                resp.outcome.trials > 0 && resp.outcome.abstentions == resp.outcome.trials;
+            let correct = job.label.map(|l| resp.prediction == l);
             // The child-reported latency is the service-time signal; the
             // router's own `latency` additionally includes queue wait and
             // is what this backend's metrics report.
             let service_us = resp.latency.as_micros() as u64;
-            shared.health.lock().unwrap().record(job.child, correct, abstained, service_us);
+            let wait_us = (latency.as_micros() as u64).saturating_sub(service_us);
+            shared.queue_us[job.child].fetch_add(wait_us, Relaxed);
+            shared.waits[job.child].fetch_add(1, Relaxed);
+            if job.max_trials > 0 {
+                shared.health.lock().unwrap().record(job.child, correct, abstained, service_us);
+            }
+            // Probe trials are real engine work (counted); probes are not
+            // caller traffic (request counters/latency stay caller-only).
+            metrics.trials_executed.fetch_add(resp.trials_used as u64, Relaxed);
+            if let Some(reply) = job.reply {
+                metrics
+                    .trials_saved
+                    .fetch_add(job.max_trials.saturating_sub(resp.trials_used) as u64, Relaxed);
+                metrics.requests_completed.fetch_add(1, Relaxed);
+                metrics.record_latency(latency);
+                shared.journal.record(
+                    EventKind::RequestCompleted,
+                    child_label,
+                    format!("id {} trials {}", resp.id, resp.trials_used),
+                );
+                let _ = reply.send(resp);
+            } else if job.label.is_some() {
+                let verdict = match correct {
+                    Some(true) => "hit",
+                    Some(false) => "miss",
+                    None => "unlabeled",
+                };
+                shared.journal.record(
+                    EventKind::ProbeVerdict,
+                    child_label,
+                    format!("id {} {verdict}", resp.id),
+                );
+            }
         }
-        // Probe trials are real engine work (counted); probes are not
-        // caller traffic (request counters/latency stay caller-only).
-        metrics.trials_executed.fetch_add(resp.trials_used as u64, Relaxed);
-        if let Some(reply) = job.reply {
-            metrics
-                .trials_saved
-                .fetch_add(job.max_trials.saturating_sub(resp.trials_used) as u64, Relaxed);
-            metrics.requests_completed.fetch_add(1, Relaxed);
-            metrics.record_latency(latency);
-            let _ = reply.send(resp);
-        }
+        // Failures participate in the steering cadence too: a child that
+        // only ever fails still drives reweigh/evict passes.
         let done = shared.completed.fetch_add(1, Relaxed) + 1;
         if done % shared.reweigh_every == 0 {
             let steer = shared.health.lock().unwrap().steer();
@@ -1315,6 +1507,63 @@ mod tests {
         let h = shared.health.lock().unwrap();
         let labeled: usize = (0..2).map(|c| h.chip(c).labeled_samples()).sum();
         assert_eq!(labeled, 6, "every probe reached the health monitor");
+    }
+
+    /// A child whose every response is an in-band failure — the shape of
+    /// a dead remote peer behind a still-connected socket.
+    struct FailingChild;
+
+    impl Backend for FailingChild {
+        fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+            let _ = reply.send(InferResponse::failed(req.id, "simulated dead peer"));
+            Ok(())
+        }
+
+        fn metrics(&self) -> MetricsSnapshot {
+            Metrics::new().snapshot()
+        }
+
+        fn shutdown(self: Box<Self>) {}
+    }
+
+    /// S1 regression: in-band failures must count against the child's
+    /// health.  Pre-PR-6 the relay forwarded `InferResponse::failed` and
+    /// recorded nothing, so a dead child kept its routing share forever.
+    #[test]
+    fn router_evicts_a_child_that_only_fails() {
+        let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 5);
+        let healthy = build(&parse("die"), &w, &BuildOptions::default()).unwrap();
+        let children: Vec<Box<dyn Backend>> = vec![Box::new(FailingChild), healthy];
+        let b = RouterBackend::start(children, RoutePolicy::RoundRobin, None, 4);
+        let mut failures = 0;
+        for i in 0..60u64 {
+            let t = b.submit(InferRequest::new(i, vec![0.2; 784]).with_budget(3, 0.0)).unwrap();
+            if b.wait(t).is_err() {
+                failures += 1;
+            }
+        }
+        // Enough failures accumulated (min_samples) → the steering pass
+        // evicted the dead child; routing now avoids it entirely.
+        assert!(failures >= HealthConfig::default().min_samples, "dead child saw traffic");
+        assert_eq!(b.healthy(), vec![1], "failing child must be evicted");
+        let evs = b.journal().unwrap().tail(1024);
+        assert!(
+            evs.iter().any(|e| e.kind == EventKind::HealthEvict && e.node == "child#0"),
+            "eviction must land in the journal: {evs:?}"
+        );
+        assert!(evs.iter().any(|e| e.kind == EventKind::RequestFailed && e.node == "child#0"));
+        // The failed-child request count stops growing post-eviction.
+        let errs_at_eviction = b.metrics().engine_errors;
+        for i in 100..120u64 {
+            let t = b.submit(InferRequest::new(i, vec![0.2; 784]).with_budget(3, 0.0)).unwrap();
+            b.wait(t).expect("post-eviction traffic must route to the healthy child");
+        }
+        assert_eq!(b.metrics().engine_errors, errs_at_eviction);
+        // The telemetry tree shows the eviction and the error count.
+        let tree = b.metrics_tree();
+        assert_eq!(tree.children[0].notes.evicted, Some(true));
+        assert_eq!(tree.children[0].notes.errors, Some(errs_at_eviction));
+        assert_eq!(tree.children[1].notes.evicted, Some(false));
     }
 
     #[test]

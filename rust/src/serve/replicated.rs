@@ -36,6 +36,7 @@ use crate::fleet::{
 };
 use crate::neuron::WtaOutcome;
 use crate::stats::ci::lead_is_decided;
+use crate::telemetry::{journal::DEFAULT_CAPACITY, EventKind, Journal, MetricsTree};
 
 use super::probe::ProbeInjector;
 use super::{trial_stream_base, Backend, InferRequest, InferResponse};
@@ -55,11 +56,25 @@ pub struct ReplicatedOptions {
     /// unlabeled traffic; they are excluded from the request metrics but
     /// their trials count as executed (real engine work).
     pub probe_rate: f64,
+    /// Fleet-wide id of this group's first die: telemetry labels read
+    /// `die#<label_base + local idx>` so a `2x(3x(die))` tree names all
+    /// six dies distinctly.  Chips still use local indices internally.
+    pub label_base: usize,
+    /// Shared event journal of the deployment tree; `None` spawns a
+    /// private ring so health events are never silently dropped.
+    pub journal: Option<Arc<Journal>>,
 }
 
 impl Default for ReplicatedOptions {
     fn default() -> Self {
-        Self { seed: 0x5E12E, min_trials: 5, reweigh_every: 32, probe_rate: 0.0 }
+        Self {
+            seed: 0x5E12E,
+            min_trials: 5,
+            reweigh_every: 32,
+            probe_rate: 0.0,
+            label_base: 0,
+            journal: None,
+        }
     }
 }
 
@@ -92,6 +107,8 @@ pub struct ReplicatedFleetBackend {
     probes: Option<ProbeInjector>,
     shared: Arc<Shared>,
     metrics: Arc<Metrics>,
+    journal: Arc<Journal>,
+    label_base: usize,
 }
 
 impl ReplicatedFleetBackend {
@@ -106,10 +123,16 @@ impl ReplicatedFleetBackend {
     pub(crate) fn start<E: TrialEngine + 'static>(
         fleet: Fleet<E>,
         cal: Option<(Dataset, Calibrator)>,
-        opts: ReplicatedOptions,
+        mut opts: ReplicatedOptions,
     ) -> Self {
-        let Fleet { chips, router, health, .. } = fleet;
+        let Fleet { chips, router, mut health, .. } = fleet;
         let n = chips.len();
+        let journal =
+            opts.journal.clone().unwrap_or_else(|| Journal::new(DEFAULT_CAPACITY));
+        let labels: Vec<String> =
+            (0..n).map(|i| format!("die#{}", opts.label_base + i)).collect();
+        health.attach_journal(journal.clone(), labels);
+        opts.journal = Some(journal.clone()); // workers log through the same ring
         let initial_weights = health.traffic_weights();
         let shared = Arc::new(Shared {
             health: Mutex::new(health),
@@ -142,7 +165,8 @@ impl ReplicatedFleetBackend {
                 .expect("spawning fleet worker thread");
             workers.push(worker);
         }
-        Self { txs, workers, router, probes, shared, metrics }
+        let label_base = opts.label_base;
+        Self { txs, workers, router, probes, shared, metrics, journal, label_base }
     }
 
     pub fn num_chips(&self) -> usize {
@@ -170,6 +194,11 @@ impl ReplicatedFleetBackend {
             .ok_or_else(|| anyhow!("no healthy chips left in the fleet"))?;
         if !probe {
             self.metrics.requests_admitted.fetch_add(1, Relaxed);
+            self.journal.record(
+                EventKind::RequestAdmitted,
+                &format!("die#{}", self.label_base + chip),
+                format!("id {}", req.id),
+            );
         }
         self.shared.loads[chip].fetch_add(1, Relaxed);
         if self.txs[chip]
@@ -230,6 +259,47 @@ impl Backend for ReplicatedFleetBackend {
         self.metrics.snapshot()
     }
 
+    fn metrics_tree(&self) -> MetricsTree {
+        let stats = self.shared.stats.lock().unwrap().clone();
+        let weights = self.shared.weights.lock().unwrap().clone();
+        let health = self.shared.health.lock().unwrap();
+        let children = stats
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let h = health.chip(i);
+                // Dies keep aggregate stats, not a latency reservoir:
+                // mean busy time stands in for p50, worst case for p99.
+                let mut t = MetricsTree::leaf(
+                    format!("die#{}", self.label_base + i),
+                    MetricsSnapshot {
+                        requests_admitted: s.served,
+                        requests_completed: s.served,
+                        trials_executed: s.trials,
+                        batches_executed: 0,
+                        rows_packed: 0,
+                        trials_saved: 0,
+                        engine_errors: 0,
+                        latency_p50_us: s.mean_latency_us() as u64,
+                        latency_p99_us: s.max_latency_us,
+                    },
+                );
+                t.notes.service_us = Some(s.mean_latency_us());
+                t.notes.queue_wait_us = Some(s.mean_wait_us());
+                t.notes.probe_accuracy = h.rolling_accuracy();
+                t.notes.evicted = Some(h.evicted);
+                t.notes.weight = weights.get(i).copied();
+                t
+            })
+            .collect();
+        MetricsTree::leaf(format!("replicate ×{}", self.txs.len()), self.metrics())
+            .with_children(children)
+    }
+
+    fn journal(&self) -> Option<Arc<Journal>> {
+        Some(self.journal.clone())
+    }
+
     fn shutdown(self: Box<Self>) {
         // Drop closes the queues; workers drain in-flight jobs and exit.
         drop(self);
@@ -255,6 +325,8 @@ fn worker_loop<E: TrialEngine>(
 ) {
     let id = chip.id;
     let reweigh_every = opts.reweigh_every.max(1);
+    let label = format!("die#{}", opts.label_base + id);
+    let journal = opts.journal.clone().unwrap_or_else(|| Journal::new(DEFAULT_CAPACITY));
     while let Ok(job) = rx.recv() {
         // Health monitor flagged this die as drifting → recalibrate on
         // our own thread before taking the next request.
@@ -320,7 +392,23 @@ fn worker_loop<E: TrialEngine>(
         // zero-budget path likewise bypasses all per-die accounting).
         if job.req.max_trials > 0 {
             shared.health.lock().unwrap().record(id, correct, abstained, service_us);
-            shared.stats.lock().unwrap()[id].record(used as u64, abstained, correct, service_us);
+            let mut stats = shared.stats.lock().unwrap();
+            stats[id].record(used as u64, abstained, correct, service_us);
+            stats[id].record_wait((latency.as_micros() as u64).saturating_sub(service_us));
+        }
+        if job.probe {
+            let verdict = match correct {
+                Some(true) => "hit",
+                Some(false) => "miss",
+                None => "unlabeled",
+            };
+            journal.record(EventKind::ProbeVerdict, &label, format!("id {} {verdict}", job.req.id));
+        } else {
+            journal.record(
+                EventKind::RequestCompleted,
+                &label,
+                format!("id {} trials {used}", job.req.id),
+            );
         }
         shared.loads[id].fetch_sub(1, Relaxed);
         let _ = job.reply.send(InferResponse {
@@ -471,6 +559,42 @@ mod tests {
         let h = shared.health.lock().unwrap();
         let labeled: usize = (0..2).map(|c| h.chip(c).labeled_samples()).sum();
         assert_eq!(labeled, 5, "every probe reached the health monitor");
+    }
+
+    #[test]
+    fn metrics_tree_lists_one_child_per_die_with_notes() {
+        let w = Weights::random(ModelSpec::new(vec![784, 12, 10]), 5);
+        let fleet =
+            Fleet::program_native(&w, 3, &VariationModel::lognormal(0.05), RoutePolicy::RoundRobin, 99);
+        let b = ReplicatedFleetBackend::start(
+            fleet,
+            None,
+            ReplicatedOptions { label_base: 4, ..Default::default() },
+        );
+        let tickets: Vec<_> = (0..6u64)
+            .map(|i| b.submit(InferRequest::new(i, vec![0.2; 784]).with_budget(3, 0.0)).unwrap())
+            .collect();
+        for t in tickets {
+            b.wait(t).unwrap();
+        }
+        let tree = b.metrics_tree();
+        assert_eq!(tree.children.len(), 3);
+        // label_base shifts die names into fleet-wide numbering.
+        assert_eq!(tree.children[0].label, "die#4");
+        assert_eq!(tree.children[2].label, "die#6");
+        let per_die: u64 = tree.children.iter().map(|c| c.snapshot.requests_completed).sum();
+        assert_eq!(per_die, 6);
+        for c in &tree.children {
+            assert_eq!(c.notes.evicted, Some(false));
+            assert!(c.notes.queue_wait_us.is_some());
+            assert!(c.notes.weight.is_some());
+        }
+        // Admissions and completions flow into the shared journal.
+        let j = b.journal().expect("replicated backend always has a journal");
+        let evs = j.tail(64);
+        assert!(evs.iter().any(|e| e.kind == crate::telemetry::EventKind::RequestAdmitted));
+        assert!(evs.iter().any(|e| e.kind == crate::telemetry::EventKind::RequestCompleted
+            && e.node.starts_with("die#")));
     }
 
     #[test]

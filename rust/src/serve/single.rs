@@ -6,17 +6,22 @@
 //! This is the deployment shape of PR-0/PR-1's `raca infer`, now reached
 //! through the same trait as the fleet backends.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
 use anyhow::Result;
 
 use crate::coordinator::{MetricsSnapshot, Server, SchedulerConfig, TrialRunner};
+use crate::telemetry::{EventKind, Journal, MetricsTree};
 
 use super::{Backend, InferRequest, InferResponse};
 
 /// Single-die serving session (scheduler thread + batched engine).
 pub struct SingleChipBackend {
     server: Server,
+    /// Telemetry name ([`crate::serve::plan::node_label`] sets the
+    /// fleet-wide `die#<chip>`; a bare backend is just `die`).
+    label: String,
+    journal: Option<Arc<Journal>>,
 }
 
 impl SingleChipBackend {
@@ -26,17 +31,36 @@ impl SingleChipBackend {
     /// (callers that already hold an engine — e.g. a PJRT handle — go
     /// through [`crate::serve::plan::single_die`]).
     pub(crate) fn start<E: TrialRunner + Send + 'static>(engine: E, cfg: SchedulerConfig) -> Self {
-        Self { server: Server::start(engine, cfg) }
+        Self { server: Server::start(engine, cfg), label: "die".to_string(), journal: None }
+    }
+
+    /// Name this die in the telemetry tree and route its admission
+    /// events into the deployment's shared journal.
+    pub(crate) fn with_telemetry(mut self, label: impl Into<String>, journal: Arc<Journal>) -> Self {
+        self.label = label.into();
+        self.journal = Some(journal);
+        self
     }
 }
 
 impl Backend for SingleChipBackend {
     fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+        if let Some(j) = &self.journal {
+            j.record(EventKind::RequestAdmitted, &self.label, format!("id {}", req.id));
+        }
         self.server.client().submit_request_to(req, reply)
     }
 
     fn metrics(&self) -> MetricsSnapshot {
         self.server.metrics().snapshot()
+    }
+
+    fn metrics_tree(&self) -> MetricsTree {
+        MetricsTree::leaf(self.label.clone(), self.metrics())
+    }
+
+    fn journal(&self) -> Option<Arc<Journal>> {
+        self.journal.clone()
     }
 
     fn shutdown(self: Box<Self>) {

@@ -1,0 +1,266 @@
+//! Bounded event journal: a ring of timestamped structured events.
+//!
+//! Writers never contend on a global lock: an atomic cursor assigns each
+//! event a sequence number (and thereby a slot); only writers that land
+//! on the *same* slot a full lap apart touch the same per-slot lock, so
+//! the hot path is one `fetch_add` plus an uncontended mutex.  Readers
+//! ([`Journal::tail`]) reconstruct order from the sequence numbers, not
+//! from slot positions, so wraparound never reorders what remains.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{self, Json};
+
+/// Event taxonomy (see README "Observability" for the full reading).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A request entered a backend's queue.
+    RequestAdmitted,
+    /// A request completed with a vote.
+    RequestCompleted,
+    /// A request failed in-band (dead peer, duplicate id, …).
+    RequestFailed,
+    /// A labeled health probe came back (detail says hit/miss).
+    ProbeVerdict,
+    /// The health monitor recomputed traffic weights.
+    HealthReweigh,
+    /// A child was evicted from the routing rotation.
+    HealthEvict,
+    /// A child was flagged for threshold recalibration.
+    HealthRecalibrate,
+    /// A wire session was accepted (listener side).
+    SessionConnect,
+    /// A wire session ended (either side; detail says why).
+    SessionDrop,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::RequestAdmitted => "request_admitted",
+            EventKind::RequestCompleted => "request_completed",
+            EventKind::RequestFailed => "request_failed",
+            EventKind::ProbeVerdict => "probe_verdict",
+            EventKind::HealthReweigh => "health_reweigh",
+            EventKind::HealthEvict => "health_evict",
+            EventKind::HealthRecalibrate => "health_recalibrate",
+            EventKind::SessionConnect => "session_connect",
+            EventKind::SessionDrop => "session_drop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "request_admitted" => EventKind::RequestAdmitted,
+            "request_completed" => EventKind::RequestCompleted,
+            "request_failed" => EventKind::RequestFailed,
+            "probe_verdict" => EventKind::ProbeVerdict,
+            "health_reweigh" => EventKind::HealthReweigh,
+            "health_evict" => EventKind::HealthEvict,
+            "health_recalibrate" => EventKind::HealthRecalibrate,
+            "session_connect" => EventKind::SessionConnect,
+            "session_drop" => EventKind::SessionDrop,
+            _ => return None,
+        })
+    }
+}
+
+/// One journal entry.  `seq` is globally ordered per journal; `t_us` is
+/// microseconds since the journal was created (wall-clock-free, so two
+/// events compare even across an export/import).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub t_us: u64,
+    pub kind: EventKind,
+    /// Emitting node's label (`die#3`, `router`, `remote:host:port`, …).
+    pub node: String,
+    pub detail: String,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("seq", json::num(self.seq as f64)),
+            ("t_us", json::num(self.t_us as f64)),
+            ("kind", Json::Str(self.kind.name().to_string())),
+            ("node", Json::Str(self.node.clone())),
+            ("detail", Json::Str(self.detail.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let kind_s = j
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| anyhow!("journal event without a kind"))?;
+        let kind = EventKind::parse(kind_s)
+            .ok_or_else(|| anyhow!("unknown journal event kind '{kind_s}'"))?;
+        Ok(Self {
+            seq: j.get("seq").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            t_us: j.get("t_us").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            kind,
+            node: j.get("node").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            detail: j.get("detail").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+        })
+    }
+}
+
+impl std::fmt::Display for Event {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[+{:>9.3}s] {:<18} {} {}",
+            self.t_us as f64 / 1e6,
+            self.kind.name(),
+            self.node,
+            self.detail
+        )
+    }
+}
+
+/// Bounded ring of [`Event`]s shared by every node of one deployment
+/// tree (plumbed through `serve::BuildOptions`).
+#[derive(Debug)]
+pub struct Journal {
+    slots: Vec<Mutex<Option<Event>>>,
+    /// Next sequence number; `seq & (capacity-1)` is the slot.
+    head: AtomicU64,
+    origin: Instant,
+}
+
+/// Default ring capacity (events). Power of two, see [`Journal::new`].
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+impl Journal {
+    /// `capacity` is rounded up to a power of two (≥ 8) so the slot
+    /// index is a mask, not a division.
+    pub fn new(capacity: usize) -> Arc<Self> {
+        let cap = capacity.max(8).next_power_of_two();
+        Arc::new(Self {
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+            origin: Instant::now(),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (≥ retained count once wrapped).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Append an event; oldest entry in the slot's lap is overwritten.
+    pub fn record(&self, kind: EventKind, node: &str, detail: impl Into<String>) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let t_us = self.origin.elapsed().as_micros() as u64;
+        let ev = Event { seq, t_us, kind, node: node.to_string(), detail: detail.into() };
+        let slot = (seq as usize) & (self.slots.len() - 1);
+        *self.slots[slot].lock().unwrap() = Some(ev);
+    }
+
+    /// The most recent `n` retained events, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<Event> {
+        let mut evs: Vec<Event> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .collect();
+        evs.sort_unstable_by_key(|e| e.seq);
+        if evs.len() > n {
+            evs.drain(..evs.len() - n);
+        }
+        evs
+    }
+
+    /// Whole retained window as JSON lines (one event object per line).
+    pub fn to_json_lines(&self) -> String {
+        let mut out = String::new();
+        for e in self.tail(usize::MAX) {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order_and_round_trips_json() {
+        let j = Journal::new(64);
+        j.record(EventKind::SessionConnect, "listener:7433", "peer 127.0.0.1:5000");
+        j.record(EventKind::RequestAdmitted, "router", "id 1");
+        j.record(EventKind::RequestFailed, "die#1", "id 1: engine fault");
+        let t = j.tail(10);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].kind, EventKind::SessionConnect);
+        assert_eq!(t[2].node, "die#1");
+        assert!(t.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert!(t.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+
+        let lines = j.to_json_lines();
+        let back: Vec<Event> = lines
+            .lines()
+            .map(|l| Event::from_json(&Json::parse(l).unwrap()).unwrap())
+            .collect();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn wraparound_keeps_newest_capacity_events() {
+        let j = Journal::new(16); // already a power of two
+        assert_eq!(j.capacity(), 16);
+        for i in 0..50u64 {
+            j.record(EventKind::RequestCompleted, "die#0", format!("id {i}"));
+        }
+        assert_eq!(j.recorded(), 50);
+        let t = j.tail(usize::MAX);
+        assert_eq!(t.len(), 16, "ring retains exactly `capacity` events");
+        // The retained window is the newest 16, in order.
+        assert_eq!(t.first().unwrap().seq, 34);
+        assert_eq!(t.last().unwrap().seq, 49);
+        assert!(t.windows(2).all(|w| w[0].seq + 1 == w[1].seq));
+        // tail(n) trims from the old end.
+        let last4 = j.tail(4);
+        assert_eq!(last4.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![46, 47, 48, 49]);
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        assert_eq!(Journal::new(1000).capacity(), 1024);
+        assert_eq!(Journal::new(0).capacity(), 8);
+    }
+
+    #[test]
+    fn concurrent_writers_never_lose_sequence_numbers() {
+        let j = Journal::new(256);
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let j = j.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        j.record(EventKind::RequestCompleted, &format!("die#{t}"), format!("id {i}"));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(j.recorded(), 400);
+        let tail = j.tail(usize::MAX);
+        assert_eq!(tail.len(), 256);
+        // Sequence numbers are unique and strictly increasing in the tail.
+        assert!(tail.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+}

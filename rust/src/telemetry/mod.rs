@@ -1,0 +1,27 @@
+//! Fabric-wide observability: recursive per-node metrics + event journal.
+//!
+//! Since PR-3 every deployment is a recursive [`crate::serve::Topology`]
+//! tree, but a flat [`crate::coordinator::MetricsSnapshot`] cannot say
+//! *where* inside a `2x(pipeline:3)` the time, trials, or failures went.
+//! This module is the missing layer:
+//!
+//! - [`MetricsTree`] — a node's own snapshot plus labeled children
+//!   (`die#3`, `stage1`, `remote:host:port`), annotated with per-child
+//!   service-time vs. queue-wait, probe accuracy, eviction state and
+//!   in-band error counts ([`NodeNotes`]).  Produced by
+//!   `Backend::metrics_tree()`, carried over the wire as a versioned
+//!   `metrics_tree` frame (see [`crate::serve::net::wire`]), rendered by
+//!   `raca top`.
+//! - [`Journal`] — a bounded ring of timestamped structured [`Event`]s
+//!   (request admitted/completed/failed, probe verdicts, health
+//!   reweigh/evict/recalibrate, session connect/drop) written by every
+//!   backend and the fleet `HealthMonitor`, exportable as JSON lines.
+//!
+//! Both types serialize through [`crate::util::json`] (the crate's only
+//! JSON layer — no external deps).
+
+pub mod journal;
+pub mod tree;
+
+pub use journal::{Event, EventKind, Journal};
+pub use tree::{MetricsTree, NodeNotes};

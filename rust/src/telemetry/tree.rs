@@ -1,0 +1,352 @@
+//! Recursive per-node metrics: a topology-shaped tree of snapshots.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::MetricsSnapshot;
+use crate::util::json::{self, Json};
+
+/// Per-node annotations a parent attaches to a child subtree: the facts
+/// only the *router* above a node can know (queue wait, traffic weight,
+/// eviction verdicts) plus liveness facts only the node itself can know
+/// (`stale`).  Every field is optional so a bare leaf stays cheap.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NodeNotes {
+    /// Mean on-chip service time per request, µs (excludes queue wait).
+    pub service_us: Option<f64>,
+    /// Mean queue wait per request, µs (dispatch → start of service).
+    pub queue_wait_us: Option<f64>,
+    /// Rolling accuracy on labeled probe traffic, [0, 1].
+    pub probe_accuracy: Option<f64>,
+    /// Health monitor evicted this child from the rotation.
+    pub evicted: Option<bool>,
+    /// In-band `InferResponse::failed` responses relayed from this child.
+    pub errors: Option<u64>,
+    /// Current traffic weight under the router's steering policy.
+    pub weight: Option<f64>,
+    /// Snapshot is a cached copy — the live source (a remote session)
+    /// is gone and these numbers stopped advancing at disconnect.
+    pub stale: bool,
+}
+
+impl NodeNotes {
+    pub fn is_empty(&self) -> bool {
+        *self == NodeNotes::default()
+    }
+}
+
+/// A node's own [`MetricsSnapshot`] plus labeled child subtrees — the
+/// recursive replacement for the flat fleet report.  Shape mirrors the
+/// deployment [`crate::serve::Topology`]: routers list one child per
+/// replica, pipelines one per stage, remote leaves forward the peer's
+/// whole subtree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsTree {
+    /// Short node name: `die#3`, `stage1 [layers 1..3]`,
+    /// `remote:host:port`, `replicate ×2 (round-robin)`, …
+    pub label: String,
+    /// This node's own (already child-aggregated) counters.
+    pub snapshot: MetricsSnapshot,
+    /// Parent- and self-reported annotations.
+    pub notes: NodeNotes,
+    pub children: Vec<MetricsTree>,
+}
+
+impl MetricsTree {
+    pub fn leaf(label: impl Into<String>, snapshot: MetricsSnapshot) -> Self {
+        Self { label: label.into(), snapshot, notes: NodeNotes::default(), children: Vec::new() }
+    }
+
+    pub fn with_children(mut self, children: Vec<MetricsTree>) -> Self {
+        self.children = children;
+        self
+    }
+
+    /// Number of nodes in the subtree (including self).
+    pub fn num_nodes(&self) -> usize {
+        1 + self.children.iter().map(|c| c.num_nodes()).sum::<usize>()
+    }
+
+    /// Depth-first `(path, node)` walk; paths join labels with `/`
+    /// (`replicate ×2/pipeline:2/stage0`).
+    pub fn flatten(&self) -> Vec<(String, &MetricsTree)> {
+        let mut out = Vec::new();
+        self.walk("", &mut out);
+        out
+    }
+
+    fn walk<'a>(&'a self, prefix: &str, out: &mut Vec<(String, &'a MetricsTree)>) {
+        let path = if prefix.is_empty() {
+            self.label.clone()
+        } else {
+            format!("{prefix}/{}", self.label)
+        };
+        out.push((path.clone(), self));
+        for c in &self.children {
+            c.walk(&path, out);
+        }
+    }
+
+    /// First node (depth-first) whose label contains `needle`.
+    pub fn find(&self, needle: &str) -> Option<&MetricsTree> {
+        self.flatten().into_iter().map(|(_, n)| n).find(|n| n.label.contains(needle))
+    }
+
+    /// Tag the root `stale` (cached copy of a dead source).
+    pub fn tagged_stale(mut self) -> Self {
+        self.notes.stale = true;
+        self
+    }
+
+    // ---- JSON (wire + bench baseline format) -----------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("label", Json::Str(self.label.clone())),
+            ("m", snapshot_to_json(&self.snapshot)),
+        ];
+        if !self.notes.is_empty() {
+            pairs.push(("notes", notes_to_json(&self.notes)));
+        }
+        if !self.children.is_empty() {
+            pairs.push((
+                "children",
+                Json::Arr(self.children.iter().map(|c| c.to_json()).collect()),
+            ));
+        }
+        json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let label = j
+            .get("label")
+            .and_then(|l| l.as_str())
+            .ok_or_else(|| anyhow!("metrics tree node without a label"))?
+            .to_string();
+        let snapshot = snapshot_from_json(
+            j.get("m").ok_or_else(|| anyhow!("metrics tree node '{label}' without 'm'"))?,
+        )?;
+        let notes = match j.get("notes") {
+            Some(n) => notes_from_json(n),
+            None => NodeNotes::default(),
+        };
+        let mut children = Vec::new();
+        if let Some(arr) = j.get("children").and_then(|c| c.as_arr()) {
+            for c in arr {
+                children.push(MetricsTree::from_json(c)?);
+            }
+        }
+        Ok(Self { label, snapshot, notes, children })
+    }
+
+    /// Indented multi-line rendering (the `raca top` body).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, "", true, true);
+        out
+    }
+
+    fn render_into(&self, out: &mut String, prefix: &str, last: bool, root: bool) {
+        let (branch, next_prefix) = if root {
+            (String::new(), String::new())
+        } else if last {
+            (format!("{prefix}└─ "), format!("{prefix}   "))
+        } else {
+            (format!("{prefix}├─ "), format!("{prefix}│  "))
+        };
+        let m = &self.snapshot;
+        let mut line = format!(
+            "{branch}{:<24} req {}/{} trials {} p50 {}µs p99 {}µs",
+            self.label,
+            m.requests_completed,
+            m.requests_admitted,
+            m.trials_executed,
+            m.latency_p50_us,
+            m.latency_p99_us
+        );
+        if m.engine_errors > 0 {
+            line.push_str(&format!(" errs {}", m.engine_errors));
+        }
+        line.push_str(&render_notes(&self.notes));
+        out.push_str(&line);
+        out.push('\n');
+        for (i, c) in self.children.iter().enumerate() {
+            c.render_into(out, &next_prefix, i + 1 == self.children.len(), false);
+        }
+    }
+}
+
+fn render_notes(n: &NodeNotes) -> String {
+    let mut s = String::new();
+    if let Some(v) = n.service_us {
+        s.push_str(&format!(" svc {:.0}µs", v));
+    }
+    if let Some(v) = n.queue_wait_us {
+        s.push_str(&format!(" wait {:.0}µs", v));
+    }
+    if let Some(v) = n.probe_accuracy {
+        s.push_str(&format!(" acc {:.2}", v));
+    }
+    if let Some(v) = n.weight {
+        s.push_str(&format!(" w {:.2}", v));
+    }
+    if let Some(e) = n.errors {
+        if e > 0 {
+            s.push_str(&format!(" fails {e}"));
+        }
+    }
+    if n.evicted == Some(true) {
+        s.push_str(" EVICTED");
+    }
+    if n.stale {
+        s.push_str(" STALE");
+    }
+    s
+}
+
+impl std::fmt::Display for MetricsTree {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.render().trim_end())
+    }
+}
+
+/// Flat snapshot → JSON object (no `"t"` tag — the wire layer adds one).
+pub fn snapshot_to_json(m: &MetricsSnapshot) -> Json {
+    json::obj(vec![
+        ("requests_admitted", json::num(m.requests_admitted as f64)),
+        ("requests_completed", json::num(m.requests_completed as f64)),
+        ("trials_executed", json::num(m.trials_executed as f64)),
+        ("batches_executed", json::num(m.batches_executed as f64)),
+        ("rows_packed", json::num(m.rows_packed as f64)),
+        ("trials_saved", json::num(m.trials_saved as f64)),
+        ("engine_errors", json::num(m.engine_errors as f64)),
+        ("latency_p50_us", json::num(m.latency_p50_us as f64)),
+        ("latency_p99_us", json::num(m.latency_p99_us as f64)),
+    ])
+}
+
+pub fn snapshot_from_json(j: &Json) -> Result<MetricsSnapshot> {
+    let f = |k: &str| -> u64 { j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64 };
+    if j.as_obj().is_none() {
+        return Err(anyhow!("metrics snapshot is not an object"));
+    }
+    Ok(MetricsSnapshot {
+        requests_admitted: f("requests_admitted"),
+        requests_completed: f("requests_completed"),
+        trials_executed: f("trials_executed"),
+        batches_executed: f("batches_executed"),
+        rows_packed: f("rows_packed"),
+        trials_saved: f("trials_saved"),
+        engine_errors: f("engine_errors"),
+        latency_p50_us: f("latency_p50_us"),
+        latency_p99_us: f("latency_p99_us"),
+    })
+}
+
+fn notes_to_json(n: &NodeNotes) -> Json {
+    let mut m = BTreeMap::new();
+    if let Some(v) = n.service_us {
+        m.insert("service_us".to_string(), json::num(v));
+    }
+    if let Some(v) = n.queue_wait_us {
+        m.insert("queue_wait_us".to_string(), json::num(v));
+    }
+    if let Some(v) = n.probe_accuracy {
+        m.insert("probe_accuracy".to_string(), json::num(v));
+    }
+    if let Some(v) = n.evicted {
+        m.insert("evicted".to_string(), Json::Bool(v));
+    }
+    if let Some(v) = n.errors {
+        m.insert("errors".to_string(), json::num(v as f64));
+    }
+    if let Some(v) = n.weight {
+        m.insert("weight".to_string(), json::num(v));
+    }
+    if n.stale {
+        m.insert("stale".to_string(), Json::Bool(true));
+    }
+    Json::Obj(m)
+}
+
+fn notes_from_json(j: &Json) -> NodeNotes {
+    NodeNotes {
+        service_us: j.get("service_us").and_then(|v| v.as_f64()),
+        queue_wait_us: j.get("queue_wait_us").and_then(|v| v.as_f64()),
+        probe_accuracy: j.get("probe_accuracy").and_then(|v| v.as_f64()),
+        evicted: j.get("evicted").and_then(|v| v.as_bool()),
+        errors: j.get("errors").and_then(|v| v.as_f64()).map(|e| e as u64),
+        weight: j.get("weight").and_then(|v| v.as_f64()),
+        stale: j.get("stale").and_then(|v| v.as_bool()).unwrap_or(false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(completed: u64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests_admitted: completed + 1,
+            requests_completed: completed,
+            trials_executed: completed * 10,
+            batches_executed: 3,
+            rows_packed: 17,
+            trials_saved: 2,
+            engine_errors: 0,
+            latency_p50_us: 120,
+            latency_p99_us: 480,
+        }
+    }
+
+    fn sample() -> MetricsTree {
+        let mut die0 = MetricsTree::leaf("die#0", snap(4));
+        die0.notes.service_us = Some(110.0);
+        die0.notes.queue_wait_us = Some(12.5);
+        die0.notes.probe_accuracy = Some(0.97);
+        die0.notes.weight = Some(0.5);
+        let mut die1 = MetricsTree::leaf("die#1", snap(3));
+        die1.notes.evicted = Some(true);
+        die1.notes.errors = Some(2);
+        let mut remote = MetricsTree::leaf("remote:127.0.0.1:7433", snap(7));
+        remote.notes.stale = true;
+        MetricsTree::leaf("replicate ×3 (round-robin)", snap(14))
+            .with_children(vec![die0, die1, remote])
+    }
+
+    #[test]
+    fn json_round_trip_preserves_shape_and_notes() {
+        let t = sample();
+        let encoded = t.to_json().to_string();
+        let back = MetricsTree::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.num_nodes(), 4);
+        assert_eq!(back.children[1].notes.errors, Some(2));
+        assert!(back.children[2].notes.stale);
+    }
+
+    #[test]
+    fn flatten_paths_join_labels() {
+        let t = sample();
+        let paths: Vec<String> = t.flatten().into_iter().map(|(p, _)| p).collect();
+        assert_eq!(paths[0], "replicate ×3 (round-robin)");
+        assert_eq!(paths[1], "replicate ×3 (round-robin)/die#0");
+        assert!(paths[3].ends_with("remote:127.0.0.1:7433"));
+    }
+
+    #[test]
+    fn render_marks_eviction_and_staleness() {
+        let r = sample().render();
+        assert!(r.contains("EVICTED"), "{r}");
+        assert!(r.contains("STALE"), "{r}");
+        assert!(r.contains("└─ "), "{r}");
+        assert!(r.contains("acc 0.97"), "{r}");
+    }
+
+    #[test]
+    fn from_json_rejects_unlabeled_nodes() {
+        let j = Json::parse(r#"{"m": {}}"#).unwrap();
+        assert!(MetricsTree::from_json(&j).is_err());
+    }
+}

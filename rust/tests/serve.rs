@@ -518,3 +518,293 @@ fn duplicate_in_flight_ids_fail_cleanly_over_the_wire() {
     assert_eq!(r.trials_used, 200);
     Box::new(remote).shutdown();
 }
+
+// ---- telemetry: metrics trees, journals, failure eviction -----------------
+
+/// `metrics_tree()` mirrors the deployment tree: a `2x(pipeline:2)` build
+/// yields root → 2 pipelines → 2 stages each (7 nodes), with the router's
+/// per-child health notes and caller traffic visible at every level.
+#[test]
+fn metrics_tree_mirrors_the_replicated_pipeline_topology() {
+    let w = trained();
+    let b = build(
+        &topo("2x(pipeline:2)"),
+        &w,
+        &BuildOptions { seed: 0x0B5E, ..Default::default() },
+    )
+    .unwrap();
+    let tickets: Vec<_> = (0..12u64)
+        .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(6, 0.0)).unwrap())
+        .collect();
+    for t in tickets {
+        b.wait(t).unwrap();
+    }
+
+    let tree = b.metrics_tree();
+    assert!(tree.label.starts_with("replicate ×2"), "root label: {}", tree.label);
+    assert_eq!(tree.num_nodes(), 7, "tree:\n{}", tree.render());
+    assert_eq!(tree.snapshot.requests_completed, 12);
+    assert_eq!(tree.children.len(), 2);
+    let mut child_completed = 0;
+    for pipe in &tree.children {
+        assert!(pipe.label.starts_with("pipeline:2"), "child label: {}", pipe.label);
+        assert_eq!(pipe.children.len(), 2, "stages under {}", pipe.label);
+        for (d, stage) in pipe.children.iter().enumerate() {
+            assert!(
+                stage.label.starts_with(&format!("stage{d}")),
+                "stage label: {}",
+                stage.label
+            );
+        }
+        // Router-annotated health notes on every routed child.
+        assert_eq!(pipe.notes.evicted, Some(false));
+        assert!(pipe.notes.weight.is_some(), "missing routing weight on {}", pipe.label);
+        child_completed += pipe.snapshot.requests_completed;
+    }
+    assert_eq!(child_completed, 12, "round-robin split must cover all requests");
+    // The rendering `raca top` prints: one line per node with p50/p99.
+    let txt = tree.render();
+    assert!(txt.contains("p50") && txt.contains("p99"), "render:\n{txt}");
+    assert_eq!(txt.lines().count(), 7, "one line per node:\n{txt}");
+
+    // The shared journal saw the traffic (admissions at the router level).
+    let journal = b.journal().expect("built trees share a journal");
+    let events = journal.tail(journal.capacity());
+    use raca::telemetry::EventKind;
+    assert!(events.iter().any(|e| e.kind == EventKind::RequestAdmitted));
+    assert!(events.iter().any(|e| e.kind == EventKind::RequestCompleted));
+    b.shutdown();
+}
+
+/// The acceptance-bar shape for `raca top <addr>`: a listener hosting
+/// `2x(pipeline:2)` answers `MetricsReq { tree: true }` with its whole
+/// 7-node tree plus recent journal events — over the wire, one exchange.
+#[test]
+fn metrics_tree_crosses_the_wire_with_journal_events() {
+    let w = trained();
+    let host = build(
+        &topo("2x(pipeline:2)"),
+        &w,
+        &BuildOptions { seed: 0x70B, ..Default::default() },
+    )
+    .unwrap();
+    let server = raca::serve::net::serve(host, "127.0.0.1:0").unwrap();
+    let remote = raca::serve::RemoteBackend::connect(&server.addr().to_string()).unwrap();
+
+    for i in 0..8u64 {
+        let r = remote.classify(InferRequest::new(i, image(i)).with_budget(5, 0.0)).unwrap();
+        assert_eq!(r.trials_used, 5);
+    }
+
+    let (tree, events) = remote.remote_telemetry().expect("live peer answers the tree");
+    assert!(tree.label.starts_with("replicate ×2"), "peer root: {}", tree.label);
+    assert_eq!(tree.num_nodes(), 7, "peer tree:\n{}", tree.render());
+    assert_eq!(tree.snapshot.requests_completed, 8);
+    for pipe in &tree.children {
+        assert_eq!(pipe.notes.evicted, Some(false), "health notes cross the wire");
+    }
+    // Journal events ride along with the tree answer.
+    use raca::telemetry::EventKind;
+    assert!(!events.is_empty(), "hosted deployments journal their traffic");
+    assert!(events.iter().any(|e| e.kind == EventKind::RequestCompleted));
+
+    // Flat metrics (the v1 question) still work against the same session.
+    let m = remote.metrics();
+    assert_eq!(m.requests_completed, 8);
+    Box::new(remote).shutdown();
+}
+
+/// A mixed `(remote:die, die)` group names both leaves distinctly and
+/// grafts the remote peer's subtree under its `remote:<addr>` node.
+#[test]
+fn metrics_tree_of_a_mixed_group_names_remote_and_local_leaves() {
+    let w = trained();
+    let seed = 0x31F;
+    let host = build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap();
+    let server = raca::serve::net::serve(host, "127.0.0.1:0").unwrap();
+    let spec = format!("(remote:{}, die)", server.addr());
+    let b = build(
+        &Topology::parse(&spec).unwrap(),
+        &w,
+        &BuildOptions { seed, ..Default::default() },
+    )
+    .unwrap();
+    let tickets: Vec<_> = (0..8u64)
+        .map(|i| b.submit(InferRequest::new(i, image(i)).with_budget(4, 0.0)).unwrap())
+        .collect();
+    for t in tickets {
+        b.wait(t).unwrap();
+    }
+
+    let tree = b.metrics_tree();
+    assert!(tree.label.starts_with("group ×2"), "root label: {}", tree.label);
+    assert_eq!(tree.children.len(), 2);
+    assert_eq!(tree.children[0].label, format!("remote:{}", server.addr()));
+    // The remote node carries the peer's whole subtree (its hosted die).
+    assert_eq!(tree.children[0].children.len(), 1, "tree:\n{}", tree.render());
+    assert_eq!(tree.children[0].children[0].label, "die#0");
+    assert_eq!(tree.children[1].label, "die#0");
+    // Both group members served under round-robin.
+    assert!(tree.children[1].snapshot.requests_completed > 0);
+    assert!(tree.children[0].children[0].snapshot.requests_completed > 0);
+    b.shutdown();
+}
+
+/// Back-compat: a v1 peer (protocol 1 hello, answers only flat `Metrics`)
+/// still yields a tree — wrapped as a single `peer` node — and once the
+/// session dies, telemetry answers fast from the stale-tagged cache
+/// instead of stalling on a wire that will never answer.
+#[test]
+fn v1_flat_metrics_peer_wraps_into_a_tree_and_goes_stale_on_death() {
+    use raca::serve::net::{wire, WireMsg};
+    use raca::util::json;
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let (s, _) = listener.accept().unwrap();
+        let mut w = s.try_clone().unwrap();
+        let mut r = std::io::BufReader::new(s);
+        // A v1 listener: old protocol revision in the hello…
+        json::write_frame(&mut w, &wire::encode(&WireMsg::Hello { version: 1 })).unwrap();
+        let _ = json::read_frame(&mut r).unwrap().expect("client hello");
+        // …that answers exactly one metrics request with the flat v1
+        // shape (a real v1 decoder ignores the unknown `tree` field),
+        // then drops the connection — the session death.
+        let j = json::read_frame(&mut r).unwrap().expect("metrics request");
+        assert!(matches!(wire::decode(&j), Ok(WireMsg::MetricsReq { .. })));
+        let m = raca::coordinator::MetricsSnapshot {
+            requests_admitted: 5,
+            requests_completed: 4,
+            trials_executed: 40,
+            batches_executed: 6,
+            rows_packed: 12,
+            trials_saved: 3,
+            engine_errors: 0,
+            latency_p50_us: 150,
+            latency_p99_us: 900,
+        };
+        json::write_frame(&mut w, &wire::encode(&WireMsg::Metrics(m))).unwrap();
+    });
+
+    let remote = raca::serve::RemoteBackend::connect(&addr.to_string()).unwrap();
+    let tree = remote.metrics_tree();
+    assert_eq!(tree.label, format!("remote:{addr}"));
+    assert!(!tree.notes.stale);
+    assert_eq!(tree.children.len(), 1, "tree:\n{}", tree.render());
+    assert_eq!(tree.children[0].label, "peer", "flat answer wraps as one node");
+    assert_eq!(tree.children[0].snapshot.requests_completed, 4);
+    assert_eq!(tree.children[0].snapshot.latency_p99_us, 900);
+    fake.join().unwrap();
+
+    // The peer hung up; wait for the reader to notice.
+    let t0 = std::time::Instant::now();
+    while !remote.is_dead() {
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5), "reader never died");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    // Dead session: telemetry answers immediately (no 10 s wire timeout)
+    // from the cached copy, stale-tagged.
+    let t1 = std::time::Instant::now();
+    let tree = remote.metrics_tree();
+    assert!(t1.elapsed() < std::time::Duration::from_secs(5), "must fail fast when dead");
+    assert_eq!(tree.children.len(), 1);
+    assert!(tree.children[0].notes.stale, "cached peer copy is stale-tagged");
+    assert_eq!(tree.children[0].snapshot.requests_completed, 4, "…but still served");
+
+    // And submits fail in-band, immediately.
+    let r = remote.classify(InferRequest::new(9, image(9)).with_budget(4, 0.0));
+    assert!(r.is_err(), "dead session must refuse work");
+    Box::new(remote).shutdown();
+}
+
+/// The PR's acceptance bar: kill one child of a two-remote group and the
+/// health monitor evicts it — a `health_evict` event lands in the shared
+/// journal, the tree shows `EVICTED`, and traffic routes away cleanly.
+#[test]
+fn dead_remote_child_is_evicted_and_routed_around() {
+    use raca::serve::net::{wire, WireMsg};
+    use raca::telemetry::EventKind;
+    use raca::util::json;
+
+    let w = trained();
+    let seed = 0xDEAD5;
+    // Child A: a real listener hosting a die.
+    let host = build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap();
+    let alive = raca::serve::net::serve(host, "127.0.0.1:0").unwrap();
+
+    // Child B: a listener killed right after the handshake — the in-test
+    // stand-in for a host that died under the router.
+    let doomed = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let doomed_addr = doomed.local_addr().unwrap();
+    let killer = std::thread::spawn(move || {
+        let (s, _) = doomed.accept().unwrap();
+        let mut wr = s.try_clone().unwrap();
+        let mut rd = std::io::BufReader::new(s);
+        json::write_frame(
+            &mut wr,
+            &wire::encode(&WireMsg::Hello { version: wire::PROTOCOL_VERSION }),
+        )
+        .unwrap();
+        let _ = json::read_frame(&mut rd).unwrap().expect("client hello");
+        // connection dropped here — the kill
+    });
+
+    let spec = format!("(remote:{doomed_addr}, remote:{})", alive.addr());
+    let b = build(
+        &Topology::parse(&spec).unwrap(),
+        &w,
+        &BuildOptions { reweigh_every: 8, ..Default::default() },
+    )
+    .unwrap();
+    killer.join().unwrap();
+
+    // Sequential traffic: round-robin sends every other request into the
+    // dead child until its failure streak crosses the eviction bar
+    // (min_samples labeled observations, accuracy below the floor).
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for i in 0..60u64 {
+        match b.classify(InferRequest::new(i, image(i)).with_budget(4, 0.0)) {
+            Ok(r) => {
+                assert_eq!(r.trials_used, 4);
+                ok += 1;
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    assert!(ok > 0 && failed > 0, "both children must have been tried: ok={ok} failed={failed}");
+
+    // The eviction is journaled against the dead child's label…
+    let journal = b.journal().expect("router journal");
+    let events = journal.tail(journal.capacity());
+    let dead_label = format!("remote:{doomed_addr}");
+    assert!(
+        events
+            .iter()
+            .any(|e| e.kind == EventKind::HealthEvict && e.node == dead_label),
+        "no eviction event for {dead_label}; journal:\n{}",
+        journal.to_json_lines()
+    );
+    assert!(events.iter().any(|e| e.kind == EventKind::RequestFailed && e.node == dead_label));
+
+    // …and visible in the tree: evicted flag, error count, stale leaf.
+    let tree = b.metrics_tree();
+    let dead = tree.children.iter().find(|c| c.label == dead_label).expect("dead child node");
+    assert_eq!(dead.notes.evicted, Some(true), "tree:\n{}", tree.render());
+    assert!(dead.notes.errors.unwrap_or(0) > 0);
+    let alive_node = tree
+        .children
+        .iter()
+        .find(|c| c.label == format!("remote:{}", alive.addr()))
+        .expect("alive child node");
+    assert_eq!(alive_node.notes.evicted, Some(false));
+    assert!(tree.render().contains("EVICTED"), "render:\n{}", tree.render());
+
+    // Routed away: with the dead child evicted, traffic flows clean.
+    for i in 100..110u64 {
+        let r = b.classify(InferRequest::new(i, image(i)).with_budget(4, 0.0)).unwrap();
+        assert_eq!(r.trials_used, 4);
+    }
+    b.shutdown();
+}
