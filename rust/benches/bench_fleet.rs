@@ -21,6 +21,10 @@
 //!   (the `serve::net` wire layer): a latency lane, catching socket-path
 //!   regressions (frame codec bloat, missing TCP_NODELAY, relay stalls).
 //!
+//! * `http ingress` — the same die behind `serve::http`: keep-alive
+//!   `POST /v1/infer` round trips, so the JSON parse, admission gates
+//!   and batcher hop are the measured delta vs the framed socket lane.
+//!
 //! Before the topology lanes, a **native-kernel comparison** times the
 //! raw engine on one image: the scalar one-trial-at-a-time loop vs the
 //! §Perf iteration-5 trial-blocked bit-packed kernel at B ∈ {1, 8, 64}
@@ -34,8 +38,10 @@
 //! `--smoke` runs a CI-sized workload and *asserts* the acceptance bars:
 //! blocked native infer (B=64) ≥ 1.5× the scalar kernel,
 //! `pipeline:4` ≥ 2× the single-die trial throughput,
-//! `2x(pipeline:2)` ≥ `pipeline:4` at the same 4 dies, and loopback
-//! `remote:die` within 2× the local single-die request latency.
+//! `2x(pipeline:2)` ≥ `pipeline:4` at the same 4 dies, loopback
+//! `remote:die` within 2× the local single-die request latency, and an
+//! 8-way burst at a 1-deep HTTP ingress sheds with `429`s instead of
+//! hanging or dropping connections.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -45,6 +51,53 @@ use raca::engine::{NativeEngine, TrialParams};
 use raca::nn::{ModelSpec, Weights};
 use raca::serve::{build, Backend, BuildOptions, InferRequest, Topology};
 use raca::util::json::{self, Json};
+
+/// One request over an existing keep-alive HTTP connection; returns
+/// `(status, body)`.  Hand-rolled like the server itself: explicit
+/// `Content-Length` framing, no chunking.
+fn http_roundtrip(
+    r: &mut std::io::BufReader<std::net::TcpStream>,
+    w: &mut std::net::TcpStream,
+    path: &str,
+    body: &str,
+) -> (u16, String) {
+    use std::io::{BufRead, Read, Write};
+    write!(
+        w,
+        "POST {path} HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("http write");
+    w.flush().expect("http flush");
+    let mut line = String::new();
+    r.read_line(&mut line).expect("http status line");
+    let status: u16 =
+        line.split_whitespace().nth(1).expect("status code").parse().expect("status code");
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).expect("http header");
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().expect("content-length value");
+            }
+        }
+    }
+    let mut buf = vec![0u8; content_length];
+    r.read_exact(&mut buf).expect("http body");
+    (status, String::from_utf8(buf).expect("utf-8 body"))
+}
+
+/// `/v1/infer` body for request `i`: pixels formatted with `{}` (the
+/// shortest round-trip repr, so the ingress recovers the exact bits).
+fn infer_body(i: usize, img: &[f32], trials: u32) -> String {
+    let px: Vec<String> = img.iter().map(|p| format!("{p}")).collect();
+    format!(r#"{{"id": {i}, "pixels": [{}], "trials": {trials}}}"#, px.join(","))
+}
 
 /// Push `reqs` fixed-budget requests through `backend`; trials/second.
 fn throughput(backend: &dyn Backend, images: &[Vec<f32>], trials: u32, reqs: usize) -> f64 {
@@ -228,6 +281,41 @@ fn main() {
         local_lat * 1e6,
     );
 
+    // HTTP ingress lane: the same die behind the serve::http front door,
+    // keep-alive POSTs on one connection.  The delta vs the framed
+    // socket above is the text protocol: request parse, lazy JSON body
+    // scan, admission gates and the batcher hop.
+    let http_server = raca::serve::serve_http(
+        die(seed),
+        &raca::serve::HttpConfig::new("127.0.0.1:0"),
+    )
+    .expect("http ingress");
+    let http_lat = {
+        let s = std::net::TcpStream::connect(http_server.addr()).expect("dialing http ingress");
+        s.set_read_timeout(Some(std::time::Duration::from_secs(60))).unwrap();
+        let mut hw = s.try_clone().unwrap();
+        let mut hr = std::io::BufReader::new(s);
+        for i in 0..8 {
+            // warmup
+            let body = infer_body(i, &images[i % images.len()], lat_trials);
+            let (status, resp) = http_roundtrip(&mut hr, &mut hw, "/v1/infer", &body);
+            assert_eq!(status, 200, "http warmup: {resp}");
+        }
+        let t0 = Instant::now();
+        for i in 0..lat_reqs {
+            let body = infer_body(i, &images[i % images.len()], lat_trials);
+            let (status, resp) = http_roundtrip(&mut hr, &mut hw, "/v1/infer", &body);
+            assert_eq!(status, 200, "http lane: {resp}");
+        }
+        t0.elapsed().as_secs_f64() / lat_reqs.max(1) as f64
+    };
+    drop(http_server);
+    let http_ratio = http_lat / remote_lat.max(1e-12);
+    println!(
+        "  http ingress loopback          : {:>9.0} µs/req ({http_ratio:.2}x the framed socket, {lat_trials} trials/req)",
+        http_lat * 1e6,
+    );
+
     // Machine-readable trajectory: every lane of this run as one JSON
     // object (written before the smoke gates, so a failing gate still
     // leaves the evidence on disk).
@@ -270,6 +358,14 @@ fn main() {
                     ("remote_die", json::num(remote_lat * 1e6)),
                 ]),
             ),
+            (
+                "http_ingress",
+                json::obj(vec![
+                    ("http_us_per_req", json::num(http_lat * 1e6)),
+                    ("socket_us_per_req", json::num(remote_lat * 1e6)),
+                    ("http_over_socket", json::num(http_ratio)),
+                ]),
+            ),
             // Final per-node MetricsTree of the 2x(pipeline:2) lane.
             ("metrics_tree", final_tree.take().unwrap_or(Json::Null)),
         ]);
@@ -304,6 +400,46 @@ fn main() {
         );
         println!(
             "smoke OK: remote:die loopback = {lat_ratio:.2}x local latency (≤ 2x required)"
+        );
+
+        // Forced overflow at the HTTP front door: a 1-deep ingress hit
+        // by an 8-way burst must shed with 429s — every connection
+        // answered (the 20 s read timeouts are the hang detector), no
+        // status outside {200, 429}.
+        let tiny = {
+            let mut c = raca::serve::HttpConfig::new("127.0.0.1:0");
+            c.queue_depth = 1;
+            c.in_flight = 1;
+            raca::serve::serve_http(die(seed), &c).expect("tiny http ingress")
+        };
+        let tiny_addr = tiny.addr();
+        let shared_images = Arc::new(images.clone());
+        let hands: Vec<_> = (0..8usize)
+            .map(|i| {
+                let images = shared_images.clone();
+                std::thread::spawn(move || {
+                    let body = infer_body(i, &images[i % images.len()], 400);
+                    let s = std::net::TcpStream::connect(tiny_addr).expect("overflow connect");
+                    s.set_read_timeout(Some(std::time::Duration::from_secs(20))).unwrap();
+                    let mut w = s.try_clone().unwrap();
+                    let mut r = std::io::BufReader::new(s);
+                    http_roundtrip(&mut r, &mut w, "/v1/infer", &body).0
+                })
+            })
+            .collect();
+        let statuses: Vec<u16> =
+            hands.into_iter().map(|h| h.join().expect("overflow thread answered")).collect();
+        assert!(
+            statuses.iter().all(|s| *s == 200 || *s == 429),
+            "--smoke: unexpected statuses under forced overflow: {statuses:?}"
+        );
+        assert!(
+            statuses.contains(&429),
+            "--smoke: an 8-way burst over a 1-deep ingress must shed, got {statuses:?}"
+        );
+        println!(
+            "smoke OK: http ingress sheds under forced overflow ({} of 8 answered 429)",
+            statuses.iter().filter(|s| **s == 429).count()
         );
     }
 }

@@ -21,7 +21,7 @@ use crate::coordinator::SchedulerConfig;
 use crate::engine::TrialParams;
 use crate::fleet::{FleetConfig, RoutePolicy};
 use crate::hwmodel::TechParams;
-use crate::serve::{BackendKind, ServeConfig, Topology};
+use crate::serve::{BackendKind, HttpConfig, ServeConfig, Topology};
 use crate::util::json::Json;
 
 /// Which engine backs the scheduler.
@@ -200,7 +200,7 @@ impl RunConfig {
                 s,
                 &[
                     "backend", "topology", "chips", "shards", "depth", "batch",
-                    "trial_block", "probe_rate", "listen", "seed",
+                    "trial_block", "probe_rate", "listen", "http", "seed",
                 ],
                 "serve",
             )?;
@@ -240,6 +240,33 @@ impl RunConfig {
             if let Some(v) = s.get("listen").and_then(Json::as_str) {
                 cfg.serve.listen = Some(v.to_string());
             }
+            if let Some(h) = s.get("http") {
+                check_keys(
+                    h,
+                    &["addr", "queue_depth", "in_flight", "tenant_rate", "tenant_burst"],
+                    "serve.http",
+                )?;
+                let addr = match h.get("addr").and_then(Json::as_str) {
+                    Some(a) => a,
+                    None => bail!(
+                        "config: serve.http requires an \"addr\" (<host:port> bind address)"
+                    ),
+                };
+                let mut hc = HttpConfig::new(addr);
+                if let Some(v) = h.get("queue_depth").and_then(Json::as_usize) {
+                    hc.queue_depth = v;
+                }
+                if let Some(v) = h.get("in_flight").and_then(Json::as_usize) {
+                    hc.in_flight = v;
+                }
+                if let Some(v) = h.get("tenant_rate").and_then(Json::as_f64) {
+                    hc.tenant_rate = v;
+                }
+                if let Some(v) = h.get("tenant_burst").and_then(Json::as_f64) {
+                    hc.tenant_burst = v;
+                }
+                cfg.serve.http = Some(hc);
+            }
             if let Some(v) = s.get("seed").and_then(Json::as_usize) {
                 cfg.serve.seed = v as u64;
             }
@@ -267,6 +294,28 @@ impl RunConfig {
             ensure!(
                 l.contains(':'),
                 "config: serve.listen must be a <host:port> bind address"
+            );
+        }
+        if let Some(h) = &cfg.serve.http {
+            ensure!(
+                h.addr.contains(':'),
+                "config: serve.http.addr must be a <host:port> bind address"
+            );
+            ensure!(
+                h.queue_depth > 0,
+                "config: serve.http.queue_depth must be at least 1 (bounded ingress queue)"
+            );
+            ensure!(
+                h.in_flight > 0,
+                "config: serve.http.in_flight must be at least 1 (admitted-request budget)"
+            );
+            ensure!(
+                h.tenant_rate >= 0.0 && h.tenant_rate.is_finite(),
+                "config: serve.http.tenant_rate must be ≥ 0 requests/s per tenant (0 disables)"
+            );
+            ensure!(
+                h.tenant_burst >= 1.0 && h.tenant_burst.is_finite(),
+                "config: serve.http.tenant_burst must be at least 1 (token-bucket capacity)"
             );
         }
         cfg.scheduler.params = cfg.trial;
@@ -365,6 +414,59 @@ mod tests {
         assert!(format!("{e}").contains("probe_rate"), "{e}");
         let e = RunConfig::parse(r#"{"serve": {"listen": "no-port"}}"#).unwrap_err();
         assert!(format!("{e}").contains("listen"), "{e}");
+    }
+
+    #[test]
+    fn serve_http_block_parses_and_validates() {
+        let c = RunConfig::parse(
+            r#"{"serve": {"http": {"addr": "0.0.0.0:8080", "queue_depth": 32,
+                                   "in_flight": 64, "tenant_rate": 10.5,
+                                   "tenant_burst": 4}}}"#,
+        )
+        .unwrap();
+        let h = c.serve.http.unwrap();
+        assert_eq!(h.addr, "0.0.0.0:8080");
+        assert_eq!(h.queue_depth, 32);
+        assert_eq!(h.in_flight, 64);
+        assert!((h.tenant_rate - 10.5).abs() < 1e-12);
+        assert!((h.tenant_burst - 4.0).abs() < 1e-12);
+        // Omitted knobs keep HttpConfig defaults; omitted block stays None.
+        let d = RunConfig::parse(r#"{"serve": {"http": {"addr": "127.0.0.1:0"}}}"#).unwrap();
+        let h = d.serve.http.unwrap();
+        assert_eq!((h.queue_depth, h.in_flight), (256, 512));
+        assert_eq!(h.tenant_rate, 0.0, "rate limiting off by default");
+        assert_eq!(RunConfig::parse("{}").unwrap().serve.http, None);
+        // Rejections name the offending key.
+        let e = RunConfig::parse(r#"{"serve": {"http": {}}}"#).unwrap_err();
+        assert!(format!("{e}").contains("addr"), "{e}");
+        let e = RunConfig::parse(r#"{"serve": {"http": {"addr": "no-port"}}}"#).unwrap_err();
+        assert!(format!("{e}").contains("serve.http.addr"), "{e}");
+        let e = RunConfig::parse(
+            r#"{"serve": {"http": {"addr": "h:1", "queue_depth": 0}}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("serve.http.queue_depth"), "{e}");
+        let e = RunConfig::parse(
+            r#"{"serve": {"http": {"addr": "h:1", "in_flight": 0}}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("serve.http.in_flight"), "{e}");
+        let e = RunConfig::parse(
+            r#"{"serve": {"http": {"addr": "h:1", "tenant_rate": -1}}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("serve.http.tenant_rate"), "{e}");
+        let e = RunConfig::parse(
+            r#"{"serve": {"http": {"addr": "h:1", "tenant_burst": 0.5}}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("serve.http.tenant_burst"), "{e}");
+        // Unknown keys inside the block are typo-checked like any other.
+        let e = RunConfig::parse(
+            r#"{"serve": {"http": {"addr": "h:1", "que_depth": 9}}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("serve.http"), "{e}");
     }
 
     #[test]

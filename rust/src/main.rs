@@ -135,6 +135,14 @@ USAGE: raca <subcommand> [flags]
               --listen <host:port>      host the compiled topology on a
                                         socket (peers reach it as
                                         remote:<host:port>); blocks
+              --http <host:port>        host the HTTP/JSON ingress:
+                                        POST /v1/infer, GET /metrics,
+                                        GET /tree, GET /healthz — with
+                                        admission control (429+Retry-After),
+                                        X-Raca-Tenant rate limits, and
+                                        continuous batching; blocks
+                                        (composable with --listen: both
+                                        front doors share the backend)
               --probe-rate R            labeled health probes per request
                                         (0..1, from the calibration slice)
               --chips N --shards S --batch B (die-to-die trial block)
@@ -380,6 +388,16 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(l) = args.get("listen") {
         sc.listen = Some(l.to_string());
     }
+    if let Some(h) = args.get("http") {
+        // Keep queue/budget/rate knobs from a config file's serve.http
+        // block when present; the flag only picks the bind address.
+        let mut hc = sc.http.take().unwrap_or_else(|| raca::serve::HttpConfig::new(h));
+        hc.addr = h.to_string();
+        sc.http = Some(hc);
+    }
+    if let Some(h) = &sc.http {
+        anyhow::ensure!(h.addr.contains(':'), "--http must be a <host:port> bind address");
+    }
     sc.seed = args.get_usize("seed", sc.seed as usize) as u64;
     anyhow::ensure!(sc.chips > 0, "--chips must be at least 1");
     anyhow::ensure!(sc.shards > 0, "--shards must be at least 1");
@@ -447,19 +465,54 @@ fn serve(args: &Args) -> Result<()> {
     };
     let backend = raca::serve::plan::build(&topo, &w, &opts)?;
 
-    // Listener mode: host the compiled topology on a socket instead of
-    // pushing a local workload — peers reach it as `remote:<this addr>`.
-    if let Some(listen) = &sc.listen {
-        let server = raca::serve::net::serve(backend, listen)?;
-        println!(
-            "serve: listening on {} (wire protocol v{}) — reach this topology as \
-             \"remote:{}\"; ctrl-c to stop",
-            server.addr(),
-            raca::serve::net::PROTOCOL_VERSION,
-            server.addr()
-        );
-        server.join();
-        return Ok(());
+    // Listener modes: host the compiled topology on a socket (framed
+    // wire and/or HTTP ingress) instead of pushing a local workload.
+    match (&sc.listen, &sc.http) {
+        (Some(listen), Some(hc)) => {
+            // Both front doors share one backend (one metrics/journal
+            // stream) via the SharedBackend adapter.
+            let shared: std::sync::Arc<dyn raca::serve::Backend> = std::sync::Arc::from(backend);
+            let net = raca::serve::net::serve(
+                Box::new(raca::serve::SharedBackend(shared.clone())),
+                listen,
+            )?;
+            let http =
+                raca::serve::serve_http(Box::new(raca::serve::SharedBackend(shared)), hc)?;
+            println!(
+                "serve: wire listener on {} (protocol v{}, reach as \"remote:{}\"), \
+                 HTTP ingress on http://{} — ctrl-c to stop",
+                net.addr(),
+                raca::serve::net::PROTOCOL_VERSION,
+                net.addr(),
+                http.addr()
+            );
+            net.join();
+            http.join();
+            return Ok(());
+        }
+        (Some(listen), None) => {
+            let server = raca::serve::net::serve(backend, listen)?;
+            println!(
+                "serve: listening on {} (wire protocol v{}) — reach this topology as \
+                 \"remote:{}\"; ctrl-c to stop",
+                server.addr(),
+                raca::serve::net::PROTOCOL_VERSION,
+                server.addr()
+            );
+            server.join();
+            return Ok(());
+        }
+        (None, Some(hc)) => {
+            let server = raca::serve::serve_http(backend, hc)?;
+            println!(
+                "serve: HTTP ingress on http://{} (POST /v1/infer, GET /metrics, \
+                 GET /tree, GET /healthz) — ctrl-c to stop",
+                server.addr()
+            );
+            server.join();
+            return Ok(());
+        }
+        (None, None) => {}
     }
 
     serve_and_report(backend.as_ref(), &ds, trials, confidence, None)?;

@@ -1,0 +1,247 @@
+//! Admission control for the HTTP ingress: decide *before* spending
+//! backend work whether a request may enter.
+//!
+//! Three gates, cheapest first:
+//!
+//! 1. **Per-tenant token bucket** — requests carry an `X-Raca-Tenant`
+//!    header; each tenant refills at `rate` requests/s up to `burst`
+//!    tokens.  Untagged traffic shares one anonymous bucket, so omitting
+//!    the header is not a bypass.  A rate of 0 disables the gate.
+//! 2. **In-flight budget** — a hard cap on admitted-but-unanswered
+//!    requests (queued *or* executing).  Admission hands back an RAII
+//!    [`Permit`]; the gauge decrements when the permit drops, i.e. when
+//!    the response has been written, so an admitted request can never be
+//!    silently dropped without releasing its slot.
+//! 3. **Bounded queue** — the batcher's `sync_channel` (owned by the
+//!    server, not this module); a full queue is reported back here via
+//!    [`Admission::note_shed_queue`] so the shed counters stay in one
+//!    place.
+//!
+//! Every rejection maps to `429 Too Many Requests` + `Retry-After` in
+//! [`super::routes`]; nothing in this module blocks.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Longest `Retry-After` hint we'll ever send, seconds.  A tenant so far
+/// over budget that the honest wait exceeds this should re-negotiate
+/// capacity, not sleep for an hour.
+const MAX_RETRY_AFTER_SECS: u64 = 3600;
+
+/// Shared admission state for one listener.
+pub struct Admission {
+    in_flight_budget: usize,
+    in_flight: AtomicUsize,
+    /// Permits granted (the queue gate may still shed afterwards).
+    admitted: AtomicU64,
+    shed_queue: AtomicU64,
+    shed_in_flight: AtomicU64,
+    shed_rate: AtomicU64,
+    /// Tokens/s per tenant; 0 disables rate limiting.
+    rate: f64,
+    /// Bucket capacity (max burst).
+    burst: f64,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+struct Bucket {
+    tokens: f64,
+    refilled: Instant,
+}
+
+/// RAII in-flight slot: dropping it (response written, or shed at the
+/// queue gate) releases the budget.
+pub struct Permit {
+    adm: Arc<Admission>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.adm.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Outcome of [`Admission::try_admit`].
+pub enum Verdict {
+    Admitted(Permit),
+    Shed {
+        retry_after_secs: u64,
+        reason: &'static str,
+    },
+}
+
+/// Counter snapshot for `GET /metrics`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdmissionStats {
+    pub admitted: u64,
+    pub shed_queue: u64,
+    pub shed_in_flight: u64,
+    pub shed_rate: u64,
+    pub in_flight_now: usize,
+}
+
+impl AdmissionStats {
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue + self.shed_in_flight + self.shed_rate
+    }
+}
+
+impl Admission {
+    pub fn new(in_flight_budget: usize, tenant_rate: f64, tenant_burst: f64) -> Arc<Self> {
+        Arc::new(Self {
+            in_flight_budget: in_flight_budget.max(1),
+            in_flight: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            shed_queue: AtomicU64::new(0),
+            shed_in_flight: AtomicU64::new(0),
+            shed_rate: AtomicU64::new(0),
+            rate: tenant_rate.max(0.0),
+            burst: tenant_burst.max(1.0),
+            buckets: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Run the rate and in-flight gates.  On `Admitted`, the caller
+    /// holds the in-flight slot until the returned [`Permit`] drops.
+    pub fn try_admit(self: &Arc<Self>, tenant: Option<&str>) -> Verdict {
+        if self.rate > 0.0 {
+            // Untagged traffic shares the "" bucket — anonymous callers
+            // compete with each other, not with named tenants.
+            let key = tenant.unwrap_or("");
+            let mut buckets = self.buckets.lock().unwrap();
+            let now = Instant::now();
+            let b = buckets
+                .entry(key.to_string())
+                .or_insert(Bucket { tokens: self.burst, refilled: now });
+            let dt = now.duration_since(b.refilled).as_secs_f64();
+            b.tokens = (b.tokens + dt * self.rate).min(self.burst);
+            b.refilled = now;
+            if b.tokens < 1.0 {
+                let wait = ((1.0 - b.tokens) / self.rate).ceil().max(1.0);
+                self.shed_rate.fetch_add(1, Ordering::Relaxed);
+                return Verdict::Shed {
+                    retry_after_secs: (wait as u64).min(MAX_RETRY_AFTER_SECS),
+                    reason: "tenant rate limit",
+                };
+            }
+            b.tokens -= 1.0;
+        }
+
+        let took_slot = self
+            .in_flight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                (n < self.in_flight_budget).then_some(n + 1)
+            })
+            .is_ok();
+        if !took_slot {
+            self.shed_in_flight.fetch_add(1, Ordering::Relaxed);
+            return Verdict::Shed { retry_after_secs: 1, reason: "in-flight budget full" };
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Verdict::Admitted(Permit { adm: self.clone() })
+    }
+
+    /// The queue gate shed an already-permitted request (its permit is
+    /// being dropped by the caller).
+    pub fn note_shed_queue(&self) {
+        self.shed_queue.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn in_flight_now(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        AdmissionStats {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed_queue: self.shed_queue.load(Ordering::Relaxed),
+            shed_in_flight: self.shed_in_flight.load(Ordering::Relaxed),
+            shed_rate: self.shed_rate.load(Ordering::Relaxed),
+            in_flight_now: self.in_flight_now(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn admit(adm: &Arc<Admission>, tenant: Option<&str>) -> Result<Permit, (u64, &'static str)> {
+        match adm.try_admit(tenant) {
+            Verdict::Admitted(p) => Ok(p),
+            Verdict::Shed { retry_after_secs, reason } => Err((retry_after_secs, reason)),
+        }
+    }
+
+    #[test]
+    fn in_flight_budget_sheds_and_releases_on_permit_drop() {
+        let adm = Admission::new(2, 0.0, 1.0);
+        let p1 = admit(&adm, None).unwrap();
+        let _p2 = admit(&adm, None).unwrap();
+        let (retry, reason) = admit(&adm, None).unwrap_err();
+        assert_eq!(reason, "in-flight budget full");
+        assert!(retry >= 1);
+        assert_eq!(adm.in_flight_now(), 2);
+
+        drop(p1);
+        assert_eq!(adm.in_flight_now(), 1);
+        let _p3 = admit(&adm, None).unwrap();
+
+        let s = adm.stats();
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.shed_in_flight, 1);
+        assert_eq!(s.shed_total(), 1);
+    }
+
+    #[test]
+    fn tenant_buckets_are_independent_and_anonymous_traffic_shares_one() {
+        // Tiny refill rate: the burst is all a tenant gets in-test.
+        let adm = Admission::new(64, 0.001, 2.0);
+        let _a1 = admit(&adm, Some("alice")).unwrap();
+        let _a2 = admit(&adm, Some("alice")).unwrap();
+        let (retry, reason) = admit(&adm, Some("alice")).unwrap_err();
+        assert_eq!(reason, "tenant rate limit");
+        assert!(retry >= 1, "honest wait hint, got {retry}");
+
+        // Bob's bucket is untouched by Alice's exhaustion.
+        let _b1 = admit(&adm, Some("bob")).unwrap();
+
+        // Untagged requests share the anonymous bucket.
+        let _n1 = admit(&adm, None).unwrap();
+        let _n2 = admit(&adm, None).unwrap();
+        assert!(admit(&adm, None).is_err());
+
+        assert_eq!(adm.stats().shed_rate, 2);
+    }
+
+    #[test]
+    fn buckets_refill_over_time() {
+        let adm = Admission::new(64, 200.0, 1.0);
+        let _p = admit(&adm, Some("t")).unwrap();
+        assert!(admit(&adm, Some("t")).is_err(), "burst of 1 spent");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // 50 ms at 200 tokens/s ≈ 10 tokens, capped at burst 1.
+        assert!(admit(&adm, Some("t")).is_ok(), "bucket should have refilled");
+    }
+
+    #[test]
+    fn zero_rate_disables_the_limiter() {
+        let adm = Admission::new(1024, 0.0, 1.0);
+        for _ in 0..100 {
+            // Permits dropped immediately: only the rate gate could shed.
+            admit(&adm, Some("t")).unwrap();
+        }
+        assert_eq!(adm.stats().shed_rate, 0);
+    }
+
+    #[test]
+    fn retry_after_is_capped() {
+        // 1 token per ~28 hours: the honest wait is huge, the hint is not.
+        let adm = Admission::new(64, 0.00001, 1.0);
+        let _p = admit(&adm, Some("t")).unwrap();
+        let (retry, _) = admit(&adm, Some("t")).unwrap_err();
+        assert!(retry <= MAX_RETRY_AFTER_SECS, "{retry}");
+    }
+}

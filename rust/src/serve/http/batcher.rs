@@ -1,0 +1,171 @@
+//! Continuous batcher: the stage between the admission queue and the
+//! backend.
+//!
+//! A dedicated thread drains the bounded queue — block for the first
+//! request, then sweep whatever else has arrived (up to [`MAX_FLUSH`]) —
+//! and submits each flush to the backend **grouped by identical image**.
+//! This generalizes the scheduler's `group_equal_rows` trick across
+//! requests: the coordinator packs submissions into trial batches in
+//! arrival order, so by emitting equal-pixel requests back-to-back we
+//! maximize the chance they land in the same batch, where the
+//! trial-blocked kernel's row-grouping collapses them into one weight
+//! sweep (PR-5's amortization, now reachable from HTTP regardless of the
+//! order clients happened to connect in).
+//!
+//! Grouping never touches request identity: every request keeps its own
+//! id and therefore its own trial stream (`trial_stream_base`), so the
+//! merged path is bit-identical to submitting the requests one by one.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use crate::serve::{Backend, InferResponse};
+use crate::telemetry::{EventKind, Journal};
+
+use super::server::QueuedInfer;
+
+/// Most requests drained into one flush.  Bounds the latency a request
+/// can accrue behind the grouping sweep itself; the backend's own queue
+/// depth does the real pacing.
+pub const MAX_FLUSH: usize = 64;
+
+/// Flush counters for `GET /metrics`.
+#[derive(Debug, Default)]
+pub struct BatcherStats {
+    /// Batches pushed to the backend.
+    pub flushes: AtomicU64,
+    /// Requests flushed in total.
+    pub requests: AtomicU64,
+    /// Requests that joined an earlier request's group (identical
+    /// pixels) — each one is a weight sweep the kernel may now skip.
+    pub merged: AtomicU64,
+}
+
+impl BatcherStats {
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (
+            self.flushes.load(Ordering::Relaxed),
+            self.requests.load(Ordering::Relaxed),
+            self.merged.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Group indices of `images` by bit-identical content, first-occurrence
+/// order — `engine::group_equal_rows` generalized to rows of possibly
+/// differing length.  Same FNV-1a prefilter over the raw bits, same
+/// verified equality against the group representative.
+pub fn group_compatible(images: &[&[f32]]) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut hashes: Vec<u64> = Vec::new();
+    'rows: for (r, row) in images.iter().enumerate() {
+        let mut h = 0xcbf29ce484222325u64;
+        for v in row.iter() {
+            h ^= v.to_bits() as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        for (g, grp) in groups.iter_mut().enumerate() {
+            if hashes[g] == h && images[grp[0]] == *row {
+                grp.push(r);
+                continue 'rows;
+            }
+        }
+        groups.push(vec![r]);
+        hashes.push(h);
+    }
+    groups
+}
+
+/// Spawn the batcher thread.  Exits when every queue sender is gone
+/// (server and all connection handlers dropped).
+pub fn spawn(
+    rx: mpsc::Receiver<QueuedInfer>,
+    backend: Arc<dyn Backend>,
+    journal: Arc<Journal>,
+    stats: Arc<BatcherStats>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("raca-http-batcher".into())
+        .spawn(move || loop {
+            let first = match rx.recv() {
+                Ok(q) => q,
+                Err(_) => return,
+            };
+            let mut pending = vec![first];
+            while pending.len() < MAX_FLUSH {
+                match rx.try_recv() {
+                    Ok(q) => pending.push(q),
+                    Err(_) => break,
+                }
+            }
+            flush(pending, &backend, &journal, &stats);
+        })
+        .expect("spawning http batcher thread")
+}
+
+fn flush(
+    batch: Vec<QueuedInfer>,
+    backend: &Arc<dyn Backend>,
+    journal: &Arc<Journal>,
+    stats: &Arc<BatcherStats>,
+) {
+    let images: Vec<&[f32]> = batch.iter().map(|q| q.req.image.as_slice()).collect();
+    let groups = group_compatible(&images);
+    stats.flushes.fetch_add(1, Ordering::Relaxed);
+    stats.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    stats.merged.fetch_add((batch.len() - groups.len()) as u64, Ordering::Relaxed);
+    if batch.len() > 1 {
+        journal.record(
+            EventKind::BatchFormed,
+            "http",
+            format!("{} reqs -> {} groups", batch.len(), groups.len()),
+        );
+    }
+
+    let mut slots: Vec<Option<QueuedInfer>> = batch.into_iter().map(Some).collect();
+    for grp in groups {
+        for idx in grp {
+            let q = slots[idx].take().expect("each index appears in exactly one group");
+            let id = q.req.id;
+            // An admitted request is always answered: a submit error
+            // becomes an in-band failure on its reply channel (the
+            // connection handler is blocked on it).
+            if let Err(e) = backend.submit_to(q.req, q.reply.clone()) {
+                let _ = q.reply.send(InferResponse::failed(id, format!("{e:#}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_identical_images_first_occurrence_order() {
+        let a = vec![0.25f32, 0.5, 0.75];
+        let b = vec![0.25f32, 0.5, 0.75 + f32::EPSILON];
+        let rows: Vec<&[f32]> = vec![&a, &b, &a, &a, &b];
+        assert_eq!(group_compatible(&rows), vec![vec![0, 2, 3], vec![1, 4]]);
+    }
+
+    #[test]
+    fn different_lengths_never_group() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![1.0f32, 2.0, 0.0];
+        let rows: Vec<&[f32]> = vec![&a, &b];
+        assert_eq!(group_compatible(&rows), vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn negative_zero_is_a_distinct_bit_pattern() {
+        // -0.0 == 0.0 numerically but the bit patterns differ, so the
+        // hash prefilter keeps them apart — the conservative direction
+        // (a missed merge, never a wrong one).
+        let a = vec![0.0f32];
+        let b = vec![-0.0f32];
+        let rows: Vec<&[f32]> = vec![&a, &b];
+        assert_eq!(group_compatible(&rows), vec![vec![0], vec![1]]);
+    }
+}

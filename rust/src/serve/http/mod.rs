@@ -1,0 +1,72 @@
+//! `serve::http` — the HTTP/JSON front door.
+//!
+//! The framed socket ([`crate::serve::net`]) is a fabric-internal
+//! protocol: binary length prefixes, versioned handshakes, long-lived
+//! sessions.  Public traffic needs the opposite — a protocol any load
+//! balancer and `curl` already speak, with explicit backpressure at the
+//! edge.  This module is that layer, and it follows the paper's
+//! delete-the-periphery discipline end to end:
+//!
+//! ```text
+//!   client ── HTTP/1.1 ──► admission ──► bounded queue ──► batcher ──► Backend
+//!                (429 + Retry-After)        (sync_channel)   (merge)     (any)
+//! ```
+//!
+//! - **[`admission`]** decides *cheaply* whether a request may enter:
+//!   per-tenant token buckets (`X-Raca-Tenant`), an in-flight budget
+//!   enforced by RAII permits, and the bounded queue itself.  Overload
+//!   degrades into fast, honest `429`s — never into unbounded memory or
+//!   a hung socket.
+//! - **[`batcher`]** is the continuous-batching stage: it drains the
+//!   queue and submits identical-pixel requests back-to-back so the
+//!   scheduler's `group_equal_rows` pass (PR-5) collapses them into one
+//!   blocked kernel sweep, regardless of the order clients connected in.
+//!   Requests keep their own ids and trial streams, so merging never
+//!   changes a single vote.
+//! - **[`routes`]** exposes `POST /v1/infer` (lazily parsed —
+//!   [`crate::util::json::LazyObject`] extracts `id`/`pixels`/`trials`
+//!   without materializing the body), `GET /metrics`, `GET /tree`
+//!   (PR-6 telemetry as JSON), and `GET /healthz`.
+//! - **[`server`]** is the hand-rolled HTTP/1.1 listener itself:
+//!   keep-alive, `Content-Length` bodies capped at the wire layer's
+//!   16 MiB, one thread per connection.
+//!
+//! Surfaced as `raca serve --http <addr>` and the `serve.http` config
+//! block; see the README "HTTP ingress" section for curl examples.
+
+pub mod admission;
+pub mod batcher;
+pub mod routes;
+pub mod server;
+
+pub use admission::{Admission, AdmissionStats};
+pub use server::{serve_http, HttpServer};
+
+/// Validated `serve.http` settings (config file `serve.http` block
+/// and/or the `--http` flag; see `config.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpConfig {
+    /// Bind address, `host:port`.
+    pub addr: String,
+    /// Bounded queue depth between admission and the batcher.
+    pub queue_depth: usize,
+    /// Max admitted-but-unanswered requests (queued + executing).
+    pub in_flight: usize,
+    /// Token-bucket refill, requests/s per tenant.  0 disables rate
+    /// limiting.
+    pub tenant_rate: f64,
+    /// Token-bucket capacity (max burst per tenant).
+    pub tenant_burst: f64,
+}
+
+impl HttpConfig {
+    pub fn new(addr: impl Into<String>) -> Self {
+        HttpConfig {
+            addr: addr.into(),
+            queue_depth: 256,
+            in_flight: 512,
+            tenant_rate: 0.0,
+            tenant_burst: 8.0,
+        }
+    }
+}

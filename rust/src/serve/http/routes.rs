@@ -1,0 +1,235 @@
+//! Route dispatch for the HTTP ingress.
+//!
+//! Four routes, one match:
+//!
+//! - `POST /v1/infer` — admission-gated inference (see below).
+//! - `GET /metrics`   — ingress counters + flat backend snapshot.
+//! - `GET /tree`      — the PR-6 recursive metrics tree with the ingress
+//!   as root, plus the journal tail — the same shape `raca top` reads
+//!   off a framed socket, as plain JSON.
+//! - `GET /healthz`   — liveness, nothing else.
+//!
+//! The infer path runs admission *before* parsing the body (a shed
+//! request costs a header scan, not a 784-float parse), holds its
+//! in-flight [`super::admission::Permit`] until the response is written,
+//! and keeps determinism by pinning `confidence` to 0: a fixed trial
+//! budget means votes depend only on `(seed, id, trial_idx)`, so an HTTP
+//! reply is bit-identical to a local `die` answering the same request.
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::serve::InferRequest;
+use crate::telemetry::{tree::snapshot_to_json, EventKind, MetricsTree};
+use crate::util::json::{self, Json, LazyObject};
+
+use super::server::{Ingress, QueuedInfer, JOURNAL_TAIL};
+
+/// Trial budget when the body omits `"trials"`.
+const DEFAULT_TRIALS: u64 = 32;
+
+/// Hard per-request trial cap: admission control for compute, not just
+/// queue slots — one request must not monopolize the fabric.
+const MAX_TRIALS: u64 = 1 << 20;
+
+/// A response ready for the socket.
+pub struct Reply {
+    pub status: u16,
+    pub reason: &'static str,
+    pub headers: Vec<(&'static str, String)>,
+    pub body: String,
+}
+
+impl Reply {
+    pub fn json(status: u16, reason: &'static str, body: Json) -> Self {
+        Reply { status, reason, headers: Vec::new(), body: body.to_string() }
+    }
+
+    pub fn error(status: u16, reason: &'static str, msg: &str) -> Self {
+        Reply::json(status, reason, json::obj(vec![("error", Json::Str(msg.to_string()))]))
+    }
+
+    fn shed(retry_after_secs: u64, reason: &str) -> Self {
+        let mut r = Reply::json(
+            429,
+            "Too Many Requests",
+            json::obj(vec![
+                ("error", Json::Str(format!("shed: {reason}"))),
+                ("retry_after", json::num(retry_after_secs as f64)),
+            ]),
+        );
+        r.headers.push(("Retry-After", retry_after_secs.to_string()));
+        r
+    }
+}
+
+pub(crate) fn dispatch(
+    method: &str,
+    path: &str,
+    tenant: Option<&str>,
+    body: &[u8],
+    ctx: &Arc<Ingress>,
+) -> Reply {
+    match (method, path) {
+        ("POST", "/v1/infer") => infer(tenant, body, ctx),
+        ("GET", "/metrics") => metrics(ctx),
+        ("GET", "/tree") => tree(ctx),
+        ("GET", "/healthz") => Reply::json(200, "OK", json::obj(vec![("ok", Json::Bool(true))])),
+        (_, "/v1/infer") | (_, "/metrics") | (_, "/tree") | (_, "/healthz") => {
+            let allow = if path == "/v1/infer" { "POST" } else { "GET" };
+            let mut r = Reply::error(405, "Method Not Allowed", "method not allowed");
+            r.headers.push(("Allow", allow.to_string()));
+            r
+        }
+        _ => Reply::error(404, "Not Found", &format!("no route for {path}")),
+    }
+}
+
+fn infer(tenant: Option<&str>, body: &[u8], ctx: &Arc<Ingress>) -> Reply {
+    use super::admission::Verdict;
+
+    let t0 = Instant::now();
+    let permit = match ctx.admission.try_admit(tenant) {
+        Verdict::Admitted(p) => p,
+        Verdict::Shed { retry_after_secs, reason } => {
+            ctx.journal.record(EventKind::IngressShed, &ctx.label, reason);
+            return Reply::shed(retry_after_secs, reason);
+        }
+    };
+
+    // Lazy extraction: only the three fields we need, straight off the
+    // body bytes (ADR-002 style — no tree for the pixel array).
+    let doc = LazyObject::new(body);
+    let id = match doc.u64_field("id") {
+        Ok(Some(v)) => v,
+        Ok(None) => return Reply::error(400, "Bad Request", "missing 'id' (request id)"),
+        Err(e) => return Reply::error(400, "Bad Request", &format!("bad body: {e}")),
+    };
+    let pixels = match doc.f32_array("pixels") {
+        Ok(Some(p)) if !p.is_empty() => p,
+        Ok(Some(_)) => return Reply::error(400, "Bad Request", "'pixels' must be non-empty"),
+        Ok(None) => return Reply::error(400, "Bad Request", "missing 'pixels' (input image)"),
+        Err(e) => return Reply::error(400, "Bad Request", &format!("bad body: {e}")),
+    };
+    let trials = match doc.u64_field("trials") {
+        Ok(Some(t)) if (1..=MAX_TRIALS).contains(&t) => t,
+        Ok(None) => DEFAULT_TRIALS,
+        Ok(Some(t)) => {
+            return Reply::error(
+                400,
+                "Bad Request",
+                &format!("'trials' must be in 1..={MAX_TRIALS}, got {t}"),
+            )
+        }
+        Err(e) => return Reply::error(400, "Bad Request", &format!("bad body: {e}")),
+    };
+
+    // confidence 0 → fixed budget; the client id keys the trial streams
+    // (same contract as the framed wire), so duplicate in-flight ids are
+    // the client's in-band failure to own.
+    let req = InferRequest::new(id, pixels).with_budget(trials as u32, 0.0);
+    let (tx, rx) = mpsc::channel();
+    match ctx.queue.try_send(QueuedInfer { req, reply: tx }) {
+        Ok(()) => {}
+        Err(mpsc::TrySendError::Full(_)) => {
+            ctx.admission.note_shed_queue();
+            ctx.journal.record(EventKind::IngressShed, &ctx.label, "queue full");
+            drop(permit);
+            return Reply::shed(1, "queue full");
+        }
+        Err(mpsc::TrySendError::Disconnected(_)) => {
+            drop(permit);
+            return Reply::error(503, "Service Unavailable", "ingress batcher is gone");
+        }
+    }
+    ctx.metrics.requests_admitted.fetch_add(1, Ordering::Relaxed);
+    ctx.journal.record(EventKind::RequestAdmitted, &ctx.label, format!("id {id}"));
+
+    // The batcher either submits the request or answers in-band, and the
+    // backend answers every submission, so this resolves — the permit
+    // (and with it the in-flight slot) is held until then.
+    let resp = match rx.recv() {
+        Ok(r) => r,
+        Err(_) => {
+            drop(permit);
+            return Reply::error(500, "Internal Server Error", "reply channel closed");
+        }
+    };
+    drop(permit);
+
+    if let Some(err) = resp.error {
+        ctx.metrics.engine_errors.fetch_add(1, Ordering::Relaxed);
+        ctx.journal.record(EventKind::RequestFailed, &ctx.label, format!("id {id}: {err}"));
+        return Reply::json(
+            500,
+            "Internal Server Error",
+            json::obj(vec![("id", Json::Str(id.to_string())), ("error", Json::Str(err))]),
+        );
+    }
+    ctx.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+    ctx.metrics.trials_executed.fetch_add(resp.trials_used as u64, Ordering::Relaxed);
+    ctx.metrics.record_latency(t0.elapsed());
+    ctx.journal.record(
+        EventKind::RequestCompleted,
+        &ctx.label,
+        format!("id {id}, {} trials", resp.trials_used),
+    );
+
+    Reply::json(
+        200,
+        "OK",
+        json::obj(vec![
+            // Ids travel as decimal strings, like the framed wire.
+            ("id", Json::Str(resp.id.to_string())),
+            ("prediction", json::num(resp.prediction as f64)),
+            (
+                "counts",
+                Json::Arr(resp.outcome.counts.iter().map(|&c| json::num(c as f64)).collect()),
+            ),
+            ("abstentions", json::num(resp.outcome.abstentions as f64)),
+            ("trials", json::num(resp.outcome.trials as f64)),
+            ("trials_used", json::num(resp.trials_used as f64)),
+            ("latency_us", json::num(resp.latency.as_micros() as f64)),
+        ]),
+    )
+}
+
+fn metrics(ctx: &Arc<Ingress>) -> Reply {
+    let adm = ctx.admission.stats();
+    let (flushes, flushed, merged) = ctx.stats.counts();
+    Reply::json(
+        200,
+        "OK",
+        json::obj(vec![
+            (
+                "ingress",
+                json::obj(vec![
+                    ("admitted", json::num(adm.admitted as f64)),
+                    ("shed_queue", json::num(adm.shed_queue as f64)),
+                    ("shed_in_flight", json::num(adm.shed_in_flight as f64)),
+                    ("shed_rate", json::num(adm.shed_rate as f64)),
+                    ("shed_total", json::num(adm.shed_total() as f64)),
+                    ("in_flight_now", json::num(adm.in_flight_now as f64)),
+                    ("batch_flushes", json::num(flushes as f64)),
+                    ("batch_requests", json::num(flushed as f64)),
+                    ("batch_merged", json::num(merged as f64)),
+                    ("snapshot", snapshot_to_json(&ctx.metrics.snapshot())),
+                ]),
+            ),
+            ("backend", snapshot_to_json(&ctx.backend.metrics())),
+        ]),
+    )
+}
+
+fn tree(ctx: &Arc<Ingress>) -> Reply {
+    let root = MetricsTree::leaf(ctx.label.clone(), ctx.metrics.snapshot())
+        .with_children(vec![ctx.backend.metrics_tree()]);
+    let events: Vec<Json> =
+        ctx.journal.tail(JOURNAL_TAIL).iter().map(|e| e.to_json()).collect();
+    Reply::json(
+        200,
+        "OK",
+        json::obj(vec![("tree", root.to_json()), ("events", Json::Arr(events))]),
+    )
+}

@@ -1,0 +1,340 @@
+//! The HTTP/1.1 listener: accept loop, request framing, and the wiring
+//! of admission → queue → batcher → backend.
+//!
+//! Deliberately minimal, in the spirit of the paper's
+//! delete-the-periphery discipline: hand-rolled HTTP over std TCP — no
+//! chunked bodies (`Content-Length` only, capped at the wire layer's 16
+//! MiB frame limit), no TLS, no routing table beyond a four-arm match.
+//! Keep-alive is the default for HTTP/1.1 peers so a load generator can
+//! amortize its connection; one thread per connection, same as the
+//! framed-socket listener in [`crate::serve::net::server`].
+//!
+//! Request lifecycle: the connection thread parses the request,
+//! [`super::admission`] decides whether it may enter (429 + `Retry-After`
+//! otherwise), the lazy scanner pulls `id`/`pixels`/`trials` out of the
+//! body, and the request goes onto a *bounded* queue.  The
+//! [`super::batcher`] thread drains that queue, merges identical-pixel
+//! requests, and submits to the backend; the connection thread blocks on
+//! its reply channel and writes the response.  Nothing in the path can
+//! grow without bound, and every admitted request is answered — the two
+//! invariants the saturation tests pin.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Metrics;
+use crate::serve::{Backend, InferRequest, InferResponse};
+use crate::telemetry::{journal::DEFAULT_CAPACITY, Journal};
+use crate::util::json;
+
+use super::admission::Admission;
+use super::batcher::{self, BatcherStats};
+use super::routes::{self, Reply};
+use super::HttpConfig;
+
+/// Request line / header line length cap.
+const MAX_LINE_BYTES: usize = 8 * 1024;
+
+/// Header count cap.
+const MAX_HEADERS: usize = 64;
+
+/// Body cap — the same 16 MiB the framed wire layer enforces, so a
+/// request that fits one ingress fits the other.
+pub const MAX_BODY_BYTES: usize = json::MAX_FRAME_BYTES;
+
+/// A connection must deliver each request (line + headers + body)
+/// within this window; slow-loris peers get cut, idle keep-alive
+/// connections past it are recycled.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Journal events returned by `GET /tree`, matching the wire listener.
+pub(crate) const JOURNAL_TAIL: usize = 32;
+
+/// One admitted request in flight between a connection thread and the
+/// batcher.
+pub struct QueuedInfer {
+    pub req: InferRequest,
+    pub reply: mpsc::Sender<InferResponse>,
+}
+
+/// Shared per-listener state handed to every connection thread.
+pub(crate) struct Ingress {
+    pub backend: Arc<dyn Backend>,
+    pub admission: Arc<Admission>,
+    pub queue: mpsc::SyncSender<QueuedInfer>,
+    /// The ingress's own telemetry node (admitted/completed/latency).
+    pub metrics: Arc<Metrics>,
+    pub stats: Arc<BatcherStats>,
+    pub journal: Arc<Journal>,
+    /// Telemetry label, `http:<bound-addr>`.
+    pub label: String,
+}
+
+/// Handle on a running HTTP listener.  Dropping it stops the accept
+/// loop; connection threads wind down as their peers disconnect.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+/// Bind `cfg.addr` and serve `backend` behind admission control.
+pub fn serve_http(backend: Box<dyn Backend>, cfg: &HttpConfig) -> Result<HttpServer> {
+    let backend: Arc<dyn Backend> = Arc::from(backend);
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding http ingress on {}", cfg.addr))?;
+    let addr = listener.local_addr().context("resolving http ingress address")?;
+    listener.set_nonblocking(true).context("setting http listener non-blocking")?;
+
+    // Share the backend's journal when it has one so ingress events
+    // interleave with backend events in one stream.
+    let journal = backend.journal().unwrap_or_else(|| Journal::new(DEFAULT_CAPACITY));
+    let admission = Admission::new(cfg.in_flight, cfg.tenant_rate, cfg.tenant_burst);
+    let (queue_tx, queue_rx) = mpsc::sync_channel(cfg.queue_depth.max(1));
+    let stats = Arc::new(BatcherStats::default());
+    let _batcher = batcher::spawn(queue_rx, backend.clone(), journal.clone(), stats.clone());
+
+    let ctx = Arc::new(Ingress {
+        backend,
+        admission,
+        queue: queue_tx,
+        metrics: Metrics::new(),
+        stats,
+        journal,
+        label: format!("http:{addr}"),
+    });
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let stop = stop.clone();
+        thread::Builder::new()
+            .name("raca-http-accept".into())
+            .spawn(move || loop {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let ctx = ctx.clone();
+                        let _ = thread::Builder::new()
+                            .name("raca-http-conn".into())
+                            .spawn(move || connection(stream, ctx));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => {
+                        log::warn!("http accept on {addr} failed: {e}");
+                        thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            })
+            .context("spawning http accept thread")?
+    };
+
+    Ok(HttpServer { addr, stop, accept: Some(accept) })
+}
+
+impl HttpServer {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the listener stops (i.e. forever in the CLI
+    /// foreground path, until ctrl-c kills the process).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection request loop
+// ---------------------------------------------------------------------------
+
+struct RawRequest {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    content_length: usize,
+    tenant: Option<String>,
+    expect_continue: bool,
+}
+
+fn connection(stream: TcpStream, ctx: Arc<Ingress>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let mut read = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut write = stream;
+
+    loop {
+        let raw = match read_request(&mut read) {
+            Ok(Some(r)) => r,
+            // Clean close between requests.
+            Ok(None) => return,
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                let _ = respond(&mut write, &Reply::error(400, "Bad Request", &e.to_string()), false);
+                return;
+            }
+            // Timeout / reset: nothing useful to say on a broken pipe.
+            Err(_) => return,
+        };
+
+        if raw.content_length > MAX_BODY_BYTES {
+            // Refuse before reading: we will not allocate for it, and
+            // without draining the body the connection can't be reused.
+            let msg = format!(
+                "body of {} bytes exceeds the {MAX_BODY_BYTES}-byte cap",
+                raw.content_length
+            );
+            let _ = respond(&mut write, &Reply::error(413, "Payload Too Large", &msg), false);
+            return;
+        }
+        if raw.expect_continue && raw.content_length > 0 {
+            // Clients like curl wait for this before sending the body.
+            if write
+                .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                .and_then(|_| write.flush())
+                .is_err()
+            {
+                return;
+            }
+        }
+        let mut body = vec![0u8; raw.content_length];
+        if read.read_exact(&mut body).is_err() {
+            return;
+        }
+
+        let reply = routes::dispatch(&raw.method, &raw.path, raw.tenant.as_deref(), &body, &ctx);
+        if respond(&mut write, &reply, raw.keep_alive).is_err() || !raw.keep_alive {
+            return;
+        }
+    }
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Read one CRLF-terminated line, bounded.  `Ok(None)` on EOF before
+/// any byte (clean close); `InvalidData` on oversized or truncated
+/// lines.
+fn read_line_bounded(r: &mut BufReader<TcpStream>) -> io::Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = r.by_ref().take(MAX_LINE_BYTES as u64 + 1).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.len() > MAX_LINE_BYTES {
+        return Err(bad("header line too long"));
+    }
+    if buf.last() != Some(&b'\n') {
+        return Err(bad("connection closed mid-line"));
+    }
+    while matches!(buf.last(), Some(b'\n' | b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| bad("header line is not UTF-8"))
+}
+
+fn read_request(r: &mut BufReader<TcpStream>) -> io::Result<Option<RawRequest>> {
+    // Tolerate one stray CRLF before the request line (RFC 9112 §2.2).
+    let mut line = match read_line_bounded(r)? {
+        Some(l) => l,
+        None => return Ok(None),
+    };
+    if line.is_empty() {
+        line = match read_line_bounded(r)? {
+            Some(l) => l,
+            None => return Ok(None),
+        };
+    }
+
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if v.starts_with("HTTP/1.") => (m, p, v),
+        _ => return Err(bad("malformed request line")),
+    };
+    let mut req = RawRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        // HTTP/1.1 defaults to keep-alive, 1.0 to close.
+        keep_alive: version != "HTTP/1.0",
+        content_length: 0,
+        tenant: None,
+        expect_continue: false,
+    };
+
+    for n in 0.. {
+        if n > MAX_HEADERS {
+            return Err(bad("too many headers"));
+        }
+        let h = read_line_bounded(r)?.ok_or_else(|| bad("connection closed inside headers"))?;
+        if h.is_empty() {
+            break;
+        }
+        let (name, value) = h.split_once(':').ok_or_else(|| bad("malformed header"))?;
+        let value = value.trim();
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => {
+                req.content_length =
+                    value.parse().map_err(|_| bad("content-length is not an integer"))?;
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.split(',').any(|t| t.trim() == "close") {
+                    req.keep_alive = false;
+                } else if v.split(',').any(|t| t.trim() == "keep-alive") {
+                    req.keep_alive = true;
+                }
+            }
+            "x-raca-tenant" => req.tenant = Some(value.to_string()),
+            "expect" => req.expect_continue = value.eq_ignore_ascii_case("100-continue"),
+            "transfer-encoding" => {
+                return Err(bad("transfer-encoding is not supported; send content-length"));
+            }
+            _ => {}
+        }
+    }
+    Ok(Some(req))
+}
+
+fn respond(w: &mut TcpStream, reply: &Reply, keep: bool) -> io::Result<()> {
+    use std::fmt::Write as _;
+    let mut head = String::with_capacity(160);
+    let _ = write!(
+        head,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        reply.status,
+        reply.reason,
+        reply.body.len(),
+        if keep { "keep-alive" } else { "close" },
+    );
+    for (k, v) in &reply.headers {
+        let _ = write!(head, "{k}: {v}\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(reply.body.as_bytes())?;
+    w.flush()
+}

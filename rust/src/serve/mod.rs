@@ -43,6 +43,7 @@
 //! [`ReplicatedFleetBackend`], [`PipelinedFleetBackend`],
 //! [`plan::RouterBackend`]) are constructed only by [`plan`].
 
+pub mod http;
 pub mod net;
 pub mod pipelined;
 pub mod plan;
@@ -51,6 +52,7 @@ pub mod replicated;
 pub mod request;
 pub mod single;
 
+pub use http::{serve_http, HttpConfig, HttpServer};
 pub use net::{NetServer, RemoteBackend};
 pub use pipelined::{PipelineOptions, PipelinedFleetBackend};
 pub use plan::{build, BuildOptions, DeployPlan, EngineSel, PlanNode, RouterBackend, Topology};
@@ -158,6 +160,34 @@ pub trait Backend: Send + Sync {
     fn shutdown(self: Box<Self>);
 }
 
+/// One backend behind several front doors: wrap a shared `Arc` so each
+/// listener (`NetServer`, `HttpServer`) gets its own `Box<dyn Backend>`
+/// over the *same* session — `raca serve --listen ... --http ...` serves
+/// both protocols from one deployment tree, with one metrics/journal
+/// stream.  `shutdown` drops only this handle; the underlying backend
+/// tears down when the last holder lets go.
+pub struct SharedBackend(pub std::sync::Arc<dyn Backend>);
+
+impl Backend for SharedBackend {
+    fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+        self.0.submit_to(req, reply)
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        self.0.metrics()
+    }
+
+    fn metrics_tree(&self) -> MetricsTree {
+        self.0.metrics_tree()
+    }
+
+    fn journal(&self) -> Option<std::sync::Arc<Journal>> {
+        self.0.journal()
+    }
+
+    fn shutdown(self: Box<Self>) {}
+}
+
 /// Legacy deployment-shape spellings, kept as parse-only convenience:
 /// each maps onto a canonical [`Topology`] tree
 /// ([`BackendKind::to_topology`]); nothing constructs backends from a
@@ -238,6 +268,12 @@ pub struct ServeConfig {
     /// `raca serve --listen <addr>` / `"serve": {"listen": "..."}` —
     /// the compiled topology goes behind a [`net::NetServer`] socket.
     pub listen: Option<String>,
+    /// Host the HTTP/JSON ingress (`raca serve --http <addr>` /
+    /// `"serve": {"http": {...}}`) — the compiled topology goes behind a
+    /// [`http::HttpServer`] with admission control and continuous
+    /// batching.  Composable with `listen`: both front doors can share
+    /// one backend.
+    pub http: Option<HttpConfig>,
     pub seed: u64,
 }
 
@@ -253,6 +289,7 @@ impl Default for ServeConfig {
             trial_block: crate::engine::DEFAULT_TRIAL_BLOCK,
             probe_rate: 0.0,
             listen: None,
+            http: None,
             seed: 0x5EB0E,
         }
     }

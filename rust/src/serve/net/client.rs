@@ -30,8 +30,8 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::io::BufReader;
-use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -45,17 +45,35 @@ use crate::util::json;
 use super::super::{Backend, InferRequest, InferResponse, RequestId};
 use super::wire::{self, WireMsg, PROTOCOL_VERSION};
 
+/// TCP connect budget for [`RemoteBackend::connect`].
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How long the dialer waits for the listener's hello.  A TCP endpoint
+/// that accepts but never speaks the protocol (a web server, a silent
+/// port) must fail the connect, not hang it.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(3);
+
+/// Socket write budget (kept for the session's whole life): a wedged
+/// peer with a full receive window cannot hang `submit`/telemetry
+/// inside the write lock forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
 /// How long telemetry calls wait for the remote answer before falling
 /// back to cached / locally tracked numbers.  Only reached on a *live*
-/// but slow session — a known-dead one fails fast.
-const METRICS_TIMEOUT: Duration = Duration::from_secs(10);
+/// but slow session — a known-dead one fails fast — so it is short:
+/// telemetry is advisory and `metrics()` is called from render loops.
+const METRICS_TIMEOUT: Duration = Duration::from_secs(2);
 
 /// What one metrics exchange yields: the peer's tree plus the tail of
 /// its journal (empty when the peer is v1 and answered flat metrics).
 type TreeReply = (MetricsTree, Vec<Event>);
 
 type Pending = Arc<Mutex<HashMap<RequestId, mpsc::Sender<InferResponse>>>>;
-type MetricsWaiters = Arc<Mutex<VecDeque<mpsc::Sender<TreeReply>>>>;
+/// FIFO of outstanding metrics requests.  Each waiter carries a unique
+/// token so a caller that *times out* can remove its own entry — a
+/// stale waiter left in the queue would consume the next answer and
+/// misalign every exchange after it.
+type MetricsWaiters = Arc<Mutex<VecDeque<(u64, mpsc::Sender<TreeReply>)>>>;
 type TreeCache = Arc<Mutex<Option<TreeReply>>>;
 type JournalSlot = Arc<Mutex<Option<Arc<Journal>>>>;
 
@@ -65,6 +83,8 @@ pub struct RemoteBackend {
     write: Mutex<TcpStream>,
     pending: Pending,
     waiters: MetricsWaiters,
+    /// Waiter-token source (see [`MetricsWaiters`]).
+    waiter_seq: AtomicU64,
     /// Local admission counters — the fallback when the peer has never
     /// answered a metrics request.
     local: Arc<Metrics>,
@@ -81,18 +101,51 @@ pub struct RemoteBackend {
 }
 
 impl RemoteBackend {
-    /// Dial `addr` and complete the protocol handshake.
+    /// Dial `addr` and complete the protocol handshake.  Bounded end to
+    /// end: [`CONNECT_TIMEOUT`] for TCP establishment and
+    /// [`HANDSHAKE_TIMEOUT`] for the hello, so dialing a non-raca
+    /// endpoint (or a black-holed route) errors instead of blocking the
+    /// deployment build indefinitely.
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting to remote backend {addr}"))?;
+        let resolved: Vec<_> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving remote backend address {addr}"))?
+            .collect();
+        ensure!(!resolved.is_empty(), "remote backend address {addr} resolved to nothing");
+        let mut stream = None;
+        let mut last_err = None;
+        for sa in &resolved {
+            match TcpStream::connect_timeout(sa, CONNECT_TIMEOUT) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let stream = match stream {
+            Some(s) => s,
+            None => {
+                return Err(last_err.expect("resolved is non-empty"))
+                    .with_context(|| format!("connecting to remote backend {addr}"))
+            }
+        };
         stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+        // Deadline for the hello; lifted once the session is up (the
+        // timeout is a property of the socket, shared with the clone).
+        stream
+            .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+            .context("setting handshake read timeout")?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
         let mut read = BufReader::new(stream.try_clone().context("cloning stream")?);
         let mut wstream = stream;
 
         // The listener speaks first; refuse anything that is not a
         // version-compatible raca hello.
         let j = json::read_frame(&mut read)
-            .with_context(|| format!("reading hello from {addr}"))?
+            .with_context(|| {
+                format!("reading hello from {addr} (is it a raca listener? gave it {HANDSHAKE_TIMEOUT:?})")
+            })?
             .ok_or_else(|| anyhow!("{addr} closed the connection during the handshake"))?;
         match wire::decode(&j).with_context(|| format!("bad hello from {addr}"))? {
             WireMsg::Hello { version } => {
@@ -103,6 +156,10 @@ impl RemoteBackend {
         }
         json::write_frame(&mut wstream, &wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION }))
             .with_context(|| format!("answering hello to {addr}"))?;
+        // Sessions are long-lived and idle reads are normal: clear the
+        // handshake deadline so the reader thread never sees a spurious
+        // timeout and drops a healthy session.
+        wstream.set_read_timeout(None).context("clearing handshake read timeout")?;
 
         let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
         let waiters: MetricsWaiters = Arc::new(Mutex::new(VecDeque::new()));
@@ -128,6 +185,7 @@ impl RemoteBackend {
             write: Mutex::new(wstream),
             pending,
             waiters,
+            waiter_seq: AtomicU64::new(0),
             local: Metrics::new(),
             dead,
             last_tree,
@@ -174,6 +232,7 @@ impl RemoteBackend {
         if self.is_dead() {
             return None;
         }
+        let token = self.waiter_seq.fetch_add(1, Relaxed);
         let (tx, rx) = mpsc::channel();
         let sent = {
             // Holding the waiter lock across the write keeps the waiter
@@ -185,7 +244,7 @@ impl RemoteBackend {
                     .is_ok()
             };
             if ok {
-                ws.push_back(tx);
+                ws.push_back((token, tx));
                 // Reader may have died (and cleared the queue) before the
                 // push — reclaim the waiter ourselves in that case.
                 if self.is_dead() {
@@ -197,20 +256,31 @@ impl RemoteBackend {
         };
         // The reader clears the waiter queue when it exits, so a session
         // dying mid-wait drops our sender and recv fails immediately —
-        // no 10 s stall, no leaked waiter.
+        // no timeout-long stall, no leaked waiter.
         if !sent {
             return None;
         }
         match rx.recv_timeout(METRICS_TIMEOUT) {
             Ok(reply) => Some(reply),
             Err(_) => {
-                if !self.is_dead() {
-                    log::warn!(
-                        "{}: no metrics answer in {METRICS_TIMEOUT:?}; using cached/local",
-                        self.addr
-                    );
+                // Withdraw from the queue: leaving the stale waiter
+                // behind would let it swallow the *next* answer and feed
+                // every later caller an off-by-one reply.
+                self.waiters.lock().unwrap().retain(|(t, _)| *t != token);
+                if self.is_dead() {
+                    return None;
                 }
-                None
+                // The answer may have raced the retain; use it if so.
+                match rx.try_recv() {
+                    Ok(reply) => Some(reply),
+                    Err(_) => {
+                        log::warn!(
+                            "{}: no metrics answer in {METRICS_TIMEOUT:?}; using cached/local",
+                            self.addr
+                        );
+                        None
+                    }
+                }
             }
         }
     }
@@ -359,14 +429,14 @@ fn reader_loop(mut read: BufReader<TcpStream>, ctx: ReaderCtx) {
             Ok(WireMsg::Metrics(m)) => {
                 let reply = (MetricsTree::leaf("peer", m), Vec::new());
                 *last_tree.lock().unwrap() = Some(reply.clone());
-                if let Some(tx) = waiters.lock().unwrap().pop_front() {
+                if let Some((_, tx)) = waiters.lock().unwrap().pop_front() {
                     let _ = tx.send(reply);
                 }
             }
             Ok(WireMsg::MetricsTree { tree, events }) => {
                 let reply = (tree, events);
                 *last_tree.lock().unwrap() = Some(reply.clone());
-                if let Some(tx) = waiters.lock().unwrap().pop_front() {
+                if let Some((_, tx)) = waiters.lock().unwrap().pop_front() {
                     let _ = tx.send(reply);
                 }
             }

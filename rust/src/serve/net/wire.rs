@@ -39,7 +39,11 @@
 //!
 //! History: v1 — initial protocol; v2 (PR-6) — `metrics_req` gained the
 //! `tree` flag, new `metrics_tree` reply carrying a recursive
-//! [`MetricsTree`] plus recent journal [`Event`]s.
+//! [`MetricsTree`] plus recent journal [`Event`]s; v3 (PR-7) — new
+//! journal event kinds (`ingress_shed`, `batch_formed`) may ride in
+//! `metrics_tree` frames, and the decoder now *skips* events it cannot
+//! decode instead of failing the whole frame, so future kind additions
+//! are non-breaking.
 
 use std::time::Duration;
 
@@ -51,7 +55,7 @@ use crate::util::json::{obj, Json};
 use super::super::{InferRequest, InferResponse, RequestId};
 
 /// Bump on any frame-shape change; see the module docs for the rules.
-pub const PROTOCOL_VERSION: u32 = 2;
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Oldest peer revision this build still understands (see the breaking-
 /// change rule in the module docs).
@@ -268,18 +272,13 @@ pub fn decode(j: &Json) -> Result<WireMsg, WireError> {
                     MetricsTree::from_json(v)
                         .map_err(|e| malformed("metrics_tree", e.to_string()))
                 })?;
+            // Events are advisory telemetry: skip what we can't decode
+            // (e.g. a kind added after this build shipped) rather than
+            // refusing the whole frame.  See the v3 history note.
             let events = j
                 .get("events")
                 .and_then(Json::as_arr)
-                .map(|arr| {
-                    arr.iter()
-                        .map(|e| {
-                            Event::from_json(e)
-                                .map_err(|e| malformed("metrics_tree", e.to_string()))
-                        })
-                        .collect::<Result<Vec<_>, _>>()
-                })
-                .transpose()?
+                .map(|arr| arr.iter().filter_map(|e| Event::from_json(e).ok()).collect())
                 .unwrap_or_default();
             Ok(WireMsg::MetricsTree { tree, events })
         }
@@ -578,5 +577,48 @@ mod tests {
         // Missing subtree is an error with the frame name in it.
         let e = decode(&Json::parse(r#"{"t":"metrics_tree"}"#).unwrap()).unwrap_err();
         assert!(format!("{e}").contains("metrics_tree"), "{e}");
+    }
+
+    #[test]
+    fn metrics_tree_skips_undecodable_events_instead_of_failing() {
+        use crate::telemetry::{EventKind, Journal};
+
+        // A frame from a hypothetical v4 peer: one event kind we know,
+        // one we don't, one that isn't even an object.  The tree and the
+        // decodable event must survive.
+        let journal = Journal::new(8);
+        journal.record(EventKind::IngressShed, "http:1.2.3.4:80", "queue full");
+        let known = journal.tail(1).pop().unwrap().to_json();
+        let snap = MetricsSnapshot {
+            requests_admitted: 1,
+            requests_completed: 1,
+            trials_executed: 32,
+            batches_executed: 1,
+            rows_packed: 32,
+            trials_saved: 0,
+            engine_errors: 0,
+            latency_p50_us: 100,
+            latency_p99_us: 200,
+        };
+        let frame = obj(vec![
+            ("t", Json::Str("metrics_tree".into())),
+            ("tree", MetricsTree::leaf("die", snap).to_json()),
+            (
+                "events",
+                Json::Arr(vec![
+                    known,
+                    Json::parse(r#"{"seq":9,"t_us":1,"kind":"from_the_future","node":"x","detail":""}"#)
+                        .unwrap(),
+                    Json::Num(3.0),
+                ]),
+            ),
+        ]);
+        match decode(&frame).unwrap() {
+            WireMsg::MetricsTree { events, .. } => {
+                assert_eq!(events.len(), 1);
+                assert_eq!(events[0].kind, EventKind::IngressShed);
+            }
+            other => panic!("decoded {other:?}"),
+        }
     }
 }

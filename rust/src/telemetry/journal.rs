@@ -36,6 +36,12 @@ pub enum EventKind {
     SessionConnect,
     /// A wire session ended (either side; detail says why).
     SessionDrop,
+    /// The HTTP ingress refused a request (detail says which limit:
+    /// queue, in-flight budget, or tenant rate).
+    IngressShed,
+    /// The HTTP continuous batcher flushed a merged batch to the
+    /// backend (detail says how many requests formed how many groups).
+    BatchFormed,
 }
 
 impl EventKind {
@@ -50,6 +56,8 @@ impl EventKind {
             EventKind::HealthRecalibrate => "health_recalibrate",
             EventKind::SessionConnect => "session_connect",
             EventKind::SessionDrop => "session_drop",
+            EventKind::IngressShed => "ingress_shed",
+            EventKind::BatchFormed => "batch_formed",
         }
     }
 
@@ -64,6 +72,8 @@ impl EventKind {
             "health_recalibrate" => EventKind::HealthRecalibrate,
             "session_connect" => EventKind::SessionConnect,
             "session_drop" => EventKind::SessionDrop,
+            "ingress_shed" => EventKind::IngressShed,
+            "batch_formed" => EventKind::BatchFormed,
             _ => return None,
         })
     }

@@ -4,8 +4,11 @@
 //! manifest/weights metadata this repo reads — u64 request ids travel as
 //! decimal strings on the wire, see [`crate::serve::net::wire`]).  Also
 //! home of the length-prefixed frame reader/writer the serving wire layer
-//! streams JSON values over ([`read_frame`]/[`write_frame`]).
-//! Not performance-critical.
+//! streams JSON values over ([`read_frame`]/[`write_frame`]), and of
+//! [`LazyObject`] — a single-pass field extractor the HTTP ingress uses
+//! to pull `id`/`pixels`/`trials` out of a request body without
+//! materializing the full tree.  The tree parser is not
+//! performance-critical; the lazy scanner is on the ingress hot path.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -435,6 +438,253 @@ pub fn arr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
 
+// ---------------------------------------------------------------------------
+// Lazy field extraction (the HTTP ingress hot path)
+// ---------------------------------------------------------------------------
+
+/// Single-pass field extractor over a top-level JSON object.
+///
+/// `Json::parse` builds a `BTreeMap`/`Vec` tree — fine for manifests,
+/// wasteful for an ingress that only needs three fields out of a body
+/// whose bulk is one large pixel array.  `LazyObject` instead scans the
+/// raw bytes: values for keys the caller never asks about are *skipped*
+/// (escape- and nesting-aware, no allocation), and the one array we do
+/// want is decoded straight into a `Vec<f32>` without an intermediate
+/// `Json::Arr` of boxed `f64`s.
+///
+/// Laziness has a deliberate blind spot: bytes *after* the requested
+/// key's value are never inspected, so trailing garbage in an otherwise
+/// well-formed prefix goes unnoticed.  Callers validate the fields they
+/// use, which is exactly the admission-control posture the ingress wants
+/// — spend parse effort proportional to what the request is worth.
+pub struct LazyObject<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> LazyObject<'a> {
+    /// Wrap a byte slice expected to hold a JSON object.  Nothing is
+    /// scanned until a field accessor runs.
+    pub fn new(b: &'a [u8]) -> Self {
+        LazyObject { b }
+    }
+
+    /// Raw byte span of the value for top-level `key` (first
+    /// occurrence), or `Ok(None)` if the key is absent.
+    pub fn raw(&self, key: &str) -> Result<Option<&'a [u8]>, JsonError> {
+        let mut s = Scan { b: self.b, i: 0 };
+        s.skip_ws();
+        s.eat(b'{')?;
+        s.skip_ws();
+        if s.peek() == Some(b'}') {
+            return Ok(None);
+        }
+        loop {
+            s.skip_ws();
+            let (kb, escaped) = s.string_span()?;
+            s.skip_ws();
+            s.eat(b':')?;
+            s.skip_ws();
+            // Escaped keys can't byte-compare; our protocol keys are
+            // plain ASCII, so an escaped key simply never matches.
+            if !escaped && kb == key.as_bytes() {
+                let start = s.i;
+                s.skip_value()?;
+                return Ok(Some(&s.b[start..s.i]));
+            }
+            s.skip_value()?;
+            s.skip_ws();
+            match s.peek() {
+                Some(b',') => s.i += 1,
+                Some(b'}') => return Ok(None),
+                _ => return Err(s.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    /// `u64` field that accepts both a bare integer and the wire
+    /// layer's decimal-string form (`"id": "42"`), mirroring
+    /// `serve::net::wire`'s id discipline.
+    pub fn u64_field(&self, key: &str) -> Result<Option<u64>, JsonError> {
+        let Some(raw) = self.raw(key)? else { return Ok(None) };
+        let txt = if raw.len() >= 2 && raw[0] == b'"' && raw[raw.len() - 1] == b'"' {
+            &raw[1..raw.len() - 1]
+        } else {
+            raw
+        };
+        std::str::from_utf8(txt)
+            .ok()
+            .and_then(|t| t.trim().parse::<u64>().ok())
+            .map(Some)
+            .ok_or_else(|| JsonError {
+                at: 0,
+                msg: format!("field '{key}' is not a non-negative integer"),
+            })
+    }
+
+    /// Unescaped string field.
+    pub fn str_field(&self, key: &str) -> Result<Option<String>, JsonError> {
+        let Some(raw) = self.raw(key)? else { return Ok(None) };
+        let mut p = Parser { b: raw, i: 0 };
+        p.string()
+            .map(Some)
+            .map_err(|_| JsonError { at: 0, msg: format!("field '{key}' is not a string") })
+    }
+
+    /// Number array decoded straight into `Vec<f32>` — the pixel fast
+    /// path.  Each element round-trips through `str::parse::<f32>`, so a
+    /// client that prints `f32`s with Rust's shortest representation
+    /// gets bit-identical values back (the parity tests rely on this).
+    pub fn f32_array(&self, key: &str) -> Result<Option<Vec<f32>>, JsonError> {
+        let Some(raw) = self.raw(key)? else { return Ok(None) };
+        let mut s = Scan { b: raw, i: 0 };
+        s.skip_ws();
+        s.eat(b'[')?;
+        let mut out = Vec::new();
+        s.skip_ws();
+        if s.peek() == Some(b']') {
+            return Ok(Some(out));
+        }
+        loop {
+            s.skip_ws();
+            let start = s.i;
+            if s.peek() == Some(b'-') {
+                s.i += 1;
+            }
+            while let Some(c) = s.peek() {
+                if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                    s.i += 1;
+                } else {
+                    break;
+                }
+            }
+            let v = std::str::from_utf8(&s.b[start..s.i])
+                .ok()
+                .and_then(|t| t.parse::<f32>().ok())
+                .ok_or_else(|| JsonError {
+                    at: start,
+                    msg: format!("field '{key}' has a non-numeric element"),
+                })?;
+            out.push(v);
+            s.skip_ws();
+            match s.peek() {
+                Some(b',') => s.i += 1,
+                Some(b']') => return Ok(Some(out)),
+                _ => return Err(s.err("expected ',' or ']'")),
+            }
+        }
+    }
+}
+
+/// Byte cursor that *skips* values instead of building them — the
+/// structural half of [`Parser`] without the allocation half.
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { at: self.i, msg: msg.to_string() }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    /// Advance past a string literal; returns the span between the
+    /// quotes (borrowing the underlying buffer, not the cursor) and
+    /// whether it contained any escape.
+    fn string_span(&mut self) -> Result<(&'a [u8], bool), JsonError> {
+        self.eat(b'"')?;
+        let start = self.i;
+        let mut escaped = false;
+        loop {
+            match self.peek().ok_or_else(|| self.err("unterminated string"))? {
+                b'"' => {
+                    let span = &self.b[start..self.i];
+                    self.i += 1;
+                    return Ok((span, escaped));
+                }
+                b'\\' => {
+                    escaped = true;
+                    self.i += 1;
+                    if self.peek().is_none() {
+                        return Err(self.err("bad escape"));
+                    }
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Skip one complete JSON value, nesting-aware, without building it.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        let mut depth = 0usize;
+        loop {
+            self.skip_ws();
+            match self.peek().ok_or_else(|| self.err("unexpected end of value"))? {
+                b'{' | b'[' => {
+                    depth += 1;
+                    self.i += 1;
+                }
+                b'}' | b']' => {
+                    if depth == 0 {
+                        return Err(self.err("unexpected close bracket"));
+                    }
+                    depth -= 1;
+                    self.i += 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                b'"' => {
+                    self.string_span()?;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                b',' | b':' => {
+                    if depth == 0 {
+                        return Err(self.err("unexpected separator"));
+                    }
+                    self.i += 1;
+                }
+                _ => {
+                    // Literal / number token; every structural byte is
+                    // handled above, so this consumes at least one byte.
+                    while let Some(c) = self.peek() {
+                        if matches!(c, b',' | b':' | b'}' | b']' | b'{' | b'[' | b'"')
+                            || c.is_ascii_whitespace()
+                        {
+                            break;
+                        }
+                        self.i += 1;
+                    }
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -489,6 +739,60 @@ mod tests {
         assert_eq!(read_frame(&mut r).unwrap(), Some(b));
         // Clean EOF at the frame boundary.
         assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn lazy_object_extracts_fields_without_the_tree() {
+        let body = br#"{"meta": {"a": [1, {"b": "}]"}]}, "id": "42", "pixels": [0.5, -1.25, 3e2], "trials": 16, "tag": "x\"y"}"#;
+        let doc = LazyObject::new(body);
+        assert_eq!(doc.u64_field("id").unwrap(), Some(42));
+        assert_eq!(doc.u64_field("trials").unwrap(), Some(16));
+        assert_eq!(doc.f32_array("pixels").unwrap(), Some(vec![0.5, -1.25, 300.0]));
+        assert_eq!(doc.str_field("tag").unwrap(), Some("x\"y".to_string()));
+        assert_eq!(doc.u64_field("missing").unwrap(), None);
+        assert_eq!(doc.raw("meta").unwrap(), Some(&br#"{"a": [1, {"b": "}]"}]}"#[..]));
+    }
+
+    #[test]
+    fn lazy_object_agrees_with_the_full_parser() {
+        let body = r#"{"id": 7, "pixels": [0, 0.1176470588235294, 1], "trials": 3}"#;
+        let full = Json::parse(body).unwrap();
+        let doc = LazyObject::new(body.as_bytes());
+        assert_eq!(doc.u64_field("id").unwrap(), Some(full.get("id").unwrap().as_f64().unwrap() as u64));
+        let lazy_px = doc.f32_array("pixels").unwrap().unwrap();
+        let full_px: Vec<f32> =
+            full.get("pixels").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        assert_eq!(lazy_px, full_px);
+    }
+
+    #[test]
+    fn lazy_object_f32_round_trips_shortest_repr() {
+        // The parity tests depend on print → parse being the identity
+        // for f32: verify over a spread of awkward values.
+        for v in [0.0f32, 1.0, -0.25, 1.0 / 17.0, 13.0 / 17.0, f32::MIN_POSITIVE, 3.4e38] {
+            let body = format!(r#"{{"pixels": [{v}]}}"#);
+            let got = LazyObject::new(body.as_bytes()).f32_array("pixels").unwrap().unwrap();
+            assert_eq!(got[0].to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn lazy_object_rejects_malformed_bodies() {
+        for bad in [
+            &b"not json"[..],
+            b"[1,2,3]",
+            b"{\"id\": }",
+            b"{\"id\" 4}",
+            b"{\"pixels\": [1,]}",
+            b"{\"id\": \"x\"}",
+            b"{\"pixels\": [\"a\"]}",
+            b"{\"id\": 4",
+        ] {
+            let doc = LazyObject::new(bad);
+            let id = doc.u64_field("id");
+            let px = doc.f32_array("pixels");
+            assert!(id.is_err() || px.is_err(), "{:?}", String::from_utf8_lossy(bad));
+        }
     }
 
     #[test]

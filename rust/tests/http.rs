@@ -1,0 +1,444 @@
+//! HTTP ingress integration: protocol conformance of the hand-rolled
+//! HTTP/1.1 listener, bit-parity of `POST /v1/infer` against a local
+//! `die` backend, admission control under saturation (429 + Retry-After,
+//! never a hang, never a dropped admitted request), per-tenant rate
+//! limits, and the `/metrics` + `/tree` telemetry exports.
+//!
+//! The client half is deliberately hand-rolled too — raw std TCP with
+//! explicit request framing — so the tests exercise the wire bytes the
+//! server actually parses, not a shared helper's idea of HTTP.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use raca::dataset::synth;
+use raca::engine::{NativeEngine, TrialParams};
+use raca::nn::{ModelSpec, TrainConfig, Weights};
+use raca::serve::{
+    build, trial_stream_base, BuildOptions, HttpConfig, HttpServer, Topology,
+};
+use raca::util::json::Json;
+
+/// Small trained net shared across tests.
+fn trained() -> Weights {
+    let ds = synth::generate(160, 0x7A);
+    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0x7B, minibatch: 1 };
+    raca::nn::train(&ds, ModelSpec::new(vec![784, 20, 12, 10]), &cfg)
+}
+
+fn image(i: u64) -> Vec<f32> {
+    (0..784).map(|j| ((j as u64 * 7 + i * 131) % 17) as f32 / 17.0).collect()
+}
+
+/// A `die` topology behind an HTTP ingress on an ephemeral port.
+fn http_die(w: &Weights, seed: u64, cfg_mod: impl FnOnce(&mut HttpConfig)) -> HttpServer {
+    let backend = build(
+        &Topology::parse("die").unwrap(),
+        w,
+        &BuildOptions { seed, ..Default::default() },
+    )
+    .unwrap();
+    let mut cfg = HttpConfig::new("127.0.0.1:0");
+    cfg_mod(&mut cfg);
+    raca::serve::serve_http(backend, &cfg).unwrap()
+}
+
+/// `/v1/infer` body for `(id, pixels, trials)`.  Pixels are formatted
+/// with `{}` — Rust's shortest-round-trip repr — so the server's
+/// `str::parse::<f32>` recovers the exact bits.
+fn infer_body(id: u64, pixels: &[f32], trials: u32) -> String {
+    let px: Vec<String> = pixels.iter().map(|p| format!("{p}")).collect();
+    format!(r#"{{"id": {id}, "pixels": [{}], "trials": {trials}}}"#, px.join(", "))
+}
+
+struct Resp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Resp {
+    fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(&self.body).unwrap_or_else(|e| panic!("bad body {:?}: {e}", self.body))
+    }
+}
+
+/// One keep-alive client connection.
+struct Client {
+    read: BufReader<TcpStream>,
+    write: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(std::time::Duration::from_secs(60))).unwrap();
+        Client { read: BufReader::new(s.try_clone().unwrap()), write: s }
+    }
+
+    /// Send one request and read its response (keep-alive framing via
+    /// Content-Length, which the server always sends).
+    fn request(&mut self, method: &str, path: &str, headers: &[(&str, &str)], body: &str) -> Resp {
+        let mut req = format!("{method} {path} HTTP/1.1\r\nHost: test\r\n");
+        for (k, v) in headers {
+            req.push_str(&format!("{k}: {v}\r\n"));
+        }
+        req.push_str(&format!("Content-Length: {}\r\n\r\n{body}", body.len()));
+        self.write.write_all(req.as_bytes()).unwrap();
+        self.write.flush().unwrap();
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Resp {
+        let mut line = String::new();
+        self.read.read_line(&mut line).unwrap();
+        let mut parts = line.split_whitespace();
+        assert_eq!(parts.next(), Some("HTTP/1.1"), "status line: {line:?}");
+        let status: u16 = parts.next().expect("status code").parse().unwrap();
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            self.read.read_line(&mut h).unwrap();
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let (k, v) = h.split_once(':').expect("header line");
+            let (k, v) = (k.trim().to_ascii_lowercase(), v.trim().to_string());
+            if k == "content-length" {
+                content_length = v.parse().unwrap();
+            }
+            headers.push((k, v));
+        }
+        let mut body = vec![0u8; content_length];
+        self.read.read_exact(&mut body).unwrap();
+        Resp { status, headers, body: String::from_utf8(body).unwrap() }
+    }
+}
+
+fn post_infer(addr: std::net::SocketAddr, id: u64, pixels: &[f32], trials: u32) -> Resp {
+    Client::connect(addr).request("POST", "/v1/infer", &[], &infer_body(id, pixels, trials))
+}
+
+// ---- protocol conformance -------------------------------------------------
+
+#[test]
+fn keep_alive_connection_serves_many_requests() {
+    let w = trained();
+    let server = http_die(&w, 0xB00, |_| {});
+    let mut c = Client::connect(server.addr());
+
+    // Two inferences and a metrics read, one connection.
+    for id in [3u64, 4] {
+        let r = c.request("POST", "/v1/infer", &[], &infer_body(id, &image(id), 5));
+        assert_eq!(r.status, 200, "body: {}", r.body);
+        let j = r.json();
+        assert_eq!(j.get("id").and_then(Json::as_str), Some(id.to_string().as_str()));
+        assert_eq!(j.get("trials_used").and_then(Json::as_usize), Some(5));
+        assert_eq!(r.header("connection"), Some("keep-alive"));
+    }
+    let m = c.request("GET", "/metrics", &[], "");
+    assert_eq!(m.status, 200);
+    let ingress = m.json();
+    let snap = ingress.get("ingress").and_then(|i| i.get("snapshot")).expect("ingress snapshot");
+    assert_eq!(snap.get("requests_completed").and_then(Json::as_usize), Some(2));
+
+    let h = c.request("GET", "/healthz", &[], "");
+    assert_eq!(h.status, 200);
+    assert_eq!(h.json().get("ok").and_then(Json::as_bool), Some(true));
+}
+
+#[test]
+fn unknown_routes_and_methods_answer_cleanly() {
+    let w = trained();
+    let server = http_die(&w, 0xB01, |_| {});
+    let mut c = Client::connect(server.addr());
+
+    let r = c.request("GET", "/nope", &[], "");
+    assert_eq!(r.status, 404);
+    assert!(r.json().get("error").and_then(Json::as_str).unwrap().contains("/nope"));
+
+    // Known path, wrong method: 405 with Allow.
+    let r = c.request("GET", "/v1/infer", &[], "");
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("allow"), Some("POST"));
+    let r = c.request("POST", "/metrics", &[], "");
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("allow"), Some("GET"));
+}
+
+#[test]
+fn oversized_bodies_are_refused_with_413_before_reading() {
+    let w = trained();
+    let server = http_die(&w, 0xB02, |_| {});
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    s.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    // Declare a body over the cap and send none of it — the server must
+    // answer off the headers alone (it refuses to allocate or drain).
+    let too_big = raca::serve::http::server::MAX_BODY_BYTES + 1;
+    write!(
+        s,
+        "POST /v1/infer HTTP/1.1\r\nHost: t\r\nContent-Length: {too_big}\r\n\r\n"
+    )
+    .unwrap();
+    s.flush().unwrap();
+    let mut read = BufReader::new(s.try_clone().unwrap());
+    let mut line = String::new();
+    read.read_line(&mut line).unwrap();
+    assert!(line.starts_with("HTTP/1.1 413"), "status line: {line:?}");
+    // The 413 closes the connection: the rest of the response drains to
+    // EOF instead of hanging waiting for the body we never sent.
+    let mut rest = String::new();
+    read.read_to_string(&mut rest).unwrap();
+    assert!(rest.contains("Connection: close"), "rest: {rest:?}");
+}
+
+#[test]
+fn malformed_request_lines_and_bodies_get_400() {
+    let w = trained();
+    let server = http_die(&w, 0xB03, |_| {});
+
+    // Garbage request line: 400, then close.
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    s.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    s.write_all(b"WHAT\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    BufReader::new(s).read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp:?}");
+
+    // Well-framed HTTP, bad JSON bodies: per-request 400s, connection
+    // stays usable.
+    let mut c = Client::connect(server.addr());
+    for (body, want) in [
+        (r#"{"pixels": [0.5]}"#, "id"),
+        (r#"{"id": 1}"#, "pixels"),
+        (r#"{"id": 1, "pixels": []}"#, "pixels"),
+        (r#"{"id": 1, "pixels": [0.5], "trials": 0}"#, "trials"),
+        (r#"{"id": 1, "pixels": [0.5,"#, "bad body"),
+    ] {
+        let r = c.request("POST", "/v1/infer", &[], body);
+        assert_eq!(r.status, 400, "body {body:?} → {}", r.body);
+        let msg = r.json().get("error").and_then(Json::as_str).unwrap().to_string();
+        assert!(msg.contains(want), "body {body:?} → error {msg:?}");
+    }
+    // …and a good request still lands on the same connection.
+    let r = c.request("POST", "/v1/infer", &[], &infer_body(9, &image(9), 4));
+    assert_eq!(r.status, 200, "body: {}", r.body);
+}
+
+// ---- the acceptance bar: bit-parity with a local die ----------------------
+
+/// `POST /v1/infer` answers bit-identically to a local `die` backend at
+/// equal `(seed, trial_idx)`: ids cross as-is, pixels round-trip exactly
+/// through decimal JSON, and confidence is pinned to 0 server-side.
+#[test]
+fn http_infer_votes_bit_identical_to_local_die() {
+    let w = trained();
+    let seed = 0x177E;
+    let server = http_die(&w, seed, |_| {});
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    let p = TrialParams::default();
+
+    let mut c = Client::connect(server.addr());
+    for id in 0..6u64 {
+        let img = image(id);
+        let r = c.request("POST", "/v1/infer", &[], &infer_body(id, &img, 18));
+        assert_eq!(r.status, 200, "body: {}", r.body);
+        let j = r.json();
+        let want = reference.infer(&img, p, 18, trial_stream_base(seed, id));
+        let counts: Vec<u64> = j
+            .get("counts")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|c| c.as_f64().unwrap() as u64)
+            .collect();
+        assert_eq!(counts, want.counts, "request {id} diverged from the local engine");
+        assert_eq!(
+            j.get("abstentions").and_then(Json::as_usize).unwrap() as u64,
+            want.abstentions
+        );
+        assert_eq!(
+            j.get("prediction").and_then(Json::as_f64).unwrap() as i32,
+            want.prediction()
+        );
+        assert_eq!(j.get("trials_used").and_then(Json::as_usize), Some(18));
+    }
+}
+
+/// Concurrent posts with duplicated pixels: the batcher merges equal
+/// rows across requests, and every answer still matches the reference —
+/// merging changes traffic, never votes.
+#[test]
+fn concurrent_duplicate_images_batch_without_changing_votes() {
+    let w = trained();
+    let seed = 0x7337;
+    let server = http_die(&w, seed, |_| {});
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    let p = TrialParams::default();
+    let addr = server.addr();
+
+    // 6 clients, 3 distinct images — duplicates are guaranteed whenever
+    // the batcher catches two in one flush (and harmless otherwise).
+    let hands: Vec<_> = (0..6u64)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let img = image(i % 3);
+                let r = post_infer(addr, i, &img, 12);
+                (i, r.status, r.body)
+            })
+        })
+        .collect();
+    for h in hands {
+        let (i, status, body) = h.join().unwrap();
+        assert_eq!(status, 200, "request {i}: {body}");
+        let j = Json::parse(&body).unwrap();
+        let want = reference.infer(&image(i % 3), p, 12, trial_stream_base(seed, i));
+        let counts: Vec<u64> = j
+            .get("counts")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|c| c.as_f64().unwrap() as u64)
+            .collect();
+        assert_eq!(counts, want.counts, "request {i} diverged under batching");
+        assert_eq!(
+            j.get("prediction").and_then(Json::as_f64).unwrap() as i32,
+            want.prediction()
+        );
+    }
+}
+
+// ---- admission control under saturation -----------------------------------
+
+/// Saturation sheds instead of hanging: with a 1-deep queue and an
+/// in-flight budget of 2, a 16-way burst gets a mix of 200s and 429s —
+/// every connection answered, every 429 carrying Retry-After, every
+/// admitted request completing its full trial budget.
+#[test]
+fn saturation_sheds_with_429_and_never_drops_admitted_requests() {
+    let w = trained();
+    let server = http_die(&w, 0x5A7, |c| {
+        c.queue_depth = 1;
+        c.in_flight = 2;
+    });
+    let addr = server.addr();
+
+    let hands: Vec<_> = (0..16u64)
+        .map(|i| {
+            std::thread::spawn(move || {
+                // A big budget keeps slots occupied so the burst overlaps.
+                let r = post_infer(addr, i, &image(i), 300);
+                (r.status, r.header("retry-after").map(str::to_string), r.body)
+            })
+        })
+        .collect();
+    let (mut n200, mut n429) = (0usize, 0usize);
+    for h in hands {
+        let (status, retry_after, body) = h.join().unwrap();
+        match status {
+            200 => {
+                let j = Json::parse(&body).unwrap();
+                // Admitted requests run to completion, full budget.
+                assert_eq!(j.get("trials_used").and_then(Json::as_usize), Some(300));
+                n200 += 1;
+            }
+            429 => {
+                let secs: u64 = retry_after.expect("429 must carry Retry-After").parse().unwrap();
+                assert!(secs >= 1, "Retry-After must be at least a second");
+                let j = Json::parse(&body).unwrap();
+                assert!(j.get("error").and_then(Json::as_str).unwrap().starts_with("shed:"));
+                n429 += 1;
+            }
+            s => panic!("unexpected status {s}: {body}"),
+        }
+    }
+    assert_eq!(n200 + n429, 16, "every connection must be answered");
+    assert!(n200 >= 1, "the budget admits at least one");
+    assert!(n429 >= 1, "a 16-way burst over budget 2 must shed");
+
+    // The ledger agrees: completions == 200s, sheds == 429s, and the
+    // in-flight gauge drained back to zero.
+    let m = Client::connect(addr).request("GET", "/metrics", &[], "");
+    let ing = m.json();
+    let ing = ing.get("ingress").expect("ingress block");
+    let snap = ing.get("snapshot").expect("snapshot");
+    assert_eq!(snap.get("requests_completed").and_then(Json::as_usize), Some(n200));
+    assert_eq!(ing.get("shed_total").and_then(Json::as_usize), Some(n429));
+    assert_eq!(ing.get("in_flight_now").and_then(Json::as_usize), Some(0));
+}
+
+/// Per-tenant token buckets: a tenant that burns its burst gets 429d
+/// while other tenants (and the shared anonymous bucket) still pass.
+#[test]
+fn tenant_rate_limits_are_isolated() {
+    let w = trained();
+    // Burst 2, refill ~never (0.001/s): the third request in a row from
+    // one tenant must shed, with a Retry-After reflecting the slow rate.
+    let server = http_die(&w, 0x7E4A, |c| {
+        c.tenant_rate = 0.001;
+        c.tenant_burst = 2.0;
+    });
+    let mut c = Client::connect(server.addr());
+    let alice = [("X-Raca-Tenant", "alice")];
+    let bob = [("X-Raca-Tenant", "bob")];
+    let body = infer_body(1, &image(1), 3);
+
+    assert_eq!(c.request("POST", "/v1/infer", &alice, &body).status, 200);
+    assert_eq!(c.request("POST", "/v1/infer", &alice, &body).status, 200);
+    let shed = c.request("POST", "/v1/infer", &alice, &body);
+    assert_eq!(shed.status, 429, "alice's burst is spent: {}", shed.body);
+    let wait: u64 = shed.header("retry-after").unwrap().parse().unwrap();
+    assert!(wait >= 1);
+
+    // Bob has his own bucket; the anonymous bucket is its own tenant too.
+    assert_eq!(c.request("POST", "/v1/infer", &bob, &body).status, 200);
+    assert_eq!(c.request("POST", "/v1/infer", &[], &body).status, 200);
+    assert_eq!(c.request("POST", "/v1/infer", &[], &body).status, 200);
+    assert_eq!(c.request("POST", "/v1/infer", &[], &body).status, 429, "anonymous burst spent");
+}
+
+// ---- telemetry exports ----------------------------------------------------
+
+/// `GET /tree` exports the PR-6 metrics tree (ingress root, backend
+/// subtree) and the journal tail as JSON that round-trips through the
+/// telemetry decoders.
+#[test]
+fn tree_endpoint_exports_metrics_tree_and_journal() {
+    let w = trained();
+    let server = http_die(&w, 0x73EE, |_| {});
+    let mut c = Client::connect(server.addr());
+    for id in 0..3u64 {
+        assert_eq!(
+            c.request("POST", "/v1/infer", &[], &infer_body(id, &image(id), 4)).status,
+            200
+        );
+    }
+
+    let r = c.request("GET", "/tree", &[], "");
+    assert_eq!(r.status, 200);
+    let j = r.json();
+    let tree = raca::telemetry::MetricsTree::from_json(j.get("tree").expect("tree key")).unwrap();
+    assert!(tree.label.starts_with("http:"), "root label: {}", tree.label);
+    assert_eq!(tree.snapshot.requests_completed, 3);
+    assert_eq!(tree.children.len(), 1, "backend subtree:\n{}", tree.render());
+    assert_eq!(tree.children[0].label, "die#0");
+    assert_eq!(tree.children[0].snapshot.requests_completed, 3);
+
+    let events = j.get("events").and_then(Json::as_arr).expect("events key");
+    assert!(!events.is_empty(), "hosted traffic must journal");
+    let parsed: Vec<_> = events
+        .iter()
+        .map(|e| raca::telemetry::Event::from_json(e).expect("decodable event"))
+        .collect();
+    use raca::telemetry::EventKind;
+    assert!(parsed.iter().any(|e| e.kind == EventKind::RequestAdmitted));
+    assert!(parsed.iter().any(|e| e.kind == EventKind::RequestCompleted));
+}

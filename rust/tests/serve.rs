@@ -719,6 +719,90 @@ fn v1_flat_metrics_peer_wraps_into_a_tree_and_goes_stale_on_death() {
     Box::new(remote).shutdown();
 }
 
+/// A peer that completes the TCP handshake (the OS backlog does that
+/// without any `accept`) but never speaks the protocol hello must fail
+/// `connect` in bounded time — not hang the deploying process forever.
+#[test]
+fn connect_fails_fast_on_a_silent_peer() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let t0 = std::time::Instant::now();
+    let r = raca::serve::RemoteBackend::connect(&addr.to_string());
+    assert!(r.is_err(), "a silent peer must not yield a session");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(10),
+        "handshake must time out, took {:?}",
+        t0.elapsed()
+    );
+    let msg = format!("{:#}", r.unwrap_err());
+    assert!(msg.contains("raca listener"), "unhelpful error: {msg}");
+    drop(listener);
+}
+
+/// A telemetry ask the peer never answers must give up in bounded time
+/// *and* withdraw its waiter: the next ask has to receive the answer
+/// written for it, not inherit a reply queued behind a ghost.
+#[test]
+fn timed_out_telemetry_waiter_does_not_consume_the_next_answer() {
+    use raca::serve::net::{wire, WireMsg};
+    use raca::util::json;
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let (s, _) = listener.accept().unwrap();
+        let mut wr = s.try_clone().unwrap();
+        let mut rd = std::io::BufReader::new(s);
+        json::write_frame(
+            &mut wr,
+            &wire::encode(&WireMsg::Hello { version: wire::PROTOCOL_VERSION }),
+        )
+        .unwrap();
+        let _ = json::read_frame(&mut rd).unwrap().expect("client hello");
+        // First telemetry ask: swallowed — the client must time out.
+        let q1 = json::read_frame(&mut rd).unwrap().expect("first metrics request");
+        assert!(matches!(wire::decode(&q1), Ok(WireMsg::MetricsReq { tree: true })));
+        // Second ask: answered.  If the timed-out waiter were still
+        // queued, it — not the live caller — would receive this.
+        let q2 = json::read_frame(&mut rd).unwrap().expect("second metrics request");
+        assert!(matches!(wire::decode(&q2), Ok(WireMsg::MetricsReq { tree: true })));
+        let m = raca::coordinator::MetricsSnapshot {
+            requests_admitted: 77,
+            requests_completed: 77,
+            trials_executed: 770,
+            batches_executed: 9,
+            rows_packed: 0,
+            trials_saved: 0,
+            engine_errors: 0,
+            latency_p50_us: 100,
+            latency_p99_us: 400,
+        };
+        let tree = raca::telemetry::MetricsTree::leaf("peer-die", m);
+        json::write_frame(
+            &mut wr,
+            &wire::encode(&WireMsg::MetricsTree { tree, events: Vec::new() }),
+        )
+        .unwrap();
+        // Keep the session open until the client hangs up.
+        let _ = json::read_frame(&mut rd);
+    });
+
+    let remote = raca::serve::RemoteBackend::connect(&addr.to_string()).unwrap();
+    let t0 = std::time::Instant::now();
+    assert!(remote.remote_telemetry().is_none(), "unanswered ask must yield None");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(8),
+        "bounded wait, took {:?}",
+        t0.elapsed()
+    );
+    let (tree, _events) =
+        remote.remote_telemetry().expect("the second ask owns the answer");
+    assert_eq!(tree.label, "peer-die");
+    assert_eq!(tree.snapshot.requests_completed, 77, "answer misrouted to a stale waiter?");
+    Box::new(remote).shutdown();
+    fake.join().unwrap();
+}
+
 /// The PR's acceptance bar: kill one child of a two-remote group and the
 /// health monitor evicts it — a `health_evict` event lands in the shared
 /// journal, the tree shows `EVICTED`, and traffic routes away cleanly.
