@@ -46,6 +46,10 @@ pub struct RunConfig {
     pub serve: ServeConfig,
     /// Default per-request vote confidence.
     pub confidence: f64,
+    /// Artifact directory (weights, compiled executables, registry store).
+    /// Precedence at the CLI: `--artifact-dir` flag > `RACA_ARTIFACT_DIR`
+    /// env > this key > [`crate::runtime::default_artifact_dir`].
+    pub artifacts: Option<std::path::PathBuf>,
 }
 
 fn check_keys(obj: &Json, allowed: &[&str], section: &str) -> Result<()> {
@@ -64,7 +68,7 @@ impl RunConfig {
         let j = Json::parse(text).context("parsing run config")?;
         check_keys(
             &j,
-            &["trial", "scheduler", "engine", "tech", "fleet", "serve", "confidence"],
+            &["trial", "scheduler", "engine", "tech", "fleet", "serve", "confidence", "artifacts"],
             "root",
         )?;
         let mut cfg = RunConfig { confidence: 0.95, ..Default::default() };
@@ -105,6 +109,19 @@ impl RunConfig {
             if let Some(v) = s.get("confidence").and_then(Json::as_f64) {
                 cfg.confidence = v;
             }
+        }
+        if let Some(a) = j.get("artifacts") {
+            let dir = a.as_str().map(std::path::PathBuf::from).ok_or_else(|| {
+                anyhow::anyhow!("config: artifacts must be a directory path string")
+            })?;
+            // Catch a mistyped path at parse time, not at first artifact
+            // write deep inside a train/publish run.
+            ensure!(
+                dir.is_dir(),
+                "config: artifacts directory {} does not exist",
+                dir.display()
+            );
+            cfg.artifacts = Some(dir);
         }
         if let Some(e) = j.get("engine").and_then(Json::as_str) {
             cfg.engine = match e {
@@ -511,6 +528,20 @@ mod tests {
         // Unknown spellings list the valid ones.
         let e = RunConfig::parse(r#"{"serve": {"backend": "sharded"}}"#).unwrap_err();
         assert!(format!("{e:#}").contains("single, replicated, pipelined"), "{e:#}");
+    }
+
+    #[test]
+    fn artifacts_key_requires_an_existing_directory() {
+        // Any directory that certainly exists works as the value.
+        let dir = std::env::temp_dir();
+        let c = RunConfig::parse(&format!(r#"{{"artifacts": "{}"}}"#, dir.display())).unwrap();
+        assert_eq!(c.artifacts.as_deref(), Some(dir.as_path()));
+        assert_eq!(RunConfig::parse("{}").unwrap().artifacts, None);
+        // A missing directory or a non-string value is rejected at parse.
+        let e = RunConfig::parse(r#"{"artifacts": "/no/such/raca/dir"}"#).unwrap_err();
+        assert!(format!("{e}").contains("does not exist"), "{e}");
+        let e = RunConfig::parse(r#"{"artifacts": 7}"#).unwrap_err();
+        assert!(format!("{e}").contains("directory path"), "{e}");
     }
 
     #[test]

@@ -28,7 +28,10 @@
 //! health-reweighted router over arbitrary subtrees
 //! (`serve::RouterBackend`) — and, through the [`serve::net`] wire layer
 //! (`raca serve --listen`, `remote:<host:port>` leaves), trees that span
-//! hosts.
+//! hosts.  [`registry`] adds signed, content-addressed model
+//! distribution on top of that wire: `raca publish` stores a bundle,
+//! listeners advertise it, and `remote:@<registry>/<bundle>` leaves
+//! verify and bind it at build time.
 
 pub mod arch;
 pub mod circuit;
@@ -45,6 +48,7 @@ pub mod hwmodel;
 pub mod neuron;
 pub mod nn;
 pub mod planner;
+pub mod registry;
 pub mod runtime;
 pub mod serve;
 pub mod stats;

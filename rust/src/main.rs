@@ -19,6 +19,9 @@
 //! raca serve --topology "(remote:a:7433, remote:b:7433)"  # multi-host tree
 //! raca train [--widths 784,500,300,10] # regenerate weight artifacts
 //!                                   # natively (no python toolchain)
+//! raca publish artifacts/weights/fcnn calib.json  # sign + store a bundle
+//! raca bundles [host:port]          # list local/advertised bundles
+//! raca serve --topology "remote:@h:7433/<bundle>" # registry-resolved leaf
 //! raca fleet --chips N --sigma S    # multi-chip farm: program,
 //!                                   # calibrate, serve, health report
 //! raca selftest                     # quick end-to-end smoke
@@ -104,6 +107,8 @@ fn main() -> Result<()> {
         Some("serve") => serve(&args),
         Some("top") => top(&args),
         Some("train") => train_cmd(&args),
+        Some("publish") => publish_cmd(&args),
+        Some("bundles") => bundles_cmd(&args),
         Some("fleet") => fleet(&args),
         Some("selftest") => selftest(),
         _ => {
@@ -128,13 +133,18 @@ USAGE: raca <subcommand> [flags]
   serve       serve through a deployment topology (compiled to backends)
               --topology "2x(pipeline:3)"   die | pipeline:<dies>[:b<batch>]
                                             | remote:<host:port>
+                                            | remote:@<host:port>/<bundle>
                                             | <n>x(<node>)[@policy]
                                             | (<node>, <node>, …)[@policy]
               --backend single|replicated|pipelined   (legacy sugar:
                 die | <chips>x(die) | pipeline:<shards>)
               --listen <host:port>      host the compiled topology on a
                                         socket (peers reach it as
-                                        remote:<host:port>); blocks
+                                        remote:<host:port>); advertises the
+                                        local registry's bundles; blocks
+              --artifact-dir DIR        weights/registry location (else
+                                        RACA_ARTIFACT_DIR, the config
+                                        "artifacts" key, or the default)
               --http <host:port>        host the HTTP/JSON ingress:
                                         POST /v1/infer, GET /metrics,
                                         GET /tree, GET /healthz — with
@@ -164,6 +174,14 @@ USAGE: raca <subcommand> [flags]
               python toolchain for paper-scale weights)
               --widths 784,500,300,10 --samples N --epochs E --lr F
               --minibatch M --seed S --test-samples N --out DIR --force
+  publish     sign + store a model bundle in the artifact registry
+              raca publish <weights-prefix> <calibration.json>
+              --dataset PATH      hash an evaluation set into the manifest
+              --to <host:port>    also push the bundle to a live listener
+              --artifact-dir DIR  registry location (see serve)
+  bundles     list bundles, id first per line (script-friendly)
+              raca bundles                 the local registry store
+              raca bundles <host:port>     a live listener's advertisement
   fleet       program + calibrate + serve a farm of non-identical chips
               (replicated backend: worker threads + live health steering)
               --chips N --sigma S --policy round-robin|least-loaded|weighted
@@ -190,11 +208,18 @@ fn parse_widths(spec_str: &str) -> Result<Vec<usize>> {
     Ok(widths)
 }
 
-/// Load the trained artifacts if present; otherwise train a small native
-/// MLP on synthetic digits so every path works on a fresh checkout.
-/// Returns (weights, labeled evaluation set).
-fn load_or_train() -> Result<(Weights, Dataset)> {
-    let dir = default_artifact_dir();
+/// Resolve the artifact directory for one invocation: the
+/// `--artifact-dir` flag, then `RACA_ARTIFACT_DIR`, then a config file's
+/// `"artifacts"` key, then the crate default — shared by every
+/// artifact-touching subcommand.
+fn artifact_dir(args: &Args, config: Option<&std::path::Path>) -> std::path::PathBuf {
+    raca::runtime::resolve_artifact_dir(args.get("artifact-dir").map(std::path::Path::new), config)
+}
+
+/// Load the trained artifacts from `dir` if present; otherwise train a
+/// small native MLP on synthetic digits so every path works on a fresh
+/// checkout.  Returns (weights, labeled evaluation set).
+fn load_or_train(dir: &std::path::Path) -> Result<(Weights, Dataset)> {
     let loaded = Weights::load(&dir.join("weights").join("fcnn")).and_then(|w| {
         let ds = Dataset::load(&dir.join("data").join("test"))?;
         Ok((w, ds))
@@ -274,7 +299,7 @@ fn infer(args: &Args) -> Result<()> {
     let confidence = args.get_f64("confidence", 0.95);
     let batch = args.get_usize("batch", 32);
 
-    let dir = default_artifact_dir();
+    let dir = artifact_dir(args, None);
     let ds = Dataset::load(&dir.join("data").join("test"))?.take(n);
     let engine = XlaEngine::start(dir)?;
     let handle = engine.handle();
@@ -294,7 +319,7 @@ fn infer(args: &Args) -> Result<()> {
     let confidence = args.get_f64("confidence", 0.95);
     let batch = args.get_usize("batch", 32);
 
-    let (w, ds) = load_or_train()?;
+    let (w, ds) = load_or_train(&artifact_dir(args, None))?;
     let ds = ds.take(n);
     let engine = NativeEngine::new(std::sync::Arc::new(w), 0x1FE2);
     let mut cfg = SchedulerConfig::default();
@@ -414,6 +439,7 @@ fn serve(args: &Args) -> Result<()> {
     let trials = args.get_usize("trials", 16) as u32;
     let confidence = args.get_f64("confidence", 0.0);
     let sigma = args.get_f64("sigma", 0.0);
+    let art = artifact_dir(args, cfg.artifacts.as_deref());
 
     let topo = sc.tree(cfg.fleet.policy);
 
@@ -431,7 +457,7 @@ fn serve(args: &Args) -> Result<()> {
             let w = raca::nn::train(&train_set, ModelSpec::new(widths), &tc);
             (w, synth::generate(n + 64, 0x7E57))
         }
-        None => load_or_train()?,
+        None => load_or_train(&art)?,
     };
     anyhow::ensure!(!pool.is_empty(), "no evaluation data available");
     // Carve the calibration split FIRST (the fleet subcommand's order), so
@@ -461,26 +487,38 @@ fn serve(args: &Args) -> Result<()> {
         trial_block: sc.trial_block,
         calibration: Some((cal.clone(), Calibrator::quick(5))),
         probe_rate: sc.probe_rate,
+        artifact_dir: Some(art.clone()),
         ..Default::default()
     };
     let backend = raca::serve::plan::build(&topo, &w, &opts)?;
 
     // Listener modes: host the compiled topology on a socket (framed
     // wire and/or HTTP ingress) instead of pushing a local workload.
+    // Wire listeners always carry the local registry, advertising its
+    // bundles in the hello and answering publish/fetch traffic.
+    let registry = || -> Result<(raca::serve::net::RegistryConfig, usize)> {
+        let store = raca::registry::Store::open(&art);
+        let advertised = store.list().unwrap_or_default().len();
+        let key = raca::registry::SigningKey::load_or_generate(&art)
+            .with_context(|| format!("deployment key under {}", art.display()))?;
+        Ok((raca::serve::net::RegistryConfig { store, key }, advertised))
+    };
     match (&sc.listen, &sc.http) {
         (Some(listen), Some(hc)) => {
             // Both front doors share one backend (one metrics/journal
             // stream) via the SharedBackend adapter.
+            let (reg, advertised) = registry()?;
             let shared: std::sync::Arc<dyn raca::serve::Backend> = std::sync::Arc::from(backend);
-            let net = raca::serve::net::serve(
+            let net = raca::serve::net::serve_registry(
                 Box::new(raca::serve::SharedBackend(shared.clone())),
                 listen,
+                reg,
             )?;
             let http =
                 raca::serve::serve_http(Box::new(raca::serve::SharedBackend(shared)), hc)?;
             println!(
-                "serve: wire listener on {} (protocol v{}, reach as \"remote:{}\"), \
-                 HTTP ingress on http://{} — ctrl-c to stop",
+                "serve: wire listener on {} (protocol v{}, {advertised} bundles advertised, \
+                 reach as \"remote:{}\"), HTTP ingress on http://{} — ctrl-c to stop",
                 net.addr(),
                 raca::serve::net::PROTOCOL_VERSION,
                 net.addr(),
@@ -491,10 +529,11 @@ fn serve(args: &Args) -> Result<()> {
             return Ok(());
         }
         (Some(listen), None) => {
-            let server = raca::serve::net::serve(backend, listen)?;
+            let (reg, advertised) = registry()?;
+            let server = raca::serve::net::serve_registry(backend, listen, reg)?;
             println!(
-                "serve: listening on {} (wire protocol v{}) — reach this topology as \
-                 \"remote:{}\"; ctrl-c to stop",
+                "serve: listening on {} (wire protocol v{}, {advertised} bundles advertised) — \
+                 reach this topology as \"remote:{}\"; ctrl-c to stop",
                 server.addr(),
                 raca::serve::net::PROTOCOL_VERSION,
                 server.addr()
@@ -576,7 +615,8 @@ fn top_local(args: &Args, topo: &Topology) -> Result<()> {
     let probe_rate = args.get_f64("probe-rate", 0.1);
     let n_events = args.get_usize("events", 12);
 
-    let (w, pool) = load_or_train()?;
+    let art = artifact_dir(args, None);
+    let (w, pool) = load_or_train(&art)?;
     anyhow::ensure!(!pool.is_empty(), "no evaluation data available");
     let cal = pool.take(48.min(pool.len()));
     let ds = {
@@ -589,6 +629,7 @@ fn top_local(args: &Args, topo: &Topology) -> Result<()> {
         seed: args.get_usize("seed", 0x70B) as u64,
         calibration: Some((cal.clone(), Calibrator::quick(5))),
         probe_rate,
+        artifact_dir: Some(art),
         ..Default::default()
     };
     let backend = raca::serve::plan::build(topo, &w, &opts)?;
@@ -653,10 +694,12 @@ fn train_cmd(args: &Args) -> Result<()> {
         seed,
         minibatch: args.get_usize("minibatch", 16).max(1),
     };
+    // `--out` keeps its historical meaning; absent, train lands in the
+    // same resolved artifact directory every consumer loads from.
     let out = args
         .get("out")
         .map(std::path::PathBuf::from)
-        .unwrap_or_else(default_artifact_dir);
+        .unwrap_or_else(|| artifact_dir(args, None));
     let wpath = out.join("weights").join("fcnn");
     anyhow::ensure!(
         args.has("force") || !wpath.with_extension("json").exists(),
@@ -691,6 +734,95 @@ fn train_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `raca publish` — blob, sign and store one deployable bundle in the
+/// local registry; optionally push it to a live listener's registry too.
+fn publish_cmd(args: &Args) -> Result<()> {
+    use anyhow::Context as _;
+    use std::path::Path;
+
+    let Some(prefix) = args.positional(0) else {
+        anyhow::bail!(
+            "usage: raca publish <weights-prefix> <calibration.json> \
+             [--dataset PATH] [--to host:port] [--artifact-dir DIR]\n  \
+             e.g. `raca publish artifacts/weights/fcnn calib.json`"
+        );
+    };
+    let Some(calib) = args.positional(1) else {
+        anyhow::bail!("raca publish: missing the calibration profile path (second argument)");
+    };
+    let dir = artifact_dir(args, None);
+    let store = raca::registry::Store::open(&dir);
+    let key = raca::registry::SigningKey::load_or_generate(&dir)
+        .with_context(|| format!("deployment key under {}", dir.display()))?;
+    let (id, env) = raca::registry::publish_local(
+        &store,
+        &key,
+        Path::new(prefix),
+        Path::new(calib),
+        args.get("dataset").map(Path::new),
+    )?;
+    println!(
+        "published bundle {id}\n  model : {} {:?}\n  key   : {}\n  store : {}",
+        env.manifest.model,
+        env.manifest.widths,
+        key.key_id,
+        store.root().display()
+    );
+    if let Some(addr) = args.get("to") {
+        let blobs = env
+            .manifest
+            .blob_hashes()
+            .iter()
+            .map(|&h| Ok((h.to_string(), store.get_blob(h)?)))
+            .collect::<Result<Vec<_>>>()?;
+        let mut client = raca::registry::RegistryClient::connect(addr)?;
+        let pushed = client.publish(&env, &blobs)?;
+        client.close();
+        println!("pushed to {addr}: bundle {pushed} admitted");
+    }
+    println!("serve it   : raca serve --listen <host:port> --artifact-dir {}", dir.display());
+    println!("resolve it : --topology \"remote:@<host:port>/{id}\"");
+    Ok(())
+}
+
+/// `raca bundles` — list the local registry store, or a live listener's
+/// advertisement.  One line per bundle, id first, so scripts can
+/// `awk '{print $1}'`.
+fn bundles_cmd(args: &Args) -> Result<()> {
+    let describe = |id: &str, env: Result<raca::registry::SignedManifest>| match env {
+        Ok(env) => println!("{id} {} {:?}", env.manifest.model, env.manifest.widths),
+        Err(e) => println!("{id} (manifest unavailable: {e:#})"),
+    };
+    match args.positional(0) {
+        Some(addr) => {
+            let mut client = raca::registry::RegistryClient::connect(addr)?;
+            let ids = client.bundles()?;
+            for id in &ids {
+                let env = client.fetch_manifest(id);
+                describe(id, env);
+            }
+            client.close();
+            if ids.is_empty() {
+                eprintln!("{addr}: no bundles advertised");
+            }
+        }
+        None => {
+            let store = raca::registry::Store::open(artifact_dir(args, None));
+            let ids = store.list()?;
+            for id in &ids {
+                describe(id, store.get_manifest(id));
+            }
+            if ids.is_empty() {
+                eprintln!(
+                    "{}: empty registry (create a bundle with `raca publish`)",
+                    store.root().display()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 /// `raca fleet` — the full multi-chip loop: program N non-identical dies,
 /// calibrate each against a held-out set, then serve a workload through
 /// the replicated [`Backend`] (per-chip worker threads, router dispatch,
@@ -698,9 +830,12 @@ fn train_cmd(args: &Args) -> Result<()> {
 fn fleet(args: &Args) -> Result<()> {
     use anyhow::Context as _;
 
-    let mut fc = match args.get("config") {
-        Some(path) => raca::config::RunConfig::load(std::path::Path::new(path))?.fleet,
-        None => FleetConfig::default(),
+    let (mut fc, art_cfg) = match args.get("config") {
+        Some(path) => {
+            let c = raca::config::RunConfig::load(std::path::Path::new(path))?;
+            (c.fleet, c.artifacts)
+        }
+        None => (FleetConfig::default(), None),
     };
     fc.chips = args.get_usize("chips", fc.chips);
     fc.sigma = args.get_f64("sigma", fc.sigma);
@@ -722,7 +857,7 @@ fn fleet(args: &Args) -> Result<()> {
     );
 
     // ---- model + data splits ---------------------------------------------
-    let (weights, pool) = load_or_train()?;
+    let (weights, pool) = load_or_train(&artifact_dir(args, art_cfg.as_deref()))?;
     anyhow::ensure!(!pool.is_empty(), "no evaluation data available");
     let cal = pool.take(fc.cal_images.min(pool.len()));
     let serve_lo = cal.len().min(pool.len());
@@ -862,7 +997,7 @@ fn plan(args: &Args) -> Result<()> {
     let n = args.get_usize("images", 100);
     let target = args.get_f64("target", 0.97);
     let probe_trials = args.get_usize("probe-trials", 64);
-    let dir = default_artifact_dir();
+    let dir = artifact_dir(args, None);
     let ds = Dataset::load(&dir.join("data").join("test"))?.take(n);
     let w = std::sync::Arc::new(Weights::load(&dir.join("weights").join("fcnn"))?);
     let engine = NativeEngine::new(w, 77);

@@ -1,0 +1,209 @@
+//! Registry client: synchronous RPC against a `raca serve --listen`
+//! peer's registry vocabulary.
+//!
+//! Unlike [`crate::serve::net::RemoteBackend`] — a long-lived
+//! multiplexed serving session — registry traffic is rare, sequential
+//! control-plane work (a publish at deploy time, one resolve per
+//! `remote:@` leaf at build time).  So this client is deliberately
+//! simple: one frame out, one frame in, every call bounded by a read
+//! timeout, no reader thread.
+//!
+//! The trust model matches the store's: nothing the peer says is taken
+//! on faith.  [`resolve`] checks the advertised bundle list, verifies
+//! the fetched envelope's signature under the *local* deployment key,
+//! and re-derives the bundle id from the manifest's canonical bytes;
+//! [`RegistryClient::fetch_blob`] re-hashes what arrived.  A registry
+//! peer can therefore deny service, but cannot substitute content.
+
+use std::io::BufReader;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::serve::net::wire::{self, WireMsg, PROTOCOL_VERSION};
+use crate::util::json;
+
+use super::manifest::SignedManifest;
+use super::sign::{self, SigningKey};
+
+/// TCP connect budget.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Per-RPC read budget.  Registry calls are synchronous; a wedged peer
+/// must fail the call, not hang a deployment build.
+const RPC_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One registry session against a listener.
+pub struct RegistryClient {
+    addr: String,
+    read: BufReader<TcpStream>,
+    write: TcpStream,
+    /// Bundle ids the listener's hello advertised.
+    advertised: Vec<String>,
+}
+
+impl RegistryClient {
+    /// Dial `addr` and complete the protocol handshake, capturing the
+    /// listener's advertised bundle ids.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let resolved: Vec<_> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving registry address {addr}"))?
+            .collect();
+        ensure!(!resolved.is_empty(), "registry address {addr} resolved to nothing");
+        let mut stream = None;
+        let mut last_err = None;
+        for sa in &resolved {
+            match TcpStream::connect_timeout(sa, CONNECT_TIMEOUT) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let stream = match stream {
+            Some(s) => s,
+            None => {
+                return Err(last_err.expect("resolved is non-empty"))
+                    .with_context(|| format!("connecting to registry {addr}"))
+            }
+        };
+        stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+        // Every read on this session is one bounded RPC answer.
+        stream.set_read_timeout(Some(RPC_TIMEOUT)).context("setting registry read timeout")?;
+        stream.set_write_timeout(Some(RPC_TIMEOUT)).context("setting registry write timeout")?;
+        let mut read = BufReader::new(stream.try_clone().context("cloning stream")?);
+        let mut write = stream;
+
+        let j = json::read_frame(&mut read)
+            .with_context(|| format!("reading hello from {addr} (is it a raca listener?)"))?
+            .ok_or_else(|| anyhow!("{addr} closed the connection during the handshake"))?;
+        let advertised = match wire::decode(&j).with_context(|| format!("bad hello from {addr}"))? {
+            WireMsg::Hello { version, bundles } => {
+                wire::check_version(version).with_context(|| format!("peer {addr}"))?;
+                bundles
+            }
+            WireMsg::Error { msg, .. } => bail!("{addr} refused the session: {msg}"),
+            other => bail!("{addr} opened with {other:?} instead of hello"),
+        };
+        json::write_frame(
+            &mut write,
+            &wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION, bundles: Vec::new() }),
+        )
+        .with_context(|| format!("answering hello to {addr}"))?;
+        Ok(Self { addr: addr.to_string(), read, write, advertised })
+    }
+
+    /// Bundle ids the listener's hello advertised (a snapshot from
+    /// connect time; [`Self::bundles`] re-asks).
+    pub fn advertised(&self) -> &[String] {
+        &self.advertised
+    }
+
+    /// One request/answer exchange.  An `Error` frame becomes an `Err`
+    /// carrying the peer's message.
+    fn rpc(&mut self, req: &WireMsg) -> Result<WireMsg> {
+        json::write_frame(&mut self.write, &wire::encode(req))
+            .with_context(|| format!("writing to registry {}", self.addr))?;
+        let j = json::read_frame(&mut self.read)
+            .with_context(|| format!("reading registry answer from {}", self.addr))?
+            .ok_or_else(|| anyhow!("registry {} closed mid-exchange", self.addr))?;
+        match wire::decode(&j).with_context(|| format!("bad frame from {}", self.addr))? {
+            WireMsg::Error { msg, .. } => bail!("registry {}: {msg}", self.addr),
+            other => Ok(other),
+        }
+    }
+
+    /// Ask the listener for its current bundle list.
+    pub fn bundles(&mut self) -> Result<Vec<String>> {
+        match self.rpc(&WireMsg::BundlesReq)? {
+            WireMsg::Bundles { ids } => Ok(ids),
+            other => bail!("registry {} answered bundles_req with {other:?}", self.addr),
+        }
+    }
+
+    /// Fetch one signed manifest.  Verifies nothing — callers hold the
+    /// deployment key and must [`SignedManifest::verify`] (see
+    /// [`resolve`] for the full discipline).
+    pub fn fetch_manifest(&mut self, bundle: &str) -> Result<SignedManifest> {
+        match self.rpc(&WireMsg::ManifestFetch { bundle: bundle.to_string() })? {
+            WireMsg::Manifest { envelope } => SignedManifest::from_json(&envelope)
+                .with_context(|| format!("envelope for bundle {bundle}")),
+            other => bail!("registry {} answered manifest_fetch with {other:?}", self.addr),
+        }
+    }
+
+    /// Fetch one blob and verify the bytes hash to `hash`.
+    pub fn fetch_blob(&mut self, hash: &str) -> Result<Vec<u8>> {
+        match self.rpc(&WireMsg::BlobFetch { hash: hash.to_string() })? {
+            WireMsg::Blob { hash: got, data } => {
+                ensure!(got == hash, "registry answered blob {got} for requested {hash}");
+                let bytes = sign::unhex(&data).context("blob payload is not hex")?;
+                ensure!(
+                    sign::sha256_hex(&bytes) == hash,
+                    "blob from {} does not hash to {hash}",
+                    self.addr
+                );
+                Ok(bytes)
+            }
+            other => bail!("registry {} answered blob_fetch with {other:?}", self.addr),
+        }
+    }
+
+    /// Publish a signed bundle: the envelope plus every referenced blob's
+    /// bytes.  Returns the bundle id the listener admitted.
+    pub fn publish(&mut self, env: &SignedManifest, blobs: &[(String, Vec<u8>)]) -> Result<String> {
+        let frame = WireMsg::Publish {
+            envelope: env.to_json(),
+            blobs: blobs.iter().map(|(h, b)| (h.clone(), sign::hex(b))).collect(),
+        };
+        match self.rpc(&frame)? {
+            WireMsg::PublishOk { bundle } => {
+                ensure!(
+                    bundle == env.bundle_id(),
+                    "registry {} admitted bundle {bundle}, expected {}",
+                    self.addr,
+                    env.bundle_id()
+                );
+                Ok(bundle)
+            }
+            other => bail!("registry {} answered publish with {other:?}", self.addr),
+        }
+    }
+
+    /// Polite session end.
+    pub fn close(mut self) {
+        let _ = json::write_frame(&mut self.write, &wire::encode(&WireMsg::Goodbye));
+        let _ = self.write.shutdown(Shutdown::Both);
+    }
+}
+
+/// The `remote:@<registry>/<bundle>` build-time discipline in one call:
+/// dial the registry, require the bundle to be advertised, fetch its
+/// envelope, verify the signature under the **local** deployment key,
+/// and re-derive the bundle id from the canonical bytes.  Returns the
+/// verified envelope; any failure is grounds for a `manifest_rejected`
+/// journal event at the caller.
+pub fn resolve(addr: &str, bundle: &str, key: &SigningKey) -> Result<SignedManifest> {
+    ensure!(sign::is_digest(bundle), "'{bundle}' is not a bundle id");
+    let mut client =
+        RegistryClient::connect(addr).with_context(|| format!("dialing registry {addr}"))?;
+    let out = (|| -> Result<SignedManifest> {
+        ensure!(
+            client.advertised().iter().any(|b| b == bundle),
+            "registry {addr} does not advertise bundle {bundle} (serves {} bundles)",
+            client.advertised().len()
+        );
+        let env = client.fetch_manifest(bundle)?;
+        let id = env.verify(key).with_context(|| format!("bundle {bundle} from {addr}"))?;
+        ensure!(
+            id == bundle,
+            "envelope from {addr} verifies but is bundle {id}, not the requested {bundle}"
+        );
+        Ok(env)
+    })();
+    client.close();
+    out
+}

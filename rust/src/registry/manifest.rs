@@ -1,0 +1,252 @@
+//! Bundle manifests: what a deployable model *is*, as canonical bytes.
+//!
+//! A bundle names everything a die needs to serve a model: the two
+//! weight blobs (`fcnn.json` metadata + `fcnn.bin` row-major matrices),
+//! a calibration profile blob, the digest of the evaluation dataset it
+//! was scored against, and the model's layer widths.  The manifest is
+//! serialized with [`crate::util::json`], whose `Display` prints objects
+//! with **sorted keys and no whitespace** — so `to_json().to_string()`
+//! *is* the canonical byte encoding, no separate canonicalization pass:
+//!
+//! * `bundle_id = sha256(canonical bytes)` — identical content always
+//!   maps to the same id, and any content change (retrained weights, new
+//!   calibration) yields a new id;
+//! * the HMAC signature ([`super::sign`]) is computed over those same
+//!   canonical bytes, so a manifest re-serialized anywhere along the
+//!   publish → advertise → resolve path verifies unchanged.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::util::json::{obj, Json};
+
+use super::sign::{is_digest, sha256_hex, SigningKey};
+
+/// The content description of one deployable bundle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Model family name (today always `"fcnn"`).
+    pub model: String,
+    /// Layer widths, input to output (e.g. `[784, 500, 300, 10]`).
+    pub widths: Vec<usize>,
+    /// Blob hash of the weights metadata file (`fcnn.json`).
+    pub weights_json: String,
+    /// Blob hash of the packed weight matrices (`fcnn.bin`).
+    pub weights_bin: String,
+    /// Blob hash of the calibration profile.
+    pub calibration: String,
+    /// Digest of the evaluation dataset the bundle was scored against
+    /// (empty when the publisher had none on disk).
+    pub dataset_sha256: String,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("calibration", Json::Str(self.calibration.clone())),
+            ("dataset_sha256", Json::Str(self.dataset_sha256.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("weights_bin", Json::Str(self.weights_bin.clone())),
+            ("weights_json", Json::Str(self.weights_json.clone())),
+            (
+                "widths",
+                Json::Arr(self.widths.iter().map(|&w| Json::Num(w as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let field = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("manifest: missing or non-string field '{k}'"))
+        };
+        let widths = j
+            .get("widths")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing 'widths' array"))?
+            .iter()
+            .map(|w| w.as_usize().ok_or_else(|| anyhow!("manifest: non-integer width")))
+            .collect::<Result<Vec<_>>>()?;
+        let m = Manifest {
+            model: field("model")?,
+            widths,
+            weights_json: field("weights_json")?,
+            weights_bin: field("weights_bin")?,
+            calibration: field("calibration")?,
+            dataset_sha256: field("dataset_sha256")?,
+        };
+        for (name, h) in
+            [("weights_json", &m.weights_json), ("weights_bin", &m.weights_bin), ("calibration", &m.calibration)]
+        {
+            ensure!(is_digest(h), "manifest: '{name}' is not a sha256 digest: '{h}'");
+        }
+        ensure!(
+            m.dataset_sha256.is_empty() || is_digest(&m.dataset_sha256),
+            "manifest: 'dataset_sha256' is neither empty nor a sha256 digest"
+        );
+        Ok(m)
+    }
+
+    /// The canonical byte encoding (sorted-key compact JSON) that both
+    /// the bundle id and the signature are computed over.
+    pub fn canonical_bytes(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
+    }
+
+    /// Content-derived bundle id: hex SHA-256 of the canonical bytes.
+    pub fn bundle_id(&self) -> String {
+        sha256_hex(&self.canonical_bytes())
+    }
+
+    /// Every blob hash this manifest references, in store order.
+    pub fn blob_hashes(&self) -> [&str; 3] {
+        [&self.weights_json, &self.weights_bin, &self.calibration]
+    }
+}
+
+/// A manifest plus its deployment-key signature — the unit that travels
+/// the wire and sits under `registry/manifests/<bundle_id>.json`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SignedManifest {
+    pub manifest: Manifest,
+    /// Names the deployment key that signed (never the secret itself).
+    pub key_id: String,
+    /// Hex HMAC-SHA256 over the manifest's canonical bytes.
+    pub sig: String,
+}
+
+impl SignedManifest {
+    /// Sign `manifest` with the deployment key.
+    pub fn sign(manifest: Manifest, key: &SigningKey) -> Self {
+        let sig = key.sign(&manifest.canonical_bytes());
+        SignedManifest { manifest, key_id: key.key_id.clone(), sig }
+    }
+
+    /// Verify against the local deployment key; returns the bundle id on
+    /// success.  Rejects foreign key ids outright — a correct signature
+    /// under a key we do not hold is indistinguishable from garbage.
+    pub fn verify(&self, key: &SigningKey) -> Result<String> {
+        ensure!(
+            self.key_id == key.key_id,
+            "manifest signed by unknown key '{}' (deployment key is '{}')",
+            self.key_id,
+            key.key_id
+        );
+        let bytes = self.manifest.canonical_bytes();
+        ensure!(
+            key.verify(&bytes, &self.sig),
+            "manifest signature does not verify under deployment key '{}'",
+            key.key_id
+        );
+        Ok(sha256_hex(&bytes))
+    }
+
+    pub fn bundle_id(&self) -> String {
+        self.manifest.bundle_id()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("key_id", Json::Str(self.key_id.clone())),
+            ("manifest", self.manifest.to_json()),
+            ("sig", Json::Str(self.sig.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let manifest = Manifest::from_json(
+            j.get("manifest").ok_or_else(|| anyhow!("signed manifest: missing 'manifest'"))?,
+        )?;
+        let key_id = j
+            .get("key_id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("signed manifest: missing 'key_id'"))?
+            .to_string();
+        let sig = j
+            .get("sig")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("signed manifest: missing 'sig'"))?
+            .to_string();
+        Ok(SignedManifest { manifest, key_id, sig })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            model: "fcnn".into(),
+            widths: vec![784, 48, 24, 10],
+            weights_json: sha256_hex(b"weights json"),
+            weights_bin: sha256_hex(b"weights bin"),
+            calibration: sha256_hex(b"calibration"),
+            dataset_sha256: sha256_hex(b"dataset"),
+        }
+    }
+
+    #[test]
+    fn canonical_bytes_round_trip() {
+        // Serialize → parse → re-serialize must be byte-identical: the
+        // signature and the bundle id both hang on this.
+        let m = sample();
+        let bytes = m.canonical_bytes();
+        let back =
+            Manifest::from_json(&Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap())
+                .unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.canonical_bytes(), bytes);
+        assert_eq!(back.bundle_id(), m.bundle_id());
+        assert!(is_digest(&m.bundle_id()));
+    }
+
+    #[test]
+    fn any_content_change_moves_the_bundle_id() {
+        let m = sample();
+        let mut retrained = m.clone();
+        retrained.weights_bin = sha256_hex(b"weights bin after --force retrain");
+        assert_ne!(m.bundle_id(), retrained.bundle_id());
+        let mut recalibrated = m.clone();
+        recalibrated.calibration = sha256_hex(b"new profile");
+        assert_ne!(m.bundle_id(), recalibrated.bundle_id());
+    }
+
+    #[test]
+    fn signatures_verify_and_reject() {
+        let key = SigningKey::from_secret(vec![1; 32]);
+        let env = SignedManifest::sign(sample(), &key);
+        assert_eq!(env.verify(&key).unwrap(), env.bundle_id());
+
+        // Round trip through JSON keeps the signature valid.
+        let back = SignedManifest::from_json(&Json::parse(&env.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, env);
+        assert_eq!(back.verify(&key).unwrap(), env.bundle_id());
+
+        // Tampered content: same signature over different canonical bytes.
+        let mut tampered = env.clone();
+        tampered.manifest.widths = vec![784, 10];
+        let err = tampered.verify(&key).unwrap_err();
+        assert!(format!("{err:#}").contains("signature"), "{err:#}");
+
+        // Foreign deployment key: refused by key id before any math.
+        let other = SigningKey::from_secret(vec![2; 32]);
+        let err = env.verify(&other).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key"), "{err:#}");
+    }
+
+    #[test]
+    fn malformed_manifests_name_the_field() {
+        let err = Manifest::from_json(&Json::parse(r#"{"model":"fcnn"}"#).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("widths"), "{err:#}");
+        let j = Json::parse(
+            r#"{"calibration":"nope","dataset_sha256":"","model":"fcnn",
+                "weights_bin":"x","weights_json":"y","widths":[784,10]}"#,
+        )
+        .unwrap();
+        let err = Manifest::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("sha256 digest"), "{err:#}");
+    }
+}

@@ -1,0 +1,170 @@
+//! `raca::registry` — signed, content-addressed artifact distribution.
+//!
+//! A fleet of RACA hosts needs to agree on *what model a node serves*
+//! before the bit-parity contract (`trial_stream_base(seed, id)` over
+//! identical weights) means anything.  This subsystem makes that
+//! agreement explicit: a **bundle** is the content-addressed closure of
+//! one deployable model — weight metadata, packed matrices, calibration
+//! profile, dataset digest, layer widths — named by the SHA-256 of its
+//! canonical manifest bytes and signed by the deployment key.  The
+//! discovery flow is then:
+//!
+//! ```text
+//!  raca publish w calib ──► store (blobs + signed manifest)
+//!                              │
+//!  raca serve --listen ────────┘  hello advertises bundle ids (wire v4)
+//!                              ▲
+//!  --topology "remote:@host:port/<bundle>" ── resolve: fetch manifest,
+//!        verify signature + id, bind the leaf, journal bundle_resolved
+//! ```
+//!
+//! # Signing scheme
+//!
+//! Signatures are **HMAC-SHA256 under a shared deployment key** (a
+//! symmetric secret, generated once per artifact directory and copied
+//! to every host of the deployment — see [`sign::SigningKey`]).  Both
+//! primitives are implemented in [`sign`] from the FIPS 180-4 / RFC
+//! 2104 specifications; the repo's no-external-deps posture rules out
+//! an asymmetric-crypto crate, and within one administrative domain a
+//! shared secret gives the property that matters here: a peer that
+//! never held the key cannot mint or alter a manifest that verifies.
+//! It does *not* distinguish publishers from verifiers — any key holder
+//! can sign.  If that distinction ever matters, swap [`sign`] for a
+//! public-key scheme behind the same [`sign::SigningKey`] surface and
+//! bump the key file's shape; manifests and wire frames are unaffected
+//! (they carry opaque `key_id`/`sig` strings).
+//!
+//! Verification is end-to-end and repeated at every hop: the store
+//! re-hashes blobs on read, the listener re-verifies before vouching,
+//! and the resolving client verifies again under its own key — a
+//! registry peer can deny service but never substitute content.
+//!
+//! # Wire coupling and bump rules
+//!
+//! The registry vocabulary rode in with wire **v4** (see
+//! [`crate::serve::net::wire`]): `hello.bundles`, `bundles_req`/
+//! `bundles`, `manifest_fetch`/`manifest`, `blob_fetch`/`blob`,
+//! `publish`/`publish_ok` — all additive, so the v1 floor stands and a
+//! pre-v4 listener simply answers registry frames with its generic
+//! `error`.  Rules for growing this surface: new *fields* inside the
+//! manifest change the canonical bytes and therefore mint new bundle
+//! ids — old bundles stay valid, so that is additive; a new *frame* or
+//! optional field bumps `PROTOCOL_VERSION` per the wire module's rules;
+//! changing the signing scheme or hash function is **breaking** — raise
+//! `MIN_PROTOCOL_VERSION` so pre-break peers are refused rather than
+//! fed envelopes they would mis-verify.
+
+pub mod client;
+pub mod manifest;
+pub mod sign;
+pub mod store;
+
+pub use client::{resolve, RegistryClient};
+pub use manifest::{Manifest, SignedManifest};
+pub use sign::{key_path, sha256_hex, SigningKey};
+pub use store::Store;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Publish a trained model from disk into a local store: read
+/// `<weights_prefix>.{json,bin}` and the calibration profile, blob each,
+/// build + sign the manifest, and store the envelope.  `dataset`, when
+/// given, is hashed into the manifest so resolvers can pin the exact
+/// evaluation set.  Returns the bundle id and the signed envelope
+/// (which [`RegistryClient::publish`] can forward to a remote listener).
+pub fn publish_local(
+    store: &Store,
+    key: &SigningKey,
+    weights_prefix: &Path,
+    calibration: &Path,
+    dataset: Option<&Path>,
+) -> Result<(String, SignedManifest)> {
+    let json_path = weights_prefix.with_extension("json");
+    let bin_path = weights_prefix.with_extension("bin");
+    let meta_bytes = std::fs::read(&json_path)
+        .with_context(|| format!("reading {}", json_path.display()))?;
+    let bin_bytes =
+        std::fs::read(&bin_path).with_context(|| format!("reading {}", bin_path.display()))?;
+    let calib_bytes = std::fs::read(calibration)
+        .with_context(|| format!("reading {}", calibration.display()))?;
+
+    // Widths come from the weights metadata itself, so the manifest can
+    // never disagree with the blobs it names.
+    let meta = crate::util::json::Json::parse(
+        std::str::from_utf8(&meta_bytes).context("weights metadata is not UTF-8")?,
+    )
+    .with_context(|| format!("parsing {}", json_path.display()))?;
+    let widths: Vec<usize> = meta
+        .get("layers")
+        .and_then(crate::util::json::Json::as_arr)
+        .with_context(|| format!("{}: missing 'layers'", json_path.display()))?
+        .iter()
+        .filter_map(crate::util::json::Json::as_usize)
+        .collect();
+
+    let dataset_sha256 = match dataset {
+        Some(p) => {
+            let bytes =
+                std::fs::read(p).with_context(|| format!("reading {}", p.display()))?;
+            sha256_hex(&bytes)
+        }
+        None => String::new(),
+    };
+
+    let manifest = Manifest {
+        model: "fcnn".to_string(),
+        widths,
+        weights_json: store.put_blob(&meta_bytes)?,
+        weights_bin: store.put_blob(&bin_bytes)?,
+        calibration: store.put_blob(&calib_bytes)?,
+        dataset_sha256,
+    };
+    let env = SignedManifest::sign(manifest, key);
+    let id = store.put_manifest(&env)?;
+    Ok((id, env))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_local_builds_a_resolvable_bundle() {
+        let dir = std::env::temp_dir()
+            .join(format!("raca-registry-pub-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("weights")).unwrap();
+        // A tiny but well-formed weights pair + calibration profile.
+        let spec = crate::nn::ModelSpec::new(vec![784, 4, 10]);
+        let mats = (0..spec.num_layers())
+            .map(|l| {
+                let (r, c) = spec.layer_shape(l);
+                vec![0.01f32; r * c]
+            })
+            .collect();
+        let w = crate::nn::Weights { spec, mats, ideal_test_accuracy: 0.5 };
+        let prefix = dir.join("weights").join("fcnn");
+        w.save(&prefix).unwrap();
+        let calib = dir.join("calib.json");
+        std::fs::write(&calib, br#"{"theta":3.0}"#).unwrap();
+
+        let store = Store::open(&dir);
+        let key = SigningKey::from_secret(vec![7; 32]);
+        let (id, env) = publish_local(&store, &key, &prefix, &calib, None).unwrap();
+        assert_eq!(env.bundle_id(), id);
+        assert_eq!(env.manifest.widths, vec![784, 4, 10]);
+        assert_eq!(env.verify(&key).unwrap(), id);
+        assert_eq!(store.list().unwrap(), vec![id.clone()]);
+        // Every referenced blob landed and round-trips.
+        for h in env.manifest.blob_hashes() {
+            assert!(store.has_blob(h));
+            store.get_blob(h).unwrap();
+        }
+        // Publishing the identical artifacts again is idempotent.
+        let (id2, _) = publish_local(&store, &key, &prefix, &calib, None).unwrap();
+        assert_eq!(id2, id);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,412 @@
+//! Hashing and signing for the artifact registry — self-contained, no
+//! new dependencies.
+//!
+//! * **Content addressing** uses SHA-256 (FIPS 180-4), implemented here
+//!   in ~100 lines and pinned to the standard test vectors below.  Blob
+//!   names and bundle ids are lowercase hex digests.
+//! * **Signing** is HMAC-SHA256 (RFC 2104) under a *deployment key*: one
+//!   `(key_id, secret)` pair shared by every publisher and resolver of a
+//!   deployment, stored at `<artifact-dir>/registry/keys/key.json`.  A
+//!   symmetric scheme is deliberate: the crate vendors no bignum or
+//!   curve arithmetic, and the threat model is "only holders of the
+//!   deployment secret may publish or vouch for bundles" — which HMAC
+//!   delivers exactly.  The seam is narrow (`sign`/`verify` on canonical
+//!   manifest bytes), so swapping in ed25519 later changes this file
+//!   only.
+//! * Key generation has no OS RNG to lean on either; entropy is distilled
+//!   by hashing several independently seeded `RandomState` hashers (each
+//!   draws fresh process randomness) together with the wall clock and
+//!   pid.  Good enough for a deployment secret; not a general CSPRNG.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+// ---------------------------------------------------------------------------
+// SHA-256 (FIPS 180-4)
+// ---------------------------------------------------------------------------
+
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+    0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+    0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+    0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+    0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+    0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+    0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+    0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+    0xc67178f2,
+];
+
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+    0x5be0cd19,
+];
+
+/// Streaming SHA-256 state.
+pub struct Sha256 {
+    h: [u32; 8],
+    buf: [u8; 64],
+    buflen: usize,
+    total: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Self {
+        Sha256 { h: H0, buf: [0; 64], buflen: 0, total: 0 }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total = self.total.wrapping_add(data.len() as u64);
+        if self.buflen > 0 {
+            let take = (64 - self.buflen).min(data.len());
+            self.buf[self.buflen..self.buflen + take].copy_from_slice(&data[..take]);
+            self.buflen += take;
+            data = &data[take..];
+            if self.buflen == 64 {
+                let block = self.buf;
+                compress(&mut self.h, &block);
+                self.buflen = 0;
+            }
+        }
+        while data.len() >= 64 {
+            compress(&mut self.h, data[..64].try_into().expect("64-byte block"));
+            data = &data[64..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buflen = data.len();
+        }
+    }
+
+    pub fn finish(mut self) -> [u8; 32] {
+        let bits = self.total.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.buflen != 56 {
+            self.update(&[0]);
+        }
+        self.update(&bits.to_be_bytes());
+        debug_assert_eq!(self.buflen, 0);
+        let mut out = [0u8; 32];
+        for (i, word) in self.h.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&word.to_be_bytes());
+        }
+        out
+    }
+}
+
+fn compress(h: &mut [u32; 8], block: &[u8; 64]) {
+    let mut w = [0u32; 64];
+    for (i, word) in w.iter_mut().take(16).enumerate() {
+        *word = u32::from_be_bytes(block[4 * i..4 * i + 4].try_into().expect("4-byte word"));
+    }
+    for i in 16..64 {
+        let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+        let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+        w[i] = w[i - 16].wrapping_add(s0).wrapping_add(w[i - 7]).wrapping_add(s1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = *h;
+    for i in 0..64 {
+        let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+        let ch = (e & f) ^ (!e & g);
+        let t1 = hh.wrapping_add(s1).wrapping_add(ch).wrapping_add(K[i]).wrapping_add(w[i]);
+        let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+        let maj = (a & b) ^ (a & c) ^ (b & c);
+        let t2 = s0.wrapping_add(maj);
+        hh = g;
+        g = f;
+        f = e;
+        e = d.wrapping_add(t1);
+        d = c;
+        c = b;
+        b = a;
+        a = t1.wrapping_add(t2);
+    }
+    for (slot, v) in h.iter_mut().zip([a, b, c, d, e, f, g, hh]) {
+        *slot = slot.wrapping_add(v);
+    }
+}
+
+/// One-shot SHA-256.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finish()
+}
+
+/// One-shot SHA-256 as the registry's canonical lowercase-hex digest.
+pub fn sha256_hex(data: &[u8]) -> String {
+    hex(&sha256(data))
+}
+
+/// HMAC-SHA256 (RFC 2104).
+pub fn hmac_sha256(key: &[u8], msg: &[u8]) -> [u8; 32] {
+    let mut k = [0u8; 64];
+    if key.len() > 64 {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut inner = Sha256::new();
+    let ipad: Vec<u8> = k.iter().map(|b| b ^ 0x36).collect();
+    inner.update(&ipad);
+    inner.update(msg);
+    let inner_digest = inner.finish();
+    let mut outer = Sha256::new();
+    let opad: Vec<u8> = k.iter().map(|b| b ^ 0x5c).collect();
+    outer.update(&opad);
+    outer.update(&inner_digest);
+    outer.finish()
+}
+
+/// Lowercase hex encoding.
+pub fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Inverse of [`hex`]; rejects odd lengths and non-hex characters.
+pub fn unhex(s: &str) -> Result<Vec<u8>> {
+    ensure!(s.is_ascii(), "hex string contains non-ASCII characters");
+    ensure!(s.len() % 2 == 0, "odd-length hex string ({} chars)", s.len());
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&s[i..i + 2], 16)
+                .map_err(|_| anyhow!("bad hex byte '{}'", &s[i..i + 2]))
+        })
+        .collect()
+}
+
+/// A hex string shaped like a SHA-256 digest (64 lowercase hex chars) —
+/// the validity gate for blob hashes and bundle ids before they are used
+/// as file names or wire fields.
+pub fn is_digest(s: &str) -> bool {
+    s.len() == 64 && s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+}
+
+// ---------------------------------------------------------------------------
+// Deployment signing key
+// ---------------------------------------------------------------------------
+
+/// The shared deployment key: `key_id` names it on the wire and in signed
+/// envelopes; `secret` never leaves `key.json`.
+#[derive(Clone, PartialEq, Eq)]
+pub struct SigningKey {
+    pub key_id: String,
+    secret: Vec<u8>,
+}
+
+impl std::fmt::Debug for SigningKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Never print the secret — key material ends up in logs otherwise.
+        write!(f, "SigningKey({})", self.key_id)
+    }
+}
+
+/// Where a deployment's key lives under its artifact directory.
+pub fn key_path(artifact_dir: &Path) -> PathBuf {
+    artifact_dir.join("registry").join("keys").join("key.json")
+}
+
+impl SigningKey {
+    /// Derive a key from explicit secret bytes; `key_id` is the first 8
+    /// hex chars of the secret's digest (safe to share — it only *names*
+    /// the key).
+    pub fn from_secret(secret: Vec<u8>) -> Self {
+        let key_id = sha256_hex(&secret)[..8].to_string();
+        SigningKey { key_id, secret }
+    }
+
+    /// Generate a fresh 32-byte deployment secret (see the module docs
+    /// for the entropy story).
+    pub fn generate() -> Self {
+        use std::collections::hash_map::RandomState;
+        use std::hash::{BuildHasher, Hasher};
+        let mut h = Sha256::new();
+        for i in 0u64..4 {
+            let mut hs = RandomState::new().build_hasher();
+            hs.write_u64(i);
+            h.update(&hs.finish().to_le_bytes());
+        }
+        let now = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default();
+        h.update(&now.as_nanos().to_le_bytes());
+        h.update(&std::process::id().to_le_bytes());
+        Self::from_secret(h.finish().to_vec())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading signing key {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("signing key {}: {e}", path.display()))?;
+        let secret_hex = j
+            .get("secret")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("signing key {}: missing 'secret'", path.display()))?;
+        let key = Self::from_secret(unhex(secret_hex)?);
+        // The stored key_id is advisory (always re-derived from the
+        // secret), but a mismatch means the file was hand-edited.
+        if let Some(stored) = j.get("key_id").and_then(Json::as_str) {
+            ensure!(
+                stored == key.key_id,
+                "signing key {}: key_id '{stored}' does not match the secret (expected '{}')",
+                path.display(),
+                key.key_id
+            );
+        }
+        Ok(key)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating key directory {}", dir.display()))?;
+        }
+        let j = obj(vec![
+            ("key_id", Json::Str(self.key_id.clone())),
+            ("secret", Json::Str(hex(&self.secret))),
+        ]);
+        super::store::atomic_write(path, format!("{j}\n").as_bytes())
+            .with_context(|| format!("writing signing key {}", path.display()))
+    }
+
+    /// Load the deployment key under `artifact_dir`, generating and
+    /// persisting one on first use.
+    pub fn load_or_generate(artifact_dir: &Path) -> Result<Self> {
+        let path = key_path(artifact_dir);
+        if path.exists() {
+            return Self::load(&path);
+        }
+        let key = Self::generate();
+        key.save(&path)?;
+        log::info!("generated deployment signing key {} at {}", key.key_id, path.display());
+        Ok(key)
+    }
+
+    /// Hex HMAC-SHA256 signature over `msg`.
+    pub fn sign(&self, msg: &[u8]) -> String {
+        hex(&hmac_sha256(&self.secret, msg))
+    }
+
+    /// Verify a hex signature over `msg` (constant-time comparison).
+    pub fn verify(&self, msg: &[u8], sig_hex: &str) -> bool {
+        let Ok(got) = unhex(sig_hex) else { return false };
+        let want = hmac_sha256(&self.secret, msg);
+        if got.len() != want.len() {
+            return false;
+        }
+        got.iter().zip(want.iter()).fold(0u8, |acc, (a, b)| acc | (a ^ b)) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_matches_fips_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // A million 'a's, streamed in awkward chunk sizes: exercises the
+        // buffering path across block boundaries.
+        let mut h = Sha256::new();
+        let chunk = [b'a'; 997];
+        let mut left = 1_000_000usize;
+        while left > 0 {
+            let take = left.min(chunk.len());
+            h.update(&chunk[..take]);
+            left -= take;
+        }
+        assert_eq!(
+            hex(&h.finish()),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    #[test]
+    fn hmac_matches_rfc4231_vectors() {
+        // RFC 4231 test case 2.
+        assert_eq!(
+            hex(&hmac_sha256(b"Jefe", b"what do ya want for nothing?")),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+        // Test case 1: 20 bytes of 0x0b, "Hi There".
+        assert_eq!(
+            hex(&hmac_sha256(&[0x0b; 20], b"Hi There")),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+        // Test case 6: a key longer than one block goes through the
+        // hash-the-key path.
+        assert_eq!(
+            hex(&hmac_sha256(
+                &[0xaa; 131],
+                b"Test Using Larger Than Block-Size Key - Hash Key First"
+            )),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+
+    #[test]
+    fn hex_round_trips_and_rejects_garbage() {
+        let bytes: Vec<u8> = (0..=255).collect();
+        assert_eq!(unhex(&hex(&bytes)).unwrap(), bytes);
+        assert!(unhex("abc").is_err()); // odd length
+        assert!(unhex("zz").is_err()); // not hex
+        assert!(is_digest(&sha256_hex(b"x")));
+        assert!(!is_digest("abc"));
+        assert!(!is_digest(&"A".repeat(64))); // uppercase is not canonical
+        assert!(!is_digest(&"../".repeat(21)));
+    }
+
+    #[test]
+    fn keys_sign_and_verify() {
+        let key = SigningKey::from_secret(vec![7; 32]);
+        let sig = key.sign(b"canonical bytes");
+        assert!(key.verify(b"canonical bytes", &sig));
+        assert!(!key.verify(b"tampered bytes", &sig));
+        assert!(!key.verify(b"canonical bytes", "feed"));
+        assert!(!key.verify(b"canonical bytes", "not hex!"));
+        // A different deployment key refuses the signature.
+        let other = SigningKey::from_secret(vec![8; 32]);
+        assert!(!other.verify(b"canonical bytes", &sig));
+        assert_ne!(key.key_id, other.key_id);
+        // Debug never leaks the secret.
+        assert!(!format!("{key:?}").contains(&hex(&[7u8; 32])));
+    }
+
+    #[test]
+    fn key_persists_through_save_and_load() {
+        let dir = std::env::temp_dir().join(format!("raca-sign-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = key_path(&dir);
+        let key = SigningKey::generate();
+        key.save(&path).unwrap();
+        let back = SigningKey::load(&path).unwrap();
+        assert_eq!(key, back);
+        // load_or_generate finds the existing key instead of minting one.
+        let again = SigningKey::load_or_generate(&dir).unwrap();
+        assert_eq!(again.key_id, key.key_id);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,295 @@
+//! Content-addressed artifact store under `<artifact-dir>/registry/`.
+//!
+//! Layout:
+//!
+//! ```text
+//! <artifact-dir>/registry/
+//!   blobs/<hex-sha256>          # raw artifact bytes, named by digest
+//!   manifests/<bundle-id>.json  # SignedManifest envelopes
+//!   keys/key.json               # the deployment signing key (sign.rs)
+//! ```
+//!
+//! Invariants:
+//!
+//! * **Atomic writes** — every file lands via write-to-temp + rename, so
+//!   a crashed publish never leaves a half-written blob behind for a
+//!   reader to hash.
+//! * **Garbage-safe reads** — [`Store::get_blob`] re-hashes what it read
+//!   and refuses a mismatch; [`Store::get_manifest`] re-derives the
+//!   bundle id from the envelope's canonical bytes and compares it to
+//!   the file name.  On-disk corruption (bit rot, hand editing, a
+//!   tampering peer with filesystem access) is detected at read time,
+//!   never served.
+//! * **No silent overwrites** — the put path treats an existing path
+//!   with *different* bytes as a hard error instead of replacing it.
+//!   Identical bytes are a dedup no-op.  This is what makes `raca train
+//!   --force` + publish safe: retrained weights are different bytes,
+//!   hence a different digest, hence new blobs and a **new bundle id** —
+//!   the old bundle's blobs are never touched.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::manifest::SignedManifest;
+use super::sign::{is_digest, sha256_hex};
+use crate::util::json::Json;
+
+/// Atomic file write: temp file in the target directory, then rename.
+pub(crate) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path.parent().context("atomic write target has no parent directory")?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating directory {}", dir.display()))?;
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("artifact");
+    let tmp = dir.join(format!(".{name}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing temp file {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("renaming {} into place", path.display())
+    })
+}
+
+/// Handle on one artifact directory's registry tree.  Cheap to clone —
+/// all state lives on disk.
+#[derive(Debug, Clone)]
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    /// Open (lazily — directories are created on first put) the registry
+    /// under `artifact_dir`.
+    pub fn open(artifact_dir: impl AsRef<Path>) -> Self {
+        Store { root: artifact_dir.as_ref().join("registry") }
+    }
+
+    /// The `registry/` root this store reads and writes.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn blob_path(&self, hash: &str) -> PathBuf {
+        self.root.join("blobs").join(hash)
+    }
+
+    fn manifest_path(&self, id: &str) -> PathBuf {
+        self.root.join("manifests").join(format!("{id}.json"))
+    }
+
+    /// Store `bytes` under their digest; returns the blob hash.
+    /// Identical existing content is a dedup no-op; differing existing
+    /// content is a collision error (see the module invariants).
+    pub fn put_blob(&self, bytes: &[u8]) -> Result<String> {
+        let hash = sha256_hex(bytes);
+        let path = self.blob_path(&hash);
+        if path.exists() {
+            let existing = std::fs::read(&path)
+                .with_context(|| format!("reading existing blob {}", path.display()))?;
+            if existing == bytes {
+                return Ok(hash); // content-addressed dedup
+            }
+            bail!(
+                "blob {hash} already exists with different bytes ({} vs {} on disk) — \
+                 refusing to overwrite; the store is corrupt",
+                bytes.len(),
+                existing.len()
+            );
+        }
+        atomic_write(&path, bytes)?;
+        Ok(hash)
+    }
+
+    /// Read a blob and verify its bytes still hash to its name.
+    pub fn get_blob(&self, hash: &str) -> Result<Vec<u8>> {
+        ensure!(is_digest(hash), "'{hash}' is not a blob hash");
+        let path = self.blob_path(hash);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading blob {}", path.display()))?;
+        let actual = sha256_hex(&bytes);
+        ensure!(
+            actual == hash,
+            "blob {hash} is corrupt: stored bytes hash to {actual}"
+        );
+        Ok(bytes)
+    }
+
+    /// Whether a blob with this hash is present (no integrity check).
+    pub fn has_blob(&self, hash: &str) -> bool {
+        is_digest(hash) && self.blob_path(hash).exists()
+    }
+
+    /// Store a signed manifest under its content-derived bundle id.
+    /// Same no-overwrite rule as blobs.
+    pub fn put_manifest(&self, env: &SignedManifest) -> Result<String> {
+        let id = env.bundle_id();
+        let bytes = format!("{}\n", env.to_json()).into_bytes();
+        let path = self.manifest_path(&id);
+        if path.exists() {
+            let existing = std::fs::read(&path)
+                .with_context(|| format!("reading existing manifest {}", path.display()))?;
+            if existing == bytes {
+                return Ok(id);
+            }
+            bail!(
+                "bundle {id} already exists with a different envelope — refusing to \
+                 overwrite (same content re-signed under another key?)"
+            );
+        }
+        atomic_write(&path, &bytes)?;
+        Ok(id)
+    }
+
+    /// Load a signed manifest and verify the envelope still matches its
+    /// bundle id.  Signature checking is the caller's job (it needs the
+    /// deployment key); this guards the *content addressing* invariant.
+    pub fn get_manifest(&self, id: &str) -> Result<SignedManifest> {
+        ensure!(is_digest(id), "'{id}' is not a bundle id");
+        let path = self.manifest_path(id);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest {}: {e}", path.display()))?;
+        let env = SignedManifest::from_json(&j)
+            .with_context(|| format!("manifest {}", path.display()))?;
+        let actual = env.bundle_id();
+        ensure!(
+            actual == id,
+            "manifest {id} is corrupt: stored content hashes to bundle id {actual}"
+        );
+        Ok(env)
+    }
+
+    /// All bundle ids in the store, sorted.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let dir = self.root.join("manifests");
+        if !dir.exists() {
+            return Ok(Vec::new());
+        }
+        let mut ids = Vec::new();
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("listing manifests in {}", dir.display()))?
+        {
+            let entry = entry.context("reading manifest directory entry")?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(id) = name.strip_suffix(".json") {
+                if is_digest(id) {
+                    ids.push(id.to_string());
+                }
+            }
+        }
+        ids.sort_unstable();
+        Ok(ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::manifest::Manifest;
+    use crate::registry::sign::SigningKey;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("raca-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_manifest(store: &Store) -> Manifest {
+        Manifest {
+            model: "fcnn".into(),
+            widths: vec![784, 16, 10],
+            weights_json: store.put_blob(b"{\"layers\":3}").unwrap(),
+            weights_bin: store.put_blob(&[1, 2, 3, 4]).unwrap(),
+            calibration: store.put_blob(b"{\"theta\":3.0}").unwrap(),
+            dataset_sha256: String::new(),
+        }
+    }
+
+    #[test]
+    fn blobs_round_trip_and_dedup() {
+        let dir = scratch("blob");
+        let store = Store::open(&dir);
+        let h = store.put_blob(b"hello blobs").unwrap();
+        assert!(store.has_blob(&h));
+        assert_eq!(store.get_blob(&h).unwrap(), b"hello blobs");
+        // Re-putting identical bytes is a no-op, not an error.
+        assert_eq!(store.put_blob(b"hello blobs").unwrap(), h);
+        // Unknown and malformed hashes are errors, not panics.
+        assert!(store.get_blob(&"0".repeat(64)).is_err());
+        assert!(store.get_blob("../../etc/passwd").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampered_blob_is_refused_at_read_time() {
+        let dir = scratch("tamper");
+        let store = Store::open(&dir);
+        let h = store.put_blob(b"pristine weights").unwrap();
+        // Byte-flip the stored artifact behind the store's back.
+        let path = dir.join("registry").join("blobs").join(&h);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = store.get_blob(&h).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn collision_check_guards_the_put_path() {
+        let dir = scratch("collide");
+        let store = Store::open(&dir);
+        let h = store.put_blob(b"original").unwrap();
+        // Simulate a corrupt store: different bytes already sitting at
+        // this hash's path (a real sha256 collision being unavailable).
+        std::fs::write(dir.join("registry").join("blobs").join(&h), b"imposter").unwrap();
+        let err = store.put_blob(b"original").unwrap_err();
+        assert!(format!("{err:#}").contains("refusing to overwrite"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifests_round_trip_and_list() {
+        let dir = scratch("manifest");
+        let store = Store::open(&dir);
+        let key = SigningKey::from_secret(vec![3; 32]);
+        let env = SignedManifest::sign(sample_manifest(&store), &key);
+        let id = store.put_manifest(&env).unwrap();
+        assert_eq!(store.get_manifest(&id).unwrap(), env);
+        assert_eq!(store.list().unwrap(), vec![id.clone()]);
+        // Idempotent re-put.
+        assert_eq!(store.put_manifest(&env).unwrap(), id);
+        // Same manifest signed under another key: same bundle id,
+        // different envelope bytes — refused, not replaced.
+        let other = SigningKey::from_secret(vec![4; 32]);
+        let resigned = SignedManifest::sign(env.manifest.clone(), &other);
+        assert!(store.put_manifest(&resigned).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retrain_produces_a_new_bundle_id_not_an_overwrite() {
+        let dir = scratch("retrain");
+        let store = Store::open(&dir);
+        let key = SigningKey::from_secret(vec![5; 32]);
+        let first = SignedManifest::sign(sample_manifest(&store), &key);
+        let first_id = store.put_manifest(&first).unwrap();
+
+        // `raca train --force` writes new weight bytes; publishing again
+        // stores new blobs and a new manifest, leaving the old bundle
+        // fully intact.
+        let mut retrained = first.manifest.clone();
+        retrained.weights_bin = store.put_blob(&[9, 9, 9, 9]).unwrap();
+        let second = SignedManifest::sign(retrained, &key);
+        let second_id = store.put_manifest(&second).unwrap();
+
+        assert_ne!(first_id, second_id);
+        let mut want = vec![first_id.clone(), second_id.clone()];
+        want.sort_unstable();
+        assert_eq!(store.list().unwrap(), want);
+        assert_eq!(store.get_manifest(&first_id).unwrap(), first);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -40,3 +40,49 @@ pub fn default_artifact_dir() -> std::path::PathBuf {
     }
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
+
+/// Resolve the artifact directory for one command, in precedence order:
+/// the `--artifact-dir` flag, the `RACA_ARTIFACT_DIR` environment
+/// variable, the `"artifacts"` config key (validated to exist at config
+/// parse — see [`crate::config::RunConfig`]), then
+/// [`default_artifact_dir`] (which itself honors the older
+/// `RACA_ARTIFACTS` variable for compatibility).
+pub fn resolve_artifact_dir(
+    flag: Option<&std::path::Path>,
+    config: Option<&std::path::Path>,
+) -> std::path::PathBuf {
+    if let Some(p) = flag {
+        return p.to_path_buf();
+    }
+    if let Ok(d) = std::env::var("RACA_ARTIFACT_DIR") {
+        if !d.is_empty() {
+            return std::path::PathBuf::from(d);
+        }
+    }
+    if let Some(p) = config {
+        return p.to_path_buf();
+    }
+    default_artifact_dir()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn artifact_dir_precedence_is_flag_config_default() {
+        // CI never sets RACA_ARTIFACT_DIR, but guard the assertions so a
+        // developer shell with it exported doesn't see spurious failures
+        // (env mutation in-process would race parallel tests).
+        if std::env::var("RACA_ARTIFACT_DIR").is_ok() {
+            return;
+        }
+        let flag = Path::new("/from/flag");
+        let conf = Path::new("/from/config");
+        assert_eq!(resolve_artifact_dir(Some(flag), Some(conf)), flag);
+        assert_eq!(resolve_artifact_dir(Some(flag), None), flag);
+        assert_eq!(resolve_artifact_dir(None, Some(conf)), conf);
+        assert_eq!(resolve_artifact_dir(None, None), default_artifact_dir());
+    }
+}

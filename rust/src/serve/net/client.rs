@@ -97,6 +97,9 @@ pub struct RemoteBackend {
     /// Deployment journal, attached after connect by [`Self::with_journal`]
     /// (shared with the reader thread so session drop is recorded).
     journal: JournalSlot,
+    /// Registry bundle id this leaf was resolved from (`remote:@` leaves
+    /// only); surfaces in [`Backend::metrics_tree`] node notes.
+    bundle: Option<String>,
     reader: Option<JoinHandle<()>>,
 }
 
@@ -148,14 +151,17 @@ impl RemoteBackend {
             })?
             .ok_or_else(|| anyhow!("{addr} closed the connection during the handshake"))?;
         match wire::decode(&j).with_context(|| format!("bad hello from {addr}"))? {
-            WireMsg::Hello { version } => {
+            WireMsg::Hello { version, .. } => {
                 wire::check_version(version).with_context(|| format!("peer {addr}"))?
             }
             WireMsg::Error { msg, .. } => bail!("{addr} refused the session: {msg}"),
             other => bail!("{addr} opened with {other:?} instead of hello"),
         }
-        json::write_frame(&mut wstream, &wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION }))
-            .with_context(|| format!("answering hello to {addr}"))?;
+        json::write_frame(
+            &mut wstream,
+            &wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION, bundles: Vec::new() }),
+        )
+        .with_context(|| format!("answering hello to {addr}"))?;
         // Sessions are long-lived and idle reads are normal: clear the
         // handshake deadline so the reader thread never sees a spurious
         // timeout and drops a healthy session.
@@ -190,6 +196,7 @@ impl RemoteBackend {
             dead,
             last_tree,
             journal,
+            bundle: None,
             reader: Some(reader),
         })
     }
@@ -203,6 +210,13 @@ impl RemoteBackend {
             format!("proto v{PROTOCOL_VERSION}"),
         );
         *self.journal.lock().unwrap() = Some(journal);
+        self
+    }
+
+    /// Tag this session with the registry bundle id it was resolved from
+    /// (set by `serve::plan` for `remote:@<registry>/<bundle>` leaves).
+    pub(crate) fn with_bundle(mut self, bundle: String) -> Self {
+        self.bundle = Some(bundle);
         self
     }
 
@@ -359,7 +373,8 @@ impl Backend for RemoteBackend {
     /// the peer's whole subtree as its one child (tagged stale if it is
     /// a cached copy of a dead session).
     fn metrics_tree(&self) -> MetricsTree {
-        let root = MetricsTree::leaf(format!("remote:{}", self.addr), self.local.snapshot());
+        let mut root = MetricsTree::leaf(format!("remote:{}", self.addr), self.local.snapshot());
+        root.notes.bundle = self.bundle.clone();
         match self.remote_telemetry().or_else(|| self.cached()) {
             Some((tree, _)) => root.with_children(vec![tree]),
             None if self.is_dead() => root.tagged_stale(),

@@ -37,5 +37,5 @@ pub mod server;
 pub mod wire;
 
 pub use client::RemoteBackend;
-pub use server::{serve, NetServer};
+pub use server::{serve, serve_registry, NetServer, RegistryConfig};
 pub use wire::{WireError, WireMsg, PROTOCOL_VERSION};

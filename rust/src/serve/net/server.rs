@@ -23,6 +23,17 @@
 //! backend finishes admitted work by contract).  Dropping the
 //! [`NetServer`] stops the accept loop; live sessions keep the backend
 //! alive through their `Arc` until they drain.
+//!
+//! Registry (v4): [`serve_registry`] additionally attaches a
+//! [`RegistryConfig`] — a content-addressed [`Store`] plus the
+//! deployment [`SigningKey`].  The hello then advertises the served
+//! bundle ids, and sessions answer the registry vocabulary
+//! (`bundles_req`, `manifest_fetch`, `blob_fetch`, `publish`).  The
+//! listener *re-verifies* before vouching: a fetched manifest's blobs
+//! are re-hashed and a published envelope's signature and blob digests
+//! are checked, so a tampered store or a forged publish is refused with
+//! an `Error` frame and a `manifest_rejected` journal event rather than
+//! propagated.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -33,6 +44,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::registry::{sign, SignedManifest, SigningKey, Store};
 use crate::telemetry::EventKind;
 use crate::util::json;
 
@@ -54,9 +66,35 @@ pub struct NetServer {
     _backend: Arc<dyn Backend>,
 }
 
+/// What a registry-serving listener holds: the artifact store it
+/// advertises and publishes into, and the deployment key it verifies
+/// manifests against.
+pub struct RegistryConfig {
+    pub store: Store,
+    pub key: SigningKey,
+}
+
 /// Bind `addr` (e.g. `"0.0.0.0:7433"`; port 0 picks a free port — see
 /// [`NetServer::addr`]) and serve `backend` to every connection.
 pub fn serve(backend: Box<dyn Backend>, addr: &str) -> Result<NetServer> {
+    serve_inner(backend, addr, None)
+}
+
+/// [`serve`] plus a registry: the hello advertises the store's bundle
+/// ids and sessions answer the v4 registry vocabulary.
+pub fn serve_registry(
+    backend: Box<dyn Backend>,
+    addr: &str,
+    registry: RegistryConfig,
+) -> Result<NetServer> {
+    serve_inner(backend, addr, Some(Arc::new(registry)))
+}
+
+fn serve_inner(
+    backend: Box<dyn Backend>,
+    addr: &str,
+    registry: Option<Arc<RegistryConfig>>,
+) -> Result<NetServer> {
     let backend: Arc<dyn Backend> = Arc::from(backend);
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("binding serve listener on {addr}"))?;
@@ -72,9 +110,10 @@ pub fn serve(backend: Box<dyn Backend>, addr: &str) -> Result<NetServer> {
         let stop = stop.clone();
         let backend = backend.clone();
         let sessions_started = sessions_started.clone();
+        let registry = registry.clone();
         std::thread::Builder::new()
             .name("raca-net-accept".into())
-            .spawn(move || accept_loop(listener, backend, stop, sessions_started))
+            .spawn(move || accept_loop(listener, backend, registry, stop, sessions_started))
             .context("spawning accept thread")?
     };
     log::info!("serve listener on {local} (protocol v{PROTOCOL_VERSION})");
@@ -115,6 +154,7 @@ impl Drop for NetServer {
 fn accept_loop(
     listener: TcpListener,
     backend: Arc<dyn Backend>,
+    registry: Option<Arc<RegistryConfig>>,
     stop: Arc<AtomicBool>,
     sessions_started: Arc<AtomicU64>,
 ) {
@@ -127,10 +167,11 @@ fn accept_loop(
                 let _ = stream.set_nonblocking(false);
                 sessions_started.fetch_add(1, Relaxed);
                 let backend = backend.clone();
+                let registry = registry.clone();
                 let spawned = std::thread::Builder::new()
                     .name("raca-net-session".into())
                     .spawn(move || {
-                        if let Err(e) = session(stream, backend) {
+                        if let Err(e) = session(stream, backend, registry) {
                             log::warn!("session with {peer} ended with error: {e:#}");
                         }
                     });
@@ -156,7 +197,11 @@ fn send(w: &Mutex<TcpStream>, msg: &WireMsg) -> std::io::Result<()> {
     json::write_frame(&mut *guard, &wire::encode(msg))
 }
 
-fn session(stream: TcpStream, backend: Arc<dyn Backend>) -> Result<()> {
+fn session(
+    stream: TcpStream,
+    backend: Arc<dyn Backend>,
+    registry: Option<Arc<RegistryConfig>>,
+) -> Result<()> {
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
@@ -165,13 +210,24 @@ fn session(stream: TcpStream, backend: Arc<dyn Backend>) -> Result<()> {
     let mut read = BufReader::new(stream);
 
     // Handshake: the listener speaks first, the client must answer with a
-    // matching hello before anything else.
-    send(&write, &WireMsg::Hello { version: PROTOCOL_VERSION }).context("sending hello")?;
+    // matching hello before anything else.  With a registry attached, the
+    // hello advertises the served bundle ids (a failed listing is logged
+    // and advertised as nothing — advertisement is advisory, resolution
+    // re-verifies everything anyway).
+    let bundles = match &registry {
+        Some(r) => r.store.list().unwrap_or_else(|e| {
+            log::warn!("listing registry bundles for hello: {e:#}");
+            Vec::new()
+        }),
+        None => Vec::new(),
+    };
+    send(&write, &WireMsg::Hello { version: PROTOCOL_VERSION, bundles })
+        .context("sending hello")?;
     let Some(j) = json::read_frame(&mut read).context("reading client hello")? else {
         return Ok(()); // probed-and-closed (port scan, health check)
     };
     match wire::decode(&j) {
-        Ok(WireMsg::Hello { version }) => {
+        Ok(WireMsg::Hello { version, .. }) => {
             if let Err(e) = wire::check_version(version) {
                 let _ = send(&write, &WireMsg::Error { id: None, msg: e.to_string() });
                 bail!("{e}");
@@ -211,7 +267,7 @@ fn session(stream: TcpStream, backend: Arc<dyn Backend>) -> Result<()> {
             .context("spawning session pump")?
     };
 
-    let result = session_read_loop(&mut read, &write, &backend, &done_tx);
+    let result = session_read_loop(&mut read, &write, &backend, registry.as_deref(), &done_tx);
 
     // Close our half of the completion channel; the pump drains whatever
     // in-flight requests still hold clones, then exits.
@@ -228,6 +284,7 @@ fn session_read_loop(
     read: &mut BufReader<TcpStream>,
     write: &Mutex<TcpStream>,
     backend: &Arc<dyn Backend>,
+    registry: Option<&RegistryConfig>,
     done_tx: &mpsc::Sender<InferResponse>,
 ) -> Result<()> {
     loop {
@@ -265,6 +322,27 @@ fn session_read_loop(
                     .context("sending metrics tree")?;
             }
             Ok(WireMsg::Goodbye) => return Ok(()),
+            Ok(
+                msg @ (WireMsg::BundlesReq
+                | WireMsg::ManifestFetch { .. }
+                | WireMsg::BlobFetch { .. }
+                | WireMsg::Publish { .. }),
+            ) => {
+                // Registry requests answer in-line (they are rare control
+                // traffic, not the serving path) and never end the
+                // session: a refused manifest is an Error frame, exactly
+                // what a pre-v4 listener would have answered.
+                let reply = match registry {
+                    Some(r) => registry_answer(r, backend, msg),
+                    None => Err(anyhow::anyhow!("this listener serves no registry")),
+                };
+                match reply {
+                    Ok(m) => send(write, &m).context("sending registry answer")?,
+                    Err(e) => {
+                        let _ = send(write, &WireMsg::Error { id: None, msg: format!("{e:#}") });
+                    }
+                }
+            }
             Ok(other) => {
                 let _ = send(
                     write,
@@ -276,5 +354,88 @@ fn session_read_loop(
                 bail!("undecodable frame from client: {e}");
             }
         }
+    }
+}
+
+/// Answer one registry frame against the listener's store.  Everything
+/// handed out is re-verified first — the listener vouches for what it
+/// serves — and every refusal lands in the journal as
+/// `manifest_rejected` on node `listener`.
+fn registry_answer(
+    reg: &RegistryConfig,
+    backend: &Arc<dyn Backend>,
+    msg: WireMsg,
+) -> Result<WireMsg> {
+    let reject = |what: &str, e: &anyhow::Error| {
+        if let Some(j) = backend.journal() {
+            j.record(EventKind::ManifestRejected, "listener", format!("{what}: {e:#}"));
+        }
+    };
+    match msg {
+        WireMsg::BundlesReq => Ok(WireMsg::Bundles { ids: reg.store.list()? }),
+        WireMsg::ManifestFetch { bundle } => {
+            let vouch = || -> Result<SignedManifest> {
+                let env = reg.store.get_manifest(&bundle)?;
+                env.verify(&reg.key)?;
+                // Re-hash every referenced blob before vouching: a
+                // tampered artifact is refused here, not discovered by
+                // the peer after it built a deployment on it.
+                for h in env.manifest.blob_hashes() {
+                    reg.store.get_blob(h)?;
+                }
+                Ok(env)
+            };
+            match vouch() {
+                Ok(env) => Ok(WireMsg::Manifest { envelope: env.to_json() }),
+                Err(e) => {
+                    reject(&format!("fetch {bundle}"), &e);
+                    Err(e.context(format!("bundle {bundle} refused")))
+                }
+            }
+        }
+        WireMsg::BlobFetch { hash } => {
+            // get_blob re-hashes; corrupt bytes never reach the wire.
+            let bytes = reg.store.get_blob(&hash)?;
+            Ok(WireMsg::Blob { hash, data: sign::hex(&bytes) })
+        }
+        WireMsg::Publish { envelope, blobs } => {
+            let admit = || -> Result<String> {
+                let env = SignedManifest::from_json(&envelope)?;
+                let id = env.verify(&reg.key)?;
+                // Every hash the manifest references must arrive in this
+                // frame (or already sit in the store), and every payload
+                // must hash to its claimed name.
+                for (hash, data) in &blobs {
+                    let bytes = sign::unhex(data)?;
+                    anyhow::ensure!(
+                        sign::sha256_hex(&bytes) == *hash,
+                        "published blob does not hash to its claimed id {hash}"
+                    );
+                    reg.store.put_blob(&bytes)?;
+                }
+                for h in env.manifest.blob_hashes() {
+                    anyhow::ensure!(reg.store.has_blob(h), "published manifest references missing blob {h}");
+                }
+                reg.store.put_manifest(&env)?;
+                Ok(id)
+            };
+            match admit() {
+                Ok(bundle) => {
+                    if let Some(j) = backend.journal() {
+                        j.record(
+                            EventKind::BundlePublished,
+                            "listener",
+                            format!("bundle {bundle} ({} blobs)", blobs.len()),
+                        );
+                    }
+                    Ok(WireMsg::PublishOk { bundle })
+                }
+                Err(e) => {
+                    reject("publish", &e);
+                    Err(e.context("publish refused"))
+                }
+            }
+        }
+        other => anyhow::bail!("not a registry frame: {other:?}"),
     }
 }

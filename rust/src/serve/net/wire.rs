@@ -43,7 +43,14 @@
 //! journal event kinds (`ingress_shed`, `batch_formed`) may ride in
 //! `metrics_tree` frames, and the decoder now *skips* events it cannot
 //! decode instead of failing the whole frame, so future kind additions
-//! are non-breaking.
+//! are non-breaking; v4 (PR-8) — the listener's `hello` gains an
+//! optional `bundles` field advertising served registry bundle ids
+//! (omitted when empty, so the v1 hello bytes are unchanged), plus the
+//! registry vocabulary: `bundles_req`/`bundles`, `manifest_fetch`/
+//! `manifest`, `blob_fetch`/`blob` (hex payloads — blobs must fit the
+//! 16 MiB frame cap), and `publish`/`publish_ok`.  All additive: the
+//! v1 floor stands, and an older peer that receives a registry frame
+//! answers with the generic `error` it already has.
 
 use std::time::Duration;
 
@@ -55,7 +62,7 @@ use crate::util::json::{obj, Json};
 use super::super::{InferRequest, InferResponse, RequestId};
 
 /// Bump on any frame-shape change; see the module docs for the rules.
-pub const PROTOCOL_VERSION: u32 = 3;
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Oldest peer revision this build still understands (see the breaking-
 /// change rule in the module docs).
@@ -67,8 +74,12 @@ pub const MAGIC: &str = "raca-serve";
 /// One protocol message (either direction).
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
-    /// Handshake: listener sends first, client answers.
-    Hello { version: u32 },
+    /// Handshake: listener sends first, client answers.  `bundles`
+    /// (v4+) advertises the registry bundle ids the listener serves —
+    /// empty from clients, pre-v4 peers, and listeners without a
+    /// registry, and omitted from the encoding when empty so the frame
+    /// stays byte-identical to the pre-v4 hello.
+    Hello { version: u32, bundles: Vec<String> },
     /// Client → server: admit this request.
     Submit(InferRequest),
     /// Server → client: a completed request (completion order, not
@@ -89,6 +100,26 @@ pub enum WireMsg {
     Error { id: Option<RequestId>, msg: String },
     /// Client → server: clean session end (EOF works too).
     Goodbye,
+    /// Client → server (v4+): list the bundle ids the listener serves.
+    BundlesReq,
+    /// Server → client (v4+): answer to [`WireMsg::BundlesReq`].
+    Bundles { ids: Vec<String> },
+    /// Client → server (v4+): fetch the signed manifest of one bundle.
+    ManifestFetch { bundle: String },
+    /// Server → client (v4+): the signed manifest envelope (the
+    /// `registry::SignedManifest` JSON shape) answering a fetch.
+    Manifest { envelope: Json },
+    /// Client → server (v4+): fetch one blob by content hash.
+    BlobFetch { hash: String },
+    /// Server → client (v4+): blob bytes, hex-encoded (a blob must fit
+    /// the 16 MiB frame cap — ~8 MiB raw — which holds for paper-scale
+    /// weights at ~2.2 MiB).
+    Blob { hash: String, data: String },
+    /// Client → server (v4+): publish a signed bundle — the envelope
+    /// plus every referenced blob as `(hash, hex bytes)` pairs.
+    Publish { envelope: Json, blobs: Vec<(String, String)> },
+    /// Server → client (v4+): the publish was verified and stored.
+    PublishOk { bundle: String },
 }
 
 /// Decode failure: the peer sent bytes we refuse to act on.
@@ -156,11 +187,19 @@ fn u64_arr(xs: &[u64]) -> Json {
 /// Encode a message as the JSON value of one frame.
 pub fn encode(msg: &WireMsg) -> Json {
     match msg {
-        WireMsg::Hello { version } => obj(vec![
-            ("t", s("hello")),
-            ("magic", s(MAGIC)),
-            ("proto", n(*version as f64)),
-        ]),
+        WireMsg::Hello { version, bundles } => {
+            let mut pairs = vec![
+                ("t", s("hello")),
+                ("magic", s(MAGIC)),
+                ("proto", n(*version as f64)),
+            ];
+            // Omitted when empty: the common hello stays byte-identical
+            // to every pre-v4 revision.
+            if !bundles.is_empty() {
+                pairs.push(("bundles", str_arr(bundles)));
+            }
+            obj(pairs)
+        }
         WireMsg::Submit(r) => request_to_json(r),
         WireMsg::Response(r) => response_to_json(r),
         WireMsg::MetricsReq { tree } => {
@@ -187,7 +226,39 @@ pub fn encode(msg: &WireMsg) -> Json {
             obj(pairs)
         }
         WireMsg::Goodbye => obj(vec![("t", s("goodbye"))]),
+        WireMsg::BundlesReq => obj(vec![("t", s("bundles_req"))]),
+        WireMsg::Bundles { ids } => obj(vec![("t", s("bundles")), ("ids", str_arr(ids))]),
+        WireMsg::ManifestFetch { bundle } => {
+            obj(vec![("t", s("manifest_fetch")), ("bundle", s(bundle))])
+        }
+        WireMsg::Manifest { envelope } => {
+            obj(vec![("t", s("manifest")), ("envelope", envelope.clone())])
+        }
+        WireMsg::BlobFetch { hash } => obj(vec![("t", s("blob_fetch")), ("hash", s(hash))]),
+        WireMsg::Blob { hash, data } => {
+            obj(vec![("t", s("blob")), ("hash", s(hash)), ("data", s(data))])
+        }
+        WireMsg::Publish { envelope, blobs } => obj(vec![
+            ("t", s("publish")),
+            ("envelope", envelope.clone()),
+            (
+                "blobs",
+                Json::Arr(
+                    blobs
+                        .iter()
+                        .map(|(hash, data)| obj(vec![("hash", s(hash)), ("data", s(data))]))
+                        .collect(),
+                ),
+            ),
+        ]),
+        WireMsg::PublishOk { bundle } => {
+            obj(vec![("t", s("publish_ok")), ("bundle", s(bundle))])
+        }
     }
+}
+
+fn str_arr(xs: &[String]) -> Json {
+    Json::Arr(xs.iter().map(|x| s(x)).collect())
 }
 
 fn request_to_json(r: &InferRequest) -> Json {
@@ -255,7 +326,12 @@ pub fn decode(j: &Json) -> Result<WireMsg, WireError> {
                     format!("bad magic '{magic}' — peer is not a raca serve listener"),
                 ));
             }
-            Ok(WireMsg::Hello { version: u64_field(j, "hello", "proto")? as u32 })
+            // Absent from clients and pre-v4 listeners: default empty.
+            let bundles = match j.get("bundles") {
+                Some(v) => str_arr_field(v, "hello", "bundles")?,
+                None => Vec::new(),
+            };
+            Ok(WireMsg::Hello { version: u64_field(j, "hello", "proto")? as u32, bundles })
         }
         "submit" => Ok(WireMsg::Submit(request_from_json(j)?)),
         "response" => Ok(WireMsg::Response(response_from_json(j)?)),
@@ -292,8 +368,70 @@ pub fn decode(j: &Json) -> Result<WireMsg, WireError> {
             Ok(WireMsg::Error { id, msg })
         }
         "goodbye" => Ok(WireMsg::Goodbye),
+        "bundles_req" => Ok(WireMsg::BundlesReq),
+        "bundles" => {
+            let ids = j
+                .get("ids")
+                .ok_or_else(|| malformed("bundles", "missing 'ids' array"))?;
+            Ok(WireMsg::Bundles { ids: str_arr_field(ids, "bundles", "ids")? })
+        }
+        "manifest_fetch" => Ok(WireMsg::ManifestFetch {
+            bundle: str_field(j, "manifest_fetch", "bundle")?,
+        }),
+        "manifest" => {
+            let envelope = j
+                .get("envelope")
+                .ok_or_else(|| malformed("manifest", "missing 'envelope' object"))?;
+            Ok(WireMsg::Manifest { envelope: envelope.clone() })
+        }
+        "blob_fetch" => Ok(WireMsg::BlobFetch { hash: str_field(j, "blob_fetch", "hash")? }),
+        "blob" => Ok(WireMsg::Blob {
+            hash: str_field(j, "blob", "hash")?,
+            data: str_field(j, "blob", "data")?,
+        }),
+        "publish" => {
+            let envelope = j
+                .get("envelope")
+                .ok_or_else(|| malformed("publish", "missing 'envelope' object"))?
+                .clone();
+            let blobs = j
+                .get("blobs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| malformed("publish", "missing 'blobs' array"))?
+                .iter()
+                .map(|b| {
+                    let get = |k: &str| {
+                        b.get(k).and_then(Json::as_str).map(str::to_string).ok_or_else(|| {
+                            malformed("publish", format!("blob entry missing '{k}'"))
+                        })
+                    };
+                    Ok((get("hash")?, get("data")?))
+                })
+                .collect::<Result<Vec<_>, WireError>>()?;
+            Ok(WireMsg::Publish { envelope, blobs })
+        }
+        "publish_ok" => Ok(WireMsg::PublishOk { bundle: str_field(j, "publish_ok", "bundle")? }),
         other => Err(malformed("frame", format!("unknown message type '{other}'"))),
     }
+}
+
+fn str_field(j: &Json, what: &'static str, field: &str) -> Result<String, WireError> {
+    j.get(field)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| malformed(what, format!("missing or non-string field '{field}'")))
+}
+
+fn str_arr_field(v: &Json, what: &'static str, field: &str) -> Result<Vec<String>, WireError> {
+    v.as_arr()
+        .ok_or_else(|| malformed(what, format!("field '{field}' is not an array")))?
+        .iter()
+        .map(|x| {
+            x.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| malformed(what, format!("non-string entry in '{field}'")))
+        })
+        .collect()
 }
 
 /// Accepts decimal strings (the canonical id encoding) and exact
@@ -457,8 +595,8 @@ mod tests {
     #[test]
     fn control_messages_round_trip() {
         assert_eq!(
-            round_trip(&WireMsg::Hello { version: PROTOCOL_VERSION }),
-            WireMsg::Hello { version: PROTOCOL_VERSION }
+            round_trip(&WireMsg::Hello { version: PROTOCOL_VERSION, bundles: Vec::new() }),
+            WireMsg::Hello { version: PROTOCOL_VERSION, bundles: Vec::new() }
         );
         assert_eq!(
             round_trip(&WireMsg::MetricsReq { tree: false }),
@@ -524,6 +662,52 @@ mod tests {
     }
 
     #[test]
+    fn hello_bundles_are_additive_over_v1() {
+        // A bundle-less hello must encode byte-identically to the pre-v4
+        // frame (no `bundles` key at all)…
+        let plain = WireMsg::Hello { version: PROTOCOL_VERSION, bundles: Vec::new() };
+        assert!(encode(&plain).get("bundles").is_none());
+        // …and a v1 hello (which has never heard of bundles) must decode
+        // to the empty advertisement.
+        let v1 = Json::parse(r#"{"t":"hello","magic":"raca-serve","proto":1}"#).unwrap();
+        assert_eq!(decode(&v1).unwrap(), WireMsg::Hello { version: 1, bundles: Vec::new() });
+        // An advertising listener's hello round-trips the ids.
+        let ids = vec!["a".repeat(64), "b".repeat(64)];
+        let msg = WireMsg::Hello { version: PROTOCOL_VERSION, bundles: ids.clone() };
+        assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn registry_frames_round_trip() {
+        let envelope = Json::parse(
+            r#"{"key_id":"deadbeef","manifest":{"model":"fcnn"},"sig":"00ff"}"#,
+        )
+        .unwrap();
+        for msg in [
+            WireMsg::BundlesReq,
+            WireMsg::Bundles { ids: vec!["c".repeat(64)] },
+            WireMsg::Bundles { ids: Vec::new() },
+            WireMsg::ManifestFetch { bundle: "d".repeat(64) },
+            WireMsg::Manifest { envelope: envelope.clone() },
+            WireMsg::BlobFetch { hash: "e".repeat(64) },
+            WireMsg::Blob { hash: "e".repeat(64), data: "00112233".into() },
+            WireMsg::Publish {
+                envelope,
+                blobs: vec![("e".repeat(64), "00112233".into()), ("f".repeat(64), "aa".into())],
+            },
+            WireMsg::PublishOk { bundle: "d".repeat(64) },
+        ] {
+            assert_eq!(round_trip(&msg), msg);
+        }
+        // Malformed registry frames name the offending field.
+        let e = decode(&Json::parse(r#"{"t":"manifest_fetch"}"#).unwrap()).unwrap_err();
+        assert!(format!("{e}").contains("bundle"), "{e}");
+        let e = decode(&Json::parse(r#"{"t":"publish","envelope":{},"blobs":[{"hash":"aa"}]}"#).unwrap())
+            .unwrap_err();
+        assert!(format!("{e}").contains("data"), "{e}");
+    }
+
+    #[test]
     fn v1_metrics_req_decodes_as_flat() {
         // A v1 peer sends the bare frame — no `tree` field.  It must
         // decode to the flat-metrics request, and our own flat request
@@ -559,6 +743,7 @@ mod tests {
             evicted: Some(false),
             errors: Some(2),
             weight: Some(0.5),
+            bundle: Some("ab".repeat(32)),
             stale: true,
         };
         let tree = MetricsTree::leaf("replicate ×2", m(11)).with_children(vec![

@@ -54,12 +54,21 @@
 //!                                               die-to-die message
 //!         | 'remote' ':' ADDR                   ADDR = host:port of a peer's
 //!                                               `raca serve --listen` socket
+//!         | 'remote' ':@' ADDR '/' BUNDLE       registry-resolved leaf: the
+//!                                               listener at ADDR must
+//!                                               advertise BUNDLE (a 64-hex
+//!                                               bundle id), whose signed
+//!                                               manifest is verified under
+//!                                               the local deployment key at
+//!                                               build time
 //! policy := round-robin|rr | least-loaded|ll | weighted|wt
 //! ```
 //!
 //! Examples: `die`, `8x(die)@weighted`, `pipeline:3`, `2x(pipeline:3)`,
 //! `pipeline:4:b16`, `2x(2x(die))`, `remote:10.0.0.7:7433`,
-//! `(remote:a:7433, remote:b:7433)@weighted`, `(pipeline:3, remote:b:7433)`.
+//! `(remote:a:7433, remote:b:7433)@weighted`, `(pipeline:3, remote:b:7433)`,
+//! `remote:@10.0.0.7:7433/3b4f…e1` (case folding is harmless: bundle ids
+//! are lowercase hex by construction).
 //! `raca serve --topology "<spec>"` and the `"serve": {"topology":
 //! "<spec>"}` config key accept this grammar; the legacy `BackendKind`
 //! spellings are parse-only sugar that map onto canonical trees
@@ -78,7 +87,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::arch::ShardPlan;
 use crate::coordinator::{Metrics, MetricsSnapshot, SchedulerConfig, TrialRunner};
@@ -134,7 +143,11 @@ pub enum Topology {
     /// deployment default, [`BuildOptions::batch`]).
     Pipeline { shards: usize, batch: Option<usize> },
     /// A peer host's `raca serve --listen` socket: whatever topology that
-    /// listener hosts, reached over the [`crate::serve::net`] wire.
+    /// listener hosts, reached over the [`crate::serve::net`] wire.  An
+    /// `@<host:port>/<bundle>` address additionally pins *what* the peer
+    /// serves: [`build`] resolves the bundle through the registry
+    /// (advertisement check, signature verification under the local
+    /// deployment key) before connecting.
     Remote { addr: String },
     /// `n` copies of `child` behind a health-reweighted router.
     Replicate { n: usize, policy: RoutePolicy, child: Box<Topology> },
@@ -174,6 +187,27 @@ impl Topology {
                 Ok(())
             }
             Topology::Remote { addr } => {
+                // Registry-resolved form: `@<host:port>/<bundle-id>`.
+                if let Some(spec) = addr.strip_prefix('@') {
+                    let (host_port, bundle) = spec.split_once('/').ok_or_else(|| {
+                        format!("remote:{addr}: expected remote:@<host:port>/<bundle-id>")
+                    })?;
+                    let (host, port) = host_port.rsplit_once(':').ok_or_else(|| {
+                        format!("remote:{addr}: expected remote:@<host:port>/<bundle-id>")
+                    })?;
+                    if host.is_empty() || port.is_empty() {
+                        return Err(format!(
+                            "remote:{addr}: expected remote:@<host:port>/<bundle-id>"
+                        ));
+                    }
+                    if !crate::registry::sign::is_digest(bundle) {
+                        return Err(format!(
+                            "remote:{addr}: '{bundle}' is not a bundle id \
+                             (64 lowercase hex chars; see `raca bundles`)"
+                        ));
+                    }
+                    return Ok(());
+                }
                 let (host, port) = addr
                     .rsplit_once(':')
                     .ok_or_else(|| format!("remote:{addr}: expected remote:<host:port>"))?;
@@ -533,6 +567,11 @@ pub struct BuildOptions {
     /// (admissions, failures, probe verdicts, health steering).  `None`
     /// lets [`build`] allocate a fresh default-capacity ring.
     pub journal: Option<Arc<Journal>>,
+    /// Artifact directory for artifact-consuming leaves: `die:pjrt`
+    /// executables and the deployment signing key that `remote:@` leaves
+    /// verify manifests under.  `None` falls back to
+    /// [`crate::runtime::default_artifact_dir`].
+    pub artifact_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for BuildOptions {
@@ -549,6 +588,7 @@ impl Default for BuildOptions {
             reweigh_every: 32,
             probe_rate: 0.0,
             journal: None,
+            artifact_dir: None,
         }
     }
 }
@@ -614,9 +654,7 @@ fn build_node(
         }
         // The process boundary: dies on the other side belong to the
         // listener (its weights, its seed, its chip numbering).
-        PlanNode::Remote { addr } => {
-            Ok(Box::new(RemoteBackend::connect(addr)?.with_journal(journal.clone())))
-        }
+        PlanNode::Remote { addr } => build_remote(addr, opts, journal),
         // Replicate and Group share one runtime (children behind a
         // health-reweighted router); Replicate-over-native-die fuses into
         // the per-chip worker fleet first.
@@ -644,6 +682,51 @@ fn build_node(
             )))
         }
     }
+}
+
+/// A `remote:` leaf at build time.  Plain `host:port` addresses connect
+/// directly; `@<host:port>/<bundle>` addresses resolve the bundle through
+/// the registry first — advertisement check, signature verification under
+/// the local deployment key — and journal `bundle_resolved` on success or
+/// `manifest_rejected` (and fail the build) on any discrepancy.
+fn build_remote(
+    addr: &str,
+    opts: &BuildOptions,
+    journal: &Arc<Journal>,
+) -> Result<Box<dyn Backend>> {
+    let Some(spec) = addr.strip_prefix('@') else {
+        return Ok(Box::new(RemoteBackend::connect(addr)?.with_journal(journal.clone())));
+    };
+    let node = format!("remote:{addr}");
+    let (host_port, bundle) =
+        spec.split_once('/').ok_or_else(|| anyhow!("remote:{addr}: malformed address"))?;
+    let dir = opts
+        .artifact_dir
+        .clone()
+        .unwrap_or_else(crate::runtime::default_artifact_dir);
+    let resolved = crate::registry::SigningKey::load(&crate::registry::key_path(&dir))
+        .context("loading the deployment signing key (publish once to create it)")
+        .and_then(|key| crate::registry::resolve(host_port, bundle, &key));
+    let env = match resolved {
+        Ok(env) => env,
+        Err(e) => {
+            journal.record(EventKind::ManifestRejected, &node, format!("{e:#}"));
+            return Err(e.context(format!("resolving {node}")));
+        }
+    };
+    journal.record(
+        EventKind::BundleResolved,
+        &node,
+        format!(
+            "bundle {bundle} ({} {:?}, key {})",
+            env.manifest.model, env.manifest.widths, env.key_id
+        ),
+    );
+    Ok(Box::new(
+        RemoteBackend::connect(host_port)?
+            .with_journal(journal.clone())
+            .with_bundle(bundle.to_string()),
+    ))
 }
 
 /// Replicate-over-native-die fuses into the per-chip worker backend (one
@@ -764,7 +847,11 @@ fn build_die(
 fn build_pjrt_die(opts: &BuildOptions, journal: &Arc<Journal>) -> Result<Box<dyn Backend>> {
     // An XLA die takes its weights from the compiled artifact store, not
     // from the nominal weights (they are baked into the executable).
-    let engine = crate::engine::XlaEngine::start(crate::runtime::default_artifact_dir())?;
+    let dir = opts
+        .artifact_dir
+        .clone()
+        .unwrap_or_else(crate::runtime::default_artifact_dir);
+    let engine = crate::engine::XlaEngine::start(dir)?;
     let handle = engine.handle();
     handle.warmup(opts.scheduler.batch_size)?;
     let mut cfg = opts.scheduler.clone();
@@ -1294,6 +1381,36 @@ mod tests {
         // Programmatic empty groups die at compile.
         let t = Topology::Group { policy: RoutePolicy::RoundRobin, children: vec![] };
         assert!(DeployPlan::compile(&t).is_err());
+    }
+
+    #[test]
+    fn registry_remote_form_parses_and_validates() {
+        // `remote:@<host:port>/<bundle>` round-trips through Display like
+        // any other address (bundle ids are lowercase hex, so the parser's
+        // case folding is a no-op on well-formed specs).
+        let bundle = "ab".repeat(32);
+        let spec = format!("remote:@10.0.0.7:7433/{bundle}");
+        let t = parse(&spec);
+        assert_eq!(t, Topology::Remote { addr: format!("@10.0.0.7:7433/{bundle}") });
+        assert_eq!(t.to_string(), spec, "canonical spelling");
+        assert_eq!(parse(&t.to_string()), t, "round trip");
+        // Registry leaves are still remote leaves: no local dies, and they
+        // compose under groups and replication.
+        assert_eq!(t.dies(), 0);
+        assert_eq!(parse(&format!("({spec}, pipeline:2)")).dies(), 2);
+        DeployPlan::compile(&t).unwrap();
+        // Errors: missing bundle, missing port, non-hex / short bundle ids.
+        let e = format!("{:#}", Topology::parse("remote:@host:7433").unwrap_err());
+        assert!(e.contains("@<host:port>/<bundle-id>"), "unhelpful: {e}");
+        let e = format!("{:#}", Topology::parse(&format!("remote:@host/{bundle}")).unwrap_err());
+        assert!(e.contains("@<host:port>/<bundle-id>"), "unhelpful: {e}");
+        let e = format!("{:#}", Topology::parse("remote:@host:7433/nothex").unwrap_err());
+        assert!(e.contains("not a bundle id"), "unhelpful: {e}");
+        let e = format!(
+            "{:#}",
+            Topology::parse(&format!("remote:@host:7433/{}", &bundle[..40])).unwrap_err()
+        );
+        assert!(e.contains("not a bundle id"), "unhelpful: {e}");
     }
 
     #[test]

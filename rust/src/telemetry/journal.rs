@@ -42,6 +42,15 @@ pub enum EventKind {
     /// The HTTP continuous batcher flushed a merged batch to the
     /// backend (detail says how many requests formed how many groups).
     BatchFormed,
+    /// A signed bundle landed in a registry store (publish path).
+    BundlePublished,
+    /// A `remote:@<registry>/<bundle>` leaf verified and bound a bundle
+    /// at deployment-build time.
+    BundleResolved,
+    /// A manifest failed verification — bad signature, foreign key,
+    /// tampered blob, or an id the peer does not advertise (detail says
+    /// which).
+    ManifestRejected,
 }
 
 impl EventKind {
@@ -58,6 +67,9 @@ impl EventKind {
             EventKind::SessionDrop => "session_drop",
             EventKind::IngressShed => "ingress_shed",
             EventKind::BatchFormed => "batch_formed",
+            EventKind::BundlePublished => "bundle_published",
+            EventKind::BundleResolved => "bundle_resolved",
+            EventKind::ManifestRejected => "manifest_rejected",
         }
     }
 
@@ -74,6 +86,9 @@ impl EventKind {
             "session_drop" => EventKind::SessionDrop,
             "ingress_shed" => EventKind::IngressShed,
             "batch_formed" => EventKind::BatchFormed,
+            "bundle_published" => EventKind::BundlePublished,
+            "bundle_resolved" => EventKind::BundleResolved,
+            "manifest_rejected" => EventKind::ManifestRejected,
             _ => return None,
         })
     }

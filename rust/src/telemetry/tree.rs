@@ -25,6 +25,9 @@ pub struct NodeNotes {
     pub errors: Option<u64>,
     /// Current traffic weight under the router's steering policy.
     pub weight: Option<f64>,
+    /// Registry bundle id this leaf was resolved from
+    /// (`remote:@<registry>/<bundle>` topology leaves).
+    pub bundle: Option<String>,
     /// Snapshot is a cached copy — the live source (a remote session)
     /// is gone and these numbers stopped advancing at disconnect.
     pub stale: bool,
@@ -196,6 +199,11 @@ fn render_notes(n: &NodeNotes) -> String {
             s.push_str(&format!(" fails {e}"));
         }
     }
+    if let Some(b) = &n.bundle {
+        // Bundle ids are 64 hex chars; the first 12 identify one in any
+        // realistic store, like short git hashes.
+        s.push_str(&format!(" bundle {}", &b[..b.len().min(12)]));
+    }
     if n.evicted == Some(true) {
         s.push_str(" EVICTED");
     }
@@ -264,6 +272,9 @@ fn notes_to_json(n: &NodeNotes) -> Json {
     if let Some(v) = n.weight {
         m.insert("weight".to_string(), json::num(v));
     }
+    if let Some(v) = &n.bundle {
+        m.insert("bundle".to_string(), Json::Str(v.clone()));
+    }
     if n.stale {
         m.insert("stale".to_string(), Json::Bool(true));
     }
@@ -278,6 +289,7 @@ fn notes_from_json(j: &Json) -> NodeNotes {
         evicted: j.get("evicted").and_then(|v| v.as_bool()),
         errors: j.get("errors").and_then(|v| v.as_f64()).map(|e| e as u64),
         weight: j.get("weight").and_then(|v| v.as_f64()),
+        bundle: j.get("bundle").and_then(|v| v.as_str()).map(str::to_string),
         stale: j.get("stale").and_then(|v| v.as_bool()).unwrap_or(false),
     }
 }
@@ -311,6 +323,7 @@ mod tests {
         die1.notes.errors = Some(2);
         let mut remote = MetricsTree::leaf("remote:127.0.0.1:7433", snap(7));
         remote.notes.stale = true;
+        remote.notes.bundle = Some("deadbeef".repeat(8));
         MetricsTree::leaf("replicate ×3 (round-robin)", snap(14))
             .with_children(vec![die0, die1, remote])
     }
@@ -342,6 +355,9 @@ mod tests {
         assert!(r.contains("STALE"), "{r}");
         assert!(r.contains("└─ "), "{r}");
         assert!(r.contains("acc 0.97"), "{r}");
+        // Bundle ids render truncated to 12 chars.
+        assert!(r.contains(" bundle deadbeefdead"), "{r}");
+        assert!(!r.contains("deadbeefdeadb"), "{r}");
     }
 
     #[test]

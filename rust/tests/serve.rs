@@ -452,14 +452,17 @@ fn listener_rejects_version_mismatch_and_malformed_frames() {
     {
         let mut s = std::net::TcpStream::connect(server.addr()).unwrap();
         let hello = json::read_frame(&mut s).unwrap().expect("server speaks first");
-        let WireMsg::Hello { version } = raca::serve::net::wire::decode(&hello).unwrap()
+        let WireMsg::Hello { version, .. } = raca::serve::net::wire::decode(&hello).unwrap()
         else {
             panic!("expected hello")
         };
         assert_eq!(version, PROTOCOL_VERSION);
         json::write_frame(
             &mut s,
-            &raca::serve::net::wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION + 9 }),
+            &raca::serve::net::wire::encode(&WireMsg::Hello {
+                version: PROTOCOL_VERSION + 9,
+                bundles: Vec::new(),
+            }),
         )
         .unwrap();
         let err = json::read_frame(&mut s).unwrap().expect("error frame");
@@ -478,7 +481,10 @@ fn listener_rejects_version_mismatch_and_malformed_frames() {
         let _hello = json::read_frame(&mut s).unwrap().expect("server speaks first");
         json::write_frame(
             &mut s,
-            &raca::serve::net::wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION }),
+            &raca::serve::net::wire::encode(&WireMsg::Hello {
+                version: PROTOCOL_VERSION,
+                bundles: Vec::new(),
+            }),
         )
         .unwrap();
         // A frame that parses as JSON but not as a protocol message…
@@ -666,7 +672,11 @@ fn v1_flat_metrics_peer_wraps_into_a_tree_and_goes_stale_on_death() {
         let mut w = s.try_clone().unwrap();
         let mut r = std::io::BufReader::new(s);
         // A v1 listener: old protocol revision in the hello…
-        json::write_frame(&mut w, &wire::encode(&WireMsg::Hello { version: 1 })).unwrap();
+        json::write_frame(
+            &mut w,
+            &wire::encode(&WireMsg::Hello { version: 1, bundles: Vec::new() }),
+        )
+        .unwrap();
         let _ = json::read_frame(&mut r).unwrap().expect("client hello");
         // …that answers exactly one metrics request with the flat v1
         // shape (a real v1 decoder ignores the unknown `tree` field),
@@ -755,7 +765,10 @@ fn timed_out_telemetry_waiter_does_not_consume_the_next_answer() {
         let mut rd = std::io::BufReader::new(s);
         json::write_frame(
             &mut wr,
-            &wire::encode(&WireMsg::Hello { version: wire::PROTOCOL_VERSION }),
+            &wire::encode(&WireMsg::Hello {
+                version: wire::PROTOCOL_VERSION,
+                bundles: Vec::new(),
+            }),
         )
         .unwrap();
         let _ = json::read_frame(&mut rd).unwrap().expect("client hello");
@@ -803,6 +816,191 @@ fn timed_out_telemetry_waiter_does_not_consume_the_next_answer() {
     fake.join().unwrap();
 }
 
+// ---- the registry: signed bundles behind remote:@ leaves ------------------
+
+/// Publish the given model into a fresh registry under `dir`, signed with
+/// `key`; returns the bundle id.
+fn publish_into(dir: &std::path::Path, w: &Weights, key: &raca::registry::SigningKey) -> String {
+    std::fs::create_dir_all(dir.join("weights")).unwrap();
+    let prefix = dir.join("weights").join("fcnn");
+    w.save(&prefix).unwrap();
+    let calib = dir.join("calib.json");
+    std::fs::write(&calib, br#"{"theta":3.0,"sigma_z":1.702}"#).unwrap();
+    let store = raca::registry::Store::open(dir);
+    let (id, _env) = raca::registry::publish_local(&store, key, &prefix, &calib, None).unwrap();
+    id
+}
+
+/// The registry acceptance bar: a `remote:@<registry>/<bundle>` leaf —
+/// advertised in the listener's hello, manifest fetched and verified
+/// under the shared deployment key at build time — votes bit-identically
+/// to a local `die` at equal `(seed, trial_idx)`.  The resolution is
+/// journaled (`bundle_resolved`) and the bundle id rides the telemetry
+/// tree, which is what `raca top` renders on the leaf.
+#[test]
+fn registry_resolved_remote_die_matches_local_die_bit_for_bit() {
+    use raca::registry::{key_path, SigningKey, Store};
+    use raca::telemetry::EventKind;
+
+    let w = trained();
+    let seed = 0x9E61;
+    let p = TrialParams::default();
+    let base = std::env::temp_dir().join(format!("raca-reg-parity-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let (host_dir, client_dir) = (base.join("host"), base.join("client"));
+    std::fs::create_dir_all(&host_dir).unwrap();
+    std::fs::create_dir_all(&client_dir).unwrap();
+
+    // One deployment key, copied to both hosts (the shared-secret model).
+    let key = SigningKey::load_or_generate(&host_dir).unwrap();
+    key.save(&key_path(&client_dir)).unwrap();
+    let bundle = publish_into(&host_dir, &w, &key);
+
+    // Host: a die behind a registry-carrying listener.
+    let host = build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap();
+    let server = raca::serve::net::serve_registry(
+        host,
+        "127.0.0.1:0",
+        raca::serve::net::RegistryConfig { store: Store::open(&host_dir), key },
+    )
+    .unwrap();
+
+    // Client: the registry-resolved leaf.  Its own seed is deliberately
+    // different — only the listener's governs the trial streams.
+    let spec = format!("remote:@{}/{bundle}", server.addr());
+    let remote = build(
+        &Topology::parse(&spec).unwrap(),
+        &w,
+        &BuildOptions {
+            seed: 0xDEAD,
+            artifact_dir: Some(client_dir.clone()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let local = build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap();
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    for i in 0..6u64 {
+        let img = image(i);
+        let got = remote
+            .classify(InferRequest::new(i, img.clone()).with_budget(14, 0.0))
+            .unwrap();
+        let want = reference.infer(&img, p, 14, trial_stream_base(seed, i));
+        let want_local = local
+            .classify(InferRequest::new(i, img).with_budget(14, 0.0))
+            .unwrap();
+        assert_eq!(
+            got.outcome.counts, want.counts,
+            "remote:@ leaf diverged from the unsharded engine on request {i}"
+        );
+        assert_eq!(got.outcome.counts, want_local.outcome.counts);
+        assert_eq!(got.prediction, want.prediction());
+        assert_eq!(got.trials_used, 14);
+    }
+
+    let journal = remote.journal().expect("built trees share a journal");
+    let events = journal.tail(journal.capacity());
+    assert!(
+        events
+            .iter()
+            .any(|e| e.kind == EventKind::BundleResolved && e.detail.contains(&bundle)),
+        "no bundle_resolved event; journal:\n{}",
+        journal.to_json_lines()
+    );
+    let tree = remote.metrics_tree();
+    assert_eq!(tree.notes.bundle.as_deref(), Some(bundle.as_str()));
+    assert!(
+        tree.render().contains(&format!("bundle {}", &bundle[..12])),
+        "render:\n{}",
+        tree.render()
+    );
+
+    remote.shutdown();
+    local.shutdown();
+    drop(server);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Rejection paths: a bundle the registry never advertised, a client key
+/// that never signed the manifest, and a byte-flipped stored blob.  Every
+/// refusal is an error at build time — never a silently-bound leaf — and
+/// the listener journals `manifest_rejected` when its own store fails
+/// re-verification.
+#[test]
+fn tampered_blobs_and_foreign_keys_are_refused_with_journal_events() {
+    use raca::registry::{key_path, SigningKey, Store};
+    use raca::telemetry::EventKind;
+
+    let w = trained();
+    let base = std::env::temp_dir().join(format!("raca-reg-tamper-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let (host_dir, good_dir, rogue_dir) =
+        (base.join("host"), base.join("good"), base.join("rogue"));
+    for d in [&host_dir, &good_dir, &rogue_dir] {
+        std::fs::create_dir_all(d).unwrap();
+    }
+    let key = SigningKey::load_or_generate(&host_dir).unwrap();
+    key.save(&key_path(&good_dir)).unwrap();
+    SigningKey::generate().save(&key_path(&rogue_dir)).unwrap();
+    let bundle = publish_into(&host_dir, &w, &key);
+
+    let host = build(&topo("die"), &w, &BuildOptions::default()).unwrap();
+    let host_journal = host.journal().expect("hosted deployments journal");
+    let server = raca::serve::net::serve_registry(
+        host,
+        "127.0.0.1:0",
+        raca::serve::net::RegistryConfig { store: Store::open(&host_dir), key },
+    )
+    .unwrap();
+    let spec = format!("remote:@{}/{bundle}", server.addr());
+
+    // An id the listener never advertised is refused before any fetch.
+    let absent = "f".repeat(64);
+    let e = build(
+        &Topology::parse(&format!("remote:@{}/{absent}", server.addr())).unwrap(),
+        &w,
+        &BuildOptions { artifact_dir: Some(good_dir.clone()), ..Default::default() },
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("does not advertise"), "unhelpful: {e:#}");
+
+    // A client whose deployment key never signed the manifest rejects the
+    // envelope — nothing a registry says is taken on faith.
+    let e = build(
+        &Topology::parse(&spec).unwrap(),
+        &w,
+        &BuildOptions { artifact_dir: Some(rogue_dir.clone()), ..Default::default() },
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("unknown key"), "unhelpful: {e:#}");
+
+    // Byte-flip a stored artifact: the listener refuses to vouch (the
+    // fetch re-hashes every referenced blob), journals the rejection, and
+    // the good-key client's build fails instead of binding the leaf.
+    let env = Store::open(&host_dir).get_manifest(&bundle).unwrap();
+    let victim = host_dir.join("registry").join("blobs").join(&env.manifest.weights_bin);
+    let mut bytes = std::fs::read(&victim).unwrap();
+    bytes[0] ^= 0x01;
+    std::fs::write(&victim, &bytes).unwrap();
+    let e = build(
+        &Topology::parse(&spec).unwrap(),
+        &w,
+        &BuildOptions { artifact_dir: Some(good_dir.clone()), ..Default::default() },
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("refused"), "unhelpful: {e:#}");
+    let events = host_journal.tail(host_journal.capacity());
+    assert!(
+        events.iter().any(|e| e.kind == EventKind::ManifestRejected),
+        "listener never journaled the rejection:\n{}",
+        host_journal.to_json_lines()
+    );
+
+    drop(server);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
 /// The PR's acceptance bar: kill one child of a two-remote group and the
 /// health monitor evicts it — a `health_evict` event lands in the shared
 /// journal, the tree shows `EVICTED`, and traffic routes away cleanly.
@@ -828,7 +1026,10 @@ fn dead_remote_child_is_evicted_and_routed_around() {
         let mut rd = std::io::BufReader::new(s);
         json::write_frame(
             &mut wr,
-            &wire::encode(&WireMsg::Hello { version: wire::PROTOCOL_VERSION }),
+            &wire::encode(&WireMsg::Hello {
+                version: wire::PROTOCOL_VERSION,
+                bundles: Vec::new(),
+            }),
         )
         .unwrap();
         let _ = json::read_frame(&mut rd).unwrap().expect("client hello");
