@@ -32,11 +32,32 @@
 //! itself), plus the full `infer` path (B=64 + block-level thread
 //! sharding) — the production lane the smoke gate asserts on.
 //!
+//! Since §Perf iteration 6 the kernel lanes run on the runtime-dispatched
+//! SIMD kernels (`util::simd`); the selected ISA is printed and embedded
+//! in the report (`native_kernel.simd_isa`), so a report also records
+//! *which* datapath produced its numbers (`RACA_NO_SIMD=1` runs show
+//! `"scalar"`).
+//!
 //! `--json <path>` additionally writes every lane to a machine-readable
-//! report (`BENCH_native.json` by convention — see README §Performance).
+//! report (`BENCH_fleet.json` at the repo root is the checked-in
+//! full-run baseline — see README §Performance).
+//!
+//! `--check <baseline.json>` turns the bench into a **trajectory gate**:
+//! the fresh run is compared lane-by-lane against a previous `--json`
+//! report and the process exits non-zero on any lane regressing beyond
+//! `--tolerance` (default 0.5, i.e. a lane may lose up to 50% of its
+//! baseline ratio before failing; improvements always pass).  Lanes are
+//! compared as *dimensionless ratios* (blocked kernels ÷ scalar, backends
+//! ÷ die, remote ÷ local latency), never absolute trials/s, so a baseline
+//! recorded on one machine remains meaningful on another.  Thread-scaled
+//! lanes (`blocked_infer`, `backend/*`) additionally clamp their pass bar
+//! to the 2.0× acceptance bar: a many-core baseline must not demand more
+//! parallel speedup than the checking machine's cores can offer — the
+//! single-thread kernel lanes carry the full-tolerance regression signal.
 //!
 //! `--smoke` runs a CI-sized workload and *asserts* the acceptance bars:
-//! blocked native infer (B=64) ≥ 1.5× the scalar kernel,
+//! blocked native infer (B=64) ≥ 2.0× the scalar kernel on x86_64 with a
+//! dispatched SIMD ISA (1.5× under `RACA_NO_SIMD=1` or on other arches),
 //! `pipeline:4` ≥ 2× the single-die trial throughput,
 //! `2x(pipeline:2)` ≥ `pipeline:4` at the same 4 dies, loopback
 //! `remote:die` within 2× the local single-die request latency, and an
@@ -126,6 +147,15 @@ fn main() {
         .windows(2)
         .find(|w| w[0] == "--json")
         .map(|w| w[1].clone());
+    let check_path = argv
+        .windows(2)
+        .find(|w| w[0] == "--check")
+        .map(|w| w[1].clone());
+    let tolerance = argv
+        .windows(2)
+        .find(|w| w[0] == "--tolerance")
+        .map(|w| w[1].parse::<f64>().expect("--tolerance takes a fraction, e.g. 0.5"))
+        .unwrap_or(0.5);
     let (warmup, reqs, trials) = if smoke { (12, 48, 8u32) } else { (24, 192, 12u32) };
     let spec = ModelSpec::new(vec![784, 256, 192, 128, 10]);
     let model_name = "784-256-192-128-10";
@@ -145,7 +175,9 @@ fn main() {
     let kernel_trials = if smoke { 4096usize } else { 16384 };
     let engine = NativeEngine::new(Arc::new(w.clone()), seed);
     let kimg = &images[0];
+    let simd_isa = raca::util::simd::active().name();
     println!("== bench_fleet: native kernel, scalar vs blocked ({kernel_trials} trials/image) ==");
+    println!("  simd dispatch                  : {simd_isa}");
     let time_tps = |f: &mut dyn FnMut()| -> f64 {
         f(); // warmup (touches weights, fills scratch)
         let t0 = Instant::now();
@@ -328,6 +360,7 @@ fn main() {
             (
                 "native_kernel",
                 json::obj(vec![
+                    ("simd_isa", Json::Str(simd_isa.into())),
                     ("trials_per_image", json::num(kernel_trials as f64)),
                     ("scalar_trials_per_s", json::num(scalar_tps)),
                     (
@@ -375,12 +408,17 @@ fn main() {
 
     if smoke {
         let blocked_ratio = blocked_infer_tps / scalar_tps.max(1e-9);
+        // With a dispatched SIMD ISA on x86_64 CI the bar rises to 2.0×;
+        // the scalar fallback (RACA_NO_SIMD=1) and other arches keep the
+        // pre-SIMD 1.5× bar.
+        let blocked_bar =
+            if cfg!(target_arch = "x86_64") && simd_isa != "scalar" { 2.0 } else { 1.5 };
         assert!(
-            blocked_ratio >= 1.5,
-            "--smoke: blocked native infer (B=64 + thread sharding) must be ≥1.5x the scalar path, got {blocked_ratio:.2}x"
+            blocked_ratio >= blocked_bar,
+            "--smoke: blocked native infer (B=64 + thread sharding, isa {simd_isa}) must be ≥{blocked_bar}x the scalar path, got {blocked_ratio:.2}x"
         );
         println!(
-            "smoke OK: blocked infer = {blocked_ratio:.2}x scalar native path (≥ 1.5x required)"
+            "smoke OK: blocked infer = {blocked_ratio:.2}x scalar native path (≥ {blocked_bar}x required, isa {simd_isa})"
         );
         let ratio = pipelined_at_4 / single_tps.max(1e-9);
         assert!(
@@ -441,5 +479,123 @@ fn main() {
             "smoke OK: http ingress sheds under forced overflow ({} of 8 answered 429)",
             statuses.iter().filter(|s| **s == 429).count()
         );
+    }
+
+    // --- trajectory gate: fresh run vs a checked-in --json baseline --------
+    if let Some(path) = &check_path {
+        // (lane, fresh ratio, higher-is-better, bar cap).  Ratios are
+        // dimensionless so a baseline from another machine stays
+        // comparable; thread-scaled lanes cap their pass bar at the 2.0×
+        // acceptance bar (a many-core baseline must not demand more
+        // parallel speedup than this machine's cores can offer — the
+        // single-thread kernel lanes carry the uncapped signal).
+        const THREAD_CAP: f64 = 2.0;
+        let s = scalar_tps.max(1e-9);
+        let mut fresh: Vec<(String, f64, bool, f64)> = Vec::new();
+        for (k, v) in &blocked_lanes {
+            fresh.push((format!("kernel/{k}_over_scalar"), v / s, true, f64::INFINITY));
+        }
+        fresh.push((
+            "kernel/blocked_infer_over_scalar".into(),
+            blocked_infer_tps / s,
+            true,
+            THREAD_CAP,
+        ));
+        let die_tps = backend_lanes
+            .iter()
+            .find(|(k, _)| k == "die")
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+            .max(1e-9);
+        for (k, v) in backend_lanes.iter().filter(|(k, _)| k != "die") {
+            fresh.push((format!("backend/{k}_over_die"), v / die_tps, true, THREAD_CAP));
+        }
+        fresh.push(("wire/remote_over_local".into(), lat_ratio, false, f64::INFINITY));
+        fresh.push(("http/over_socket".into(), http_ratio, false, f64::INFINITY));
+
+        // The same ratio derivations off the baseline report.
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("--check: reading {path}: {e}"));
+        let base = Json::parse(&text).unwrap_or_else(|e| panic!("--check: parsing {path}: {e}"));
+        let bget = |keys: &[&str]| base.path(keys).and_then(Json::as_f64);
+        let mut baseline: Vec<(String, f64)> = Vec::new();
+        if let Some(bs) = bget(&["native_kernel", "scalar_trials_per_s"]) {
+            let bs = bs.max(1e-9);
+            if let Some(m) =
+                base.path(&["native_kernel", "blocked_trials_per_s"]).and_then(Json::as_obj)
+            {
+                for (k, v) in m {
+                    if let Some(v) = v.as_f64() {
+                        baseline.push((format!("kernel/{k}_over_scalar"), v / bs));
+                    }
+                }
+            }
+            if let Some(v) = bget(&["native_kernel", "blocked_infer_trials_per_s"]) {
+                baseline.push(("kernel/blocked_infer_over_scalar".into(), v / bs));
+            }
+        }
+        if let Some(bd) = bget(&["backend_trials_per_s", "die"]) {
+            let bd = bd.max(1e-9);
+            if let Some(m) = base.path(&["backend_trials_per_s"]).and_then(Json::as_obj) {
+                for (k, v) in m {
+                    if k != "die" {
+                        if let Some(v) = v.as_f64() {
+                            baseline.push((format!("backend/{k}_over_die"), v / bd));
+                        }
+                    }
+                }
+            }
+        }
+        if let (Some(l), Some(r)) = (
+            bget(&["loopback_us_per_req", "local_die"]),
+            bget(&["loopback_us_per_req", "remote_die"]),
+        ) {
+            baseline.push(("wire/remote_over_local".into(), r / l.max(1e-9)));
+        }
+        if let Some(v) = bget(&["http_ingress", "http_over_socket"]) {
+            baseline.push(("http/over_socket".into(), v));
+        }
+        let base_isa = base
+            .path(&["native_kernel", "simd_isa"])
+            .and_then(Json::as_str)
+            .unwrap_or("unknown");
+
+        println!(
+            "== bench_fleet --check vs {path} (tolerance {tolerance:.2}, isa {simd_isa} vs baseline {base_isa}) =="
+        );
+        let mut compared = 0usize;
+        let mut failures = 0usize;
+        for (lane, now, higher, cap) in &fresh {
+            let Some((_, want)) = baseline.iter().find(|(k, _)| k == lane) else {
+                println!("  {lane:<38} {now:>8.3}            (no baseline lane — skipped)");
+                continue;
+            };
+            compared += 1;
+            let (bar, ok) = if *higher {
+                let bar = (want * (1.0 - tolerance)).min(*cap);
+                (bar, *now >= bar)
+            } else {
+                let bar = want * (1.0 + tolerance);
+                (bar, *now <= bar)
+            };
+            let verdict = if ok { "ok" } else { "REGRESSED" };
+            println!(
+                "  {lane:<38} {now:>8.3} vs {want:>8.3}  (bar {bar:.3}) {verdict}"
+            );
+            if !ok {
+                failures += 1;
+            }
+        }
+        for (lane, want) in &baseline {
+            if !fresh.iter().any(|(k, _, _, _)| k == lane) {
+                println!("  {lane:<38}      —   vs {want:>8.3}  (lane gone from this run — skipped)");
+            }
+        }
+        assert!(compared > 0, "--check: no comparable lanes in {path}");
+        if failures > 0 {
+            eprintln!("--check: {failures} lane(s) regressed beyond tolerance {tolerance:.2} vs {path}");
+            std::process::exit(1);
+        }
+        println!("check OK: {compared} lanes within tolerance {tolerance:.2} of {path}");
     }
 }

@@ -21,6 +21,23 @@
 //! pipelined serving backend pins (rust/tests/blocked.rs).
 //! [`NativeEngine::infer_scalar`] keeps the one-trial-at-a-time loop as
 //! the parity/bench reference.
+//!
+//! §Perf iteration 6 (explicit SIMD + B=1 fallback): the WTA race runs
+//! on the runtime-dispatched kernels of [`crate::util::simd`] — the
+//! static `(z_j − mean) − θ` centering is a vector prepass
+//! (`center_f32`), hoisted across the whole block in [`wta_race_block`]
+//! so one centered buffer serves every trial, and each race step is one
+//! batched noise fill plus one `race_step` kernel call.  Both vectorize
+//! across the **candidates** (columns) dimension only: the f64 sums
+//! `centered[j] + noise[j]` are elementwise, and the kernel returns the
+//! first index attaining the step maximum when it clears zero — exactly
+//! the scalar ascending scan's strict-`>` winner — so decisions stay
+//! bit-identical on every ISA (and under `RACA_NO_SIMD=1`).  Separately,
+//! a 1-trial "block" pays bit-pack/unpack overhead for zero weight-reuse
+//! amortization, so `block == 1` now routes [`NativeEngine::trials_cached`],
+//! [`NativeEngine::infer_cached`] and [`NativeEngine::run_trial_batch`]
+//! through the scalar [`NativeEngine::trial_scratch`] loop (bit-identical
+//! by the §Perf-5 parity contract, just faster).
 
 use crate::neuron::WtaOutcome;
 use crate::nn::{forward, Weights};
@@ -138,10 +155,18 @@ impl NativeEngine {
 
     /// Winners for arbitrary per-trial stream indices on one cached
     /// pre-activation, processed in blocks of [`NativeEngine::block`].
+    /// At `block == 1` the blocked kernel pays bit-pack/unpack overhead
+    /// for zero weight-reuse, so the scalar loop runs instead (same
+    /// winners — the parity contract makes the paths interchangeable).
     pub fn trials_cached(&self, z1: &[f32], p: TrialParams, indices: &[u64]) -> Vec<i32> {
         let mut out = Vec::with_capacity(indices.len());
+        if self.block <= 1 {
+            let mut scratch = forward::TrialScratch::default();
+            out.extend(indices.iter().map(|&t| self.trial_scratch(z1, p, t, &mut scratch)));
+            return out;
+        }
         let mut s = forward::BlockScratch::default();
-        for chunk in indices.chunks(self.block.max(1)) {
+        for chunk in indices.chunks(self.block) {
             self.trial_block(z1, p, chunk, &mut s, &mut out);
         }
         out
@@ -169,14 +194,18 @@ impl NativeEngine {
             return out;
         }
         let block = self.block.max(1);
-        let n_blocks = trials.div_ceil(block);
+        // A 1-trial block degenerates to the scalar path (see
+        // `trials_cached`); shard threads at the default block size so the
+        // fallback still parallelizes in useful grains.
+        let shard = if block == 1 { DEFAULT_TRIAL_BLOCK } else { block };
+        let n_blocks = trials.div_ceil(shard);
         if n_blocks >= PARALLEL_MIN_BLOCKS && trials >= PARALLEL_MIN_TRIALS {
             // (start index, length) per block; merged in block order.
             let ranges: Vec<(u64, usize)> = (0..n_blocks)
                 .map(|b| {
                     (
-                        base_trial.wrapping_add((b * block) as u64),
-                        block.min(trials - b * block),
+                        base_trial.wrapping_add((b * shard) as u64),
+                        shard.min(trials - b * shard),
                     )
                 })
                 .collect();
@@ -189,6 +218,16 @@ impl NativeEngine {
                 for &w in wb {
                     out.record(w);
                 }
+            }
+        } else if block == 1 {
+            let mut scratch = forward::TrialScratch::default();
+            for t in 0..trials {
+                out.record(self.trial_scratch(
+                    z1,
+                    p,
+                    base_trial.wrapping_add(t as u64),
+                    &mut scratch,
+                ));
             }
         } else {
             let mut s = forward::BlockScratch::default();
@@ -241,11 +280,20 @@ impl NativeEngine {
         let rows = x.len() / features;
         let mut winners = vec![-1i32; rows];
         let mut s = forward::BlockScratch::default();
+        let mut scratch = forward::TrialScratch::default();
         let mut group_winners: Vec<i32> = Vec::new();
         for g in group_equal_rows(x, features, rows) {
             let z1 = self.precompute(&x[g[0] * features..(g[0] + 1) * features]);
+            if self.block <= 1 {
+                // B=1: the scalar loop wins (see `trials_cached`).
+                for &r in &g {
+                    winners[r] =
+                        self.trial_scratch(&z1, p, seed.wrapping_add(r as u64), &mut scratch);
+                }
+                continue;
+            }
             group_winners.clear();
-            for chunk in g.chunks(self.block.max(1)) {
+            for chunk in g.chunks(self.block) {
                 let idx: Vec<u64> =
                     chunk.iter().map(|&r| seed.wrapping_add(r as u64)).collect();
                 self.trial_block(&z1, p, &idx, &mut s, &mut group_winners);
@@ -273,28 +321,42 @@ pub fn wta_race(z: &[f32], p: TrialParams, gauss: &mut GaussianSource) -> i32 {
 /// micro-fix: the per-candidate `(z_j − mean) − θ` term is static across
 /// the whole race, yet the old loop recomputed it every step for every
 /// candidate — it is now hoisted into `centered`, leaving one
-/// multiply-add per candidate per step in the T-step loop.
+/// multiply-add per candidate per step in the T-step loop.  §Perf
+/// iteration 6 runs both the centering prepass and each race step
+/// through the dispatched SIMD kernels (the buffer holds the centered
+/// row in its first half and the step's batched noise in its second).
 pub fn wta_race_centered(
     z: &[f32],
     p: TrialParams,
     gauss: &mut GaussianSource,
     centered: &mut Vec<f64>,
 ) -> i32 {
-    let mean = z.iter().sum::<f32>() / z.len() as f32;
+    let k = crate::util::simd::active();
+    let n = z.len();
+    let mean = z.iter().sum::<f32>() / n as f32;
+    centered.resize(2 * n, 0.0);
+    let (c, noise) = centered.split_at_mut(n);
+    (k.center_f32)(z, mean, p.theta as f64, c);
+    race_from_centered(c, p, gauss, noise, k)
+}
+
+/// The T-step loop over an already-centered candidate row: one batched
+/// noise fill plus one `race_step` kernel call per step.  The fill
+/// consumes exactly the draws the scalar per-candidate loop would (the
+/// `fill ≡ next` pin in `stats::gauss`), and `race_step` returns the
+/// scalar scan's winner (first index attaining a `> 0` maximum), so the
+/// race is bit-identical to the pre-SIMD loop.
+fn race_from_centered(
+    centered: &[f64],
+    p: TrialParams,
+    gauss: &mut GaussianSource,
+    noise: &mut [f64],
+    k: &crate::util::simd::Kernels,
+) -> i32 {
     let sigma = p.sigma_z as f64;
-    let theta = p.theta as f64;
-    centered.clear();
-    centered.extend(z.iter().map(|&zj| (zj - mean) as f64 - theta));
     for _ in 0..p.wta_steps {
-        let mut winner = -1i32;
-        let mut best = f64::NEG_INFINITY;
-        for (j, &cj) in centered.iter().enumerate() {
-            let v = cj + sigma * gauss.next();
-            if v > 0.0 && v > best {
-                best = v;
-                winner = j as i32;
-            }
-        }
+        gauss.fill(noise, sigma);
+        let winner = (k.race_step)(centered, noise);
         if winner >= 0 {
             return winner;
         }
@@ -304,8 +366,10 @@ pub fn wta_race_centered(
 
 /// Race every trial of a block: `logits` holds `gauss.len()` trial-major
 /// rows of `classes` logits; each trial races with its own noise stream
-/// (draw-compatible with per-trial [`wta_race`]) over one shared
-/// centering buffer.  Winners append to `out` in trial order.
+/// (draw-compatible with per-trial [`wta_race`]).  The per-trial
+/// mean/centering is hoisted into one SIMD prepass over the whole block
+/// — a single centered buffer (`trials × classes`) plus one shared noise
+/// row serve every race.  Winners append to `out` in trial order.
 pub fn wta_race_block(
     logits: &[f32],
     classes: usize,
@@ -314,11 +378,25 @@ pub fn wta_race_block(
     out: &mut Vec<i32>,
 ) {
     debug_assert_eq!(logits.len(), classes * gauss.len());
-    let mut centered = Vec::with_capacity(classes);
-    out.reserve(gauss.len());
-    for (t, g) in gauss.iter_mut().enumerate() {
+    let k = crate::util::simd::active();
+    let n = gauss.len();
+    let theta = p.theta as f64;
+    let mut centered = vec![0.0f64; n * classes];
+    for t in 0..n {
         let z = &logits[t * classes..(t + 1) * classes];
-        out.push(wta_race_centered(z, p, g, &mut centered));
+        let mean = z.iter().sum::<f32>() / classes as f32;
+        (k.center_f32)(z, mean, theta, &mut centered[t * classes..(t + 1) * classes]);
+    }
+    let mut noise = vec![0.0f64; classes];
+    out.reserve(n);
+    for (t, g) in gauss.iter_mut().enumerate() {
+        out.push(race_from_centered(
+            &centered[t * classes..(t + 1) * classes],
+            p,
+            g,
+            &mut noise,
+            k,
+        ));
     }
 }
 

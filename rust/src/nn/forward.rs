@@ -26,6 +26,18 @@
 //! FLOP count is unchanged (the scalar path already skipped silent
 //! neurons), so the win is pure memory-hierarchy behaviour plus branchless
 //! mask iteration.
+//!
+//! §Perf iteration 6 (explicit SIMD): the blocked matmul's inner
+//! column-add and the batched noise fill now run through the
+//! runtime-dispatched kernels of [`crate::util::simd`] (AVX2/SSE2 on
+//! x86_64, NEON on aarch64, unrolled scalar elsewhere or under
+//! `RACA_NO_SIMD=1`).  The parity contract is preserved because every
+//! kernel vectorizes across the **columns** dimension only — each output
+//! element keeps its exact scalar accumulation order over weight rows,
+//! and IEEE f32/f64 arithmetic is deterministic per element, so the
+//! dispatched path stays bit-identical to the scalar reference (see the
+//! `util::simd` module docs for the per-kernel argument, and
+//! rust/tests/simd.rs for the pinning matrix).
 
 use super::bitvec::BitBlock;
 use super::weights::Weights;
@@ -257,9 +269,17 @@ pub fn pack_rows_block(rows: &[f32], width: usize, n: usize, s: &mut BlockScratc
 /// block, reading each f32 weight row once.  Per trial the additions
 /// happen in ascending row order — exactly [`affine_aug`]'s order over a
 /// binary `h` — so the accumulators are bit-identical f32s.
+///
+/// The inner column-add runs through the dispatched SIMD kernel
+/// (`util::simd::active().add_assign_f32` — §Perf iteration 6).  Lanes
+/// span *columns*, never rows: each `out[t*cols + j]` still receives its
+/// additions one weight row at a time in ascending row order, so the
+/// f32 accumulation sequence per output element is unchanged and the
+/// blocked ≡ scalar bit-parity contract survives vectorization.
 fn affine_bits_block(rows: usize, cols: usize, m: &[f32], bits: &BitBlock, out: &mut Vec<f32>) {
     let n = bits.trials();
     debug_assert_eq!(bits.neurons() + 1, rows);
+    let k = crate::util::simd::active();
     out.clear();
     out.reserve(n * cols);
     let bias = &m[(rows - 1) * cols..rows * cols];
@@ -272,9 +292,7 @@ fn affine_bits_block(rows: usize, cols: usize, m: &[f32], bits: &BitBlock, out: 
             let mut mk = mask;
             while mk != 0 {
                 let t = (lane << 6) + mk.trailing_zeros() as usize;
-                for (o, &wv) in out[t * cols..(t + 1) * cols].iter_mut().zip(row) {
-                    *o += wv;
-                }
+                (k.add_assign_f32)(&mut out[t * cols..(t + 1) * cols], row);
                 mk &= mk - 1;
             }
         }

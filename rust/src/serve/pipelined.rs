@@ -33,7 +33,15 @@
 //! a `StageMsg::Trials` block maps 1:1 onto a kernel block, so every f32
 //! weight row of the die's layers is read once per message instead of
 //! once per trial — larger `:bN` now amortizes weight traffic, not just
-//! channel overhead, still without touching the noise streams.
+//! channel overhead, still without touching the noise streams.  (§Perf
+//! iteration 6: the kernel primitives each stage calls —
+//! `hidden_layer_block`, `output_layer_block`, `wta_race_block`,
+//! `GaussianSource::fill` — dispatch to the explicit SIMD kernels of
+//! [`crate::util::simd`] internally, so every stage, and likewise the
+//! replicated-fleet and HTTP-batcher paths, picks up the vectorized hot
+//! loops without any topology-level changes; the bit-parity contract
+//! above is unaffected because the kernels vectorize across columns
+//! only.)
 //!
 //! [`NativeEngine`]: crate::engine::NativeEngine
 

@@ -3,4 +3,5 @@
 pub mod bench;
 pub mod json;
 pub mod logging;
+pub mod simd;
 pub mod table;

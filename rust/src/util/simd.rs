@@ -1,0 +1,711 @@
+//! Explicit SIMD kernels with one-time runtime dispatch (§Perf
+//! iteration 6).
+//!
+//! The trial-blocked bit-packed kernel (§Perf iteration 5) made the
+//! inner column-add of `nn::forward::affine_bits_block` the hottest loop
+//! of the whole simulator — and left its vectorization to compiler luck.
+//! This module makes it explicit: arch-gated intrinsic kernels
+//! (x86_64 AVX2 / SSE2, aarch64 NEON) behind a [`Kernels`] table of
+//! plain function pointers, selected **once** per process by
+//! [`active`] from runtime CPU feature detection, with a portable
+//! unrolled-scalar fallback and a `RACA_NO_SIMD=1` escape hatch that
+//! forces the fallback on any machine (set it to diagnose a suspected
+//! codegen issue, or to bench the scalar floor).
+//!
+//! ## The columns-lane parity argument
+//!
+//! Every kernel here is held to the §Perf-5 contract: the dispatched
+//! path must be **bit-identical** to the scalar reference.  That is only
+//! possible because each kernel vectorizes across the *columns* (output
+//! elements) dimension and never reassociates a reduction:
+//!
+//! * [`Kernels::add_assign_f32`] — `out[j] += row[j]`.  The blocked
+//!   matmul accumulates weight rows into per-trial accumulators in
+//!   ascending row order; lanes span columns `j`, so each `out[j]` sees
+//!   the exact scalar sequence of f32 additions, just eight columns per
+//!   instruction.  IEEE-754 addition is deterministic per element, so
+//!   the accumulators are bit-identical.
+//! * [`Kernels::center_f32`] — `out[j] = (z[j] - mean) as f64 - theta`.
+//!   Pure elementwise map (f32 subtract, exact widen, f64 subtract) —
+//!   the per-row mean itself stays a scalar ordered sum in the caller.
+//! * [`Kernels::race_step`] — one WTA race step.  The scalar loop scans
+//!   columns ascending keeping a strict-`>` running best, i.e. it
+//!   returns the *first* index attaining the maximum, provided that
+//!   maximum is `> 0`.  The SIMD kernel computes the same f64 sums
+//!   `v[j] = centered[j] + noise[j]` (elementwise, no reassociation),
+//!   takes a lane-wise max (max is associative and commutative over
+//!   totally-ordered finite floats — no NaNs reach this kernel), and
+//!   then rescans for the first `v[j] ==` that max: the identical
+//!   winner.
+//! * [`Kernels::zig_fastpath`] — the speculative batched ziggurat fast
+//!   path (`stats::gauss::GaussianSource::fill`).  For a chunk of
+//!   [`ZIG_LANES`] pre-drawn `u64`s whose layer index is non-zero, it
+//!   computes `x = u·x_i` and the accept test `x < x_{i+1}` lane-wise —
+//!   the exact fast-path arithmetic of the scalar sampler (`u` is a
+//!   power-of-two scaling of a ≤53-bit integer, so every intermediate
+//!   is exact) — and commits the chunk only when **all** lanes accept.
+//!   Any base-layer draw, wedge test, or tail excursion makes the
+//!   caller rewind its RNG and replay the chunk through the scalar
+//!   sampler, so rejection paths consume draws in the scalar order by
+//!   construction.
+//!
+//! `rust/tests/simd.rs` pins every available variant against the scalar
+//! reference bit-for-bit (odd widths, tails, ties), and CI runs the
+//! whole test suite a second time under `RACA_NO_SIMD=1` so the
+//! fallback cannot rot.
+
+use std::sync::OnceLock;
+
+/// Samples per speculative ziggurat chunk (see [`Kernels::zig_fastpath`]).
+pub const ZIG_LANES: usize = 8;
+
+/// 53-bit-uniform scale: `1 / 2^53` (must match `stats::rng::Rng::next_f64`).
+const U53: f64 = 1.0 / (1u64 << 53) as f64;
+
+/// Instruction set selected by the dispatcher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// x86_64 AVX2 (8×f32 / 4×f64 lanes).
+    Avx2,
+    /// x86_64 SSE2 baseline (4×f32 / 2×f64 lanes).
+    Sse2,
+    /// aarch64 NEON (4×f32 / 2×f64 lanes).
+    Neon,
+    /// Portable unrolled-scalar fallback.
+    Scalar,
+}
+
+impl Isa {
+    /// Stable lowercase name, logged in bench reports (`simd_isa`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Sse2 => "sse2",
+            Isa::Neon => "neon",
+            Isa::Scalar => "scalar",
+        }
+    }
+}
+
+/// One coherent set of kernels for a single ISA.  All four entries are
+/// plain `fn` pointers so the hot loops pay one indirect call per
+/// row/step/chunk — never a per-element dispatch.
+pub struct Kernels {
+    pub isa: Isa,
+    /// `out[j] += row[j]` — the blocked matmul's inner column-add.
+    pub add_assign_f32: fn(&mut [f32], &[f32]),
+    /// `out[j] = (z[j] - mean) as f64 - theta` — WTA centering prepass.
+    pub center_f32: fn(&[f32], f32, f64, &mut [f64]),
+    /// One WTA race step over `v[j] = centered[j] + noise[j]`: index of
+    /// the first maximum if it is `> 0`, else `-1`.
+    pub race_step: fn(&[f64], &[f64]) -> i32,
+    /// Speculative ziggurat chunk: `(bits, x_i, x_{i+1}, std, out)`.
+    /// Returns `true` (and writes `out[..ZIG_LANES]`) iff every lane
+    /// takes the rejection-free fast path.
+    pub zig_fastpath: fn(&[u64; ZIG_LANES], &[f64; ZIG_LANES], &[f64; ZIG_LANES], f64, &mut [f64]) -> bool,
+}
+
+impl Kernels {
+    /// Shorthand for `self.isa.name()`.
+    pub fn name(&self) -> &'static str {
+        self.isa.name()
+    }
+}
+
+/// `RACA_NO_SIMD` set to anything but empty/`0` forces the scalar table.
+fn fallback_forced() -> bool {
+    std::env::var("RACA_NO_SIMD").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+// unreachable_code: on x86_64/aarch64 a cfg-gated `return` always fires
+// first, leaving the scalar tail for every other target.
+#[allow(unreachable_code)]
+fn detect() -> &'static Kernels {
+    if fallback_forced() {
+        return &SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    return if std::arch::is_x86_feature_detected!("avx2") { &x86::AVX2 } else { &x86::SSE2 };
+    #[cfg(target_arch = "aarch64")]
+    return &arm::NEON;
+    &SCALAR
+}
+
+/// The process-wide kernel table: detected once on first use (any
+/// thread), identical ever after — callers may cache the reference.
+pub fn active() -> &'static Kernels {
+    static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
+    ACTIVE.get_or_init(detect)
+}
+
+/// Every kernel table the *current* CPU can execute (scalar always
+/// included, detection-gated ISAs after it) — the test harness runs the
+/// full parity matrix over all of them regardless of which one
+/// [`active`] picked.
+pub fn variants() -> Vec<&'static Kernels> {
+    #[allow(unused_mut)]
+    let mut v: Vec<&'static Kernels> = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        v.push(&x86::SSE2);
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(&x86::AVX2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(&arm::NEON);
+    v
+}
+
+// --------------------------------------------------------------------------
+// Portable unrolled-scalar fallback (also the parity reference in tests).
+
+static SCALAR: Kernels = Kernels {
+    isa: Isa::Scalar,
+    add_assign_f32: add_assign_f32_scalar,
+    center_f32: center_f32_scalar,
+    race_step: race_step_scalar,
+    zig_fastpath: zig_fastpath_scalar,
+};
+
+fn add_assign_f32_scalar(out: &mut [f32], row: &[f32]) {
+    debug_assert_eq!(out.len(), row.len());
+    // 4-way unroll: enough for the compiler to keep four independent adds
+    // in flight without asking it to discover the loop shape on its own.
+    let mut o4 = out.chunks_exact_mut(4);
+    let mut r4 = row.chunks_exact(4);
+    for (o, r) in o4.by_ref().zip(r4.by_ref()) {
+        o[0] += r[0];
+        o[1] += r[1];
+        o[2] += r[2];
+        o[3] += r[3];
+    }
+    for (o, &r) in o4.into_remainder().iter_mut().zip(r4.remainder()) {
+        *o += r;
+    }
+}
+
+fn center_f32_scalar(z: &[f32], mean: f32, theta: f64, out: &mut [f64]) {
+    debug_assert_eq!(z.len(), out.len());
+    for (o, &zj) in out.iter_mut().zip(z) {
+        *o = (zj - mean) as f64 - theta;
+    }
+}
+
+fn race_step_scalar(centered: &[f64], noise: &[f64]) -> i32 {
+    debug_assert_eq!(centered.len(), noise.len());
+    let mut winner = -1i32;
+    let mut best = f64::NEG_INFINITY;
+    for (j, (&cj, &nj)) in centered.iter().zip(noise).enumerate() {
+        let v = cj + nj;
+        if v > 0.0 && v > best {
+            best = v;
+            winner = j as i32;
+        }
+    }
+    winner
+}
+
+fn zig_fastpath_scalar(
+    bits: &[u64; ZIG_LANES],
+    lo: &[f64; ZIG_LANES],
+    hi: &[f64; ZIG_LANES],
+    std: f64,
+    out: &mut [f64],
+) -> bool {
+    debug_assert!(out.len() >= ZIG_LANES);
+    let mut x = [0.0f64; ZIG_LANES];
+    for k in 0..ZIG_LANES {
+        // Exactly the scalar sampler's fast path: u is (bits >> 11)
+        // scaled by 2^-53 (both steps exact), x = u·x_i, accept x < x_{i+1}.
+        let u = (bits[k] >> 11) as f64 * U53;
+        x[k] = u * lo[k];
+        if x[k] >= hi[k] {
+            return false;
+        }
+    }
+    for k in 0..ZIG_LANES {
+        // sign·(std·x) ≡ std·(sign·x): negation is exact, so the product
+        // matches the scalar `std * (sign * x)` bit-for-bit.
+        let v = std * x[k];
+        out[k] = if bits[k] & 0x100 != 0 { v } else { -v };
+    }
+    true
+}
+
+// --------------------------------------------------------------------------
+// x86_64: AVX2 (8×f32/4×f64) and the SSE2 baseline (4×f32/2×f64).
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{Isa, Kernels, U53, ZIG_LANES};
+    use std::arch::x86_64::*;
+
+    pub(super) static AVX2: Kernels = Kernels {
+        isa: Isa::Avx2,
+        add_assign_f32: add_assign_f32_avx2,
+        center_f32: center_f32_avx2,
+        race_step: race_step_avx2,
+        zig_fastpath: zig_fastpath_avx2,
+    };
+
+    pub(super) static SSE2: Kernels = Kernels {
+        isa: Isa::Sse2,
+        add_assign_f32: add_assign_f32_sse2,
+        center_f32: center_f32_sse2,
+        race_step: race_step_sse2,
+        zig_fastpath: zig_fastpath_sse2,
+    };
+
+    // The safe wrappers below are only ever reachable through a Kernels
+    // table that `detect`/`variants` hands out after the matching CPUID
+    // check (SSE2 is the x86_64 baseline), so the target_feature calls
+    // are sound.
+
+    fn add_assign_f32_avx2(out: &mut [f32], row: &[f32]) {
+        unsafe { add_assign_f32_avx2_impl(out, row) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_assign_f32_avx2_impl(out: &mut [f32], row: &[f32]) {
+        debug_assert_eq!(out.len(), row.len());
+        let n = out.len();
+        let op = out.as_mut_ptr();
+        let rp = row.as_ptr();
+        let mut j = 0usize;
+        while j + 16 <= n {
+            let a0 = _mm256_loadu_ps(op.add(j));
+            let a1 = _mm256_loadu_ps(op.add(j + 8));
+            let b0 = _mm256_loadu_ps(rp.add(j));
+            let b1 = _mm256_loadu_ps(rp.add(j + 8));
+            _mm256_storeu_ps(op.add(j), _mm256_add_ps(a0, b0));
+            _mm256_storeu_ps(op.add(j + 8), _mm256_add_ps(a1, b1));
+            j += 16;
+        }
+        if j + 8 <= n {
+            let a = _mm256_loadu_ps(op.add(j));
+            let b = _mm256_loadu_ps(rp.add(j));
+            _mm256_storeu_ps(op.add(j), _mm256_add_ps(a, b));
+            j += 8;
+        }
+        while j < n {
+            *op.add(j) += *rp.add(j);
+            j += 1;
+        }
+    }
+
+    fn add_assign_f32_sse2(out: &mut [f32], row: &[f32]) {
+        unsafe { add_assign_f32_sse2_impl(out, row) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn add_assign_f32_sse2_impl(out: &mut [f32], row: &[f32]) {
+        debug_assert_eq!(out.len(), row.len());
+        let n = out.len();
+        let op = out.as_mut_ptr();
+        let rp = row.as_ptr();
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let a = _mm_loadu_ps(op.add(j));
+            let b = _mm_loadu_ps(rp.add(j));
+            _mm_storeu_ps(op.add(j), _mm_add_ps(a, b));
+            j += 4;
+        }
+        while j < n {
+            *op.add(j) += *rp.add(j);
+            j += 1;
+        }
+    }
+
+    fn center_f32_avx2(z: &[f32], mean: f32, theta: f64, out: &mut [f64]) {
+        unsafe { center_f32_avx2_impl(z, mean, theta, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn center_f32_avx2_impl(z: &[f32], mean: f32, theta: f64, out: &mut [f64]) {
+        debug_assert_eq!(z.len(), out.len());
+        let n = z.len();
+        let m = _mm256_set1_ps(mean);
+        let th = _mm256_set1_pd(theta);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(z.as_ptr().add(j)), m);
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps(d, 1));
+            _mm256_storeu_pd(out.as_mut_ptr().add(j), _mm256_sub_pd(lo, th));
+            _mm256_storeu_pd(out.as_mut_ptr().add(j + 4), _mm256_sub_pd(hi, th));
+            j += 8;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) = (*z.get_unchecked(j) - mean) as f64 - theta;
+            j += 1;
+        }
+    }
+
+    fn center_f32_sse2(z: &[f32], mean: f32, theta: f64, out: &mut [f64]) {
+        unsafe { center_f32_sse2_impl(z, mean, theta, out) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn center_f32_sse2_impl(z: &[f32], mean: f32, theta: f64, out: &mut [f64]) {
+        debug_assert_eq!(z.len(), out.len());
+        let n = z.len();
+        let m = _mm_set1_ps(mean);
+        let th = _mm_set1_pd(theta);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let d = _mm_sub_ps(_mm_loadu_ps(z.as_ptr().add(j)), m);
+            let lo = _mm_cvtps_pd(d);
+            let hi = _mm_cvtps_pd(_mm_movehl_ps(d, d));
+            _mm_storeu_pd(out.as_mut_ptr().add(j), _mm_sub_pd(lo, th));
+            _mm_storeu_pd(out.as_mut_ptr().add(j + 2), _mm_sub_pd(hi, th));
+            j += 4;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) = (*z.get_unchecked(j) - mean) as f64 - theta;
+            j += 1;
+        }
+    }
+
+    fn race_step_avx2(centered: &[f64], noise: &[f64]) -> i32 {
+        unsafe { race_step_avx2_impl(centered, noise) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn race_step_avx2_impl(centered: &[f64], noise: &[f64]) -> i32 {
+        debug_assert_eq!(centered.len(), noise.len());
+        let n = centered.len();
+        let cp = centered.as_ptr();
+        let np = noise.as_ptr();
+        let mut mx = _mm256_set1_pd(f64::NEG_INFINITY);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let v = _mm256_add_pd(_mm256_loadu_pd(cp.add(j)), _mm256_loadu_pd(np.add(j)));
+            mx = _mm256_max_pd(mx, v);
+            j += 4;
+        }
+        let hi = _mm256_extractf128_pd(mx, 1);
+        let lo = _mm256_castpd256_pd128(mx);
+        let m2 = _mm_max_pd(lo, hi);
+        let m1 = _mm_max_sd(m2, _mm_unpackhi_pd(m2, m2));
+        let mut best = _mm_cvtsd_f64(m1);
+        while j < n {
+            let v = *cp.add(j) + *np.add(j);
+            if v > best {
+                best = v;
+            }
+            j += 1;
+        }
+        super::first_at_max(centered, noise, best)
+    }
+
+    fn race_step_sse2(centered: &[f64], noise: &[f64]) -> i32 {
+        unsafe { race_step_sse2_impl(centered, noise) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn race_step_sse2_impl(centered: &[f64], noise: &[f64]) -> i32 {
+        debug_assert_eq!(centered.len(), noise.len());
+        let n = centered.len();
+        let cp = centered.as_ptr();
+        let np = noise.as_ptr();
+        let mut mx = _mm_set1_pd(f64::NEG_INFINITY);
+        let mut j = 0usize;
+        while j + 2 <= n {
+            let v = _mm_add_pd(_mm_loadu_pd(cp.add(j)), _mm_loadu_pd(np.add(j)));
+            mx = _mm_max_pd(mx, v);
+            j += 2;
+        }
+        let m1 = _mm_max_sd(mx, _mm_unpackhi_pd(mx, mx));
+        let mut best = _mm_cvtsd_f64(m1);
+        while j < n {
+            let v = *cp.add(j) + *np.add(j);
+            if v > best {
+                best = v;
+            }
+            j += 1;
+        }
+        super::first_at_max(centered, noise, best)
+    }
+
+    fn zig_fastpath_avx2(
+        bits: &[u64; ZIG_LANES],
+        lo: &[f64; ZIG_LANES],
+        hi: &[f64; ZIG_LANES],
+        std: f64,
+        out: &mut [f64],
+    ) -> bool {
+        unsafe { zig_fastpath_avx2_impl(bits, lo, hi, std, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn zig_fastpath_avx2_impl(
+        bits: &[u64; ZIG_LANES],
+        lo: &[f64; ZIG_LANES],
+        hi: &[f64; ZIG_LANES],
+        std: f64,
+        out: &mut [f64],
+    ) -> bool {
+        debug_assert!(out.len() >= ZIG_LANES);
+        let (u, sx) = super::zig_prep(bits);
+        let c = _mm256_set1_pd(U53);
+        let s = _mm256_set1_pd(std);
+        for h in 0..2 {
+            let uu = _mm256_mul_pd(_mm256_loadu_pd(u.as_ptr().add(4 * h)), c);
+            let x = _mm256_mul_pd(uu, _mm256_loadu_pd(lo.as_ptr().add(4 * h)));
+            let ok = _mm256_cmp_pd::<_CMP_LT_OQ>(x, _mm256_loadu_pd(hi.as_ptr().add(4 * h)));
+            if _mm256_movemask_pd(ok) != 0xF {
+                return false;
+            }
+            let flip = _mm256_loadu_si256(sx.as_ptr().add(4 * h) as *const __m256i);
+            let v = _mm256_xor_pd(_mm256_mul_pd(s, x), _mm256_castsi256_pd(flip));
+            _mm256_storeu_pd(out.as_mut_ptr().add(4 * h), v);
+        }
+        true
+    }
+
+    fn zig_fastpath_sse2(
+        bits: &[u64; ZIG_LANES],
+        lo: &[f64; ZIG_LANES],
+        hi: &[f64; ZIG_LANES],
+        std: f64,
+        out: &mut [f64],
+    ) -> bool {
+        unsafe { zig_fastpath_sse2_impl(bits, lo, hi, std, out) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn zig_fastpath_sse2_impl(
+        bits: &[u64; ZIG_LANES],
+        lo: &[f64; ZIG_LANES],
+        hi: &[f64; ZIG_LANES],
+        std: f64,
+        out: &mut [f64],
+    ) -> bool {
+        debug_assert!(out.len() >= ZIG_LANES);
+        let (u, sx) = super::zig_prep(bits);
+        let c = _mm_set1_pd(U53);
+        let s = _mm_set1_pd(std);
+        for h in 0..4 {
+            let uu = _mm_mul_pd(_mm_loadu_pd(u.as_ptr().add(2 * h)), c);
+            let x = _mm_mul_pd(uu, _mm_loadu_pd(lo.as_ptr().add(2 * h)));
+            let ok = _mm_cmplt_pd(x, _mm_loadu_pd(hi.as_ptr().add(2 * h)));
+            if _mm_movemask_pd(ok) != 0x3 {
+                return false;
+            }
+            let flip = _mm_loadu_si128(sx.as_ptr().add(2 * h) as *const __m128i);
+            let v = _mm_xor_pd(_mm_mul_pd(s, x), _mm_castsi128_pd(flip));
+            _mm_storeu_pd(out.as_mut_ptr().add(2 * h), v);
+        }
+        true
+    }
+}
+
+// --------------------------------------------------------------------------
+// aarch64: NEON (4×f32/2×f64, baseline on every aarch64 target).
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{Isa, Kernels, U53, ZIG_LANES};
+    use std::arch::aarch64::*;
+
+    pub(super) static NEON: Kernels = Kernels {
+        isa: Isa::Neon,
+        add_assign_f32: add_assign_f32_neon,
+        center_f32: center_f32_neon,
+        race_step: race_step_neon,
+        zig_fastpath: zig_fastpath_neon,
+    };
+
+    // NEON is part of the aarch64 baseline, so the wrappers are sound on
+    // every CPU this module compiles for.
+
+    fn add_assign_f32_neon(out: &mut [f32], row: &[f32]) {
+        unsafe { add_assign_f32_neon_impl(out, row) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn add_assign_f32_neon_impl(out: &mut [f32], row: &[f32]) {
+        debug_assert_eq!(out.len(), row.len());
+        let n = out.len();
+        let op = out.as_mut_ptr();
+        let rp = row.as_ptr();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let a0 = vld1q_f32(op.add(j));
+            let a1 = vld1q_f32(op.add(j + 4));
+            let b0 = vld1q_f32(rp.add(j));
+            let b1 = vld1q_f32(rp.add(j + 4));
+            vst1q_f32(op.add(j), vaddq_f32(a0, b0));
+            vst1q_f32(op.add(j + 4), vaddq_f32(a1, b1));
+            j += 8;
+        }
+        if j + 4 <= n {
+            vst1q_f32(op.add(j), vaddq_f32(vld1q_f32(op.add(j)), vld1q_f32(rp.add(j))));
+            j += 4;
+        }
+        while j < n {
+            *op.add(j) += *rp.add(j);
+            j += 1;
+        }
+    }
+
+    fn center_f32_neon(z: &[f32], mean: f32, theta: f64, out: &mut [f64]) {
+        unsafe { center_f32_neon_impl(z, mean, theta, out) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn center_f32_neon_impl(z: &[f32], mean: f32, theta: f64, out: &mut [f64]) {
+        debug_assert_eq!(z.len(), out.len());
+        let n = z.len();
+        let m = vdupq_n_f32(mean);
+        let th = vdupq_n_f64(theta);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let d = vsubq_f32(vld1q_f32(z.as_ptr().add(j)), m);
+            let lo = vcvt_f64_f32(vget_low_f32(d));
+            let hi = vcvt_high_f64_f32(d);
+            vst1q_f64(out.as_mut_ptr().add(j), vsubq_f64(lo, th));
+            vst1q_f64(out.as_mut_ptr().add(j + 2), vsubq_f64(hi, th));
+            j += 4;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) = (*z.get_unchecked(j) - mean) as f64 - theta;
+            j += 1;
+        }
+    }
+
+    fn race_step_neon(centered: &[f64], noise: &[f64]) -> i32 {
+        unsafe { race_step_neon_impl(centered, noise) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn race_step_neon_impl(centered: &[f64], noise: &[f64]) -> i32 {
+        debug_assert_eq!(centered.len(), noise.len());
+        let n = centered.len();
+        let cp = centered.as_ptr();
+        let np = noise.as_ptr();
+        let mut mx = vdupq_n_f64(f64::NEG_INFINITY);
+        let mut j = 0usize;
+        while j + 2 <= n {
+            let v = vaddq_f64(vld1q_f64(cp.add(j)), vld1q_f64(np.add(j)));
+            mx = vmaxq_f64(mx, v);
+            j += 2;
+        }
+        let mut best = vmaxvq_f64(mx);
+        while j < n {
+            let v = *cp.add(j) + *np.add(j);
+            if v > best {
+                best = v;
+            }
+            j += 1;
+        }
+        super::first_at_max(centered, noise, best)
+    }
+
+    fn zig_fastpath_neon(
+        bits: &[u64; ZIG_LANES],
+        lo: &[f64; ZIG_LANES],
+        hi: &[f64; ZIG_LANES],
+        std: f64,
+        out: &mut [f64],
+    ) -> bool {
+        unsafe { zig_fastpath_neon_impl(bits, lo, hi, std, out) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn zig_fastpath_neon_impl(
+        bits: &[u64; ZIG_LANES],
+        lo: &[f64; ZIG_LANES],
+        hi: &[f64; ZIG_LANES],
+        std: f64,
+        out: &mut [f64],
+    ) -> bool {
+        debug_assert!(out.len() >= ZIG_LANES);
+        let (u, sx) = super::zig_prep(bits);
+        let c = vdupq_n_f64(U53);
+        let s = vdupq_n_f64(std);
+        for h in 0..4 {
+            let uu = vmulq_f64(vld1q_f64(u.as_ptr().add(2 * h)), c);
+            let x = vmulq_f64(uu, vld1q_f64(lo.as_ptr().add(2 * h)));
+            let ok = vcltq_f64(x, vld1q_f64(hi.as_ptr().add(2 * h)));
+            if vgetq_lane_u64(ok, 0) == 0 || vgetq_lane_u64(ok, 1) == 0 {
+                return false;
+            }
+            let v = veorq_u64(
+                vreinterpretq_u64_f64(vmulq_f64(s, x)),
+                vld1q_u64(sx.as_ptr().add(2 * h)),
+            );
+            vst1q_f64(out.as_mut_ptr().add(2 * h), vreinterpretq_f64_u64(v));
+        }
+        true
+    }
+}
+
+// --------------------------------------------------------------------------
+// Shared helpers of the arch modules.
+
+/// First index whose race value equals the (already computed) maximum —
+/// the scalar scan's winner — or -1 when the maximum never cleared zero.
+/// f64 addition is deterministic, so recomputing `c + n` here reproduces
+/// the SIMD lanes' values exactly.
+#[inline]
+#[cfg_attr(not(any(target_arch = "x86_64", target_arch = "aarch64")), allow(dead_code))]
+fn first_at_max(centered: &[f64], noise: &[f64], best: f64) -> i32 {
+    if !(best > 0.0) {
+        return -1;
+    }
+    for (j, (&cj, &nj)) in centered.iter().zip(noise).enumerate() {
+        if cj + nj == best {
+            return j as i32;
+        }
+    }
+    debug_assert!(false, "race maximum not found on rescan");
+    -1
+}
+
+/// Per-lane prep of a speculative ziggurat chunk: the 53-bit uniform
+/// numerator as f64 (exact — it is < 2^53) and the sign-flip mask
+/// (`bits & 0x100` clear means negative in the scalar sampler, applied
+/// as an exact IEEE sign-bit XOR).
+#[inline]
+#[cfg_attr(not(any(target_arch = "x86_64", target_arch = "aarch64")), allow(dead_code))]
+fn zig_prep(bits: &[u64; ZIG_LANES]) -> ([f64; ZIG_LANES], [u64; ZIG_LANES]) {
+    let mut u = [0.0f64; ZIG_LANES];
+    let mut sx = [0u64; ZIG_LANES];
+    for k in 0..ZIG_LANES {
+        u[k] = (bits[k] >> 11) as f64;
+        sx[k] = if bits[k] & 0x100 != 0 { 0 } else { 1u64 << 63 };
+    }
+    (u, sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn active_is_stable_and_named() {
+        let a = active();
+        let b = active();
+        assert!(std::ptr::eq(a, b), "dispatch must resolve once");
+        assert!(["avx2", "sse2", "neon", "scalar"].contains(&a.name()));
+    }
+
+    #[test]
+    fn variants_always_lead_with_scalar() {
+        let v = variants();
+        assert_eq!(v[0].isa, Isa::Scalar);
+        #[cfg(target_arch = "x86_64")]
+        assert!(v.iter().any(|k| k.isa == Isa::Sse2), "SSE2 is the x86_64 baseline");
+    }
+
+    #[test]
+    fn scalar_race_step_picks_first_strict_maximum() {
+        // Ties resolve to the earliest index; non-positive maxima abstain.
+        assert_eq!(race_step_scalar(&[1.0, 1.0], &[0.0, 0.0]), 0);
+        assert_eq!(race_step_scalar(&[-1.0, -2.0], &[0.5, 0.5]), -1);
+        assert_eq!(race_step_scalar(&[-1.0, 2.0, 3.0, 3.0], &[0.0; 4]), 2);
+        assert_eq!(race_step_scalar(&[0.0], &[0.0]), -1, "exactly zero never wins");
+    }
+}

@@ -1,0 +1,319 @@
+//! SIMD ≡ scalar bit-parity matrix (§Perf iteration 6).
+//!
+//! Two layers of pinning:
+//!
+//! 1. **Kernel-level** — every kernel table the current CPU can execute
+//!    ([`simd::variants`]: scalar always, SSE2/AVX2/NEON when detected)
+//!    is compared against the portable scalar reference bit-for-bit,
+//!    across odd/non-multiple-of-lane widths and tail columns.  This
+//!    catches a broken SIMD variant even on machines where the
+//!    dispatcher would have picked a different table.
+//! 2. **Engine-level** — the dispatched path (whatever [`simd::active`]
+//!    selected, including the forced scalar table under
+//!    `RACA_NO_SIMD=1`) must reproduce `NativeEngine::infer_scalar`
+//!    vote-for-vote across block sizes B ∈ {1, 3, 64, 100}.
+//!
+//! Forced-fallback vs dispatched cannot be compared inside one process —
+//! the dispatcher reads the environment once through a `OnceLock` — so
+//! CI runs this whole suite twice, once plain and once under
+//! `RACA_NO_SIMD=1`; `dispatch_honors_environment` asserts each leg
+//! really exercised the table it was meant to.
+
+use std::sync::Arc;
+
+use raca::engine::{NativeEngine, TrialParams};
+use raca::nn::{ModelSpec, Weights};
+use raca::stats::Rng;
+use raca::util::simd::{self, Isa, ZIG_LANES};
+
+/// Deterministic f32s in roughly [-2, 2) off the crate's own xoshiro.
+fn f32s(seed: u64, n: usize) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| (r.next_f64() * 4.0 - 2.0) as f32).collect()
+}
+
+fn f64s(seed: u64, n: usize) -> Vec<f64> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.next_f64() * 4.0 - 2.0).collect()
+}
+
+/// Widths straddling every lane boundary of every ISA (1..=2×AVX2 f32
+/// width, plus larger non-multiples with long tails).
+const WIDTHS: &[usize] = &[
+    1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 23, 31, 33, 63, 65, 100, 127, 129,
+    257,
+];
+
+#[test]
+fn dispatch_honors_environment() {
+    // The suite runs twice in CI: plain (dispatched ISA) and under
+    // RACA_NO_SIMD=1 (forced scalar).  Each leg asserts its own side.
+    let forced = std::env::var("RACA_NO_SIMD").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let isa = simd::active().isa;
+    if forced {
+        assert_eq!(isa, Isa::Scalar, "RACA_NO_SIMD=1 must force the scalar table");
+    } else if cfg!(target_arch = "x86_64") {
+        assert!(
+            matches!(isa, Isa::Avx2 | Isa::Sse2),
+            "x86_64 must dispatch AVX2 or the SSE2 baseline, got {:?}",
+            isa
+        );
+    } else if cfg!(target_arch = "aarch64") {
+        assert_eq!(isa, Isa::Neon, "aarch64 must dispatch NEON");
+    } else {
+        assert_eq!(isa, Isa::Scalar);
+    }
+    // And the name surfaced in bench reports round-trips.
+    assert_eq!(simd::active().name(), isa.name());
+}
+
+#[test]
+fn add_assign_matches_scalar_on_every_variant() {
+    let scalar = simd::variants()[0];
+    for &n in WIDTHS {
+        let base = f32s(0x5EED ^ n as u64, n);
+        let row = f32s(0xABCD ^ n as u64, n);
+        let mut want = base.clone();
+        (scalar.add_assign_f32)(&mut want, &row);
+        for k in simd::variants() {
+            let mut got = base.clone();
+            (k.add_assign_f32)(&mut got, &row);
+            for j in 0..n {
+                assert_eq!(
+                    got[j].to_bits(),
+                    want[j].to_bits(),
+                    "{} width {n} col {j}",
+                    k.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn add_assign_accumulation_order_survives_repeated_rows() {
+    // The blocked matmul calls the kernel once per set weight row; f32
+    // accumulation over many rows must stay bit-stable per column.
+    let scalar = simd::variants()[0];
+    for &n in &[5usize, 17, 64, 100] {
+        let rows: Vec<Vec<f32>> = (0..37).map(|i| f32s(0x60 + i as u64, n)).collect();
+        let mut want = vec![0.0f32; n];
+        for r in &rows {
+            (scalar.add_assign_f32)(&mut want, r);
+        }
+        for k in simd::variants() {
+            let mut got = vec![0.0f32; n];
+            for r in &rows {
+                (k.add_assign_f32)(&mut got, r);
+            }
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{} width {n}",
+                k.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn center_matches_scalar_on_every_variant() {
+    let scalar = simd::variants()[0];
+    for &n in WIDTHS {
+        let z = f32s(0xCE17E4 ^ n as u64, n);
+        let mean = z.iter().sum::<f32>() / n as f32;
+        let theta = 3.0f64;
+        let mut want = vec![0.0f64; n];
+        (scalar.center_f32)(&z, mean, theta, &mut want);
+        for k in simd::variants() {
+            let mut got = vec![0.0f64; n];
+            (k.center_f32)(&z, mean, theta, &mut got);
+            for j in 0..n {
+                assert_eq!(
+                    got[j].to_bits(),
+                    want[j].to_bits(),
+                    "{} width {n} col {j}",
+                    k.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn race_step_matches_scalar_on_every_variant() {
+    let scalar = simd::variants()[0];
+    for &n in WIDTHS {
+        for round in 0..8u64 {
+            let c = f64s(0x9ACE ^ n as u64 ^ (round << 32), n);
+            let noise = f64s(0x11071 ^ n as u64 ^ (round << 16), n);
+            let want = (scalar.race_step)(&c, &noise);
+            for k in simd::variants() {
+                assert_eq!(
+                    (k.race_step)(&c, &noise),
+                    want,
+                    "{} width {n} round {round}",
+                    k.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn race_step_edge_cases_on_every_variant() {
+    for k in simd::variants() {
+        // All candidates below threshold → abstain.
+        let c = vec![-1.0f64; 10];
+        let noise = vec![0.25f64; 10];
+        assert_eq!((k.race_step)(&c, &noise), -1, "{} all-negative", k.name());
+        // Exactly zero never wins (strict > 0).
+        assert_eq!((k.race_step)(&[0.0], &[0.0]), -1, "{} zero", k.name());
+        // A tie resolves to the first index attaining the maximum.
+        let c = vec![-5.0, 1.5, 0.25, 1.5, 1.5];
+        let noise = vec![0.0; 5];
+        assert_eq!((k.race_step)(&c, &noise), 1, "{} tie", k.name());
+        // A lone positive in the scalar tail region is found.
+        let mut c = vec![-3.0f64; 13];
+        c[12] = 0.75;
+        let noise = vec![0.0; 13];
+        assert_eq!((k.race_step)(&c, &noise), 12, "{} tail winner", k.name());
+    }
+}
+
+#[test]
+fn zig_fastpath_matches_scalar_on_every_variant() {
+    let scalar = simd::variants()[0];
+    // Synthetic layer bounds: the kernel is a pure function of
+    // (bits, lo, hi, std), so tables need not come from the ziggurat.
+    let mut r = Rng::new(0x216);
+    for case in 0..64 {
+        let mut bits = [0u64; ZIG_LANES];
+        let mut lo = [0.0f64; ZIG_LANES];
+        let mut hi = [0.0f64; ZIG_LANES];
+        for j in 0..ZIG_LANES {
+            bits[j] = r.next_u64();
+            lo[j] = 0.5 + r.next_f64() * 3.0;
+            // Mix of accepting (hi > lo ≥ u·lo) and rejecting lanes.
+            hi[j] = if (case + j) % 5 == 0 { r.next_f64() * 0.3 } else { lo[j] + 1.0 };
+        }
+        let std = [0.0, 1.0, 1.702][case % 3];
+        let mut want = vec![f64::NAN; ZIG_LANES];
+        let want_ok = (scalar.zig_fastpath)(&bits, &lo, &hi, std, &mut want);
+        for k in simd::variants() {
+            let mut got = vec![f64::NAN; ZIG_LANES];
+            let ok = (k.zig_fastpath)(&bits, &lo, &hi, std, &mut got);
+            assert_eq!(ok, want_ok, "{} case {case} accept/reject", k.name());
+            if ok {
+                for j in 0..ZIG_LANES {
+                    assert_eq!(
+                        got[j].to_bits(),
+                        want[j].to_bits(),
+                        "{} case {case} lane {j}",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn zig_fastpath_all_accept_applies_signs_exactly() {
+    // hi ≫ lo → every lane accepts; outputs must be ±(std · u · lo) with
+    // the sign taken from bit 8, bit-for-bit on every variant.
+    for k in simd::variants() {
+        let bits: [u64; ZIG_LANES] = std::array::from_fn(|j| {
+            // Alternate the sign bit, vary the 53-bit payload.
+            ((j as u64) << 60 | 0xDEAD_BEEF << 11) | ((j as u64 & 1) << 8) | 7
+        });
+        let lo = [1.25f64; ZIG_LANES];
+        let hi = [10.0f64; ZIG_LANES];
+        let mut out = vec![0.0f64; ZIG_LANES];
+        assert!((k.zig_fastpath)(&bits, &lo, &hi, 1.702, &mut out), "{}", k.name());
+        for j in 0..ZIG_LANES {
+            let u = (bits[j] >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            let v = 1.702 * (u * lo[j]);
+            let want = if bits[j] & 0x100 != 0 { v } else { -v };
+            assert_eq!(out[j].to_bits(), want.to_bits(), "{} lane {j}", k.name());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level parity: the dispatched path vs the scalar reference loop.
+
+fn engine(widths: Vec<usize>, seed: u64) -> NativeEngine {
+    NativeEngine::new(Arc::new(Weights::random(ModelSpec::new(widths), seed ^ 0xA5)), seed)
+}
+
+#[test]
+fn dispatched_blocked_infer_matches_scalar_across_blocks() {
+    // The acceptance matrix: odd layer widths (lane tails in every
+    // kernel), B ∈ {1, 3, 64, 100}, trial counts straddling block
+    // boundaries — all bit-identical to the scalar loop under whichever
+    // kernel table this process dispatched.
+    let e = engine(vec![9, 23, 17, 10, 5], 41);
+    let x: Vec<f32> = (0..9).map(|i| (i % 4) as f32 / 4.0).collect();
+    let p = TrialParams::default();
+    for block in [1usize, 3, 64, 100] {
+        let eb = e.clone().with_trial_block(block);
+        for trials in [1usize, 5, 63, 64, 65, 130] {
+            let a = eb.infer_scalar(&x, p, trials, 7_000);
+            let b = eb.infer(&x, p, trials, 7_000);
+            assert_eq!(a.counts, b.counts, "B={block} trials={trials}");
+            assert_eq!(a.abstentions, b.abstentions, "B={block} trials={trials}");
+        }
+    }
+}
+
+#[test]
+fn dispatched_parallel_shard_path_matches_scalar() {
+    // A budget large enough to trip the parallel_map shard path, on a
+    // wider model (97/65/33 columns exercise 16-wide, 8-wide and tail
+    // loops of the AVX2 add kernel).
+    let e = engine(vec![12, 97, 65, 33, 10], 43);
+    let x: Vec<f32> = (0..12).map(|i| i as f32 / 13.0).collect();
+    let p = TrialParams::default();
+    let a = e.infer_scalar(&x, p, 700, 0);
+    let b = e.infer(&x, p, 700, 0);
+    assert_eq!(a.counts, b.counts);
+    assert_eq!(a.abstentions, b.abstentions);
+    // And the B=1 fallback through the same parallel entry point.
+    let e1 = e.clone().with_trial_block(1);
+    let c = e1.infer(&x, p, 700, 0);
+    assert_eq!(a.counts, c.counts);
+    assert_eq!(a.abstentions, c.abstentions);
+}
+
+#[test]
+fn b1_fallback_matches_blocked_on_arbitrary_indices() {
+    // trials_cached at B=1 routes through the scalar loop; winners must
+    // match the blocked kernel at B=64 on the same out-of-order,
+    // non-contiguous stream indices.
+    let e = engine(vec![8, 33, 12, 6], 47);
+    let x: Vec<f32> = (0..8).map(|i| (7 - i) as f32 / 9.0).collect();
+    let z1 = e.precompute(&x);
+    let p = TrialParams::default();
+    let indices: Vec<u64> = vec![3, 999, 0, 12, 12, 7, 1 << 40, 42, 5, 6, 88, 2];
+    let a = e.clone().with_trial_block(1).trials_cached(&z1, p, &indices);
+    let b = e.clone().with_trial_block(64).trials_cached(&z1, p, &indices);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn b1_fallback_matches_per_trial_in_run_trial_batch() {
+    // The HTTP-batcher entry point at B=1 (scalar fallback) vs the
+    // per-row reference, including grouped repeated images.
+    let e = engine(vec![6, 21, 9, 4], 53).with_trial_block(1);
+    let a: Vec<f32> = (0..6).map(|i| i as f32 / 7.0).collect();
+    let b: Vec<f32> = (0..6).map(|i| (i * i % 5) as f32 / 5.0).collect();
+    let mut x = Vec::new();
+    for img in [&a, &b, &a, &a, &b] {
+        x.extend_from_slice(img);
+    }
+    let p = TrialParams::default();
+    let batch = e.run_trial_batch(&x, 6, p, 900);
+    for (r, &w) in batch.iter().enumerate() {
+        assert_eq!(w, e.trial(&x[r * 6..(r + 1) * 6], p, 900 + r as u64), "row {r}");
+    }
+}
