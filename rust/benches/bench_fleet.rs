@@ -55,6 +55,15 @@
 //! parallel speedup than the checking machine's cores can offer — the
 //! single-thread kernel lanes carry the full-tolerance regression signal.
 //!
+//! `--chaos` runs the PR-10 fault-tolerance lane *instead of* the perf
+//! lanes: two loopback listeners under `(remote:a, remote:b)@weighted`,
+//! every request carrying a deadline, one listener hard-killed with the
+//! whole load in flight and rebound on the same port.  The lane asserts
+//! availability ≥ 99% (completed answers, bit-identical to the unsharded
+//! reference), zero hung requests (per-response receive timeouts are the
+//! hang detector), and at least one journaled `session_reconnect`.
+//! `--json` writes the chaos report instead of the perf report.
+//!
 //! `--smoke` runs a CI-sized workload and *asserts* the acceptance bars:
 //! blocked native infer (B=64) ≥ 2.0× the scalar kernel on x86_64 with a
 //! dispatched SIMD ISA (1.5× under `RACA_NO_SIMD=1` or on other arches),
@@ -140,6 +149,142 @@ fn throughput(backend: &dyn Backend, images: &[Vec<f32>], trials: u32, reqs: usi
     total as f64 / t0.elapsed().as_secs_f64().max(1e-9)
 }
 
+/// The `--chaos` lane: kill one of two listeners with the full load in
+/// flight, rebind it, and hold the fabric to the availability contract.
+fn chaos_lane(json_path: Option<&str>) {
+    use raca::telemetry::EventKind;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    const N: u64 = 200;
+    const TRIALS: u32 = 400;
+    const DEADLINE_MS: u64 = 10_000;
+
+    let spec = ModelSpec::new(vec![784, 64, 32, 10]);
+    let w = Weights::random(spec, 7);
+    let seed = 0xC4A05;
+    let images: Vec<Vec<f32>> = (0..32)
+        .map(|i| (0..784).map(|j| ((i * 31 + j) % 23) as f32 / 23.0).collect())
+        .collect();
+
+    println!(
+        "== bench_fleet --chaos: kill 1 of 2 listeners under {N} reqs × {TRIALS} trials ==",
+    );
+    let serve_die = |addr: &str| {
+        raca::serve::net::serve(
+            build(
+                &Topology::parse("die").unwrap(),
+                &w,
+                &BuildOptions { seed, ..Default::default() },
+            )
+            .expect("building hosted die"),
+            addr,
+        )
+        .expect("loopback listener")
+    };
+    let a = serve_die("127.0.0.1:0");
+    let addr_a = a.addr().to_string();
+    let b_srv = serve_die("127.0.0.1:0");
+    let topo =
+        Topology::parse(&format!("(remote:{addr_a}, remote:{})@weighted", b_srv.addr())).unwrap();
+    let fabric = build(&topo, &w, &BuildOptions::default()).expect("building fabric");
+
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    for i in 0..N {
+        fabric
+            .submit_to(
+                InferRequest::new(i, images[i as usize % images.len()].clone())
+                    .with_budget(TRIALS, 0.0)
+                    .with_deadline_ms(DEADLINE_MS),
+                tx.clone(),
+            )
+            .expect("submit");
+    }
+    // The kill: every request is in flight at some leaf when child A's
+    // sessions are hard-closed; a same-seed replacement takes its port.
+    a.kill();
+    let revived = serve_die(&addr_a);
+
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    let p = TrialParams::default();
+    let (mut ok, mut failed, mut hung) = (0u64, 0u64, 0u64);
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..N {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(r) => {
+                assert!(seen.insert(r.id), "--chaos: request {} completed twice", r.id);
+                match &r.error {
+                    None => {
+                        let want = reference.infer(
+                            &images[r.id as usize % images.len()],
+                            p,
+                            TRIALS as usize,
+                            raca::serve::trial_stream_base(seed, r.id),
+                        );
+                        assert_eq!(
+                            r.outcome.counts, want.counts,
+                            "--chaos: request {} lost bit-parity after the kill",
+                            r.id
+                        );
+                        ok += 1;
+                    }
+                    Some(_) => failed += 1,
+                }
+            }
+            Err(_) => {
+                hung = N - (ok + failed);
+                break;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    let availability = ok as f64 / N as f64;
+    let journal = fabric.journal().expect("fabric journal");
+    let evs = journal.tail(journal.capacity());
+    let reconnects = evs.iter().filter(|e| e.kind == EventKind::SessionReconnect).count();
+    let resubmits = evs.iter().filter(|e| e.kind == EventKind::Resubmit).count();
+    println!("  answered ok                    : {ok} of {N}");
+    println!("  failed in-band                 : {failed}");
+    println!("  hung past the detector         : {hung}");
+    println!("  session_reconnect / resubmit   : {reconnects} / {resubmits}");
+    println!("  availability                   : {availability:.4}  (bar 0.99)");
+    println!("  wall                           : {} ms", wall.as_millis());
+
+    // Evidence first: the report lands on disk even when a gate trips.
+    if let Some(path) = json_path {
+        let j = json::obj(vec![
+            ("bench", Json::Str("bench_fleet_chaos".into())),
+            ("requests", json::num(N as f64)),
+            ("trials_per_request", json::num(TRIALS as f64)),
+            ("deadline_ms", json::num(DEADLINE_MS as f64)),
+            ("ok", json::num(ok as f64)),
+            ("failed_in_band", json::num(failed as f64)),
+            ("hung", json::num(hung as f64)),
+            ("availability", json::num(availability)),
+            ("session_reconnects", json::num(reconnects as f64)),
+            ("resubmits", json::num(resubmits as f64)),
+            ("wall_ms", json::num(wall.as_millis() as f64)),
+        ]);
+        std::fs::write(path, format!("{j}\n")).expect("writing --json report");
+        println!("wrote {path}");
+    }
+
+    assert_eq!(hung, 0, "--chaos: {hung} request(s) hung — the availability contract is broken");
+    assert!(reconnects > 0, "--chaos: the killed listener never reconnected");
+    assert!(
+        availability >= 0.99,
+        "--chaos: availability {availability:.4} < 0.99 with one of two listeners killed mid-run"
+    );
+    println!(
+        "chaos OK: availability {availability:.4} ≥ 0.99, zero hangs, {resubmits} in-flight request(s) resubmitted"
+    );
+
+    fabric.shutdown();
+    drop(revived);
+    drop(b_srv);
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().collect();
     let smoke = argv.iter().any(|a| a == "--smoke");
@@ -147,6 +292,9 @@ fn main() {
         .windows(2)
         .find(|w| w[0] == "--json")
         .map(|w| w[1].clone());
+    if argv.iter().any(|a| a == "--chaos") {
+        return chaos_lane(json_path.as_deref());
+    }
     let check_path = argv
         .windows(2)
         .find(|w| w[0] == "--check")

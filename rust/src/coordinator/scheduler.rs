@@ -157,7 +157,38 @@ impl<E: TrialRunner> Scheduler<E> {
     ///
     /// An engine error fails the whole batch but *not* the requests — their
     /// budgets were not consumed, so the next step retries.
+    ///
+    /// Requests past their deadline budget are shed *before* packing, with
+    /// in-band `deadline_exceeded` failures: trials nobody will read are
+    /// never executed.  A step that shed anything returns those responses
+    /// immediately and defers packing to the next step, so shed results
+    /// cannot be lost to an engine error in the same iteration.
     pub fn step(&mut self) -> Result<Vec<InferResponse>> {
+        let expired: Vec<RequestId> = self
+            .active
+            .iter()
+            .filter(|(_, a)| a.request.past_deadline(a.submitted.elapsed()))
+            .map(|(&id, _)| id)
+            .collect();
+        if !expired.is_empty() {
+            let mut shed = Vec::with_capacity(expired.len());
+            for id in expired {
+                let a = self.active.remove(&id).unwrap();
+                self.batcher.remove(id);
+                self.metrics
+                    .engine_errors
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                shed.push(InferResponse::failed(
+                    id,
+                    crate::serve::deadline_exceeded_msg(
+                        "scheduler",
+                        a.submitted.elapsed(),
+                        a.request.deadline_ms.unwrap_or(0),
+                    ),
+                ));
+            }
+            return Ok(shed);
+        }
         let packed = self.batcher.pack(self.cfg.batch_size);
         if packed.is_empty() {
             return Ok(Vec::new());

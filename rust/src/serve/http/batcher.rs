@@ -126,8 +126,31 @@ fn flush(
     let mut slots: Vec<Option<QueuedInfer>> = batch.into_iter().map(Some).collect();
     for grp in groups {
         for idx in grp {
-            let q = slots[idx].take().expect("each index appears in exactly one group");
+            let mut q = slots[idx].take().expect("each index appears in exactly one group");
             let id = q.req.id;
+            // Queue wait counts against the deadline budget: shed here if
+            // the wait already consumed it, otherwise forward only the
+            // remainder so downstream stages see an honest budget.
+            let waited = q.enqueued.elapsed();
+            if q.req.past_deadline(waited) {
+                journal.record(
+                    EventKind::DeadlineExceeded,
+                    "http",
+                    format!("id {id}: shed in the ingress queue"),
+                );
+                let _ = q.reply.send(InferResponse::failed(
+                    id,
+                    crate::serve::deadline_exceeded_msg(
+                        "http ingress",
+                        waited,
+                        q.req.deadline_ms.unwrap_or(0),
+                    ),
+                ));
+                continue;
+            }
+            if let Some(d) = q.req.deadline_ms {
+                q.req.deadline_ms = Some(d - waited.as_millis() as u64);
+            }
             // An admitted request is always answered: a submit error
             // becomes an in-band failure on its reply channel (the
             // connection handler is blocked on it).

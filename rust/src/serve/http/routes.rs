@@ -68,11 +68,12 @@ pub(crate) fn dispatch(
     method: &str,
     path: &str,
     tenant: Option<&str>,
+    deadline_ms: Option<u64>,
     body: &[u8],
     ctx: &Arc<Ingress>,
 ) -> Reply {
     match (method, path) {
-        ("POST", "/v1/infer") => infer(tenant, body, ctx),
+        ("POST", "/v1/infer") => infer(tenant, deadline_ms, body, ctx),
         ("GET", "/metrics") => metrics(ctx),
         ("GET", "/tree") => tree(ctx),
         ("GET", "/healthz") => Reply::json(200, "OK", json::obj(vec![("ok", Json::Bool(true))])),
@@ -86,7 +87,12 @@ pub(crate) fn dispatch(
     }
 }
 
-fn infer(tenant: Option<&str>, body: &[u8], ctx: &Arc<Ingress>) -> Reply {
+fn infer(
+    tenant: Option<&str>,
+    deadline_ms: Option<u64>,
+    body: &[u8],
+    ctx: &Arc<Ingress>,
+) -> Reply {
     use super::admission::Verdict;
 
     let t0 = Instant::now();
@@ -128,9 +134,12 @@ fn infer(tenant: Option<&str>, body: &[u8], ctx: &Arc<Ingress>) -> Reply {
     // confidence 0 → fixed budget; the client id keys the trial streams
     // (same contract as the framed wire), so duplicate in-flight ids are
     // the client's in-band failure to own.
-    let req = InferRequest::new(id, pixels).with_budget(trials as u32, 0.0);
+    let mut req = InferRequest::new(id, pixels).with_budget(trials as u32, 0.0);
+    if let Some(d) = deadline_ms {
+        req = req.with_deadline_ms(d);
+    }
     let (tx, rx) = mpsc::channel();
-    match ctx.queue.try_send(QueuedInfer { req, reply: tx }) {
+    match ctx.queue.try_send(QueuedInfer { req, reply: tx, enqueued: Instant::now() }) {
         Ok(()) => {}
         Err(mpsc::TrySendError::Full(_)) => {
             ctx.admission.note_shed_queue();
@@ -161,9 +170,17 @@ fn infer(tenant: Option<&str>, body: &[u8], ctx: &Arc<Ingress>) -> Reply {
     if let Some(err) = resp.error {
         ctx.metrics.engine_errors.fetch_add(1, Ordering::Relaxed);
         ctx.journal.record(EventKind::RequestFailed, &ctx.label, format!("id {id}: {err}"));
+        // A shed deadline is the caller's timeout, not our fault: 504,
+        // so clients can tell "too slow" from "broken" without parsing
+        // the message (the prefix contract from `serve::request`).
+        let (status, reason) = if err.starts_with(crate::serve::DEADLINE_EXCEEDED) {
+            (504, "Gateway Timeout")
+        } else {
+            (500, "Internal Server Error")
+        };
         return Reply::json(
-            500,
-            "Internal Server Error",
+            status,
+            reason,
             json::obj(vec![("id", Json::Str(id.to_string())), ("error", Json::Str(err))]),
         );
     }

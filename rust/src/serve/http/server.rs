@@ -61,6 +61,10 @@ pub(crate) const JOURNAL_TAIL: usize = 32;
 pub struct QueuedInfer {
     pub req: InferRequest,
     pub reply: mpsc::Sender<InferResponse>,
+    /// When the request entered the ingress queue — the batcher charges
+    /// the queue wait against the request's deadline budget (and sheds
+    /// it outright if the wait already consumed the budget).
+    pub enqueued: std::time::Instant,
 }
 
 /// Shared per-listener state handed to every connection thread.
@@ -175,6 +179,10 @@ struct RawRequest {
     keep_alive: bool,
     content_length: usize,
     tenant: Option<String>,
+    /// `X-Raca-Deadline-Ms`: the caller's total latency budget.  Expired
+    /// work is shed down the tree with an in-band `deadline_exceeded`
+    /// failure, surfaced here as `504 Gateway Timeout`.
+    deadline_ms: Option<u64>,
     expect_continue: bool,
 }
 
@@ -225,7 +233,14 @@ fn connection(stream: TcpStream, ctx: Arc<Ingress>) {
             return;
         }
 
-        let reply = routes::dispatch(&raw.method, &raw.path, raw.tenant.as_deref(), &body, &ctx);
+        let reply = routes::dispatch(
+            &raw.method,
+            &raw.path,
+            raw.tenant.as_deref(),
+            raw.deadline_ms,
+            &body,
+            &ctx,
+        );
         if respond(&mut write, &reply, raw.keep_alive).is_err() || !raw.keep_alive {
             return;
         }
@@ -282,6 +297,7 @@ fn read_request(r: &mut BufReader<TcpStream>) -> io::Result<Option<RawRequest>> 
         keep_alive: version != "HTTP/1.0",
         content_length: 0,
         tenant: None,
+        deadline_ms: None,
         expect_continue: false,
     };
 
@@ -309,6 +325,13 @@ fn read_request(r: &mut BufReader<TcpStream>) -> io::Result<Option<RawRequest>> 
                 }
             }
             "x-raca-tenant" => req.tenant = Some(value.to_string()),
+            "x-raca-deadline-ms" => {
+                req.deadline_ms = Some(
+                    value
+                        .parse()
+                        .map_err(|_| bad("x-raca-deadline-ms is not an integer"))?,
+                );
+            }
             "expect" => req.expect_continue = value.eq_ignore_ascii_case("100-continue"),
             "transfer-encoding" => {
                 return Err(bad("transfer-encoding is not supported; send content-length"));

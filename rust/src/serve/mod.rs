@@ -58,7 +58,9 @@ pub use pipelined::{PipelineOptions, PipelinedFleetBackend};
 pub use plan::{build, BuildOptions, DeployPlan, EngineSel, PlanNode, RouterBackend, Topology};
 pub use probe::ProbeInjector;
 pub use replicated::{ReplicatedFleetBackend, ReplicatedOptions};
-pub use request::{InferRequest, InferResponse, RequestId};
+pub use request::{
+    deadline_exceeded_msg, InferRequest, InferResponse, RequestId, DEADLINE_EXCEEDED,
+};
 pub use single::SingleChipBackend;
 
 use std::sync::mpsc;

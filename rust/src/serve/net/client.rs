@@ -14,12 +14,26 @@
 //! order) back to their callers.  No per-request threads, no
 //! head-of-line blocking.
 //!
-//! Death: the reader thread flips a `dead` flag when the session ends
-//! (peer closed, unreadable frame).  From then on every `submit_to`
-//! answers in-band with `InferResponse::failed` — so a routing parent
-//! keeps observing the failures and evicts this leaf — and telemetry
-//! calls return the **last cached** peer snapshot tagged `stale: true`
-//! instead of stalling on a wire that will never answer.
+//! Death and reconnect: the reader thread flips `dead` when the session
+//! ends (peer closed, unreadable frame) and wakes a supervisor thread,
+//! which redials with capped exponential backoff plus jitter.  While the
+//! session is down, every *new* `submit_to` answers in-band with
+//! `InferResponse::failed` — so a routing parent keeps observing the
+//! failures and can evict this leaf — and telemetry calls return the
+//! **last cached** peer snapshot tagged `stale: true` instead of
+//! stalling on a wire that will never answer.  Requests that were
+//! *already in flight* at the drop are retained and **resubmitted** once
+//! the session is restored: votes are pure functions of
+//! `(seed, trial_idx)`, so a resubmitted request is bit-identical to the
+//! original, and a duplicate completion from a half-dead session is
+//! deduped by request id (the second `Response` finds no pending entry).
+//! A retained request is failed in-band the moment its deadline budget
+//! expires, or after [`RESUBMIT_WINDOW`] if it carries no deadline — a
+//! caller never hangs on a peer that stays gone.  For `remote:@` leaves
+//! the supervisor re-verifies the bundle advertisement and manifest
+//! signature under the local deployment key *before* adopting the new
+//! session, so a peer that restarted with different weights is rejected
+//! (`manifest_rejected`), not silently served.
 //!
 //! Parity: the remote host derives trial indices from its *own*
 //! deployment seed and the request id, exactly as a local backend would —
@@ -34,18 +48,21 @@ use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::coordinator::{Metrics, MetricsSnapshot};
+use crate::registry::SigningKey;
 use crate::telemetry::{Event, EventKind, Journal, MetricsTree};
-use crate::util::json;
+use crate::util::json::{self, Json};
 
-use super::super::{Backend, InferRequest, InferResponse, RequestId};
+use super::super::{
+    deadline_exceeded_msg, Backend, InferRequest, InferResponse, RequestId,
+};
 use super::wire::{self, WireMsg, PROTOCOL_VERSION};
 
-/// TCP connect budget for [`RemoteBackend::connect`].
+/// TCP connect budget for [`RemoteBackend::connect`] and each redial.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// How long the dialer waits for the listener's hello.  A TCP endpoint
@@ -64,141 +81,202 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 /// telemetry is advisory and `metrics()` is called from render loops.
 const METRICS_TIMEOUT: Duration = Duration::from_secs(2);
 
+/// First redial delay; doubles per failed attempt up to
+/// [`RECONNECT_BACKOFF_CAP`], each with up to 25% added jitter so a
+/// fleet of clients does not stampede a listener the moment it returns.
+const RECONNECT_BACKOFF_BASE: Duration = Duration::from_millis(50);
+
+/// Ceiling on the redial delay.  The supervisor never gives up on the
+/// *leaf* (a peer may come back hours later); only retained requests
+/// are bounded.
+const RECONNECT_BACKOFF_CAP: Duration = Duration::from_secs(1);
+
+/// How long an in-flight request without a deadline survives a dead
+/// session awaiting resubmission before it is failed in-band.  Requests
+/// *with* deadlines are failed the moment their own budget expires.
+pub const RESUBMIT_WINDOW: Duration = Duration::from_secs(5);
+
 /// What one metrics exchange yields: the peer's tree plus the tail of
 /// its journal (empty when the peer is v1 and answered flat metrics).
 type TreeReply = (MetricsTree, Vec<Event>);
 
-type Pending = Arc<Mutex<HashMap<RequestId, mpsc::Sender<InferResponse>>>>;
+/// A request awaiting its remote response: everything needed to answer
+/// the caller *or* to resubmit the request verbatim after a reconnect.
+struct PendingEntry {
+    req: InferRequest,
+    reply: mpsc::Sender<InferResponse>,
+    /// When the request was accepted on this session — deadlines and the
+    /// resubmission budget are measured from here.
+    since: Instant,
+}
+
 /// FIFO of outstanding metrics requests.  Each waiter carries a unique
 /// token so a caller that *times out* can remove its own entry — a
 /// stale waiter left in the queue would consume the next answer and
 /// misalign every exchange after it.
-type MetricsWaiters = Arc<Mutex<VecDeque<(u64, mpsc::Sender<TreeReply>)>>>;
-type TreeCache = Arc<Mutex<Option<TreeReply>>>;
-type JournalSlot = Arc<Mutex<Option<Arc<Journal>>>>;
+type MetricsWaiters = Mutex<VecDeque<(u64, mpsc::Sender<TreeReply>)>>;
 
-/// A serving session against a remote listener (one TCP connection).
-pub struct RemoteBackend {
+/// Supervisor wake-ups.
+enum SupMsg {
+    /// The reader thread exited: redial unless the backend is dropping.
+    Died,
+    /// The backend is dropping: join the reader and drain.
+    Shutdown,
+}
+
+/// Session state shared by the backend object, the reader thread, and
+/// the reconnect supervisor.
+struct Shared {
     addr: String,
+    /// Current session socket; the supervisor swaps in a fresh stream at
+    /// reconnect (every writer re-locks per frame, so the swap is safe).
     write: Mutex<TcpStream>,
-    pending: Pending,
+    pending: Mutex<HashMap<RequestId, PendingEntry>>,
     waiters: MetricsWaiters,
     /// Waiter-token source (see [`MetricsWaiters`]).
     waiter_seq: AtomicU64,
     /// Local admission counters — the fallback when the peer has never
     /// answered a metrics request.
     local: Arc<Metrics>,
-    /// Set by the reader thread when the session ends; checked by every
-    /// path that would otherwise wait on the wire.
-    dead: Arc<AtomicBool>,
+    /// Set by the reader thread when the session ends; cleared by the
+    /// supervisor when a redial is adopted.  Checked by every path that
+    /// would otherwise wait on the wire.
+    dead: AtomicBool,
+    /// The backend is dropping: the supervisor must stop redialing.
+    stop: AtomicBool,
+    /// The supervisor is mid-redial (rendered as `RECONNECTING`).
+    reconnecting: AtomicBool,
     /// Last successfully fetched peer telemetry, served (tagged stale)
-    /// once the session is dead.
-    last_tree: TreeCache,
-    /// Deployment journal, attached after connect by [`Self::with_journal`]
-    /// (shared with the reader thread so session drop is recorded).
-    journal: JournalSlot,
+    /// while the session is down.
+    last_tree: Mutex<Option<TreeReply>>,
+    /// Deployment journal, attached after connect by
+    /// [`RemoteBackend::with_journal`].
+    journal: Mutex<Option<Arc<Journal>>>,
+    /// `remote:@` leaves: the bundle id this session must keep serving
+    /// and the local key to re-verify it under at every reconnect.
+    verify: Mutex<Option<(String, SigningKey)>>,
+}
+
+impl Shared {
+    fn node(&self) -> String {
+        format!("remote:{}", self.addr)
+    }
+
+    fn record(&self, kind: EventKind, detail: impl Into<String>) {
+        if let Some(j) = &*self.journal.lock().unwrap() {
+            j.record(kind, &self.node(), detail);
+        }
+    }
+}
+
+/// A serving session against a remote listener (one TCP connection at a
+/// time; the supervisor may replace the connection, never the session).
+pub struct RemoteBackend {
+    shared: Arc<Shared>,
+    sup_tx: mpsc::Sender<SupMsg>,
     /// Registry bundle id this leaf was resolved from (`remote:@` leaves
     /// only); surfaces in [`Backend::metrics_tree`] node notes.
     bundle: Option<String>,
-    reader: Option<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
+}
+
+/// Dial `addr`, complete the protocol handshake, and return the session
+/// halves plus the listener's advertised bundle ids.  Bounded end to
+/// end: [`CONNECT_TIMEOUT`] for TCP establishment and
+/// [`HANDSHAKE_TIMEOUT`] for the hello.
+fn dial(addr: &str) -> Result<(BufReader<TcpStream>, TcpStream, Vec<String>)> {
+    let resolved: Vec<_> = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving remote backend address {addr}"))?
+        .collect();
+    ensure!(!resolved.is_empty(), "remote backend address {addr} resolved to nothing");
+    let mut stream = None;
+    let mut last_err = None;
+    for sa in &resolved {
+        match TcpStream::connect_timeout(sa, CONNECT_TIMEOUT) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let stream = match stream {
+        Some(s) => s,
+        None => {
+            return Err(last_err.expect("resolved is non-empty"))
+                .with_context(|| format!("connecting to remote backend {addr}"))
+        }
+    };
+    stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+    // Deadline for the hello; lifted once the session is up (the
+    // timeout is a property of the socket, shared with the clone).
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .context("setting handshake read timeout")?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
+    let mut read = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut wstream = stream;
+
+    // The listener speaks first; refuse anything that is not a
+    // version-compatible raca hello.
+    let j = json::read_frame(&mut read)
+        .with_context(|| {
+            format!("reading hello from {addr} (is it a raca listener? gave it {HANDSHAKE_TIMEOUT:?})")
+        })?
+        .ok_or_else(|| anyhow!("{addr} closed the connection during the handshake"))?;
+    let advertised = match wire::decode(&j).with_context(|| format!("bad hello from {addr}"))? {
+        WireMsg::Hello { version, bundles } => {
+            wire::check_version(version).with_context(|| format!("peer {addr}"))?;
+            bundles
+        }
+        WireMsg::Error { msg, .. } => bail!("{addr} refused the session: {msg}"),
+        other => bail!("{addr} opened with {other:?} instead of hello"),
+    };
+    json::write_frame(
+        &mut wstream,
+        &wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION, bundles: Vec::new() }),
+    )
+    .with_context(|| format!("answering hello to {addr}"))?;
+    // Sessions are long-lived and idle reads are normal: clear the
+    // handshake deadline so the reader thread never sees a spurious
+    // timeout and drops a healthy session.
+    wstream.set_read_timeout(None).context("clearing handshake read timeout")?;
+    Ok((read, wstream, advertised))
 }
 
 impl RemoteBackend {
-    /// Dial `addr` and complete the protocol handshake.  Bounded end to
-    /// end: [`CONNECT_TIMEOUT`] for TCP establishment and
-    /// [`HANDSHAKE_TIMEOUT`] for the hello, so dialing a non-raca
-    /// endpoint (or a black-holed route) errors instead of blocking the
-    /// deployment build indefinitely.
+    /// Dial `addr`, complete the protocol handshake, and start the
+    /// session: one reader thread routing completions, one supervisor
+    /// thread that redials on drop.  The *initial* connect still fails
+    /// hard — a deployment build should not come up pointing at nothing.
     pub fn connect(addr: &str) -> Result<Self> {
-        let resolved: Vec<_> = addr
-            .to_socket_addrs()
-            .with_context(|| format!("resolving remote backend address {addr}"))?
-            .collect();
-        ensure!(!resolved.is_empty(), "remote backend address {addr} resolved to nothing");
-        let mut stream = None;
-        let mut last_err = None;
-        for sa in &resolved {
-            match TcpStream::connect_timeout(sa, CONNECT_TIMEOUT) {
-                Ok(s) => {
-                    stream = Some(s);
-                    break;
-                }
-                Err(e) => last_err = Some(e),
-            }
-        }
-        let stream = match stream {
-            Some(s) => s,
-            None => {
-                return Err(last_err.expect("resolved is non-empty"))
-                    .with_context(|| format!("connecting to remote backend {addr}"))
-            }
-        };
-        stream.set_nodelay(true).context("setting TCP_NODELAY")?;
-        // Deadline for the hello; lifted once the session is up (the
-        // timeout is a property of the socket, shared with the clone).
-        stream
-            .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
-            .context("setting handshake read timeout")?;
-        stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting write timeout")?;
-        let mut read = BufReader::new(stream.try_clone().context("cloning stream")?);
-        let mut wstream = stream;
-
-        // The listener speaks first; refuse anything that is not a
-        // version-compatible raca hello.
-        let j = json::read_frame(&mut read)
-            .with_context(|| {
-                format!("reading hello from {addr} (is it a raca listener? gave it {HANDSHAKE_TIMEOUT:?})")
-            })?
-            .ok_or_else(|| anyhow!("{addr} closed the connection during the handshake"))?;
-        match wire::decode(&j).with_context(|| format!("bad hello from {addr}"))? {
-            WireMsg::Hello { version, .. } => {
-                wire::check_version(version).with_context(|| format!("peer {addr}"))?
-            }
-            WireMsg::Error { msg, .. } => bail!("{addr} refused the session: {msg}"),
-            other => bail!("{addr} opened with {other:?} instead of hello"),
-        }
-        json::write_frame(
-            &mut wstream,
-            &wire::encode(&WireMsg::Hello { version: PROTOCOL_VERSION, bundles: Vec::new() }),
-        )
-        .with_context(|| format!("answering hello to {addr}"))?;
-        // Sessions are long-lived and idle reads are normal: clear the
-        // handshake deadline so the reader thread never sees a spurious
-        // timeout and drops a healthy session.
-        wstream.set_read_timeout(None).context("clearing handshake read timeout")?;
-
-        let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
-        let waiters: MetricsWaiters = Arc::new(Mutex::new(VecDeque::new()));
-        let dead = Arc::new(AtomicBool::new(false));
-        let last_tree: TreeCache = Arc::new(Mutex::new(None));
-        let journal: JournalSlot = Arc::new(Mutex::new(None));
-        let reader = {
-            let ctx = ReaderCtx {
-                pending: pending.clone(),
-                waiters: waiters.clone(),
-                dead: dead.clone(),
-                last_tree: last_tree.clone(),
-                journal: journal.clone(),
-                addr: addr.to_string(),
-            };
-            std::thread::Builder::new()
-                .name("raca-remote-read".into())
-                .spawn(move || reader_loop(read, ctx))
-                .context("spawning remote reader thread")?
-        };
-        Ok(Self {
+        let (read, wstream, _advertised) = dial(addr)?;
+        let shared = Arc::new(Shared {
             addr: addr.to_string(),
             write: Mutex::new(wstream),
-            pending,
-            waiters,
+            pending: Mutex::new(HashMap::new()),
+            waiters: Mutex::new(VecDeque::new()),
             waiter_seq: AtomicU64::new(0),
             local: Metrics::new(),
-            dead,
-            last_tree,
-            journal,
-            bundle: None,
-            reader: Some(reader),
-        })
+            dead: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            reconnecting: AtomicBool::new(false),
+            last_tree: Mutex::new(None),
+            journal: Mutex::new(None),
+            verify: Mutex::new(None),
+        });
+        let (sup_tx, sup_rx) = mpsc::channel();
+        let reader = spawn_reader(read, shared.clone(), sup_tx.clone())?;
+        let supervisor = {
+            let sh = shared.clone();
+            let tx = sup_tx.clone();
+            std::thread::Builder::new()
+                .name("raca-remote-sup".into())
+                .spawn(move || supervisor_loop(sh, sup_rx, tx, reader))
+                .context("spawning remote supervisor thread")?
+        };
+        Ok(Self { shared, sup_tx, bundle: None, supervisor: Some(supervisor) })
     }
 
     /// Route this session's connect/drop events into the deployment's
@@ -206,34 +284,43 @@ impl RemoteBackend {
     pub(crate) fn with_journal(self, journal: Arc<Journal>) -> Self {
         journal.record(
             EventKind::SessionConnect,
-            &format!("remote:{}", self.addr),
+            &self.shared.node(),
             format!("proto v{PROTOCOL_VERSION}"),
         );
-        *self.journal.lock().unwrap() = Some(journal);
+        *self.shared.journal.lock().unwrap() = Some(journal);
         self
     }
 
     /// Tag this session with the registry bundle id it was resolved from
-    /// (set by `serve::plan` for `remote:@<registry>/<bundle>` leaves).
-    pub(crate) fn with_bundle(mut self, bundle: String) -> Self {
-        self.bundle = Some(bundle);
+    /// and the deployment key it verified under (set by `serve::plan`
+    /// for `remote:@<registry>/<bundle>` leaves).  The supervisor
+    /// re-runs the full resolve under this key at every reconnect.
+    pub(crate) fn with_bundle(mut self, bundle: String, key: SigningKey) -> Self {
+        self.bundle = Some(bundle.clone());
+        *self.shared.verify.lock().unwrap() = Some((bundle, key));
         self
     }
 
     /// The peer this session is connected to.
     pub fn peer(&self) -> &str {
-        &self.addr
+        &self.shared.addr
     }
 
-    /// Requests currently awaiting a remote response.
+    /// Requests currently awaiting a remote response (or resubmission).
     pub fn in_flight(&self) -> usize {
-        self.pending.lock().unwrap().len()
+        self.shared.pending.lock().unwrap().len()
     }
 
-    /// The session ended (peer closed or protocol error); all calls now
-    /// answer from local/cached state.
+    /// The session is down (peer closed or protocol error); submits
+    /// answer in-band failures and telemetry serves cached state.  Flips
+    /// back to `false` if the supervisor restores the session.
     pub fn is_dead(&self) -> bool {
-        self.dead.load(Relaxed)
+        self.shared.dead.load(Relaxed)
+    }
+
+    /// The supervisor is currently redialing the peer.
+    pub fn is_reconnecting(&self) -> bool {
+        self.shared.reconnecting.load(Relaxed)
     }
 
     /// One metrics exchange with the peer: its [`MetricsTree`] plus
@@ -243,17 +330,18 @@ impl RemoteBackend {
     /// `None` when the session is dead or the peer did not answer within
     /// [`METRICS_TIMEOUT`]; callers then fall back to [`Self::cached`].
     pub fn remote_telemetry(&self) -> Option<TreeReply> {
+        let sh = &self.shared;
         if self.is_dead() {
             return None;
         }
-        let token = self.waiter_seq.fetch_add(1, Relaxed);
+        let token = sh.waiter_seq.fetch_add(1, Relaxed);
         let (tx, rx) = mpsc::channel();
         let sent = {
             // Holding the waiter lock across the write keeps the waiter
             // queue aligned with the request order on the wire.
-            let mut ws = self.waiters.lock().unwrap();
+            let mut ws = sh.waiters.lock().unwrap();
             let ok = {
-                let mut w = self.write.lock().unwrap();
+                let mut w = sh.write.lock().unwrap();
                 json::write_frame(&mut *w, &wire::encode(&WireMsg::MetricsReq { tree: true }))
                     .is_ok()
             };
@@ -280,7 +368,7 @@ impl RemoteBackend {
                 // Withdraw from the queue: leaving the stale waiter
                 // behind would let it swallow the *next* answer and feed
                 // every later caller an off-by-one reply.
-                self.waiters.lock().unwrap().retain(|(t, _)| *t != token);
+                sh.waiters.lock().unwrap().retain(|(t, _)| *t != token);
                 if self.is_dead() {
                     return None;
                 }
@@ -290,7 +378,7 @@ impl RemoteBackend {
                     Err(_) => {
                         log::warn!(
                             "{}: no metrics answer in {METRICS_TIMEOUT:?}; using cached/local",
-                            self.addr
+                            sh.addr
                         );
                         None
                     }
@@ -301,7 +389,8 @@ impl RemoteBackend {
 
     /// Last successfully fetched peer telemetry, tree tagged `stale`.
     pub fn cached(&self) -> Option<TreeReply> {
-        self.last_tree
+        self.shared
+            .last_tree
             .lock()
             .unwrap()
             .clone()
@@ -311,50 +400,57 @@ impl RemoteBackend {
 
 impl Backend for RemoteBackend {
     fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+        let sh = &self.shared;
         let id = req.id;
         if self.is_dead() {
             // In-band failure, not Err: a routing parent sees the failed
             // response through its relay, records it against this child's
             // health, and evicts the leaf — an Err from submit would
-            // bypass that accounting.
-            self.local.engine_errors.fetch_add(1, Relaxed);
+            // bypass that accounting.  Only requests in flight *at the
+            // drop* ride the resubmission path; work arriving while the
+            // session is down fails fast so callers can route around.
+            sh.local.engine_errors.fetch_add(1, Relaxed);
             let _ = reply.send(InferResponse::failed(
                 id,
-                format!("session to {} is closed", self.addr),
+                format!("session to {} is closed", sh.addr),
             ));
             return Ok(());
         }
+        let frame = wire::encode(&WireMsg::Submit(req.clone()));
         {
-            let mut p = self.pending.lock().unwrap();
+            let mut p = sh.pending.lock().unwrap();
             ensure!(
                 !p.contains_key(&id),
                 "request id {id} is already in flight on the session to {}",
-                self.addr
+                sh.addr
             );
-            p.insert(id, reply);
+            p.insert(id, PendingEntry { req, reply, since: Instant::now() });
         }
-        let frame = wire::encode(&WireMsg::Submit(req));
         let sent = {
-            let mut w = self.write.lock().unwrap();
+            let mut w = sh.write.lock().unwrap();
             json::write_frame(&mut *w, &frame)
         };
         if let Err(e) = sent {
-            self.pending.lock().unwrap().remove(&id);
-            bail!("sending request {id} to {}: {e}", self.addr);
+            sh.pending.lock().unwrap().remove(&id);
+            bail!("sending request {id} to {}: {e}", sh.addr);
         }
-        // The reader may have died (and drained pending) between the
-        // liveness check and our insert; reclaim the entry ourselves so
-        // the caller is not left waiting on a response that never comes.
+        // The reader may have died between the liveness check and our
+        // insert.  If the supervisor restored the session already, our
+        // frame went to the *new* stream (the write lock serializes
+        // against the swap) or our entry made the resubmission snapshot —
+        // either way exactly one live submission exists.  If the session
+        // is still down, reclaim the entry ourselves: the supervisor may
+        // be deep in backoff and this call promised fail-fast.
         if self.is_dead() {
-            if let Some(tx) = self.pending.lock().unwrap().remove(&id) {
-                let _ = tx.send(InferResponse::failed(
+            if let Some(e) = sh.pending.lock().unwrap().remove(&id) {
+                let _ = e.reply.send(InferResponse::failed(
                     id,
-                    format!("session to {} is closed", self.addr),
+                    format!("session to {} is closed", sh.addr),
                 ));
             }
             return Ok(());
         }
-        self.local.requests_admitted.fetch_add(1, Relaxed);
+        sh.local.requests_admitted.fetch_add(1, Relaxed);
         Ok(())
     }
 
@@ -366,15 +462,17 @@ impl Backend for RemoteBackend {
         self.remote_telemetry()
             .or_else(|| self.cached())
             .map(|(tree, _)| tree.snapshot)
-            .unwrap_or_else(|| self.local.snapshot())
+            .unwrap_or_else(|| self.shared.local.snapshot())
     }
 
     /// `remote:<addr>` node carrying this session's local counters, with
     /// the peer's whole subtree as its one child (tagged stale if it is
     /// a cached copy of a dead session).
     fn metrics_tree(&self) -> MetricsTree {
-        let mut root = MetricsTree::leaf(format!("remote:{}", self.addr), self.local.snapshot());
+        let mut root =
+            MetricsTree::leaf(self.shared.node(), self.shared.local.snapshot());
         root.notes.bundle = self.bundle.clone();
+        root.notes.reconnecting = self.is_reconnecting();
         match self.remote_telemetry().or_else(|| self.cached()) {
             Some((tree, _)) => root.with_children(vec![tree]),
             None if self.is_dead() => root.tagged_stale(),
@@ -383,7 +481,7 @@ impl Backend for RemoteBackend {
     }
 
     fn journal(&self) -> Option<Arc<Journal>> {
-        self.journal.lock().unwrap().clone()
+        self.shared.journal.lock().unwrap().clone()
     }
 
     fn shutdown(self: Box<Self>) {
@@ -393,32 +491,36 @@ impl Backend for RemoteBackend {
 
 impl Drop for RemoteBackend {
     fn drop(&mut self) {
-        // Polite goodbye + half-close: the listener finishes in-flight
-        // work and flushes every remaining Response before closing its
-        // end, which is what unblocks (and ends) our reader thread.
+        // Stop first so a reader death racing the drop cannot trigger a
+        // redial, then polite goodbye + half-close: the listener finishes
+        // in-flight work and flushes every remaining Response before
+        // closing its end, which is what unblocks the reader thread.
+        self.shared.stop.store(true, Relaxed);
         {
-            let mut w = self.write.lock().unwrap();
+            let mut w = self.shared.write.lock().unwrap();
             let _ = json::write_frame(&mut *w, &wire::encode(&WireMsg::Goodbye));
             let _ = w.shutdown(Shutdown::Write);
         }
-        if let Some(r) = self.reader.take() {
-            let _ = r.join();
+        let _ = self.sup_tx.send(SupMsg::Shutdown);
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join(); // joins the reader too
         }
     }
 }
 
-/// Everything the reader thread shares with the session object.
-struct ReaderCtx {
-    pending: Pending,
-    waiters: MetricsWaiters,
-    dead: Arc<AtomicBool>,
-    last_tree: TreeCache,
-    journal: JournalSlot,
-    addr: String,
+fn spawn_reader(
+    read: BufReader<TcpStream>,
+    shared: Arc<Shared>,
+    sup_tx: mpsc::Sender<SupMsg>,
+) -> Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name("raca-remote-read".into())
+        .spawn(move || reader_loop(read, shared, sup_tx))
+        .context("spawning remote reader thread")
 }
 
-fn reader_loop(mut read: BufReader<TcpStream>, ctx: ReaderCtx) {
-    let ReaderCtx { pending, waiters, dead, last_tree, journal, addr } = ctx;
+fn reader_loop(mut read: BufReader<TcpStream>, sh: Arc<Shared>, sup_tx: mpsc::Sender<SupMsg>) {
+    let addr = sh.addr.clone();
     let mut why = "peer closed";
     loop {
         let j = match json::read_frame(&mut read) {
@@ -432,8 +534,12 @@ fn reader_loop(mut read: BufReader<TcpStream>, ctx: ReaderCtx) {
         };
         match wire::decode(&j) {
             Ok(WireMsg::Response(resp)) => {
-                if let Some(tx) = pending.lock().unwrap().remove(&resp.id) {
-                    let _ = tx.send(resp); // caller may have given up; fine
+                // `remove` is also the duplicate-completion dedup: a
+                // response already answered (e.g. delivered by a
+                // half-dead session just before a resubmission raced it)
+                // finds no entry and is dropped here.
+                if let Some(e) = sh.pending.lock().unwrap().remove(&resp.id) {
+                    let _ = e.reply.send(resp); // caller may have given up; fine
                 } else {
                     log::warn!("{addr}: response for unknown request {}", resp.id);
                 }
@@ -443,15 +549,15 @@ fn reader_loop(mut read: BufReader<TcpStream>, ctx: ReaderCtx) {
             // one shape.
             Ok(WireMsg::Metrics(m)) => {
                 let reply = (MetricsTree::leaf("peer", m), Vec::new());
-                *last_tree.lock().unwrap() = Some(reply.clone());
-                if let Some((_, tx)) = waiters.lock().unwrap().pop_front() {
+                *sh.last_tree.lock().unwrap() = Some(reply.clone());
+                if let Some((_, tx)) = sh.waiters.lock().unwrap().pop_front() {
                     let _ = tx.send(reply);
                 }
             }
             Ok(WireMsg::MetricsTree { tree, events }) => {
                 let reply = (tree, events);
-                *last_tree.lock().unwrap() = Some(reply.clone());
-                if let Some((_, tx)) = waiters.lock().unwrap().pop_front() {
+                *sh.last_tree.lock().unwrap() = Some(reply.clone());
+                if let Some((_, tx)) = sh.waiters.lock().unwrap().pop_front() {
                     let _ = tx.send(reply);
                 }
             }
@@ -460,8 +566,8 @@ fn reader_loop(mut read: BufReader<TcpStream>, ctx: ReaderCtx) {
                 // An in-band failure (not a dropped sender): shared
                 // completion channels — a router relay, another session —
                 // need the response to learn which request died.
-                if let Some(tx) = pending.lock().unwrap().remove(&id) {
-                    let _ = tx.send(InferResponse::failed(id, format!("{addr}: {msg}")));
+                if let Some(e) = sh.pending.lock().unwrap().remove(&id) {
+                    let _ = e.reply.send(InferResponse::failed(id, format!("{addr}: {msg}")));
                 }
             }
             Ok(WireMsg::Error { id: None, msg }) => {
@@ -476,15 +582,237 @@ fn reader_loop(mut read: BufReader<TcpStream>, ctx: ReaderCtx) {
         }
     }
     // Known dead from here on: submit/metrics on this session fail fast.
-    dead.store(true, Relaxed);
-    if let Some(j) = &*journal.lock().unwrap() {
-        j.record(EventKind::SessionDrop, &format!("remote:{addr}"), why);
+    sh.dead.store(true, Relaxed);
+    sh.record(EventKind::SessionDrop, why);
+    // Metrics waiters cannot survive a reconnect (their asks died with
+    // the old socket): dropping the senders fails each `recv` fast.
+    // Pending *requests* are deliberately NOT drained — the supervisor
+    // owns them now, for resubmission or bounded in-band expiry.
+    sh.waiters.lock().unwrap().clear();
+    let _ = sup_tx.send(SupMsg::Died);
+}
+
+fn supervisor_loop(
+    sh: Arc<Shared>,
+    rx: mpsc::Receiver<SupMsg>,
+    sup_tx: mpsc::Sender<SupMsg>,
+    mut reader: JoinHandle<()>,
+) {
+    loop {
+        match rx.recv() {
+            Ok(SupMsg::Died) => {
+                let _ = reader.join();
+                if sh.stop.load(Relaxed) {
+                    break;
+                }
+                match reconnect(&sh, &sup_tx) {
+                    Some(r) => reader = r,
+                    None => break, // stop raised mid-redial
+                }
+            }
+            Ok(SupMsg::Shutdown) | Err(_) => {
+                // The half-closed socket EOFs the reader promptly; join
+                // so no thread outlives the backend.
+                let _ = reader.join();
+                break;
+            }
+        }
     }
-    // Anything still pending will never complete: answer every waiter
-    // with an in-band failure (shared completion channels cannot observe
-    // a dropped sender clone, so silence would hang a routing caller).
-    for (id, tx) in pending.lock().unwrap().drain() {
-        let _ = tx.send(InferResponse::failed(id, format!("session to {addr} closed")));
+    fail_pending(&sh, |_| true, |_| format!("session to {} closed", sh.addr));
+}
+
+/// Redial until the session is restored or the backend drops.  Returns
+/// the new reader thread on success.
+fn reconnect(sh: &Arc<Shared>, sup_tx: &mpsc::Sender<SupMsg>) -> Option<JoinHandle<()>> {
+    sh.reconnecting.store(true, Relaxed);
+    let dropped_at = Instant::now();
+    let mut attempt = 0u32;
+    let restored = loop {
+        if sh.stop.load(Relaxed) {
+            break None;
+        }
+        expire_retained(sh, dropped_at);
+        match try_restore(sh, sup_tx, attempt, dropped_at) {
+            Ok(reader) => break Some(reader),
+            Err(e) => {
+                attempt += 1;
+                if attempt <= 3 || attempt % 16 == 0 {
+                    log::warn!("{}: redial attempt {attempt} failed: {e:#}", sh.addr);
+                }
+                sleep_unless_stopped(sh, backoff(attempt));
+            }
+        }
+    };
+    sh.reconnecting.store(false, Relaxed);
+    restored
+}
+
+/// One redial: dial, re-verify the bundle for `remote:@` leaves, swap
+/// the session socket, restart the reader, and resubmit what is still
+/// worth resubmitting.
+fn try_restore(
+    sh: &Arc<Shared>,
+    sup_tx: &mpsc::Sender<SupMsg>,
+    attempts_before: u32,
+    dropped_at: Instant,
+) -> Result<JoinHandle<()>> {
+    let (read, wstream, advertised) = dial(&sh.addr)?;
+    let verify = sh.verify.lock().unwrap().clone();
+    if let Some((bundle, key)) = verify {
+        // The restarted peer must still serve the exact bundle this leaf
+        // was built against — advertisement, signature under the *local*
+        // key, and re-derived id, the full build-time discipline.
+        let checked = (|| -> Result<()> {
+            ensure!(
+                advertised.iter().any(|b| b == &bundle),
+                "peer came back without bundle {bundle} (advertises {})",
+                advertised.len()
+            );
+            crate::registry::resolve(&sh.addr, &bundle, &key)?;
+            Ok(())
+        })();
+        if let Err(e) = checked {
+            sh.record(EventKind::ManifestRejected, format!("at reconnect: {e:#}"));
+            bail!("reconnect rejected: {e:#}");
+        }
     }
-    waiters.lock().unwrap().clear();
+    *sh.write.lock().unwrap() = wstream;
+    let reader = spawn_reader(read, sh.clone(), sup_tx.clone())?;
+
+    // Snapshot and revive *under the pending lock*: a new `submit_to`
+    // needs this lock to insert its entry, so everything it submits on
+    // the fresh session is provably absent from the snapshot — no
+    // request ever has two live submissions.  The write happens after
+    // release (the reader needs the lock to route completions).  Entries
+    // keep their original reply sender, so each request completes
+    // exactly once no matter how many sessions its frames crossed.
+    let resubmit: Vec<(RequestId, Json)> = {
+        let p = sh.pending.lock().unwrap();
+        let snap = p
+            .values()
+            .map(|e| {
+                let mut r = e.req.clone();
+                if let Some(d) = r.deadline_ms {
+                    // The budget kept draining while the session was
+                    // down; forward only what is left.
+                    r.deadline_ms = Some(d.saturating_sub(e.since.elapsed().as_millis() as u64));
+                }
+                (r.id, wire::encode(&WireMsg::Submit(r)))
+            })
+            .collect();
+        sh.dead.store(false, Relaxed);
+        snap
+    };
+    sh.record(
+        EventKind::SessionReconnect,
+        format!(
+            "restored after {} attempt(s), {}ms down; resubmitting {} in-flight",
+            attempts_before + 1,
+            dropped_at.elapsed().as_millis(),
+            resubmit.len()
+        ),
+    );
+    for (id, frame) in resubmit {
+        let sent = {
+            let mut w = sh.write.lock().unwrap();
+            json::write_frame(&mut *w, &frame)
+        };
+        match sent {
+            Ok(()) => sh.record(EventKind::Resubmit, format!("request {id}")),
+            Err(e) => {
+                // The fresh session is already broken; its reader will
+                // notice and wake us again with the entries still
+                // pending.
+                log::warn!("{}: resubmitting request {id} failed: {e}", sh.addr);
+                break;
+            }
+        }
+    }
+    Ok(reader)
+}
+
+/// Fail (in-band) every retained request whose own deadline expired, and
+/// — once the session has been down longer than [`RESUBMIT_WINDOW`] —
+/// every deadline-less request too.  Bounded wait, never a hang.
+fn expire_retained(sh: &Shared, dropped_at: Instant) {
+    let window_over = dropped_at.elapsed() >= RESUBMIT_WINDOW;
+    fail_pending(
+        sh,
+        |e| {
+            e.req.past_deadline(e.since.elapsed())
+                || (window_over && e.req.deadline_ms.is_none())
+        },
+        |e| {
+            if let Some(d) = e.req.deadline_ms {
+                let waited = e.since.elapsed();
+                if waited.as_millis() as u64 >= d {
+                    return deadline_exceeded_msg(&format!("remote:{}", sh.addr), waited, d);
+                }
+            }
+            format!(
+                "session to {} closed (no reconnect within {RESUBMIT_WINDOW:?})",
+                sh.addr
+            )
+        },
+    );
+}
+
+/// Remove every pending entry matching `cond` and answer it in-band.
+fn fail_pending(
+    sh: &Shared,
+    cond: impl Fn(&PendingEntry) -> bool,
+    msg: impl Fn(&PendingEntry) -> String,
+) {
+    let expired: Vec<(RequestId, PendingEntry)> = {
+        let mut p = sh.pending.lock().unwrap();
+        let ids: Vec<RequestId> =
+            p.iter().filter(|(_, e)| cond(e)).map(|(id, _)| *id).collect();
+        ids.into_iter().filter_map(|id| p.remove(&id).map(|e| (id, e))).collect()
+    };
+    for (id, e) in expired {
+        sh.local.engine_errors.fetch_add(1, Relaxed);
+        let m = msg(&e);
+        if m.starts_with(super::super::DEADLINE_EXCEEDED) {
+            sh.record(EventKind::DeadlineExceeded, format!("request {id} while disconnected"));
+        }
+        let _ = e.reply.send(InferResponse::failed(id, m));
+    }
+}
+
+/// Exponential backoff with jitter: `base * 2^(attempt-1)` capped at
+/// [`RECONNECT_BACKOFF_CAP`], plus up to 25% random extra.
+fn backoff(attempt: u32) -> Duration {
+    let base = RECONNECT_BACKOFF_BASE
+        .saturating_mul(1u32 << attempt.saturating_sub(1).min(16))
+        .min(RECONNECT_BACKOFF_CAP);
+    base + jitter(base / 4, attempt)
+}
+
+/// Cheap per-process random jitter in `[0, cap)` (no RNG dependency:
+/// `RandomState` is seeded randomly per process).
+fn jitter(cap: Duration, salt: u32) -> Duration {
+    use std::collections::hash_map::RandomState;
+    use std::hash::{BuildHasher, Hasher};
+    let cap_us = cap.as_micros() as u64;
+    if cap_us == 0 {
+        return Duration::ZERO;
+    }
+    let mut h = RandomState::new().build_hasher();
+    h.write_u32(salt);
+    Duration::from_micros(h.finish() % cap_us)
+}
+
+/// Sleep `d` in small slices, returning early if the backend drops.
+fn sleep_unless_stopped(sh: &Shared, d: Duration) {
+    let until = Instant::now() + d;
+    loop {
+        if sh.stop.load(Relaxed) {
+            return;
+        }
+        let left = until.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10).min(left));
+    }
 }

@@ -62,6 +62,9 @@ pub struct NetServer {
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
     sessions_started: Arc<AtomicU64>,
+    /// One clone of every accepted session socket, so [`NetServer::kill`]
+    /// can sever live sessions abruptly (chaos testing).
+    sessions: Arc<Mutex<Vec<TcpStream>>>,
     /// Keeps the hosted backend alive at least as long as the listener.
     _backend: Arc<dyn Backend>,
 }
@@ -106,18 +109,29 @@ fn serve_inner(
         .context("setting listener non-blocking")?;
     let stop = Arc::new(AtomicBool::new(false));
     let sessions_started = Arc::new(AtomicU64::new(0));
+    let sessions = Arc::new(Mutex::new(Vec::new()));
     let accept = {
         let stop = stop.clone();
         let backend = backend.clone();
         let sessions_started = sessions_started.clone();
+        let sessions = sessions.clone();
         let registry = registry.clone();
         std::thread::Builder::new()
             .name("raca-net-accept".into())
-            .spawn(move || accept_loop(listener, backend, registry, stop, sessions_started))
+            .spawn(move || {
+                accept_loop(listener, backend, registry, stop, sessions_started, sessions)
+            })
             .context("spawning accept thread")?
     };
     log::info!("serve listener on {local} (protocol v{PROTOCOL_VERSION})");
-    Ok(NetServer { addr: local, stop, accept: Some(accept), sessions_started, _backend: backend })
+    Ok(NetServer {
+        addr: local,
+        stop,
+        accept: Some(accept),
+        sessions_started,
+        sessions,
+        _backend: backend,
+    })
 }
 
 impl NetServer {
@@ -138,6 +152,24 @@ impl NetServer {
             let _ = h.join();
         }
     }
+
+    /// Tear the listener down *abruptly*: stop accepting, then sever
+    /// every live session socket mid-frame (`shutdown(Both)`) — the
+    /// process-local equivalent of `kill -9` on the listener, for chaos
+    /// testing reconnect/resubmission paths.  Clients observe an
+    /// immediate EOF/reset with requests still in flight; no goodbye, no
+    /// response flush.  The port is released, so a fresh listener can
+    /// rebind the same address (std sets `SO_REUSEADDR` on bind).
+    pub fn kill(mut self) {
+        self.stop.store(true, Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for s in self.sessions.lock().unwrap().drain(..) {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        // Drop runs next; accept is already joined, so it is a no-op.
+    }
 }
 
 impl Drop for NetServer {
@@ -157,6 +189,7 @@ fn accept_loop(
     registry: Option<Arc<RegistryConfig>>,
     stop: Arc<AtomicBool>,
     sessions_started: Arc<AtomicU64>,
+    sessions: Arc<Mutex<Vec<TcpStream>>>,
 ) {
     while !stop.load(Relaxed) {
         match listener.accept() {
@@ -166,6 +199,9 @@ fn accept_loop(
                 let _ = stream.set_nodelay(true);
                 let _ = stream.set_nonblocking(false);
                 sessions_started.fetch_add(1, Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    sessions.lock().unwrap().push(clone);
+                }
                 let backend = backend.clone();
                 let registry = registry.clone();
                 let spawned = std::thread::Builder::new()

@@ -50,7 +50,19 @@
 //! `manifest`, `blob_fetch`/`blob` (hex payloads — blobs must fit the
 //! 16 MiB frame cap), and `publish`/`publish_ok`.  All additive: the
 //! v1 floor stands, and an older peer that receives a registry frame
-//! answers with the generic `error` it already has.
+//! answers with the generic `error` it already has; v5 (PR-10) —
+//! `submit` gains an optional `deadline_ms` field (the request's
+//! remaining deadline budget in milliseconds, decremented as it
+//! propagates down the deployment tree; omitted when unset, so the
+//! undeadlined submit stays byte-identical to v1).  A pre-v5 listener
+//! ignores the field and serves the request unbounded — degraded but
+//! correct, so the v1 floor stands.  New journal event kinds
+//! (`session_reconnect`, `resubmit`, `deadline_exceeded`) ride the v3
+//! tolerant event decode.  Reconnect-on-drop resubmits in-flight
+//! `submit` frames verbatim on a fresh session: no new frame type is
+//! needed because votes are pure functions of `(seed, trial_idx)`, so a
+//! listener serves a resubmission exactly like a fresh request and
+//! duplicate completions are deduped client-side by request id.
 
 use std::time::Duration;
 
@@ -62,7 +74,7 @@ use crate::util::json::{obj, Json};
 use super::super::{InferRequest, InferResponse, RequestId};
 
 /// Bump on any frame-shape change; see the module docs for the rules.
-pub const PROTOCOL_VERSION: u32 = 4;
+pub const PROTOCOL_VERSION: u32 = 5;
 
 /// Oldest peer revision this build still understands (see the breaking-
 /// change rule in the module docs).
@@ -272,6 +284,9 @@ fn request_to_json(r: &InferRequest) -> Json {
     if let Some(l) = r.label {
         pairs.push(("label", n(l as f64)));
     }
+    if let Some(d) = r.deadline_ms {
+        pairs.push(("deadline_ms", n(d as f64)));
+    }
     obj(pairs)
 }
 
@@ -480,7 +495,11 @@ fn request_from_json(j: &Json) -> Result<InferRequest, WireError> {
         ),
         None => None,
     };
-    Ok(InferRequest { id, image, max_trials, confidence, label })
+    let deadline_ms = match j.get("deadline_ms") {
+        Some(v) => Some(parse_u64("submit", "deadline_ms", v)?),
+        None => None,
+    };
+    Ok(InferRequest { id, image, max_trials, confidence, label, deadline_ms })
 }
 
 fn response_from_json(j: &Json) -> Result<InferResponse, WireError> {
@@ -540,11 +559,38 @@ mod tests {
             panic!("wrong variant")
         };
         assert_eq!(got, req); // f32 pixels must survive exactly
-        // Unlabeled requests omit the label field entirely.
+        // Unlabeled, undeadlined requests omit both optional fields
+        // entirely — the v5 submit stays byte-identical to v1.
         let req = InferRequest::new(9, vec![0.5; 4]);
         let j = encode(&WireMsg::Submit(req.clone()));
         assert!(j.get("label").is_none());
+        assert!(j.get("deadline_ms").is_none());
         assert_eq!(round_trip(&WireMsg::Submit(req.clone())), WireMsg::Submit(req));
+    }
+
+    #[test]
+    fn deadline_is_additive_over_v1_submits() {
+        // A deadlined submit round-trips the budget…
+        let req = InferRequest::new(11, vec![0.25; 4]).with_deadline_ms(1500);
+        let WireMsg::Submit(got) = round_trip(&WireMsg::Submit(req.clone())) else {
+            panic!("wrong variant")
+        };
+        assert_eq!(got.deadline_ms, Some(1500));
+        assert_eq!(got, req);
+        // …a pre-v5 submit (no field) decodes to the unbounded default…
+        let v1 = Json::parse(
+            r#"{"t":"submit","id":"3","image":[0.5],"max_trials":4,"confidence":0.0}"#,
+        )
+        .unwrap();
+        let WireMsg::Submit(old) = decode(&v1).unwrap() else { panic!("wrong variant") };
+        assert_eq!(old.deadline_ms, None);
+        // …and a garbage budget is refused, naming the field.
+        let bad = Json::parse(
+            r#"{"t":"submit","id":"3","image":[0.5],"max_trials":4,"confidence":0.0,"deadline_ms":"soon"}"#,
+        )
+        .unwrap();
+        let e = decode(&bad).unwrap_err();
+        assert!(format!("{e}").contains("deadline_ms"), "{e}");
     }
 
     #[test]

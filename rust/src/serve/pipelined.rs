@@ -544,6 +544,27 @@ fn control_loop(
                 ));
                 continue;
             }
+            if req.past_deadline(t0.elapsed()) {
+                // The budget died in the admission queue: shed before the
+                // pipeline spends a single stage slot on it.
+                if let Some((j, label)) = &jlabel {
+                    j.record(
+                        EventKind::DeadlineExceeded,
+                        label,
+                        format!("id {id}: shed at admission"),
+                    );
+                }
+                metrics.engine_errors.fetch_add(1, Relaxed);
+                let _ = reply.send(InferResponse::failed(
+                    id,
+                    crate::serve::deadline_exceeded_msg(
+                        "pipeline",
+                        t0.elapsed(),
+                        req.deadline_ms.unwrap_or(0),
+                    ),
+                ));
+                continue;
+            }
             metrics.requests_admitted.fetch_add(1, Relaxed);
             if let Some((j, label)) = &jlabel {
                 j.record(EventKind::RequestAdmitted, label, format!("id {id}"));

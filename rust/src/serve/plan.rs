@@ -107,6 +107,7 @@ use super::probe::ProbeInjector;
 use super::{
     Backend, InferRequest, InferResponse, PipelineOptions, PipelinedFleetBackend,
     ReplicatedFleetBackend, ReplicatedOptions, RequestId, SingleChipBackend,
+    DEADLINE_EXCEEDED,
 };
 
 /// Crossbar tile edge used for shard balancing (the repo-wide default).
@@ -706,9 +707,11 @@ fn build_remote(
         .unwrap_or_else(crate::runtime::default_artifact_dir);
     let resolved = crate::registry::SigningKey::load(&crate::registry::key_path(&dir))
         .context("loading the deployment signing key (publish once to create it)")
-        .and_then(|key| crate::registry::resolve(host_port, bundle, &key));
-    let env = match resolved {
-        Ok(env) => env,
+        .and_then(|key| {
+            crate::registry::resolve(host_port, bundle, &key).map(|env| (env, key))
+        });
+    let (env, key) = match resolved {
+        Ok(pair) => pair,
         Err(e) => {
             journal.record(EventKind::ManifestRejected, &node, format!("{e:#}"));
             return Err(e.context(format!("resolving {node}")));
@@ -722,10 +725,14 @@ fn build_remote(
             env.manifest.model, env.manifest.widths, env.key_id
         ),
     );
+    // The session keeps the bundle id *and* the key: its reconnect
+    // supervisor re-runs this exact resolve before adopting a redialed
+    // peer, so a listener restarted with different weights is rejected
+    // (`manifest_rejected`), not silently served.
     Ok(Box::new(
         RemoteBackend::connect(host_port)?
             .with_journal(journal.clone())
-            .with_bundle(bundle.to_string()),
+            .with_bundle(bundle.to_string(), key),
     ))
 }
 
@@ -1082,7 +1089,7 @@ impl RouterBackend {
     /// Route one job (caller request or probe) onto a healthy child.
     fn dispatch(
         &self,
-        req: InferRequest,
+        mut req: InferRequest,
         reply: Option<mpsc::Sender<InferResponse>>,
     ) -> Result<()> {
         let healthy = self.shared.health.lock().unwrap().healthy();
@@ -1094,6 +1101,42 @@ impl RouterBackend {
             .ok_or_else(|| anyhow!("no healthy children left under the router"))?;
         let id = req.id;
         let caller = reply.is_some();
+        // Deadline propagation: charge the chosen child's *observed* mean
+        // queue wait against the remaining budget before relaying, so
+        // depth never inflates the effective deadline — each hop forwards
+        // only what will plausibly be left when the child starts.  A
+        // request whose whole budget would be eaten by the queue is shed
+        // here, in-band, without burning a child slot on it.
+        if let Some(d) = req.deadline_ms {
+            let waits = self.shared.waits[child].load(Relaxed);
+            let wait_ms = if waits == 0 {
+                0
+            } else {
+                self.shared.queue_us[child].load(Relaxed) / waits / 1000
+            };
+            if d <= wait_ms {
+                self.shared.journal.record(
+                    EventKind::DeadlineExceeded,
+                    &self.shared.label,
+                    format!(
+                        "id {id}: {}ms budget ≤ {wait_ms}ms observed queue wait on {}",
+                        d, self.shared.labels[child]
+                    ),
+                );
+                if let Some(reply) = reply {
+                    let _ = reply.send(InferResponse::failed(
+                        id,
+                        format!(
+                            "{DEADLINE_EXCEEDED}: {} shed the request before dispatch \
+                             ({wait_ms}ms observed queue wait ≥ {d}ms budget)",
+                            self.shared.label
+                        ),
+                    ));
+                }
+                return Ok(());
+            }
+            req.deadline_ms = Some(d - wait_ms);
+        }
         {
             let mut pending = self.shared.pending.lock().unwrap();
             if pending.contains_key(&id) {
@@ -1681,6 +1724,87 @@ mod tests {
         assert_eq!(tree.children[0].notes.evicted, Some(true));
         assert_eq!(tree.children[0].notes.errors, Some(errs_at_eviction));
         assert_eq!(tree.children[1].notes.evicted, Some(false));
+    }
+
+    /// A child that sits on every request for `delay` before answering
+    /// with near-zero reported service time — so each completion teaches
+    /// the router ~`delay` of pure queue wait — while recording the
+    /// deadline each relayed request arrived with.
+    struct SlowChild {
+        delay: std::time::Duration,
+        seen: Arc<Mutex<Vec<Option<u64>>>>,
+    }
+
+    impl Backend for SlowChild {
+        fn submit_to(&self, req: InferRequest, reply: mpsc::Sender<InferResponse>) -> Result<()> {
+            self.seen.lock().unwrap().push(req.deadline_ms);
+            std::thread::sleep(self.delay);
+            let _ = reply.send(canned_response(&req));
+            Ok(())
+        }
+
+        fn metrics(&self) -> MetricsSnapshot {
+            Metrics::new().snapshot()
+        }
+
+        fn shutdown(self: Box<Self>) {}
+    }
+
+    /// Deadline propagation at the router: the observed mean queue wait
+    /// of the chosen child is subtracted from the budget before relaying,
+    /// and a budget the queue would fully consume is shed in-band before
+    /// dispatch — journaled, never silently forwarded to rot downstream.
+    #[test]
+    fn router_charges_observed_queue_wait_against_the_deadline() {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let child: Box<dyn Backend> = Box::new(SlowChild {
+            delay: std::time::Duration::from_millis(30),
+            seen: seen.clone(),
+        });
+        let b = RouterBackend::start(vec![child], RoutePolicy::RoundRobin, None, 1024);
+        // Warm-up: teach the router this child queues ≥30ms per request.
+        for i in 0..4u64 {
+            let t = b.submit(InferRequest::new(i, vec![0.1; 4]).with_budget(2, 0.0)).unwrap();
+            b.wait(t).unwrap();
+        }
+        assert!(
+            seen.lock().unwrap().iter().all(|d| d.is_none()),
+            "undeadlined requests must relay undeadlined"
+        );
+        // A generous budget arrives at the child minus the observed wait.
+        let t = b
+            .submit(
+                InferRequest::new(10, vec![0.1; 4]).with_budget(2, 0.0).with_deadline_ms(10_000),
+            )
+            .unwrap();
+        b.wait(t).unwrap();
+        let relayed =
+            seen.lock().unwrap().last().copied().flatten().expect("deadline survives the relay");
+        assert!(
+            relayed <= 10_000 - 30,
+            "queue wait was not charged: relayed {relayed} of a 10000ms budget"
+        );
+        assert!(relayed >= 5_000, "implausibly large wait estimate: relayed {relayed}");
+        // A budget below the observed wait is shed before dispatch.
+        let t = b
+            .submit(InferRequest::new(11, vec![0.1; 4]).with_budget(2, 0.0).with_deadline_ms(5))
+            .unwrap();
+        let e = b.wait(t).unwrap_err();
+        assert!(
+            format!("{e:#}").contains(DEADLINE_EXCEEDED),
+            "shed must carry the matchable prefix: {e:#}"
+        );
+        assert_eq!(
+            seen.lock().unwrap().len(),
+            5,
+            "the shed request must never reach the child"
+        );
+        let evs = b.journal().unwrap().tail(64);
+        assert!(
+            evs.iter().any(|e| e.kind == EventKind::DeadlineExceeded),
+            "the shed must be journaled: {evs:?}"
+        );
+        Box::new(b).shutdown();
     }
 
     #[test]

@@ -337,6 +337,27 @@ fn worker_loop<E: TrialEngine>(
             }
         }
 
+        // Shed expired work before the kernel runs: the budget covers
+        // queue wait too, and trials nobody will read are pure waste.
+        if job.req.past_deadline(job.submitted.elapsed()) {
+            journal.record(
+                EventKind::DeadlineExceeded,
+                &label,
+                format!("id {}: shed pre-kernel", job.req.id),
+            );
+            metrics.engine_errors.fetch_add(1, Relaxed);
+            shared.loads[id].fetch_sub(1, Relaxed);
+            let _ = job.reply.send(InferResponse::failed(
+                job.req.id,
+                crate::serve::deadline_exceeded_msg(
+                    &label,
+                    job.submitted.elapsed(),
+                    job.req.deadline_ms.unwrap_or(0),
+                ),
+            ));
+            continue;
+        }
+
         let base = trial_stream_base(opts.seed, job.req.id);
         let params = chip.params;
         let service_t0 = Instant::now();

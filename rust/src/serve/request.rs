@@ -29,11 +29,20 @@ pub struct InferRequest {
     /// Ground-truth label for probe traffic (`None` for live traffic).
     /// Labeled requests feed the fleet backends' health monitors.
     pub label: Option<i32>,
+    /// Remaining deadline budget in milliseconds (`None` = unbounded).
+    /// Set at the edge (HTTP `X-Raca-Deadline-Ms`, wire Submit field) and
+    /// decremented as the request propagates down a deployment tree:
+    /// routers subtract observed queue wait before relaying, and every
+    /// execution stage sheds expired work with an in-band
+    /// `deadline_exceeded` failure instead of computing trials nobody
+    /// will read.  Each node measures the budget from its own receipt,
+    /// so clocks never cross the wire.
+    pub deadline_ms: Option<u64>,
 }
 
 impl InferRequest {
     pub fn new(id: RequestId, image: Vec<f32>) -> Self {
-        Self { id, image, max_trials: 32, confidence: 0.95, label: None }
+        Self { id, image, max_trials: 32, confidence: 0.95, label: None, deadline_ms: None }
     }
 
     pub fn with_budget(mut self, max_trials: u32, confidence: f64) -> Self {
@@ -47,6 +56,32 @@ impl InferRequest {
         self.label = Some(label);
         self
     }
+
+    /// Attach a deadline budget in milliseconds.
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    /// Whether a request that has already waited `waited` is past its
+    /// deadline budget.  Unbounded requests never expire.
+    pub fn past_deadline(&self, waited: std::time::Duration) -> bool {
+        self.deadline_ms.is_some_and(|d| waited.as_millis() as u64 >= d)
+    }
+}
+
+/// The canonical in-band failure message for a shed request.  Kept as a
+/// prefix contract: the HTTP ingress maps any error starting with this
+/// to `504 Gateway Timeout`, and chaos/deadline tests match on it.
+pub const DEADLINE_EXCEEDED: &str = "deadline_exceeded";
+
+/// Format the in-band failure for a request shed at `node` after
+/// `waited` of a `deadline_ms` budget.
+pub fn deadline_exceeded_msg(node: &str, waited: std::time::Duration, deadline_ms: u64) -> String {
+    format!(
+        "{DEADLINE_EXCEEDED}: {node} shed the request after {}ms of a {deadline_ms}ms budget",
+        waited.as_millis()
+    )
 }
 
 /// Completed classification.
@@ -94,9 +129,31 @@ mod tests {
         assert_eq!(r.max_trials, 32);
         assert!(r.confidence > 0.9);
         assert_eq!(r.label, None);
-        let r = r.with_budget(64, 0.0).with_label(3);
+        assert_eq!(r.deadline_ms, None);
+        let r = r.with_budget(64, 0.0).with_label(3).with_deadline_ms(250);
         assert_eq!(r.max_trials, 64);
         assert_eq!(r.confidence, 0.0);
         assert_eq!(r.label, Some(3));
+        assert_eq!(r.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn deadline_expiry_is_exclusive_of_remaining_budget() {
+        use std::time::Duration;
+        let unbounded = InferRequest::new(1, vec![0.0]);
+        assert!(!unbounded.past_deadline(Duration::from_secs(3600)));
+        let bounded = InferRequest::new(2, vec![0.0]).with_deadline_ms(100);
+        assert!(!bounded.past_deadline(Duration::from_millis(99)));
+        assert!(bounded.past_deadline(Duration::from_millis(100)));
+        // A zero budget is expired on arrival.
+        let zero = InferRequest::new(3, vec![0.0]).with_deadline_ms(0);
+        assert!(zero.past_deadline(Duration::ZERO));
+    }
+
+    #[test]
+    fn deadline_message_carries_the_matchable_prefix() {
+        let msg = deadline_exceeded_msg("die#2", std::time::Duration::from_millis(7), 5);
+        assert!(msg.starts_with(DEADLINE_EXCEEDED));
+        assert!(msg.contains("die#2") && msg.contains("7ms") && msg.contains("5ms"));
     }
 }

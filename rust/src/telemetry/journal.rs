@@ -51,6 +51,14 @@ pub enum EventKind {
     /// tampered blob, or an id the peer does not advertise (detail says
     /// which).
     ManifestRejected,
+    /// A dropped wire session was redialed and restored (detail says
+    /// attempts, downtime, and how many requests were resubmitted).
+    SessionReconnect,
+    /// An in-flight request was resubmitted on a restored session.
+    Resubmit,
+    /// A request was shed because its deadline budget ran out before the
+    /// work would have produced anything a caller could still read.
+    DeadlineExceeded,
 }
 
 impl EventKind {
@@ -70,6 +78,9 @@ impl EventKind {
             EventKind::BundlePublished => "bundle_published",
             EventKind::BundleResolved => "bundle_resolved",
             EventKind::ManifestRejected => "manifest_rejected",
+            EventKind::SessionReconnect => "session_reconnect",
+            EventKind::Resubmit => "resubmit",
+            EventKind::DeadlineExceeded => "deadline_exceeded",
         }
     }
 
@@ -89,6 +100,9 @@ impl EventKind {
             "bundle_published" => EventKind::BundlePublished,
             "bundle_resolved" => EventKind::BundleResolved,
             "manifest_rejected" => EventKind::ManifestRejected,
+            "session_reconnect" => EventKind::SessionReconnect,
+            "resubmit" => EventKind::Resubmit,
+            "deadline_exceeded" => EventKind::DeadlineExceeded,
             _ => return None,
         })
     }

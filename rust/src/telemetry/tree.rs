@@ -31,6 +31,10 @@ pub struct NodeNotes {
     /// Snapshot is a cached copy — the live source (a remote session)
     /// is gone and these numbers stopped advancing at disconnect.
     pub stale: bool,
+    /// A remote session dropped and its supervisor is mid-redial:
+    /// in-flight requests are retained for resubmission, new submits
+    /// fail fast, and the leaf may come back on its own.
+    pub reconnecting: bool,
 }
 
 impl NodeNotes {
@@ -210,6 +214,9 @@ fn render_notes(n: &NodeNotes) -> String {
     if n.stale {
         s.push_str(" STALE");
     }
+    if n.reconnecting {
+        s.push_str(" RECONNECTING");
+    }
     s
 }
 
@@ -278,6 +285,9 @@ fn notes_to_json(n: &NodeNotes) -> Json {
     if n.stale {
         m.insert("stale".to_string(), Json::Bool(true));
     }
+    if n.reconnecting {
+        m.insert("reconnecting".to_string(), Json::Bool(true));
+    }
     Json::Obj(m)
 }
 
@@ -291,6 +301,7 @@ fn notes_from_json(j: &Json) -> NodeNotes {
         weight: j.get("weight").and_then(|v| v.as_f64()),
         bundle: j.get("bundle").and_then(|v| v.as_str()).map(str::to_string),
         stale: j.get("stale").and_then(|v| v.as_bool()).unwrap_or(false),
+        reconnecting: j.get("reconnecting").and_then(|v| v.as_bool()).unwrap_or(false),
     }
 }
 
@@ -323,6 +334,7 @@ mod tests {
         die1.notes.errors = Some(2);
         let mut remote = MetricsTree::leaf("remote:127.0.0.1:7433", snap(7));
         remote.notes.stale = true;
+        remote.notes.reconnecting = true;
         remote.notes.bundle = Some("deadbeef".repeat(8));
         MetricsTree::leaf("replicate ×3 (round-robin)", snap(14))
             .with_children(vec![die0, die1, remote])
@@ -337,6 +349,7 @@ mod tests {
         assert_eq!(back.num_nodes(), 4);
         assert_eq!(back.children[1].notes.errors, Some(2));
         assert!(back.children[2].notes.stale);
+        assert!(back.children[2].notes.reconnecting);
     }
 
     #[test]
@@ -353,6 +366,7 @@ mod tests {
         let r = sample().render();
         assert!(r.contains("EVICTED"), "{r}");
         assert!(r.contains("STALE"), "{r}");
+        assert!(r.contains("RECONNECTING"), "{r}");
         assert!(r.contains("└─ "), "{r}");
         assert!(r.contains("acc 0.97"), "{r}");
         // Bundle ids render truncated to 12 chars.

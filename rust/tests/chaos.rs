@@ -1,0 +1,350 @@
+//! Chaos lane: kill listeners mid-load and hold the fabric to the PR-10
+//! availability contract — every admitted request completes or fails
+//! in-band before its deadline (nothing hangs), surviving answers stay
+//! bit-identical to the unsharded engine, and `remote:@` leaves re-run
+//! the full bundle verification before trusting a restarted peer.
+//!
+//! The kill primitive is [`raca::serve::net::NetServer::kill`]: stop
+//! accepting and hard-close every live session socket — the in-process
+//! equivalent of SIGKILLing the listener host.  Rebinding the same
+//! address afterwards works because the listener socket is bound with
+//! `SO_REUSEADDR` (std's default on Unix).
+//!
+//! Why resubmission is bit-safe: votes are pure functions of
+//! `(seed, trial_idx)` and trial indices derive from
+//! `trial_stream_base(seed, request id)`, so a request served twice —
+//! once by the killed listener, once by its replacement with the same
+//! seed — produces the same counts.  Duplicate completions are deduped
+//! by ticket id on the client.
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use raca::dataset::synth;
+use raca::engine::{NativeEngine, TrialParams};
+use raca::nn::{ModelSpec, TrainConfig, Weights};
+use raca::serve::{build, trial_stream_base, Backend, BuildOptions, InferRequest, Topology};
+use raca::telemetry::EventKind;
+
+fn trained() -> Weights {
+    let ds = synth::generate(160, 0x7A);
+    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0x7B, minibatch: 1 };
+    raca::nn::train(&ds, ModelSpec::new(vec![784, 20, 12, 10]), &cfg)
+}
+
+fn image(i: u64) -> Vec<f32> {
+    (0..784).map(|j| ((j as u64 * 7 + i * 131) % 17) as f32 / 17.0).collect()
+}
+
+fn topo(spec: &str) -> Topology {
+    Topology::parse(spec).unwrap()
+}
+
+/// Collect exactly `n` responses off a shared completion channel with a
+/// hang detector, and verify ticket-id dedup: each id answers exactly
+/// once, and nothing trails after the last expected response.
+fn collect(
+    rx: &mpsc::Receiver<raca::serve::InferResponse>,
+    n: u64,
+    per_wait: Duration,
+) -> std::collections::HashMap<u64, raca::serve::InferResponse> {
+    let mut got = std::collections::HashMap::new();
+    for _ in 0..n {
+        let r = rx
+            .recv_timeout(per_wait)
+            .unwrap_or_else(|_| panic!("hung: only {}/{n} responses arrived", got.len()));
+        assert!(
+            got.insert(r.id, r).is_none(),
+            "a request completed twice — resubmission dedup failed"
+        );
+    }
+    // Resubmitted frames may still be answered by a late session; the
+    // pending-map dedup must have swallowed every duplicate.
+    std::thread::sleep(Duration::from_millis(200));
+    assert!(got.len() as u64 == n && rx.try_recv().is_err(), "stray extra response");
+    got
+}
+
+/// The acceptance bar: kill the only listener while requests are in
+/// flight, bring a same-seed replacement up on the same address, and the
+/// session reconnects, resubmits, and answers every request bit-identical
+/// to the unsharded reference — the kill is invisible to callers.
+#[test]
+fn killed_listener_mid_load_reconnects_resubmits_and_keeps_bit_parity() {
+    let w = trained();
+    let seed = 0xC4A05;
+    const N: u64 = 6;
+    const TRIALS: u32 = 20_000;
+
+    let host = build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap();
+    let server = raca::serve::net::serve(host, "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    let b = build(&topo(&format!("remote:{addr}")), &w, &BuildOptions::default()).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for i in 0..N {
+        b.submit_to(
+            InferRequest::new(i, image(i)).with_budget(TRIALS, 0.0).with_deadline_ms(60_000),
+            tx.clone(),
+        )
+        .unwrap();
+    }
+
+    // The kill: hard-close the listener under ~2.4M queued trials, then
+    // restart it — same weights, same seed — on the same address.
+    server.kill();
+    let revived = raca::serve::net::serve(
+        build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap(),
+        &addr,
+    )
+    .unwrap();
+
+    let got = collect(&rx, N, Duration::from_secs(60));
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    for i in 0..N {
+        let r = &got[&i];
+        assert!(r.error.is_none(), "request {i} failed: {:?}", r.error);
+        let want = reference.infer(
+            &image(i),
+            TrialParams::default(),
+            TRIALS as usize,
+            trial_stream_base(seed, i),
+        );
+        assert_eq!(
+            r.outcome.counts, want.counts,
+            "request {i} diverged from the unsharded engine after the kill"
+        );
+        assert_eq!(r.prediction, want.prediction());
+    }
+
+    // The journal narrates the recovery: the drop, the reconnect, and
+    // the per-request resubmissions, all against the remote leaf's node.
+    let j = b.journal().expect("built trees share a journal");
+    let evs = j.tail(j.capacity());
+    let node = format!("remote:{addr}");
+    assert!(
+        evs.iter().any(|e| e.kind == EventKind::SessionReconnect && e.node == node),
+        "no session_reconnect; journal:\n{}",
+        j.to_json_lines()
+    );
+    assert!(
+        evs.iter().any(|e| e.kind == EventKind::Resubmit && e.node == node),
+        "nothing was resubmitted — were the requests not in flight at the kill?\n{}",
+        j.to_json_lines()
+    );
+
+    b.shutdown();
+    drop(revived);
+}
+
+/// The two-host shape from the issue: `(remote:a, remote:b)@weighted`
+/// under load, child A killed mid-run and rebound.  Every admitted
+/// request resolves (none hang), nothing completes twice, and every
+/// successful answer is bit-identical to the reference — whichever
+/// listener, or *pair* of listeners, ended up serving it.
+#[test]
+fn router_over_two_remotes_survives_a_mid_load_kill() {
+    let w = trained();
+    let seed = 0x2C4A0;
+    const N: u64 = 40;
+    const TRIALS: u32 = 3_000;
+
+    let serve_die = |w: &Weights, addr: &str| {
+        raca::serve::net::serve(
+            build(&topo("die"), w, &BuildOptions { seed, ..Default::default() }).unwrap(),
+            addr,
+        )
+        .unwrap()
+    };
+    let a = serve_die(&w, "127.0.0.1:0");
+    let addr_a = a.addr().to_string();
+    let b_srv = serve_die(&w, "127.0.0.1:0");
+
+    let spec = format!("(remote:{addr_a}, remote:{})@weighted", b_srv.addr());
+    let b = build(&topo(&spec), &w, &BuildOptions::default()).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for i in 0..N {
+        b.submit_to(
+            InferRequest::new(i, image(i)).with_budget(TRIALS, 0.0).with_deadline_ms(30_000),
+            tx.clone(),
+        )
+        .unwrap();
+    }
+
+    a.kill();
+    let revived = serve_die(&w, &addr_a);
+
+    let got = collect(&rx, N, Duration::from_secs(60));
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    let (mut ok, mut failed) = (0u64, 0u64);
+    for i in 0..N {
+        let r = &got[&i];
+        match &r.error {
+            None => {
+                let want = reference.infer(
+                    &image(i),
+                    TrialParams::default(),
+                    TRIALS as usize,
+                    trial_stream_base(seed, i),
+                );
+                assert_eq!(r.outcome.counts, want.counts, "request {i} lost bit-parity");
+                ok += 1;
+            }
+            // In-band failure is an allowed outcome (never a hang), but
+            // it must say why.
+            Some(msg) => {
+                assert!(!msg.is_empty());
+                failed += 1;
+            }
+        }
+    }
+    // Everything was dispatched before the kill, so the reconnect path
+    // must recover all of child A's share — not shed it.
+    assert_eq!(
+        (ok, failed),
+        (N, 0),
+        "in-flight work was lost to the kill instead of resubmitted"
+    );
+
+    let j = b.journal().expect("router journal");
+    let evs = j.tail(j.capacity());
+    assert!(
+        evs.iter()
+            .any(|e| e.kind == EventKind::SessionReconnect && e.node == format!("remote:{addr_a}")),
+        "child A never journaled its reconnect:\n{}",
+        j.to_json_lines()
+    );
+
+    b.shutdown();
+    drop(revived);
+    drop(b_srv);
+}
+
+/// Satellite 1: reconnect re-runs the *build-time* bundle discipline.
+/// A peer that comes back serving different weights (a different
+/// registry, a rogue key) is rejected — `manifest_rejected` in the
+/// journal, session stays dead — and the redial keeps retrying until the
+/// genuine bundle returns, at which point service resumes with parity.
+#[test]
+fn reconnect_reverifies_the_bundle_and_rejects_a_swapped_peer() {
+    use raca::registry::{key_path, SigningKey, Store};
+    use raca::serve::net::RegistryConfig;
+
+    let w = trained();
+    let seed = 0x5AFE0;
+    let base = std::env::temp_dir().join(format!("raca-chaos-reverify-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let (host_dir, client_dir, rogue_dir) =
+        (base.join("host"), base.join("client"), base.join("rogue"));
+    for d in [&host_dir, &client_dir, &rogue_dir] {
+        std::fs::create_dir_all(d).unwrap();
+    }
+
+    // Genuine deployment: one key on both hosts, one published bundle.
+    let key = SigningKey::load_or_generate(&host_dir).unwrap();
+    key.save(&key_path(&client_dir)).unwrap();
+    std::fs::create_dir_all(host_dir.join("weights")).unwrap();
+    let prefix = host_dir.join("weights").join("fcnn");
+    w.save(&prefix).unwrap();
+    let calib = host_dir.join("calib.json");
+    std::fs::write(&calib, br#"{"theta":3.0,"sigma_z":1.702}"#).unwrap();
+    let (bundle, _env) =
+        raca::registry::publish_local(&Store::open(&host_dir), &key, &prefix, &calib, None)
+            .unwrap();
+
+    let server = raca::serve::net::serve_registry(
+        build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap(),
+        "127.0.0.1:0",
+        RegistryConfig { store: Store::open(&host_dir), key },
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let b = build(
+        &topo(&format!("remote:@{addr}/{bundle}")),
+        &w,
+        &BuildOptions { seed: 0xDEAD, artifact_dir: Some(client_dir.clone()), ..Default::default() },
+    )
+    .unwrap();
+    b.classify(InferRequest::new(0, image(0)).with_budget(8, 0.0)).unwrap();
+
+    // Kill, then come back *wrong*: different weights published under a
+    // rogue key in a different store, same address.
+    server.kill();
+    let w2 = Weights::random(ModelSpec::new(vec![784, 20, 12, 10]), 0xBAD);
+    let rogue_key = SigningKey::generate();
+    std::fs::create_dir_all(rogue_dir.join("weights")).unwrap();
+    let rogue_prefix = rogue_dir.join("weights").join("fcnn");
+    w2.save(&rogue_prefix).unwrap();
+    let rogue_calib = rogue_dir.join("calib.json");
+    std::fs::write(&rogue_calib, br#"{"theta":3.0,"sigma_z":1.702}"#).unwrap();
+    raca::registry::publish_local(&Store::open(&rogue_dir), &rogue_key, &rogue_prefix, &rogue_calib, None)
+        .unwrap();
+    let rogue = raca::serve::net::serve_registry(
+        build(&topo("die"), &w2, &BuildOptions { seed, ..Default::default() }).unwrap(),
+        &addr,
+        RegistryConfig { store: Store::open(&rogue_dir), key: rogue_key },
+    )
+    .unwrap();
+
+    // The supervisor redials, sees a hello without our bundle, and
+    // refuses to adopt the session — journaled, retried, never served.
+    let j = b.journal().expect("built trees share a journal");
+    let t0 = Instant::now();
+    while !j
+        .tail(j.capacity())
+        .iter()
+        .any(|e| e.kind == EventKind::ManifestRejected && e.detail.contains("at reconnect"))
+    {
+        assert!(
+            t0.elapsed() < Duration::from_secs(15),
+            "swapped peer was never rejected:\n{}",
+            j.to_json_lines()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let r = b.classify(InferRequest::new(1, image(1)).with_budget(8, 0.0));
+    assert!(r.is_err(), "a rejected session must refuse work, got {r:?}");
+
+    // Genuine listener returns (key reloaded from disk, same store):
+    // the standing redial verifies, adopts, and service resumes.
+    rogue.kill();
+    let revived = raca::serve::net::serve_registry(
+        build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap(),
+        &addr,
+        RegistryConfig {
+            store: Store::open(&host_dir),
+            key: SigningKey::load_or_generate(&host_dir).unwrap(),
+        },
+    )
+    .unwrap();
+
+    let reference = NativeEngine::new(Arc::new(w.clone()), seed);
+    let t1 = Instant::now();
+    let mut id = 100u64;
+    let got = loop {
+        match b.classify(InferRequest::new(id, image(7)).with_budget(12, 0.0)) {
+            Ok(r) => break r,
+            Err(_) => {
+                assert!(
+                    t1.elapsed() < Duration::from_secs(20),
+                    "service never resumed after the genuine peer returned:\n{}",
+                    j.to_json_lines()
+                );
+                id += 1;
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    };
+    let want = reference.infer(&image(7), TrialParams::default(), 12, trial_stream_base(seed, id));
+    assert_eq!(got.outcome.counts, want.counts, "post-recovery answers lost parity");
+    assert!(
+        j.tail(j.capacity()).iter().any(|e| e.kind == EventKind::SessionReconnect),
+        "recovery must be journaled:\n{}",
+        j.to_json_lines()
+    );
+
+    b.shutdown();
+    drop(revived);
+    let _ = std::fs::remove_dir_all(&base);
+}

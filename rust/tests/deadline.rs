@@ -1,0 +1,102 @@
+//! Deadline propagation end-to-end: a request whose budget has expired
+//! is shed with the in-band `deadline_exceeded` failure — never served
+//! late, never hung — at every execution layer the tree can route it to
+//! (the batched scheduler behind `die`, the pipelined fleet's admission,
+//! the replicated worker fleet), while undeadlined requests on the same
+//! backend are untouched.  The router-level budget arithmetic (subtract
+//! observed queue wait, shed pre-dispatch) is unit-tested in
+//! `serve::plan`; the HTTP 504 mapping in `tests/http.rs`.
+
+use raca::dataset::synth;
+use raca::nn::{ModelSpec, TrainConfig, Weights};
+use raca::serve::{build, Backend, BuildOptions, InferRequest, Topology, DEADLINE_EXCEEDED};
+use raca::telemetry::EventKind;
+
+fn trained() -> Weights {
+    let ds = synth::generate(160, 0x7A);
+    let cfg = TrainConfig { epochs: 3, lr: 0.25, seed: 0x7B, minibatch: 1 };
+    raca::nn::train(&ds, ModelSpec::new(vec![784, 20, 12, 10]), &cfg)
+}
+
+fn image(i: u64) -> Vec<f32> {
+    (0..784).map(|j| ((j as u64 * 7 + i * 131) % 17) as f32 / 17.0).collect()
+}
+
+/// A zero budget is expired on arrival: every topology must shed it
+/// in-band with the matchable prefix, and serve the undeadlined request
+/// that follows as if nothing happened.
+#[test]
+fn expired_budgets_are_shed_in_band_at_every_layer() {
+    let w = trained();
+    // (spec, whether the shedding layer writes the shared journal —
+    // the bare scheduler sheds without one).
+    for (spec, journaled) in [("die", false), ("pipeline:2", true), ("2x(die)", true)] {
+        let b = build(
+            &Topology::parse(spec).unwrap(),
+            &w,
+            &BuildOptions { seed: 0xDEAD1, ..Default::default() },
+        )
+        .unwrap();
+
+        let e = b
+            .classify(InferRequest::new(0, image(0)).with_budget(6, 0.0).with_deadline_ms(0))
+            .expect_err("an expired budget must not be served");
+        let msg = format!("{e:#}");
+        assert!(
+            msg.contains(DEADLINE_EXCEEDED),
+            "[{spec}] shed must carry the matchable prefix, got: {msg}"
+        );
+
+        // The backend is unharmed: an undeadlined request still serves,
+        // and so does a generous one.
+        let r = b.classify(InferRequest::new(1, image(1)).with_budget(6, 0.0)).unwrap();
+        assert_eq!(r.trials_used, 6, "[{spec}] undeadlined request");
+        let r = b
+            .classify(InferRequest::new(2, image(2)).with_budget(6, 0.0).with_deadline_ms(60_000))
+            .unwrap();
+        assert_eq!(r.trials_used, 6, "[{spec}] generous deadline");
+
+        if journaled {
+            let j = b.journal().expect("built trees share a journal");
+            assert!(
+                j.tail(j.capacity())
+                    .iter()
+                    .any(|e| e.kind == EventKind::DeadlineExceeded),
+                "[{spec}] shed was not journaled:\n{}",
+                j.to_json_lines()
+            );
+        }
+        b.shutdown();
+    }
+}
+
+/// Deadlines cross the wire (protocol v5): a remote leaf relays the
+/// budget in the Submit frame and the hosted tree sheds it on the far
+/// side — the failure comes back in-band over the session, prefix
+/// intact.
+#[test]
+fn expired_budgets_are_shed_across_the_wire() {
+    let w = trained();
+    let host =
+        build(&Topology::parse("die").unwrap(), &w, &BuildOptions { seed: 0xDEAD2, ..Default::default() })
+            .unwrap();
+    let server = raca::serve::net::serve(host, "127.0.0.1:0").unwrap();
+    let b = build(
+        &Topology::parse(&format!("remote:{}", server.addr())).unwrap(),
+        &w,
+        &BuildOptions::default(),
+    )
+    .unwrap();
+
+    let e = b
+        .classify(InferRequest::new(0, image(0)).with_budget(6, 0.0).with_deadline_ms(0))
+        .expect_err("an expired budget must be shed on the far side");
+    assert!(
+        format!("{e:#}").contains(DEADLINE_EXCEEDED),
+        "prefix must survive the wire round-trip: {e:#}"
+    );
+    let r = b.classify(InferRequest::new(1, image(1)).with_budget(6, 0.0)).unwrap();
+    assert_eq!(r.trials_used, 6);
+    b.shutdown();
+    drop(server);
+}

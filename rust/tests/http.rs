@@ -442,3 +442,52 @@ fn tree_endpoint_exports_metrics_tree_and_journal() {
     assert!(parsed.iter().any(|e| e.kind == EventKind::RequestAdmitted));
     assert!(parsed.iter().any(|e| e.kind == EventKind::RequestCompleted));
 }
+
+// ---- deadlines at the edge (PR-10) ----------------------------------------
+
+/// `X-Raca-Deadline-Ms` sets the request's budget, and an expired budget
+/// answers `504 Gateway Timeout` with the in-band `deadline_exceeded`
+/// message — distinguishable from `500` without parsing prose — while a
+/// generous budget serves normally.  The 504 must come back promptly:
+/// a shed request is never served late.
+#[test]
+fn expired_deadline_header_answers_504_not_200_late() {
+    let w = trained();
+    let server = http_die(&w, 0xB504, |_| {});
+    let mut c = Client::connect(server.addr());
+
+    let t0 = std::time::Instant::now();
+    let r = c.request(
+        "POST",
+        "/v1/infer",
+        &[("X-Raca-Deadline-Ms", "0")],
+        &infer_body(0, &image(0), 4),
+    );
+    assert_eq!(r.status, 504, "body: {}", r.body);
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(10),
+        "a shed must answer promptly, took {:?}",
+        t0.elapsed()
+    );
+    let msg = r.json().get("error").and_then(Json::as_str).unwrap().to_string();
+    assert!(msg.starts_with("deadline_exceeded"), "unmatchable error: {msg}");
+
+    // Same connection, generous budget: served, bit-parity untouched.
+    let r = c.request(
+        "POST",
+        "/v1/infer",
+        &[("X-Raca-Deadline-Ms", "60000")],
+        &infer_body(1, &image(1), 4),
+    );
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    assert_eq!(r.json().get("trials_used").and_then(Json::as_usize), Some(4));
+
+    // A malformed header is the client's bug: 400, not a guess.
+    let r = c.request(
+        "POST",
+        "/v1/infer",
+        &[("X-Raca-Deadline-Ms", "soon")],
+        &infer_body(2, &image(2), 4),
+    );
+    assert_eq!(r.status, 400, "body: {}", r.body);
+}

@@ -816,6 +816,73 @@ fn timed_out_telemetry_waiter_does_not_consume_the_next_answer() {
     fake.join().unwrap();
 }
 
+/// Waiter and ticket hygiene across a reconnect (the PR-7 discipline,
+/// extended over session death): every in-flight request completes
+/// exactly once on its own channel even when its frames crossed two
+/// sessions, the pending map drains, and the telemetry waiter queue
+/// comes back aligned — each ask receives the answer written for it,
+/// with no ghost waiters left from the killed session.
+#[test]
+fn reconnect_completes_each_ticket_once_and_leaks_no_waiters() {
+    let w = trained();
+    let seed = 0x60D;
+    const TRIALS: u32 = 12_000;
+    let host = build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap();
+    let server = raca::serve::net::serve(host, "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    let remote = raca::serve::RemoteBackend::connect(&addr).unwrap();
+    // One private channel per request, so "exactly once" is per-channel.
+    let channels: Vec<_> = (0..4u64)
+        .map(|i| {
+            let (tx, rx) = std::sync::mpsc::channel();
+            remote
+                .submit_to(
+                    InferRequest::new(i, image(i))
+                        .with_budget(TRIALS, 0.0)
+                        .with_deadline_ms(60_000),
+                    tx,
+                )
+                .unwrap();
+            rx
+        })
+        .collect();
+
+    server.kill();
+    let revived = raca::serve::net::serve(
+        build(&topo("die"), &w, &BuildOptions { seed, ..Default::default() }).unwrap(),
+        &addr,
+    )
+    .unwrap();
+
+    for (i, rx) in channels.iter().enumerate() {
+        let r = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .unwrap_or_else(|_| panic!("request {i} hung across the reconnect"));
+        assert_eq!(r.id, i as u64);
+        assert!(r.error.is_none(), "request {i} failed in-band: {:?}", r.error);
+        assert_eq!(r.trials_used, TRIALS);
+    }
+    // No double-complete: a duplicate answer to a resubmitted frame must
+    // be swallowed by the pending-map dedup, not forwarded.
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    for (i, rx) in channels.iter().enumerate() {
+        assert!(rx.try_recv().is_err(), "request {i} completed twice");
+    }
+    assert_eq!(remote.in_flight(), 0, "pending map must drain after completion");
+
+    // Telemetry waiters did not leak across the session swap: two asks
+    // in a row each consume exactly their own answer.
+    for ask in 0..2 {
+        let (tree, _events) = remote
+            .remote_telemetry()
+            .unwrap_or_else(|| panic!("telemetry ask {ask} after reconnect went unanswered"));
+        assert!(!tree.label.is_empty());
+    }
+    Box::new(remote).shutdown();
+    drop(revived);
+}
+
 // ---- the registry: signed bundles behind remote:@ leaves ------------------
 
 /// Publish the given model into a fresh registry under `dir`, signed with
